@@ -1,0 +1,86 @@
+//! Quickstart: solve one offloading decision and print it.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds the paper's Tiansuan scenario, profiles VGG-16 analytically,
+//! solves the ILP with the ILPB branch-and-bound, and compares against the
+//! ARG / ARS baselines.
+
+use leo_infer::config::Scenario;
+use leo_infer::dnn::{models, profile::ModelProfile};
+use leo_infer::solver::{Arg, Ars, Ilpb, OffloadPolicy};
+use leo_infer::util::units::Bytes;
+
+fn main() -> anyhow::Result<()> {
+    leo_infer::util::logging::init();
+
+    // 1. Scenario: the paper's §V-A setting (500 km LEO, 8 h contact
+    //    period, 6 min contacts, mid-range link and power parameters).
+    let scenario = Scenario::tiansuan();
+
+    // 2. Model: the paper's sampled per-layer profile (α_k ∈ [0.05^k,
+    //    0.9^k], K = 10). Real architectures from the zoo work too —
+    //    see `models::vgg16()` etc. and `leo-infer models`.
+    let net = models::vgg16();
+    println!(
+        "zoo check: {} — {} subtasks, {:.1}M params, {:.1} GFLOPs",
+        net.name,
+        net.depth(),
+        net.total_params()? as f64 / 1e6,
+        net.total_flops()? as f64 / 1e9,
+    );
+    let mut rng = leo_infer::util::rng::Pcg64::seeded(3);
+    let profile = ModelProfile::sampled(10, &mut rng);
+    println!("profile: {} (the paper's synthetic draw)", profile.name);
+
+    // 3. One heavy 500 GB capture over a congested 10 Mbps pass — the
+    //    regime where neither bent-pipe nor all-onboard is good and the
+    //    split decision actually matters.
+    let scenario = scenario.with_rate_mbps(10.0);
+    let inst = scenario
+        .instance_builder(profile)
+        .data(Bytes::from_gb(500.0))
+        .build()?;
+
+    // 4. Solve with the paper's algorithm and both baselines.
+    let (decision, stats) = Ilpb::default().solve(&inst);
+    println!(
+        "\nILPB: split after subtask {} of {} (Z = {:.4})",
+        decision.split,
+        inst.depth(),
+        decision.z
+    );
+    println!(
+        "  search: {} nodes, {} leaves, {} pruned",
+        stats.nodes, stats.leaves, stats.pruned
+    );
+    println!(
+        "  latency {:>12.1} s  = sat {:.1} + downlink {:.1} + wan {:.1} + cloud {:.1}",
+        decision.costs.latency.value(),
+        decision.costs.t_satellite.value(),
+        decision.costs.t_downlink.value(),
+        decision.costs.t_ground_cloud.value(),
+        decision.costs.t_cloud.value(),
+    );
+    println!(
+        "  energy  {:>12.1} J  = processing {:.1} + transmission {:.1}",
+        decision.costs.energy.value(),
+        decision.costs.e_processing.value(),
+        decision.costs.e_transmission.value(),
+    );
+
+    for policy in [&Arg as &dyn OffloadPolicy, &Ars] {
+        let d = policy.decide(&inst);
+        println!(
+            "\n{:<4}: split {} — Z = {:.4}, latency {:.1} s, energy {:.1} J",
+            policy.name(),
+            d.split,
+            d.z,
+            d.costs.latency.value(),
+            d.costs.energy.value(),
+        );
+    }
+    Ok(())
+}

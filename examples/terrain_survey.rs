@@ -1,0 +1,102 @@
+//! Terrain survey: the paper's energy-constrained long-duration workload.
+//!
+//! ```bash
+//! cargo run --release --example terrain_survey
+//! ```
+//!
+//! Remote-sensing of terrain/geomorphic change has no tight deadline, but
+//! the satellite lives on a ~15 W-peak solar panel and an 80 Wh battery:
+//! the objective weight is energy-heavy (μ = 0.9). We run a week of
+//! captures against a battery+solar model with the DoD floor enforced and
+//! watch which algorithms keep the payload alive.
+
+use leo_infer::config::Scenario;
+use leo_infer::dnn::profile::ModelProfile;
+use leo_infer::energy::battery::Battery;
+use leo_infer::energy::solar::SolarPanel;
+use leo_infer::orbit::propagator::CircularOrbit;
+use leo_infer::orbit::eclipse::eclipse_fraction;
+use leo_infer::sim::contact::PeriodicContact;
+use leo_infer::sim::entities::SatelliteState;
+use leo_infer::sim::runner::{SimConfig, Simulator};
+use leo_infer::sim::workload::{PoissonWorkload, SizeDist};
+use leo_infer::solver::{Arg, Ars, Ilpb, OffloadPolicy};
+use leo_infer::util::rng::Pcg64;
+use leo_infer::util::units::{Bytes, Joules, Seconds};
+
+fn main() -> anyhow::Result<()> {
+    leo_infer::util::logging::init();
+
+    // energy-heavy weighting on the transmission-dominant platform: an
+    // efficient accelerator against a power-hungry antenna (see
+    // Scenario::transmission_dominant docs) — the regime where computing
+    // on board to shrink the downlink genuinely saves battery.
+    let scenario = Scenario::transmission_dominant().with_weights(0.9, 0.1);
+
+    // physical energy budget from the orbit substrate
+    let orbit = CircularOrbit::new(500.0, 97.4, 0.0, 0.0);
+    let sunlit = 1.0 - eclipse_fraction(&orbit);
+    let panel = SolarPanel::cubesat_6u();
+    println!(
+        "orbit: 500 km SSO — {:.0}% sunlit, {:.1} W harvest while lit",
+        sunlit * 100.0,
+        panel.sunlit_power().value()
+    );
+
+    let workload = PoissonWorkload::new(
+        1.0 / 3600.0, // hourly captures
+        SizeDist::Uniform(Bytes::from_gb(1.0), Bytes::from_gb(4.0)),
+    );
+    let horizon = Seconds::from_hours(168.0); // one week
+    let mut rng = Pcg64::seeded(0x7E44);
+    let trace = workload.generate(horizon, &mut rng);
+    let profile = ModelProfile::sampled(scenario.depth, &mut rng);
+    println!(
+        "survey: {} captures over {:.0} h (λ:μ = 0.1:0.9), 80 Wh battery, 20% DoD floor\n",
+        trace.len(),
+        horizon.hours()
+    );
+
+    println!(
+        "{:<6} {:>8} {:>9} {:>12} {:>12} {:>10}",
+        "algo", "served", "rejected", "energy(J)", "final SoC", "mean lat(s)"
+    );
+    for policy in [
+        &Ilpb::default() as &dyn OffloadPolicy,
+        &Arg,
+        &Ars,
+    ] {
+        let config = SimConfig {
+            template: scenario.instance_builder(profile.clone()),
+            profiles: vec![profile.clone()],
+            contact: PeriodicContact::new(
+                Seconds::from_hours(scenario.t_cyc_hours),
+                Seconds::from_minutes(scenario.t_con_minutes),
+            ),
+            horizon,
+        };
+        let sat = SatelliteState::new().with_battery(
+            Battery::new(Joules(80.0 * 3600.0), 0.2),
+            panel,
+            sunlit,
+        );
+        let result = Simulator::new(config).with_satellite(sat).run(&trace, policy);
+        let m = &result.metrics;
+        println!(
+            "{:<6} {:>8} {:>9} {:>12.1} {:>11.1}% {:>10.1}",
+            policy.name(),
+            m.completed(),
+            m.rejected,
+            result.state.energy_drawn.value(),
+            result.state.soc() * 100.0,
+            m.mean_latency().value(),
+        );
+    }
+
+    println!(
+        "\nUnder an energy-heavy objective ILPB sheds the expensive work \
+         (late-layer compute or raw-capture downlink, whichever the battery \
+         can least afford) and keeps the duty cycle sustainable."
+    );
+    Ok(())
+}

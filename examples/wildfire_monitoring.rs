@@ -1,0 +1,86 @@
+//! Wildfire monitoring: the paper's latency-critical motivating workload.
+//!
+//! ```bash
+//! cargo run --release --example wildfire_monitoring
+//! ```
+//!
+//! A fire-detection constellation must flag hotspots fast: the objective
+//! weight is latency-heavy (λ = 0.9). We simulate 48 h of Poisson capture
+//! traffic (20% latency-critical alerts) through the discrete-event
+//! simulator under the three algorithms and report end-to-end latency
+//! percentiles plus on-board energy — showing why neither bent-pipe (ARG)
+//! nor all-onboard (ARS) is deployable, and what ILPB buys.
+
+use leo_infer::config::Scenario;
+use leo_infer::dnn::profile::ModelProfile;
+use leo_infer::sim::contact::PeriodicContact;
+use leo_infer::sim::runner::{SimConfig, Simulator};
+use leo_infer::sim::workload::{PoissonWorkload, SizeDist};
+use leo_infer::solver::{Arg, Ars, Ilpb, OffloadPolicy};
+use leo_infer::util::rng::Pcg64;
+use leo_infer::util::units::{Bytes, Seconds};
+
+fn main() -> anyhow::Result<()> {
+    leo_infer::util::logging::init();
+
+    // latency-critical weighting: fires spread faster than batteries
+    // drain. The link is a congested 12 Mbps share of the pass — heavy
+    // scenes cannot all go down raw.
+    let scenario = Scenario::tiansuan()
+        .with_weights(0.1, 0.9)
+        .with_rate_mbps(12.0);
+
+    // wide-area multispectral scenes, 5–80 GB per capture
+    let workload = PoissonWorkload::new(
+        1.0 / 1800.0, // one capture every ~30 min
+        SizeDist::LogUniform(Bytes::from_gb(5.0), Bytes::from_gb(80.0)),
+    )
+    .with_critical_fraction(0.2);
+    let horizon = Seconds::from_hours(48.0);
+    let mut rng = Pcg64::seeded(0xF15E);
+    let trace = workload.generate(horizon, &mut rng);
+    println!(
+        "wildfire watch: {} captures over {:.0} h (λ:μ = 0.9:0.1)\n",
+        trace.len(),
+        horizon.hours()
+    );
+
+    let profile = ModelProfile::sampled(scenario.depth, &mut rng);
+    println!(
+        "{:<6} {:>10} {:>12} {:>12} {:>12} {:>14}",
+        "algo", "served", "mean lat(s)", "p99 lat(s)", "energy(J)", "downlinked(GB)"
+    );
+    for policy in [
+        &Ilpb::default() as &dyn OffloadPolicy,
+        &Arg,
+        &Ars,
+    ] {
+        let config = SimConfig {
+            template: scenario.instance_builder(profile.clone()),
+            profiles: vec![profile.clone()],
+            contact: PeriodicContact::new(
+                Seconds::from_hours(scenario.t_cyc_hours),
+                Seconds::from_minutes(scenario.t_con_minutes),
+            ),
+            horizon,
+        };
+        let result = Simulator::new(config).run(&trace, policy);
+        let m = &result.metrics;
+        println!(
+            "{:<6} {:>10} {:>12.1} {:>12.1} {:>12.1} {:>14.2}",
+            policy.name(),
+            m.completed(),
+            m.mean_latency().value(),
+            m.latency_p99().value(),
+            result.state.energy_drawn.value(),
+            m.total_downlinked.gb(),
+        );
+    }
+
+    println!(
+        "\nILPB keeps alert latency near the ARG (ground-inference) floor while \
+         downlinking a fraction of the bytes — the contact windows stop being \
+         the bottleneck."
+    );
+    Ok(())
+}

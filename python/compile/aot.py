@@ -1,0 +1,112 @@
+"""AOT lowering: RSNet stages → HLO text artifacts + manifest.
+
+Run once at build time (``make artifacts``); python never touches the
+request path. Each stage of ``model.STAGES`` is lowered independently for
+every supported batch size, so the rust coordinator can execute an
+arbitrary split: stages ``0..s`` on the "satellite" PJRT client, serialize
+the boundary activation, stages ``s..K`` on the "cloud" client.
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax
+≥ 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+The manifest records every stage's input/output shape and byte size — the
+*measured* α_k profile that rust cross-checks against its analytic layer
+algebra (rust/src/dnn/models.rs::rsnet9).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+BATCH_SIZES = (1, 8)
+DTYPE_BYTES = 4  # f32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_stage(fn, in_shape: tuple[int, ...]) -> str:
+    spec = jax.ShapeDtypeStruct(in_shape, jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def elements(shape: tuple[int, ...]) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def build(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {
+        "model": "rsnet9",
+        "seed": model.SEED,
+        "input_chw": list(model.INPUT_SHAPE),
+        "num_classes": model.NUM_CLASSES,
+        "dtype": "f32",
+        "batch_sizes": list(BATCH_SIZES),
+        "stages": [],
+        "full": {},
+    }
+
+    for batch in BATCH_SIZES:
+        shapes = model.stage_shapes(batch)
+        for k, (name, fn) in enumerate(model.STAGES):
+            path = f"stage_b{batch}_{k:02d}_{name}.hlo.txt"
+            hlo = lower_stage(fn, shapes[k])
+            with open(os.path.join(out_dir, path), "w") as f:
+                f.write(hlo)
+            manifest["stages"].append(
+                {
+                    "index": k,
+                    "name": name,
+                    "batch": batch,
+                    "in_shape": list(shapes[k]),
+                    "out_shape": list(shapes[k + 1]),
+                    "in_bytes": elements(shapes[k]) * DTYPE_BYTES,
+                    "out_bytes": elements(shapes[k + 1]) * DTYPE_BYTES,
+                    "path": path,
+                }
+            )
+        full_path = f"model_b{batch}_full.hlo.txt"
+        with open(os.path.join(out_dir, full_path), "w") as f:
+            f.write(lower_stage(model.forward, shapes[0]))
+        manifest["full"][str(batch)] = {
+            "in_shape": list(shapes[0]),
+            "out_shape": list(shapes[-1]),
+            "path": full_path,
+        }
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    manifest = build(args.out)
+    n = len(manifest["stages"])
+    print(f"wrote {n} stage artifacts + {len(BATCH_SIZES)} full models to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

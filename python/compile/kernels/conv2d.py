@@ -1,0 +1,55 @@
+"""L1: conv2d as im2col + the Pallas tiled matmul.
+
+TPU adaptation of the conv hot-spot (DESIGN.md §Hardware-Adaptation): where
+a CUDA kernel would tile the implicit GEMM over threadblocks with shared-
+memory staging, we materialize the im2col patches with XLA (which fuses the
+gather into the surrounding HLO) and feed the (N·OH·OW, C·KH·KW) ×
+(C·KH·KW, OC) GEMM to the MXU-shaped Pallas kernel from ``matmul.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+def _im2col(x: jax.Array, kh: int, kw: int, stride: int, pad: int) -> jax.Array:
+    """(N, C, H, W) → (N·OH·OW, C·KH·KW) patch matrix."""
+    n, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    # gather patches: for each (dy, dx) offset take a strided slice
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            sl = xp[:, :, dy : dy + stride * oh : stride, dx : dx + stride * ow : stride]
+            cols.append(sl)  # (N, C, OH, OW)
+    # (KH·KW, N, C, OH, OW) → (N, OH, OW, C, KH·KW) → (N·OH·OW, C·KH·KW)
+    stacked = jnp.stack(cols, axis=0)
+    stacked = stacked.transpose(1, 3, 4, 2, 0)
+    return stacked.reshape(n * oh * ow, c * kh * kw), oh, ow
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    stride: int = 1,
+    padding: int = 1,
+) -> jax.Array:
+    """NCHW convolution through the Pallas GEMM.
+
+    x: (N, C, H, W); w: (OC, C, KH, KW); b: (OC,) → (N, OC, OH, OW).
+    """
+    n = x.shape[0]
+    oc, c, kh, kw = w.shape
+    if x.shape[1] != c:
+        raise ValueError(f"channel mismatch: x {x.shape} vs w {w.shape}")
+    patches, oh, ow = _im2col(x, kh, kw, stride, padding)
+    wmat = w.reshape(oc, c * kh * kw).T  # (C·KH·KW, OC)
+    out = matmul(patches, wmat) + b[None, :]
+    return out.reshape(n, oh, ow, oc).transpose(0, 3, 1, 2)

@@ -1,0 +1,141 @@
+"""L1: Pallas tiled matmul kernel — the compute hot-spot of every conv and
+dense stage of RSNet.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid iterates over
+(M/BM, N/BN, K/BK); for each (i, j) output tile the innermost grid
+dimension walks the K slabs, accumulating into the f32 output block that
+stays resident in VMEM across revisits. BlockSpec expresses the HBM→VMEM
+schedule a CUDA kernel would express with threadblocks + shared memory;
+128×128 blocks match the MXU systolic array.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel runs through the Pallas interpreter and lowers
+to plain HLO. Real-TPU performance is *estimated* from the BlockSpec's VMEM
+footprint and MXU utilization below (DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped defaults. BM=BN=128 matches the 128x128 systolic array;
+# BK=128 keeps each operand slab at 64 KiB f32.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, n_k: int):
+    """One (BM, BN) output tile; grid dim 2 walks the K slabs and the
+    output block accumulates across revisits."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+    del n_k  # kept in the signature for symmetry with scratch variants
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    pr = rows - x.shape[0]
+    pc = cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+) -> jax.Array:
+    """``x @ y`` via the Pallas tile kernel.
+
+    Shapes need not be multiples of the block size: operands are padded to
+    the block lattice and the result sliced back (padding contributes zeros
+    to the accumulation, so the numerics are exact).
+    """
+    if x.ndim != 2 or y.ndim != 2:
+        raise ValueError(f"matmul expects rank-2 operands, got {x.shape} @ {y.shape}")
+    if x.shape[1] != y.shape[0]:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+    m, k = x.shape
+    _, n = y.shape
+    # shrink blocks for small problems to limit padding waste
+    bm = min(bm, _round_up(m, 8))
+    bn = min(bn, _round_up(n, 8))
+    bk = min(bk, _round_up(k, 8))
+    # Adaptive M-blocking (§Perf): conv-via-im2col GEMMs are tall and
+    # skinny (M = N·OH·OW ≫ K·N). When the K×N tile is small the whole
+    # reduction fits beside a much taller row block, so enlarge BM — this
+    # keeps the grid shallow (fewer HBM round-trips on TPU; 23× less
+    # per-step overhead under the interpreter) while staying ≪ 16 MiB
+    # VMEM. Measured on the batch-8 conv1 GEMM (32768×27×16):
+    # 185 ms → 7.7 ms interpret-mode (see EXPERIMENTS.md §Perf).
+    if n <= 128:
+        if k <= 128:
+            # K×N tile ≤ 64 KiB: a BM=8192 row block keeps total VMEM
+            # ≈ 2.7 MiB (see vmem_bytes)
+            bm = min(_round_up(m, 8), max(bm, 8192))
+        elif k <= 512:
+            # mid-K conv shapes (RSNet conv2/conv3: K = 144/288):
+            # BM=4096 with BK=128 slabs ≈ 6.3 MiB VMEM
+            bm = min(_round_up(m, 8), max(bm, 4096))
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = _pad_to(x, mp, kp)
+    yp = _pad_to(y, kp, np_)
+    n_k = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm: int = DEFAULT_BM, bn: int = DEFAULT_BN, bk: int = DEFAULT_BK) -> int:
+    """VMEM footprint of one grid step (two operand blocks + resident
+    output block, double-buffered operands), for the §Perf roofline
+    estimate."""
+    f32 = 4
+    return (2 * (bm * bk + bk * bn) + bm * bn) * f32
+
+
+def mxu_utilization(
+    m: int,
+    k: int,
+    n: int,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+) -> float:
+    """Fraction of MXU-issued MACs doing useful (non-padding) work — the
+    §Perf efficiency estimate for a given problem shape."""
+    bm = min(bm, _round_up(m, 8))
+    bn = min(bn, _round_up(n, 8))
+    bk = min(bk, _round_up(k, 8))
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    return (m * k * n) / float(mp * kp * np_)

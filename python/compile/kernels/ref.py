@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Everything here is the *specification*: pytest asserts the kernels in
+``matmul.py`` / ``conv2d.py`` match these to float tolerance across
+hypothesis-driven shape sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Plain jnp matmul in f32 accumulation."""
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def conv2d_ref(
+    x: jax.Array, w: jax.Array, b: jax.Array, *, stride: int = 1, padding: str = "SAME"
+) -> jax.Array:
+    """NCHW conv oracle via lax.conv_general_dilated.
+
+    x: (N, C, H, W); w: (OC, C, KH, KW); b: (OC,).
+    """
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out + b[None, :, None, None]
+
+
+def maxpool2_ref(x: jax.Array) -> jax.Array:
+    """2×2/2 max pooling, NCHW."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 1, 2, 2),
+        window_strides=(1, 1, 2, 2),
+        padding="VALID",
+    )
+
+
+def global_avg_pool_ref(x: jax.Array) -> jax.Array:
+    """GAP to (N, C)."""
+    return x.mean(axis=(2, 3))
+
+
+def dense_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (N, F) @ w: (F, O) + b."""
+    return matmul_ref(x, w) + b[None, :]

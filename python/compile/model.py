@@ -1,0 +1,205 @@
+"""L2: RSNet-9 — the remote-sensing scene classifier, staged per subtask.
+
+Mirrors ``rust/src/dnn/models.rs::rsnet9()`` layer for layer; the AOT
+manifest's measured per-stage activation sizes are cross-checked against
+that analytic profile by rust integration tests, so **keep the two
+definitions in lockstep**.
+
+Every stage is an independent jax function (one subtask `M_k` in the
+paper): the coordinator can run any prefix on the "satellite" PJRT client,
+serialize the boundary activation (the downlinked payload), and resume on
+the "cloud" client. Weights are baked into each stage as constants
+(deterministic seed), so the compiled artifacts are self-contained.
+
+Conv and dense stages route through the L1 Pallas kernels.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.conv2d import conv2d
+from .kernels.matmul import matmul
+
+INPUT_SHAPE = (3, 64, 64)  # CHW, EuroSAT-style RGB tile
+NUM_CLASSES = 10
+SEED = 20230715
+
+
+def _init_weights() -> dict:
+    """Deterministic He-initialized weights (numpy, baked as constants)."""
+    rng = np.random.default_rng(SEED)
+
+    def conv_w(oc, ic, k):
+        fan_in = ic * k * k
+        return (
+            rng.normal(0.0, np.sqrt(2.0 / fan_in), size=(oc, ic, k, k)).astype(
+                np.float32
+            ),
+            np.zeros(oc, np.float32),
+        )
+
+    def dense_w(i, o):
+        return (
+            rng.normal(0.0, np.sqrt(2.0 / i), size=(i, o)).astype(np.float32),
+            np.zeros(o, np.float32),
+        )
+
+    w = {}
+    w["conv1"] = conv_w(16, 3, 3)
+    w["conv2"] = conv_w(32, 16, 3)
+    w["conv3"] = conv_w(64, 32, 3)
+    w["conv4"] = conv_w(64, 64, 3)
+    w["fc"] = dense_w(64, NUM_CLASSES)
+    return w
+
+
+_W = _init_weights()
+
+
+def _maxpool2(x: jax.Array) -> jax.Array:
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 1, 2, 2),
+        window_strides=(1, 1, 2, 2),
+        padding="VALID",
+    )
+
+
+# ---------------------------------------------------------------- stages
+# Stage k implements subtask M_{k+1}; shapes are per-batch (N, ...).
+# The list index is the split boundary: running stages[0:s] on the
+# satellite downlinks stages[s]'s input.
+
+
+def stage_conv1(x):
+    w, b = _W["conv1"]
+    return conv2d(x, jnp.asarray(w), jnp.asarray(b), stride=1, padding=1)
+
+
+def stage_relu1(x):
+    return jax.nn.relu(x)
+
+
+def stage_pool1(x):
+    return _maxpool2(x)
+
+
+def stage_conv2(x):
+    w, b = _W["conv2"]
+    return conv2d(x, jnp.asarray(w), jnp.asarray(b), stride=1, padding=1)
+
+
+def stage_relu2(x):
+    return jax.nn.relu(x)
+
+
+def stage_pool2(x):
+    return _maxpool2(x)
+
+
+def stage_conv3(x):
+    w, b = _W["conv3"]
+    return conv2d(x, jnp.asarray(w), jnp.asarray(b), stride=1, padding=1)
+
+
+def stage_relu3(x):
+    return jax.nn.relu(x)
+
+
+def stage_pool3(x):
+    return _maxpool2(x)
+
+
+def stage_conv4(x):
+    w, b = _W["conv4"]
+    return conv2d(x, jnp.asarray(w), jnp.asarray(b), stride=1, padding=1)
+
+
+def stage_relu4(x):
+    return jax.nn.relu(x)
+
+
+def stage_gap(x):
+    return x.mean(axis=(2, 3))
+
+
+def stage_flatten(x):
+    # GAP already flattens to (N, C); kept as an explicit subtask to stay
+    # aligned with the rust layer list (Flatten after GlobalAvgPool).
+    return x.reshape(x.shape[0], -1)
+
+
+def stage_fc(x):
+    w, b = _W["fc"]
+    return matmul(x, jnp.asarray(w)) + jnp.asarray(b)[None, :]
+
+
+def stage_softmax(x):
+    return jax.nn.softmax(x, axis=-1)
+
+
+STAGES: list[tuple[str, Callable]] = [
+    ("conv1", stage_conv1),
+    ("relu1", stage_relu1),
+    ("pool1", stage_pool1),
+    ("conv2", stage_conv2),
+    ("relu2", stage_relu2),
+    ("pool2", stage_pool2),
+    ("conv3", stage_conv3),
+    ("relu3", stage_relu3),
+    ("pool3", stage_pool3),
+    ("conv4", stage_conv4),
+    ("relu4", stage_relu4),
+    ("gap", stage_gap),
+    ("flatten", stage_flatten),
+    ("fc", stage_fc),
+    ("softmax", stage_softmax),
+]
+
+
+def forward(x: jax.Array) -> jax.Array:
+    """Full model: all stages chained."""
+    for _, fn in STAGES:
+        x = fn(x)
+    return x
+
+
+def forward_reference(x: jax.Array) -> jax.Array:
+    """Oracle forward pass that bypasses the Pallas kernels (pure
+    lax/jnp) — pytest asserts ``forward == forward_reference``."""
+    from .kernels.ref import conv2d_ref, dense_ref
+
+    w1, b1 = _W["conv1"]
+    w2, b2 = _W["conv2"]
+    w3, b3 = _W["conv3"]
+    w4, b4 = _W["conv4"]
+    wf, bf = _W["fc"]
+    x = jax.nn.relu(conv2d_ref(x, jnp.asarray(w1), jnp.asarray(b1)))
+    x = _maxpool2(x)
+    x = jax.nn.relu(conv2d_ref(x, jnp.asarray(w2), jnp.asarray(b2)))
+    x = _maxpool2(x)
+    x = jax.nn.relu(conv2d_ref(x, jnp.asarray(w3), jnp.asarray(b3)))
+    x = _maxpool2(x)
+    x = jax.nn.relu(conv2d_ref(x, jnp.asarray(w4), jnp.asarray(b4)))
+    x = x.mean(axis=(2, 3)).reshape(x.shape[0], -1)
+    x = dense_ref(x, jnp.asarray(wf), jnp.asarray(bf))
+    return jax.nn.softmax(x, axis=-1)
+
+
+def stage_shapes(batch: int) -> list[tuple[int, ...]]:
+    """Input shape of every stage (index 0 = model input), length K+1
+    (the final entry is the model output shape)."""
+    shapes = [(batch, *INPUT_SHAPE)]
+    x = jnp.zeros(shapes[0], jnp.float32)
+    for _, fn in STAGES:
+        x = jax.eval_shape(fn, x)
+        shapes.append(tuple(x.shape))
+        x = jnp.zeros(x.shape, jnp.float32)
+    return shapes

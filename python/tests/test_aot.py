@@ -1,0 +1,91 @@
+"""AOT pipeline: lowered HLO artifacts are loadable, numerically faithful,
+and the manifest is consistent with the model."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import aot, model
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ARTIFACTS, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+class TestManifest:
+    def test_covers_all_stages_and_batches(self, manifest):
+        k = len(model.STAGES)
+        assert len(manifest["stages"]) == k * len(manifest["batch_sizes"])
+        for batch in manifest["batch_sizes"]:
+            idxs = sorted(
+                s["index"] for s in manifest["stages"] if s["batch"] == batch
+            )
+            assert idxs == list(range(k))
+
+    def test_shapes_chain(self, manifest):
+        for batch in manifest["batch_sizes"]:
+            stages = sorted(
+                (s for s in manifest["stages"] if s["batch"] == batch),
+                key=lambda s: s["index"],
+            )
+            for a, b in zip(stages, stages[1:]):
+                assert a["out_shape"] == b["in_shape"], a["name"]
+            assert stages[0]["in_shape"] == [batch, *model.INPUT_SHAPE]
+            assert stages[-1]["out_shape"] == [batch, model.NUM_CLASSES]
+
+    def test_bytes_match_shapes(self, manifest):
+        for s in manifest["stages"]:
+            assert s["in_bytes"] == int(np.prod(s["in_shape"])) * 4
+            assert s["out_bytes"] == int(np.prod(s["out_shape"])) * 4
+
+    def test_artifact_files_exist(self, manifest):
+        for s in manifest["stages"]:
+            assert os.path.exists(os.path.join(ARTIFACTS, s["path"])), s["path"]
+        for info in manifest["full"].values():
+            assert os.path.exists(os.path.join(ARTIFACTS, info["path"]))
+
+
+class TestLoweredNumerics:
+    def test_hlo_text_parses_and_mentions_entry(self, manifest):
+        s = manifest["stages"][0]
+        text = open(os.path.join(ARTIFACTS, s["path"])).read()
+        assert "ENTRY" in text and "HloModule" in text
+
+    def test_stage_hlo_parses_with_correct_program_shape(self, manifest):
+        # round-trip the emitted text through XLA's HLO parser and check
+        # the entry computation's parameter/result shapes against the
+        # manifest. (Full re-execution happens on the rust side via the
+        # xla crate — `runtime::split` integration tests — which is the
+        # actual consumer of these artifacts.)
+        from jax._src.lib import xla_client as xc
+
+        for k in (0, 2, 13):  # conv, pool, fc
+            s = next(
+                x for x in manifest["stages"] if x["batch"] == 1 and x["index"] == k
+            )
+            text = open(os.path.join(ARTIFACTS, s["path"])).read()
+            module = xc._xla.hlo_module_from_text(text)
+            comp = xc._xla.XlaComputation(module.as_serialized_hlo_module_proto())
+            prog = comp.program_shape()
+            params = prog.parameter_shapes()
+            assert len(params) == 1, s["name"]
+            assert list(params[0].dimensions()) == s["in_shape"], s["name"]
+            # lowered with return_tuple=True ⇒ result is a 1-tuple
+            (result,) = prog.result_shape().tuple_shapes()
+            assert list(result.dimensions()) == s["out_shape"], s["name"]
+
+    def test_elements_helper(self):
+        assert aot.elements((2, 3, 4)) == 24
+        assert aot.elements((7,)) == 7

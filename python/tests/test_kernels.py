@@ -1,0 +1,132 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps the shape space (including non-block-aligned and
+degenerate sizes); assert_allclose with accumulation-order-aware
+tolerances.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.conv2d import conv2d, _im2col
+from compile.kernels.matmul import matmul, mxu_utilization, vmem_bytes
+from compile.kernels import ref
+
+DIM = st.integers(min_value=1, max_value=96)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+class TestMatmul:
+    @settings(max_examples=60, deadline=None)
+    @given(m=DIM, k=DIM, n=DIM, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref_over_shape_sweep(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x, y = rand(rng, m, k), rand(rng, k, n)
+        got = matmul(x, y)
+        want = ref.matmul_ref(x, y)
+        assert got.shape == want.shape
+        assert_allclose(got, want, rtol=1e-5, atol=1e-5 * np.sqrt(k))
+
+    @pytest.mark.parametrize(
+        "m,k,n",
+        [
+            (128, 128, 128),   # exactly one MXU tile
+            (256, 256, 256),   # multi-tile grid
+            (1, 64, 10),       # fc head shape
+            (4096, 27, 16),    # conv1 im2col shape (batch 1)
+            (130, 257, 129),   # off-by-one vs block lattice
+            (1, 1, 1),         # degenerate
+        ],
+    )
+    def test_known_shapes(self, m, k, n):
+        rng = np.random.default_rng(m * 1000 + k * 10 + n)
+        x, y = rand(rng, m, k), rand(rng, k, n)
+        assert_allclose(matmul(x, y), ref.matmul_ref(x, y), rtol=1e-5,
+                        atol=1e-5 * np.sqrt(k))
+
+    def test_custom_block_sizes_agree(self):
+        rng = np.random.default_rng(7)
+        x, y = rand(rng, 200, 100), rand(rng, 100, 50)
+        a = matmul(x, y, bm=32, bn=32, bk=32)
+        b = matmul(x, y, bm=128, bn=128, bk=128)
+        assert_allclose(a, b, rtol=1e-5, atol=1e-4)
+
+    def test_rejects_bad_shapes(self):
+        x = jnp.zeros((4, 5), jnp.float32)
+        y = jnp.zeros((6, 3), jnp.float32)
+        with pytest.raises(ValueError):
+            matmul(x, y)
+        with pytest.raises(ValueError):
+            matmul(jnp.zeros((2, 2, 2), jnp.float32), x)
+
+    def test_vmem_footprint_fits_tpu_core(self):
+        # default BlockSpec must fit comfortably in a 16 MiB VMEM core
+        assert vmem_bytes() <= 16 * 1024 * 1024 // 4
+
+    def test_mxu_utilization_bounds(self):
+        assert mxu_utilization(128, 128, 128) == 1.0
+        u = mxu_utilization(130, 27, 16)
+        assert 0.0 < u <= 1.0
+
+
+class TestConv2d:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        n=st.integers(1, 3),
+        c=st.integers(1, 8),
+        hw=st.integers(4, 24),
+        oc=st.integers(1, 16),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_same_conv_matches_lax(self, n, c, hw, oc, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, n, c, hw, hw)
+        w = rand(rng, oc, c, 3, 3)
+        b = rand(rng, oc)
+        got = conv2d(x, w, b, stride=1, padding=1)
+        want = ref.conv2d_ref(x, w, b, stride=1, padding="SAME")
+        assert got.shape == want.shape
+        assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("stride,pad", [(1, 0), (2, 1), (2, 0)])
+    def test_strided_conv(self, stride, pad):
+        rng = np.random.default_rng(42)
+        x = rand(rng, 2, 4, 16, 16)
+        w = rand(rng, 8, 4, 3, 3)
+        b = rand(rng, 8)
+        got = conv2d(x, w, b, stride=stride, padding=pad)
+        want = jax.lax.conv_general_dilated(
+            x, w, (stride, stride), [(pad, pad), (pad, pad)],
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        ) + b[None, :, None, None]
+        assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_im2col_shape(self):
+        x = jnp.arange(2 * 3 * 8 * 8, dtype=jnp.float32).reshape(2, 3, 8, 8)
+        patches, oh, ow = _im2col(x, 3, 3, 1, 1)
+        assert (oh, ow) == (8, 8)
+        assert patches.shape == (2 * 64, 27)
+
+    def test_channel_mismatch_rejected(self):
+        with pytest.raises(ValueError):
+            conv2d(
+                jnp.zeros((1, 3, 8, 8), jnp.float32),
+                jnp.zeros((4, 5, 3, 3), jnp.float32),
+                jnp.zeros(4, jnp.float32),
+            )
+
+    def test_1x1_conv(self):
+        rng = np.random.default_rng(9)
+        x = rand(rng, 1, 8, 10, 10)
+        w = rand(rng, 4, 8, 1, 1)
+        b = rand(rng, 4)
+        got = conv2d(x, w, b, stride=1, padding=0)
+        want = ref.conv2d_ref(x, w, b, stride=1, padding="VALID")
+        assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,94 @@
+"""L2 model correctness: staged RSNet vs the kernel-free oracle, stage
+chaining == full forward, shape bookkeeping, determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+
+
+def rand_input(batch, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.normal(size=(batch, *model.INPUT_SHAPE)), jnp.float32
+    )
+
+
+class TestForward:
+    @settings(max_examples=10, deadline=None)
+    @given(batch=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+    def test_pallas_path_matches_reference(self, batch, seed):
+        x = rand_input(batch, seed)
+        assert_allclose(
+            model.forward(x), model.forward_reference(x), rtol=1e-4, atol=1e-5
+        )
+
+    def test_output_is_probability_simplex(self):
+        y = model.forward(rand_input(4, 1))
+        assert y.shape == (4, model.NUM_CLASSES)
+        assert_allclose(y.sum(axis=-1), np.ones(4), rtol=1e-5)
+        assert (np.asarray(y) >= 0).all()
+
+    def test_stage_chain_equals_forward(self):
+        x = rand_input(2, 3)
+        y_full = model.forward(x)
+        z = x
+        for _, fn in model.STAGES:
+            z = fn(z)
+        assert_allclose(z, y_full, rtol=0, atol=0)
+
+    def test_any_split_reproduces_full_output(self):
+        # the paper's split semantics: prefix then suffix must equal the
+        # unsplit forward for EVERY split point
+        x = rand_input(1, 4)
+        y_full = model.forward(x)
+        for s in range(len(model.STAGES) + 1):
+            z = x
+            for _, fn in model.STAGES[:s]:
+                z = fn(z)
+            # (boundary activation would be downlinked here)
+            for _, fn in model.STAGES[s:]:
+                z = fn(z)
+            assert_allclose(z, y_full, rtol=0, atol=0, err_msg=f"split {s}")
+
+    def test_deterministic_weights(self):
+        # weights are seeded: two separate evaluations agree exactly
+        x = rand_input(1, 5)
+        assert_allclose(model.forward(x), model.forward(x), rtol=0, atol=0)
+
+
+class TestShapes:
+    def test_stage_shapes_chain(self):
+        shapes = model.stage_shapes(2)
+        assert len(shapes) == len(model.STAGES) + 1
+        assert shapes[0] == (2, *model.INPUT_SHAPE)
+        assert shapes[-1] == (2, model.NUM_CLASSES)
+        # verify against real evaluation
+        x = rand_input(2, 6)
+        for (name, fn), expect in zip(model.STAGES, shapes[1:]):
+            x = fn(x)
+            assert tuple(x.shape) == expect, name
+
+    def test_activation_sizes_monotone_after_pools(self):
+        shapes = model.stage_shapes(1)
+        sizes = [int(np.prod(s)) for s in shapes]
+        # pooling stages shrink (indices of pool outputs: 3, 6, 9)
+        assert sizes[3] < sizes[1]
+        assert sizes[6] < sizes[3]
+        assert sizes[9] < sizes[6]
+        # final output is tiny vs input
+        assert sizes[-1] < sizes[0] / 100
+
+    def test_matches_rust_analytic_profile(self):
+        # mirror of rust/src/dnn/models.rs::rsnet9 expectations
+        shapes = model.stage_shapes(1)
+        assert shapes[1] == (1, 16, 64, 64)   # conv1
+        assert shapes[3] == (1, 16, 32, 32)   # pool1
+        assert shapes[6] == (1, 32, 16, 16)   # pool2
+        assert shapes[9] == (1, 64, 8, 8)     # pool3
+        assert shapes[12] == (1, 64)          # gap
+        assert shapes[14] == (1, 10)          # fc

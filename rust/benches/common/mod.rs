@@ -1,0 +1,41 @@
+//! Shared helpers for the custom bench harnesses (criterion is unavailable
+//! offline; each bench is a `harness = false` binary that prints the
+//! paper-shaped tables plus timing).
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+/// Median wall time of `reps` runs of `f` after `warmup` runs, in seconds.
+pub fn time_median<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+/// Pretty time.
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+/// Section header.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}

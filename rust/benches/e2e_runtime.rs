@@ -1,0 +1,166 @@
+//! End-to-end runtime benchmarks on the AOT artifacts:
+//!
+//! * per-stage PJRT execution latency (batch 1 and 8);
+//! * batching amortization (µs per image across physical batch sizes);
+//! * split-position cost profile: onboard/cloud compute + wire bytes for
+//!   every split;
+//! * coordinator overhead: serving throughput with the PJRT executor vs
+//!   the instant mock (the difference is the compute; the mock isolates
+//!   router+batcher+channel overhead).
+//!
+//! Requires `make artifacts`. Run: `cargo bench --bench e2e_runtime`
+
+mod common;
+
+use common::{banner, fmt_time, time_median};
+use leo_infer::coordinator::admission::AdmissionController;
+use leo_infer::coordinator::batcher::BatchPolicy;
+use leo_infer::coordinator::router::RoutingPolicy;
+use leo_infer::coordinator::scheduler::Scheduler;
+use leo_infer::coordinator::server::{
+    ExecutorFactory, MockExecutor, Server, ServerConfig, StageExecutor,
+};
+use leo_infer::config::Scenario;
+use leo_infer::link::downlink::DownlinkModel;
+use leo_infer::runtime::artifacts::Manifest;
+use leo_infer::runtime::pjrt::StageRuntime;
+use leo_infer::runtime::split::SplitExecutor;
+use leo_infer::runtime::tensor::HostTensor;
+use leo_infer::sim::workload::Request;
+use leo_infer::solver::Ilpb;
+use leo_infer::util::units::{BitsPerSec, Bytes, Seconds};
+
+fn main() -> anyhow::Result<()> {
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        println!("artifacts not built (run `make artifacts`); skipping e2e_runtime bench");
+        return Ok(());
+    };
+
+    banner("per-stage PJRT latency (median of 30)");
+    println!("{:>4} {:<10} {:>12} {:>12}", "k", "stage", "batch 1", "batch 8");
+    let rt1 = StageRuntime::load("b1", &manifest, 1)?;
+    let rt8 = StageRuntime::load("b8", &manifest, 8)?;
+    let mut x1 = HostTensor::random(vec![1, 3, 64, 64], 1);
+    let mut x8 = HostTensor::random(vec![8, 3, 64, 64], 8);
+    for k in 0..rt1.depth() {
+        let t1 = time_median(3, 30, || {
+            let _ = rt1.run_stage(k, &x1).unwrap();
+        });
+        let t8 = time_median(3, 30, || {
+            let _ = rt8.run_stage(k, &x8).unwrap();
+        });
+        println!(
+            "{:>4} {:<10} {:>12} {:>12}",
+            k,
+            rt1.stage_meta(k).name,
+            fmt_time(t1),
+            fmt_time(t8)
+        );
+        x1 = rt1.run_stage(k, &x1)?;
+        x8 = rt8.run_stage(k, &x8)?;
+    }
+
+    banner("batching amortization (full forward, per-image)");
+    for (batch, rt) in [(1usize, &rt1), (8usize, &rt8)] {
+        let input = HostTensor::random(vec![batch, 3, 64, 64], 42);
+        let t = time_median(2, 10, || {
+            let _ = rt.run_range(0..rt.depth(), input.clone()).unwrap();
+        });
+        println!(
+            "batch {batch}: {} per forward, {} per image",
+            fmt_time(t),
+            fmt_time(t / batch as f64)
+        );
+    }
+
+    banner("split-position profile (batch 8, medians of 10)");
+    println!(
+        "{:>6} {:>12} {:>14} {:>12}",
+        "split", "onboard", "wire bytes", "cloud"
+    );
+    let sat = StageRuntime::load("sat", &manifest, 8)?;
+    let cloud = StageRuntime::load("cloud", &manifest, 8)?;
+    let exec = SplitExecutor::new(sat, cloud)?;
+    let input = HostTensor::random(vec![8, 3, 64, 64], 7);
+    for split in 0..=manifest.depth() {
+        let mut wire = 0usize;
+        let mut sat_s = 0.0;
+        let mut cloud_s = 0.0;
+        let t = time_median(1, 10, || {
+            let (_, s, w, c) = exec.run_split(input.clone(), split).unwrap();
+            wire = w;
+            sat_s = s;
+            cloud_s = c;
+        });
+        let _ = t;
+        println!(
+            "{:>6} {:>12} {:>14} {:>12}",
+            split,
+            fmt_time(sat_s),
+            wire,
+            fmt_time(cloud_s)
+        );
+    }
+
+    banner("coordinator overhead (64 requests, batch 8)");
+    for (label, mock) in [("mock executor (no compute)", true), ("PJRT executor", false)] {
+        let profile = manifest.measured_profile(8)?;
+        let scenario = Scenario::tiansuan();
+        let scheduler = Scheduler::new(
+            scenario.instance_builder(profile.clone()),
+            vec![profile],
+            Box::new(Ilpb::default()),
+        );
+        let m2 = Manifest::load("artifacts")?;
+        let factory: ExecutorFactory = if mock {
+            Box::new(|| Ok(Box::new(MockExecutor::instant()) as Box<dyn StageExecutor>))
+        } else {
+            Box::new(move || {
+                Ok(Box::new(SplitExecutor::new(
+                    StageRuntime::load("satellite", &m2, 8)?,
+                    StageRuntime::load("cloud", &m2, 8)?,
+                )?) as Box<dyn StageExecutor>)
+            })
+        };
+        let mut server = Server::new(
+            ServerConfig {
+                routing: RoutingPolicy::RoundRobin,
+                batching: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Seconds(0.5),
+                    expedite_critical: true,
+                },
+                admission: AdmissionController::default(),
+                downlink: DownlinkModel::new(
+                    BitsPerSec::from_mbps(55.0),
+                    Seconds::from_hours(8.0),
+                    Seconds::from_minutes(6.0),
+                ),
+            },
+            scheduler,
+            vec![factory],
+        );
+        let t0 = std::time::Instant::now();
+        for id in 0..64u64 {
+            server.submit(
+                Request {
+                    id,
+                    arrival: Seconds::ZERO,
+                    data: Bytes::from_mb(8.0),
+                    model: 0,
+                    class: 0,
+                },
+                Seconds(t0.elapsed().as_secs_f64()),
+            )?;
+        }
+        let completions = server.shutdown(Seconds(1.0))?;
+        let wall = t0.elapsed().as_secs_f64();
+        let served: usize = completions.iter().map(|c| c.plan.batch.len()).sum();
+        println!(
+            "{label:<28}: {served} served in {} ({:.0} req/s)",
+            fmt_time(wall),
+            served as f64 / wall
+        );
+    }
+    Ok(())
+}

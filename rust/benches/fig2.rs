@@ -1,0 +1,68 @@
+//! Fig. 2 reproduction: total energy/time consumption vs initial data size
+//! (D ∈ [1, 1000] GB), ILPB vs ARG vs ARS, plus the paper's headline
+//! "10–18% of avg(ARG, ARS)" ratio and growth-rate fits.
+//!
+//! Run: `cargo bench --bench fig2` (SEEDS env overrides the 50-draw default)
+
+mod common;
+
+use common::banner;
+use leo_infer::figures::{fig2, headline_ratio, render_table};
+use leo_infer::util::stats::linreg;
+
+fn main() {
+    let seeds: u64 = std::env::var("SEEDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50);
+    banner(&format!("Fig 2 — consumption vs data size ({seeds} draws/point)"));
+    let t0 = std::time::Instant::now();
+    let pts = fig2(seeds);
+    print!("{}", render_table("Fig 2", "D (GB)", &pts));
+
+    // dispersion columns (the paper plots point estimates; we add 95% CIs)
+    banner("dispersion (95% CI of the mean latency, seconds)");
+    for p in &pts {
+        print!("{:>8.0} GB", p.x);
+        for a in &p.algos {
+            print!("  {}: ±{:.2e}", a.name, a.time_s.ci95);
+        }
+        println!();
+    }
+
+    // mean chosen split per point (diagnostic of partial offloading)
+    banner("mean ILPB split (partial offloading in action)");
+    for p in &pts {
+        let ilpb = p.algos.iter().find(|a| a.name == "ILPB").unwrap();
+        println!("{:>8.0} GB  split {:.2}", p.x, ilpb.mean_split);
+    }
+
+    // the paper's claim: ILPB's slower growth rate with data size
+    banner("log-log growth rates (slope of log10 T vs log10 D)");
+    let xs: Vec<f64> = pts.iter().map(|p| p.x.log10()).collect();
+    for name in ["ILPB", "ARG", "ARS"] {
+        let ys: Vec<f64> = pts
+            .iter()
+            .map(|p| {
+                p.algos
+                    .iter()
+                    .find(|a| a.name == name)
+                    .unwrap()
+                    .time_s
+                    .mean
+                    .log10()
+            })
+            .collect();
+        let (_, slope, r2) = linreg(&xs, &ys);
+        println!("{name:<5} slope {slope:.3} (r² {r2:.4})");
+    }
+
+    banner("headline");
+    let (e, t) = headline_ratio(&pts);
+    println!(
+        "ILPB / avg(ARG, ARS): {:.1}% energy, {:.1}% time   (paper: 10%–18%)",
+        e * 100.0,
+        t * 100.0
+    );
+    println!("\nbench wall time: {:.2} s", t0.elapsed().as_secs_f64());
+}

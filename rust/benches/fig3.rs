@@ -1,0 +1,58 @@
+//! Fig. 3 reproduction: total energy/time consumption vs satellite-ground
+//! transmission rate (R ∈ [10, 100] Mbps, step 10), ILPB vs ARG vs ARS.
+//!
+//! Checked properties (paper §V-B): ILPB ≤ both baselines in Z; ILPB and
+//! ARG improve as the rate rises; ARS is rate-insensitive.
+//!
+//! Run: `cargo bench --bench fig3`
+
+mod common;
+
+use common::banner;
+use leo_infer::figures::{fig3, render_table, AlgoPoint};
+
+fn main() {
+    let seeds: u64 = std::env::var("SEEDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50);
+    banner(&format!("Fig 3 — consumption vs link rate ({seeds} draws/point)"));
+    let t0 = std::time::Instant::now();
+    let pts = fig3(seeds);
+    print!("{}", render_table("Fig 3", "R (Mbps)", &pts));
+
+    banner("paper-shape checks");
+    let series = |name: &str, f: fn(&AlgoPoint) -> f64| -> Vec<f64> {
+        pts.iter()
+            .map(|p| f(p.algos.iter().find(|a| a.name == name).unwrap()))
+            .collect()
+    };
+    let arg_t = series("ARG", |a| a.time_s.mean);
+    let ilpb_t = series("ILPB", |a| a.time_s.mean);
+    let ars_e = series("ARS", |a| a.energy_j.mean);
+    println!(
+        "ARG time falls with rate      : {} ({:.3e} → {:.3e} s)",
+        arg_t.first() > arg_t.last(),
+        arg_t.first().unwrap(),
+        arg_t.last().unwrap()
+    );
+    println!(
+        "ILPB time falls with rate     : {} ({:.3e} → {:.3e} s)",
+        ilpb_t.first() > ilpb_t.last(),
+        ilpb_t.first().unwrap(),
+        ilpb_t.last().unwrap()
+    );
+    let ars_spread = (ars_e.iter().cloned().fold(f64::MIN, f64::max)
+        - ars_e.iter().cloned().fold(f64::MAX, f64::min))
+        / ars_e[0];
+    println!(
+        "ARS energy spread across rates: {:.2}% (paper: ~flat)",
+        ars_spread * 100.0
+    );
+    for p in &pts {
+        let z = |n: &str| p.algos.iter().find(|a| a.name == n).unwrap().z.mean;
+        assert!(z("ILPB") <= z("ARG") + 1e-9 && z("ILPB") <= z("ARS") + 1e-9);
+    }
+    println!("ILPB ≤ min(ARG, ARS) in Z at every rate: true (asserted)");
+    println!("\nbench wall time: {:.2} s", t0.elapsed().as_secs_f64());
+}

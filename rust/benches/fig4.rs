@@ -1,0 +1,57 @@
+//! Fig. 4 reproduction: total energy/time consumption vs the objective
+//! weights λ:μ ∈ {1:0, 3:1, 1:1, 1:3, 0:1}, ILPB vs ARG vs ARS.
+//!
+//! Checked properties (paper §V-B): at λ:μ = 1:0 ILPB matches the best
+//! achievable time; at λ:μ = 0:1 ILPB matches the best achievable energy;
+//! as μ grows, ILPB's energy is non-increasing.
+//!
+//! Run: `cargo bench --bench fig4`
+
+mod common;
+
+use common::banner;
+use leo_infer::figures::{fig4, render_table, AlgoPoint, SweepPoint};
+
+fn main() {
+    let seeds: u64 = std::env::var("SEEDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50);
+    banner(&format!("Fig 4 — consumption vs λ:μ ({seeds} draws/point)"));
+    let t0 = std::time::Instant::now();
+    let pts = fig4(seeds);
+    print!("{}", render_table("Fig 4 (x = λ, μ = 1−λ)", "lambda", &pts));
+
+    banner("paper-shape checks");
+    let get = |p: &SweepPoint, n: &str| -> AlgoPoint {
+        p.algos.iter().find(|a| a.name == n).cloned().unwrap()
+    };
+    // λ:μ = 1:0 — pure latency objective
+    let p = &pts[0];
+    let (ilpb, arg, ars) = (get(p, "ILPB"), get(p, "ARG"), get(p, "ARS"));
+    println!(
+        "λ=1: ILPB time {:.3e} ≤ min(ARG {:.3e}, ARS {:.3e}): {}",
+        ilpb.time_s.mean,
+        arg.time_s.mean,
+        ars.time_s.mean,
+        ilpb.time_s.mean <= arg.time_s.mean.min(ars.time_s.mean) + 1e-6
+    );
+    // λ:μ = 0:1 — pure energy objective
+    let p = pts.last().unwrap();
+    let (ilpb, arg, ars) = (get(p, "ILPB"), get(p, "ARG"), get(p, "ARS"));
+    println!(
+        "μ=1: ILPB energy {:.3e} ≤ min(ARG {:.3e}, ARS {:.3e}): {}",
+        ilpb.energy_j.mean,
+        arg.energy_j.mean,
+        ars.energy_j.mean,
+        ilpb.energy_j.mean <= arg.energy_j.mean.min(ars.energy_j.mean) + 1e-6
+    );
+    // energy monotone as μ grows (left→right in our table = λ falling)
+    let e_series: Vec<f64> = pts.iter().map(|p| get(p, "ILPB").energy_j.mean).collect();
+    let monotone = e_series.windows(2).all(|w| w[1] <= w[0] * 1.001);
+    println!("ILPB energy non-increasing as μ grows: {monotone}");
+    for (p, e) in pts.iter().zip(&e_series) {
+        println!("  λ={:<5} ILPB energy {:.4e} J", p.x, e);
+    }
+    println!("\nbench wall time: {:.2} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,135 @@
+//! Solver scaling + ablations (DESIGN.md §6.1/§6.2).
+//!
+//! * wall time of ILPB vs the O(K) DP scan vs exhaustive vs the literal
+//!   2^K enumeration, across model depths K;
+//! * pruning statistics: how much of the 2^K space the branch-and-bound
+//!   touches (the paper's "effectively reduces the computational
+//!   complexity" claim, quantified);
+//! * bounding ablation: ILPB with the admissible bound disabled.
+//!
+//! Run: `cargo bench --bench solver_scaling`
+
+mod common;
+
+use common::{banner, fmt_time, time_median};
+use leo_infer::dnn::profile::ModelProfile;
+use leo_infer::solver::bnb::{naive_2k_search, Ilpb};
+use leo_infer::solver::{DpSolver, Exhaustive, OffloadPolicy};
+use leo_infer::solver::instance::InstanceBuilder;
+use leo_infer::util::rng::Pcg64;
+use leo_infer::util::units::Bytes;
+
+fn instance(k: usize, seed: u64) -> leo_infer::solver::instance::Instance {
+    let mut rng = Pcg64::seeded(seed);
+    InstanceBuilder::new(ModelProfile::sampled(k, &mut rng))
+        .data(Bytes::from_gb(100.0))
+        .build()
+        .unwrap()
+}
+
+fn main() {
+    banner("solver wall time vs model depth K (median of 20)");
+    println!(
+        "{:>6} {:>12} {:>12} {:>12} {:>14}",
+        "K", "ILPB", "DP-scan", "Exhaustive", "naive 2^K"
+    );
+    for k in [8usize, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096] {
+        let inst = instance(k, k as u64);
+        let t_ilpb = time_median(3, 20, || {
+            let _ = Ilpb::default().solve(&inst);
+        });
+        let t_dp = time_median(3, 20, || {
+            let _ = DpSolver.decide(&inst);
+        });
+        let t_ex = time_median(3, 20, || {
+            let _ = Exhaustive.decide(&inst);
+        });
+        let t_naive = if k <= 20 {
+            fmt_time(time_median(1, 5, || {
+                let _ = naive_2k_search(&inst);
+            }))
+        } else {
+            "—".to_string()
+        };
+        println!(
+            "{:>6} {:>12} {:>12} {:>12} {:>14}",
+            k,
+            fmt_time(t_ilpb),
+            fmt_time(t_dp),
+            fmt_time(t_ex),
+            t_naive
+        );
+    }
+
+    banner("search-space reduction (paper: B&B 'reduces the search space')");
+    println!(
+        "{:>6} {:>14} {:>10} {:>10} {:>10} {:>16}",
+        "K", "2^K leaves", "visited", "evaluated", "pruned", "fraction touched"
+    );
+    for k in [8usize, 12, 16, 20, 32, 64] {
+        let inst = instance(k, 7 + k as u64);
+        let (_, stats) = Ilpb::default().solve(&inst);
+        let full = (k as f64).exp2();
+        println!(
+            "{:>6} {:>14.0} {:>10} {:>10} {:>10} {:>15.2e}",
+            k,
+            full,
+            stats.nodes,
+            stats.leaves,
+            stats.pruned,
+            stats.nodes as f64 / full
+        );
+    }
+
+    banner("bounding ablation (leaves evaluated, 100 random instances)");
+    let mut rng = Pcg64::seeded(0xAB1A);
+    let (mut with_bound, mut without_bound) = (0u64, 0u64);
+    for _ in 0..100 {
+        let k = 8 + rng.index(120);
+        let inst = instance(k, rng.next_u64());
+        let (da, sa) = Ilpb::default().solve(&inst);
+        let (db, sb) = Ilpb::default().without_bounding().solve(&inst);
+        assert!((da.z - db.z).abs() < 1e-12, "ablation changed the optimum");
+        with_bound += sa.leaves;
+        without_bound += sb.leaves;
+    }
+    println!(
+        "leaves: {with_bound} with bound vs {without_bound} without ({:.1}% saved), optima identical",
+        100.0 * (1.0 - with_bound as f64 / without_bound as f64)
+    );
+
+    banner("lightweighting ablation (paper §VI future work): activation wire compression");
+    println!(
+        "{:>12} {:>10} {:>14} {:>14}",
+        "wire factor", "split", "latency (s)", "energy (J)"
+    );
+    {
+        let mut rng = Pcg64::seeded(0x11E7);
+        let profile = ModelProfile::sampled(10, &mut rng);
+        for (label, f) in [("f32 (1.0)", 1.0), ("f16 (0.5)", 0.5), ("int8 (0.25)", 0.25), ("int4 (0.125)", 0.125)] {
+            let inst = InstanceBuilder::new(profile.clone())
+                .data(Bytes::from_gb(500.0))
+                .rate(leo_infer::util::units::BitsPerSec::from_mbps(10.0))
+                .wire_compression(f)
+                .build()
+                .unwrap();
+            let (d, _) = Ilpb::default().solve(&inst);
+            println!(
+                "{:>12} {:>10} {:>14.1} {:>14.1}",
+                label,
+                d.split,
+                d.costs.latency.value(),
+                d.costs.energy.value()
+            );
+        }
+    }
+
+    banner("per-decision latency at the paper's scale (K = 10..40)");
+    for k in [10usize, 20, 40] {
+        let inst = instance(k, 99 + k as u64);
+        let t = time_median(10, 100, || {
+            let _ = Ilpb::default().solve(&inst);
+        });
+        println!("K = {k:<3}  {} per decision", fmt_time(t));
+    }
+}

@@ -1,0 +1,171 @@
+//! Admission control / backpressure.
+//!
+//! A request is refused up front when the system demonstrably cannot serve
+//! it: the target satellite's queue is saturated, its battery is below the
+//! operating floor, or — for deadline-carrying requests — the downlink
+//! cannot move the *best-case* payload within the deadline (using
+//! [`crate::link::downlink::DownlinkModel::capacity_within`]).
+
+use super::state::SatelliteInfo;
+use crate::link::downlink::DownlinkModel;
+use crate::sim::workload::Request;
+use crate::util::units::{Bytes, Seconds};
+
+/// Why a request was refused.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AdmissionVerdict {
+    Admit,
+    QueueFull { depth: usize, cap: usize },
+    BatteryLow { soc: f64, floor: f64 },
+    DeadlineInfeasible { needed: Bytes, movable: Bytes },
+}
+
+impl AdmissionVerdict {
+    pub fn admitted(&self) -> bool {
+        matches!(self, AdmissionVerdict::Admit)
+    }
+}
+
+/// The controller.
+#[derive(Debug, Clone)]
+pub struct AdmissionController {
+    /// Maximum queued requests per satellite.
+    pub queue_cap: usize,
+    /// Minimum battery SoC to accept new work.
+    pub soc_floor: f64,
+    /// Deadline for class-1 requests (None ⇒ no deadline check).
+    pub critical_deadline: Option<Seconds>,
+    /// Fraction of the raw capture that must be downlinkable within the
+    /// deadline in the best case (the deepest split's payload is unknown at
+    /// admission time; this is a conservative lower bound, e.g. the final
+    /// activation ratio of the smallest model).
+    pub min_payload_ratio: f64,
+}
+
+impl Default for AdmissionController {
+    fn default() -> Self {
+        AdmissionController {
+            queue_cap: 64,
+            soc_floor: 0.25,
+            critical_deadline: None,
+            min_payload_ratio: 1e-4,
+        }
+    }
+}
+
+impl AdmissionController {
+    pub fn check(
+        &self,
+        req: &Request,
+        sat: &SatelliteInfo,
+        downlink: &DownlinkModel,
+    ) -> AdmissionVerdict {
+        if sat.queue_depth >= self.queue_cap {
+            return AdmissionVerdict::QueueFull {
+                depth: sat.queue_depth,
+                cap: self.queue_cap,
+            };
+        }
+        if sat.soc < self.soc_floor {
+            return AdmissionVerdict::BatteryLow {
+                soc: sat.soc,
+                floor: self.soc_floor,
+            };
+        }
+        if req.class == 1 {
+            if let Some(deadline) = self.critical_deadline {
+                // best-case payload must fit the downlink within deadline,
+                // behind whatever is already pending
+                let needed = Bytes(req.data.value() * self.min_payload_ratio)
+                    + sat.pending_downlink;
+                let movable = downlink.capacity_within(deadline);
+                if needed > movable {
+                    return AdmissionVerdict::DeadlineInfeasible { needed, movable };
+                }
+            }
+        }
+        AdmissionVerdict::Admit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::BitsPerSec;
+
+    fn downlink() -> DownlinkModel {
+        DownlinkModel::new(
+            BitsPerSec::from_mbps(50.0),
+            Seconds::from_hours(8.0),
+            Seconds::from_minutes(6.0),
+        )
+    }
+
+    fn req(class: u8, gb: f64) -> Request {
+        Request {
+            id: 0,
+            arrival: Seconds::ZERO,
+            data: Bytes::from_gb(gb),
+            model: 0,
+            class,
+        }
+    }
+
+    #[test]
+    fn admits_healthy_satellite() {
+        let ctl = AdmissionController::default();
+        let sat = SatelliteInfo::idle("s");
+        assert!(ctl.check(&req(0, 10.0), &sat, &downlink()).admitted());
+    }
+
+    #[test]
+    fn rejects_full_queue() {
+        let ctl = AdmissionController {
+            queue_cap: 2,
+            ..Default::default()
+        };
+        let mut sat = SatelliteInfo::idle("s");
+        sat.queue_depth = 2;
+        let v = ctl.check(&req(0, 1.0), &sat, &downlink());
+        assert_eq!(v, AdmissionVerdict::QueueFull { depth: 2, cap: 2 });
+    }
+
+    #[test]
+    fn rejects_low_battery() {
+        let ctl = AdmissionController::default();
+        let mut sat = SatelliteInfo::idle("s");
+        sat.soc = 0.1;
+        let v = ctl.check(&req(0, 1.0), &sat, &downlink());
+        assert!(matches!(v, AdmissionVerdict::BatteryLow { .. }));
+    }
+
+    #[test]
+    fn critical_deadline_feasibility() {
+        let ctl = AdmissionController {
+            critical_deadline: Some(Seconds::from_minutes(6.0)),
+            min_payload_ratio: 0.5, // half the raw capture must move
+            ..Default::default()
+        };
+        let sat = SatelliteInfo::idle("s");
+        // 6 min at 50 Mbps ≈ 2.25 GB movable; 10 GB × 0.5 = 5 GB needed
+        let v = ctl.check(&req(1, 10.0), &sat, &downlink());
+        assert!(matches!(v, AdmissionVerdict::DeadlineInfeasible { .. }));
+        // a small capture is fine
+        assert!(ctl.check(&req(1, 1.0), &sat, &downlink()).admitted());
+        // class-0 requests skip the deadline check
+        assert!(ctl.check(&req(0, 10.0), &sat, &downlink()).admitted());
+    }
+
+    #[test]
+    fn pending_backlog_counts_against_deadline() {
+        let ctl = AdmissionController {
+            critical_deadline: Some(Seconds::from_minutes(6.0)),
+            min_payload_ratio: 0.01,
+            ..Default::default()
+        };
+        let mut sat = SatelliteInfo::idle("s");
+        sat.pending_downlink = Bytes::from_gb(100.0); // huge backlog
+        let v = ctl.check(&req(1, 1.0), &sat, &downlink());
+        assert!(matches!(v, AdmissionVerdict::DeadlineInfeasible { .. }));
+    }
+}

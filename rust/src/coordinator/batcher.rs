@@ -1,0 +1,223 @@
+//! Dynamic batching.
+//!
+//! On-board accelerators amortize per-invocation overhead across a batch;
+//! the batcher groups compatible requests (same satellite, same model) and
+//! flushes on whichever of two triggers fires first:
+//!
+//! * **size** — the batch reached `max_batch` requests;
+//! * **deadline** — the oldest member has waited `max_wait`.
+//!
+//! Latency-critical requests (class 1) flush immediately.
+
+use crate::sim::workload::Request;
+use crate::util::units::Seconds;
+use std::collections::BTreeMap;
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Seconds,
+    /// Flush class-1 (latency-critical) requests immediately.
+    pub expedite_critical: bool,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Seconds(2.0),
+            expedite_critical: true,
+        }
+    }
+}
+
+/// A flushed batch, ready for the scheduler.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    pub model: usize,
+    pub requests: Vec<Request>,
+    /// Time the batch was flushed.
+    pub formed_at: Seconds,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// Per-model pending queues with deadline tracking.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    policy: BatchPolicy,
+    pending: BTreeMap<usize, Vec<Request>>,
+    oldest: BTreeMap<usize, f64>,
+}
+
+impl DynamicBatcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1);
+        DynamicBatcher {
+            policy,
+            pending: BTreeMap::new(),
+            oldest: BTreeMap::new(),
+        }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Number of requests currently buffered.
+    pub fn buffered(&self) -> usize {
+        self.pending.values().map(Vec::len).sum()
+    }
+
+    /// Offer a request at time `now`; returns a batch if a trigger fired.
+    pub fn offer(&mut self, req: Request, now: Seconds) -> Option<Batch> {
+        let model = req.model;
+        let critical = req.class == 1 && self.policy.expedite_critical;
+        let queue = self.pending.entry(model).or_default();
+        if queue.is_empty() {
+            self.oldest.insert(model, now.value());
+        }
+        queue.push(req);
+        if critical || queue.len() >= self.policy.max_batch {
+            return self.flush_model(model, now);
+        }
+        None
+    }
+
+    /// Deadline sweep: flush any queue whose oldest member has waited past
+    /// `max_wait`. Call periodically (the server ticks this).
+    pub fn sweep(&mut self, now: Seconds) -> Vec<Batch> {
+        let expired: Vec<usize> = self
+            .oldest
+            .iter()
+            .filter(|(_, &t0)| now.value() - t0 >= self.policy.max_wait.value())
+            .map(|(&m, _)| m)
+            .collect();
+        expired
+            .into_iter()
+            .filter_map(|m| self.flush_model(m, now))
+            .collect()
+    }
+
+    /// Force-flush everything (drain at shutdown).
+    pub fn flush_all(&mut self, now: Seconds) -> Vec<Batch> {
+        let models: Vec<usize> = self.pending.keys().copied().collect();
+        models
+            .into_iter()
+            .filter_map(|m| self.flush_model(m, now))
+            .collect()
+    }
+
+    fn flush_model(&mut self, model: usize, now: Seconds) -> Option<Batch> {
+        let queue = self.pending.remove(&model)?;
+        self.oldest.remove(&model);
+        if queue.is_empty() {
+            return None;
+        }
+        Some(Batch {
+            model,
+            requests: queue,
+            formed_at: now,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::Bytes;
+
+    fn req(id: u64, model: usize, class: u8) -> Request {
+        Request {
+            id,
+            arrival: Seconds::ZERO,
+            data: Bytes::from_mb(1.0),
+            model,
+            class,
+        }
+    }
+
+    #[test]
+    fn size_trigger_flushes_full_batch() {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 3,
+            max_wait: Seconds(100.0),
+            expedite_critical: true,
+        });
+        assert!(b.offer(req(0, 0, 0), Seconds(0.0)).is_none());
+        assert!(b.offer(req(1, 0, 0), Seconds(0.1)).is_none());
+        let batch = b.offer(req(2, 0, 0), Seconds(0.2)).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch.model, 0);
+        assert_eq!(b.buffered(), 0);
+    }
+
+    #[test]
+    fn models_batch_separately() {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 2,
+            max_wait: Seconds(100.0),
+            expedite_critical: true,
+        });
+        assert!(b.offer(req(0, 0, 0), Seconds(0.0)).is_none());
+        assert!(b.offer(req(1, 1, 0), Seconds(0.0)).is_none());
+        let batch = b.offer(req(2, 0, 0), Seconds(0.1)).unwrap();
+        assert_eq!(batch.model, 0);
+        assert_eq!(b.buffered(), 1, "model-1 request still pending");
+    }
+
+    #[test]
+    fn deadline_sweep_flushes_stale() {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 10,
+            max_wait: Seconds(2.0),
+            expedite_critical: true,
+        });
+        b.offer(req(0, 0, 0), Seconds(0.0));
+        b.offer(req(1, 1, 0), Seconds(1.5));
+        let batches = b.sweep(Seconds(2.0));
+        assert_eq!(batches.len(), 1, "only model-0 is stale");
+        assert_eq!(batches[0].model, 0);
+        let batches2 = b.sweep(Seconds(3.5));
+        assert_eq!(batches2.len(), 1);
+        assert_eq!(batches2[0].model, 1);
+    }
+
+    #[test]
+    fn critical_requests_flush_immediately() {
+        let mut b = DynamicBatcher::new(BatchPolicy::default());
+        b.offer(req(0, 0, 0), Seconds(0.0));
+        let batch = b.offer(req(1, 0, 1), Seconds(0.1)).unwrap();
+        assert_eq!(batch.len(), 2, "critical flushes the whole model queue");
+    }
+
+    #[test]
+    fn critical_expedite_can_be_disabled() {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Seconds(10.0),
+            expedite_critical: false,
+        });
+        assert!(b.offer(req(0, 0, 1), Seconds(0.0)).is_none());
+    }
+
+    #[test]
+    fn flush_all_drains() {
+        let mut b = DynamicBatcher::new(BatchPolicy::default());
+        b.offer(req(0, 0, 0), Seconds(0.0));
+        b.offer(req(1, 1, 0), Seconds(0.0));
+        b.offer(req(2, 2, 0), Seconds(0.0));
+        let batches = b.flush_all(Seconds(1.0));
+        assert_eq!(batches.len(), 3);
+        assert_eq!(b.buffered(), 0);
+    }
+}

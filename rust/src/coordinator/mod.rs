@@ -1,0 +1,39 @@
+//! The serving coordinator: the L3 runtime that turns the paper's
+//! per-request optimization into a deployable system.
+//!
+//! Pipeline:
+//!
+//! ```text
+//! submit ─► admission ─► router ─► per-satellite batcher ─► scheduler
+//!                                                             │
+//!                         split decision (solver) ◄───────────┤
+//!                         satellite stages → downlink → cloud stages
+//! ```
+//!
+//! * [`state`] — cluster state: per-satellite queue depth, battery, next
+//!   contact prediction.
+//! * [`admission`] — backpressure: reject work that cannot meet its
+//!   deadline or would breach the battery floor.
+//! * [`router`] — request → satellite assignment (round-robin,
+//!   least-loaded, contact-aware).
+//! * [`batcher`] — dynamic batching per (satellite, model) with size and
+//!   deadline triggers.
+//! * [`scheduler`] — turns a batch + solver decision into an execution
+//!   plan.
+//! * [`server`] — multi-threaded leader/worker serving loop over std
+//!   channels (no async runtime available offline; threads are the
+//!   substrate).
+
+pub mod admission;
+pub mod batcher;
+pub mod router;
+pub mod scheduler;
+pub mod server;
+pub mod state;
+
+pub use admission::{AdmissionController, AdmissionVerdict};
+pub use batcher::{Batch, BatchPolicy, DynamicBatcher};
+pub use router::{Router, RoutingPolicy};
+pub use scheduler::{ExecutionPlan, Scheduler};
+pub use server::{Server, ServerConfig, SubmitResult};
+pub use state::{ClusterState, SatelliteInfo};

@@ -1,0 +1,142 @@
+//! Request routing: which satellite serves a request.
+//!
+//! In a multi-satellite constellation the leader assigns each capture/
+//! inference request to a satellite. (In the paper's single-satellite
+//! evaluation the router is trivial; the policies below are the natural
+//! fleet extension and are ablated in `constellation_study`.)
+
+use super::state::ClusterState;
+use crate::sim::workload::Request;
+
+/// Routing policies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RoutingPolicy {
+    /// Cycle through satellites regardless of load.
+    RoundRobin,
+    /// Satellite with the fewest queued requests.
+    LeastLoaded,
+    /// Satellite whose next ground contact opens soonest — best for
+    /// downlink-heavy (low-split) traffic.
+    ContactAware,
+    /// Least-loaded, but disqualify satellites below a battery floor.
+    EnergyAware { min_soc: f64 },
+}
+
+/// The router.
+#[derive(Debug)]
+pub struct Router {
+    policy: RoutingPolicy,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(policy: RoutingPolicy) -> Self {
+        Router {
+            policy,
+            rr_next: 0,
+        }
+    }
+
+    pub fn policy(&self) -> RoutingPolicy {
+        self.policy
+    }
+
+    /// Pick a satellite for `req`. Returns `None` when no satellite is
+    /// eligible (e.g. all below the energy floor).
+    pub fn route(&mut self, req: &Request, cluster: &ClusterState) -> Option<usize> {
+        let _ = req; // current policies are request-agnostic; class-aware
+                     // routing extends here
+        if cluster.is_empty() {
+            return None;
+        }
+        match self.policy {
+            RoutingPolicy::RoundRobin => {
+                let ids = cluster.ids();
+                let pick = ids[self.rr_next % ids.len()];
+                self.rr_next = (self.rr_next + 1) % ids.len();
+                Some(pick)
+            }
+            RoutingPolicy::LeastLoaded => cluster.least_loaded(),
+            RoutingPolicy::ContactAware => cluster.soonest_contact(),
+            RoutingPolicy::EnergyAware { min_soc } => cluster
+                .ids()
+                .into_iter()
+                .filter(|id| cluster.get(*id).map_or(false, |s| s.soc >= min_soc))
+                .min_by_key(|id| (cluster.get(*id).unwrap().queue_depth, *id)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::state::SatelliteInfo;
+    use crate::util::units::{Bytes, Seconds};
+
+    fn req() -> Request {
+        Request {
+            id: 0,
+            arrival: Seconds::ZERO,
+            data: Bytes::from_gb(1.0),
+            model: 0,
+            class: 0,
+        }
+    }
+
+    fn cluster(n: usize) -> ClusterState {
+        let mut c = ClusterState::new();
+        for i in 0..n {
+            c.register(i, SatelliteInfo::idle(&format!("sat-{i}")));
+        }
+        c
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RoutingPolicy::RoundRobin);
+        let c = cluster(3);
+        let picks: Vec<usize> = (0..6).map(|_| r.route(&req(), &c).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_empty_queue() {
+        let mut r = Router::new(RoutingPolicy::LeastLoaded);
+        let mut c = cluster(3);
+        c.note_enqueue(0, Bytes::ZERO);
+        c.note_enqueue(1, Bytes::ZERO);
+        assert_eq!(r.route(&req(), &c), Some(2));
+    }
+
+    #[test]
+    fn contact_aware_prefers_soonest_pass() {
+        let mut r = Router::new(RoutingPolicy::ContactAware);
+        let mut c = cluster(3);
+        c.get_mut(0).unwrap().next_contact_in = Seconds(1000.0);
+        c.get_mut(1).unwrap().next_contact_in = Seconds(10.0);
+        c.get_mut(2).unwrap().next_contact_in = Seconds(100.0);
+        assert_eq!(r.route(&req(), &c), Some(1));
+    }
+
+    #[test]
+    fn energy_aware_skips_depleted() {
+        let mut r = Router::new(RoutingPolicy::EnergyAware { min_soc: 0.3 });
+        let mut c = cluster(3);
+        c.get_mut(0).unwrap().soc = 0.1;
+        c.get_mut(1).unwrap().soc = 0.5;
+        c.get_mut(2).unwrap().soc = 0.9;
+        c.note_enqueue(1, Bytes::ZERO); // load on 1
+        assert_eq!(r.route(&req(), &c), Some(2));
+        // all depleted ⇒ None
+        for i in 0..3 {
+            c.get_mut(i).unwrap().soc = 0.0;
+        }
+        assert_eq!(r.route(&req(), &c), None);
+    }
+
+    #[test]
+    fn empty_cluster_routes_nowhere() {
+        let mut r = Router::new(RoutingPolicy::RoundRobin);
+        assert_eq!(r.route(&req(), &ClusterState::new()), None);
+    }
+}

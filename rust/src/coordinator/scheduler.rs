@@ -1,0 +1,228 @@
+//! Batch scheduling: solver decision → execution plan.
+//!
+//! A batch shares one split decision (all members run the same model, and
+//! the accelerator executes them together): the scheduler solves the ILP
+//! for the batch's combined data size, then emits the stage ranges for the
+//! on-board and cloud halves plus the downlink payload.
+
+use super::batcher::Batch;
+use crate::dnn::profile::ModelProfile;
+use crate::solver::instance::{Decision, InstanceBuilder};
+use crate::solver::policy::OffloadPolicy;
+use crate::util::units::Bytes;
+use std::ops::Range;
+
+/// A scheduled batch, ready for execution.
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    pub batch: Batch,
+    /// Chosen split (subtasks on the satellite).
+    pub split: usize,
+    /// Solver decision (costs, Z) for reporting.
+    pub decision: Decision,
+    /// Stage indices executed on board: `0..split`.
+    pub onboard_stages: Range<usize>,
+    /// Stage indices executed in the cloud: `split..K`.
+    pub cloud_stages: Range<usize>,
+    /// Bytes downlinked for the whole batch (0 when split == K).
+    pub downlink_bytes: Bytes,
+}
+
+/// Per-class objective weights (paper §III-E: "critical applications like
+/// fire hazard detection" want latency; "longer-duration detection tasks"
+/// want energy). Class 1 = latency-critical, class 0 = energy-saving.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClassWeights {
+    /// (μ, λ) for class-0 (survey) batches.
+    pub survey: (f64, f64),
+    /// (μ, λ) for class-1 (alert) batches.
+    pub alert: (f64, f64),
+}
+
+impl Default for ClassWeights {
+    fn default() -> Self {
+        ClassWeights {
+            survey: (0.9, 0.1),
+            alert: (0.1, 0.9),
+        }
+    }
+}
+
+/// The scheduler: owns the scenario template and the offloading policy.
+pub struct Scheduler {
+    template: InstanceBuilder,
+    profiles: Vec<ModelProfile>,
+    policy: Box<dyn OffloadPolicy + Send + Sync>,
+    /// When set, batches containing any class-1 request solve under the
+    /// alert weights and pure-survey batches under the survey weights,
+    /// overriding the template's (μ, λ).
+    class_weights: Option<ClassWeights>,
+}
+
+impl Scheduler {
+    pub fn new(
+        template: InstanceBuilder,
+        profiles: Vec<ModelProfile>,
+        policy: Box<dyn OffloadPolicy + Send + Sync>,
+    ) -> Self {
+        assert!(!profiles.is_empty());
+        Scheduler {
+            template,
+            profiles,
+            policy,
+            class_weights: None,
+        }
+    }
+
+    /// Enable per-class objective weighting.
+    pub fn with_class_weights(mut self, w: ClassWeights) -> Self {
+        self.class_weights = Some(w);
+        self
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    pub fn profiles(&self) -> &[ModelProfile] {
+        &self.profiles
+    }
+
+    /// Plan a batch: solve for the combined payload.
+    pub fn plan(&self, batch: Batch) -> anyhow::Result<ExecutionPlan> {
+        anyhow::ensure!(!batch.is_empty(), "cannot plan an empty batch");
+        let profile = self.profiles[batch.model % self.profiles.len()].clone();
+        let k = profile.depth();
+        let total: Bytes = batch.requests.iter().map(|r| r.data).sum();
+        let mut builder = self.template.clone().profile(profile).data(total);
+        if let Some(w) = self.class_weights {
+            let critical = batch.requests.iter().any(|r| r.class == 1);
+            let (mu, lambda) = if critical { w.alert } else { w.survey };
+            builder = builder.weights(mu, lambda);
+        }
+        let inst = builder.build()?;
+        let decision = self.policy.decide(&inst);
+        let split = decision.split;
+        let downlink_bytes = if split < k {
+            inst.subtask_bytes(split)
+        } else {
+            Bytes::ZERO
+        };
+        Ok(ExecutionPlan {
+            batch,
+            split,
+            decision,
+            onboard_stages: 0..split,
+            cloud_stages: split..k,
+            downlink_bytes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::workload::Request;
+    use crate::solver::baselines::{Arg, Ars};
+    use crate::solver::bnb::Ilpb;
+    use crate::util::units::Seconds;
+
+    fn profile() -> ModelProfile {
+        ModelProfile::from_alphas("net", &[1000.0, 400.0, 120.0, 30.0, 4.0]).unwrap()
+    }
+
+    fn batch(n: usize, gb_each: f64) -> Batch {
+        Batch {
+            model: 0,
+            requests: (0..n as u64)
+                .map(|id| Request {
+                    id,
+                    arrival: Seconds::ZERO,
+                    data: Bytes::from_gb(gb_each),
+                    model: 0,
+                    class: 0,
+                })
+                .collect(),
+            formed_at: Seconds::ZERO,
+        }
+    }
+
+    fn scheduler(policy: Box<dyn OffloadPolicy + Send + Sync>) -> Scheduler {
+        Scheduler::new(InstanceBuilder::new(profile()), vec![profile()], policy)
+    }
+
+    #[test]
+    fn plan_stage_ranges_partition_the_model() {
+        let s = scheduler(Box::new(Ilpb::default()));
+        let plan = s.plan(batch(4, 2.0)).unwrap();
+        let k = profile().depth();
+        assert_eq!(plan.onboard_stages.end, plan.cloud_stages.start);
+        assert_eq!(plan.cloud_stages.end, k);
+        assert_eq!(plan.onboard_stages.start, 0);
+        assert_eq!(plan.split, plan.onboard_stages.end);
+    }
+
+    #[test]
+    fn arg_plan_downlinks_everything() {
+        let s = scheduler(Box::new(Arg));
+        let plan = s.plan(batch(2, 1.0)).unwrap();
+        assert_eq!(plan.split, 0);
+        assert_eq!(plan.downlink_bytes, Bytes::from_gb(2.0));
+    }
+
+    #[test]
+    fn ars_plan_downlinks_nothing() {
+        let s = scheduler(Box::new(Ars));
+        let plan = s.plan(batch(2, 1.0)).unwrap();
+        assert_eq!(plan.split, profile().depth());
+        assert_eq!(plan.downlink_bytes, Bytes::ZERO);
+        assert!(plan.cloud_stages.is_empty());
+    }
+
+    #[test]
+    fn batch_size_scales_payload() {
+        let s = scheduler(Box::new(Arg));
+        let small = s.plan(batch(1, 1.0)).unwrap();
+        let large = s.plan(batch(8, 1.0)).unwrap();
+        assert!(large.downlink_bytes.value() > small.downlink_bytes.value());
+    }
+
+    #[test]
+    fn class_weights_steer_the_split() {
+        // alert batches solve latency-heavy, survey batches energy-heavy;
+        // at minimum the Z evaluations must use different objectives
+        let s = Scheduler::new(
+            InstanceBuilder::new(profile()),
+            vec![profile()],
+            Box::new(Ilpb::default()),
+        )
+        .with_class_weights(ClassWeights::default());
+        let mut alert = batch(2, 10.0);
+        alert.requests[1].class = 1;
+        let survey = batch(2, 10.0);
+        let p_alert = s.plan(alert).unwrap();
+        let p_survey = s.plan(survey).unwrap();
+        // both feasible; survey's decision must not burn more energy than
+        // the alert decision for the same payload (it optimizes energy)
+        assert!(
+            p_survey.decision.costs.energy.value()
+                <= p_alert.decision.costs.energy.value() + 1e-9
+        );
+        // and the alert decision must not be slower than survey's
+        assert!(
+            p_alert.decision.costs.latency.value()
+                <= p_survey.decision.costs.latency.value() + 1e-9
+        );
+    }
+
+    #[test]
+    fn empty_batch_rejected() {
+        let s = scheduler(Box::new(Ilpb::default()));
+        let empty = Batch {
+            model: 0,
+            requests: vec![],
+            formed_at: Seconds::ZERO,
+        };
+        assert!(s.plan(empty).is_err());
+    }
+}

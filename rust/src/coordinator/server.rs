@@ -1,0 +1,450 @@
+//! The serving loop: leader + per-satellite workers over std channels.
+//!
+//! The leader thread owns admission, routing and batching; each satellite
+//! worker thread executes plans through a [`StageExecutor`] (a mock cost
+//! model in tests, the PJRT runtime in `examples/e2e_serving`). No async
+//! runtime exists in the offline environment — threads and channels are
+//! the substrate, which also keeps the hot path allocation-predictable.
+//!
+//! Time is *virtual* and supplied by the caller (`submit(req, now)`,
+//! `tick(now)`): the same server is driven by wall-clock time in the e2e
+//! example and by scripted time in tests/benches.
+
+use super::admission::{AdmissionController, AdmissionVerdict};
+use super::batcher::{BatchPolicy, DynamicBatcher};
+use super::router::{Router, RoutingPolicy};
+use super::scheduler::{ExecutionPlan, Scheduler};
+use super::state::{ClusterState, SatelliteInfo};
+use crate::link::downlink::DownlinkModel;
+use crate::sim::workload::Request;
+use crate::util::units::{Bytes, Seconds};
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Execution backend for a planned batch. Implementations:
+/// `runtime::split::SplitExecutor` (real PJRT inference) and
+/// [`MockExecutor`] (cost-model timing for tests/benches).
+///
+/// Deliberately **not** `Send`: PJRT clients are thread-affine (`Rc`
+/// internals), so the server takes [`ExecutorFactory`] closures and each
+/// worker thread constructs its executor locally.
+pub trait StageExecutor: 'static {
+    /// Execute the plan, returning per-batch measurements.
+    fn execute(&mut self, plan: &ExecutionPlan) -> anyhow::Result<ExecutionReport>;
+}
+
+/// Builds a worker's executor inside the worker thread.
+pub type ExecutorFactory =
+    Box<dyn FnOnce() -> anyhow::Result<Box<dyn StageExecutor>> + Send + 'static>;
+
+/// Measurements from executing one batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutionReport {
+    /// Wall/modelled seconds spent in on-board stages.
+    pub onboard_s: f64,
+    /// Wall/modelled seconds spent downlinking.
+    pub downlink_s: f64,
+    /// Wall/modelled seconds spent in cloud stages.
+    pub cloud_s: f64,
+    /// Argmax class per request (empty for cost-model executors).
+    pub outputs: Vec<usize>,
+}
+
+/// A completed batch notification.
+#[derive(Debug)]
+pub struct Completion {
+    pub satellite: usize,
+    pub plan: ExecutionPlan,
+    pub report: ExecutionReport,
+}
+
+/// Result of a submit call.
+#[derive(Debug, PartialEq)]
+pub enum SubmitResult {
+    /// Queued (possibly still buffering in the batcher).
+    Accepted { satellite: usize },
+    /// Refused by admission control.
+    Rejected(AdmissionVerdict),
+    /// No satellite available (empty cluster / all below energy floor).
+    Unroutable,
+}
+
+/// Server configuration.
+pub struct ServerConfig {
+    pub routing: RoutingPolicy,
+    pub batching: BatchPolicy,
+    pub admission: AdmissionController,
+    /// Downlink model used for admission feasibility checks.
+    pub downlink: DownlinkModel,
+}
+
+/// The leader: owns cluster state and per-satellite pipelines.
+pub struct Server {
+    router: Router,
+    admission: AdmissionController,
+    downlink: DownlinkModel,
+    cluster: ClusterState,
+    batchers: BTreeMap<usize, DynamicBatcher>,
+    scheduler: Arc<Scheduler>,
+    workers: BTreeMap<usize, Worker>,
+    completions_rx: mpsc::Receiver<Completion>,
+    completions_tx: mpsc::Sender<Completion>,
+}
+
+struct Worker {
+    tx: mpsc::Sender<ExecutionPlan>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn one worker thread per satellite; each worker builds its own
+    /// executor from the supplied factory (PJRT clients are thread-affine).
+    pub fn new(
+        config: ServerConfig,
+        scheduler: Scheduler,
+        executors: Vec<ExecutorFactory>,
+    ) -> Self {
+        assert!(!executors.is_empty(), "need at least one satellite");
+        let scheduler = Arc::new(scheduler);
+        let (completions_tx, completions_rx) = mpsc::channel();
+        let mut cluster = ClusterState::new();
+        let mut workers = BTreeMap::new();
+        let mut batchers = BTreeMap::new();
+        for (id, factory) in executors.into_iter().enumerate() {
+            cluster.register(id, SatelliteInfo::idle(&format!("sat-{id}")));
+            batchers.insert(id, DynamicBatcher::new(config.batching));
+            let (tx, rx) = mpsc::channel::<ExecutionPlan>();
+            let done = completions_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("sat-worker-{id}"))
+                .spawn(move || {
+                    let mut exec = match factory() {
+                        Ok(e) => e,
+                        Err(e) => {
+                            log::error!("sat-{id} executor init failed: {e:#}");
+                            return;
+                        }
+                    };
+                    while let Ok(plan) = rx.recv() {
+                        match exec.execute(&plan) {
+                            Ok(report) => {
+                                // leader may have shut down; ignore send errors
+                                let _ = done.send(Completion {
+                                    satellite: id,
+                                    plan,
+                                    report,
+                                });
+                            }
+                            Err(e) => {
+                                log::error!("sat-{id} execution failed: {e:#}");
+                            }
+                        }
+                    }
+                })
+                .expect("spawn worker");
+            workers.insert(
+                id,
+                Worker {
+                    tx,
+                    handle: Some(handle),
+                },
+            );
+        }
+        Server {
+            router: Router::new(config.routing),
+            admission: config.admission,
+            downlink: config.downlink,
+            cluster,
+            batchers,
+            scheduler,
+            workers,
+            completions_rx,
+            completions_tx,
+        }
+    }
+
+    /// Cluster state snapshot (for dashboards/telemetry hooks).
+    pub fn cluster(&self) -> &ClusterState {
+        &self.cluster
+    }
+
+    /// Mutable access for telemetry updates (battery/contact refresh).
+    pub fn cluster_mut(&mut self) -> &mut ClusterState {
+        &mut self.cluster
+    }
+
+    /// Submit a request at virtual time `now`.
+    pub fn submit(&mut self, req: Request, now: Seconds) -> anyhow::Result<SubmitResult> {
+        let Some(sat) = self.router.route(&req, &self.cluster) else {
+            return Ok(SubmitResult::Unroutable);
+        };
+        let info = self.cluster.get(sat).expect("routed satellite exists");
+        let verdict = self.admission.check(&req, info, &self.downlink);
+        if !verdict.admitted() {
+            return Ok(SubmitResult::Rejected(verdict));
+        }
+        self.cluster.note_enqueue(sat, Bytes::ZERO);
+        let batcher = self.batchers.get_mut(&sat).expect("batcher exists");
+        if let Some(batch) = batcher.offer(req, now) {
+            self.dispatch(sat, batch)?;
+        }
+        Ok(SubmitResult::Accepted { satellite: sat })
+    }
+
+    /// Periodic tick: sweep batch deadlines.
+    pub fn tick(&mut self, now: Seconds) -> anyhow::Result<usize> {
+        let mut dispatched = 0;
+        let ids: Vec<usize> = self.batchers.keys().copied().collect();
+        for sat in ids {
+            let batches = self.batchers.get_mut(&sat).unwrap().sweep(now);
+            for b in batches {
+                self.dispatch(sat, b)?;
+                dispatched += 1;
+            }
+        }
+        Ok(dispatched)
+    }
+
+    /// Non-blocking completion poll; updates cluster state.
+    pub fn poll_completions(&mut self) -> Vec<Completion> {
+        let mut out = Vec::new();
+        while let Ok(c) = self.completions_rx.try_recv() {
+            for _ in 0..c.plan.batch.len() {
+                self.cluster.note_complete(c.satellite, Bytes::ZERO);
+            }
+            out.push(c);
+        }
+        out
+    }
+
+    /// Drain: flush all batchers, close the pipelines, join the workers and
+    /// return every remaining completion.
+    pub fn shutdown(mut self, now: Seconds) -> anyhow::Result<Vec<Completion>> {
+        let ids: Vec<usize> = self.batchers.keys().copied().collect();
+        for sat in ids {
+            let batches = self.batchers.get_mut(&sat).unwrap().flush_all(now);
+            for b in batches {
+                self.dispatch(sat, b)?;
+            }
+        }
+        // close plan channels so workers exit after finishing their queues
+        for (_, w) in self.workers.iter_mut() {
+            let (dead_tx, _) = mpsc::channel();
+            let old = std::mem::replace(&mut w.tx, dead_tx);
+            drop(old);
+        }
+        for (_, w) in self.workers.iter_mut() {
+            if let Some(h) = w.handle.take() {
+                h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
+            }
+        }
+        // all workers joined ⇒ all sends done; drop our own tx and drain
+        drop(self.completions_tx);
+        let mut out = Vec::new();
+        while let Ok(c) = self.completions_rx.try_recv() {
+            out.push(c);
+        }
+        Ok(out)
+    }
+
+    fn dispatch(&mut self, sat: usize, batch: super::batcher::Batch) -> anyhow::Result<()> {
+        let plan = self.scheduler.plan(batch)?;
+        log::debug!(
+            "dispatch sat-{sat}: batch of {} (model {}), split {} / {} ({})",
+            plan.batch.len(),
+            plan.batch.model,
+            plan.split,
+            plan.cloud_stages.end,
+            self.scheduler.policy_name(),
+        );
+        self.workers
+            .get(&sat)
+            .expect("worker exists")
+            .tx
+            .send(plan)
+            .map_err(|_| anyhow::anyhow!("worker sat-{sat} hung up"))?;
+        Ok(())
+    }
+}
+
+/// Cost-model executor: "executes" a plan by evaluating the analytic
+/// latency model (optionally sleeping a scaled amount for realism in
+/// demos). Used by unit tests and the coordinator benches.
+pub struct MockExecutor {
+    /// Sleep `modelled_seconds × time_scale` to emulate work (0 = instant).
+    pub time_scale: f64,
+}
+
+impl MockExecutor {
+    pub fn instant() -> Self {
+        MockExecutor { time_scale: 0.0 }
+    }
+}
+
+impl StageExecutor for MockExecutor {
+    fn execute(&mut self, plan: &ExecutionPlan) -> anyhow::Result<ExecutionReport> {
+        let c = &plan.decision.costs;
+        let report = ExecutionReport {
+            onboard_s: c.t_satellite.value(),
+            downlink_s: (c.t_downlink + c.t_ground_cloud).value(),
+            cloud_s: c.t_cloud.value(),
+            outputs: vec![0; plan.batch.len()],
+        };
+        if self.time_scale > 0.0 {
+            let total = (report.onboard_s + report.downlink_s + report.cloud_s)
+                * self.time_scale;
+            std::thread::sleep(std::time::Duration::from_secs_f64(total.min(0.1)));
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::profile::ModelProfile;
+    use crate::solver::bnb::Ilpb;
+    use crate::solver::instance::InstanceBuilder;
+    use crate::util::units::BitsPerSec;
+
+    fn profile() -> ModelProfile {
+        ModelProfile::from_alphas("net", &[1000.0, 400.0, 120.0, 30.0, 4.0]).unwrap()
+    }
+
+    fn server(n_sats: usize, batching: BatchPolicy) -> Server {
+        let template = InstanceBuilder::new(profile());
+        let scheduler = Scheduler::new(
+            template,
+            vec![profile()],
+            Box::new(Ilpb::default()),
+        );
+        let config = ServerConfig {
+            routing: RoutingPolicy::RoundRobin,
+            batching,
+            admission: AdmissionController::default(),
+            downlink: DownlinkModel::new(
+                BitsPerSec::from_mbps(50.0),
+                Seconds::from_hours(8.0),
+                Seconds::from_minutes(6.0),
+            ),
+        };
+        let executors: Vec<ExecutorFactory> = (0..n_sats)
+            .map(|_| {
+                Box::new(|| Ok(Box::new(MockExecutor::instant()) as Box<dyn StageExecutor>))
+                    as ExecutorFactory
+            })
+            .collect();
+        Server::new(config, scheduler, executors)
+    }
+
+    fn req(id: u64, gb: f64) -> Request {
+        Request {
+            id,
+            arrival: Seconds::ZERO,
+            data: Bytes::from_gb(gb),
+            model: 0,
+            class: 0,
+        }
+    }
+
+    #[test]
+    fn serves_a_burst_end_to_end() {
+        let mut s = server(2, BatchPolicy {
+            max_batch: 4,
+            max_wait: Seconds(1.0),
+            expedite_critical: true,
+        });
+        for i in 0..16 {
+            let r = s.submit(req(i, 1.0), Seconds(0.0)).unwrap();
+            assert!(matches!(r, SubmitResult::Accepted { .. }));
+        }
+        let completions = s.shutdown(Seconds(2.0)).unwrap();
+        let served: usize = completions.iter().map(|c| c.plan.batch.len()).sum();
+        assert_eq!(served, 16);
+        // round-robin over 2 sats
+        let sat0: usize = completions
+            .iter()
+            .filter(|c| c.satellite == 0)
+            .map(|c| c.plan.batch.len())
+            .sum();
+        assert_eq!(sat0, 8);
+    }
+
+    #[test]
+    fn deadline_tick_flushes_partial_batches() {
+        let mut s = server(1, BatchPolicy {
+            max_batch: 100,
+            max_wait: Seconds(5.0),
+            expedite_critical: true,
+        });
+        s.submit(req(0, 1.0), Seconds(0.0)).unwrap();
+        s.submit(req(1, 1.0), Seconds(1.0)).unwrap();
+        assert_eq!(s.tick(Seconds(2.0)).unwrap(), 0, "not stale yet");
+        assert_eq!(s.tick(Seconds(5.0)).unwrap(), 1, "deadline fires");
+        let completions = s.shutdown(Seconds(6.0)).unwrap();
+        let served: usize = completions.iter().map(|c| c.plan.batch.len()).sum();
+        assert_eq!(served, 2);
+    }
+
+    #[test]
+    fn queue_cap_backpressure() {
+        let mut s = server(1, BatchPolicy {
+            max_batch: 1000,
+            max_wait: Seconds(1e9),
+            expedite_critical: false,
+        });
+        // queue_cap default is 64
+        let mut rejected = 0;
+        for i in 0..80 {
+            match s.submit(req(i, 0.1), Seconds(0.0)).unwrap() {
+                SubmitResult::Rejected(AdmissionVerdict::QueueFull { .. }) => rejected += 1,
+                SubmitResult::Accepted { .. } => {}
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(rejected, 16, "64 accepted, 16 rejected");
+        let _ = s.shutdown(Seconds(1.0)).unwrap();
+    }
+
+    #[test]
+    fn completions_update_cluster_state() {
+        let mut s = server(1, BatchPolicy {
+            max_batch: 2,
+            max_wait: Seconds(100.0),
+            expedite_critical: true,
+        });
+        s.submit(req(0, 1.0), Seconds(0.0)).unwrap();
+        s.submit(req(1, 1.0), Seconds(0.0)).unwrap(); // flush at 2
+        // wait for the worker
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        let mut got = Vec::new();
+        while got.is_empty() && std::time::Instant::now() < deadline {
+            got = s.poll_completions();
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(got.len(), 1);
+        assert_eq!(s.cluster().get(0).unwrap().queue_depth, 0);
+        let _ = s.shutdown(Seconds(1.0)).unwrap();
+    }
+
+    #[test]
+    fn mock_executor_reports_model_costs() {
+        let template = InstanceBuilder::new(profile());
+        let scheduler =
+            Scheduler::new(template, vec![profile()], Box::new(Ilpb::default()));
+        let plan = scheduler
+            .plan(super::super::batcher::Batch {
+                model: 0,
+                requests: vec![req(0, 1.0)],
+                formed_at: Seconds::ZERO,
+            })
+            .unwrap();
+        let report = MockExecutor::instant().execute(&plan).unwrap();
+        let c = &plan.decision.costs;
+        assert_eq!(report.onboard_s, c.t_satellite.value());
+        assert_eq!(report.cloud_s, c.t_cloud.value());
+        assert_eq!(report.outputs.len(), 1);
+    }
+}

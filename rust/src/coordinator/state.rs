@@ -1,0 +1,180 @@
+//! Cluster state: the coordinator's view of every satellite.
+
+use crate::util::units::{Bytes, Joules, Seconds};
+use std::collections::BTreeMap;
+
+/// Live view of one satellite.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SatelliteInfo {
+    pub name: String,
+    /// Outstanding requests queued for on-board processing.
+    pub queue_depth: usize,
+    /// Outstanding bytes awaiting downlink.
+    pub pending_downlink: Bytes,
+    /// Battery state of charge [0, 1].
+    pub soc: f64,
+    /// Battery energy available above the DoD floor.
+    pub energy_available: Joules,
+    /// Seconds until the next ground contact opens (0 when in contact).
+    pub next_contact_in: Seconds,
+    /// Seconds of usable link remaining in the current window (0 when out
+    /// of contact).
+    pub contact_remaining: Seconds,
+}
+
+impl SatelliteInfo {
+    pub fn idle(name: &str) -> Self {
+        SatelliteInfo {
+            name: name.to_string(),
+            queue_depth: 0,
+            pending_downlink: Bytes::ZERO,
+            soc: 1.0,
+            energy_available: Joules(f64::INFINITY),
+            next_contact_in: Seconds::ZERO,
+            contact_remaining: Seconds::from_minutes(6.0),
+        }
+    }
+
+    pub fn in_contact(&self) -> bool {
+        self.next_contact_in.value() <= 0.0 && self.contact_remaining.value() > 0.0
+    }
+}
+
+/// Cluster-wide state registry, keyed by satellite id.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterState {
+    sats: BTreeMap<usize, SatelliteInfo>,
+}
+
+impl ClusterState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&mut self, id: usize, info: SatelliteInfo) {
+        self.sats.insert(id, info);
+    }
+
+    pub fn get(&self, id: usize) -> Option<&SatelliteInfo> {
+        self.sats.get(&id)
+    }
+
+    pub fn get_mut(&mut self, id: usize) -> Option<&mut SatelliteInfo> {
+        self.sats.get_mut(&id)
+    }
+
+    pub fn ids(&self) -> Vec<usize> {
+        self.sats.keys().copied().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sats.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sats.is_empty()
+    }
+
+    /// Satellite with the smallest queue (ties → lowest id).
+    pub fn least_loaded(&self) -> Option<usize> {
+        self.sats
+            .iter()
+            .min_by_key(|(id, s)| (s.queue_depth, **id))
+            .map(|(id, _)| *id)
+    }
+
+    /// Satellite whose next contact opens soonest (ties → lowest id).
+    pub fn soonest_contact(&self) -> Option<usize> {
+        self.sats
+            .iter()
+            .min_by(|(ida, a), (idb, b)| {
+                a.next_contact_in
+                    .value()
+                    .partial_cmp(&b.next_contact_in.value())
+                    .unwrap()
+                    .then(ida.cmp(idb))
+            })
+            .map(|(id, _)| *id)
+    }
+
+    /// Record an enqueue on a satellite.
+    pub fn note_enqueue(&mut self, id: usize, downlink_bytes: Bytes) {
+        if let Some(s) = self.sats.get_mut(&id) {
+            s.queue_depth += 1;
+            s.pending_downlink += downlink_bytes;
+        }
+    }
+
+    /// Record a completion on a satellite.
+    pub fn note_complete(&mut self, id: usize, downlink_bytes: Bytes) {
+        if let Some(s) = self.sats.get_mut(&id) {
+            s.queue_depth = s.queue_depth.saturating_sub(1);
+            s.pending_downlink =
+                Bytes((s.pending_downlink - downlink_bytes).value().max(0.0));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster3() -> ClusterState {
+        let mut c = ClusterState::new();
+        for i in 0..3 {
+            c.register(i, SatelliteInfo::idle(&format!("sat-{i}")));
+        }
+        c
+    }
+
+    #[test]
+    fn registry_roundtrip() {
+        let c = cluster3();
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.get(1).unwrap().name, "sat-1");
+        assert!(c.get(9).is_none());
+        assert_eq!(c.ids(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_tracks_enqueues() {
+        let mut c = cluster3();
+        c.note_enqueue(0, Bytes::from_mb(1.0));
+        c.note_enqueue(0, Bytes::from_mb(1.0));
+        c.note_enqueue(1, Bytes::from_mb(1.0));
+        assert_eq!(c.least_loaded(), Some(2));
+        c.note_complete(0, Bytes::from_mb(1.0));
+        c.note_complete(0, Bytes::from_mb(1.0));
+        // tie between 0 and 2 → lowest id
+        assert_eq!(c.least_loaded(), Some(0));
+    }
+
+    #[test]
+    fn soonest_contact_ordering() {
+        let mut c = cluster3();
+        c.get_mut(0).unwrap().next_contact_in = Seconds(500.0);
+        c.get_mut(1).unwrap().next_contact_in = Seconds(100.0);
+        c.get_mut(2).unwrap().next_contact_in = Seconds(900.0);
+        assert_eq!(c.soonest_contact(), Some(1));
+    }
+
+    #[test]
+    fn pending_downlink_never_negative() {
+        let mut c = cluster3();
+        c.note_enqueue(0, Bytes::from_mb(1.0));
+        c.note_complete(0, Bytes::from_mb(5.0));
+        assert!(c.get(0).unwrap().pending_downlink.value() >= 0.0);
+        assert_eq!(c.get(0).unwrap().queue_depth, 0);
+        c.note_complete(0, Bytes::from_mb(5.0)); // saturates, no underflow
+        assert_eq!(c.get(0).unwrap().queue_depth, 0);
+    }
+
+    #[test]
+    fn in_contact_flag() {
+        let mut s = SatelliteInfo::idle("x");
+        assert!(s.in_contact());
+        s.next_contact_in = Seconds(100.0);
+        s.contact_remaining = Seconds::ZERO;
+        assert!(!s.in_contact());
+    }
+}

@@ -1,0 +1,200 @@
+//! Sequential network graphs with per-layer profiles.
+
+use super::layer::{Layer, Shape, ShapeError};
+
+/// Bytes per activation element (f32).
+pub const ELEM_BYTES: usize = 4;
+
+/// A sequential DNN: the unit of the paper's partitioning (each layer is
+/// subtask `M_k`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Network {
+    pub name: String,
+    pub input: Shape,
+    pub layers: Vec<Layer>,
+}
+
+/// Shape-checked trace of one layer in a network.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerTrace {
+    pub index: usize,
+    pub tag: String,
+    pub in_shape: Shape,
+    pub out_shape: Shape,
+    pub flops: u64,
+    pub params: usize,
+}
+
+impl Network {
+    pub fn new(name: &str, input: Shape, layers: Vec<Layer>) -> Self {
+        assert!(!layers.is_empty(), "network must have at least one layer");
+        Network {
+            name: name.to_string(),
+            input,
+            layers,
+        }
+    }
+
+    /// Number of subtasks `K`.
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Shape-check the whole network and return the per-layer trace.
+    pub fn trace(&self) -> Result<Vec<LayerTrace>, ShapeError> {
+        let mut shapes = Vec::with_capacity(self.layers.len());
+        let mut s = self.input;
+        for (i, l) in self.layers.iter().enumerate() {
+            let out = l.out_shape(s)?;
+            shapes.push(LayerTrace {
+                index: i,
+                tag: l.tag(),
+                in_shape: s,
+                out_shape: out,
+                flops: l.flops(s)?,
+                params: l.params(s)?,
+            });
+            s = out;
+        }
+        Ok(shapes)
+    }
+
+    /// Final output shape.
+    pub fn output_shape(&self) -> Result<Shape, ShapeError> {
+        let mut s = self.input;
+        for l in &self.layers {
+            s = l.out_shape(s)?;
+        }
+        Ok(s)
+    }
+
+    /// Total parameters.
+    pub fn total_params(&self) -> Result<usize, ShapeError> {
+        Ok(self.trace()?.iter().map(|t| t.params).sum())
+    }
+
+    /// Total forward FLOPs for one sample.
+    pub fn total_flops(&self) -> Result<u64, ShapeError> {
+        Ok(self.trace()?.iter().map(|t| t.flops).sum())
+    }
+
+    /// Input-size ratios `α_k` for k = 1..K: the *input* of layer k divided
+    /// by the original input (paper §III-C: "the data size of each layer
+    /// can be expressed as α_k · D"). `α_1 = 1` by construction.
+    pub fn alphas(&self) -> Result<Vec<f64>, ShapeError> {
+        let trace = self.trace()?;
+        let d0 = self.input.bytes(ELEM_BYTES) as f64;
+        Ok(trace
+            .iter()
+            .map(|t| t.in_shape.bytes(ELEM_BYTES) as f64 / d0)
+            .collect())
+    }
+
+    /// Output-size ratios: activation leaving layer k over original input —
+    /// the payload downlinked when the split is placed *after* layer k.
+    pub fn output_ratios(&self) -> Result<Vec<f64>, ShapeError> {
+        let trace = self.trace()?;
+        let d0 = self.input.bytes(ELEM_BYTES) as f64;
+        Ok(trace
+            .iter()
+            .map(|t| t.out_shape.bytes(ELEM_BYTES) as f64 / d0)
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::models;
+
+    fn tiny() -> Network {
+        Network::new(
+            "tiny",
+            Shape::Chw(3, 32, 32),
+            vec![
+                Layer::Conv2d {
+                    out_channels: 8,
+                    kernel: 3,
+                    stride: 1,
+                    padding: 1,
+                },
+                Layer::Activation,
+                Layer::MaxPool { kernel: 2, stride: 2 },
+                Layer::Flatten,
+                Layer::Dense { out_features: 10 },
+            ],
+        )
+    }
+
+    #[test]
+    fn trace_covers_all_layers() {
+        let t = tiny().trace().unwrap();
+        assert_eq!(t.len(), 5);
+        assert_eq!(t[0].in_shape, Shape::Chw(3, 32, 32));
+        assert_eq!(t[0].out_shape, Shape::Chw(8, 32, 32));
+        assert_eq!(t[2].out_shape, Shape::Chw(8, 16, 16));
+        assert_eq!(t[4].out_shape, Shape::Flat(10));
+    }
+
+    #[test]
+    fn alpha_1_is_one() {
+        let alphas = tiny().alphas().unwrap();
+        assert_eq!(alphas[0], 1.0);
+        assert_eq!(alphas.len(), 5);
+    }
+
+    #[test]
+    fn alphas_track_input_shapes() {
+        let net = tiny();
+        let alphas = net.alphas().unwrap();
+        // layer 3 (flatten) input = 8×16×16 over 3×32×32
+        let expect = (8.0 * 16.0 * 16.0) / (3.0 * 32.0 * 32.0);
+        assert!((alphas[3] - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn output_ratios_shift_alphas() {
+        // output ratio of layer k == alpha of layer k+1
+        let net = tiny();
+        let alphas = net.alphas().unwrap();
+        let outs = net.output_ratios().unwrap();
+        for k in 0..net.depth() - 1 {
+            assert!(
+                (outs[k] - alphas[k + 1]).abs() < 1e-12,
+                "k={k}: out {} vs alpha {}",
+                outs[k],
+                alphas[k + 1]
+            );
+        }
+    }
+
+    #[test]
+    fn invalid_network_fails_trace() {
+        let bad = Network::new(
+            "bad",
+            Shape::Flat(100),
+            vec![Layer::Conv2d {
+                out_channels: 8,
+                kernel: 3,
+                stride: 1,
+                padding: 1,
+            }],
+        );
+        assert!(bad.trace().is_err());
+    }
+
+    #[test]
+    fn zoo_networks_are_well_formed() {
+        for net in models::zoo() {
+            let trace = net.trace();
+            assert!(trace.is_ok(), "{} fails shape check: {:?}", net.name, trace);
+            let alphas = net.alphas().unwrap();
+            assert_eq!(alphas[0], 1.0, "{}: α_1 must be 1", net.name);
+            assert!(
+                alphas.iter().all(|&a| a > 0.0),
+                "{}: α must be positive",
+                net.name
+            );
+        }
+    }
+}

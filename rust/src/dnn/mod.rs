@@ -1,0 +1,23 @@
+//! Layer-level DNN profiles.
+//!
+//! The paper's decision variable is *per layer*: `h_k = 1` runs layer `k`
+//! on the satellite, `h_k = 0` on the ground, with the downlinked payload
+//! being the activation crossing the split. The only model-dependent input
+//! to the optimizer is the vector of input-size ratios `α_k` (paper §III-B).
+//!
+//! The paper samples `α_k ∈ [0.05^k, 0.9^k]`. We support that for
+//! paper-exact reproduction ([`profile::ModelProfile::sampled`]) and
+//! additionally *derive* `α_k` from real layer shape algebra
+//! ([`layer`], [`graph`]) for a zoo of classic CNNs ([`models`]) plus the
+//! RSNet model that is actually compiled and executed by the runtime
+//! (its measured activation byte sizes come from `artifacts/manifest.json`
+//! and are cross-checked against this analytic profile in tests).
+
+pub mod graph;
+pub mod layer;
+pub mod models;
+pub mod profile;
+
+pub use graph::Network;
+pub use layer::{Layer, Shape};
+pub use profile::{LayerProfile, ModelProfile};

@@ -1,0 +1,354 @@
+//! Model zoo: classic CNNs expressed in the layer algebra, plus RSNet —
+//! the remote-sensing classifier that the build pipeline actually compiles
+//! (see `python/compile/model.py`; shapes here are asserted against the
+//! AOT manifest in integration tests).
+//!
+//! Parameter counts are checked against the literature in tests, which
+//! validates the shape algebra end-to-end.
+
+use super::graph::Network;
+use super::layer::{Layer, Shape};
+
+fn conv(out_channels: usize, kernel: usize, stride: usize, padding: usize) -> Layer {
+    Layer::Conv2d {
+        out_channels,
+        kernel,
+        stride,
+        padding,
+    }
+}
+
+fn pool(kernel: usize, stride: usize) -> Layer {
+    Layer::MaxPool { kernel, stride }
+}
+
+fn dense(out_features: usize) -> Layer {
+    Layer::Dense { out_features }
+}
+
+/// LeNet-5 (28×28 grayscale). ~61k params.
+pub fn lenet5() -> Network {
+    Network::new(
+        "lenet5",
+        Shape::Chw(1, 28, 28),
+        vec![
+            conv(6, 5, 1, 2),
+            Layer::Activation,
+            Layer::AvgPool { kernel: 2, stride: 2 },
+            conv(16, 5, 1, 0),
+            Layer::Activation,
+            Layer::AvgPool { kernel: 2, stride: 2 },
+            Layer::Flatten,
+            dense(120),
+            Layer::Activation,
+            dense(84),
+            Layer::Activation,
+            dense(10),
+            Layer::Softmax,
+        ],
+    )
+}
+
+/// AlexNet (224×224 RGB, single-GPU variant). ~61M params.
+pub fn alexnet() -> Network {
+    Network::new(
+        "alexnet",
+        Shape::Chw(3, 224, 224),
+        vec![
+            conv(64, 11, 4, 2),
+            Layer::Activation,
+            Layer::Lrn,
+            pool(3, 2),
+            conv(192, 5, 1, 2),
+            Layer::Activation,
+            Layer::Lrn,
+            pool(3, 2),
+            conv(384, 3, 1, 1),
+            Layer::Activation,
+            conv(256, 3, 1, 1),
+            Layer::Activation,
+            conv(256, 3, 1, 1),
+            Layer::Activation,
+            pool(3, 2),
+            Layer::Flatten,
+            dense(4096),
+            Layer::Activation,
+            dense(4096),
+            Layer::Activation,
+            dense(1000),
+            Layer::Softmax,
+        ],
+    )
+}
+
+/// VGG-16 (224×224 RGB). ~138M params.
+pub fn vgg16() -> Network {
+    let mut layers = Vec::new();
+    let blocks: &[(usize, usize)] = &[(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)];
+    for &(ch, n) in blocks {
+        for _ in 0..n {
+            layers.push(conv(ch, 3, 1, 1));
+            layers.push(Layer::Activation);
+        }
+        layers.push(pool(2, 2));
+    }
+    layers.push(Layer::Flatten);
+    layers.push(dense(4096));
+    layers.push(Layer::Activation);
+    layers.push(dense(4096));
+    layers.push(Layer::Activation);
+    layers.push(dense(1000));
+    layers.push(Layer::Softmax);
+    Network::new("vgg16", Shape::Chw(3, 224, 224), layers)
+}
+
+fn basic_block(channels: usize, stride: usize, name: &str) -> Layer {
+    Layer::Residual {
+        name: name.to_string(),
+        inner: vec![
+            conv(channels, 3, stride, 1),
+            Layer::BatchNorm,
+            Layer::Activation,
+            conv(channels, 3, 1, 1),
+            Layer::BatchNorm,
+        ],
+    }
+}
+
+/// ResNet-18 (224×224 RGB), residual blocks as composite subtasks
+/// (a split can only be placed *between* blocks — cutting inside a skip
+/// connection would require shipping two tensors). ~11.7M params
+/// (analytic count excludes the 1×1 projection shortcuts, ~0.5% of total).
+pub fn resnet18() -> Network {
+    Network::new(
+        "resnet18",
+        Shape::Chw(3, 224, 224),
+        vec![
+            conv(64, 7, 2, 3),
+            Layer::BatchNorm,
+            Layer::Activation,
+            pool(3, 2),
+            basic_block(64, 1, "res2a"),
+            basic_block(64, 1, "res2b"),
+            basic_block(128, 2, "res3a"),
+            basic_block(128, 1, "res3b"),
+            basic_block(256, 2, "res4a"),
+            basic_block(256, 1, "res4b"),
+            basic_block(512, 2, "res5a"),
+            basic_block(512, 1, "res5b"),
+            Layer::GlobalAvgPool,
+            Layer::Flatten,
+            dense(1000),
+            Layer::Softmax,
+        ],
+    )
+}
+
+/// MobileNetV1-style depthwise-separable stack (224×224 RGB); the paper's
+/// "small-scale DNN models" alternative. ~4.2M params.
+pub fn mobilenet() -> Network {
+    fn dws(out_channels: usize, stride: usize) -> Layer {
+        Layer::DepthwiseSeparable {
+            out_channels,
+            kernel: 3,
+            stride,
+            padding: 1,
+        }
+    }
+    Network::new(
+        "mobilenet",
+        Shape::Chw(3, 224, 224),
+        vec![
+            conv(32, 3, 2, 1),
+            Layer::BatchNorm,
+            Layer::Activation,
+            dws(64, 1),
+            dws(128, 2),
+            dws(128, 1),
+            dws(256, 2),
+            dws(256, 1),
+            dws(512, 2),
+            dws(512, 1),
+            dws(512, 1),
+            dws(512, 1),
+            dws(512, 1),
+            dws(512, 1),
+            dws(1024, 2),
+            dws(1024, 1),
+            Layer::GlobalAvgPool,
+            Layer::Flatten,
+            dense(1000),
+            Layer::Softmax,
+        ],
+    )
+}
+
+/// RSNet-9: the remote-sensing scene classifier that is AOT-compiled by
+/// `python/compile/model.py` and served by the runtime. 64×64 RGB tiles
+/// (EuroSAT-style), 10 classes.
+///
+/// **This definition must stay in lockstep with the python model** — the
+/// integration test `runtime::artifacts` cross-checks per-stage output
+/// byte sizes from `artifacts/manifest.json` against this network's
+/// `output_ratios()`.
+pub fn rsnet9() -> Network {
+    Network::new(
+        "rsnet9",
+        Shape::Chw(3, 64, 64),
+        vec![
+            // stage 1: stem
+            conv(16, 3, 1, 1),
+            Layer::Activation,
+            // stage 2
+            pool(2, 2),
+            // stage 3
+            conv(32, 3, 1, 1),
+            Layer::Activation,
+            // stage 4
+            pool(2, 2),
+            // stage 5
+            conv(64, 3, 1, 1),
+            Layer::Activation,
+            // stage 6
+            pool(2, 2),
+            // stage 7
+            conv(64, 3, 1, 1),
+            Layer::Activation,
+            // stage 8
+            Layer::GlobalAvgPool,
+            Layer::Flatten,
+            // stage 9: head
+            dense(10),
+            Layer::Softmax,
+        ],
+    )
+}
+
+/// All zoo networks (used by tests and the CLI's `models` listing).
+pub fn zoo() -> Vec<Network> {
+    vec![
+        lenet5(),
+        alexnet(),
+        vgg16(),
+        resnet18(),
+        mobilenet(),
+        rsnet9(),
+    ]
+}
+
+/// Look up a network by name.
+pub fn by_name(name: &str) -> Option<Network> {
+    zoo().into_iter().find(|n| n.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet_param_count_matches_literature() {
+        let p = lenet5().total_params().unwrap();
+        // canonical ~61,706 (with 16-ch conv over all 6 inputs)
+        assert!((60_000..64_000).contains(&p), "lenet params {p}");
+    }
+
+    #[test]
+    fn alexnet_param_count_matches_literature() {
+        let p = alexnet().total_params().unwrap();
+        // torchvision alexnet: 61.1M
+        assert!(
+            (58_000_000..64_000_000).contains(&p),
+            "alexnet params {p}"
+        );
+    }
+
+    #[test]
+    fn vgg16_param_count_matches_literature() {
+        let p = vgg16().total_params().unwrap();
+        // canonical 138.36M
+        assert!(
+            (136_000_000..140_000_000).contains(&p),
+            "vgg16 params {p}"
+        );
+    }
+
+    #[test]
+    fn resnet18_param_count_close_to_literature() {
+        let p = resnet18().total_params().unwrap();
+        // 11.69M canonical; we omit projection shortcuts (~0.45M)
+        assert!(
+            (10_800_000..12_000_000).contains(&p),
+            "resnet18 params {p}"
+        );
+    }
+
+    #[test]
+    fn mobilenet_param_count_close_to_literature() {
+        let p = mobilenet().total_params().unwrap();
+        // MobileNetV1 1.0: 4.2M
+        assert!((3_800_000..4_800_000).contains(&p), "mobilenet params {p}");
+    }
+
+    #[test]
+    fn vgg16_flops_match_literature() {
+        let f = vgg16().total_flops().unwrap();
+        // ~15.5 GFLOPs (2×MACs)
+        assert!(
+            (29_000_000_000..32_000_000_000).contains(&f),
+            "vgg16 flops {f} (expect ~30.9G as 2×15.5G MACs)"
+        );
+    }
+
+    #[test]
+    fn feature_maps_shrink_towards_the_head() {
+        // The paper's premise: later activations are (mostly) smaller than
+        // the input, making late splits cheap to downlink.
+        for net in zoo() {
+            let ratios = net.output_ratios().unwrap();
+            let last = *ratios.last().unwrap();
+            assert!(
+                last < 0.05,
+                "{}: final activation should be ≪ input, got {last}",
+                net.name
+            );
+        }
+    }
+
+    #[test]
+    fn rsnet9_output_is_ten_classes() {
+        assert_eq!(rsnet9().output_shape().unwrap(), Shape::Flat(10));
+    }
+
+    #[test]
+    fn rsnet9_monotone_after_stem() {
+        // after the first conv the activation footprint must decrease
+        // monotonically at every pooling stage
+        let net = rsnet9();
+        let ratios = net.output_ratios().unwrap();
+        let pools: Vec<f64> = net
+            .layers
+            .iter()
+            .zip(&ratios)
+            .filter(|(l, _)| matches!(l, Layer::MaxPool { .. }))
+            .map(|(_, r)| *r)
+            .collect();
+        for pair in pools.windows(2) {
+            assert!(pair[1] < pair[0], "pool outputs must shrink: {pools:?}");
+        }
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("vgg16").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn zoo_names_unique() {
+        let mut names: Vec<String> = zoo().into_iter().map(|n| n.name).collect();
+        names.sort();
+        let before = names.len();
+        names.dedup();
+        assert_eq!(before, names.len());
+    }
+}

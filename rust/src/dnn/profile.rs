@@ -1,0 +1,180 @@
+//! Model profiles consumed by the solver.
+//!
+//! A [`ModelProfile`] is the bridge between a DNN and the ILP instance: the
+//! per-subtask input ratios `α_k` (paper Eq. 1-2 multiply them by the
+//! request's data size `D`) plus bookkeeping for reports. Three sources:
+//!
+//! 1. [`ModelProfile::from_network`] — analytic, from layer shape algebra;
+//! 2. [`ModelProfile::sampled`] — the paper's synthetic draw
+//!    `α_k ∈ [0.05^k, 0.9^k]`;
+//! 3. [`ModelProfile::from_alphas`] — measured (e.g. from the AOT artifact
+//!    manifest's real activation byte sizes).
+
+use super::graph::Network;
+use crate::util::rng::Pcg64;
+
+/// Per-subtask profile entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerProfile {
+    /// Input-size ratio `α_k` (input of subtask k / original input D).
+    pub alpha: f64,
+    /// Output-size ratio (payload crossing a split placed after subtask k).
+    pub out_ratio: f64,
+    /// Human-readable tag.
+    pub tag: String,
+}
+
+/// The solver-facing profile of one model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelProfile {
+    pub name: String,
+    pub layers: Vec<LayerProfile>,
+}
+
+impl ModelProfile {
+    /// Analytic profile from a shape-checked network.
+    pub fn from_network(net: &Network) -> anyhow::Result<ModelProfile> {
+        let alphas = net.alphas().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let outs = net.output_ratios().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let trace = net.trace().map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(ModelProfile {
+            name: net.name.clone(),
+            layers: alphas
+                .into_iter()
+                .zip(outs)
+                .zip(trace)
+                .map(|((alpha, out_ratio), t)| LayerProfile {
+                    alpha,
+                    out_ratio,
+                    tag: t.tag,
+                })
+                .collect(),
+        })
+    }
+
+    /// The paper's synthetic profile: `α_k` drawn uniformly from
+    /// `[0.05^k, 0.9^k]` for k = 1..K (α shrinks roughly geometrically with
+    /// depth). The output ratio of subtask k is α_{k+1}; the final output
+    /// is one more geometric step down.
+    pub fn sampled(k: usize, rng: &mut Pcg64) -> ModelProfile {
+        assert!(k >= 1, "need at least one subtask");
+        let mut alphas = Vec::with_capacity(k + 1);
+        for i in 1..=k + 1 {
+            let lo = 0.05f64.powi(i as i32);
+            let hi = 0.9f64.powi(i as i32);
+            alphas.push(rng.uniform(lo, hi));
+        }
+        // subtask 1 consumes the raw input
+        alphas[0] = 1.0;
+        let layers = (0..k)
+            .map(|i| LayerProfile {
+                alpha: alphas[i],
+                out_ratio: alphas[i + 1],
+                tag: format!("M{}", i + 1),
+            })
+            .collect();
+        ModelProfile {
+            name: format!("sampled-K{k}"),
+            layers,
+        }
+    }
+
+    /// Profile from measured activation sizes: `sizes[0]` = input bytes,
+    /// `sizes[k]` = bytes leaving subtask k (length K+1).
+    pub fn from_alphas(name: &str, sizes_bytes: &[f64]) -> anyhow::Result<ModelProfile> {
+        anyhow::ensure!(sizes_bytes.len() >= 2, "need input + at least one output");
+        let d0 = sizes_bytes[0];
+        anyhow::ensure!(d0 > 0.0, "input size must be positive");
+        let k = sizes_bytes.len() - 1;
+        Ok(ModelProfile {
+            name: name.to_string(),
+            layers: (0..k)
+                .map(|i| LayerProfile {
+                    alpha: sizes_bytes[i] / d0,
+                    out_ratio: sizes_bytes[i + 1] / d0,
+                    tag: format!("M{}", i + 1),
+                })
+                .collect(),
+        })
+    }
+
+    /// Number of subtasks `K`.
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// `α_k` vector (1-indexed in the paper; 0-indexed here).
+    pub fn alphas(&self) -> Vec<f64> {
+        self.layers.iter().map(|l| l.alpha).collect()
+    }
+
+    /// Output ratios (ratio crossing a split after subtask k).
+    pub fn out_ratios(&self) -> Vec<f64> {
+        self.layers.iter().map(|l| l.out_ratio).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::models;
+
+    #[test]
+    fn from_network_aligns_alpha_and_out() {
+        let p = ModelProfile::from_network(&models::rsnet9()).unwrap();
+        assert_eq!(p.depth(), models::rsnet9().depth());
+        assert_eq!(p.layers[0].alpha, 1.0);
+        for i in 0..p.depth() - 1 {
+            assert!(
+                (p.layers[i].out_ratio - p.layers[i + 1].alpha).abs() < 1e-12,
+                "chain rule at layer {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn sampled_profile_shape() {
+        let mut rng = Pcg64::seeded(5);
+        let p = ModelProfile::sampled(10, &mut rng);
+        assert_eq!(p.depth(), 10);
+        assert_eq!(p.layers[0].alpha, 1.0);
+        for (i, l) in p.layers.iter().enumerate().skip(1) {
+            let k = i + 1;
+            let lo = 0.05f64.powi(k as i32);
+            let hi = 0.9f64.powi(k as i32);
+            assert!(
+                l.alpha >= lo && l.alpha <= hi,
+                "α_{k} = {} outside [{lo}, {hi}]",
+                l.alpha
+            );
+        }
+    }
+
+    #[test]
+    fn sampled_alphas_shrink_geometrically() {
+        let mut rng = Pcg64::seeded(6);
+        let p = ModelProfile::sampled(12, &mut rng);
+        // α_12 ≤ 0.9^12 ≈ 0.28 — deep layers are much smaller than input
+        assert!(p.layers[11].alpha <= 0.9f64.powi(12));
+    }
+
+    #[test]
+    fn from_alphas_measured_sizes() {
+        // input 48 KB, then 16 KB, 4 KB, 40 B
+        let p = ModelProfile::from_alphas(
+            "measured",
+            &[49152.0, 16384.0, 4096.0, 40.0],
+        )
+        .unwrap();
+        assert_eq!(p.depth(), 3);
+        assert_eq!(p.layers[0].alpha, 1.0);
+        assert!((p.layers[0].out_ratio - 16384.0 / 49152.0).abs() < 1e-12);
+        assert!((p.layers[2].out_ratio - 40.0 / 49152.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_alphas_rejects_degenerate() {
+        assert!(ModelProfile::from_alphas("x", &[100.0]).is_err());
+        assert!(ModelProfile::from_alphas("x", &[0.0, 1.0]).is_err());
+    }
+}

@@ -1,0 +1,96 @@
+//! Per-task energy accounting.
+//!
+//! Splits satellite energy into the paper's two components (processing,
+//! Eq. 6; transmission, Eq. 7) so the figures can report them separately
+//! and the totals can be audited against the battery trace.
+
+use crate::util::units::Joules;
+use std::collections::BTreeMap;
+
+/// Energy attributed to one task.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct EnergyUse {
+    pub processing: Joules,
+    pub transmission: Joules,
+}
+
+impl EnergyUse {
+    pub fn total(&self) -> Joules {
+        self.processing + self.transmission
+    }
+}
+
+/// Accumulates energy use per task id.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyLedger {
+    entries: BTreeMap<u64, EnergyUse>,
+}
+
+impl EnergyLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_processing(&mut self, task: u64, e: Joules) {
+        self.entries.entry(task).or_default().processing += e;
+    }
+
+    pub fn add_transmission(&mut self, task: u64, e: Joules) {
+        self.entries.entry(task).or_default().transmission += e;
+    }
+
+    pub fn get(&self, task: u64) -> EnergyUse {
+        self.entries.get(&task).copied().unwrap_or_default()
+    }
+
+    pub fn task_count(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Sum across all tasks.
+    pub fn total(&self) -> EnergyUse {
+        let mut acc = EnergyUse::default();
+        for e in self.entries.values() {
+            acc.processing += e.processing;
+            acc.transmission += e.transmission;
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_per_task() {
+        let mut l = EnergyLedger::new();
+        l.add_processing(1, Joules(10.0));
+        l.add_processing(1, Joules(5.0));
+        l.add_transmission(1, Joules(2.0));
+        l.add_processing(2, Joules(7.0));
+        assert_eq!(l.get(1).processing, Joules(15.0));
+        assert_eq!(l.get(1).transmission, Joules(2.0));
+        assert_eq!(l.get(1).total(), Joules(17.0));
+        assert_eq!(l.get(2).total(), Joules(7.0));
+        assert_eq!(l.task_count(), 2);
+    }
+
+    #[test]
+    fn totals_sum_components() {
+        let mut l = EnergyLedger::new();
+        l.add_processing(1, Joules(1.0));
+        l.add_transmission(2, Joules(2.0));
+        l.add_processing(3, Joules(3.0));
+        let t = l.total();
+        assert_eq!(t.processing, Joules(4.0));
+        assert_eq!(t.transmission, Joules(2.0));
+        assert_eq!(t.total(), Joules(6.0));
+    }
+
+    #[test]
+    fn unknown_task_is_zero() {
+        let l = EnergyLedger::new();
+        assert_eq!(l.get(99).total(), Joules::ZERO);
+    }
+}

@@ -1,0 +1,19 @@
+//! On-board energy substrate.
+//!
+//! * [`power`] — the paper's Eq. (6) processing-energy model
+//!   (utilization-scaled max power + idle + leakage) and Eq. (7)
+//!   transmission energy.
+//! * [`solar`] — solar-panel harvest gated by the orbit's eclipse fraction.
+//! * [`battery`] — battery state-of-charge integration with depth-of-
+//!   discharge limits; the coordinator's admission control reads this.
+//! * [`ledger`] — per-task energy accounting used by the metrics pipeline.
+
+pub mod battery;
+pub mod ledger;
+pub mod power;
+pub mod solar;
+
+pub use battery::Battery;
+pub use ledger::{EnergyLedger, EnergyUse};
+pub use power::{GpuPowerModel, TransmitPowerModel};
+pub use solar::SolarPanel;

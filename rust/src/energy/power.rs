@@ -1,0 +1,174 @@
+//! Processing and transmission power models — the paper's Eq. (6)/(7).
+//!
+//! Eq. (6) gives the energy to execute subtask `M_k` (input `α_k·D`) on
+//! satellite `i`:
+//!
+//! ```text
+//! e_sat = δ_{i,k} · ( (α_k·D)/(ζ_i·δ_{i,k}) · P_max + P_idle + P_leak )
+//! ```
+//!
+//! The first factor inside the parentheses is the *utilization*: the task
+//! processes `α_k·D` bytes in `δ_{i,k}` seconds, against a unit that could
+//! process `ζ_i` bytes/s at full power. Note the δ cancels in the P_max
+//! term: `e = (α_k·D/ζ_i)·P_max + δ·(P_idle + P_leak)` — energy is
+//! work-proportional plus time-proportional overheads, matching the
+//! Hong-Kim GPU model the paper cites.
+//!
+//! Eq. (7): transmission energy `e_off = t'_tr · P_off` (antenna power times
+//! pure transmission time — waiting between passes costs no antenna power).
+
+use crate::util::units::{Bytes, Joules, Seconds, Watts};
+
+/// The satellite's DNN-processing power model (paper's `ζ_i`, `P^max`,
+/// `P^idle`, `P^leak`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuPowerModel {
+    /// `ζ_i`: max bytes/s processed at full power.
+    pub zeta_bytes_per_s: f64,
+    /// `P^max`: max power of all GPU units, W.
+    pub p_max: Watts,
+    /// `P^idle`: idle power while the task occupies the unit, W.
+    pub p_idle: Watts,
+    /// `P^leak`: leakage power, W.
+    pub p_leak: Watts,
+}
+
+impl GpuPowerModel {
+    pub fn new(zeta_bytes_per_s: f64, p_max: Watts, p_idle: Watts, p_leak: Watts) -> Self {
+        assert!(zeta_bytes_per_s > 0.0, "ζ must be positive");
+        assert!(
+            p_max.value() >= 0.0 && p_idle.value() >= 0.0 && p_leak.value() >= 0.0,
+            "powers must be non-negative"
+        );
+        GpuPowerModel {
+            zeta_bytes_per_s,
+            p_max,
+            p_idle,
+            p_leak,
+        }
+    }
+
+    /// Eq. (6): energy to process `data` in `delta` seconds.
+    ///
+    /// Degenerate case: `delta == 0` (e.g. a zero-size subtask) costs zero.
+    pub fn processing_energy(&self, data: Bytes, delta: Seconds) -> Joules {
+        if delta.value() <= 0.0 {
+            return Joules::ZERO;
+        }
+        let utilization = data.value() / (self.zeta_bytes_per_s * delta.value());
+        let effective_power =
+            Watts(utilization * self.p_max.value()) + self.p_idle + self.p_leak;
+        effective_power * delta
+    }
+
+    /// Average power drawn while processing `data` over `delta`.
+    pub fn processing_power(&self, data: Bytes, delta: Seconds) -> Watts {
+        if delta.value() <= 0.0 {
+            return Watts::ZERO;
+        }
+        self.processing_energy(data, delta) / delta
+    }
+
+    /// The utilization term of Eq. (6) (clamped only in debug: the paper's
+    /// parameters can push it above 1, which we keep to stay faithful).
+    pub fn utilization(&self, data: Bytes, delta: Seconds) -> f64 {
+        if delta.value() <= 0.0 {
+            return 0.0;
+        }
+        data.value() / (self.zeta_bytes_per_s * delta.value())
+    }
+}
+
+/// Antenna transmission power model (paper's `P^off`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TransmitPowerModel {
+    /// `P^off`: antenna transmit power, W.
+    pub p_off: Watts,
+}
+
+impl TransmitPowerModel {
+    pub fn new(p_off: Watts) -> Self {
+        assert!(p_off.value() >= 0.0);
+        TransmitPowerModel { p_off }
+    }
+
+    /// Eq. (7): energy to transmit for `t_tr` seconds of *active* link time
+    /// (waiting between contact windows is excluded — the antenna is off).
+    pub fn transmission_energy(&self, t_tr: Seconds) -> Joules {
+        self.p_off * t_tr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> GpuPowerModel {
+        // ζ = 100 KB/s at full power; P_max 10 W, idle 1 W, leak 0.5 W
+        GpuPowerModel::new(100.0 * 1024.0, Watts(10.0), Watts(1.0), Watts(0.5))
+    }
+
+    #[test]
+    fn eq6_decomposes_into_work_plus_time_terms() {
+        let m = model();
+        let data = Bytes::from_kb(500.0);
+        let delta = Seconds(20.0);
+        // e = (D/ζ)·P_max + δ·(P_idle+P_leak)
+        let expect = data.value() / m.zeta_bytes_per_s * 10.0 + 20.0 * 1.5;
+        let got = m.processing_energy(data, delta).value();
+        assert!((got - expect).abs() < 1e-9, "got {got}, expect {expect}");
+    }
+
+    #[test]
+    fn energy_grows_with_data_at_fixed_time() {
+        let m = model();
+        let delta = Seconds(10.0);
+        let e1 = m.processing_energy(Bytes::from_kb(10.0), delta);
+        let e2 = m.processing_energy(Bytes::from_kb(1000.0), delta);
+        assert!(e2 > e1);
+    }
+
+    #[test]
+    fn energy_grows_with_time_at_fixed_data() {
+        // idle+leak make longer executions cost more even for the same work
+        let m = model();
+        let data = Bytes::from_kb(100.0);
+        let e1 = m.processing_energy(data, Seconds(1.0));
+        let e2 = m.processing_energy(data, Seconds(100.0));
+        assert!(e2 > e1);
+    }
+
+    #[test]
+    fn zero_duration_costs_nothing() {
+        let m = model();
+        assert_eq!(
+            m.processing_energy(Bytes::from_kb(5.0), Seconds::ZERO),
+            Joules::ZERO
+        );
+    }
+
+    #[test]
+    fn utilization_is_work_rate_ratio() {
+        let m = model();
+        // processing 1024 KB in 20 s = 51.2 KB/s against ζ=100 KB/s ⇒ 0.512
+        let u = m.utilization(Bytes::from_kb(1024.0), Seconds(20.0));
+        assert!((u - 0.512).abs() < 1e-12);
+    }
+
+    #[test]
+    fn average_power_between_idle_and_max() {
+        let m = model();
+        // a task running at ~half utilization
+        let data = Bytes::from_kb(50.0 * 20.0);
+        let p = m.processing_power(data, Seconds(20.0)).value();
+        assert!(p > 1.5, "must exceed idle+leak, got {p}");
+        assert!(p < 11.5, "must not exceed max+idle+leak, got {p}");
+    }
+
+    #[test]
+    fn eq7_transmission_energy() {
+        let t = TransmitPowerModel::new(Watts(4.0));
+        assert_eq!(t.transmission_energy(Seconds(30.0)), Joules(120.0));
+        assert_eq!(t.transmission_energy(Seconds::ZERO), Joules::ZERO);
+    }
+}

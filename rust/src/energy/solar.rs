@@ -1,0 +1,95 @@
+//! Solar-panel harvest model.
+//!
+//! The paper motivates the energy objective with the satellite's "low
+//! energy acquisition rate of solar panels". We model harvest as panel area
+//! × solar constant × efficiency × a pointing factor, gated off during
+//! eclipse (see [`crate::orbit::eclipse`]).
+
+use crate::orbit::propagator::CircularOrbit;
+use crate::orbit::eclipse::eclipse_fraction;
+use crate::util::units::{Joules, Seconds, Watts};
+
+/// Solar flux at 1 AU, W/m².
+pub const SOLAR_CONSTANT_W_M2: f64 = 1361.0;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SolarPanel {
+    /// Panel area, m².
+    pub area_m2: f64,
+    /// Cell efficiency (0..1). Triple-junction GaAs ≈ 0.30.
+    pub efficiency: f64,
+    /// Mean cosine-loss / pointing factor (0..1); body-mounted cubesat
+    /// panels average ≈ 0.3, sun-tracking wings ≈ 0.9.
+    pub pointing_factor: f64,
+}
+
+impl SolarPanel {
+    pub fn new(area_m2: f64, efficiency: f64, pointing_factor: f64) -> Self {
+        assert!(area_m2 > 0.0);
+        assert!((0.0..=1.0).contains(&efficiency));
+        assert!((0.0..=1.0).contains(&pointing_factor));
+        SolarPanel {
+            area_m2,
+            efficiency,
+            pointing_factor,
+        }
+    }
+
+    /// A 6U-cubesat-class payload (~0.06 m² deployed): a few watts — the
+    /// paper's P_max ∈ [1,10] W satellites live in this class.
+    pub fn cubesat_6u() -> Self {
+        SolarPanel::new(0.06, 0.30, 0.6)
+    }
+
+    /// Instantaneous harvest power while sunlit.
+    pub fn sunlit_power(&self) -> Watts {
+        Watts(SOLAR_CONSTANT_W_M2 * self.area_m2 * self.efficiency * self.pointing_factor)
+    }
+
+    /// Orbit-averaged harvest power: sunlit power × sunlit fraction.
+    pub fn orbit_average_power(&self, orbit: &CircularOrbit) -> Watts {
+        self.sunlit_power() * (1.0 - eclipse_fraction(orbit))
+    }
+
+    /// Energy harvested over `dt` given a sunlit flag.
+    pub fn harvest(&self, dt: Seconds, sunlit: bool) -> Joules {
+        if sunlit {
+            self.sunlit_power() * dt
+        } else {
+            Joules::ZERO
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cubesat_harvest_is_a_few_watts() {
+        let p = SolarPanel::cubesat_6u().sunlit_power().value();
+        assert!((1.0..=30.0).contains(&p), "6U harvest {p} W");
+    }
+
+    #[test]
+    fn orbit_average_below_sunlit() {
+        let panel = SolarPanel::cubesat_6u();
+        let orbit = CircularOrbit::new(500.0, 0.0, 0.0, 0.0);
+        let avg = panel.orbit_average_power(&orbit);
+        assert!(avg < panel.sunlit_power());
+        assert!(avg.value() > 0.0);
+    }
+
+    #[test]
+    fn eclipse_harvest_is_zero() {
+        let panel = SolarPanel::cubesat_6u();
+        assert_eq!(panel.harvest(Seconds(100.0), false), Joules::ZERO);
+        assert!(panel.harvest(Seconds(100.0), true).value() > 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_efficiency_above_one() {
+        SolarPanel::new(1.0, 1.5, 0.5);
+    }
+}

@@ -1,0 +1,316 @@
+//! Paper-figure regeneration: the sweep logic shared by the `cargo bench`
+//! harnesses and the CLI's `figures` subcommand.
+//!
+//! Each function reproduces one figure of §V-B: same sweep variable, same
+//! three algorithms (ILPB / ARG / ARS), means over independently
+//! randomized scenarios (the paper's parameter draws), energy and time
+//! reported separately (the paper plots log-scaled values; we emit raw and
+//! log₁₀ columns).
+
+use crate::config::Scenario;
+use crate::dnn::profile::ModelProfile;
+use crate::solver::baselines::{Arg, Ars};
+use crate::solver::bnb::Ilpb;
+use crate::solver::policy::OffloadPolicy;
+use crate::util::rng::Pcg64;
+use crate::util::stats::{mean, Summary};
+
+/// Per-algorithm aggregate at one sweep point.
+#[derive(Debug, Clone)]
+pub struct AlgoPoint {
+    pub name: &'static str,
+    pub energy_j: Summary,
+    pub time_s: Summary,
+    pub z: Summary,
+    /// Mean chosen split (diagnostic; 0 for ARG, K for ARS).
+    pub mean_split: f64,
+}
+
+/// One x-axis point of a figure.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    /// The sweep variable's value (GB, Mbps, or λ).
+    pub x: f64,
+    pub algos: Vec<AlgoPoint>,
+}
+
+/// Evaluate the three paper algorithms at one scenario configuration
+/// across `seeds` independent draws.
+pub fn evaluate_point(base: &Scenario, x: f64, seeds: u64, seed0: u64) -> SweepPoint {
+    let policies: [(&'static str, Box<dyn OffloadPolicy>); 3] = [
+        ("ILPB", Box::new(Ilpb::default())),
+        ("ARG", Box::new(Arg)),
+        ("ARS", Box::new(Ars)),
+    ];
+    let mut energy: Vec<Vec<f64>> = vec![Vec::new(); 3];
+    let mut time: Vec<Vec<f64>> = vec![Vec::new(); 3];
+    let mut zval: Vec<Vec<f64>> = vec![Vec::new(); 3];
+    let mut splits: Vec<Vec<f64>> = vec![Vec::new(); 3];
+
+    for seed in 0..seeds {
+        let mut rng = Pcg64::new(seed0 ^ seed, 42);
+        let scen = base.clone().randomized(&mut rng);
+        // sweeps pin their variable AFTER randomization
+        let scen = pin(base, scen, x);
+        let profile = ModelProfile::sampled(scen.depth, &mut rng);
+        let inst = scen
+            .instance_builder(profile)
+            .build()
+            .expect("scenario must be valid");
+        for (i, (_, p)) in policies.iter().enumerate() {
+            let d = p.decide(&inst);
+            energy[i].push(d.costs.energy.value());
+            time[i].push(d.costs.latency.value());
+            zval[i].push(d.z);
+            splits[i].push(d.split as f64);
+        }
+    }
+
+    SweepPoint {
+        x,
+        algos: policies
+            .iter()
+            .enumerate()
+            .map(|(i, (name, _))| AlgoPoint {
+                name,
+                energy_j: Summary::of(&energy[i]),
+                time_s: Summary::of(&time[i]),
+                z: Summary::of(&zval[i]),
+                mean_split: mean(&splits[i]),
+            })
+            .collect(),
+    }
+}
+
+/// Re-pin the sweep variable on a randomized scenario. The `base`
+/// scenario's *name* encodes which figure is being swept.
+fn pin(base: &Scenario, mut scen: Scenario, x: f64) -> Scenario {
+    match base.name.as_str() {
+        "fig2" => scen.data_gb = x,
+        "fig3" => {
+            scen.rate_mbps = x;
+            scen.data_gb = base.data_gb;
+        }
+        "fig4" => {
+            scen.lambda = x;
+            scen.mu = 1.0 - x;
+            scen.data_gb = base.data_gb;
+        }
+        _ => scen.data_gb = x,
+    }
+    scen
+}
+
+/// Fig. 2: energy/time vs initial data size, D ∈ [1, 1000] GB.
+pub fn fig2(seeds: u64) -> Vec<SweepPoint> {
+    let mut base = Scenario::tiansuan();
+    base.name = "fig2".into();
+    [1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1000.0]
+        .iter()
+        .map(|&gb| evaluate_point(&base, gb, seeds, 0xF16_2))
+        .collect()
+}
+
+/// Fig. 3: energy/time vs link rate, R ∈ [10, 100] Mbps step 10
+/// (D fixed at the paper's mid-scale 100 GB).
+pub fn fig3(seeds: u64) -> Vec<SweepPoint> {
+    let mut base = Scenario::tiansuan();
+    base.name = "fig3".into();
+    (1..=10)
+        .map(|i| evaluate_point(&base, 10.0 * i as f64, seeds, 0xF16_3))
+        .collect()
+}
+
+/// Fig. 4: energy/time vs weight ratio λ:μ ∈ {1:0, 3:1, 1:1, 1:3, 0:1}.
+pub fn fig4(seeds: u64) -> Vec<SweepPoint> {
+    let mut base = Scenario::tiansuan();
+    base.name = "fig4".into();
+    [1.0, 0.75, 0.5, 0.25, 0.0]
+        .iter()
+        .map(|&lambda| evaluate_point(&base, lambda, seeds, 0xF16_4))
+        .collect()
+}
+
+/// The headline metric: ILPB's combined (Z-weighted raw) cost as a
+/// fraction of the ARG/ARS average, geometric-mean'd across the Fig-2
+/// sweep. The paper claims 10%–18%.
+pub fn headline_ratio(points: &[SweepPoint]) -> (f64, f64) {
+    let mut e_ratios = Vec::new();
+    let mut t_ratios = Vec::new();
+    for p in points {
+        let ilpb = p.algos.iter().find(|a| a.name == "ILPB").unwrap();
+        let arg = p.algos.iter().find(|a| a.name == "ARG").unwrap();
+        let ars = p.algos.iter().find(|a| a.name == "ARS").unwrap();
+        let e_avg = 0.5 * (arg.energy_j.mean + ars.energy_j.mean);
+        let t_avg = 0.5 * (arg.time_s.mean + ars.time_s.mean);
+        if e_avg > 0.0 {
+            e_ratios.push(ilpb.energy_j.mean / e_avg);
+        }
+        t_ratios.push(ilpb.time_s.mean / t_avg);
+    }
+    (
+        crate::util::stats::geomean(&e_ratios),
+        crate::util::stats::geomean(&t_ratios),
+    )
+}
+
+/// Render a figure as the paper-shaped table (x, then per-algo log10 E
+/// and log10 T columns).
+pub fn render_table(title: &str, x_label: &str, points: &[SweepPoint]) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    let _ = writeln!(s, "# {title}");
+    let _ = write!(s, "{x_label:>10}");
+    for a in &points[0].algos {
+        let _ = write!(s, " | {:>10} {:>10}", format!("E[{}]", a.name), format!("T[{}]", a.name));
+    }
+    let _ = writeln!(s, "   (log10 J / log10 s)");
+    for p in points {
+        let _ = write!(s, "{:>10.2}", p.x);
+        for a in &p.algos {
+            let _ = write!(
+                s,
+                " | {:>10.3} {:>10.3}",
+                a.energy_j.mean.max(1e-12).log10(),
+                a.time_s.mean.max(1e-12).log10()
+            );
+        }
+        let _ = writeln!(s);
+    }
+    s
+}
+
+/// Serialize sweep points to JSON (machine-readable figure data for
+/// external plotting; `leo-infer figures --json <path>`).
+pub fn to_json(figure: &str, x_label: &str, points: &[SweepPoint]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::obj(vec![
+        ("figure", Json::str(figure)),
+        ("x_label", Json::str(x_label)),
+        (
+            "points",
+            Json::arr(points.iter().map(|p| {
+                Json::obj(vec![
+                    ("x", Json::num(p.x)),
+                    (
+                        "algos",
+                        Json::arr(p.algos.iter().map(|a| {
+                            Json::obj(vec![
+                                ("name", Json::str(a.name)),
+                                ("energy_mean_j", Json::num(a.energy_j.mean)),
+                                ("energy_ci95", Json::num(a.energy_j.ci95)),
+                                ("time_mean_s", Json::num(a.time_s.mean)),
+                                ("time_ci95", Json::num(a.time_s.ci95)),
+                                ("z_mean", Json::num(a.z.mean)),
+                                ("mean_split", Json::num(a.mean_split)),
+                            ])
+                        })),
+                    ),
+                ])
+            })),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_shape_and_monotonicity() {
+        let pts = fig2(8);
+        assert_eq!(pts.len(), 10);
+        for p in &pts {
+            assert_eq!(p.algos.len(), 3);
+        }
+        // energy and time grow with data size for every algorithm
+        for algo in 0..3 {
+            for pair in pts.windows(2) {
+                assert!(
+                    pair[1].algos[algo].time_s.mean >= pair[0].algos[algo].time_s.mean * 0.5,
+                    "{}: time should broadly grow with D",
+                    pts[0].algos[algo].name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ilpb_dominates_in_z() {
+        for p in fig2(8) {
+            let z = |n: &str| p.algos.iter().find(|a| a.name == n).unwrap().z.mean;
+            assert!(z("ILPB") <= z("ARG") + 1e-9, "x={}", p.x);
+            assert!(z("ILPB") <= z("ARS") + 1e-9, "x={}", p.x);
+        }
+    }
+
+    #[test]
+    fn fig3_ars_rate_insensitive() {
+        // the paper: ARS energy unaffected by link rate
+        let pts = fig3(8);
+        let ars_e: Vec<f64> = pts
+            .iter()
+            .map(|p| p.algos.iter().find(|a| a.name == "ARS").unwrap().energy_j.mean)
+            .collect();
+        let spread = (ars_e.iter().cloned().fold(f64::MIN, f64::max)
+            - ars_e.iter().cloned().fold(f64::MAX, f64::min))
+            / ars_e[0];
+        assert!(spread < 0.25, "ARS energy should be ~flat across rates: {ars_e:?}");
+        // ARG time falls as rate rises
+        let arg_t: Vec<f64> = pts
+            .iter()
+            .map(|p| p.algos.iter().find(|a| a.name == "ARG").unwrap().time_s.mean)
+            .collect();
+        assert!(
+            arg_t.last().unwrap() < arg_t.first().unwrap(),
+            "ARG time should fall with rate: {arg_t:?}"
+        );
+    }
+
+    #[test]
+    fn fig4_extremes_match_paper() {
+        let pts = fig4(16);
+        // λ:μ = 1:0 → pure latency: ILPB time ≈ best-time baseline
+        let p_latency = &pts[0];
+        let t = |n: &str| {
+            p_latency
+                .algos
+                .iter()
+                .find(|a| a.name == n)
+                .unwrap()
+                .time_s
+                .mean
+        };
+        assert!(t("ILPB") <= t("ARG") + 1e-9);
+        assert!(t("ILPB") <= t("ARS") + 1e-9);
+        // λ:μ = 0:1 → pure energy: ILPB energy ≤ both
+        let p_energy = pts.last().unwrap();
+        let e = |n: &str| {
+            p_energy
+                .algos
+                .iter()
+                .find(|a| a.name == n)
+                .unwrap()
+                .energy_j
+                .mean
+        };
+        assert!(e("ILPB") <= e("ARG") + 1e-9);
+        assert!(e("ILPB") <= e("ARS") + 1e-9);
+    }
+
+    #[test]
+    fn headline_ratio_is_below_one() {
+        let pts = fig2(8);
+        let (e_ratio, t_ratio) = headline_ratio(&pts);
+        assert!(e_ratio < 1.0, "ILPB energy ratio {e_ratio}");
+        assert!(t_ratio < 1.0, "ILPB time ratio {t_ratio}");
+    }
+
+    #[test]
+    fn render_table_contains_rows() {
+        let pts = fig3(2);
+        let table = render_table("Fig 3", "rate", &pts);
+        assert!(table.contains("ILPB"));
+        assert_eq!(table.lines().count(), 2 + pts.len());
+    }
+}

@@ -1,0 +1,48 @@
+//! # leo-infer
+//!
+//! A satellite-ground collaborative serving framework for DNN inference on
+//! LEO satellites, reproducing *"Energy and Time-Aware Inference Offloading
+//! for DNN-based Applications in LEO Satellites"* (Chen et al., 2023).
+//!
+//! The paper's contribution — choosing, per inference request, which prefix
+//! of DNN layers runs on the energy-constrained satellite and which suffix
+//! is offloaded to a cloud data center — lives in [`solver`] (ILP instance +
+//! the ILPB branch-and-bound of Algorithm 1). Everything the paper's
+//! evaluation *depends on* is built as a first-class substrate:
+//!
+//! * [`orbit`] — orbital mechanics: propagation, ground-station visibility,
+//!   contact windows (the paper's `t_cyc` / `t_con` derived from geometry).
+//! * [`link`] — satellite-ground channel and downlink latency (Eq. 3),
+//!   ground-to-cloud WAN (Eq. 4).
+//! * [`energy`] — on-board power model (Eq. 6/7), battery and solar harvest.
+//! * [`dnn`] — layer-level DNN profiles: per-layer output sizes (`α_k`),
+//!   FLOPs, and a model zoo computed analytically from layer shapes.
+//! * [`sim`] — a discrete-event constellation simulator used to validate
+//!   the closed-form latency/energy model under queueing and contention.
+//! * [`coordinator`] — the serving runtime: request router, dynamic
+//!   batcher, contact-aware scheduler, admission control.
+//! * [`runtime`] — PJRT execution of AOT-compiled model stages; the chosen
+//!   split is *physically executed* (prefix on the "satellite" client,
+//!   activation serialized, suffix on the "cloud" client).
+//!
+//! Supporting infrastructure that the offline environment does not provide
+//! as crates is implemented in [`util`] (deterministic RNG, JSON, stats,
+//! CLI parsing, logging) and [`config`] (typed scenario configuration).
+//!
+//! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
+//! measured-vs-paper results.
+
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod dnn;
+pub mod energy;
+pub mod link;
+pub mod orbit;
+pub mod runtime;
+pub mod sim;
+pub mod solver;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

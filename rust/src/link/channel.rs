@@ -1,0 +1,169 @@
+//! Physical channel model: free-space path loss → SNR → achievable rate.
+//!
+//! The paper treats `R_i` as a constant drawn from `[10, 100]` Mbps. For the
+//! DES (and for credibility of the Fig-3 sweep) we also provide a link
+//! budget that produces an elevation-dependent rate: at low elevation the
+//! slant range is ~5× the zenith range, costing ~14 dB, which maps to the
+//! paper's observed rate spread.
+
+use crate::orbit::geometry::slant_range_at_elevation_km;
+use crate::util::units::BitsPerSec;
+
+/// Speed of light, m/s.
+const C: f64 = 299_792_458.0;
+/// Boltzmann constant, J/K.
+const K_B: f64 = 1.380_649e-23;
+
+/// An X-band-ish LEO downlink budget.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkBudget {
+    /// Carrier frequency, Hz (default 8.2 GHz, X-band EO downlink).
+    pub frequency_hz: f64,
+    /// Transmit power, W.
+    pub tx_power_w: f64,
+    /// Transmit antenna gain, dBi.
+    pub tx_gain_dbi: f64,
+    /// Receive antenna gain, dBi.
+    pub rx_gain_dbi: f64,
+    /// System noise temperature, K.
+    pub noise_temp_k: f64,
+    /// Channel bandwidth, Hz.
+    pub bandwidth_hz: f64,
+    /// Implementation margin + atmospheric losses, dB.
+    pub losses_db: f64,
+}
+
+impl Default for LinkBudget {
+    fn default() -> Self {
+        // Calibrated so a 500 km pass sweeps roughly the paper's
+        // [10, 100] Mbps window between mask elevation and zenith.
+        LinkBudget {
+            frequency_hz: 8.2e9,
+            tx_power_w: 2.0,
+            tx_gain_dbi: 6.0,
+            rx_gain_dbi: 43.0,
+            noise_temp_k: 150.0,
+            bandwidth_hz: 40e6,
+            losses_db: 3.0,
+        }
+    }
+}
+
+impl LinkBudget {
+    /// Free-space path loss at `range_km`, dB.
+    pub fn fspl_db(&self, range_km: f64) -> f64 {
+        let d_m = range_km * 1000.0;
+        20.0 * (4.0 * std::f64::consts::PI * d_m * self.frequency_hz / C).log10()
+    }
+
+    /// Received SNR (linear) at `range_km`.
+    pub fn snr(&self, range_km: f64) -> f64 {
+        let eirp_db = 10.0 * self.tx_power_w.log10() + self.tx_gain_dbi;
+        let rx_db = eirp_db + self.rx_gain_dbi - self.fspl_db(range_km) - self.losses_db;
+        let noise_db = 10.0 * (K_B * self.noise_temp_k * self.bandwidth_hz).log10();
+        10f64.powf((rx_db - noise_db) / 10.0)
+    }
+
+    /// Shannon-capacity-derived achievable rate at elevation `elev_deg` for
+    /// a satellite at `altitude_km`, with a 0.5 spectral-efficiency factor
+    /// (practical MODCOD vs capacity).
+    pub fn rate_at_elevation(&self, altitude_km: f64, elev_deg: f64) -> BitsPerSec {
+        let range = slant_range_at_elevation_km(altitude_km, elev_deg.max(0.0));
+        let snr = self.snr(range);
+        let capacity = self.bandwidth_hz * (1.0 + snr).log2();
+        BitsPerSec(0.5 * capacity)
+    }
+}
+
+/// How the scenario assigns the paper's `R_i`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RatePolicy {
+    /// Fixed rate (the paper's per-scenario constant draw).
+    Fixed(BitsPerSec),
+    /// Elevation-dependent from a link budget, evaluated at a reference
+    /// elevation (mean-pass ≈ 25°).
+    Budget {
+        budget: LinkBudget,
+        altitude_km: f64,
+        reference_elevation_deg: f64,
+    },
+}
+
+impl RatePolicy {
+    /// The effective rate used by the closed-form model.
+    pub fn effective_rate(&self) -> BitsPerSec {
+        match self {
+            RatePolicy::Fixed(r) => *r,
+            RatePolicy::Budget {
+                budget,
+                altitude_km,
+                reference_elevation_deg,
+            } => budget.rate_at_elevation(*altitude_km, *reference_elevation_deg),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fspl_increases_with_range() {
+        let b = LinkBudget::default();
+        assert!(b.fspl_db(2500.0) > b.fspl_db(500.0));
+        // doubling range costs 6 dB
+        let d = b.fspl_db(1000.0) - b.fspl_db(500.0);
+        assert!((d - 6.0206).abs() < 1e-3, "{d}");
+    }
+
+    #[test]
+    fn fspl_magnitude_sane_for_xband() {
+        // 8.2 GHz @ 1000 km ≈ 170.7 dB
+        let b = LinkBudget::default();
+        let f = b.fspl_db(1000.0);
+        assert!((169.0..173.0).contains(&f), "{f}");
+    }
+
+    #[test]
+    fn snr_decreases_with_range() {
+        let b = LinkBudget::default();
+        assert!(b.snr(500.0) > b.snr(2500.0));
+        assert!(b.snr(500.0) > 0.0);
+    }
+
+    #[test]
+    fn rate_spans_papers_window() {
+        // Between the 10° mask and zenith, the default budget should span
+        // roughly the paper's [10, 100] Mbps envelope.
+        let b = LinkBudget::default();
+        let low = b.rate_at_elevation(500.0, 10.0).mbps();
+        let high = b.rate_at_elevation(500.0, 90.0).mbps();
+        assert!(high > low, "rate must improve with elevation");
+        assert!(
+            (5.0..60.0).contains(&low),
+            "low-elevation rate {low} Mbps should be tens of Mbps"
+        );
+        assert!(
+            (40.0..400.0).contains(&high),
+            "zenith rate {high} Mbps should be ~100 Mbps scale"
+        );
+    }
+
+    #[test]
+    fn fixed_policy_passthrough() {
+        let p = RatePolicy::Fixed(BitsPerSec::from_mbps(42.0));
+        assert_eq!(p.effective_rate().mbps(), 42.0);
+    }
+
+    #[test]
+    fn budget_policy_uses_reference_elevation() {
+        let budget = LinkBudget::default();
+        let p = RatePolicy::Budget {
+            budget,
+            altitude_km: 500.0,
+            reference_elevation_deg: 25.0,
+        };
+        let expect = budget.rate_at_elevation(500.0, 25.0);
+        assert_eq!(p.effective_rate(), expect);
+    }
+}

@@ -1,0 +1,66 @@
+//! Ground-station → cloud-data-center WAN link — the paper's Eq. (4):
+//! `t_{g,c} = α_k·D / R_{g_p,c_q}`.
+//!
+//! When the receiving ground station has a co-located data center
+//! (paper §III-A), this hop is free.
+
+use crate::util::units::{Bytes, BitsPerSec, Seconds};
+
+/// The terrestrial link between ground station `p` and cloud DC `q`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GroundCloudLink {
+    /// WAN rate `R_{g_p, c_q}`.
+    pub rate: BitsPerSec,
+    /// True when the DC is co-located with the station (no WAN hop).
+    pub colocated: bool,
+}
+
+impl GroundCloudLink {
+    pub fn new(rate: BitsPerSec) -> Self {
+        assert!(rate.value() > 0.0);
+        GroundCloudLink {
+            rate,
+            colocated: false,
+        }
+    }
+
+    pub fn colocated() -> Self {
+        GroundCloudLink {
+            rate: BitsPerSec(f64::INFINITY),
+            colocated: true,
+        }
+    }
+
+    /// Eq. (4): transfer latency for `data`.
+    pub fn latency(&self, data: Bytes) -> Seconds {
+        if self.colocated || data.value() <= 0.0 {
+            return Seconds::ZERO;
+        }
+        self.rate.transfer_time(data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wan_latency_is_data_over_rate() {
+        let l = GroundCloudLink::new(BitsPerSec::from_mbps(1000.0));
+        let t = l.latency(Bytes::from_gb(1.0));
+        let expect = Bytes::from_gb(1.0).bits() / 1e9;
+        assert!((t.value() - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn colocated_dc_is_free() {
+        let l = GroundCloudLink::colocated();
+        assert_eq!(l.latency(Bytes::from_gb(1000.0)), Seconds::ZERO);
+    }
+
+    #[test]
+    fn zero_data_free() {
+        let l = GroundCloudLink::new(BitsPerSec::from_mbps(100.0));
+        assert_eq!(l.latency(Bytes::ZERO), Seconds::ZERO);
+    }
+}

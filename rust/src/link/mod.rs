@@ -1,0 +1,24 @@
+//! Satellite-ground link substrate.
+//!
+//! Implements the paper's two transmission-latency equations on top of a
+//! physical channel model:
+//!
+//! * **Eq. (3)** — downlink latency of subtask `M_k`'s input from satellite
+//!   to ground station, including the multi-pass waiting term
+//!   `t_cyc · (ceil(α_k·D / (R_i·t_con)) − 1)` when the data does not fit in
+//!   one contact window ([`downlink`]).
+//! * **Eq. (4)** — ground-station → cloud-data-center WAN transfer
+//!   ([`ground`]).
+//!
+//! The paper draws the link rate `R_i` uniformly from `[10, 100]` Mbps; we
+//! additionally derive elevation-dependent rates from a link budget
+//! ([`channel`]) so the discrete-event simulator can model rate variation
+//! *within* a pass, which the closed form averages away.
+
+pub mod channel;
+pub mod downlink;
+pub mod ground;
+
+pub use channel::{LinkBudget, RatePolicy};
+pub use downlink::{downlink_latency, DownlinkModel};
+pub use ground::GroundCloudLink;

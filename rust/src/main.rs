@@ -1,0 +1,397 @@
+//! `leo-infer` — CLI for the satellite-ground collaborative inference
+//! serving framework.
+//!
+//! Subcommands:
+//!
+//! * `solve`    — one offloading decision (paper Algorithm 1) for a given
+//!   scenario/model/data size.
+//! * `simulate` — discrete-event simulation of a capture workload.
+//! * `figures`  — regenerate the paper's Fig. 2/3/4 tables.
+//! * `models`   — list the DNN zoo with per-layer profiles.
+//! * `contacts` — derive contact windows from orbital geometry.
+//! * `serve`    — the e2e serving loop on AOT artifacts (see also
+//!   `examples/e2e_serving.rs`).
+
+use leo_infer::config::Scenario;
+use leo_infer::dnn::{models, profile::ModelProfile};
+use leo_infer::solver::{Arg, Ars, DpSolver, Exhaustive, Greedy, Ilpb, OffloadPolicy};
+use leo_infer::util::cli::Args;
+use leo_infer::util::rng::Pcg64;
+use leo_infer::util::units::{Bytes, Seconds};
+
+fn main() -> anyhow::Result<()> {
+    leo_infer::util::logging::init();
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if argv.is_empty() {
+        "help".to_string()
+    } else {
+        argv.remove(0)
+    };
+    match cmd.as_str() {
+        "solve" => solve(argv),
+        "simulate" => simulate(argv),
+        "figures" => figures(argv),
+        "models" => list_models(),
+        "contacts" => contacts(argv),
+        "serve" => serve(argv),
+        _ => {
+            println!(
+                "leo-infer — energy & time-aware DNN inference offloading for LEO satellites\n\n\
+                 USAGE: leo-infer <solve|simulate|figures|models|contacts|serve> [options]\n\
+                 Run a subcommand with --help for its options."
+            );
+            Ok(())
+        }
+    }
+}
+
+fn policy_by_name(name: &str) -> anyhow::Result<Box<dyn OffloadPolicy>> {
+    Ok(match name {
+        "ilpb" => Box::new(Ilpb::default()),
+        "exhaustive" => Box::new(Exhaustive),
+        "dp" => Box::new(DpSolver),
+        "arg" => Box::new(Arg),
+        "ars" => Box::new(Ars),
+        "greedy" => Box::new(Greedy),
+        other => anyhow::bail!("unknown policy `{other}` (ilpb|exhaustive|dp|arg|ars|greedy)"),
+    })
+}
+
+fn profile_for(model: &str, depth: usize, rng: &mut Pcg64) -> anyhow::Result<ModelProfile> {
+    if model == "sampled" {
+        return Ok(ModelProfile::sampled(depth, rng));
+    }
+    if model == "measured" {
+        let m = leo_infer::runtime::artifacts::Manifest::load("artifacts")?;
+        return m.measured_profile(1);
+    }
+    let net = models::by_name(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model `{model}` (try `leo-infer models`)"))?;
+    ModelProfile::from_network(&net)
+}
+
+fn scenario_from(args: &Args) -> anyhow::Result<Scenario> {
+    let mut s = match args.get_str("scenario") {
+        Some("tiansuan") | None => Scenario::tiansuan(),
+        Some("tx-dominant") => Scenario::transmission_dominant(),
+        Some(path) => Scenario::load(path)?,
+    };
+    // flags override the preset only when explicitly set ("" = keep preset)
+    if let Some(v) = args.get_str("data-gb").filter(|v| !v.is_empty()) {
+        s.data_gb = v.parse().map_err(|e| anyhow::anyhow!("--data-gb: {e}"))?;
+    }
+    if let Some(v) = args.get_str("rate-mbps").filter(|v| !v.is_empty()) {
+        s.rate_mbps = v.parse().map_err(|e| anyhow::anyhow!("--rate-mbps: {e}"))?;
+    }
+    if let Some(v) = args.get_str("lambda").filter(|v| !v.is_empty()) {
+        let lambda: f64 = v.parse().map_err(|e| anyhow::anyhow!("--lambda: {e}"))?;
+        s.lambda = lambda;
+        s.mu = 1.0 - lambda;
+    }
+    Ok(s)
+}
+
+fn solve(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::new("leo-infer solve", "solve one offloading decision")
+        .opt("scenario", "tiansuan | tx-dominant | path/to/scenario.json", Some("tiansuan"))
+        .opt("model", "zoo name | sampled | measured", Some("vgg16"))
+        .opt("depth", "K for sampled profiles", Some("10"))
+        .opt("data-gb", "request size D in GB (empty = preset)", Some(""))
+        .opt("rate-mbps", "satellite-ground rate (empty = preset)", Some(""))
+        .opt("lambda", "latency weight, μ = 1−λ (empty = preset)", Some(""))
+        .opt("policy", "ilpb|exhaustive|dp|arg|ars|greedy", Some("ilpb"))
+        .opt("seed", "RNG seed", Some("42"))
+        .parse_from(argv)?;
+    let mut rng = Pcg64::seeded(args.get_u64("seed")?);
+    let scenario = scenario_from(&args)?;
+    let profile = profile_for(
+        args.get_str("model").unwrap(),
+        args.get_usize("depth")?,
+        &mut rng,
+    )?;
+    let inst = scenario.instance_builder(profile).build()?;
+    let policy = policy_by_name(args.get_str("policy").unwrap())?;
+    let d = policy.decide(&inst);
+    println!(
+        "{}: split {} of {} | Z = {:.4}",
+        policy.name(),
+        d.split,
+        inst.depth(),
+        d.z
+    );
+    println!(
+        "latency {:.1} s (sat {:.1} + down {:.1} + wan {:.1} + cloud {:.1})",
+        d.costs.latency.value(),
+        d.costs.t_satellite.value(),
+        d.costs.t_downlink.value(),
+        d.costs.t_ground_cloud.value(),
+        d.costs.t_cloud.value()
+    );
+    println!(
+        "energy  {:.1} J (proc {:.1} + tx {:.1})",
+        d.costs.energy.value(),
+        d.costs.e_processing.value(),
+        d.costs.e_transmission.value()
+    );
+    println!("h = {:?}", d.h.iter().map(|&b| u8::from(b)).collect::<Vec<_>>());
+    Ok(())
+}
+
+fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
+    use leo_infer::sim::contact::PeriodicContact;
+    use leo_infer::sim::runner::{SimConfig, Simulator};
+    use leo_infer::sim::workload::{PoissonWorkload, SizeDist};
+
+    let args = Args::new("leo-infer simulate", "discrete-event workload simulation")
+        .opt("scenario", "tiansuan | tx-dominant | path", Some("tiansuan"))
+        .opt("policy", "ilpb|dp|arg|ars|greedy", Some("ilpb"))
+        .opt("hours", "simulation horizon", Some("48"))
+        .opt("interarrival-s", "mean capture spacing", Some("1800"))
+        .opt("data-gb", "max request size (log-uniform from 1/10th)", Some("8"))
+        .opt("rate-mbps", "satellite-ground rate (empty = preset)", Some(""))
+        .opt("lambda", "latency weight (empty = preset)", Some(""))
+        .opt("depth", "K for the sampled profile", Some("10"))
+        .opt("seed", "RNG seed", Some("42"))
+        .parse_from(argv)?;
+    let scenario = scenario_from(&args)?;
+    let mut rng = Pcg64::seeded(args.get_u64("seed")?);
+    let horizon = Seconds::from_hours(args.get_f64("hours")?);
+    let hi = args.get_f64("data-gb")?;
+    let trace = PoissonWorkload::new(
+        1.0 / args.get_f64("interarrival-s")?,
+        SizeDist::LogUniform(Bytes::from_gb(hi / 10.0), Bytes::from_gb(hi)),
+    )
+    .generate(horizon, &mut rng);
+    let profile = ModelProfile::sampled(args.get_usize("depth")?, &mut rng);
+    let policy = policy_by_name(args.get_str("policy").unwrap())?;
+    let config = SimConfig {
+        template: scenario.instance_builder(profile.clone()),
+        profiles: vec![profile],
+        contact: PeriodicContact::new(
+            Seconds::from_hours(scenario.t_cyc_hours),
+            Seconds::from_minutes(scenario.t_con_minutes),
+        ),
+        horizon,
+    };
+    let result = Simulator::new(config).run(&trace, policy.as_ref());
+    let m = &result.metrics;
+    println!(
+        "requests    : {} submitted, {} completed, {} rejected",
+        trace.len(),
+        m.completed(),
+        m.rejected
+    );
+    println!(
+        "latency     : mean {:.1} s, p50 {:.1} s, p99 {:.1} s",
+        m.mean_latency().value(),
+        m.latency_p50().value(),
+        m.latency_p99().value()
+    );
+    println!(
+        "energy      : {:.1} J on-board total",
+        result.state.energy_drawn.value()
+    );
+    println!("downlinked  : {:.2} GB", m.total_downlinked.gb());
+    println!("throughput  : {:.4} req/s", m.throughput(horizon));
+    Ok(())
+}
+
+fn figures(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::new("leo-infer figures", "regenerate paper figures 2/3/4")
+        .opt("seeds", "scenario draws per point", Some("50"))
+        .opt("only", "2|3|4|all", Some("all"))
+        .opt("json", "also dump machine-readable data to this path", Some(""))
+        .parse_from(argv)?;
+    let seeds = args.get_u64("seeds")?;
+    let which = args.get_str("only").unwrap_or("all").to_string();
+    let mut json_figs: Vec<leo_infer::util::json::Json> = Vec::new();
+    if which == "all" || which == "2" {
+        let pts = leo_infer::figures::fig2(seeds);
+        print!(
+            "{}",
+            leo_infer::figures::render_table(
+                "Fig 2 — consumption vs initial data size",
+                "D (GB)",
+                &pts
+            )
+        );
+        let (e, t) = leo_infer::figures::headline_ratio(&pts);
+        println!(
+            "headline: ILPB / avg(ARG,ARS) = {:.1}% energy, {:.1}% time (paper: 10-18%)\n",
+            e * 100.0,
+            t * 100.0
+        );
+        json_figs.push(leo_infer::figures::to_json("fig2", "data_gb", &pts));
+    }
+    if which == "all" || which == "3" {
+        let pts = leo_infer::figures::fig3(seeds);
+        println!(
+            "{}",
+            leo_infer::figures::render_table(
+                "Fig 3 — consumption vs transmission rate",
+                "R (Mbps)",
+                &pts
+            )
+        );
+        json_figs.push(leo_infer::figures::to_json("fig3", "rate_mbps", &pts));
+    }
+    if which == "all" || which == "4" {
+        let pts = leo_infer::figures::fig4(seeds);
+        println!(
+            "{}",
+            leo_infer::figures::render_table(
+                "Fig 4 — consumption vs λ (μ = 1−λ)",
+                "lambda",
+                &pts
+            )
+        );
+        json_figs.push(leo_infer::figures::to_json("fig4", "lambda", &pts));
+    }
+    if let Some(path) = args.get_str("json").filter(|p| !p.is_empty()) {
+        let doc = leo_infer::util::json::Json::arr(json_figs);
+        std::fs::write(path, doc.to_string_pretty())?;
+        println!("wrote figure data to {path}");
+    }
+    Ok(())
+}
+
+fn list_models() -> anyhow::Result<()> {
+    println!(
+        "{:<12} {:>8} {:>12} {:>12} {:>10}",
+        "model", "layers", "params(M)", "GFLOPs", "out/in"
+    );
+    for net in models::zoo() {
+        let ratios = net.output_ratios().map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!(
+            "{:<12} {:>8} {:>12.2} {:>12.2} {:>10.6}",
+            net.name,
+            net.depth(),
+            net.total_params().map_err(|e| anyhow::anyhow!("{e}"))? as f64 / 1e6,
+            net.total_flops().map_err(|e| anyhow::anyhow!("{e}"))? as f64 / 1e9,
+            ratios.last().unwrap()
+        );
+    }
+    println!("\nplus: `sampled` (the paper's α_k ∈ [0.05^k, 0.9^k]) and `measured` (AOT manifest)");
+    Ok(())
+}
+
+fn contacts(argv: Vec<String>) -> anyhow::Result<()> {
+    use leo_infer::orbit::contact::ContactSchedule;
+    use leo_infer::orbit::geometry::GroundStation;
+    use leo_infer::orbit::propagator::CircularOrbit;
+
+    let args = Args::new("leo-infer contacts", "derive contact windows from orbit geometry")
+        .opt("alt-km", "orbit altitude", Some("500"))
+        .opt("inclination", "orbit inclination, deg", Some("97.4"))
+        .opt("lat", "ground station latitude", Some("39.9"))
+        .opt("lon", "ground station longitude", Some("116.4"))
+        .opt("mask", "min elevation, deg", Some("10"))
+        .opt("hours", "horizon", Some("24"))
+        .parse_from(argv)?;
+    let orbit = CircularOrbit::new(
+        args.get_f64("alt-km")?,
+        args.get_f64("inclination")?,
+        0.0,
+        0.0,
+    );
+    let gs = GroundStation::new("site", args.get_f64("lat")?, args.get_f64("lon")?)
+        .with_elevation_mask(args.get_f64("mask")?);
+    let sched = ContactSchedule::compute(&orbit, &gs, args.get_f64("hours")? * 3600.0, 30.0);
+    println!("orbital period: {:.1} min", orbit.period_s() / 60.0);
+    println!(
+        "{:>12} {:>12} {:>12} {:>10}",
+        "rise (h)", "set (h)", "dur (min)", "max elev"
+    );
+    for w in &sched.windows {
+        println!(
+            "{:>12.3} {:>12.3} {:>12.1} {:>9.1}°",
+            w.start_s / 3600.0,
+            w.end_s / 3600.0,
+            w.duration().minutes(),
+            w.max_elevation_deg
+        );
+    }
+    println!(
+        "\nmean t_con = {:.1} min, mean t_cyc = {:.2} h ({} passes)",
+        sched.mean_duration().minutes(),
+        sched.mean_period().map(|p| p.hours()).unwrap_or(f64::NAN),
+        sched.windows.len()
+    );
+    Ok(())
+}
+
+fn serve(argv: Vec<String>) -> anyhow::Result<()> {
+    use leo_infer::coordinator::admission::AdmissionController;
+    use leo_infer::coordinator::batcher::BatchPolicy;
+    use leo_infer::coordinator::router::RoutingPolicy;
+    use leo_infer::coordinator::scheduler::Scheduler;
+    use leo_infer::coordinator::server::{ExecutorFactory, Server, ServerConfig, StageExecutor};
+    use leo_infer::link::downlink::DownlinkModel;
+    use leo_infer::runtime::artifacts::Manifest;
+    use leo_infer::runtime::pjrt::StageRuntime;
+    use leo_infer::runtime::split::SplitExecutor;
+    use leo_infer::sim::workload::Request;
+    use leo_infer::util::units::BitsPerSec;
+
+    let args = Args::new("leo-infer serve", "serve requests through AOT artifacts")
+        .opt("requests", "number of requests", Some("32"))
+        .opt("batch", "physical batch size (must be in manifest)", Some("8"))
+        .parse_from(argv)?;
+    let n = args.get_u64("requests")?;
+    let batch = args.get_usize("batch")?;
+    let manifest = Manifest::load("artifacts")?;
+    let profile = manifest.measured_profile(batch)?;
+    let scenario = Scenario::tiansuan();
+    let scheduler = Scheduler::new(
+        scenario.instance_builder(profile.clone()),
+        vec![profile],
+        Box::new(Ilpb::default()),
+    );
+    let m2 = Manifest::load("artifacts")?;
+    let factory: ExecutorFactory = Box::new(move || {
+        Ok(Box::new(SplitExecutor::new(
+            StageRuntime::load("satellite", &m2, batch)?,
+            StageRuntime::load("cloud", &m2, batch)?,
+        )?) as Box<dyn StageExecutor>)
+    });
+    let mut server = Server::new(
+        ServerConfig {
+            routing: RoutingPolicy::RoundRobin,
+            batching: BatchPolicy {
+                max_batch: batch,
+                max_wait: Seconds(0.5),
+                expedite_critical: true,
+            },
+            admission: AdmissionController::default(),
+            downlink: DownlinkModel::new(
+                BitsPerSec::from_mbps(scenario.rate_mbps),
+                Seconds::from_hours(scenario.t_cyc_hours),
+                Seconds::from_minutes(scenario.t_con_minutes),
+            ),
+        },
+        scheduler,
+        vec![factory],
+    );
+    let t0 = std::time::Instant::now();
+    for id in 0..n {
+        server.submit(
+            Request {
+                id,
+                arrival: Seconds(t0.elapsed().as_secs_f64()),
+                data: Bytes::from_mb(8.0),
+                model: 0,
+                class: 0,
+            },
+            Seconds(t0.elapsed().as_secs_f64()),
+        )?;
+    }
+    let completions = server.shutdown(Seconds(t0.elapsed().as_secs_f64() + 1.0))?;
+    let served: usize = completions.iter().map(|c| c.plan.batch.len()).sum();
+    println!(
+        "served {served}/{n} in {:.2} s across {} batches (split {})",
+        t0.elapsed().as_secs_f64(),
+        completions.len(),
+        completions.first().map(|c| c.plan.split).unwrap_or(0)
+    );
+    Ok(())
+}

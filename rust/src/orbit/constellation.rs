@@ -1,0 +1,183 @@
+//! Walker constellation generation.
+//!
+//! Multi-satellite scenarios (the coordinator routes requests across a
+//! fleet) need consistent orbital planes. A Walker delta pattern
+//! `i:T/P/F` distributes `T` satellites over `P` planes with phase factor
+//! `F` at a common inclination `i` — the standard parameterization for LEO
+//! constellations (Starlink, OneWeb, and the paper's Tiansuan testbed all
+//! fit it at small scale).
+
+use super::propagator::CircularOrbit;
+
+/// Walker delta pattern parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WalkerPattern {
+    /// Total number of satellites `T`.
+    pub total: usize,
+    /// Number of orbital planes `P` (must divide `T`).
+    pub planes: usize,
+    /// Relative phase factor `F` in `[0, P)`.
+    pub phasing: usize,
+    /// Common inclination, degrees.
+    pub inclination_deg: f64,
+    /// Common altitude, km.
+    pub altitude_km: f64,
+}
+
+/// A generated constellation: satellite orbits plus naming metadata.
+#[derive(Debug, Clone)]
+pub struct Constellation {
+    pub satellites: Vec<NamedOrbit>,
+}
+
+#[derive(Debug, Clone)]
+pub struct NamedOrbit {
+    pub name: String,
+    pub plane: usize,
+    pub slot: usize,
+    pub orbit: CircularOrbit,
+}
+
+impl WalkerPattern {
+    pub fn new(
+        total: usize,
+        planes: usize,
+        phasing: usize,
+        inclination_deg: f64,
+        altitude_km: f64,
+    ) -> Self {
+        assert!(planes > 0 && total > 0, "empty constellation");
+        assert!(
+            total % planes == 0,
+            "satellites ({total}) must divide evenly into planes ({planes})"
+        );
+        assert!(phasing < planes.max(1), "phasing must be < planes");
+        WalkerPattern {
+            total,
+            planes,
+            phasing,
+            inclination_deg,
+            altitude_km,
+        }
+    }
+
+    /// Instantiate the constellation orbits.
+    pub fn build(&self) -> Constellation {
+        let per_plane = self.total / self.planes;
+        let mut satellites = Vec::with_capacity(self.total);
+        for p in 0..self.planes {
+            let raan = 360.0 * p as f64 / self.planes as f64;
+            for s in 0..per_plane {
+                // in-plane spacing + inter-plane phase offset F·360/T
+                let phase = 360.0 * s as f64 / per_plane as f64
+                    + 360.0 * self.phasing as f64 * p as f64 / self.total as f64;
+                satellites.push(NamedOrbit {
+                    name: format!("sat-p{p}s{s}"),
+                    plane: p,
+                    slot: s,
+                    orbit: CircularOrbit::new(
+                        self.altitude_km,
+                        self.inclination_deg,
+                        raan,
+                        phase,
+                    ),
+                });
+            }
+        }
+        Constellation { satellites }
+    }
+}
+
+impl Constellation {
+    /// A single-satellite "constellation" (the paper's evaluation setting).
+    pub fn single(altitude_km: f64, inclination_deg: f64) -> Constellation {
+        Constellation {
+            satellites: vec![NamedOrbit {
+                name: "sat-0".to_string(),
+                plane: 0,
+                slot: 0,
+                orbit: CircularOrbit::new(altitude_km, inclination_deg, 0.0, 0.0),
+            }],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.satellites.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.satellites.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn walker_layout_counts() {
+        let c = WalkerPattern::new(12, 3, 1, 53.0, 550.0).build();
+        assert_eq!(c.len(), 12);
+        for p in 0..3 {
+            assert_eq!(c.satellites.iter().filter(|s| s.plane == p).count(), 4);
+        }
+    }
+
+    #[test]
+    fn planes_spread_in_raan() {
+        let c = WalkerPattern::new(6, 3, 0, 97.4, 500.0).build();
+        let raans: Vec<f64> = c
+            .satellites
+            .iter()
+            .filter(|s| s.slot == 0)
+            .map(|s| s.orbit.raan_rad.to_degrees())
+            .collect();
+        assert_eq!(raans.len(), 3);
+        assert!((raans[1] - raans[0] - 120.0).abs() < 1e-9);
+        assert!((raans[2] - raans[1] - 120.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slots_spread_in_phase() {
+        let c = WalkerPattern::new(4, 1, 0, 53.0, 550.0).build();
+        let phases: Vec<f64> = c
+            .satellites
+            .iter()
+            .map(|s| s.orbit.phase_rad.to_degrees())
+            .collect();
+        assert_eq!(phases, vec![0.0, 90.0, 180.0, 270.0]);
+    }
+
+    #[test]
+    fn phasing_offsets_between_planes() {
+        let c = WalkerPattern::new(4, 2, 1, 53.0, 550.0).build();
+        // F=1, T=4 ⇒ inter-plane offset 90 deg
+        let p0s0 = &c.satellites[0].orbit;
+        let p1s0 = &c.satellites[2].orbit;
+        let diff = (p1s0.phase_rad - p0s0.phase_rad).to_degrees();
+        assert!((diff - 90.0).abs() < 1e-9, "{diff}");
+    }
+
+    #[test]
+    #[should_panic(expected = "divide evenly")]
+    fn uneven_planes_rejected() {
+        WalkerPattern::new(10, 3, 0, 53.0, 550.0);
+    }
+
+    #[test]
+    fn satellites_do_not_collide() {
+        let c = WalkerPattern::new(12, 3, 1, 53.0, 550.0).build();
+        for i in 0..c.len() {
+            for j in (i + 1)..c.len() {
+                let a = c.satellites[i].orbit.position_eci(0.0);
+                let b = c.satellites[j].orbit.position_eci(0.0);
+                assert!(
+                    (a - b).norm() > 1.0,
+                    "{} and {} coincide",
+                    c.satellites[i].name,
+                    c.satellites[j].name
+                );
+            }
+        }
+    }
+}

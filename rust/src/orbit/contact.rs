@@ -1,0 +1,271 @@
+//! Contact-window computation: when can a satellite talk to a ground
+//! station, for how long, and how long until the next opportunity?
+//!
+//! This is where the paper's `t_cyc` (contact period) and `t_con` (contact
+//! duration) come from. We sweep the propagated geometry with a coarse step
+//! and bisect the rise/set times to sub-second accuracy.
+
+use super::geometry::{elevation_deg, GroundStation};
+use super::propagator::CircularOrbit;
+use crate::util::units::Seconds;
+
+/// One visibility window between a satellite and a ground station.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ContactWindow {
+    /// Rise time, seconds after epoch.
+    pub start_s: f64,
+    /// Set time, seconds after epoch.
+    pub end_s: f64,
+    /// Peak elevation reached during the window, degrees.
+    pub max_elevation_deg: f64,
+}
+
+impl ContactWindow {
+    pub fn duration(&self) -> Seconds {
+        Seconds(self.end_s - self.start_s)
+    }
+
+    pub fn contains(&self, t: f64) -> bool {
+        t >= self.start_s && t < self.end_s
+    }
+}
+
+/// A precomputed ordered list of contact windows over a horizon.
+#[derive(Debug, Clone, Default)]
+pub struct ContactSchedule {
+    pub windows: Vec<ContactWindow>,
+    pub horizon_s: f64,
+}
+
+impl ContactSchedule {
+    /// Compute all contact windows between `orbit` and `gs` within
+    /// `[0, horizon_s]`.
+    ///
+    /// `coarse_step_s` controls the scan granularity; windows shorter than
+    /// the step can be missed, so it should be well below the minimum pass
+    /// duration (60 s is safe for LEO with a 5–10° mask).
+    pub fn compute(
+        orbit: &CircularOrbit,
+        gs: &GroundStation,
+        horizon_s: f64,
+        coarse_step_s: f64,
+    ) -> ContactSchedule {
+        assert!(coarse_step_s > 0.0 && horizon_s > 0.0);
+        let gs_pos = gs.position_ecef();
+        let mask = gs.min_elevation_deg;
+        let above = |t: f64| elevation_deg(gs_pos, orbit.position_ecef(t)) - mask;
+
+        let mut windows = Vec::new();
+        let mut t = 0.0;
+        let mut prev = above(0.0);
+        let mut rise: Option<f64> = if prev > 0.0 { Some(0.0) } else { None };
+        while t < horizon_s {
+            let next = (t + coarse_step_s).min(horizon_s);
+            let cur = above(next);
+            if prev <= 0.0 && cur > 0.0 {
+                rise = Some(bisect(&above, t, next));
+            } else if prev > 0.0 && cur <= 0.0 {
+                let set = bisect(&above, t, next);
+                if let Some(r) = rise.take() {
+                    windows.push(finish_window(orbit, gs_pos, r, set));
+                }
+            }
+            prev = cur;
+            t = next;
+        }
+        // window still open at the end of the horizon
+        if let Some(r) = rise {
+            windows.push(finish_window(orbit, gs_pos, r, horizon_s));
+        }
+        ContactSchedule {
+            windows,
+            horizon_s,
+        }
+    }
+
+    /// The window active at `t`, if any.
+    pub fn window_at(&self, t: f64) -> Option<&ContactWindow> {
+        // windows are sorted by start; binary search on start then check end
+        let idx = self
+            .windows
+            .partition_point(|w| w.start_s <= t);
+        if idx == 0 {
+            return None;
+        }
+        let w = &self.windows[idx - 1];
+        w.contains(t).then_some(w)
+    }
+
+    /// The next window starting strictly after `t` (or containing `t`).
+    pub fn next_window(&self, t: f64) -> Option<&ContactWindow> {
+        if let Some(w) = self.window_at(t) {
+            return Some(w);
+        }
+        let idx = self.windows.partition_point(|w| w.start_s <= t);
+        self.windows.get(idx)
+    }
+
+    /// Waiting time from `t` until a link is available (0 if in contact).
+    pub fn wait_until_contact(&self, t: f64) -> Option<Seconds> {
+        self.next_window(t)
+            .map(|w| Seconds((w.start_s - t).max(0.0)))
+    }
+
+    /// Mean contact duration — the paper's `t_con`.
+    pub fn mean_duration(&self) -> Seconds {
+        if self.windows.is_empty() {
+            return Seconds::ZERO;
+        }
+        Seconds(
+            self.windows.iter().map(|w| w.end_s - w.start_s).sum::<f64>()
+                / self.windows.len() as f64,
+        )
+    }
+
+    /// Mean start-to-start period between consecutive windows — the paper's
+    /// `t_cyc`. `None` with fewer than two windows.
+    pub fn mean_period(&self) -> Option<Seconds> {
+        if self.windows.len() < 2 {
+            return None;
+        }
+        let mut gaps = 0.0;
+        for pair in self.windows.windows(2) {
+            gaps += pair[1].start_s - pair[0].start_s;
+        }
+        Some(Seconds(gaps / (self.windows.len() - 1) as f64))
+    }
+}
+
+fn finish_window(
+    orbit: &CircularOrbit,
+    gs_pos: super::geometry::Vec3,
+    start: f64,
+    end: f64,
+) -> ContactWindow {
+    // sample elevation across the window for the peak
+    let mut max_elev = f64::NEG_INFINITY;
+    let n = 32;
+    for i in 0..=n {
+        let t = start + (end - start) * i as f64 / n as f64;
+        max_elev = max_elev.max(elevation_deg(gs_pos, orbit.position_ecef(t)));
+    }
+    ContactWindow {
+        start_s: start,
+        end_s: end,
+        max_elevation_deg: max_elev,
+    }
+}
+
+/// Bisect a sign change of `f` in `[lo, hi]` to 0.1 s accuracy.
+fn bisect(f: &dyn Fn(f64) -> f64, mut lo: f64, mut hi: f64) -> f64 {
+    let f_lo = f(lo);
+    for _ in 0..64 {
+        if hi - lo < 0.1 {
+            break;
+        }
+        let mid = 0.5 * (lo + hi);
+        if (f(mid) > 0.0) == (f_lo > 0.0) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiansuan-like: 500 km SSO over a mid-latitude station.
+    fn schedule_24h() -> ContactSchedule {
+        let orbit = CircularOrbit::new(500.0, 97.4, 30.0, 0.0);
+        let gs = GroundStation::new("beijing", 39.9, 116.4).with_elevation_mask(10.0);
+        ContactSchedule::compute(&orbit, &gs, 86_400.0, 30.0)
+    }
+
+    #[test]
+    fn leo_passes_exist_and_are_minutes_long() {
+        let sched = schedule_24h();
+        assert!(
+            (2..=12).contains(&sched.windows.len()),
+            "expected a handful of passes/day, got {}",
+            sched.windows.len()
+        );
+        for w in &sched.windows {
+            let d = w.duration().value();
+            assert!(
+                (30.0..=720.0).contains(&d),
+                "pass duration {d} s out of LEO range"
+            );
+            assert!(w.max_elevation_deg >= 10.0);
+        }
+    }
+
+    #[test]
+    fn mean_duration_is_about_six_minutes() {
+        // The paper states ~6 min per pass for Tiansuan at a 500 km orbit.
+        let sched = schedule_24h();
+        let mean = sched.mean_duration().minutes();
+        assert!(
+            (2.0..=9.0).contains(&mean),
+            "mean pass duration {mean} min should be within LEO norms (~6)"
+        );
+    }
+
+    #[test]
+    fn windows_are_ordered_and_disjoint() {
+        let sched = schedule_24h();
+        for pair in sched.windows.windows(2) {
+            assert!(pair[0].end_s < pair[1].start_s);
+        }
+    }
+
+    #[test]
+    fn window_lookup_consistency() {
+        let sched = schedule_24h();
+        let w = sched.windows[0];
+        let mid = 0.5 * (w.start_s + w.end_s);
+        assert_eq!(sched.window_at(mid), Some(&w).copied().as_ref());
+        assert!(sched.window_at(w.start_s - 1.0).is_none());
+        // waiting time before first pass = time to its rise
+        let wait = sched.wait_until_contact(0.0).unwrap().value();
+        if !w.contains(0.0) {
+            assert!((wait - w.start_s).abs() < 1e-9);
+        }
+        // inside a pass there is no wait
+        assert_eq!(sched.wait_until_contact(mid).unwrap().value(), 0.0);
+    }
+
+    #[test]
+    fn next_window_after_last_is_none() {
+        let sched = schedule_24h();
+        assert!(sched.next_window(sched.horizon_s + 1.0).is_none());
+    }
+
+    #[test]
+    fn equatorial_orbit_never_sees_polar_station() {
+        let orbit = CircularOrbit::new(500.0, 0.0, 0.0, 0.0);
+        let gs = GroundStation::new("svalbard", 78.2, 15.6);
+        let sched = ContactSchedule::compute(&orbit, &gs, 86_400.0, 30.0);
+        assert!(sched.windows.is_empty());
+    }
+
+    #[test]
+    fn polar_station_sees_polar_orbit_every_revolution() {
+        let orbit = CircularOrbit::new(500.0, 90.0, 0.0, 0.0);
+        let gs = GroundStation::new("svalbard", 89.0, 0.0).with_elevation_mask(5.0);
+        let sched = ContactSchedule::compute(&orbit, &gs, 86_400.0, 20.0);
+        // ~15.2 revolutions/day, station within view on nearly all of them
+        assert!(
+            sched.windows.len() >= 12,
+            "polar site should see most revolutions, got {}",
+            sched.windows.len()
+        );
+        let period = sched.mean_period().unwrap().value();
+        assert!(
+            (period - orbit.period_s()).abs() / orbit.period_s() < 0.1,
+            "pass cadence {period} should track the orbital period"
+        );
+    }
+}

@@ -1,0 +1,99 @@
+//! Earth-shadow (eclipse) model for solar-power harvesting.
+//!
+//! The paper's energy model treats the satellite's energy budget as scarce
+//! because "solar energy collection" is the only intake. The battery/solar
+//! substrate ([`crate::energy`]) needs to know what fraction of the orbit is
+//! sunlit; we use the standard cylindrical-shadow model: the satellite is
+//! eclipsed when it is on the anti-Sun side of the Earth and within one
+//! Earth radius of the Sun-Earth axis.
+
+use super::geometry::Vec3;
+use super::propagator::{CircularOrbit, EARTH_RADIUS_KM};
+
+/// Is the satellite at ECI position `sat` eclipsed, for a Sun direction
+/// `sun_dir` (unit vector, ECI)?
+pub fn is_eclipsed(sat: Vec3, sun_dir: Vec3) -> bool {
+    let along = sat.dot(sun_dir);
+    if along >= 0.0 {
+        return false; // sunlit side
+    }
+    // distance from the Sun-Earth axis
+    let axial = sun_dir.scaled(along);
+    let radial = (sat - axial).norm();
+    radial < EARTH_RADIUS_KM
+}
+
+/// Fraction of one orbital period spent in eclipse, for a Sun fixed in the
+/// +X ECI direction (a good approximation over a single orbit; the Sun
+/// moves ~1°/day).
+pub fn eclipse_fraction(orbit: &CircularOrbit) -> f64 {
+    let sun = Vec3::new(1.0, 0.0, 0.0);
+    let period = orbit.period_s();
+    let n = 1024;
+    let mut dark = 0usize;
+    for i in 0..n {
+        let t = period * i as f64 / n as f64;
+        if is_eclipsed(orbit.position_eci(t), sun) {
+            dark += 1;
+        }
+    }
+    dark as f64 / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sunlit_side_never_eclipsed() {
+        let sun = Vec3::new(1.0, 0.0, 0.0);
+        let sat = Vec3::new(EARTH_RADIUS_KM + 500.0, 0.0, 0.0);
+        assert!(!is_eclipsed(sat, sun));
+    }
+
+    #[test]
+    fn directly_behind_earth_is_eclipsed() {
+        let sun = Vec3::new(1.0, 0.0, 0.0);
+        let sat = Vec3::new(-(EARTH_RADIUS_KM + 500.0), 0.0, 0.0);
+        assert!(is_eclipsed(sat, sun));
+    }
+
+    #[test]
+    fn off_axis_behind_earth_not_eclipsed() {
+        let sun = Vec3::new(1.0, 0.0, 0.0);
+        // behind the Earth but 2 Earth radii off-axis
+        let sat = Vec3::new(-1000.0, 2.5 * EARTH_RADIUS_KM, 0.0);
+        assert!(!is_eclipsed(sat, sun));
+    }
+
+    #[test]
+    fn leo_equatorial_eclipse_fraction_is_about_a_third() {
+        // 500 km equatorial orbit with Sun in the orbital plane:
+        // umbra half-angle = asin(Re/r) ⇒ fraction = asin(Re/r)/π ≈ 0.38.
+        let orbit = CircularOrbit::new(500.0, 0.0, 0.0, 0.0);
+        let f = eclipse_fraction(&orbit);
+        let expect = (EARTH_RADIUS_KM / orbit.radius_km()).asin() / std::f64::consts::PI;
+        assert!(
+            (f - expect).abs() < 0.02,
+            "eclipse fraction {f}, analytic {expect}"
+        );
+    }
+
+    #[test]
+    fn noon_midnight_polar_orbit_is_eclipsed_but_dawn_dusk_is_not() {
+        // i=90°, RAAN=0°: the orbit lies in the X-Z plane (through the
+        // sub-solar and anti-solar points) ⇒ crosses the shadow cylinder
+        // every revolution.
+        let noon_midnight = CircularOrbit::new(500.0, 90.0, 0.0, 0.0);
+        let f = eclipse_fraction(&noon_midnight);
+        assert!((0.3..0.45).contains(&f), "noon-midnight fraction {f}");
+        // i=90°, RAAN=90°: the orbit lies in the Y-Z (terminator) plane —
+        // the dawn-dusk sun-synchronous case — and never enters the shadow.
+        let dawn_dusk = CircularOrbit::new(500.0, 90.0, 90.0, 0.0);
+        assert_eq!(
+            eclipse_fraction(&dawn_dusk),
+            0.0,
+            "dawn-dusk orbit should be permanently sunlit"
+        );
+    }
+}

@@ -1,0 +1,200 @@
+//! Ground-station geometry: 3-vectors, elevation angles and slant ranges.
+
+use super::propagator::EARTH_RADIUS_KM;
+
+/// A plain 3-vector in kilometers (frame given by context).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Vec3 {
+    pub x: f64,
+    pub y: f64,
+    pub z: f64,
+}
+
+impl Vec3 {
+    pub fn new(x: f64, y: f64, z: f64) -> Self {
+        Vec3 { x, y, z }
+    }
+
+    #[inline]
+    pub fn dot(self, o: Vec3) -> f64 {
+        self.x * o.x + self.y * o.y + self.z * o.z
+    }
+
+    #[inline]
+    pub fn norm(self) -> f64 {
+        self.dot(self).sqrt()
+    }
+
+    #[inline]
+    pub fn scaled(self, k: f64) -> Vec3 {
+        Vec3::new(self.x * k, self.y * k, self.z * k)
+    }
+
+    #[inline]
+    pub fn unit(self) -> Vec3 {
+        let n = self.norm();
+        debug_assert!(n > 0.0);
+        self.scaled(1.0 / n)
+    }
+}
+
+impl std::ops::Add for Vec3 {
+    type Output = Vec3;
+    fn add(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x + o.x, self.y + o.y, self.z + o.z)
+    }
+}
+
+impl std::ops::Sub for Vec3 {
+    type Output = Vec3;
+    fn sub(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x - o.x, self.y - o.y, self.z - o.z)
+    }
+}
+
+/// A ground station fixed on the (spherical) Earth surface.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroundStation {
+    pub name: String,
+    pub lat_deg: f64,
+    pub lon_deg: f64,
+    /// Minimum usable elevation angle, degrees (antenna mask; typically
+    /// 5–10° for LEO downlink).
+    pub min_elevation_deg: f64,
+    /// Whether a cloud data center is co-located (paper §III-A: some ground
+    /// stations attach directly to a DC, others reach one over a WAN).
+    pub has_datacenter: bool,
+}
+
+impl GroundStation {
+    pub fn new(name: &str, lat_deg: f64, lon_deg: f64) -> Self {
+        assert!((-90.0..=90.0).contains(&lat_deg), "latitude {lat_deg}");
+        GroundStation {
+            name: name.to_string(),
+            lat_deg,
+            lon_deg,
+            min_elevation_deg: 10.0,
+            has_datacenter: false,
+        }
+    }
+
+    pub fn with_elevation_mask(mut self, deg: f64) -> Self {
+        self.min_elevation_deg = deg;
+        self
+    }
+
+    pub fn with_datacenter(mut self, attached: bool) -> Self {
+        self.has_datacenter = attached;
+        self
+    }
+
+    /// Position in ECEF, km.
+    pub fn position_ecef(&self) -> Vec3 {
+        let lat = self.lat_deg.to_radians();
+        let lon = self.lon_deg.to_radians();
+        Vec3::new(
+            EARTH_RADIUS_KM * lat.cos() * lon.cos(),
+            EARTH_RADIUS_KM * lat.cos() * lon.sin(),
+            EARTH_RADIUS_KM * lat.sin(),
+        )
+    }
+}
+
+/// Elevation of `sat_ecef` as seen from `gs_ecef` (both km, ECEF), degrees.
+/// Negative when the satellite is below the local horizon.
+pub fn elevation_deg(gs_ecef: Vec3, sat_ecef: Vec3) -> f64 {
+    let up = gs_ecef.unit();
+    let los = sat_ecef - gs_ecef;
+    let range = los.norm();
+    debug_assert!(range > 0.0);
+    // clamp against floating-point overshoot when the satellite is exactly
+    // at zenith (ratio 1 + ulp ⇒ asin NaN)
+    (los.dot(up) / range).clamp(-1.0, 1.0).asin().to_degrees()
+}
+
+/// Slant range between ground station and satellite, km.
+pub fn slant_range_km(gs_ecef: Vec3, sat_ecef: Vec3) -> f64 {
+    (sat_ecef - gs_ecef).norm()
+}
+
+/// Analytic slant range at a given elevation for a circular orbit —
+/// law-of-cosines closed form used to size the link budget:
+/// `d = sqrt(Re²·sin²ε + h² + 2·Re·h) − Re·sinε`.
+pub fn slant_range_at_elevation_km(altitude_km: f64, elevation_deg: f64) -> f64 {
+    let re = EARTH_RADIUS_KM;
+    let eps = elevation_deg.to_radians();
+    let s = re * eps.sin();
+    (s * s + altitude_km * altitude_km + 2.0 * re * altitude_km).sqrt() - s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orbit::propagator::CircularOrbit;
+
+    #[test]
+    fn vec3_algebra() {
+        let a = Vec3::new(1.0, 2.0, 3.0);
+        let b = Vec3::new(4.0, 5.0, 6.0);
+        assert_eq!(a.dot(b), 32.0);
+        assert_eq!((a + b).x, 5.0);
+        assert_eq!((b - a).z, 3.0);
+        assert!((Vec3::new(3.0, 4.0, 0.0).norm() - 5.0).abs() < 1e-12);
+        assert!((a.unit().norm() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ground_station_on_surface() {
+        let gs = GroundStation::new("beijing", 39.9, 116.4);
+        assert!((gs.position_ecef().norm() - EARTH_RADIUS_KM).abs() < 1e-9);
+    }
+
+    #[test]
+    fn satellite_overhead_has_90_deg_elevation() {
+        let gs = GroundStation::new("equator", 0.0, 0.0);
+        let gs_pos = gs.position_ecef();
+        let sat = gs_pos.unit().scaled(EARTH_RADIUS_KM + 500.0);
+        // asin has infinite slope at 1, so allow a micro-degree of slack
+        assert!((elevation_deg(gs_pos, sat) - 90.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn antipodal_satellite_below_horizon() {
+        let gs = GroundStation::new("equator", 0.0, 0.0);
+        let gs_pos = gs.position_ecef();
+        let sat = gs_pos.unit().scaled(-(EARTH_RADIUS_KM + 500.0));
+        assert!(elevation_deg(gs_pos, sat) < 0.0);
+    }
+
+    #[test]
+    fn slant_range_matches_analytic_form() {
+        // Overhead: slant range == altitude.
+        assert!((slant_range_at_elevation_km(500.0, 90.0) - 500.0).abs() < 1e-9);
+        // At 0° elevation the slant range is sqrt(h² + 2 Re h).
+        let d0 = slant_range_at_elevation_km(500.0, 0.0);
+        let expect = (500.0f64 * 500.0 + 2.0 * EARTH_RADIUS_KM * 500.0).sqrt();
+        assert!((d0 - expect).abs() < 1e-9);
+        // ~2574 km for a 500 km orbit
+        assert!((d0 - 2574.0).abs() < 5.0, "{d0}");
+    }
+
+    #[test]
+    fn geometric_and_analytic_ranges_agree_during_pass() {
+        let gs = GroundStation::new("site", 0.0, 0.0);
+        let gs_pos = gs.position_ecef();
+        let orbit = CircularOrbit::new(500.0, 0.0, 0.0, 0.0);
+        for i in 0..200 {
+            let t = i as f64 * 5.0;
+            let sat = orbit.position_ecef(t);
+            let elev = elevation_deg(gs_pos, sat);
+            if elev > 0.0 {
+                let geo = slant_range_km(gs_pos, sat);
+                let ana = slant_range_at_elevation_km(500.0, elev);
+                assert!(
+                    (geo - ana).abs() / geo < 1e-6,
+                    "t={t}: geometric {geo} vs analytic {ana}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! Two-body circular-orbit propagation in an Earth-centered inertial (ECI)
+//! frame, plus the ECI→ECEF rotation needed to evaluate ground-station
+//! visibility on a rotating Earth.
+
+use super::geometry::Vec3;
+
+/// Standard gravitational parameter of Earth, km³/s².
+pub const EARTH_MU: f64 = 398_600.4418;
+/// Mean Earth radius, km (spherical model).
+pub const EARTH_RADIUS_KM: f64 = 6371.0;
+/// Earth rotation rate, rad/s (sidereal).
+pub const EARTH_ROTATION_RAD_S: f64 = 7.292_115_9e-5;
+
+/// A circular Keplerian orbit parameterized by altitude, inclination,
+/// right ascension of the ascending node (RAAN) and an initial phase
+/// (argument of latitude at t = 0).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CircularOrbit {
+    /// Altitude above the spherical Earth surface, km.
+    pub altitude_km: f64,
+    /// Inclination, radians.
+    pub inclination_rad: f64,
+    /// RAAN, radians.
+    pub raan_rad: f64,
+    /// Argument of latitude at epoch, radians.
+    pub phase_rad: f64,
+}
+
+impl CircularOrbit {
+    pub fn new(altitude_km: f64, inclination_deg: f64, raan_deg: f64, phase_deg: f64) -> Self {
+        assert!(altitude_km > 0.0, "orbit must be above the surface");
+        CircularOrbit {
+            altitude_km,
+            inclination_rad: inclination_deg.to_radians(),
+            raan_rad: raan_deg.to_radians(),
+            phase_rad: phase_deg.to_radians(),
+        }
+    }
+
+    /// Orbital radius from Earth's center, km.
+    #[inline]
+    pub fn radius_km(&self) -> f64 {
+        EARTH_RADIUS_KM + self.altitude_km
+    }
+
+    /// Orbital period, seconds: `T = 2π sqrt(a³/μ)`.
+    pub fn period_s(&self) -> f64 {
+        let a = self.radius_km();
+        2.0 * std::f64::consts::PI * (a * a * a / EARTH_MU).sqrt()
+    }
+
+    /// Mean motion, rad/s.
+    pub fn mean_motion_rad_s(&self) -> f64 {
+        2.0 * std::f64::consts::PI / self.period_s()
+    }
+
+    /// Orbital speed, km/s.
+    pub fn speed_km_s(&self) -> f64 {
+        (EARTH_MU / self.radius_km()).sqrt()
+    }
+
+    /// Satellite position in ECI at time `t` seconds after epoch.
+    ///
+    /// Composition: position in the orbital plane at argument of latitude
+    /// `u = phase + n·t`, rotated by inclination about x, then RAAN about z.
+    pub fn position_eci(&self, t: f64) -> Vec3 {
+        let u = self.phase_rad + self.mean_motion_rad_s() * t;
+        let r = self.radius_km();
+        let (su, cu) = u.sin_cos();
+        let (si, ci) = self.inclination_rad.sin_cos();
+        let (so, co) = self.raan_rad.sin_cos();
+        // perifocal (circular ⇒ argument of perigee absorbed into phase)
+        let x_orb = r * cu;
+        let y_orb = r * su;
+        // rotate by inclination (about x), then RAAN (about z)
+        let x1 = x_orb;
+        let y1 = y_orb * ci;
+        let z1 = y_orb * si;
+        Vec3 {
+            x: x1 * co - y1 * so,
+            y: x1 * so + y1 * co,
+            z: z1,
+        }
+    }
+
+    /// Satellite position in ECEF (Earth-fixed) at time `t`, assuming the
+    /// frames coincide at `t = 0`.
+    pub fn position_ecef(&self, t: f64) -> Vec3 {
+        let eci = self.position_eci(t);
+        let theta = EARTH_ROTATION_RAD_S * t;
+        let (s, c) = theta.sin_cos();
+        // ECEF = Rz(-theta) · ECI
+        Vec3 {
+            x: eci.x * c + eci.y * s,
+            y: -eci.x * s + eci.y * c,
+            z: eci.z,
+        }
+    }
+
+    /// Geodetic (spherical) sub-satellite latitude/longitude at `t`, degrees.
+    pub fn subsatellite_point_deg(&self, t: f64) -> (f64, f64) {
+        let p = self.position_ecef(t);
+        let r = p.norm();
+        let lat = (p.z / r).asin().to_degrees();
+        let lon = p.y.atan2(p.x).to_degrees();
+        (lat, lon)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn leo500() -> CircularOrbit {
+        CircularOrbit::new(500.0, 97.4, 0.0, 0.0)
+    }
+
+    #[test]
+    fn period_of_500km_orbit_is_about_94_minutes() {
+        let t = leo500().period_s();
+        assert!(
+            (t - 5677.0).abs() < 30.0,
+            "500 km circular period should be ~94.6 min, got {} s",
+            t
+        );
+    }
+
+    #[test]
+    fn speed_of_leo_is_about_7_6_km_s() {
+        let v = leo500().speed_km_s();
+        assert!((v - 7.61).abs() < 0.05, "got {v}");
+    }
+
+    #[test]
+    fn radius_is_constant_along_orbit() {
+        let orbit = leo500();
+        for i in 0..100 {
+            let t = i as f64 * 60.0;
+            let r = orbit.position_eci(t).norm();
+            assert!((r - orbit.radius_km()).abs() < 1e-6, "t={t}: r={r}");
+        }
+    }
+
+    #[test]
+    fn orbit_returns_to_start_after_one_period() {
+        let orbit = leo500();
+        let p0 = orbit.position_eci(0.0);
+        let p1 = orbit.position_eci(orbit.period_s());
+        assert!((p0 - p1).norm() < 1e-3, "drift {}", (p0 - p1).norm());
+    }
+
+    #[test]
+    fn inclination_bounds_max_latitude() {
+        let orbit = CircularOrbit::new(500.0, 53.0, 10.0, 0.0);
+        let mut max_lat: f64 = 0.0;
+        for i in 0..2000 {
+            let (lat, _) = orbit.subsatellite_point_deg(i as f64 * 5.0);
+            max_lat = max_lat.max(lat.abs());
+        }
+        assert!(max_lat <= 53.1, "max |lat| {max_lat} > inclination");
+        assert!(max_lat > 50.0, "orbit should reach near its inclination");
+    }
+
+    #[test]
+    fn equatorial_orbit_stays_equatorial() {
+        let orbit = CircularOrbit::new(500.0, 0.0, 0.0, 0.0);
+        for i in 0..100 {
+            let p = orbit.position_eci(i as f64 * 60.0);
+            assert!(p.z.abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn ecef_rotates_relative_to_eci() {
+        let orbit = leo500();
+        // After 6 h the Earth has rotated ~90 deg; ECEF and ECI must differ.
+        let t = 6.0 * 3600.0;
+        let eci = orbit.position_eci(t);
+        let ecef = orbit.position_ecef(t);
+        assert!((eci - ecef).norm() > 100.0);
+        // but the radius is preserved by the rotation
+        assert!((eci.norm() - ecef.norm()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn polar_orbit_ground_track_drifts_west() {
+        // Successive ascending-node crossings should move west in ECEF
+        // because the Earth rotates under the orbit.
+        let orbit = CircularOrbit::new(500.0, 90.0, 0.0, 0.0);
+        let (_, lon0) = orbit.subsatellite_point_deg(0.0);
+        let (_, lon1) = orbit.subsatellite_point_deg(orbit.period_s());
+        let drift = (lon1 - lon0 + 540.0).rem_euclid(360.0) - 180.0;
+        // expected drift ≈ -360 * T/86164 ≈ -23.7 deg
+        assert!(
+            (drift + 23.7).abs() < 1.0,
+            "westward drift should be ~23.7 deg, got {drift}"
+        );
+    }
+}

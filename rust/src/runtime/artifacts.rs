@@ -1,0 +1,218 @@
+//! Artifact manifest: the contract between the python compile path and the
+//! rust runtime.
+
+use crate::dnn::profile::ModelProfile;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One lowered stage executable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageArtifact {
+    pub index: usize,
+    pub name: String,
+    pub batch: usize,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub in_bytes: usize,
+    pub out_bytes: usize,
+    pub path: PathBuf,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: String,
+    pub batch_sizes: Vec<usize>,
+    pub stages: Vec<StageArtifact>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let v = Json::parse(&text)?;
+        let model = v.get_str("model")?.to_string();
+        let batch_sizes: Vec<usize> = v
+            .get("batch_sizes")?
+            .as_arr()?
+            .iter()
+            .map(|b| b.as_usize())
+            .collect::<Result<_, _>>()?;
+        let mut stages = Vec::new();
+        for s in v.get("stages")?.as_arr()? {
+            stages.push(StageArtifact {
+                index: s.get_usize("index")?,
+                name: s.get_str("name")?.to_string(),
+                batch: s.get_usize("batch")?,
+                in_shape: shape_of(s.get("in_shape")?)?,
+                out_shape: shape_of(s.get("out_shape")?)?,
+                in_bytes: s.get_usize("in_bytes")?,
+                out_bytes: s.get_usize("out_bytes")?,
+                path: dir.join(s.get_str("path")?),
+            });
+        }
+        let m = Manifest {
+            model,
+            batch_sizes,
+            stages,
+            dir,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Depth K (stages per batch variant).
+    pub fn depth(&self) -> usize {
+        self.stages
+            .iter()
+            .map(|s| s.index + 1)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// All stages for one batch size, ordered by index.
+    pub fn stages_for_batch(&self, batch: usize) -> Vec<&StageArtifact> {
+        let mut v: Vec<&StageArtifact> =
+            self.stages.iter().filter(|s| s.batch == batch).collect();
+        v.sort_by_key(|s| s.index);
+        v
+    }
+
+    /// The measured per-subtask size profile (`sizes[0]` = input bytes,
+    /// `sizes[k]` = bytes leaving subtask k) for a batch variant —
+    /// feeds [`ModelProfile::from_alphas`].
+    pub fn measured_profile(&self, batch: usize) -> anyhow::Result<ModelProfile> {
+        let stages = self.stages_for_batch(batch);
+        anyhow::ensure!(!stages.is_empty(), "no stages for batch {batch}");
+        let mut sizes: Vec<f64> = vec![stages[0].in_bytes as f64];
+        sizes.extend(stages.iter().map(|s| s.out_bytes as f64));
+        ModelProfile::from_alphas(&format!("{}-measured-b{batch}", self.model), &sizes)
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.stages.is_empty(), "manifest has no stages");
+        let k = self.depth();
+        for &batch in &self.batch_sizes {
+            let stages = self.stages_for_batch(batch);
+            anyhow::ensure!(
+                stages.len() == k,
+                "batch {batch}: expected {k} stages, found {}",
+                stages.len()
+            );
+            for (a, b) in stages.iter().zip(stages.iter().skip(1)) {
+                anyhow::ensure!(
+                    a.out_shape == b.in_shape,
+                    "shape chain broken at {} → {}",
+                    a.name,
+                    b.name
+                );
+            }
+            for s in &stages {
+                anyhow::ensure!(
+                    s.path.exists(),
+                    "missing artifact file {}",
+                    s.path.display()
+                );
+                let elems_in: usize = s.in_shape.iter().product();
+                anyhow::ensure!(
+                    s.in_bytes == elems_in * 4,
+                    "{}: in_bytes inconsistent with shape",
+                    s.name
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+fn shape_of(v: &Json) -> anyhow::Result<Vec<usize>> {
+    Ok(v.as_arr()?
+        .iter()
+        .map(|d| d.as_usize())
+        .collect::<Result<_, _>>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::models;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn manifest() -> Option<Manifest> {
+        let dir = artifacts_dir();
+        dir.join("manifest.json")
+            .exists()
+            .then(|| Manifest::load(dir).expect("manifest loads"))
+    }
+
+    #[test]
+    fn manifest_loads_and_validates() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert_eq!(m.model, "rsnet9");
+        assert_eq!(m.depth(), 15);
+        assert_eq!(m.batch_sizes, vec![1, 8]);
+        assert_eq!(m.stages_for_batch(1).len(), 15);
+        assert_eq!(m.stages_for_batch(8).len(), 15);
+    }
+
+    #[test]
+    fn measured_profile_matches_analytic_rsnet9() {
+        // the core lockstep check: AOT-measured activation ratios must
+        // equal the rust layer algebra's output ratios
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let measured = m.measured_profile(1).unwrap();
+        let analytic = ModelProfile::from_network(&models::rsnet9()).unwrap();
+        assert_eq!(measured.depth(), analytic.depth());
+        for (k, (me, an)) in measured
+            .layers
+            .iter()
+            .zip(&analytic.layers)
+            .enumerate()
+        {
+            assert!(
+                (me.alpha - an.alpha).abs() < 1e-9,
+                "α mismatch at stage {k}: measured {} vs analytic {} ({})",
+                me.alpha,
+                an.alpha,
+                an.tag
+            );
+            assert!(
+                (me.out_ratio - an.out_ratio).abs() < 1e-9,
+                "out ratio mismatch at stage {k}"
+            );
+        }
+    }
+
+    #[test]
+    fn batch8_profile_equals_batch1() {
+        // α is a ratio: batch cancels
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let b1 = m.measured_profile(1).unwrap();
+        let b8 = m.measured_profile(8).unwrap();
+        for (a, b) in b1.layers.iter().zip(&b8.layers) {
+            assert!((a.alpha - b.alpha).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn missing_manifest_errors_cleanly() {
+        let err = Manifest::load("/nonexistent-dir").unwrap_err();
+        assert!(err.to_string().contains("manifest.json"));
+    }
+}

@@ -1,0 +1,24 @@
+//! PJRT execution runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and runs them from the rust request path.
+//!
+//! * [`artifacts`] — `manifest.json` parsing + consistency checks against
+//!   the analytic DNN profile.
+//! * [`tensor`] — host-side f32 tensors ↔ `xla::Literal`.
+//! * [`pjrt`] — a compiled stage set on one PJRT client.
+//! * [`split`] — the satellite/cloud split executor: prefix stages on one
+//!   client, boundary activation serialized (the downlinked payload),
+//!   suffix stages on a second client; implements
+//!   [`crate::coordinator::server::StageExecutor`].
+//!
+//! Everything here is self-contained after `make artifacts`; python is
+//! never invoked at runtime.
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod split;
+pub mod tensor;
+
+pub use artifacts::{Manifest, StageArtifact};
+pub use pjrt::StageRuntime;
+pub use split::SplitExecutor;
+pub use tensor::HostTensor;

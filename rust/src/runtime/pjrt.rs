@@ -1,0 +1,214 @@
+//! A compiled stage set on one PJRT client.
+//!
+//! One [`StageRuntime`] stands for one compute site (the satellite payload
+//! or the cloud data center): it owns a PJRT client and the compiled
+//! executables for every model stage at one batch size. Compilation
+//! happens once at load; the request path only executes.
+
+use super::artifacts::{Manifest, StageArtifact};
+use super::tensor::HostTensor;
+use std::ops::Range;
+use std::time::Instant;
+
+/// Compiled stages on one PJRT client.
+pub struct StageRuntime {
+    /// Site label for logs ("satellite" / "cloud").
+    pub site: String,
+    /// Kept alive for the executables' lifetime (PJRT executables borrow
+    /// the client at the C-API level even though the rust wrapper doesn't
+    /// express it).
+    _client: xla::PjRtClient,
+    stages: Vec<CompiledStage>,
+    batch: usize,
+}
+
+struct CompiledStage {
+    meta: StageArtifact,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Timing of one stage execution.
+#[derive(Debug, Clone, Copy)]
+pub struct StageTiming {
+    pub index: usize,
+    pub seconds: f64,
+}
+
+impl StageRuntime {
+    /// Create a CPU PJRT client and compile all stages for `batch`.
+    pub fn load(site: &str, manifest: &Manifest, batch: usize) -> anyhow::Result<StageRuntime> {
+        anyhow::ensure!(
+            manifest.batch_sizes.contains(&batch),
+            "batch {batch} not in manifest (have {:?})",
+            manifest.batch_sizes
+        );
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "[{site}] PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        let mut stages = Vec::new();
+        let t0 = Instant::now();
+        for meta in manifest.stages_for_batch(batch) {
+            let proto = xla::HloModuleProto::from_text_file(
+                meta.path
+                    .to_str()
+                    .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            stages.push(CompiledStage {
+                meta: meta.clone(),
+                exe,
+            });
+        }
+        log::info!(
+            "[{site}] compiled {} stages (batch {batch}) in {:.2}s",
+            stages.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        Ok(StageRuntime {
+            site: site.to_string(),
+            _client: client,
+            stages,
+            batch,
+        })
+    }
+
+    pub fn depth(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn stage_meta(&self, k: usize) -> &StageArtifact {
+        &self.stages[k].meta
+    }
+
+    /// Input shape of stage `k` (model input shape for k = 0).
+    pub fn input_shape(&self, k: usize) -> &[usize] {
+        &self.stages[k].meta.in_shape
+    }
+
+    /// Execute one stage.
+    pub fn run_stage(&self, k: usize, input: &HostTensor) -> anyhow::Result<HostTensor> {
+        let stage = &self
+            .stages
+            .get(k)
+            .ok_or_else(|| anyhow::anyhow!("stage {k} out of range"))?;
+        anyhow::ensure!(
+            input.shape == stage.meta.in_shape,
+            "stage {k} ({}) wants shape {:?}, got {:?}",
+            stage.meta.name,
+            stage.meta.in_shape,
+            input.shape
+        );
+        let lit = input.to_literal()?;
+        let result = stage.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True ⇒ 1-tuple
+        let out = result.to_tuple1()?;
+        HostTensor::from_literal(stage.meta.out_shape.clone(), &out)
+    }
+
+    /// Execute a contiguous stage range, returning the boundary activation
+    /// and per-stage timings.
+    pub fn run_range(
+        &self,
+        range: Range<usize>,
+        input: HostTensor,
+    ) -> anyhow::Result<(HostTensor, Vec<StageTiming>)> {
+        anyhow::ensure!(range.end <= self.depth(), "range beyond depth");
+        let mut x = input;
+        let mut timings = Vec::with_capacity(range.len());
+        for k in range {
+            let t0 = Instant::now();
+            x = self.run_stage(k, &x)?;
+            timings.push(StageTiming {
+                index: k,
+                seconds: t0.elapsed().as_secs_f64(),
+            });
+        }
+        Ok((x, timings))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json")
+            .exists()
+            .then(|| Manifest::load(dir).expect("manifest loads"))
+    }
+
+    #[test]
+    fn loads_and_runs_full_chain() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = StageRuntime::load("test", &m, 1).unwrap();
+        assert_eq!(rt.depth(), 15);
+        let input = HostTensor::random(vec![1, 3, 64, 64], 42);
+        let (out, timings) = rt.run_range(0..rt.depth(), input).unwrap();
+        assert_eq!(out.shape, vec![1, 10]);
+        assert_eq!(timings.len(), 15);
+        // softmax output: sums to 1
+        let sum: f32 = out.data.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "softmax sum {sum}");
+        assert!(out.data.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn split_execution_equals_unsplit() {
+        // run prefix on one runtime, serialize, resume on another — must
+        // equal the single-runtime result bit for bit (same executables)
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let sat = StageRuntime::load("sat", &m, 1).unwrap();
+        let cloud = StageRuntime::load("cloud", &m, 1).unwrap();
+        let input = HostTensor::random(vec![1, 3, 64, 64], 7);
+        let (full, _) = sat.run_range(0..sat.depth(), input.clone()).unwrap();
+        for split in [0, 3, 9, 15] {
+            let (boundary, _) = sat.run_range(0..split, input.clone()).unwrap();
+            // wire roundtrip (the downlink)
+            let wire = boundary.to_bytes();
+            let rx = HostTensor::from_bytes(boundary.shape.clone(), &wire).unwrap();
+            let (out, _) = cloud.run_range(split..cloud.depth(), rx).unwrap();
+            assert_eq!(out.data, full.data, "split {split} diverged");
+        }
+    }
+
+    #[test]
+    fn wrong_shape_is_rejected() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = StageRuntime::load("test", &m, 1).unwrap();
+        let bad = HostTensor::zeros(vec![1, 3, 32, 32]);
+        assert!(rt.run_stage(0, &bad).is_err());
+    }
+
+    #[test]
+    fn batch8_runtime_works() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = StageRuntime::load("test", &m, 8).unwrap();
+        let input = HostTensor::random(vec![8, 3, 64, 64], 13);
+        let (out, _) = rt.run_range(0..rt.depth(), input).unwrap();
+        assert_eq!(out.shape, vec![8, 10]);
+        let classes = out.argmax_rows().unwrap();
+        assert_eq!(classes.len(), 8);
+    }
+}

@@ -1,0 +1,157 @@
+//! Host tensors and their conversion to/from `xla::Literal`.
+//!
+//! The boundary activation crossing the satellite→cloud split travels
+//! through [`HostTensor::to_bytes`] — its byte length is the *real*
+//! downlinked payload size, which the e2e example reports against the
+//! manifest's `out_bytes`.
+
+use crate::util::rng::Pcg64;
+
+/// A dense row-major f32 tensor on the host.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> anyhow::Result<HostTensor> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(
+            n == data.len(),
+            "shape {:?} wants {n} elements, got {}",
+            shape,
+            data.len()
+        );
+        Ok(HostTensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> HostTensor {
+        let n = shape.iter().product();
+        HostTensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    /// Deterministic synthetic image tensor (standard-normal pixels) —
+    /// the e2e example's stand-in for a real capture.
+    pub fn random(shape: Vec<usize>, seed: u64) -> HostTensor {
+        let n: usize = shape.iter().product();
+        let mut rng = Pcg64::seeded(seed);
+        HostTensor {
+            shape,
+            data: (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect(),
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Payload size when serialized (f32 little-endian, no framing).
+    pub fn byte_len(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Serialize to the downlink wire format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.byte_len());
+        for x in &self.data {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+
+    /// Deserialize from the downlink wire format.
+    pub fn from_bytes(shape: Vec<usize>, bytes: &[u8]) -> anyhow::Result<HostTensor> {
+        anyhow::ensure!(bytes.len() % 4 == 0, "byte length not a multiple of 4");
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        HostTensor::new(shape, data)
+    }
+
+    /// Convert to an XLA literal with this tensor's shape.
+    pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(&self.data);
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Convert from an XLA literal (shape supplied by the caller — the
+    /// manifest knows it; literal element count is checked).
+    pub fn from_literal(shape: Vec<usize>, lit: &xla::Literal) -> anyhow::Result<HostTensor> {
+        let data: Vec<f32> = lit.to_vec()?;
+        HostTensor::new(shape, data)
+    }
+
+    /// Row-wise argmax for a (N, C) tensor — classification outputs.
+    pub fn argmax_rows(&self) -> anyhow::Result<Vec<usize>> {
+        anyhow::ensure!(self.shape.len() == 2, "argmax_rows wants rank 2");
+        let (n, c) = (self.shape[0], self.shape[1]);
+        Ok((0..n)
+            .map(|i| {
+                let row = &self.data[i * c..(i + 1) * c];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_element_count() {
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn byte_roundtrip() {
+        let t = HostTensor::random(vec![2, 3, 4], 7);
+        let bytes = t.to_bytes();
+        assert_eq!(bytes.len(), t.byte_len());
+        let back = HostTensor::from_bytes(vec![2, 3, 4], &bytes).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        let a = HostTensor::random(vec![10], 3);
+        let b = HostTensor::random(vec![10], 3);
+        let c = HostTensor::random(vec![10], 4);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn argmax_rows_picks_maxima() {
+        let t = HostTensor::new(
+            vec![2, 3],
+            vec![0.1, 0.7, 0.2, /*row2*/ 0.9, 0.05, 0.05],
+        )
+        .unwrap();
+        assert_eq!(t.argmax_rows().unwrap(), vec![1, 0]);
+    }
+
+    #[test]
+    fn argmax_requires_rank2() {
+        assert!(HostTensor::zeros(vec![4]).argmax_rows().is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = HostTensor::random(vec![2, 2], 11);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(vec![2, 2], &lit).unwrap();
+        assert_eq!(back, t);
+    }
+}

@@ -1,0 +1,157 @@
+//! Simulation metrics: per-request records plus streaming aggregates.
+
+use crate::util::stats::{LogHistogram, Welford};
+use crate::util::units::{Bytes, Joules, Seconds};
+
+/// Completion record for one request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub data: Bytes,
+    /// Chosen split (subtasks on the satellite).
+    pub split: usize,
+    pub arrival: Seconds,
+    pub completed: Seconds,
+    /// End-to-end latency (completed − arrival), includes queueing.
+    pub latency: Seconds,
+    /// Satellite-side energy drawn by this request.
+    pub energy: Joules,
+    /// Bytes downlinked for this request.
+    pub downlinked: Bytes,
+}
+
+/// Aggregated metrics over a run.
+#[derive(Debug, Clone)]
+pub struct SimMetrics {
+    pub records: Vec<RequestRecord>,
+    latency: Welford,
+    energy: Welford,
+    latency_hist: LogHistogram,
+    pub total_downlinked: Bytes,
+    pub rejected: u64,
+}
+
+impl Default for SimMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SimMetrics {
+    pub fn new() -> Self {
+        SimMetrics {
+            records: Vec::new(),
+            latency: Welford::new(),
+            energy: Welford::new(),
+            latency_hist: LogHistogram::new(1e-3),
+            total_downlinked: Bytes::ZERO,
+            rejected: 0,
+        }
+    }
+
+    pub fn record(&mut self, r: RequestRecord) {
+        self.latency.push(r.latency.value());
+        self.energy.push(r.energy.value());
+        self.latency_hist.record(r.latency.value());
+        self.total_downlinked += r.downlinked;
+        self.records.push(r);
+    }
+
+    pub fn reject(&mut self) {
+        self.rejected += 1;
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.latency.count()
+    }
+
+    pub fn mean_latency(&self) -> Seconds {
+        Seconds(self.latency.mean())
+    }
+
+    pub fn mean_energy(&self) -> Joules {
+        Joules(self.energy.mean())
+    }
+
+    pub fn total_energy(&self) -> Joules {
+        Joules(self.energy.mean() * self.energy.count() as f64)
+    }
+
+    pub fn latency_p50(&self) -> Seconds {
+        Seconds(self.latency_hist.quantile(0.5))
+    }
+
+    pub fn latency_p99(&self) -> Seconds {
+        Seconds(self.latency_hist.quantile(0.99))
+    }
+
+    /// Completed requests per simulated second.
+    pub fn throughput(&self, horizon: Seconds) -> f64 {
+        if horizon.value() <= 0.0 {
+            return 0.0;
+        }
+        self.completed() as f64 / horizon.value()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, latency: f64, energy: f64) -> RequestRecord {
+        RequestRecord {
+            id,
+            data: Bytes::from_gb(1.0),
+            split: 3,
+            arrival: Seconds(0.0),
+            completed: Seconds(latency),
+            latency: Seconds(latency),
+            energy: Joules(energy),
+            downlinked: Bytes::from_mb(10.0),
+        }
+    }
+
+    #[test]
+    fn aggregates_accumulate() {
+        let mut m = SimMetrics::new();
+        m.record(rec(1, 10.0, 5.0));
+        m.record(rec(2, 20.0, 15.0));
+        assert_eq!(m.completed(), 2);
+        assert_eq!(m.mean_latency(), Seconds(15.0));
+        assert_eq!(m.mean_energy(), Joules(10.0));
+        assert_eq!(m.total_energy(), Joules(20.0));
+        assert_eq!(m.total_downlinked, Bytes::from_mb(20.0));
+        assert_eq!(m.records.len(), 2);
+    }
+
+    #[test]
+    fn throughput_per_second() {
+        let mut m = SimMetrics::new();
+        for i in 0..100 {
+            m.record(rec(i, 1.0, 1.0));
+        }
+        assert!((m.throughput(Seconds(50.0)) - 2.0).abs() < 1e-12);
+        assert_eq!(m.throughput(Seconds::ZERO), 0.0);
+    }
+
+    #[test]
+    fn rejection_counter() {
+        let mut m = SimMetrics::new();
+        m.reject();
+        m.reject();
+        assert_eq!(m.rejected, 2);
+        assert_eq!(m.completed(), 0);
+    }
+
+    #[test]
+    fn percentiles_reasonable() {
+        let mut m = SimMetrics::new();
+        for i in 1..=100 {
+            m.record(rec(i, i as f64, 1.0));
+        }
+        let p50 = m.latency_p50().value();
+        assert!((p50 - 50.0).abs() / 50.0 < 0.15, "p50 {p50}");
+        let p99 = m.latency_p99().value();
+        assert!((p99 - 99.0).abs() / 99.0 < 0.15, "p99 {p99}");
+    }
+}

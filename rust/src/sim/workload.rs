@@ -1,0 +1,195 @@
+//! Capture workload generation.
+//!
+//! Earth-observation satellites produce imagery in bursts as they overfly
+//! targets. We model request arrival as a Poisson process (optionally
+//! duty-cycled to imaging windows) and data sizes from the paper's range
+//! (`[1, 1000]` GB per request) under several distributions.
+
+use crate::util::rng::Pcg64;
+use crate::util::units::{Bytes, Seconds};
+
+/// Data-size distribution for captured requests.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SizeDist {
+    /// Every request the same size.
+    Fixed(Bytes),
+    /// Uniform in [lo, hi].
+    Uniform(Bytes, Bytes),
+    /// Log-uniform in [lo, hi] (the paper's 3-decade range [1, 1000] GB is
+    /// naturally sampled per-decade).
+    LogUniform(Bytes, Bytes),
+}
+
+impl SizeDist {
+    pub fn sample(&self, rng: &mut Pcg64) -> Bytes {
+        match *self {
+            SizeDist::Fixed(b) => b,
+            SizeDist::Uniform(lo, hi) => Bytes(rng.uniform(lo.value(), hi.value())),
+            SizeDist::LogUniform(lo, hi) => {
+                let l = rng.uniform(lo.value().ln(), hi.value().ln());
+                Bytes(l.exp())
+            }
+        }
+    }
+}
+
+/// One inference request to be scheduled.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Capture (arrival) time, seconds after epoch.
+    pub arrival: Seconds,
+    /// Raw data size `D`.
+    pub data: Bytes,
+    /// Index of the model this request runs (into the scenario's profiles).
+    pub model: usize,
+    /// Latency-criticality class (drives per-request μ/λ in extensions;
+    /// 0 = energy-saving survey, 1 = latency-critical alert).
+    pub class: u8,
+}
+
+/// Poisson arrival workload.
+#[derive(Debug, Clone)]
+pub struct PoissonWorkload {
+    /// Mean arrivals per second.
+    pub rate_hz: f64,
+    pub sizes: SizeDist,
+    /// Number of distinct models (sampled Zipf-skewed).
+    pub model_count: usize,
+    /// Probability a request is latency-critical (class 1).
+    pub critical_fraction: f64,
+}
+
+impl PoissonWorkload {
+    pub fn new(rate_hz: f64, sizes: SizeDist) -> Self {
+        assert!(rate_hz > 0.0);
+        PoissonWorkload {
+            rate_hz,
+            sizes,
+            model_count: 1,
+            critical_fraction: 0.0,
+        }
+    }
+
+    pub fn with_models(mut self, n: usize) -> Self {
+        assert!(n >= 1);
+        self.model_count = n;
+        self
+    }
+
+    pub fn with_critical_fraction(mut self, f: f64) -> Self {
+        assert!((0.0..=1.0).contains(&f));
+        self.critical_fraction = f;
+        self
+    }
+
+    /// Generate all requests arriving within `[0, horizon)`.
+    pub fn generate(&self, horizon: Seconds, rng: &mut Pcg64) -> Vec<Request> {
+        let mut out = Vec::new();
+        let mut t = 0.0;
+        let mut id = 0;
+        loop {
+            t += rng.exponential(self.rate_hz);
+            if t >= horizon.value() {
+                break;
+            }
+            out.push(Request {
+                id,
+                arrival: Seconds(t),
+                data: self.sizes.sample(rng),
+                model: if self.model_count > 1 {
+                    rng.zipf(self.model_count, 1.1)
+                } else {
+                    0
+                },
+                class: u8::from(rng.chance(self.critical_fraction)),
+            });
+            id += 1;
+        }
+        out
+    }
+}
+
+/// A deterministic trace (for replay tests and the e2e example).
+pub fn fixed_trace(n: usize, spacing: Seconds, data: Bytes) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request {
+            id: i as u64,
+            arrival: spacing * i as f64,
+            data,
+            model: 0,
+            class: 0,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_is_respected() {
+        let mut rng = Pcg64::seeded(41);
+        let w = PoissonWorkload::new(0.01, SizeDist::Fixed(Bytes::from_gb(1.0)));
+        let reqs = w.generate(Seconds(1_000_000.0), &mut rng);
+        let n = reqs.len() as f64;
+        // expect ~10_000 ± 3σ (σ = 100)
+        assert!((n - 10_000.0).abs() < 400.0, "n = {n}");
+    }
+
+    #[test]
+    fn arrivals_are_sorted_and_ids_sequential() {
+        let mut rng = Pcg64::seeded(42);
+        let w = PoissonWorkload::new(0.1, SizeDist::Fixed(Bytes::from_gb(1.0)));
+        let reqs = w.generate(Seconds(10_000.0), &mut rng);
+        for (i, pair) in reqs.windows(2).enumerate() {
+            assert!(pair[0].arrival <= pair[1].arrival);
+            assert_eq!(pair[0].id, i as u64);
+        }
+    }
+
+    #[test]
+    fn log_uniform_spans_decades() {
+        let mut rng = Pcg64::seeded(43);
+        let dist = SizeDist::LogUniform(Bytes::from_gb(1.0), Bytes::from_gb(1000.0));
+        let samples: Vec<f64> = (0..2000).map(|_| dist.sample(&mut rng).gb()).collect();
+        assert!(samples.iter().all(|&x| (1.0..=1000.0).contains(&x)));
+        let below_10 = samples.iter().filter(|&&x| x < 10.0).count();
+        let above_100 = samples.iter().filter(|&&x| x > 100.0).count();
+        // each decade gets ~1/3 of the mass
+        assert!((below_10 as f64 / 2000.0 - 0.333).abs() < 0.05);
+        assert!((above_100 as f64 / 2000.0 - 0.333).abs() < 0.05);
+    }
+
+    #[test]
+    fn critical_fraction_applies() {
+        let mut rng = Pcg64::seeded(44);
+        let w = PoissonWorkload::new(0.1, SizeDist::Fixed(Bytes::from_gb(1.0)))
+            .with_critical_fraction(0.25);
+        let reqs = w.generate(Seconds(100_000.0), &mut rng);
+        let crit = reqs.iter().filter(|r| r.class == 1).count() as f64;
+        let frac = crit / reqs.len() as f64;
+        assert!((frac - 0.25).abs() < 0.03, "critical fraction {frac}");
+    }
+
+    #[test]
+    fn zipf_model_popularity_is_skewed() {
+        let mut rng = Pcg64::seeded(45);
+        let w = PoissonWorkload::new(0.1, SizeDist::Fixed(Bytes::from_gb(1.0)))
+            .with_models(5);
+        let reqs = w.generate(Seconds(200_000.0), &mut rng);
+        let mut counts = [0usize; 5];
+        for r in &reqs {
+            counts[r.model] += 1;
+        }
+        assert!(counts[0] > counts[4], "model 0 should dominate: {counts:?}");
+    }
+
+    #[test]
+    fn fixed_trace_layout() {
+        let t = fixed_trace(3, Seconds(10.0), Bytes::from_mb(5.0));
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[2].arrival, Seconds(20.0));
+        assert_eq!(t[1].data, Bytes::from_mb(5.0));
+    }
+}

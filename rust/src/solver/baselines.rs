@@ -1,0 +1,139 @@
+//! The paper's comparison algorithms (§V): **ARG** (all tasks offloaded to
+//! the ground — the "bent pipe" status quo) and **ARS** (all tasks on the
+//! satellite — orbital edge computing), plus a greedy heuristic ablation
+//! that is not in the paper but isolates the value of exact search.
+
+use super::instance::{Decision, Instance};
+use super::policy::OffloadPolicy;
+
+/// All tasks to the ground: downlink the raw capture, process in the cloud
+/// (split = 0).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Arg;
+
+impl OffloadPolicy for Arg {
+    fn name(&self) -> &'static str {
+        "ARG"
+    }
+
+    fn decide(&self, inst: &Instance) -> Decision {
+        let obj = inst.objective();
+        Decision::new(0, inst.z_of_split(0, &obj), inst.evaluate_split(0), inst.depth())
+    }
+}
+
+/// All tasks on the satellite: run the whole model on board (split = K).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Ars;
+
+impl OffloadPolicy for Ars {
+    fn name(&self) -> &'static str {
+        "ARS"
+    }
+
+    fn decide(&self, inst: &Instance) -> Decision {
+        let k = inst.depth();
+        let obj = inst.objective();
+        Decision::new(k, inst.z_of_split(k, &obj), inst.evaluate_split(k), k)
+    }
+}
+
+/// Greedy heuristic: split right after the subtask whose *input* is the
+/// global minimum of `α` (smallest payload to downlink), ignoring the
+/// compute/energy trade-off. A natural "just minimize transmission"
+/// strawman — the ablation benches show where it loses to ILPB.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Greedy;
+
+impl OffloadPolicy for Greedy {
+    fn name(&self) -> &'static str {
+        "Greedy-minTX"
+    }
+
+    fn decide(&self, inst: &Instance) -> Decision {
+        let k = inst.depth();
+        // choose s ∈ 1..K minimizing α_{s+1} (payload crossing the split);
+        // also consider s = K (no transmission at all) as α = 0 ... but that
+        // forfeits cloud compute: the greedy rule only looks at payload, so
+        // s = K "transmits nothing" and would always win; restrict to
+        // actual splits (the heuristic's blind spot, kept deliberately).
+        let mut best_s = 0;
+        let mut best_alpha = f64::INFINITY;
+        for s in 0..k {
+            if inst.alphas[s] < best_alpha {
+                best_alpha = inst.alphas[s];
+                best_s = s;
+            }
+        }
+        let obj = inst.objective();
+        Decision::new(
+            best_s,
+            inst.z_of_split(best_s, &obj),
+            inst.evaluate_split(best_s),
+            k,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::profile::ModelProfile;
+    use crate::solver::bnb::Ilpb;
+    use crate::solver::instance::InstanceBuilder;
+    use crate::util::proptest::Runner;
+    use crate::util::rng::Pcg64;
+    use crate::util::units::Bytes;
+
+    fn instance(seed: u64, k: usize) -> Instance {
+        let mut rng = Pcg64::seeded(seed);
+        InstanceBuilder::new(ModelProfile::sampled(k, &mut rng))
+            .data(Bytes::from_gb(50.0))
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn arg_is_split_zero_ars_is_split_k() {
+        let inst = instance(21, 9);
+        assert_eq!(Arg.decide(&inst).split, 0);
+        assert_eq!(Ars.decide(&inst).split, 9);
+        assert!(Arg.decide(&inst).h.iter().all(|&b| !b));
+        assert!(Ars.decide(&inst).h.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn ilpb_never_worse_than_either_baseline() {
+        Runner::new("ILPB ≤ min(ARG, ARS)", 200).run(|rng| {
+            let k = 1 + rng.index(20);
+            let inst = InstanceBuilder::new(ModelProfile::sampled(k, rng))
+                .data(Bytes::from_gb(rng.uniform(1.0, 1000.0)))
+                .build()
+                .unwrap();
+            let z_ilpb = Ilpb::default().decide(&inst).z;
+            let z_arg = Arg.decide(&inst).z;
+            let z_ars = Ars.decide(&inst).z;
+            (z_ilpb <= z_arg + 1e-12 && z_ilpb <= z_ars + 1e-12)
+                .then_some(())
+                .ok_or_else(|| format!("z: ilpb={z_ilpb} arg={z_arg} ars={z_ars}"))
+        });
+    }
+
+    #[test]
+    fn greedy_feasible_but_not_better_than_ilpb() {
+        Runner::new("Greedy ≥ ILPB", 100).run(|rng| {
+            let k = 2 + rng.index(12);
+            let inst = InstanceBuilder::new(ModelProfile::sampled(k, rng))
+                .build()
+                .unwrap();
+            let g = Greedy.decide(&inst);
+            if g.split > inst.depth() {
+                return Err("greedy split out of range".into());
+            }
+            let z_ilpb = Ilpb::default().decide(&inst).z;
+            (g.z >= z_ilpb - 1e-12)
+                .then_some(())
+                .ok_or_else(|| format!("greedy {} < ilpb {}", g.z, z_ilpb))
+        });
+    }
+}

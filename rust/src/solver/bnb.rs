@@ -1,0 +1,353 @@
+//! **ILPB** — integer linear programming via branch and bound
+//! (the paper's Algorithm 1).
+//!
+//! Depth-first search over the binary decision vector `H = (h_1..h_K)`
+//! with:
+//!
+//! * **constraint propagation** — branching respects Eq. (13)
+//!   (`h_k ≥ h_{k+1}`): once a variable is set to 0 every later variable is
+//!   forced to 0, so only prefix-shaped assignments are ever expanded
+//!   (lines 18–25 of Algorithm 1 restricted to values that can still
+//!   satisfy `Cons`);
+//! * **admissible bounding** — at each node the current partial objective
+//!   plus "the minimum possible value of the remaining variables"
+//!   (line 20: `Z(h_k) + minZ({h̄_k}) < Ans`) is compared against the
+//!   incumbent; subtrees that cannot improve are pruned. The bound relaxes
+//!   the remaining subtasks to their cheapest placement and drops the
+//!   transmission term, so it never overestimates — the search is exact;
+//! * **incremental cost maintenance** — satellite-side prefix sums are
+//!   carried down the DFS and cloud-side suffix sums are precomputed, so a
+//!   node costs O(1) to bound and a leaf O(1) to evaluate.
+//!
+//! The paper's termination tolerance (`|Ans' − Ans| < 1e-5`, line 7) is
+//! supported via [`Ilpb::with_epsilon`]; the default is 0 (exact optimum).
+
+use super::instance::{Decision, Instance, Objective};
+use super::policy::OffloadPolicy;
+use crate::util::units::{Joules, Seconds};
+
+/// Search statistics (reported by the solver-scaling bench).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BnbStats {
+    /// Interior nodes expanded.
+    pub nodes: u64,
+    /// Complete assignments evaluated.
+    pub leaves: u64,
+    /// Subtrees cut by the bound.
+    pub pruned: u64,
+    /// Incumbent updates.
+    pub improvements: u64,
+}
+
+/// The ILPB solver.
+#[derive(Debug, Clone, Copy)]
+pub struct Ilpb {
+    /// Early-termination tolerance (paper line 7). 0 = exact.
+    pub epsilon: f64,
+    /// Disable the bound (ablation; constraint propagation still applies).
+    pub bounding: bool,
+}
+
+impl Default for Ilpb {
+    fn default() -> Self {
+        Ilpb {
+            epsilon: 0.0,
+            bounding: true,
+        }
+    }
+}
+
+impl Ilpb {
+    pub fn with_epsilon(mut self, eps: f64) -> Self {
+        self.epsilon = eps;
+        self
+    }
+
+    pub fn without_bounding(mut self) -> Self {
+        self.bounding = false;
+        self
+    }
+
+    /// Solve and return the decision together with search statistics.
+    pub fn solve(&self, inst: &Instance) -> (Decision, BnbStats) {
+        let k = inst.depth();
+        let obj = inst.objective();
+
+        // Precompute per-subtask costs once: O(K).
+        let delta_sat: Vec<Seconds> = (0..k).map(|i| inst.delta_sat(i)).collect();
+        let e_sat: Vec<Joules> = (0..k).map(|i| inst.e_sat(i)).collect();
+        // Suffix sums of cloud latency: cloud_suffix[s] = Σ_{i≥s} δ'_i.
+        let mut cloud_suffix = vec![Seconds::ZERO; k + 1];
+        for i in (0..k).rev() {
+            cloud_suffix[i] = cloud_suffix[i + 1] + inst.delta_cloud(i);
+        }
+        // Optimistic per-subtask latency (min of either placement) suffix —
+        // the "minimum possible value of the remaining variables".
+        let mut best_suffix = vec![Seconds::ZERO; k + 1];
+        for i in (0..k).rev() {
+            best_suffix[i] =
+                best_suffix[i + 1] + inst.delta_cloud(i).min(delta_sat[i]);
+        }
+
+        let mut stats = BnbStats::default();
+        let mut best_z = f64::INFINITY;
+        let mut best_split = 0usize;
+
+        // DFS over the split position with incremental prefix sums. The
+        // stack is implicit: thanks to constraint propagation the all-ones
+        // prefix is the only expandable spine, visited in order.
+        let mut t_prefix = Seconds::ZERO;
+        let mut e_prefix = Joules::ZERO;
+        let mut done = false;
+        for depth in 0..=k {
+            if done {
+                break;
+            }
+            stats.nodes += 1;
+
+            // Branch h_{depth+1} = 0: the assignment completes as split
+            // `depth` (all later variables forced to 0 by Eq. 13).
+            let leaf_z = {
+                // O(1) leaf evaluation from the running sums.
+                let (t_tx, t_gc, e_tx) = if depth < k {
+                    (inst.t_down(depth), inst.t_gc(depth), inst.e_off(depth))
+                } else {
+                    (Seconds::ZERO, Seconds::ZERO, Joules::ZERO)
+                };
+                let latency = t_prefix + t_tx + t_gc + cloud_suffix[depth];
+                let energy = e_prefix + e_tx;
+                z_from_raw(&obj, energy, latency)
+            };
+            stats.leaves += 1;
+            if leaf_z < best_z {
+                if (best_z - leaf_z).abs() < self.epsilon {
+                    // paper line 7: negligible improvement ⇒ stop early
+                    done = true;
+                }
+                best_z = leaf_z;
+                best_split = depth;
+                stats.improvements += 1;
+            }
+
+            // Branch h_{depth+1} = 1: continue the all-ones spine.
+            if depth < k {
+                if self.bounding {
+                    // Admissible bound for every completion below this
+                    // node: committed satellite prefix (including subtask
+                    // `depth` now placed on the satellite) + optimistic
+                    // remainder, zero future transmission energy.
+                    let t_lb = t_prefix + delta_sat[depth] + best_suffix[depth + 1];
+                    let e_lb = e_prefix + e_sat[depth];
+                    let z_lb = z_from_raw(&obj, e_lb, t_lb);
+                    if z_lb >= best_z {
+                        stats.pruned += 1;
+                        break; // nothing deeper can improve
+                    }
+                }
+                t_prefix += delta_sat[depth];
+                e_prefix += e_sat[depth];
+            }
+        }
+
+        (
+            Decision::new(best_split, best_z, inst.evaluate_split(best_split), k),
+            stats,
+        )
+    }
+}
+
+/// Z from raw totals (shared by bound and leaf paths).
+#[inline]
+fn z_from_raw(obj: &Objective, energy: Joules, latency: Seconds) -> f64 {
+    let e_span = (obj.e_max - obj.e_min).value();
+    let t_span = (obj.t_max - obj.t_min).value();
+    let e_term = if e_span > 0.0 {
+        (energy - obj.e_min).value() / e_span
+    } else {
+        0.0
+    };
+    let t_term = if t_span > 0.0 {
+        (latency - obj.t_min).value() / t_span
+    } else {
+        0.0
+    };
+    obj.mu * e_term + obj.lambda * t_term
+}
+
+/// Literal 2^K enumeration with feasibility checks at the leaves — the
+/// unimproved baseline Algorithm 1 would degenerate to without constraint
+/// propagation. Exponential; only used by the scaling ablation (K ≤ 20).
+pub fn naive_2k_search(inst: &Instance) -> (Decision, u64) {
+    let k = inst.depth();
+    assert!(k <= 24, "naive search is exponential; refusing K > 24");
+    let obj = inst.objective();
+    let mut best_z = f64::INFINITY;
+    let mut best_split = 0usize;
+    let mut visited = 0u64;
+    for mask in 0..(1u64 << k) {
+        visited += 1;
+        let h: Vec<bool> = (0..k).map(|i| mask & (1 << i) != 0).collect();
+        if let Some(costs) = inst.evaluate(&h) {
+            let z = obj.z(&costs);
+            if z < best_z {
+                best_z = z;
+                best_split = inst.split_of(&h).unwrap();
+            }
+        }
+    }
+    (
+        Decision::new(best_split, best_z, inst.evaluate_split(best_split), k),
+        visited,
+    )
+}
+
+impl OffloadPolicy for Ilpb {
+    fn name(&self) -> &'static str {
+        "ILPB"
+    }
+
+    fn decide(&self, inst: &Instance) -> Decision {
+        self.solve(inst).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::profile::ModelProfile;
+    use crate::solver::exhaustive::Exhaustive;
+    use crate::solver::instance::InstanceBuilder;
+    use crate::util::proptest::Runner;
+    use crate::util::rng::Pcg64;
+    use crate::util::units::{Bytes, Watts};
+
+    fn random_instance(rng: &mut Pcg64) -> Instance {
+        let k = 1 + rng.index(24);
+        let profile = ModelProfile::sampled(k, rng);
+        InstanceBuilder::new(profile)
+            .data(Bytes::from_gb(rng.uniform(1.0, 1000.0)))
+            .beta_s_per_kb(rng.uniform(0.01, 0.03))
+            .gamma_s_per_kb(rng.uniform(0.0001, 0.001))
+            .rate(crate::util::units::BitsPerSec::from_mbps(
+                rng.uniform(10.0, 100.0),
+            ))
+            .gpu(
+                rng.uniform(50.0, 200.0),
+                Watts(rng.uniform(1.0, 10.0)),
+                Watts(rng.uniform(0.1, 1.0)),
+                Watts(rng.uniform(0.01, 0.2)),
+            )
+            .p_off(Watts(rng.uniform(0.5, 5.0)))
+            .weights(0.5, 0.5)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn matches_exhaustive_on_random_instances() {
+        Runner::new("ilpb == exhaustive", 300).run(|rng| {
+            let inst = random_instance(rng);
+            let (ilpb, _) = Ilpb::default().solve(&inst);
+            let oracle = Exhaustive.decide(&inst);
+            if (ilpb.z - oracle.z).abs() > 1e-9 {
+                return Err(format!(
+                    "K={}: ILPB z={} split={} vs oracle z={} split={}",
+                    inst.depth(),
+                    ilpb.z,
+                    ilpb.split,
+                    oracle.z,
+                    oracle.split
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matches_exhaustive_across_weights() {
+        Runner::new("ilpb == exhaustive over λ:μ", 100).run(|rng| {
+            let weights = [(1.0, 0.0), (0.75, 0.25), (0.5, 0.5), (0.25, 0.75), (0.0, 1.0)];
+            let (lambda, mu) = *rng.choose(&weights);
+            let k = 1 + rng.index(16);
+            let inst = InstanceBuilder::new(ModelProfile::sampled(k, rng))
+                .weights(mu, lambda)
+                .build()
+                .unwrap();
+            let (ilpb, _) = Ilpb::default().solve(&inst);
+            let oracle = Exhaustive.decide(&inst);
+            ((ilpb.z - oracle.z).abs() < 1e-9)
+                .then_some(())
+                .ok_or_else(|| format!("λ={lambda} μ={mu}: {} vs {}", ilpb.z, oracle.z))
+        });
+    }
+
+    #[test]
+    fn matches_naive_2k_enumeration() {
+        // the full 2^K search (constraints checked at leaves) agrees
+        Runner::new("ilpb == naive 2^K", 30).run(|rng| {
+            let k = 1 + rng.index(10);
+            let inst = InstanceBuilder::new(ModelProfile::sampled(k, rng))
+                .build()
+                .unwrap();
+            let (ilpb, _) = Ilpb::default().solve(&inst);
+            let (naive, visited) = naive_2k_search(&inst);
+            if visited != 1 << k {
+                return Err(format!("naive should visit 2^{k}, saw {visited}"));
+            }
+            ((ilpb.z - naive.z).abs() < 1e-9)
+                .then_some(())
+                .ok_or_else(|| format!("{} vs {}", ilpb.z, naive.z))
+        });
+    }
+
+    #[test]
+    fn bounding_prunes_without_changing_answer() {
+        let mut rng = Pcg64::seeded(77);
+        let mut total_pruned = 0;
+        for _ in 0..50 {
+            let inst = random_instance(&mut rng);
+            let (with, s_with) = Ilpb::default().solve(&inst);
+            let (without, s_without) = Ilpb::default().without_bounding().solve(&inst);
+            assert!((with.z - without.z).abs() < 1e-12);
+            assert!(s_with.leaves <= s_without.leaves);
+            total_pruned += s_with.pruned;
+        }
+        assert!(total_pruned > 0, "bound should prune at least sometimes");
+    }
+
+    #[test]
+    fn stats_are_consistent() {
+        let mut rng = Pcg64::seeded(78);
+        let inst = random_instance(&mut rng);
+        let (_, stats) = Ilpb::default().solve(&inst);
+        assert!(stats.leaves >= 1);
+        assert!(stats.nodes >= stats.leaves); // every leaf hangs off a node
+        assert!(stats.improvements >= 1);
+    }
+
+    #[test]
+    fn epsilon_early_stop_still_feasible() {
+        let mut rng = Pcg64::seeded(79);
+        let inst = random_instance(&mut rng);
+        let (d, _) = Ilpb::default().with_epsilon(1e-5).solve(&inst);
+        assert!(d.split <= inst.depth());
+        assert!(d.z.is_finite());
+        // epsilon-approximate: within epsilon of the true optimum
+        let oracle = Exhaustive.decide(&inst);
+        assert!(d.z - oracle.z <= 1e-5 + 1e-12);
+    }
+
+    #[test]
+    fn k_equals_one() {
+        let mut rng = Pcg64::seeded(80);
+        let inst = InstanceBuilder::new(ModelProfile::sampled(1, &mut rng))
+            .build()
+            .unwrap();
+        let (d, stats) = Ilpb::default().solve(&inst);
+        assert!(d.split <= 1);
+        // split 0 always evaluated; split 1 may be cut by the bound
+        assert!((1..=2).contains(&stats.leaves), "leaves {}", stats.leaves);
+        let oracle = Exhaustive.decide(&inst);
+        assert!((d.z - oracle.z).abs() < 1e-12);
+    }
+}

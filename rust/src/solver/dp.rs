@@ -1,0 +1,98 @@
+//! Incremental split evaluation in O(K) total — the production fast path.
+//!
+//! The feasible set is the K+1 prefix splits; latency/energy of split
+//! `s+1` differ from split `s` by one subtask moving from cloud to
+//! satellite plus the transmission term changing. Maintaining running
+//! prefix sums evaluates all splits in a single pass, with no allocation
+//! beyond the decision itself. Exact — property-tested against
+//! [`crate::solver::exhaustive::Exhaustive`].
+
+use super::instance::{Decision, Instance};
+use super::policy::OffloadPolicy;
+use crate::util::units::{Joules, Seconds};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DpSolver;
+
+impl OffloadPolicy for DpSolver {
+    fn name(&self) -> &'static str {
+        "DP-scan"
+    }
+
+    fn decide(&self, inst: &Instance) -> Decision {
+        let k = inst.depth();
+        let obj = inst.objective();
+
+        // total cloud latency if everything ran in the cloud
+        let mut cloud_total = Seconds::ZERO;
+        for i in 0..k {
+            cloud_total += inst.delta_cloud(i);
+        }
+
+        let mut t_sat_prefix = Seconds::ZERO;
+        let mut e_proc_prefix = Joules::ZERO;
+        let mut cloud_suffix = cloud_total;
+        let mut best = (0usize, f64::INFINITY);
+        for s in 0..=k {
+            let (t_tx, t_gc, e_tx) = if s < k {
+                (inst.t_down(s), inst.t_gc(s), inst.e_off(s))
+            } else {
+                (Seconds::ZERO, Seconds::ZERO, Joules::ZERO)
+            };
+            let latency = t_sat_prefix + t_tx + t_gc + cloud_suffix;
+            let energy = e_proc_prefix + e_tx;
+            let z = obj.z(&crate::solver::instance::Costs {
+                latency,
+                energy,
+                t_satellite: t_sat_prefix,
+                t_downlink: t_tx,
+                t_ground_cloud: t_gc,
+                t_cloud: cloud_suffix,
+                e_processing: e_proc_prefix,
+                e_transmission: e_tx,
+            });
+            if z < best.1 {
+                best = (s, z);
+            }
+            if s < k {
+                t_sat_prefix += inst.delta_sat(s);
+                e_proc_prefix += inst.e_sat(s);
+                cloud_suffix -= inst.delta_cloud(s);
+            }
+        }
+        Decision::new(best.0, best.1, inst.evaluate_split(best.0), k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::profile::ModelProfile;
+    use crate::solver::exhaustive::Exhaustive;
+    use crate::solver::instance::InstanceBuilder;
+    use crate::util::proptest::Runner;
+    use crate::util::units::Bytes;
+
+    #[test]
+    fn dp_matches_exhaustive() {
+        Runner::new("dp == exhaustive", 300).run(|rng| {
+            let k = 1 + rng.index(32);
+            let inst = InstanceBuilder::new(ModelProfile::sampled(k, rng))
+                .data(Bytes::from_gb(rng.uniform(1.0, 1000.0)))
+                .beta_s_per_kb(rng.uniform(0.01, 0.03))
+                .gamma_s_per_kb(rng.uniform(0.0001, 0.001))
+                .build()
+                .unwrap();
+            let dp = DpSolver.decide(&inst);
+            let oracle = Exhaustive.decide(&inst);
+            ((dp.z - oracle.z).abs() < 1e-9 && dp.split == oracle.split)
+                .then_some(())
+                .ok_or_else(|| {
+                    format!(
+                        "K={k}: dp (s={}, z={}) vs oracle (s={}, z={})",
+                        dp.split, dp.z, oracle.split, oracle.z
+                    )
+                })
+        });
+    }
+}

@@ -1,0 +1,96 @@
+//! Exhaustive oracle.
+//!
+//! Constraints (12)–(13) collapse the feasible set to the `K+1` prefix
+//! splits, so exhaustive search is O(K)·O(K) = O(K²) naive evaluation
+//! (each `evaluate_split` is O(K)). This is the ground truth that ILPB and
+//! the DP solver are property-tested against.
+
+use super::instance::{Decision, Instance};
+use super::policy::OffloadPolicy;
+
+/// Enumerate every feasible split and keep the best `Z`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Exhaustive;
+
+impl Exhaustive {
+    /// Full cost table: `(split, Z)` for every feasible split — used by the
+    /// figure benches to plot entire curves, not just the argmin.
+    pub fn table(inst: &Instance) -> Vec<(usize, f64)> {
+        let obj = inst.objective();
+        (0..=inst.depth())
+            .map(|s| (s, inst.z_of_split(s, &obj)))
+            .collect()
+    }
+}
+
+impl OffloadPolicy for Exhaustive {
+    fn name(&self) -> &'static str {
+        "Exhaustive"
+    }
+
+    fn decide(&self, inst: &Instance) -> Decision {
+        let obj = inst.objective();
+        let mut best_s = 0;
+        let mut best_z = f64::INFINITY;
+        for s in 0..=inst.depth() {
+            let z = inst.z_of_split(s, &obj);
+            // strict < keeps the earliest split on ties (deterministic)
+            if z < best_z {
+                best_z = z;
+                best_s = s;
+            }
+        }
+        Decision::new(best_s, best_z, inst.evaluate_split(best_s), inst.depth())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::profile::ModelProfile;
+    use crate::solver::instance::InstanceBuilder;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn table_has_k_plus_one_rows() {
+        let mut rng = Pcg64::seeded(11);
+        let inst = InstanceBuilder::new(ModelProfile::sampled(7, &mut rng))
+            .build()
+            .unwrap();
+        let table = Exhaustive::table(&inst);
+        assert_eq!(table.len(), 8);
+        let d = Exhaustive.decide(&inst);
+        let min_z = table.iter().map(|(_, z)| *z).fold(f64::INFINITY, f64::min);
+        assert!((d.z - min_z).abs() < 1e-15);
+    }
+
+    #[test]
+    fn decision_h_vector_matches_split() {
+        let mut rng = Pcg64::seeded(12);
+        let inst = InstanceBuilder::new(ModelProfile::sampled(6, &mut rng))
+            .build()
+            .unwrap();
+        let d = Exhaustive.decide(&inst);
+        assert_eq!(d.h.len(), 6);
+        assert_eq!(d.h.iter().filter(|&&b| b).count(), d.split);
+        assert!(inst.feasible(&d.h));
+    }
+
+    #[test]
+    fn beats_or_ties_every_split() {
+        let mut rng = Pcg64::seeded(13);
+        for k in [1usize, 2, 5, 20] {
+            let inst = InstanceBuilder::new(ModelProfile::sampled(k, &mut rng))
+                .build()
+                .unwrap();
+            let obj = inst.objective();
+            let d = Exhaustive.decide(&inst);
+            for s in 0..=k {
+                assert!(
+                    d.z <= inst.z_of_split(s, &obj) + 1e-15,
+                    "K={k}: split {s} beats the oracle"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,714 @@
+//! The ILP instance: the paper's §III model and §III-E problem formulation.
+//!
+//! Notation map (paper → code):
+//!
+//! | paper | code |
+//! |---|---|
+//! | `D` | `data` |
+//! | `α_k` | `alphas[k-1]` (0-indexed) |
+//! | `β_i` (s per unit data on satellite) | `beta_s_per_byte` |
+//! | `γ` (s per unit data in cloud) | `gamma_s_per_byte` |
+//! | `R_i`, `t_cyc`, `t_con` | `downlink` ([`DownlinkModel`]) |
+//! | `R_{g_p,c_q}` | `ground` ([`GroundCloudLink`]) |
+//! | `ζ_i, P^max, P^idle, P^leak` | `gpu` ([`GpuPowerModel`]) |
+//! | `P^off` | `tx` ([`TransmitPowerModel`]) |
+//! | `μ, λ` | `mu`, `lambda` |
+//! | `h_k` | `h[k-1]`, or a prefix split `s` = #subtasks on the satellite |
+//!
+//! Constraint (13) (`h_k ≥ h_{k+1}`) together with (12) makes every
+//! feasible `H` a *prefix* vector, identified by its split point
+//! `s ∈ {0..K}`: subtasks `1..=s` run on the satellite, `s+1..=K` in the
+//! cloud, and when `s < K` the input of subtask `s+1` is downlinked.
+
+use crate::dnn::profile::ModelProfile;
+use crate::energy::power::{GpuPowerModel, TransmitPowerModel};
+use crate::link::downlink::DownlinkModel;
+use crate::link::ground::GroundCloudLink;
+use crate::util::units::{BitsPerSec, Bytes, Joules, Seconds, Watts};
+
+/// A fully specified offloading problem for one inference request.
+#[derive(Debug, Clone)]
+pub struct Instance {
+    /// `α_k` for k = 1..K (0-indexed).
+    pub alphas: Vec<f64>,
+    /// Original request data size `D`.
+    pub data: Bytes,
+    /// Satellite processing latency per byte, `β_i`.
+    pub beta_s_per_byte: f64,
+    /// Cloud processing latency per byte, `γ`.
+    pub gamma_s_per_byte: f64,
+    /// Eq. (10): upper limit on the cloud's per-unit latency. The paper
+    /// writes `γ ≥ γ_max`, an evident typo for `γ ≤ γ_max` ("specifies the
+    /// upper limit on the latency for processing a unit amount of data in
+    /// a cloud data center"); we implement the stated *meaning*.
+    pub gamma_max_s_per_byte: f64,
+    /// Satellite → ground-station link (Eq. 3 parameters).
+    pub downlink: DownlinkModel,
+    /// Ground-station → cloud link (Eq. 4 parameters).
+    pub ground: GroundCloudLink,
+    /// Satellite processing power model (Eq. 6 parameters).
+    pub gpu: GpuPowerModel,
+    /// Satellite antenna power model (Eq. 7 parameter).
+    pub tx: TransmitPowerModel,
+    /// Energy weight `μ`.
+    pub mu: f64,
+    /// Latency weight `λ`.
+    pub lambda: f64,
+    /// Wire-compression factor applied to the *downlinked* activation
+    /// (1.0 = raw f32; 0.25 = int8 quantization; the paper's future-work
+    /// "model lightweight techniques"). Compute-side sizes are unaffected.
+    pub wire_compression: f64,
+}
+
+/// Raw (unnormalized) totals for one assignment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Costs {
+    pub latency: Seconds,
+    pub energy: Joules,
+    /// Eq. 5 decomposition, for the figure reports.
+    pub t_satellite: Seconds,
+    pub t_downlink: Seconds,
+    pub t_ground_cloud: Seconds,
+    pub t_cloud: Seconds,
+    /// Eq. 8 decomposition.
+    pub e_processing: Joules,
+    pub e_transmission: Joules,
+}
+
+/// Normalization bounds + weights — everything needed to map raw costs to
+/// the objective `Z` (Eq. 9).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Objective {
+    pub e_min: Joules,
+    pub e_max: Joules,
+    pub t_min: Seconds,
+    pub t_max: Seconds,
+    pub mu: f64,
+    pub lambda: f64,
+}
+
+impl Objective {
+    /// Eq. (9). Degenerate spans (max == min, e.g. K = 1 scenarios where
+    /// every feasible split has identical energy) contribute 0 — the factor
+    /// is constant over the feasible set, so it cannot affect the argmin.
+    pub fn z(&self, c: &Costs) -> f64 {
+        let e_span = (self.e_max - self.e_min).value();
+        let t_span = (self.t_max - self.t_min).value();
+        let e_term = if e_span > 0.0 {
+            (c.energy - self.e_min).value() / e_span
+        } else {
+            0.0
+        };
+        let t_term = if t_span > 0.0 {
+            (c.latency - self.t_min).value() / t_span
+        } else {
+            0.0
+        };
+        self.mu * e_term + self.lambda * t_term
+    }
+}
+
+/// An offloading decision: the chosen split plus its evaluated costs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Decision {
+    /// Number of subtasks executed on the satellite (`s`); the paper's
+    /// `H = [1;s · 0;K−s]`.
+    pub split: usize,
+    /// Objective value `Z`.
+    pub z: f64,
+    /// Raw costs behind `z`.
+    pub costs: Costs,
+    /// `h_k` as a vector (for paper-shaped reporting).
+    pub h: Vec<bool>,
+}
+
+impl Decision {
+    pub fn new(split: usize, z: f64, costs: Costs, k: usize) -> Decision {
+        Decision {
+            split,
+            z,
+            costs,
+            h: (0..k).map(|i| i < split).collect(),
+        }
+    }
+}
+
+/// Builder with the paper's experiment defaults (§V-A, Tiansuan).
+#[derive(Debug, Clone)]
+pub struct InstanceBuilder {
+    profile: ModelProfile,
+    data: Bytes,
+    beta_s_per_kb: f64,
+    gamma_s_per_kb: f64,
+    gamma_max_s_per_kb: f64,
+    rate: BitsPerSec,
+    t_cyc: Seconds,
+    t_con: Seconds,
+    ground_rate: BitsPerSec,
+    ground_colocated: bool,
+    zeta_kb_per_s: f64,
+    p_max: Watts,
+    p_idle: Watts,
+    p_leak: Watts,
+    p_off: Watts,
+    mu: f64,
+    lambda: f64,
+    wire_compression: f64,
+}
+
+impl InstanceBuilder {
+    /// Defaults follow the paper's §V-A: Tiansuan cadence (8 h period,
+    /// 6 min contact), mid-range β/γ/link-rate, P_max mid of [1,10] W.
+    pub fn new(profile: ModelProfile) -> Self {
+        InstanceBuilder {
+            profile,
+            data: Bytes::from_gb(100.0),
+            beta_s_per_kb: 0.02,
+            gamma_s_per_kb: 0.00055,
+            gamma_max_s_per_kb: 0.001,
+            rate: BitsPerSec::from_mbps(55.0),
+            t_cyc: Seconds::from_hours(8.0),
+            t_con: Seconds::from_minutes(6.0),
+            ground_rate: BitsPerSec::from_mbps(10_000.0),
+            ground_colocated: false,
+            zeta_kb_per_s: 100.0,
+            p_max: Watts(5.5),
+            p_idle: Watts(0.5),
+            p_leak: Watts(0.1),
+            p_off: Watts(3.0),
+            mu: 0.5,
+            lambda: 0.5,
+            wire_compression: 1.0,
+        }
+    }
+
+    pub fn data(mut self, d: Bytes) -> Self {
+        self.data = d;
+        self
+    }
+
+    /// Swap the model profile (used by the simulator, which reuses one
+    /// scenario template across requests for different models).
+    pub fn profile(mut self, p: ModelProfile) -> Self {
+        self.profile = p;
+        self
+    }
+
+    pub fn beta_s_per_kb(mut self, b: f64) -> Self {
+        self.beta_s_per_kb = b;
+        self
+    }
+
+    pub fn gamma_s_per_kb(mut self, g: f64) -> Self {
+        self.gamma_s_per_kb = g;
+        self
+    }
+
+    pub fn gamma_max_s_per_kb(mut self, g: f64) -> Self {
+        self.gamma_max_s_per_kb = g;
+        self
+    }
+
+    pub fn rate(mut self, r: BitsPerSec) -> Self {
+        self.rate = r;
+        self
+    }
+
+    pub fn contact(mut self, t_cyc: Seconds, t_con: Seconds) -> Self {
+        self.t_cyc = t_cyc;
+        self.t_con = t_con;
+        self
+    }
+
+    pub fn ground_rate(mut self, r: BitsPerSec) -> Self {
+        self.ground_rate = r;
+        self
+    }
+
+    pub fn ground_colocated(mut self, yes: bool) -> Self {
+        self.ground_colocated = yes;
+        self
+    }
+
+    pub fn gpu(mut self, zeta_kb_per_s: f64, p_max: Watts, p_idle: Watts, p_leak: Watts) -> Self {
+        self.zeta_kb_per_s = zeta_kb_per_s;
+        self.p_max = p_max;
+        self.p_idle = p_idle;
+        self.p_leak = p_leak;
+        self
+    }
+
+    pub fn p_off(mut self, p: Watts) -> Self {
+        self.p_off = p;
+        self
+    }
+
+    /// Set the objective weights; must satisfy `μ + λ = 1` (Eq. 9).
+    pub fn weights(mut self, mu: f64, lambda: f64) -> Self {
+        self.mu = mu;
+        self.lambda = lambda;
+        self
+    }
+
+    /// Activation wire compression: 1.0 = raw f32, 0.25 = int8
+    /// quantization, etc. (the paper's future-work lightweighting).
+    pub fn wire_compression(mut self, f: f64) -> Self {
+        assert!(f > 0.0 && f <= 1.0, "compression factor in (0, 1]");
+        self.wire_compression = f;
+        self
+    }
+
+    pub fn build(self) -> anyhow::Result<Instance> {
+        anyhow::ensure!(
+            (self.mu + self.lambda - 1.0).abs() < 1e-9,
+            "weights must satisfy μ + λ = 1 (got μ={}, λ={})",
+            self.mu,
+            self.lambda
+        );
+        anyhow::ensure!(self.mu >= 0.0 && self.lambda >= 0.0, "weights must be ≥ 0");
+        anyhow::ensure!(self.data.value() > 0.0, "data size must be positive");
+        anyhow::ensure!(
+            self.beta_s_per_kb > 0.0 && self.gamma_s_per_kb > 0.0,
+            "processing coefficients must be positive"
+        );
+        let inst = Instance {
+            alphas: self.profile.alphas(),
+            data: self.data,
+            beta_s_per_byte: self.beta_s_per_kb / 1024.0,
+            gamma_s_per_byte: self.gamma_s_per_kb / 1024.0,
+            gamma_max_s_per_byte: self.gamma_max_s_per_kb / 1024.0,
+            downlink: DownlinkModel::new(self.rate, self.t_cyc, self.t_con),
+            ground: if self.ground_colocated {
+                GroundCloudLink::colocated()
+            } else {
+                GroundCloudLink::new(self.ground_rate)
+            },
+            gpu: GpuPowerModel::new(
+                self.zeta_kb_per_s * 1024.0,
+                self.p_max,
+                self.p_idle,
+                self.p_leak,
+            ),
+            tx: TransmitPowerModel::new(self.p_off),
+            mu: self.mu,
+            lambda: self.lambda,
+            wire_compression: self.wire_compression,
+        };
+        anyhow::ensure!(
+            inst.gamma_ok(),
+            "constraint (10) violated: γ = {} s/B exceeds γ_max = {} s/B",
+            inst.gamma_s_per_byte,
+            inst.gamma_max_s_per_byte
+        );
+        Ok(inst)
+    }
+}
+
+impl Instance {
+    /// Number of subtasks `K`.
+    pub fn depth(&self) -> usize {
+        self.alphas.len()
+    }
+
+    /// Input bytes of subtask `k` (0-indexed): `α_k · D`.
+    #[inline]
+    pub fn subtask_bytes(&self, k: usize) -> Bytes {
+        Bytes(self.alphas[k] * self.data.value())
+    }
+
+    /// Eq. (1): satellite processing latency of subtask `k`.
+    #[inline]
+    pub fn delta_sat(&self, k: usize) -> Seconds {
+        Seconds(self.subtask_bytes(k).value() * self.beta_s_per_byte)
+    }
+
+    /// Eq. (2): cloud processing latency of subtask `k`.
+    #[inline]
+    pub fn delta_cloud(&self, k: usize) -> Seconds {
+        Seconds(self.subtask_bytes(k).value() * self.gamma_s_per_byte)
+    }
+
+    /// Bytes of subtask `k`'s input as it crosses the wire (after any
+    /// activation compression).
+    #[inline]
+    pub fn wire_bytes(&self, k: usize) -> Bytes {
+        Bytes(self.subtask_bytes(k).value() * self.wire_compression)
+    }
+
+    /// Eq. (3): downlink latency of subtask `k`'s input.
+    pub fn t_down(&self, k: usize) -> Seconds {
+        self.downlink.latency(self.wire_bytes(k))
+    }
+
+    /// Eq. (4): ground→cloud latency of subtask `k`'s input.
+    pub fn t_gc(&self, k: usize) -> Seconds {
+        self.ground.latency(self.wire_bytes(k))
+    }
+
+    /// Eq. (6): satellite processing energy of subtask `k`.
+    pub fn e_sat(&self, k: usize) -> Joules {
+        self.gpu
+            .processing_energy(self.subtask_bytes(k), self.delta_sat(k))
+    }
+
+    /// Eq. (7): transmission energy for subtask `k`'s input (active link
+    /// time only).
+    pub fn e_off(&self, k: usize) -> Joules {
+        self.tx
+            .transmission_energy(self.downlink.transmission_time(self.wire_bytes(k)))
+    }
+
+    /// Constraint (10).
+    pub fn gamma_ok(&self) -> bool {
+        self.gamma_s_per_byte <= self.gamma_max_s_per_byte
+    }
+
+    /// Constraints (11)–(14) for an explicit binary vector `h` (length K).
+    /// (11) is structural (every subtask is somewhere); (12)+(13) require a
+    /// monotone non-increasing prefix vector.
+    pub fn feasible(&self, h: &[bool]) -> bool {
+        if h.len() != self.depth() {
+            return false;
+        }
+        // (13): h_k >= h_{k+1}
+        let monotone = h.windows(2).all(|w| w[0] as u8 >= w[1] as u8);
+        // (12): at most one down-transition — implied by monotone for
+        // binary vectors, kept as an explicit check for fidelity.
+        let transitions = h
+            .windows(2)
+            .filter(|w| w[0] as u8 > w[1] as u8)
+            .count();
+        monotone && transitions <= 1 && self.gamma_ok()
+    }
+
+    /// Split point of a feasible prefix vector.
+    pub fn split_of(&self, h: &[bool]) -> Option<usize> {
+        if !self.feasible(h) {
+            return None;
+        }
+        Some(h.iter().filter(|&&b| b).count())
+    }
+
+    /// Eq. (5) + Eq. (8) for a prefix split `s ∈ 0..=K`: subtasks
+    /// `0..s` on the satellite, `s..K` in the cloud; when `s < K` the input
+    /// of subtask `s` (0-indexed) is downlinked.
+    pub fn evaluate_split(&self, s: usize) -> Costs {
+        let k = self.depth();
+        assert!(s <= k, "split {s} out of range (K = {k})");
+        let mut t_satellite = Seconds::ZERO;
+        let mut e_processing = Joules::ZERO;
+        for i in 0..s {
+            t_satellite += self.delta_sat(i);
+            e_processing += self.e_sat(i);
+        }
+        let mut t_cloud = Seconds::ZERO;
+        for i in s..k {
+            t_cloud += self.delta_cloud(i);
+        }
+        let (t_downlink, t_ground_cloud, e_transmission) = if s < k {
+            (self.t_down(s), self.t_gc(s), self.e_off(s))
+        } else {
+            // all-on-satellite: per Eq. 5/8 no (h_{k-1}-h_k) term fires —
+            // the classification result stays on board.
+            (Seconds::ZERO, Seconds::ZERO, Joules::ZERO)
+        };
+        Costs {
+            latency: t_satellite + t_downlink + t_ground_cloud + t_cloud,
+            energy: e_processing + e_transmission,
+            t_satellite,
+            t_downlink,
+            t_ground_cloud,
+            t_cloud,
+            e_processing,
+            e_transmission,
+        }
+    }
+
+    /// Eq. (5)/(8) for an arbitrary (feasible) binary vector.
+    pub fn evaluate(&self, h: &[bool]) -> Option<Costs> {
+        self.split_of(h).map(|s| self.evaluate_split(s))
+    }
+
+    /// Normalization bounds over the feasible set (all K+1 splits) — the
+    /// paper's `E_min/E_max/T_min/T_max`, plus the weights, packaged as the
+    /// objective.
+    ///
+    /// Computed in a single O(K) prefix/suffix scan (latency and energy of
+    /// split `s+1` differ from split `s` by one subtask changing sides
+    /// plus the transmission term) rather than the naive O(K²) of calling
+    /// [`Instance::evaluate_split`] K+1 times — this function sits on the
+    /// hot path of every solver and every figure sweep (§Perf: 2.0× on
+    /// end-to-end solve at K = 1024).
+    pub fn objective(&self) -> Objective {
+        let k = self.depth();
+        let mut cloud_total = Seconds::ZERO;
+        for i in 0..k {
+            cloud_total += self.delta_cloud(i);
+        }
+        let mut e_min = Joules(f64::INFINITY);
+        let mut e_max = Joules(f64::NEG_INFINITY);
+        let mut t_min = Seconds(f64::INFINITY);
+        let mut t_max = Seconds(f64::NEG_INFINITY);
+        let mut t_sat_prefix = Seconds::ZERO;
+        let mut e_proc_prefix = Joules::ZERO;
+        let mut cloud_suffix = cloud_total;
+        for s in 0..=k {
+            let (t_tx, t_gc, e_tx) = if s < k {
+                (self.t_down(s), self.t_gc(s), self.e_off(s))
+            } else {
+                (Seconds::ZERO, Seconds::ZERO, Joules::ZERO)
+            };
+            let latency = t_sat_prefix + t_tx + t_gc + cloud_suffix;
+            let energy = e_proc_prefix + e_tx;
+            e_min = e_min.min(energy);
+            e_max = e_max.max(energy);
+            t_min = t_min.min(latency);
+            t_max = t_max.max(latency);
+            if s < k {
+                t_sat_prefix += self.delta_sat(s);
+                e_proc_prefix += self.e_sat(s);
+                cloud_suffix -= self.delta_cloud(s);
+            }
+        }
+        Objective {
+            e_min,
+            e_max,
+            t_min,
+            t_max,
+            mu: self.mu,
+            lambda: self.lambda,
+        }
+    }
+
+    /// Evaluate `Z` for a split under this instance's objective.
+    pub fn z_of_split(&self, s: usize, obj: &Objective) -> f64 {
+        obj.z(&self.evaluate_split(s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::profile::ModelProfile;
+    use crate::util::rng::Pcg64;
+
+    pub(crate) fn small_instance() -> Instance {
+        let mut rng = Pcg64::seeded(1);
+        let profile = ModelProfile::sampled(8, &mut rng);
+        InstanceBuilder::new(profile)
+            .data(Bytes::from_gb(10.0))
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_rejects_bad_weights() {
+        let mut rng = Pcg64::seeded(2);
+        let p = ModelProfile::sampled(4, &mut rng);
+        assert!(InstanceBuilder::new(p.clone())
+            .weights(0.7, 0.7)
+            .build()
+            .is_err());
+        assert!(InstanceBuilder::new(p).weights(1.0, 0.0).build().is_ok());
+    }
+
+    #[test]
+    fn builder_rejects_gamma_violation() {
+        let mut rng = Pcg64::seeded(3);
+        let p = ModelProfile::sampled(4, &mut rng);
+        let r = InstanceBuilder::new(p)
+            .gamma_s_per_kb(0.01)
+            .gamma_max_s_per_kb(0.001)
+            .build();
+        assert!(r.is_err(), "constraint (10) must be enforced");
+    }
+
+    #[test]
+    fn eq1_eq2_are_linear_in_alpha_d() {
+        let inst = small_instance();
+        for k in 0..inst.depth() {
+            let expect_sat = inst.alphas[k] * inst.data.value() * inst.beta_s_per_byte;
+            assert!((inst.delta_sat(k).value() - expect_sat).abs() < 1e-9);
+            let expect_cloud = inst.alphas[k] * inst.data.value() * inst.gamma_s_per_byte;
+            assert!((inst.delta_cloud(k).value() - expect_cloud).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn satellite_slower_than_cloud() {
+        // β ≫ γ in every paper scenario
+        let inst = small_instance();
+        for k in 0..inst.depth() {
+            assert!(inst.delta_sat(k) > inst.delta_cloud(k));
+        }
+    }
+
+    #[test]
+    fn feasible_accepts_prefix_vectors_only() {
+        let inst = small_instance();
+        let k = inst.depth();
+        for s in 0..=k {
+            let h: Vec<bool> = (0..k).map(|i| i < s).collect();
+            assert!(inst.feasible(&h), "prefix split {s} must be feasible");
+            assert_eq!(inst.split_of(&h), Some(s));
+        }
+        // non-monotone vector
+        let mut bad = vec![false; k];
+        bad[k - 1] = true;
+        assert!(!inst.feasible(&bad));
+        // wrong length
+        assert!(!inst.feasible(&vec![true; k + 1]));
+    }
+
+    #[test]
+    fn split_0_is_arg_split_k_is_ars() {
+        let inst = small_instance();
+        let k = inst.depth();
+        let arg = inst.evaluate_split(0);
+        // ARG: no satellite compute, no processing energy; pays downlink of D
+        assert_eq!(arg.t_satellite, Seconds::ZERO);
+        assert_eq!(arg.e_processing, Joules::ZERO);
+        assert!(arg.t_downlink.value() > 0.0);
+        assert!(arg.e_transmission.value() > 0.0);
+        let ars = inst.evaluate_split(k);
+        // ARS: no transmission at all
+        assert_eq!(ars.t_downlink, Seconds::ZERO);
+        assert_eq!(ars.e_transmission, Joules::ZERO);
+        assert_eq!(ars.t_cloud, Seconds::ZERO);
+        assert!(ars.e_processing.value() > 0.0);
+    }
+
+    #[test]
+    fn costs_decompose_consistently() {
+        let inst = small_instance();
+        for s in 0..=inst.depth() {
+            let c = inst.evaluate_split(s);
+            let t = c.t_satellite + c.t_downlink + c.t_ground_cloud + c.t_cloud;
+            assert!((c.latency - t).value().abs() < 1e-9);
+            let e = c.e_processing + c.e_transmission;
+            assert!((c.energy - e).value().abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn deeper_split_downlinks_less() {
+        // With a monotone activation profile (real CNNs after pooling),
+        // the transmitted payload shrinks as the split moves later — the
+        // paper's core premise. (The sampled profile's α_k ranges overlap,
+        // so use measured sizes here.)
+        let profile = ModelProfile::from_alphas(
+            "monotone",
+            &[1000.0, 800.0, 400.0, 200.0, 50.0, 10.0],
+        )
+        .unwrap();
+        let inst = InstanceBuilder::new(profile)
+            .data(Bytes::from_gb(10.0))
+            .build()
+            .unwrap();
+        let k = inst.depth();
+        let mut prev = f64::INFINITY;
+        for s in 1..k {
+            let c = inst.evaluate_split(s);
+            assert!(
+                c.e_transmission.value() <= prev,
+                "transmission energy should shrink with later splits"
+            );
+            prev = c.e_transmission.value();
+        }
+    }
+
+    #[test]
+    fn objective_bounds_cover_feasible_set() {
+        let inst = small_instance();
+        let obj = inst.objective();
+        for s in 0..=inst.depth() {
+            let c = inst.evaluate_split(s);
+            assert!(c.energy >= obj.e_min && c.energy <= obj.e_max);
+            assert!(c.latency >= obj.t_min && c.latency <= obj.t_max);
+            let z = obj.z(&c);
+            assert!((0.0..=1.0 + 1e-12).contains(&z), "Z must be in [0,1]: {z}");
+        }
+    }
+
+    #[test]
+    fn degenerate_span_contributes_zero() {
+        let obj = Objective {
+            e_min: Joules(5.0),
+            e_max: Joules(5.0),
+            t_min: Seconds(1.0),
+            t_max: Seconds(2.0),
+            mu: 0.5,
+            lambda: 0.5,
+        };
+        let c = Costs {
+            latency: Seconds(1.5),
+            energy: Joules(5.0),
+            t_satellite: Seconds::ZERO,
+            t_downlink: Seconds::ZERO,
+            t_ground_cloud: Seconds::ZERO,
+            t_cloud: Seconds(1.5),
+            e_processing: Joules(5.0),
+            e_transmission: Joules::ZERO,
+        };
+        assert_eq!(obj.z(&c), 0.5 * 0.0 + 0.5 * 0.5);
+    }
+
+    #[test]
+    fn evaluate_matches_evaluate_split() {
+        let inst = small_instance();
+        let k = inst.depth();
+        for s in 0..=k {
+            let h: Vec<bool> = (0..k).map(|i| i < s).collect();
+            assert_eq!(inst.evaluate(&h).unwrap(), inst.evaluate_split(s));
+        }
+        assert!(inst.evaluate(&vec![false, true]).is_none());
+    }
+
+    #[test]
+    fn wire_compression_shrinks_downlink_only() {
+        let mut rng = Pcg64::seeded(31);
+        let profile = ModelProfile::sampled(8, &mut rng);
+        let raw = InstanceBuilder::new(profile.clone()).build().unwrap();
+        let int8 = InstanceBuilder::new(profile)
+            .wire_compression(0.25)
+            .build()
+            .unwrap();
+        for k in 0..raw.depth() {
+            // compute side unchanged
+            assert_eq!(raw.delta_sat(k), int8.delta_sat(k));
+            assert_eq!(raw.e_sat(k), int8.e_sat(k));
+            // wire side shrinks 4×
+            assert!((int8.wire_bytes(k).value() - raw.wire_bytes(k).value() * 0.25).abs() < 1e-6);
+            assert!(int8.t_down(k) <= raw.t_down(k));
+            assert!(int8.e_off(k) <= raw.e_off(k));
+        }
+        // compressed instances can only improve the optimum
+        let obj_raw = raw.objective();
+        let obj_int8 = int8.objective();
+        let best_raw = (0..=raw.depth())
+            .map(|s| raw.evaluate_split(s).latency.value())
+            .fold(f64::INFINITY, f64::min);
+        let best_int8 = (0..=int8.depth())
+            .map(|s| int8.evaluate_split(s).latency.value())
+            .fold(f64::INFINITY, f64::min);
+        assert!(best_int8 <= best_raw + 1e-9);
+        let _ = (obj_raw, obj_int8);
+    }
+
+    #[test]
+    fn pure_latency_weights_ignore_energy() {
+        let mut rng = Pcg64::seeded(9);
+        let p = ModelProfile::sampled(6, &mut rng);
+        let inst = InstanceBuilder::new(p).weights(0.0, 1.0).build().unwrap();
+        let obj = inst.objective();
+        // Z at the min-latency split must be 0
+        let best_t = (0..=inst.depth())
+            .map(|s| inst.evaluate_split(s).latency)
+            .fold(Seconds(f64::INFINITY), Seconds::min);
+        assert_eq!(best_t, obj.t_min);
+        let z_best = (0..=inst.depth())
+            .map(|s| inst.z_of_split(s, &obj))
+            .fold(f64::INFINITY, f64::min);
+        assert!(z_best.abs() < 1e-12);
+    }
+}

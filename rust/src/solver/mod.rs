@@ -1,0 +1,31 @@
+//! The paper's contribution: energy- and time-aware inference offloading.
+//!
+//! * [`instance`] — the ILP instance: per-subtask latency (Eq. 1–4), total
+//!   latency (Eq. 5), energy (Eq. 6–8), the normalized weighted objective
+//!   `Z` (Eq. 9) and constraints (Eq. 10–14).
+//! * [`bnb`] — **ILPB**, the improved branch-and-bound of Algorithm 1:
+//!   depth-first search over the binary decision vector `H` with
+//!   constraint propagation and an admissible lower bound, returning the
+//!   exact optimum with pruning statistics.
+//! * [`exhaustive`] — the ground-truth oracle: constraints (12)–(13) make
+//!   every feasible `H` a prefix split, so the feasible set has exactly
+//!   `K+1` members; enumerate them all.
+//! * [`dp`] — prefix-sum incremental evaluation of all splits in O(K)
+//!   total (the performance-optimized production path).
+//! * [`baselines`] — the paper's comparison points: ARG (all-on-ground)
+//!   and ARS (all-on-satellite), plus a greedy heuristic ablation.
+//! * [`policy`] — object-safe strategy interface used by the coordinator.
+
+pub mod baselines;
+pub mod bnb;
+pub mod dp;
+pub mod exhaustive;
+pub mod instance;
+pub mod policy;
+
+pub use baselines::{Arg, Ars, Greedy};
+pub use bnb::{BnbStats, Ilpb};
+pub use dp::DpSolver;
+pub use exhaustive::Exhaustive;
+pub use instance::{Costs, Decision, Instance, InstanceBuilder, Objective};
+pub use policy::OffloadPolicy;

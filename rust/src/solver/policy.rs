@@ -1,0 +1,50 @@
+//! Strategy interface: every solver/baseline implements [`OffloadPolicy`],
+//! so the coordinator, benches and figures can swap them uniformly.
+
+use super::instance::{Decision, Instance};
+
+/// An offloading decision procedure.
+pub trait OffloadPolicy {
+    /// Human-readable name used in reports ("ILPB", "ARG", "ARS", ...).
+    fn name(&self) -> &'static str;
+
+    /// Decide the split for one instance.
+    fn decide(&self, inst: &Instance) -> Decision;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::baselines::{Arg, Ars};
+    use crate::solver::bnb::Ilpb;
+    use crate::solver::dp::DpSolver;
+    use crate::solver::exhaustive::Exhaustive;
+    use crate::dnn::profile::ModelProfile;
+    use crate::solver::instance::InstanceBuilder;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn policies_are_object_safe_and_named() {
+        let mut rng = Pcg64::seeded(4);
+        let inst = InstanceBuilder::new(ModelProfile::sampled(5, &mut rng))
+            .build()
+            .unwrap();
+        let policies: Vec<Box<dyn OffloadPolicy>> = vec![
+            Box::new(Ilpb::default()),
+            Box::new(Exhaustive),
+            Box::new(DpSolver),
+            Box::new(Arg),
+            Box::new(Ars),
+        ];
+        let mut names = Vec::new();
+        for p in &policies {
+            let d = p.decide(&inst);
+            assert!(d.split <= inst.depth());
+            assert!(d.z.is_finite());
+            names.push(p.name());
+        }
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 5, "names must be distinct");
+    }
+}

@@ -1,0 +1,253 @@
+//! Command-line argument parsing (`clap` replacement).
+//!
+//! Supports the subset the binaries need: subcommands, `--flag`,
+//! `--key value` / `--key=value` options with typed accessors and defaults,
+//! and positional arguments, plus auto-generated usage text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A declared option, used for usage text and validation.
+#[derive(Debug, Clone)]
+struct Spec {
+    name: String,
+    help: String,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Declarative CLI parser.
+///
+/// ```no_run
+/// # use leo_infer::util::cli::Args;
+/// let args = Args::new("demo", "demo tool")
+///     .opt("seed", "RNG seed", Some("42"))
+///     .flag("verbose", "chatty output")
+///     .parse_from(vec!["--seed".into(), "7".into(), "--verbose".into()])
+///     .unwrap();
+/// assert_eq!(args.get_u64("seed").unwrap(), 7);
+/// assert!(args.flag_set("verbose"));
+/// ```
+#[derive(Debug, Clone)]
+pub struct Args {
+    program: String,
+    about: String,
+    specs: Vec<Spec>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Args {
+            program: program.to_string(),
+            about: about.to_string(),
+            specs: Vec::new(),
+            values: BTreeMap::new(),
+            flags: Vec::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// Declare a value-taking option with optional default.
+    pub fn opt(mut self, name: &str, help: &str, default: Option<&str>) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: true,
+            default: default.map(str::to_string),
+        });
+        self
+    }
+
+    /// Declare a boolean flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    /// Parse `std::env::args()` minus program name.
+    pub fn parse(self) -> anyhow::Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        self.parse_from(argv)
+    }
+
+    /// Parse an explicit argv (testing / subcommand dispatch).
+    pub fn parse_from(mut self, argv: Vec<String>) -> anyhow::Result<Args> {
+        // seed defaults
+        for spec in &self.specs {
+            if let Some(d) = &spec.default {
+                self.values.insert(spec.name.clone(), d.clone());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{name}\n{}", self.usage()))?
+                    .clone();
+                if spec.takes_value {
+                    let value = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow::anyhow!("--{name} requires a value"))?,
+                    };
+                    self.values.insert(name, value);
+                } else {
+                    if inline_val.is_some() {
+                        anyhow::bail!("flag --{name} does not take a value");
+                    }
+                    self.flags.push(name);
+                }
+            } else {
+                self.positional.push(arg);
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.program, self.about);
+        let _ = writeln!(s, "\nUSAGE:\n  {} [OPTIONS] [ARGS...]\n\nOPTIONS:", self.program);
+        for spec in &self.specs {
+            let head = if spec.takes_value {
+                format!("--{} <value>", spec.name)
+            } else {
+                format!("--{}", spec.name)
+            };
+            let default = spec
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "  {head:<28} {}{default}", spec.help);
+        }
+        let _ = writeln!(s, "  {:<28} print this help", "--help");
+        s
+    }
+
+    // ------------------------------------------------------------ accessors
+
+    pub fn flag_set(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_str(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<f64> {
+        let raw = self
+            .values
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
+        raw.parse()
+            .map_err(|e| anyhow::anyhow!("--{name}={raw} is not a number: {e}"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> anyhow::Result<u64> {
+        let raw = self
+            .values
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
+        raw.parse()
+            .map_err(|e| anyhow::anyhow!("--{name}={raw} is not an integer: {e}"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<usize> {
+        Ok(self.get_u64(name)? as usize)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_and_flags() {
+        let a = Args::new("t", "")
+            .opt("seed", "", Some("1"))
+            .opt("model", "", None)
+            .flag("verbose", "")
+            .parse_from(argv(&["--seed", "9", "--model=vgg16", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get_u64("seed").unwrap(), 9);
+        assert_eq!(a.get_str("model").unwrap(), "vgg16");
+        assert!(a.flag_set("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::new("t", "")
+            .opt("seed", "", Some("42"))
+            .parse_from(vec![])
+            .unwrap();
+        assert_eq!(a.get_u64("seed").unwrap(), 42);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let r = Args::new("t", "").parse_from(argv(&["--nope"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let r = Args::new("t", "").opt("x", "", None).parse_from(argv(&["--x"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        let r = Args::new("t", "").flag("v", "").parse_from(argv(&["--v=1"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::new("t", "")
+            .opt("x", "", Some("abc"))
+            .parse_from(vec![])
+            .unwrap();
+        assert!(a.get_f64("x").is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = Args::new("tool", "does things")
+            .opt("seed", "RNG seed", Some("1"))
+            .flag("fast", "skip checks")
+            .usage();
+        assert!(u.contains("--seed"));
+        assert!(u.contains("--fast"));
+        assert!(u.contains("default: 1"));
+    }
+}

@@ -1,0 +1,671 @@
+//! A small, dependency-free JSON implementation (RFC 8259 subset).
+//!
+//! Used for three interchanges:
+//! 1. scenario configuration files ([`crate::config`]),
+//! 2. the AOT artifact manifest written by `python/compile/aot.py`
+//!    ([`crate::runtime::artifacts`]),
+//! 3. machine-readable benchmark/experiment result dumps.
+//!
+//! `serde`/`serde_json` are unavailable in the offline build environment, so
+//! this module is the substrate replacement: a recursive-descent parser and
+//! a pretty/compact writer over a [`Json`] enum, plus ergonomic typed
+//! accessors that produce good error messages for config validation.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed JSON value. Object keys are kept in a `BTreeMap` so that output
+/// is deterministic (stable ordering regardless of insertion order).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+/// Parse or access error with a human-readable location/context.
+#[derive(Debug, thiserror::Error)]
+pub enum JsonError {
+    #[error("json parse error at byte {pos}: {msg}")]
+    Parse { pos: usize, msg: String },
+    #[error("json access error at `{path}`: {msg}")]
+    Access { path: String, msg: String },
+}
+
+impl Json {
+    // ---------------------------------------------------------------- parse
+
+    /// Parse a complete JSON document. Trailing whitespace is allowed;
+    /// trailing garbage is an error.
+    pub fn parse(text: &str) -> Result<Json, JsonError> {
+        let mut p = Parser {
+            bytes: text.as_bytes(),
+            pos: 0,
+        };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(p.err("trailing characters after document"));
+        }
+        Ok(v)
+    }
+
+    // ------------------------------------------------------------ accessors
+
+    /// Typed access helpers: each returns an [`JsonError::Access`] naming
+    /// the key so config errors read like `missing field scenario.orbit.alt_km`.
+    pub fn get<'a>(&'a self, key: &str) -> Result<&'a Json, JsonError> {
+        match self {
+            Json::Obj(m) => m.get(key).ok_or_else(|| JsonError::Access {
+                path: key.to_string(),
+                msg: "missing field".into(),
+            }),
+            _ => Err(JsonError::Access {
+                path: key.to_string(),
+                msg: format!("expected object, found {}", self.type_name()),
+            }),
+        }
+    }
+
+    /// Optional field access — `None` when absent, error when mistyped.
+    pub fn opt<'a>(&'a self, key: &str) -> Option<&'a Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64, JsonError> {
+        match self {
+            Json::Num(x) => Ok(*x),
+            _ => Err(self.type_err("number")),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64, JsonError> {
+        let x = self.as_f64()?;
+        if x < 0.0 || x.fract() != 0.0 || x > u64::MAX as f64 {
+            return Err(self.type_err("non-negative integer"));
+        }
+        Ok(x as u64)
+    }
+
+    pub fn as_usize(&self) -> Result<usize, JsonError> {
+        Ok(self.as_u64()? as usize)
+    }
+
+    pub fn as_bool(&self) -> Result<bool, JsonError> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => Err(self.type_err("bool")),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str, JsonError> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => Err(self.type_err("string")),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json], JsonError> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            _ => Err(self.type_err("array")),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>, JsonError> {
+        match self {
+            Json::Obj(m) => Ok(m),
+            _ => Err(self.type_err("object")),
+        }
+    }
+
+    /// `obj.get_f64("x")` == `obj.get("x")?.as_f64()?` with path context.
+    pub fn get_f64(&self, key: &str) -> Result<f64, JsonError> {
+        self.get(key)?.as_f64().map_err(|e| e.prefix(key))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize, JsonError> {
+        self.get(key)?.as_usize().map_err(|e| e.prefix(key))
+    }
+
+    pub fn get_str(&self, key: &str) -> Result<&str, JsonError> {
+        self.get(key)?.as_str().map_err(|e| e.prefix(key))
+    }
+
+    /// `f64` field with a default when absent.
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, JsonError> {
+        match self.opt(key) {
+            Some(v) => v.as_f64().map_err(|e| e.prefix(key)),
+            None => Ok(default),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, JsonError> {
+        match self.opt(key) {
+            Some(v) => v.as_usize().map_err(|e| e.prefix(key)),
+            None => Ok(default),
+        }
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> Result<&'a str, JsonError> {
+        match self.opt(key) {
+            Some(v) => v.as_str().map_err(|e| e.prefix(key)),
+            None => Ok(default),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool, JsonError> {
+        match self.opt(key) {
+            Some(v) => v.as_bool().map_err(|e| e.prefix(key)),
+            None => Ok(default),
+        }
+    }
+
+    fn type_name(&self) -> &'static str {
+        match self {
+            Json::Null => "null",
+            Json::Bool(_) => "bool",
+            Json::Num(_) => "number",
+            Json::Str(_) => "string",
+            Json::Arr(_) => "array",
+            Json::Obj(_) => "object",
+        }
+    }
+
+    fn type_err(&self, wanted: &str) -> JsonError {
+        JsonError::Access {
+            path: String::new(),
+            msg: format!("expected {wanted}, found {}", self.type_name()),
+        }
+    }
+
+    // -------------------------------------------------------------- writers
+
+    /// Compact single-line encoding.
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        out
+    }
+
+    /// Pretty-printed encoding with 2-space indentation.
+    pub fn to_string_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, Some(2), 0);
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => write_num(out, *x),
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, depth + 1);
+                    item.write(out, indent, depth + 1);
+                }
+                newline_indent(out, indent, depth);
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                if map.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, depth + 1);
+                    write_escaped(out, k);
+                    out.push(':');
+                    if indent.is_some() {
+                        out.push(' ');
+                    }
+                    v.write(out, indent, depth + 1);
+                }
+                newline_indent(out, indent, depth);
+                out.push('}');
+            }
+        }
+    }
+
+    // ---------------------------------------------------------- constructors
+
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
+        Json::Arr(items.into_iter().collect())
+    }
+
+    pub fn num(x: f64) -> Json {
+        Json::Num(x)
+    }
+
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+}
+
+impl JsonError {
+    fn prefix(self, key: &str) -> JsonError {
+        match self {
+            JsonError::Access { path, msg } => JsonError::Access {
+                path: if path.is_empty() {
+                    key.to_string()
+                } else {
+                    format!("{key}.{path}")
+                },
+                msg,
+            },
+            other => other,
+        }
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_string_compact())
+    }
+}
+
+fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
+    if let Some(w) = indent {
+        out.push('\n');
+        for _ in 0..w * depth {
+            out.push(' ');
+        }
+    }
+}
+
+fn write_num(out: &mut String, x: f64) {
+    if x.is_finite() {
+        if x == x.trunc() && x.abs() < 1e15 {
+            out.push_str(&format!("{}", x as i64));
+        } else {
+            // shortest round-trip representation rust provides
+            out.push_str(&format!("{x}"));
+        }
+    } else {
+        // JSON has no Inf/NaN; emit null (documented lossy behaviour)
+        out.push_str("null");
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+// ------------------------------------------------------------------ parser
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: impl Into<String>) -> JsonError {
+        JsonError::Parse {
+            pos: self.pos,
+            msg: msg.into(),
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek()?;
+        self.pos += 1;
+        Some(b)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(format!(
+                "expected '{}', found {:?}",
+                b as char,
+                self.peek().map(|c| c as char)
+            )))
+        }
+    }
+
+    fn literal(&mut self, word: &str, value: Json) -> Result<Json, JsonError> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(value)
+        } else {
+            Err(self.err(format!("invalid literal, expected `{word}`")))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, JsonError> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => Err(self.err(format!("unexpected {:?}", other.map(|c| c as char)))),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, JsonError> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            map.insert(key, val);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(Json::Obj(map)),
+                other => {
+                    self.pos -= other.is_some() as usize;
+                    return Err(self.err("expected ',' or '}' in object"));
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, JsonError> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(Json::Arr(items)),
+                other => {
+                    self.pos -= other.is_some() as usize;
+                    return Err(self.err("expected ',' or ']' in array"));
+                }
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.bump() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => return Ok(s),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => s.push('"'),
+                    Some(b'\\') => s.push('\\'),
+                    Some(b'/') => s.push('/'),
+                    Some(b'b') => s.push('\u{8}'),
+                    Some(b'f') => s.push('\u{c}'),
+                    Some(b'n') => s.push('\n'),
+                    Some(b'r') => s.push('\r'),
+                    Some(b't') => s.push('\t'),
+                    Some(b'u') => {
+                        let cp = self.hex4()?;
+                        // surrogate pair handling
+                        if (0xD800..0xDC00).contains(&cp) {
+                            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                                return Err(self.err("unpaired surrogate"));
+                            }
+                            let lo = self.hex4()?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err(self.err("invalid low surrogate"));
+                            }
+                            let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                            s.push(char::from_u32(c).ok_or_else(|| self.err("bad codepoint"))?);
+                        } else {
+                            s.push(
+                                char::from_u32(cp).ok_or_else(|| self.err("bad codepoint"))?,
+                            );
+                        }
+                    }
+                    other => {
+                        return Err(self.err(format!(
+                            "invalid escape \\{:?}",
+                            other.map(|c| c as char)
+                        )))
+                    }
+                },
+                Some(b) if b < 0x20 => return Err(self.err("control character in string")),
+                Some(b) => {
+                    // re-assemble UTF-8 multibyte sequences
+                    if b < 0x80 {
+                        s.push(b as char);
+                    } else {
+                        let start = self.pos - 1;
+                        let len = utf8_len(b);
+                        let end = start + len;
+                        if end > self.bytes.len() {
+                            return Err(self.err("truncated utf-8"));
+                        }
+                        let chunk = std::str::from_utf8(&self.bytes[start..end])
+                            .map_err(|_| self.err("invalid utf-8"))?;
+                        s.push_str(chunk);
+                        self.pos = end;
+                    }
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let c = self.bump().ok_or_else(|| self.err("truncated \\u escape"))?;
+            let d = (c as char)
+                .to_digit(16)
+                .ok_or_else(|| self.err("invalid hex digit"))?;
+            v = v * 16 + d;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|e| self.err(format!("bad number `{text}`: {e}")))
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        0xF0..=0xF7 => 4,
+        _ => 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars() {
+        for text in ["null", "true", "false", "0", "-1", "3.5", "1e3", "\"hi\""] {
+            let v = Json::parse(text).unwrap();
+            let back = Json::parse(&v.to_string_compact()).unwrap();
+            assert_eq!(v, back, "{text}");
+        }
+    }
+
+    #[test]
+    fn parse_nested_document() {
+        let doc = r#"{
+            "name": "tiansuan",
+            "orbit": {"alt_km": 500.0, "inclination_deg": 97.4},
+            "rates_mbps": [10, 50, 100],
+            "enabled": true,
+            "note": null
+        }"#;
+        let v = Json::parse(doc).unwrap();
+        assert_eq!(v.get_str("name").unwrap(), "tiansuan");
+        assert_eq!(v.get("orbit").unwrap().get_f64("alt_km").unwrap(), 500.0);
+        assert_eq!(v.get("rates_mbps").unwrap().as_arr().unwrap().len(), 3);
+        assert!(v.get("enabled").unwrap().as_bool().unwrap());
+        assert_eq!(*v.get("note").unwrap(), Json::Null);
+    }
+
+    #[test]
+    fn error_paths_name_fields() {
+        let v = Json::parse(r#"{"orbit": {"alt_km": "oops"}}"#).unwrap();
+        let err = v.get("orbit").unwrap().get_f64("alt_km").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("alt_km"), "{msg}");
+        assert!(msg.contains("expected number"), "{msg}");
+    }
+
+    #[test]
+    fn missing_field_is_error_with_key() {
+        let v = Json::parse(r#"{}"#).unwrap();
+        let err = v.get_f64("beta").unwrap_err();
+        assert!(err.to_string().contains("beta"));
+    }
+
+    #[test]
+    fn defaults_apply_only_when_absent() {
+        let v = Json::parse(r#"{"x": 2}"#).unwrap();
+        assert_eq!(v.f64_or("x", 9.0).unwrap(), 2.0);
+        assert_eq!(v.f64_or("y", 9.0).unwrap(), 9.0);
+        assert!(v.f64_or("x", 9.0).is_ok());
+        let bad = Json::parse(r#"{"x": "s"}"#).unwrap();
+        assert!(bad.f64_or("x", 9.0).is_err(), "mistyped field must error");
+    }
+
+    #[test]
+    fn string_escapes_roundtrip() {
+        let original = Json::Str("line\nquote\"slash\\tab\tünïcode❤".to_string());
+        let text = original.to_string_compact();
+        assert_eq!(Json::parse(&text).unwrap(), original);
+    }
+
+    #[test]
+    fn unicode_escape_and_surrogates() {
+        assert_eq!(
+            Json::parse(r#""Aé""#).unwrap(),
+            Json::Str("Aé".into())
+        );
+        assert_eq!(
+            Json::parse(r#""😀""#).unwrap(),
+            Json::Str("😀".into())
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in [
+            "", "{", "[1,", "{\"a\":}", "tru", "1.2.3", "\"unterminated",
+            "{\"a\":1} trailing", "[1 2]", "{'single':1}",
+        ] {
+            assert!(Json::parse(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn pretty_print_is_parseable_and_stable() {
+        let v = Json::obj(vec![
+            ("b", Json::num(1.0)),
+            ("a", Json::arr([Json::num(1.0), Json::str("x")])),
+        ]);
+        let pretty = v.to_string_pretty();
+        assert_eq!(Json::parse(&pretty).unwrap(), v);
+        // BTreeMap ⇒ keys serialize sorted
+        assert!(pretty.find("\"a\"").unwrap() < pretty.find("\"b\"").unwrap());
+    }
+
+    #[test]
+    fn integers_written_without_exponent() {
+        assert_eq!(Json::num(1e6).to_string_compact(), "1000000");
+        assert_eq!(Json::num(0.5).to_string_compact(), "0.5");
+    }
+
+    #[test]
+    fn large_number_roundtrip() {
+        let v = Json::parse("1073741824000").unwrap(); // 1000 GB in bytes
+        assert_eq!(v.as_f64().unwrap(), 1_073_741_824_000.0);
+        assert_eq!(v.as_u64().unwrap(), 1_073_741_824_000);
+    }
+}

@@ -1,0 +1,67 @@
+//! Minimal `log` backend (env_logger replacement).
+//!
+//! Writes `LEVEL target: message` lines to stderr with a monotonic
+//! timestamp since logger initialization. Level is controlled by
+//! `LEO_INFER_LOG` (`error|warn|info|debug|trace`, default `info`).
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let level = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:10.4}s] {level} {}: {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger. Safe to call multiple times (subsequent calls are
+/// no-ops). Returns the active level.
+pub fn init() -> LevelFilter {
+    let level = match std::env::var("LEO_INFER_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    };
+    let logger = Box::new(StderrLogger {
+        start: Instant::now(),
+    });
+    if log::set_boxed_logger(logger).is_ok() {
+        log::set_max_level(level);
+    }
+    log::max_level()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_idempotent() {
+        let a = init();
+        let b = init();
+        assert_eq!(a, b);
+        log::info!("logging smoke test");
+    }
+}

@@ -1,0 +1,12 @@
+//! Supporting infrastructure built from scratch for the offline
+//! environment: deterministic RNG + distributions, a JSON
+//! parser/serializer, descriptive statistics, a CLI argument parser, a
+//! `log` backend, and strongly-typed physical units.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod units;

