@@ -18,7 +18,7 @@ use leo_infer::orbit::contact::ContactSchedule;
 use leo_infer::orbit::eclipse::eclipse_fraction;
 use leo_infer::orbit::geometry::GroundStation;
 use leo_infer::sim::workload::{PoissonWorkload, Request, SizeDist};
-use leo_infer::solver::{Ilpb, OffloadPolicy};
+use leo_infer::solver::{SolveRequest, SolverRegistry};
 use leo_infer::util::rng::Pcg64;
 use leo_infer::util::units::{Bytes, Seconds};
 
@@ -58,11 +58,14 @@ fn main() -> anyhow::Result<()> {
         schedules.push((t_cyc, t_con));
     }
 
-    // offloading decisions with orbit-derived contact parameters
+    // offloading decisions with orbit-derived contact parameters; one
+    // engine serves the whole fleet, so satellites with near-identical
+    // contact geometry share cached decisions
     let mut rng = Pcg64::seeded(0xC0457);
     let profile = ModelProfile::sampled(10, &mut rng);
+    let engine = SolverRegistry::engine("ilpb")?;
     println!("\nper-satellite ILPB decisions for a 50 GB capture:");
-    println!("{:<10} {:>7} {:>14} {:>14}", "sat", "split", "latency(s)", "energy(J)");
+    println!("{:<10} {:>7} {:>14} {:>14} {:>8}", "sat", "split", "latency(s)", "energy(J)", "cached");
     for (id, sat) in constellation.satellites.iter().enumerate() {
         let (t_cyc, t_con) = schedules[id];
         let mut scen = Scenario::tiansuan();
@@ -72,13 +75,14 @@ fn main() -> anyhow::Result<()> {
             .instance_builder(profile.clone())
             .data(Bytes::from_gb(50.0))
             .build()?;
-        let d = Ilpb::default().decide(&inst);
+        let out = engine.solve(&SolveRequest::new(inst));
         println!(
-            "{:<10} {:>7} {:>14.1} {:>14.1}",
+            "{:<10} {:>7} {:>14.1} {:>14.1} {:>8}",
             sat.name,
-            d.split,
-            d.costs.latency.value(),
-            d.costs.energy.value()
+            out.decision.split,
+            out.decision.costs.latency.value(),
+            out.decision.costs.energy.value(),
+            out.cached,
         );
     }
 

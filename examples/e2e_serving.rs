@@ -25,7 +25,7 @@ use leo_infer::runtime::artifacts::Manifest;
 use leo_infer::runtime::pjrt::StageRuntime;
 use leo_infer::runtime::split::SplitExecutor;
 use leo_infer::sim::workload::Request;
-use leo_infer::solver::Ilpb;
+use leo_infer::solver::SolverRegistry;
 use leo_infer::util::units::{BitsPerSec, Bytes, Seconds};
 use std::time::Instant;
 
@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
     let scheduler = Scheduler::new(
         scenario.instance_builder(profile.clone()),
         vec![profile],
-        Box::new(Ilpb::default()),
+        SolverRegistry::engine("ilpb")?,
     );
 
     let config = ServerConfig {

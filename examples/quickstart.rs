@@ -1,17 +1,18 @@
-//! Quickstart: solve one offloading decision and print it.
+//! Quickstart: solve one offloading decision through the engine API.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Builds the paper's Tiansuan scenario, profiles VGG-16 analytically,
-//! solves the ILP with the ILPB branch-and-bound, and compares against the
-//! ARG / ARS baselines.
+//! Builds the paper's Tiansuan scenario, profiles a DNN, constructs a
+//! solver **by registry name**, and solves a [`SolveRequest`] — once cold,
+//! once telemetry-constrained, once from the decision cache — then
+//! compares against the ARG / ARS baselines.
 
 use leo_infer::config::Scenario;
 use leo_infer::dnn::{models, profile::ModelProfile};
-use leo_infer::solver::{Arg, Ars, Ilpb, OffloadPolicy};
-use leo_infer::util::units::Bytes;
+use leo_infer::solver::{SolveRequest, SolverRegistry, Telemetry};
+use leo_infer::util::units::{Bytes, Seconds};
 
 fn main() -> anyhow::Result<()> {
     leo_infer::util::logging::init();
@@ -44,42 +45,66 @@ fn main() -> anyhow::Result<()> {
         .data(Bytes::from_gb(500.0))
         .build()?;
 
-    // 4. Solve with the paper's algorithm and both baselines.
-    let (decision, stats) = Ilpb::default().solve(&inst);
+    // 4. Pick the paper's algorithm by registry name and solve.
+    let engine = SolverRegistry::engine("ilpb")?;
+    let outcome = engine.solve(&SolveRequest::new(inst.clone()));
+    let d = &outcome.decision;
     println!(
-        "\nILPB: split after subtask {} of {} (Z = {:.4})",
-        decision.split,
+        "\n{}: split after subtask {} of {} (Z = {:.4}, solved in {:.2} ms)",
+        outcome.solver,
+        d.split,
         inst.depth(),
-        decision.z
-    );
-    println!(
-        "  search: {} nodes, {} leaves, {} pruned",
-        stats.nodes, stats.leaves, stats.pruned
+        d.z,
+        outcome.wall_s * 1e3,
     );
     println!(
         "  latency {:>12.1} s  = sat {:.1} + downlink {:.1} + wan {:.1} + cloud {:.1}",
-        decision.costs.latency.value(),
-        decision.costs.t_satellite.value(),
-        decision.costs.t_downlink.value(),
-        decision.costs.t_ground_cloud.value(),
-        decision.costs.t_cloud.value(),
+        d.costs.latency.value(),
+        d.costs.t_satellite.value(),
+        d.costs.t_downlink.value(),
+        d.costs.t_ground_cloud.value(),
+        d.costs.t_cloud.value(),
     );
     println!(
         "  energy  {:>12.1} J  = processing {:.1} + transmission {:.1}",
-        decision.costs.energy.value(),
-        decision.costs.e_processing.value(),
-        decision.costs.e_transmission.value(),
+        d.costs.energy.value(),
+        d.costs.e_processing.value(),
+        d.costs.e_transmission.value(),
     );
 
-    for policy in [&Arg as &dyn OffloadPolicy, &Ars] {
-        let d = policy.decide(&inst);
+    // 5. The same request with live telemetry: 90 seconds of contact
+    //    window left means a big boundary activation cannot move — the
+    //    engine tightens the feasible splits before accepting the answer.
+    let constrained = engine.solve(
+        &SolveRequest::new(inst.clone())
+            .with_telemetry(Telemetry::unconstrained().with_contact_remaining(Seconds(90.0))),
+    );
+    println!(
+        "\nwith 90 s of window left: split {} (tightened: {})",
+        constrained.decision.split, constrained.tightened,
+    );
+
+    // 6. Repeat the original request: the decision cache answers it.
+    let replay = engine.solve(&SolveRequest::new(inst.clone()));
+    println!(
+        "replayed request: cached = {}, identical split {} (engine: {} solves, {} hits)",
+        replay.cached,
+        replay.decision.split,
+        engine.stats().solves,
+        engine.stats().cache_hits,
+    );
+
+    // 7. The paper's baselines, also by registry name.
+    for name in ["arg", "ars"] {
+        let baseline = SolverRegistry::engine(name)?;
+        let out = baseline.solve(&SolveRequest::new(inst.clone()));
         println!(
             "\n{:<4}: split {} — Z = {:.4}, latency {:.1} s, energy {:.1} J",
-            policy.name(),
-            d.split,
-            d.z,
-            d.costs.latency.value(),
-            d.costs.energy.value(),
+            out.solver,
+            out.decision.split,
+            out.decision.z,
+            out.decision.costs.latency.value(),
+            out.decision.costs.energy.value(),
         );
     }
     Ok(())

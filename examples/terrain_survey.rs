@@ -20,7 +20,7 @@ use leo_infer::sim::contact::PeriodicContact;
 use leo_infer::sim::entities::SatelliteState;
 use leo_infer::sim::runner::{SimConfig, Simulator};
 use leo_infer::sim::workload::{PoissonWorkload, SizeDist};
-use leo_infer::solver::{Arg, Ars, Ilpb, OffloadPolicy};
+use leo_infer::solver::SolverRegistry;
 use leo_infer::util::rng::Pcg64;
 use leo_infer::util::units::{Bytes, Joules, Seconds};
 
@@ -61,11 +61,8 @@ fn main() -> anyhow::Result<()> {
         "{:<6} {:>8} {:>9} {:>12} {:>12} {:>10}",
         "algo", "served", "rejected", "energy(J)", "final SoC", "mean lat(s)"
     );
-    for policy in [
-        &Ilpb::default() as &dyn OffloadPolicy,
-        &Arg,
-        &Ars,
-    ] {
+    for name in ["ilpb", "arg", "ars"] {
+        let engine = SolverRegistry::engine(name)?;
         let config = SimConfig {
             template: scenario.instance_builder(profile.clone()),
             profiles: vec![profile.clone()],
@@ -80,11 +77,11 @@ fn main() -> anyhow::Result<()> {
             panel,
             sunlit,
         );
-        let result = Simulator::new(config).with_satellite(sat).run(&trace, policy);
+        let result = Simulator::new(config).with_satellite(sat).run(&trace, &engine);
         let m = &result.metrics;
         println!(
             "{:<6} {:>8} {:>9} {:>12.1} {:>11.1}% {:>10.1}",
-            policy.name(),
+            engine.policy_name(),
             m.completed(),
             m.rejected,
             result.state.energy_drawn.value(),

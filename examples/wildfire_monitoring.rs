@@ -16,7 +16,7 @@ use leo_infer::dnn::profile::ModelProfile;
 use leo_infer::sim::contact::PeriodicContact;
 use leo_infer::sim::runner::{SimConfig, Simulator};
 use leo_infer::sim::workload::{PoissonWorkload, SizeDist};
-use leo_infer::solver::{Arg, Ars, Ilpb, OffloadPolicy};
+use leo_infer::solver::SolverRegistry;
 use leo_infer::util::rng::Pcg64;
 use leo_infer::util::units::{Bytes, Seconds};
 
@@ -50,11 +50,8 @@ fn main() -> anyhow::Result<()> {
         "{:<6} {:>10} {:>12} {:>12} {:>12} {:>14}",
         "algo", "served", "mean lat(s)", "p99 lat(s)", "energy(J)", "downlinked(GB)"
     );
-    for policy in [
-        &Ilpb::default() as &dyn OffloadPolicy,
-        &Arg,
-        &Ars,
-    ] {
+    for name in ["ilpb", "arg", "ars"] {
+        let engine = SolverRegistry::engine(name)?;
         let config = SimConfig {
             template: scenario.instance_builder(profile.clone()),
             profiles: vec![profile.clone()],
@@ -64,11 +61,11 @@ fn main() -> anyhow::Result<()> {
             ),
             horizon,
         };
-        let result = Simulator::new(config).run(&trace, policy);
+        let result = Simulator::new(config).run(&trace, &engine);
         let m = &result.metrics;
         println!(
             "{:<6} {:>10} {:>12.1} {:>12.1} {:>12.1} {:>14.2}",
-            policy.name(),
+            engine.policy_name(),
             m.completed(),
             m.mean_latency().value(),
             m.latency_p99().value(),

@@ -21,7 +21,7 @@ use leo_infer::dnn::profile::ModelProfile;
 use leo_infer::sim::contact::PeriodicContact;
 use leo_infer::sim::runner::{SimConfig, Simulator};
 use leo_infer::sim::workload::{fixed_trace, PoissonWorkload, SizeDist};
-use leo_infer::solver::{Arg, Ars, Ilpb, OffloadPolicy};
+use leo_infer::solver::{Ilpb, OffloadPolicy, SolverEngine, SolverRegistry};
 use leo_infer::util::rng::Pcg64;
 use leo_infer::util::units::{Bytes, Seconds};
 
@@ -48,9 +48,13 @@ fn main() {
     );
     for rate in [10.0, 30.0, 50.0, 70.0, 100.0] {
         let scen = Scenario::tiansuan().with_rate_mbps(rate);
-        for policy in [&Arg as &dyn OffloadPolicy, &Ars, &Ilpb::default()] {
+        let engines: Vec<SolverEngine> = ["arg", "ars", "ilpb"]
+            .iter()
+            .map(|n| SolverRegistry::engine(n).unwrap())
+            .collect();
+        for engine in &engines {
             let trace = fixed_trace(1, Seconds(0.0), Bytes::from_gb(2.0));
-            let result = Simulator::new(config(&scen, &profile)).run(&trace, policy);
+            let result = Simulator::new(config(&scen, &profile)).run(&trace, engine);
             let rec = &result.metrics.records[0];
             let inst = scen
                 .instance_builder(profile.clone())
@@ -86,7 +90,7 @@ fn main() {
             println!(
                 "{:>8.0} {:>6} {:>14.1} {:>14.1} {:>12.1} {:>10}",
                 rate,
-                policy.name(),
+                engine.policy_name(),
                 rec.latency.value(),
                 closed.latency.value(),
                 gap,
@@ -110,7 +114,8 @@ fn main() {
             SizeDist::Fixed(Bytes::from_gb(2.0)),
         )
         .generate(Seconds::from_hours(200.0), &mut wl_rng);
-        let result = Simulator::new(config(&scen, &profile)).run(&trace, &Ilpb::default());
+        let result = Simulator::new(config(&scen, &profile))
+            .run(&trace, &SolverRegistry::engine("ilpb").unwrap());
         let inst = scen
             .instance_builder(profile.clone())
             .data(Bytes::from_gb(2.0))

@@ -27,7 +27,7 @@ use leo_infer::runtime::pjrt::StageRuntime;
 use leo_infer::runtime::split::SplitExecutor;
 use leo_infer::runtime::tensor::HostTensor;
 use leo_infer::sim::workload::Request;
-use leo_infer::solver::Ilpb;
+use leo_infer::solver::SolverRegistry;
 use leo_infer::util::units::{BitsPerSec, Bytes, Seconds};
 
 fn main() -> anyhow::Result<()> {
@@ -109,7 +109,7 @@ fn main() -> anyhow::Result<()> {
         let scheduler = Scheduler::new(
             scenario.instance_builder(profile.clone()),
             vec![profile],
-            Box::new(Ilpb::default()),
+            SolverRegistry::engine("ilpb")?,
         );
         let m2 = Manifest::load("artifacts")?;
         let factory: ExecutorFactory = if mock {

@@ -14,7 +14,9 @@ mod common;
 use common::{banner, fmt_time, time_median};
 use leo_infer::dnn::profile::ModelProfile;
 use leo_infer::solver::bnb::{naive_2k_search, Ilpb};
-use leo_infer::solver::{DpSolver, Exhaustive, OffloadPolicy};
+use leo_infer::solver::{
+    DpSolver, Exhaustive, OffloadPolicy, SolveRequest, SolverRegistry,
+};
 use leo_infer::solver::instance::InstanceBuilder;
 use leo_infer::util::rng::Pcg64;
 use leo_infer::util::units::Bytes;
@@ -131,5 +133,67 @@ fn main() {
             let _ = Ilpb::default().solve(&inst);
         });
         println!("K = {k:<3}  {} per decision", fmt_time(t));
+    }
+
+    banner("decision cache on a repeated-instance workload (SolverEngine)");
+    // Serving traffic repeats: a batcher flushes fixed payload buckets, a
+    // constellation reuses one scenario template. Model it as 2000
+    // requests drawn round-robin from 20 distinct instances and measure
+    // what the engine's LRU saves over solving every request.
+    {
+        let distinct: Vec<_> = (0..20).map(|i| instance(256, 1000 + i)).collect();
+        let requests: Vec<SolveRequest> = (0..2000)
+            .map(|i| SolveRequest::new(distinct[i % distinct.len()].clone()))
+            .collect();
+
+        let raw = SolverRegistry::policy("ilpb").unwrap();
+        let t_raw = time_median(1, 5, || {
+            for r in &requests {
+                let _ = raw.decide(&r.instance);
+            }
+        });
+
+        let t_engine = time_median(1, 5, || {
+            let engine = SolverRegistry::engine("ilpb").unwrap();
+            for r in &requests {
+                let _ = engine.solve(r);
+            }
+        });
+
+        let engine = SolverRegistry::engine("ilpb").unwrap();
+        for r in &requests {
+            let _ = engine.solve(r);
+        }
+        let stats = engine.stats();
+        // decisions must be unchanged by the cache
+        for (i, r) in requests.iter().enumerate() {
+            let cached = engine.solve(r).decision;
+            let fresh = raw.decide(&r.instance);
+            assert!(
+                (cached.z - fresh.z).abs() < 1e-12 && cached.split == fresh.split,
+                "request {i}: cache changed the optimum"
+            );
+        }
+        println!(
+            "{} requests over {} distinct instances (K = 256):",
+            requests.len(),
+            distinct.len()
+        );
+        println!(
+            "  solves {}  cache hits {}  → {:.1}% of solves skipped",
+            stats.solves,
+            stats.cache_hits,
+            stats.hit_rate() * 100.0
+        );
+        println!(
+            "  wall: {} uncached vs {} through the engine ({:.1}× speedup), optima identical",
+            fmt_time(t_raw),
+            fmt_time(t_engine),
+            t_raw / t_engine
+        );
+        assert!(
+            stats.hit_rate() >= 0.9,
+            "repeated workload must skip ≥90% of solves"
+        );
     }
 }

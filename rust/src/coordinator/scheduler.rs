@@ -1,14 +1,16 @@
 //! Batch scheduling: solver decision → execution plan.
 //!
 //! A batch shares one split decision (all members run the same model, and
-//! the accelerator executes them together): the scheduler solves the ILP
-//! for the batch's combined data size, then emits the stage ranges for the
+//! the accelerator executes them together): the scheduler builds the ILP
+//! instance for the batch's combined data size, solves it through the
+//! [`SolverEngine`] — live telemetry tightening the feasible splits, the
+//! decision cache absorbing repeats — and emits the stage ranges for the
 //! on-board and cloud halves plus the downlink payload.
 
 use super::batcher::Batch;
 use crate::dnn::profile::ModelProfile;
+use crate::solver::engine::{SolveOutcome, SolverEngine, Telemetry};
 use crate::solver::instance::{Decision, InstanceBuilder};
-use crate::solver::policy::OffloadPolicy;
 use crate::util::units::Bytes;
 use std::ops::Range;
 
@@ -20,6 +22,11 @@ pub struct ExecutionPlan {
     pub split: usize,
     /// Solver decision (costs, Z) for reporting.
     pub decision: Decision,
+    /// True when the decision came from the engine's cache rather than a
+    /// fresh solve.
+    pub cached: bool,
+    /// Wall time the solve cost this plan, seconds (≈0 on cache hits).
+    pub solve_wall_s: f64,
     /// Stage indices executed on board: `0..split`.
     pub onboard_stages: Range<usize>,
     /// Stage indices executed in the cloud: `split..K`.
@@ -48,11 +55,11 @@ impl Default for ClassWeights {
     }
 }
 
-/// The scheduler: owns the scenario template and the offloading policy.
+/// The scheduler: owns the scenario template and the solving engine.
 pub struct Scheduler {
     template: InstanceBuilder,
     profiles: Vec<ModelProfile>,
-    policy: Box<dyn OffloadPolicy + Send + Sync>,
+    engine: SolverEngine,
     /// When set, batches containing any class-1 request solve under the
     /// alert weights and pure-survey batches under the survey weights,
     /// overriding the template's (μ, λ).
@@ -63,13 +70,13 @@ impl Scheduler {
     pub fn new(
         template: InstanceBuilder,
         profiles: Vec<ModelProfile>,
-        policy: Box<dyn OffloadPolicy + Send + Sync>,
+        engine: SolverEngine,
     ) -> Self {
         assert!(!profiles.is_empty());
         Scheduler {
             template,
             profiles,
-            policy,
+            engine,
             class_weights: None,
         }
     }
@@ -81,18 +88,65 @@ impl Scheduler {
     }
 
     pub fn policy_name(&self) -> &'static str {
-        self.policy.name()
+        self.engine.policy_name()
+    }
+
+    /// The solving engine (cache/tightening statistics live here).
+    pub fn engine(&self) -> &SolverEngine {
+        &self.engine
     }
 
     pub fn profiles(&self) -> &[ModelProfile] {
         &self.profiles
     }
 
-    /// Plan a batch: solve for the combined payload.
+    /// Plan a batch with no live context (full battery, steady-state
+    /// contact model).
     pub fn plan(&self, batch: Batch) -> anyhow::Result<ExecutionPlan> {
+        self.plan_with_telemetry(batch, Telemetry::unconstrained())
+    }
+
+    /// Plan a batch under live platform telemetry: solve for the combined
+    /// payload with the engine tightening infeasible splits away.
+    pub fn plan_with_telemetry(
+        &self,
+        batch: Batch,
+        telemetry: Telemetry,
+    ) -> anyhow::Result<ExecutionPlan> {
         anyhow::ensure!(!batch.is_empty(), "cannot plan an empty batch");
+        let inst = self.instance_for(&batch)?;
+        let outcome = self.engine.solve_parts(&inst, &telemetry);
+        Ok(assemble(batch, &inst, outcome))
+    }
+
+    /// Plan several batches at once — the `decide_batch` path: identical
+    /// instances (same model, same combined payload, same telemetry)
+    /// share one solve through the engine's batch dedup + cache.
+    pub fn plan_all(
+        &self,
+        batches: Vec<(Batch, Telemetry)>,
+    ) -> anyhow::Result<Vec<ExecutionPlan>> {
+        let mut requests = Vec::with_capacity(batches.len());
+        for (batch, telemetry) in &batches {
+            anyhow::ensure!(!batch.is_empty(), "cannot plan an empty batch");
+            requests.push(
+                crate::solver::engine::SolveRequest::new(self.instance_for(batch)?)
+                    .with_telemetry(*telemetry),
+            );
+        }
+        let outcomes = self.engine.solve_batch(&requests);
+        Ok(batches
+            .into_iter()
+            .zip(requests)
+            .zip(outcomes)
+            .map(|(((batch, _), req), outcome)| assemble(batch, &req.instance, outcome))
+            .collect())
+    }
+
+    /// Build the batch's ILP instance: template + combined payload +
+    /// class-weighted objective.
+    fn instance_for(&self, batch: &Batch) -> anyhow::Result<crate::solver::Instance> {
         let profile = self.profiles[batch.model % self.profiles.len()].clone();
-        let k = profile.depth();
         let total: Bytes = batch.requests.iter().map(|r| r.data).sum();
         let mut builder = self.template.clone().profile(profile).data(total);
         if let Some(w) = self.class_weights {
@@ -100,22 +154,29 @@ impl Scheduler {
             let (mu, lambda) = if critical { w.alert } else { w.survey };
             builder = builder.weights(mu, lambda);
         }
-        let inst = builder.build()?;
-        let decision = self.policy.decide(&inst);
-        let split = decision.split;
-        let downlink_bytes = if split < k {
-            inst.subtask_bytes(split)
-        } else {
-            Bytes::ZERO
-        };
-        Ok(ExecutionPlan {
-            batch,
-            split,
-            decision,
-            onboard_stages: 0..split,
-            cloud_stages: split..k,
-            downlink_bytes,
-        })
+        builder.build()
+    }
+
+}
+
+/// Turn a solved batch into its execution plan.
+fn assemble(batch: Batch, inst: &crate::solver::Instance, outcome: SolveOutcome) -> ExecutionPlan {
+    let k = inst.depth();
+    let split = outcome.decision.split;
+    let downlink_bytes = if split < k {
+        inst.subtask_bytes(split)
+    } else {
+        Bytes::ZERO
+    };
+    ExecutionPlan {
+        batch,
+        split,
+        decision: outcome.decision,
+        cached: outcome.cached,
+        solve_wall_s: outcome.wall_s,
+        onboard_stages: 0..split,
+        cloud_stages: split..k,
+        downlink_bytes,
     }
 }
 
@@ -125,6 +186,7 @@ mod tests {
     use crate::sim::workload::Request;
     use crate::solver::baselines::{Arg, Ars};
     use crate::solver::bnb::Ilpb;
+    use crate::solver::engine::BoxedPolicy;
     use crate::util::units::Seconds;
 
     fn profile() -> ModelProfile {
@@ -147,8 +209,12 @@ mod tests {
         }
     }
 
-    fn scheduler(policy: Box<dyn OffloadPolicy + Send + Sync>) -> Scheduler {
-        Scheduler::new(InstanceBuilder::new(profile()), vec![profile()], policy)
+    fn scheduler(policy: BoxedPolicy) -> Scheduler {
+        Scheduler::new(
+            InstanceBuilder::new(profile()),
+            vec![profile()],
+            SolverEngine::new(policy),
+        )
     }
 
     #[test]
@@ -188,13 +254,58 @@ mod tests {
     }
 
     #[test]
+    fn repeated_batches_hit_the_decision_cache() {
+        let s = scheduler(Box::new(Ilpb::default()));
+        let first = s.plan(batch(4, 2.0)).unwrap();
+        assert!(!first.cached);
+        let second = s.plan(batch(4, 2.0)).unwrap();
+        assert!(second.cached, "identical batch must reuse the decision");
+        assert_eq!(second.decision, first.decision);
+        assert_eq!(s.engine().stats().solves, 1);
+    }
+
+    #[test]
+    fn plan_all_amortizes_identical_batches() {
+        let s = scheduler(Box::new(Ilpb::default()));
+        let batches: Vec<(Batch, Telemetry)> = (0..8)
+            .map(|_| (batch(4, 2.0), Telemetry::unconstrained()))
+            .collect();
+        let plans = s.plan_all(batches).unwrap();
+        assert_eq!(plans.len(), 8);
+        assert_eq!(s.engine().stats().solves, 1, "one solve for 8 batches");
+        for p in &plans[1..] {
+            assert_eq!(p.decision, plans[0].decision);
+        }
+    }
+
+    #[test]
+    fn telemetry_flows_through_planning() {
+        // a nearly-closed contact window forbids any transmitting split
+        let s = scheduler(Box::new(Arg));
+        let free = s.plan(batch(2, 10.0)).unwrap();
+        assert_eq!(free.split, 0, "ARG without telemetry is bent-pipe");
+        let tight = s
+            .plan_with_telemetry(
+                batch(2, 10.0),
+                Telemetry::unconstrained().with_contact_remaining(Seconds(0.001)),
+            )
+            .unwrap();
+        assert_eq!(
+            tight.split,
+            profile().depth(),
+            "closed window forces on-board completion"
+        );
+        assert_eq!(tight.downlink_bytes, Bytes::ZERO);
+    }
+
+    #[test]
     fn class_weights_steer_the_split() {
         // alert batches solve latency-heavy, survey batches energy-heavy;
         // at minimum the Z evaluations must use different objectives
         let s = Scheduler::new(
             InstanceBuilder::new(profile()),
             vec![profile()],
-            Box::new(Ilpb::default()),
+            SolverEngine::new(Box::new(Ilpb::default())),
         )
         .with_class_weights(ClassWeights::default());
         let mut alert = batch(2, 10.0);
@@ -224,5 +335,15 @@ mod tests {
             formed_at: Seconds::ZERO,
         };
         assert!(s.plan(empty).is_err());
+        assert!(s
+            .plan_all(vec![(
+                Batch {
+                    model: 0,
+                    requests: vec![],
+                    formed_at: Seconds::ZERO,
+                },
+                Telemetry::unconstrained()
+            )])
+            .is_err());
     }
 }

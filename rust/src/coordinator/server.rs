@@ -17,6 +17,7 @@ use super::scheduler::{ExecutionPlan, Scheduler};
 use super::state::{ClusterState, SatelliteInfo};
 use crate::link::downlink::DownlinkModel;
 use crate::sim::workload::Request;
+use crate::solver::engine::Telemetry;
 use crate::util::units::{Bytes, Seconds};
 use std::collections::BTreeMap;
 use std::sync::mpsc;
@@ -249,15 +250,38 @@ impl Server {
         Ok(out)
     }
 
+    /// Live context for a solve on this satellite: battery SoC and queue
+    /// depth from cluster state, plus the admission deadline when the
+    /// batch carries a latency-critical request. The steady-state contact
+    /// model stays with the instance (Eq. 3 already amortizes windows),
+    /// so `contact_remaining` is not forced here.
+    fn telemetry_for(&self, sat: usize, batch: &super::batcher::Batch) -> Telemetry {
+        let mut t = Telemetry::unconstrained();
+        if let Some(info) = self.cluster.get(sat) {
+            t = t.with_queue_depth(info.queue_depth);
+            if info.soc < 1.0 {
+                t = t.with_battery_soc(info.soc.clamp(0.0, 1.0));
+            }
+        }
+        if let Some(deadline) = self.admission.critical_deadline {
+            if batch.requests.iter().any(|r| r.class == 1) {
+                t = t.with_deadline(deadline);
+            }
+        }
+        t
+    }
+
     fn dispatch(&mut self, sat: usize, batch: super::batcher::Batch) -> anyhow::Result<()> {
-        let plan = self.scheduler.plan(batch)?;
+        let telemetry = self.telemetry_for(sat, &batch);
+        let plan = self.scheduler.plan_with_telemetry(batch, telemetry)?;
         log::debug!(
-            "dispatch sat-{sat}: batch of {} (model {}), split {} / {} ({})",
+            "dispatch sat-{sat}: batch of {} (model {}), split {} / {} ({}{})",
             plan.batch.len(),
             plan.batch.model,
             plan.split,
             plan.cloud_stages.end,
             self.scheduler.policy_name(),
+            if plan.cached { ", cached" } else { "" },
         );
         self.workers
             .get(&sat)
@@ -305,7 +329,7 @@ impl StageExecutor for MockExecutor {
 mod tests {
     use super::*;
     use crate::dnn::profile::ModelProfile;
-    use crate::solver::bnb::Ilpb;
+    use crate::solver::engine::SolverRegistry;
     use crate::solver::instance::InstanceBuilder;
     use crate::util::units::BitsPerSec;
 
@@ -318,7 +342,7 @@ mod tests {
         let scheduler = Scheduler::new(
             template,
             vec![profile()],
-            Box::new(Ilpb::default()),
+            SolverRegistry::engine("ilpb").unwrap(),
         );
         let config = ServerConfig {
             routing: RoutingPolicy::RoundRobin,
@@ -432,8 +456,11 @@ mod tests {
     #[test]
     fn mock_executor_reports_model_costs() {
         let template = InstanceBuilder::new(profile());
-        let scheduler =
-            Scheduler::new(template, vec![profile()], Box::new(Ilpb::default()));
+        let scheduler = Scheduler::new(
+            template,
+            vec![profile()],
+            SolverRegistry::engine("ilpb").unwrap(),
+        );
         let plan = scheduler
             .plan(super::super::batcher::Batch {
                 model: 0,

@@ -9,11 +9,13 @@
 
 use crate::config::Scenario;
 use crate::dnn::profile::ModelProfile;
-use crate::solver::baselines::{Arg, Ars};
-use crate::solver::bnb::Ilpb;
+use crate::solver::engine::{SolverEngine, SolverRegistry};
 use crate::solver::policy::OffloadPolicy;
 use crate::util::rng::Pcg64;
 use crate::util::stats::{mean, Summary};
+
+/// Registry keys of the three algorithms every paper figure compares.
+const FIGURE_POLICIES: [&str; 3] = ["ilpb", "arg", "ars"];
 
 /// Per-algorithm aggregate at one sweep point.
 #[derive(Debug, Clone)]
@@ -37,15 +39,15 @@ pub struct SweepPoint {
 /// Evaluate the three paper algorithms at one scenario configuration
 /// across `seeds` independent draws.
 pub fn evaluate_point(base: &Scenario, x: f64, seeds: u64, seed0: u64) -> SweepPoint {
-    let policies: [(&'static str, Box<dyn OffloadPolicy>); 3] = [
-        ("ILPB", Box::new(Ilpb::default())),
-        ("ARG", Box::new(Arg)),
-        ("ARS", Box::new(Ars)),
-    ];
-    let mut energy: Vec<Vec<f64>> = vec![Vec::new(); 3];
-    let mut time: Vec<Vec<f64>> = vec![Vec::new(); 3];
-    let mut zval: Vec<Vec<f64>> = vec![Vec::new(); 3];
-    let mut splits: Vec<Vec<f64>> = vec![Vec::new(); 3];
+    let engines: Vec<SolverEngine> = FIGURE_POLICIES
+        .iter()
+        .map(|name| SolverRegistry::engine(name).expect("registered policy"))
+        .collect();
+    let n = engines.len();
+    let mut energy: Vec<Vec<f64>> = vec![Vec::new(); n];
+    let mut time: Vec<Vec<f64>> = vec![Vec::new(); n];
+    let mut zval: Vec<Vec<f64>> = vec![Vec::new(); n];
+    let mut splits: Vec<Vec<f64>> = vec![Vec::new(); n];
 
     for seed in 0..seeds {
         let mut rng = Pcg64::new(seed0 ^ seed, 42);
@@ -57,8 +59,8 @@ pub fn evaluate_point(base: &Scenario, x: f64, seeds: u64, seed0: u64) -> SweepP
             .instance_builder(profile)
             .build()
             .expect("scenario must be valid");
-        for (i, (_, p)) in policies.iter().enumerate() {
-            let d = p.decide(&inst);
+        for (i, e) in engines.iter().enumerate() {
+            let d = e.decide(&inst);
             energy[i].push(d.costs.energy.value());
             time[i].push(d.costs.latency.value());
             zval[i].push(d.z);
@@ -68,11 +70,11 @@ pub fn evaluate_point(base: &Scenario, x: f64, seeds: u64, seed0: u64) -> SweepP
 
     SweepPoint {
         x,
-        algos: policies
+        algos: engines
             .iter()
             .enumerate()
-            .map(|(i, (name, _))| AlgoPoint {
-                name,
+            .map(|(i, e)| AlgoPoint {
+                name: e.policy_name(),
                 energy_j: Summary::of(&energy[i]),
                 time_s: Summary::of(&time[i]),
                 z: Summary::of(&zval[i]),

@@ -7,8 +7,11 @@
 //! The paper's contribution — choosing, per inference request, which prefix
 //! of DNN layers runs on the energy-constrained satellite and which suffix
 //! is offloaded to a cloud data center — lives in [`solver`] (ILP instance +
-//! the ILPB branch-and-bound of Algorithm 1). Everything the paper's
-//! evaluation *depends on* is built as a first-class substrate:
+//! the ILPB branch-and-bound of Algorithm 1, behind the
+//! [`solver::engine::SolverEngine`] serving API: telemetry-driven
+//! constraint tightening, an LRU decision cache, and string-keyed solver
+//! construction via [`solver::engine::SolverRegistry`]). Everything the
+//! paper's evaluation *depends on* is built as a first-class substrate:
 //!
 //! * [`orbit`] — orbital mechanics: propagation, ground-station visibility,
 //!   contact windows (the paper's `t_cyc` / `t_con` derived from geometry).
@@ -29,8 +32,9 @@
 //! as crates is implemented in [`util`] (deterministic RNG, JSON, stats,
 //! CLI parsing, logging) and [`config`] (typed scenario configuration).
 //!
-//! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
-//! measured-vs-paper results.
+//! See `DESIGN.md` (repository root) for the per-experiment index and
+//! `EXPERIMENTS.md` (repository root) for measured-vs-paper results; the
+//! top-level `README.md` has the build-and-run quickstart.
 
 pub mod config;
 pub mod coordinator;

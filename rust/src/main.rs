@@ -14,7 +14,7 @@
 
 use leo_infer::config::Scenario;
 use leo_infer::dnn::{models, profile::ModelProfile};
-use leo_infer::solver::{Arg, Ars, DpSolver, Exhaustive, Greedy, Ilpb, OffloadPolicy};
+use leo_infer::solver::{SolveRequest, SolverRegistry};
 use leo_infer::util::cli::Args;
 use leo_infer::util::rng::Pcg64;
 use leo_infer::util::units::{Bytes, Seconds};
@@ -43,18 +43,6 @@ fn main() -> anyhow::Result<()> {
             Ok(())
         }
     }
-}
-
-fn policy_by_name(name: &str) -> anyhow::Result<Box<dyn OffloadPolicy>> {
-    Ok(match name {
-        "ilpb" => Box::new(Ilpb::default()),
-        "exhaustive" => Box::new(Exhaustive),
-        "dp" => Box::new(DpSolver),
-        "arg" => Box::new(Arg),
-        "ars" => Box::new(Ars),
-        "greedy" => Box::new(Greedy),
-        other => anyhow::bail!("unknown policy `{other}` (ilpb|exhaustive|dp|arg|ars|greedy)"),
-    })
 }
 
 fn profile_for(model: &str, depth: usize, rng: &mut Pcg64) -> anyhow::Result<ModelProfile> {
@@ -92,6 +80,7 @@ fn scenario_from(args: &Args) -> anyhow::Result<Scenario> {
 }
 
 fn solve(argv: Vec<String>) -> anyhow::Result<()> {
+    let policy_help = SolverRegistry::help();
     let args = Args::new("leo-infer solve", "solve one offloading decision")
         .opt("scenario", "tiansuan | tx-dominant | path/to/scenario.json", Some("tiansuan"))
         .opt("model", "zoo name | sampled | measured", Some("vgg16"))
@@ -99,7 +88,7 @@ fn solve(argv: Vec<String>) -> anyhow::Result<()> {
         .opt("data-gb", "request size D in GB (empty = preset)", Some(""))
         .opt("rate-mbps", "satellite-ground rate (empty = preset)", Some(""))
         .opt("lambda", "latency weight, μ = 1−λ (empty = preset)", Some(""))
-        .opt("policy", "ilpb|exhaustive|dp|arg|ars|greedy", Some("ilpb"))
+        .opt("policy", &policy_help, Some("ilpb"))
         .opt("seed", "RNG seed", Some("42"))
         .parse_from(argv)?;
     let mut rng = Pcg64::seeded(args.get_u64("seed")?);
@@ -110,14 +99,16 @@ fn solve(argv: Vec<String>) -> anyhow::Result<()> {
         &mut rng,
     )?;
     let inst = scenario.instance_builder(profile).build()?;
-    let policy = policy_by_name(args.get_str("policy").unwrap())?;
-    let d = policy.decide(&inst);
+    let engine = SolverRegistry::engine(args.get_str("policy").unwrap())?;
+    let outcome = engine.solve(&SolveRequest::new(inst.clone()));
+    let d = outcome.decision;
     println!(
-        "{}: split {} of {} | Z = {:.4}",
-        policy.name(),
+        "{}: split {} of {} | Z = {:.4} | solved in {:.2} ms",
+        outcome.solver,
         d.split,
         inst.depth(),
-        d.z
+        d.z,
+        outcome.wall_s * 1e3
     );
     println!(
         "latency {:.1} s (sat {:.1} + down {:.1} + wan {:.1} + cloud {:.1})",
@@ -142,9 +133,10 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
     use leo_infer::sim::runner::{SimConfig, Simulator};
     use leo_infer::sim::workload::{PoissonWorkload, SizeDist};
 
+    let policy_help = SolverRegistry::help();
     let args = Args::new("leo-infer simulate", "discrete-event workload simulation")
         .opt("scenario", "tiansuan | tx-dominant | path", Some("tiansuan"))
-        .opt("policy", "ilpb|dp|arg|ars|greedy", Some("ilpb"))
+        .opt("policy", &policy_help, Some("ilpb"))
         .opt("hours", "simulation horizon", Some("48"))
         .opt("interarrival-s", "mean capture spacing", Some("1800"))
         .opt("data-gb", "max request size (log-uniform from 1/10th)", Some("8"))
@@ -163,7 +155,7 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
     )
     .generate(horizon, &mut rng);
     let profile = ModelProfile::sampled(args.get_usize("depth")?, &mut rng);
-    let policy = policy_by_name(args.get_str("policy").unwrap())?;
+    let engine = SolverRegistry::engine(args.get_str("policy").unwrap())?;
     let config = SimConfig {
         template: scenario.instance_builder(profile.clone()),
         profiles: vec![profile],
@@ -173,7 +165,7 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
         ),
         horizon,
     };
-    let result = Simulator::new(config).run(&trace, policy.as_ref());
+    let result = Simulator::new(config).run(&trace, &engine);
     let m = &result.metrics;
     println!(
         "requests    : {} submitted, {} completed, {} rejected",
@@ -193,6 +185,14 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
     );
     println!("downlinked  : {:.2} GB", m.total_downlinked.gb());
     println!("throughput  : {:.4} req/s", m.throughput(horizon));
+    let stats = engine.stats();
+    println!(
+        "solver      : {} solves, {} cache hits ({:.1}% skipped), {:.1} ms solving",
+        stats.solves,
+        stats.cache_hits,
+        stats.hit_rate() * 100.0,
+        stats.solve_time_s * 1e3
+    );
     Ok(())
 }
 
@@ -345,7 +345,7 @@ fn serve(argv: Vec<String>) -> anyhow::Result<()> {
     let scheduler = Scheduler::new(
         scenario.instance_builder(profile.clone()),
         vec![profile],
-        Box::new(Ilpb::default()),
+        SolverRegistry::engine("ilpb")?,
     );
     let m2 = Manifest::load("artifacts")?;
     let factory: ExecutorFactory = Box::new(move || {

@@ -139,7 +139,6 @@ mod tests {
     use crate::coordinator::scheduler::Scheduler;
     use crate::runtime::artifacts::Manifest;
     use crate::sim::workload::Request;
-    use crate::solver::bnb::Ilpb;
     use crate::solver::instance::InstanceBuilder;
     use crate::util::units::{Bytes, Seconds};
     use std::path::PathBuf;
@@ -161,16 +160,10 @@ mod tests {
 
     fn plan_for(m: &Manifest, n_requests: usize, split_policy: &str) -> ExecutionPlan {
         let profile = m.measured_profile(1).unwrap();
-        let policy: Box<dyn crate::solver::policy::OffloadPolicy + Send + Sync> =
-            match split_policy {
-                "arg" => Box::new(crate::solver::baselines::Arg),
-                "ars" => Box::new(crate::solver::baselines::Ars),
-                _ => Box::new(Ilpb::default()),
-            };
         let scheduler = Scheduler::new(
             InstanceBuilder::new(profile.clone()),
             vec![profile],
-            policy,
+            crate::solver::engine::SolverRegistry::engine(split_policy).unwrap(),
         );
         scheduler
             .plan(Batch {

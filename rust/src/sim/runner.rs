@@ -19,8 +19,8 @@ use super::engine::EventQueue;
 use super::entities::SatelliteState;
 use super::metrics::{RequestRecord, SimMetrics};
 use super::workload::Request;
+use crate::solver::engine::{SolverEngine, Telemetry};
 use crate::solver::instance::{Instance, InstanceBuilder};
-use crate::solver::policy::OffloadPolicy;
 use crate::dnn::profile::ModelProfile;
 use crate::util::units::{Bytes, Joules, Seconds};
 
@@ -96,7 +96,13 @@ impl Simulator {
     }
 
     /// Run the scenario to completion (all events drained or horizon hit).
-    pub fn run(mut self, requests: &[Request], policy: &dyn OffloadPolicy) -> SimResult {
+    ///
+    /// Decisions go through the [`SolverEngine`]: repeated request shapes
+    /// (fixed-size capture traces, the common case) reuse cached
+    /// decisions instead of re-solving per arrival. The DES models the
+    /// physical battery/contact constraints itself, so requests solve
+    /// under unconstrained telemetry.
+    pub fn run(mut self, requests: &[Request], engine: &SolverEngine) -> SimResult {
         let mut q: EventQueue<Event> = EventQueue::new();
         let mut metrics = SimMetrics::new();
         let mut flights: Vec<Option<Flight>> = vec![None; requests.len()];
@@ -113,7 +119,7 @@ impl Simulator {
                 Event::Arrival(i) => {
                     let req = &requests[i];
                     let inst = self.instance_for(req);
-                    let decision = policy.decide(&inst);
+                    let decision = engine.solve_parts(&inst, &Telemetry::unconstrained()).decision;
                     let s = decision.split;
                     let k = inst.depth();
 
@@ -241,10 +247,13 @@ fn complete(
 mod tests {
     use super::*;
     use crate::sim::workload::fixed_trace;
-    use crate::solver::baselines::{Arg, Ars};
-    use crate::solver::bnb::Ilpb;
+    use crate::solver::engine::SolverRegistry;
     use crate::util::rng::Pcg64;
     use crate::util::units::BitsPerSec;
+
+    fn engine(name: &str) -> SolverEngine {
+        SolverRegistry::engine(name).unwrap()
+    }
 
     fn profile() -> ModelProfile {
         ModelProfile::from_alphas(
@@ -274,7 +283,7 @@ mod tests {
         // split 0, arrival at t=0 (window-aligned): DES latency == Eq. 5.
         let cfg = config(100.0);
         let trace = fixed_trace(1, Seconds(0.0), Bytes::from_gb(2.0));
-        let result = Simulator::new(cfg).run(&trace, &Arg);
+        let result = Simulator::new(cfg).run(&trace, &engine("arg"));
         assert_eq!(result.metrics.completed(), 1);
         let inst = InstanceBuilder::new(profile())
             .rate(BitsPerSec::from_mbps(100.0))
@@ -298,7 +307,7 @@ mod tests {
     fn single_ars_request_matches_closed_form() {
         let cfg = config(100.0);
         let trace = fixed_trace(1, Seconds(0.0), Bytes::from_mb(100.0));
-        let result = Simulator::new(cfg).run(&trace, &Ars);
+        let result = Simulator::new(cfg).run(&trace, &engine("ars"));
         assert_eq!(result.metrics.completed(), 1);
         let inst = InstanceBuilder::new(profile())
             .rate(BitsPerSec::from_mbps(100.0))
@@ -319,7 +328,7 @@ mod tests {
         // first to finish processing.
         let cfg = config(100.0);
         let trace = fixed_trace(2, Seconds(0.0), Bytes::from_mb(100.0));
-        let result = Simulator::new(cfg).run(&trace, &Ars);
+        let result = Simulator::new(cfg).run(&trace, &engine("ars"));
         assert_eq!(result.metrics.completed(), 2);
         let l0 = result.metrics.records[0].latency.value();
         let l1 = result.metrics.records[1].latency.value();
@@ -334,8 +343,8 @@ mod tests {
         let cfg_a = config(50.0);
         let cfg_b = config(50.0);
         let trace = fixed_trace(5, Seconds(10.0), Bytes::from_gb(1.0));
-        let arg = Simulator::new(cfg_a).run(&trace, &Arg);
-        let ilpb = Simulator::new(cfg_b).run(&trace, &Ilpb::default());
+        let arg = Simulator::new(cfg_a).run(&trace, &engine("arg"));
+        let ilpb = Simulator::new(cfg_b).run(&trace, &engine("ilpb"));
         assert!(ilpb.metrics.total_downlinked <= arg.metrics.total_downlinked);
         assert_eq!(ilpb.metrics.completed(), 5);
     }
@@ -352,7 +361,7 @@ mod tests {
             1.0,
         );
         let trace = fixed_trace(10, Seconds(1.0), Bytes::from_gb(5.0));
-        let result = Simulator::new(cfg).with_satellite(sat).run(&trace, &Ars);
+        let result = Simulator::new(cfg).with_satellite(sat).run(&trace, &engine("ars"));
         assert!(
             result.metrics.rejected > 0,
             "energy-starved satellite must reject work"
@@ -373,8 +382,8 @@ mod tests {
             )
             .generate(Seconds::from_hours(24.0), &mut rng)
         };
-        let a = Simulator::new(config(60.0)).run(&trace, &Ilpb::default());
-        let b = Simulator::new(config(60.0)).run(&trace, &Ilpb::default());
+        let a = Simulator::new(config(60.0)).run(&trace, &engine("ilpb"));
+        let b = Simulator::new(config(60.0)).run(&trace, &engine("ilpb"));
         assert_eq!(a.metrics.completed(), b.metrics.completed());
         assert_eq!(a.metrics.mean_latency(), b.metrics.mean_latency());
         assert_eq!(a.metrics.total_downlinked, b.metrics.total_downlinked);

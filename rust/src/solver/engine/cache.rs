@@ -1,0 +1,364 @@
+//! The decision cache: an exact LRU keyed by a quantized instance
+//! fingerprint.
+//!
+//! At serving scale the same decision problem recurs constantly — a
+//! batcher flushes identical payload sizes, a sensor emits fixed-size
+//! tiles, a sweep revisits the same scenario point. A solve is pure
+//! (instance + telemetry → decision), so repeat requests can return the
+//! *bit-identical* previous decision instead of paying the solver again.
+//!
+//! The key is a 64-bit hash of the instance's economically meaningful
+//! fields with every float quantized to ~1e-5 *relative* precision (see
+//! [`quantize`]): physically indistinguishable instances collide on
+//! purpose, while any change a solver could act on produces a new key.
+//! Telemetry that tightens constraints is folded into the key, so a
+//! constrained and an unconstrained solve of the same instance never
+//! alias.
+//!
+//! Eviction is true least-recently-used via an index-linked list over a
+//! slab — O(1) get/insert, no allocation churn after warm-up.
+
+use crate::solver::instance::{Decision, Instance};
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+
+use super::telemetry::Telemetry;
+
+/// Sentinel for "no neighbor" in the intrusive list.
+const NIL: usize = usize::MAX;
+
+/// What the engine memoizes per fingerprint: the decision plus whether
+/// the producing solve was repaired by telemetry tightening (so cache
+/// hits can report it faithfully).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CachedDecision {
+    pub decision: Decision,
+    pub tightened: bool,
+}
+
+/// The engine's decision cache.
+pub type DecisionCache = LruCache<CachedDecision>;
+
+struct Node<V> {
+    key: u64,
+    value: V,
+    prev: usize,
+    next: usize,
+}
+
+/// Fixed-capacity LRU map from 64-bit fingerprints to values.
+pub struct LruCache<V> {
+    capacity: usize,
+    map: HashMap<u64, usize>,
+    nodes: Vec<Node<V>>,
+    /// Most recently used.
+    head: usize,
+    /// Least recently used (evicted first).
+    tail: usize,
+}
+
+impl<V> LruCache<V> {
+    /// `capacity = 0` disables caching entirely (every lookup misses).
+    pub fn new(capacity: usize) -> Self {
+        LruCache {
+            capacity,
+            map: HashMap::with_capacity(capacity.min(4096)),
+            nodes: Vec::with_capacity(capacity.min(4096)),
+            head: NIL,
+            tail: NIL,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Look up a fingerprint, promoting it to most-recently-used.
+    pub fn get(&mut self, key: u64) -> Option<&V> {
+        let &idx = self.map.get(&key)?;
+        self.detach(idx);
+        self.push_front(idx);
+        Some(&self.nodes[idx].value)
+    }
+
+    /// Insert (or refresh) a value, evicting the LRU entry when full.
+    pub fn insert(&mut self, key: u64, value: V) {
+        if self.capacity == 0 {
+            return;
+        }
+        if let Some(&idx) = self.map.get(&key) {
+            self.nodes[idx].value = value;
+            self.detach(idx);
+            self.push_front(idx);
+            return;
+        }
+        let idx = if self.map.len() >= self.capacity {
+            // recycle the LRU slot
+            let idx = self.tail;
+            self.detach(idx);
+            self.map.remove(&self.nodes[idx].key);
+            self.nodes[idx].key = key;
+            self.nodes[idx].value = value;
+            idx
+        } else {
+            self.nodes.push(Node {
+                key,
+                value,
+                prev: NIL,
+                next: NIL,
+            });
+            self.nodes.len() - 1
+        };
+        self.map.insert(key, idx);
+        self.push_front(idx);
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.nodes.clear();
+        self.head = NIL;
+        self.tail = NIL;
+    }
+
+    fn detach(&mut self, idx: usize) {
+        let (prev, next) = (self.nodes[idx].prev, self.nodes[idx].next);
+        if prev != NIL {
+            self.nodes[prev].next = next;
+        } else if self.head == idx {
+            self.head = next;
+        }
+        if next != NIL {
+            self.nodes[next].prev = prev;
+        } else if self.tail == idx {
+            self.tail = prev;
+        }
+        self.nodes[idx].prev = NIL;
+        self.nodes[idx].next = NIL;
+    }
+
+    fn push_front(&mut self, idx: usize) {
+        self.nodes[idx].prev = NIL;
+        self.nodes[idx].next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+}
+
+/// Quantize a float to ~1e-5 relative precision as a hashable integer.
+///
+/// Log-domain rounding keeps the precision *relative* across the many
+/// orders of magnitude instance parameters span (bytes to hundreds of GB,
+/// seconds to days): values closer than one part in ~10⁵ collide, values
+/// a solver could distinguish do not. Zero, sign, and non-finite values
+/// get reserved encodings disjoint from every ln-domain bucket (ln(1.0)
+/// rounds to 0, so zero must NOT share that encoding — a 0.0-vs-1.0
+/// aliasing here would replay decisions across different constraints).
+pub fn quantize(x: f64) -> i64 {
+    if x == 0.0 {
+        return i64::MIN + 2;
+    }
+    if x.is_nan() {
+        return i64::MIN;
+    }
+    if x.is_infinite() {
+        return if x > 0.0 { i64::MAX } else { i64::MIN + 1 };
+    }
+    let mag = (x.abs().ln() * 1e5).round() as i64;
+    if x > 0.0 {
+        mag
+    } else {
+        // offset keeps negative values disjoint from positive ones
+        mag ^ (1 << 62)
+    }
+}
+
+/// 64-bit fingerprint of everything a solve depends on: the instance's
+/// quantized parameters plus any telemetry that tightens constraints.
+pub fn fingerprint(inst: &Instance, telemetry: &Telemetry) -> u64 {
+    let mut h = DefaultHasher::new();
+    inst.alphas.len().hash(&mut h);
+    for &a in &inst.alphas {
+        quantize(a).hash(&mut h);
+    }
+    quantize(inst.data.value()).hash(&mut h);
+    quantize(inst.beta_s_per_byte).hash(&mut h);
+    quantize(inst.gamma_s_per_byte).hash(&mut h);
+    quantize(inst.gamma_max_s_per_byte).hash(&mut h);
+    quantize(inst.downlink.rate.value()).hash(&mut h);
+    quantize(inst.downlink.contact_period.value()).hash(&mut h);
+    quantize(inst.downlink.contact_duration.value()).hash(&mut h);
+    inst.ground.colocated.hash(&mut h);
+    quantize(inst.ground.rate.value()).hash(&mut h);
+    quantize(inst.gpu.zeta_bytes_per_s).hash(&mut h);
+    quantize(inst.gpu.p_max.value()).hash(&mut h);
+    quantize(inst.gpu.p_idle.value()).hash(&mut h);
+    quantize(inst.gpu.p_leak.value()).hash(&mut h);
+    quantize(inst.tx.p_off.value()).hash(&mut h);
+    quantize(inst.mu).hash(&mut h);
+    quantize(inst.lambda).hash(&mut h);
+    quantize(inst.wire_compression).hash(&mut h);
+    // telemetry folds in only when it can change the answer
+    if !telemetry.is_unconstrained() {
+        quantize(telemetry.battery_soc).hash(&mut h);
+        telemetry.contact_remaining.is_some().hash(&mut h);
+        if let Some(t) = telemetry.contact_remaining {
+            quantize(t.value()).hash(&mut h);
+        }
+        telemetry.deadline.is_some().hash(&mut h);
+        if let Some(d) = telemetry.deadline {
+            quantize(d.value()).hash(&mut h);
+            telemetry.queue_depth.hash(&mut h);
+        }
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::profile::ModelProfile;
+    use crate::solver::instance::InstanceBuilder;
+    use crate::util::rng::Pcg64;
+    use crate::util::units::{Bytes, Seconds};
+
+    fn decision(split: usize) -> Decision {
+        let mut rng = Pcg64::seeded(1);
+        let inst = InstanceBuilder::new(ModelProfile::sampled(4, &mut rng))
+            .build()
+            .unwrap();
+        let obj = inst.objective();
+        Decision::new(split, inst.z_of_split(split, &obj), inst.evaluate_split(split), 4)
+    }
+
+    #[test]
+    fn lru_evicts_oldest_first() {
+        let mut c = LruCache::new(2);
+        c.insert(1, decision(0));
+        c.insert(2, decision(1));
+        assert!(c.get(1).is_some()); // 1 is now MRU
+        c.insert(3, decision(2)); // evicts 2
+        assert!(c.get(2).is_none());
+        assert!(c.get(1).is_some());
+        assert!(c.get(3).is_some());
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn reinsert_refreshes_in_place() {
+        let mut c = LruCache::new(2);
+        c.insert(1, decision(0));
+        c.insert(2, decision(1));
+        c.insert(1, decision(3)); // refresh, 2 becomes LRU
+        c.insert(4, decision(2)); // evicts 2
+        assert_eq!(c.get(1).unwrap().split, 3);
+        assert!(c.get(2).is_none());
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let mut c = LruCache::new(0);
+        c.insert(1, decision(0));
+        assert!(c.get(1).is_none());
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn single_slot_cache_works() {
+        let mut c = LruCache::new(1);
+        c.insert(1, decision(0));
+        c.insert(2, decision(1));
+        assert!(c.get(1).is_none());
+        assert_eq!(c.get(2).unwrap().split, 1);
+    }
+
+    #[test]
+    fn quantize_is_relative() {
+        // closer than 1e-6 relative: same bucket
+        assert_eq!(quantize(1234.5), quantize(1234.5 * (1.0 + 1e-7)));
+        // 1e-3 apart: different buckets
+        assert_ne!(quantize(1234.5), quantize(1234.5 * 1.001));
+        // scale-free: the same relative gap distinguishes tiny values too
+        assert_ne!(quantize(1e-9), quantize(1.001e-9));
+        // zero is NOT the ln-domain bucket of 1.0 (ln 1 = 0)
+        assert_ne!(quantize(0.0), quantize(1.0));
+        assert_ne!(quantize(2.0), quantize(-2.0));
+        assert_ne!(quantize(f64::INFINITY), quantize(f64::NEG_INFINITY));
+        assert_ne!(quantize(0.0), quantize(f64::NEG_INFINITY));
+    }
+
+    #[test]
+    fn fingerprint_separates_what_matters() {
+        let mut rng = Pcg64::seeded(7);
+        let profile = ModelProfile::sampled(6, &mut rng);
+        let base = InstanceBuilder::new(profile.clone())
+            .data(Bytes::from_gb(10.0))
+            .build()
+            .unwrap();
+        let same = InstanceBuilder::new(profile.clone())
+            .data(Bytes::from_gb(10.0))
+            .build()
+            .unwrap();
+        let bigger = InstanceBuilder::new(profile.clone())
+            .data(Bytes::from_gb(20.0))
+            .build()
+            .unwrap();
+        let reweighted = InstanceBuilder::new(profile.clone())
+            .data(Bytes::from_gb(10.0))
+            .weights(0.9, 0.1)
+            .build()
+            .unwrap();
+        let t = Telemetry::default();
+        assert_eq!(fingerprint(&base, &t), fingerprint(&same, &t));
+        assert_ne!(fingerprint(&base, &t), fingerprint(&bigger, &t));
+        assert_ne!(fingerprint(&base, &t), fingerprint(&reweighted, &t));
+        // the 0.0-vs-1.0 regression: pure-energy and pure-latency
+        // objectives swap (μ, λ) between 0 and 1 and must never alias
+        let pure_energy = InstanceBuilder::new(profile.clone())
+            .data(Bytes::from_gb(10.0))
+            .weights(1.0, 0.0)
+            .build()
+            .unwrap();
+        let pure_latency = InstanceBuilder::new(profile)
+            .data(Bytes::from_gb(10.0))
+            .weights(0.0, 1.0)
+            .build()
+            .unwrap();
+        assert_ne!(
+            fingerprint(&pure_energy, &t),
+            fingerprint(&pure_latency, &t)
+        );
+    }
+
+    #[test]
+    fn telemetry_changes_the_key_only_when_constraining() {
+        let mut rng = Pcg64::seeded(8);
+        let inst = InstanceBuilder::new(ModelProfile::sampled(5, &mut rng))
+            .build()
+            .unwrap();
+        let free = Telemetry::default();
+        // queue depth without a deadline tightens nothing ⇒ same key
+        let queued = Telemetry::default().with_queue_depth(9);
+        assert_eq!(fingerprint(&inst, &free), fingerprint(&inst, &queued));
+        let low_batt = Telemetry::default().with_battery_soc(0.4);
+        assert_ne!(fingerprint(&inst, &free), fingerprint(&inst, &low_batt));
+        let rushed = Telemetry::default().with_deadline(Seconds(100.0));
+        assert_ne!(fingerprint(&inst, &free), fingerprint(&inst, &rushed));
+        let rushed_queued = rushed.with_queue_depth(3);
+        assert_ne!(fingerprint(&inst, &rushed), fingerprint(&inst, &rushed_queued));
+    }
+}

@@ -1,0 +1,585 @@
+//! The context-aware solving engine — the public API every consumer goes
+//! through.
+//!
+//! The paper's algorithms ([`crate::solver::OffloadPolicy`] implementors)
+//! are pure functions of a static [`Instance`]. A serving system needs
+//! three things on top, and this module is where they live:
+//!
+//! * **Telemetry-driven constraint tightening** — a [`SolveRequest`]
+//!   carries [`Telemetry`] (battery SoC, remaining contact time, queue
+//!   depth, deadline); the engine removes feasible splits the live
+//!   context rules out and, when the wrapped policy's answer lands in the
+//!   removed region, repairs it to the best split that survives.
+//! * **A decision cache** — solves are pure, so repeated instances (the
+//!   common case under batched traffic) return the bit-identical prior
+//!   [`Decision`] from an LRU keyed by a quantized instance fingerprint
+//!   ([`cache`]), skipping the solver entirely.
+//! * **Uniform construction** — [`SolverRegistry`] maps the string names
+//!   used by the CLI, config and benches to policies and engines.
+//!
+//! Layering: `OffloadPolicy` stays the low-level SPI (a solver knows
+//! nothing about telemetry or caching); `SolverEngine` is the platform
+//! wrapper every call site — coordinator scheduler, DES runner, figure
+//! sweeps, benches, examples — constructs via the registry. The engine
+//! itself implements `OffloadPolicy`, so anything written against the SPI
+//! accepts an engine transparently.
+
+pub mod cache;
+pub mod registry;
+pub mod telemetry;
+
+pub use cache::{fingerprint, CachedDecision, DecisionCache, LruCache};
+pub use registry::{BoxedPolicy, SolverRegistry};
+pub use telemetry::Telemetry;
+
+use crate::solver::instance::{Costs, Decision, Instance};
+use crate::solver::policy::OffloadPolicy;
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Default LRU capacity: large enough that a steady-state serving mix
+/// (dozens of models × payload buckets × telemetry regimes) stays
+/// resident, small enough to be negligible memory.
+pub const DEFAULT_CACHE_CAPACITY: usize = 1024;
+
+/// Comparison slack for constraint checks (relative to the bound).
+const EPS: f64 = 1e-9;
+
+/// One solve: the static problem plus the live context.
+#[derive(Debug, Clone)]
+pub struct SolveRequest {
+    pub instance: Instance,
+    pub telemetry: Telemetry,
+}
+
+impl SolveRequest {
+    pub fn new(instance: Instance) -> Self {
+        SolveRequest {
+            instance,
+            telemetry: Telemetry::unconstrained(),
+        }
+    }
+
+    pub fn with_telemetry(mut self, telemetry: Telemetry) -> Self {
+        self.telemetry = telemetry;
+        self
+    }
+}
+
+/// What a solve produced and what it cost.
+#[derive(Debug, Clone)]
+pub struct SolveOutcome {
+    /// The chosen split with its evaluated costs.
+    pub decision: Decision,
+    /// Display name of the underlying policy ("ILPB", "ARG", ...).
+    pub solver: &'static str,
+    /// Wall time of this call, seconds (near-zero on cache hits).
+    pub wall_s: f64,
+    /// True when the decision came from the cache (or batch dedup), not a
+    /// fresh solve.
+    pub cached: bool,
+    /// True when telemetry tightening overrode the wrapped policy's split.
+    pub tightened: bool,
+}
+
+/// Cumulative engine counters (monotone; snapshot via
+/// [`SolverEngine::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EngineStats {
+    /// Total solve requests (including batch members).
+    pub requests: u64,
+    /// Requests answered without running the solver (cache + batch dedup).
+    pub cache_hits: u64,
+    /// Requests that ran the wrapped policy.
+    pub solves: u64,
+    /// Solves where tightening overrode the policy's split.
+    pub tightened: u64,
+    /// Solves where telemetry excluded *every* split and the engine fell
+    /// back to the unconstrained decision.
+    pub relaxed: u64,
+    /// Total wall time spent in fresh solves, seconds.
+    pub solve_time_s: f64,
+}
+
+impl EngineStats {
+    /// Fraction of requests that skipped the solver.
+    pub fn hit_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / self.requests as f64
+        }
+    }
+}
+
+struct Inner {
+    cache: DecisionCache,
+    stats: EngineStats,
+}
+
+/// The context-aware solver: wraps any [`OffloadPolicy`], tightens its
+/// feasible set from telemetry, and memoizes outcomes.
+pub struct SolverEngine {
+    policy: BoxedPolicy,
+    inner: Mutex<Inner>,
+}
+
+impl SolverEngine {
+    /// Wrap a policy with the default-capacity decision cache.
+    pub fn new(policy: BoxedPolicy) -> Self {
+        Self::with_cache_capacity(policy, DEFAULT_CACHE_CAPACITY)
+    }
+
+    /// Wrap a policy with an explicit cache capacity (0 = never cache).
+    pub fn with_cache_capacity(policy: BoxedPolicy, capacity: usize) -> Self {
+        SolverEngine {
+            policy,
+            inner: Mutex::new(Inner {
+                cache: DecisionCache::new(capacity),
+                stats: EngineStats::default(),
+            }),
+        }
+    }
+
+    /// Display name of the wrapped policy.
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> EngineStats {
+        self.inner.lock().expect("engine lock").stats
+    }
+
+    /// Decisions currently resident in the cache.
+    pub fn cache_len(&self) -> usize {
+        self.inner.lock().expect("engine lock").cache.len()
+    }
+
+    /// Drop all cached decisions (e.g. after a scenario reconfiguration
+    /// that the fingerprint cannot see, which today is none — provided for
+    /// operational hygiene).
+    pub fn clear_cache(&self) {
+        self.inner.lock().expect("engine lock").cache.clear();
+    }
+
+    /// Solve one request: cache lookup → telemetry tightening → wrapped
+    /// policy → repair if the policy's split was tightened away.
+    pub fn solve(&self, req: &SolveRequest) -> SolveOutcome {
+        self.solve_parts(&req.instance, &req.telemetry)
+    }
+
+    /// Borrowing variant of [`SolverEngine::solve`] for hot paths that
+    /// already own an instance (avoids cloning it into a request).
+    pub fn solve_parts(&self, inst: &Instance, telemetry: &Telemetry) -> SolveOutcome {
+        let t0 = Instant::now();
+        let key = fingerprint(inst, telemetry);
+        {
+            let mut inner = self.inner.lock().expect("engine lock");
+            inner.stats.requests += 1;
+            if let Some(hit) = inner.cache.get(key) {
+                let hit = hit.clone();
+                inner.stats.cache_hits += 1;
+                return SolveOutcome {
+                    decision: hit.decision,
+                    solver: self.policy.name(),
+                    wall_s: t0.elapsed().as_secs_f64(),
+                    cached: true,
+                    tightened: hit.tightened,
+                };
+            }
+        }
+        // solve outside the lock: concurrent distinct instances proceed in
+        // parallel (a duplicate racing in would solve twice, harmlessly —
+        // both produce identical decisions)
+        let entry = self.decide_tightened(inst, telemetry);
+        let wall_s = t0.elapsed().as_secs_f64();
+        let mut inner = self.inner.lock().expect("engine lock");
+        inner.stats.solves += 1;
+        inner.stats.solve_time_s += wall_s;
+        if entry.tightened {
+            inner.stats.tightened += 1;
+        }
+        if entry.relaxed {
+            inner.stats.relaxed += 1;
+        }
+        inner.cache.insert(
+            key,
+            CachedDecision {
+                decision: entry.decision.clone(),
+                tightened: entry.tightened,
+            },
+        );
+        SolveOutcome {
+            decision: entry.decision,
+            solver: self.policy.name(),
+            wall_s,
+            cached: false,
+            tightened: entry.tightened,
+        }
+    }
+
+    /// Solve a batch, amortizing one solve across identical requests: the
+    /// first occurrence of each fingerprint solves (or hits the LRU); the
+    /// rest reuse its outcome without touching solver or cache. This is
+    /// the coordinator batcher's `decide_batch` path.
+    pub fn solve_batch(&self, reqs: &[SolveRequest]) -> Vec<SolveOutcome> {
+        let mut out: Vec<Option<SolveOutcome>> = Vec::with_capacity(reqs.len());
+        out.resize_with(reqs.len(), || None);
+        let mut first_of: HashMap<u64, usize> = HashMap::with_capacity(reqs.len());
+        for (i, req) in reqs.iter().enumerate() {
+            let key = fingerprint(&req.instance, &req.telemetry);
+            match first_of.get(&key) {
+                Some(&j) => {
+                    let mut dup = out[j].clone().expect("earlier index resolved");
+                    dup.cached = true;
+                    dup.wall_s = 0.0;
+                    {
+                        let mut inner = self.inner.lock().expect("engine lock");
+                        inner.stats.requests += 1;
+                        inner.stats.cache_hits += 1;
+                    }
+                    out[i] = Some(dup);
+                }
+                None => {
+                    first_of.insert(key, i);
+                    out[i] = Some(self.solve(req));
+                }
+            }
+        }
+        out.into_iter().map(|o| o.expect("all resolved")).collect()
+    }
+
+    // ------------------------------------------------------ tightening
+
+    /// Delegate to the wrapped policy under the telemetry-tightened
+    /// feasible set.
+    fn decide_tightened(&self, inst: &Instance, telemetry: &Telemetry) -> TightenedDecision {
+        let delegate = self.policy.decide(inst);
+        if telemetry.is_unconstrained() {
+            return TightenedDecision {
+                decision: delegate,
+                tightened: false,
+                relaxed: false,
+            };
+        }
+        let costs = inst.split_costs();
+        let allowed = allowed_splits(inst, telemetry, &costs);
+        let Some(allowed) = allowed else {
+            // every split excluded: the constraints are unsatisfiable, so
+            // serve the unconstrained optimum rather than nothing
+            return TightenedDecision {
+                decision: delegate,
+                tightened: false,
+                relaxed: true,
+            };
+        };
+        if allowed[delegate.split] {
+            return TightenedDecision {
+                decision: delegate,
+                tightened: false,
+                relaxed: false,
+            };
+        }
+        // repair: exact argmin-Z over the surviving splits
+        let obj = inst.objective();
+        let (best_s, best_z) = allowed
+            .iter()
+            .enumerate()
+            .filter(|(_, &ok)| ok)
+            .map(|(s, _)| (s, obj.z(&costs[s])))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).expect("finite Z"))
+            .expect("allowed set is non-empty");
+        TightenedDecision {
+            decision: Decision::new(best_s, best_z, costs[best_s], inst.depth()),
+            tightened: true,
+            relaxed: false,
+        }
+    }
+}
+
+struct TightenedDecision {
+    decision: Decision,
+    tightened: bool,
+    relaxed: bool,
+}
+
+/// Engines are drop-in policies: anything written against the SPI gets
+/// telemetry-default solving with caching for free.
+impl OffloadPolicy for SolverEngine {
+    fn name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    fn decide(&self, inst: &Instance) -> Decision {
+        self.solve_parts(inst, &Telemetry::unconstrained()).decision
+    }
+}
+
+/// The telemetry-tightened feasible set: `allowed[s]` for `s ∈ 0..=K`.
+/// Returns `None` when every split is excluded.
+fn allowed_splits(inst: &Instance, tel: &Telemetry, costs: &[Costs]) -> Option<Vec<bool>> {
+    let k = inst.depth();
+    // battery rule: on-board energy within the SoC-scaled worst case
+    let e_budget = if tel.battery_soc < 1.0 {
+        let e_max = costs
+            .iter()
+            .map(|c| c.energy.value())
+            .fold(f64::NEG_INFINITY, f64::max);
+        Some(tel.battery_soc * e_max)
+    } else {
+        None
+    };
+    let mut any = false;
+    let mut allowed = vec![true; k + 1];
+    for (s, c) in costs.iter().enumerate() {
+        if let Some(budget) = e_budget {
+            if c.energy.value() > budget + EPS * budget.abs().max(1.0) {
+                allowed[s] = false;
+            }
+        }
+        if let Some(window) = tel.contact_remaining {
+            // active transmission time only: the antenna must finish
+            // inside the remaining window (s = K transmits nothing)
+            if s < k {
+                let tx = inst.downlink.transmission_time(inst.wire_bytes(s));
+                if tx.value() > window.value() + EPS * window.value().max(1.0) {
+                    allowed[s] = false;
+                }
+            }
+        }
+        if let Some(deadline) = tel.deadline {
+            // FIFO: the on-board stage waits behind queue_depth similar jobs
+            let queued = c.latency.value() + tel.queue_depth as f64 * c.t_satellite.value();
+            if queued > deadline.value() + EPS * deadline.value().max(1.0) {
+                allowed[s] = false;
+            }
+        }
+        any |= allowed[s];
+    }
+    any.then_some(allowed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::profile::ModelProfile;
+    use crate::solver::baselines::{Arg, Ars};
+    use crate::solver::bnb::Ilpb;
+    use crate::solver::exhaustive::Exhaustive;
+    use crate::solver::instance::InstanceBuilder;
+    use crate::util::rng::Pcg64;
+    use crate::util::units::{Bytes, Seconds};
+
+    fn instance(seed: u64, k: usize, gb: f64) -> Instance {
+        let mut rng = Pcg64::seeded(seed);
+        InstanceBuilder::new(ModelProfile::sampled(k, &mut rng))
+            .data(Bytes::from_gb(gb))
+            .build()
+            .unwrap()
+    }
+
+    fn ilpb_engine() -> SolverEngine {
+        SolverEngine::new(Box::new(Ilpb::default()))
+    }
+
+    #[test]
+    fn unconstrained_engine_matches_wrapped_policy() {
+        let engine = ilpb_engine();
+        for seed in 0..20 {
+            let inst = instance(seed, 1 + (seed as usize % 16), 50.0);
+            let direct = Ilpb::default().decide(&inst);
+            let via = engine.decide(&inst);
+            assert_eq!(via.split, direct.split);
+            assert_eq!(via.z, direct.z);
+        }
+    }
+
+    #[test]
+    fn repeat_requests_hit_the_cache_bit_identically() {
+        let engine = ilpb_engine();
+        let inst = instance(3, 10, 100.0);
+        let first = engine.solve(&SolveRequest::new(inst.clone()));
+        assert!(!first.cached);
+        let second = engine.solve(&SolveRequest::new(inst));
+        assert!(second.cached);
+        assert_eq!(second.decision, first.decision, "bit-identical replay");
+        let stats = engine.stats();
+        assert_eq!(stats.requests, 2);
+        assert_eq!(stats.cache_hits, 1);
+        assert_eq!(stats.solves, 1);
+    }
+
+    #[test]
+    fn repeated_workload_skips_at_least_ninety_percent_of_solves() {
+        // the acceptance workload: 200 requests cycling 10 distinct
+        // instances ⇒ 10 solves, 190 skips (95%)
+        let engine = ilpb_engine();
+        let instances: Vec<Instance> =
+            (0..10).map(|i| instance(100 + i, 12, 10.0 + i as f64)).collect();
+        let mut fresh_z = Vec::new();
+        for inst in &instances {
+            fresh_z.push(Ilpb::default().decide(inst).z);
+        }
+        for round in 0..20 {
+            for (i, inst) in instances.iter().enumerate() {
+                let out = engine.solve_parts(inst, &Telemetry::unconstrained());
+                assert_eq!(out.decision.z, fresh_z[i], "round {round}: z drifted");
+            }
+        }
+        let stats = engine.stats();
+        assert_eq!(stats.requests, 200);
+        assert_eq!(stats.solves, 10, "only distinct instances solve");
+        assert!(
+            stats.hit_rate() >= 0.9,
+            "cache must skip ≥90% of solves, got {:.1}%",
+            stats.hit_rate() * 100.0
+        );
+    }
+
+    #[test]
+    fn solve_batch_amortizes_identical_members() {
+        let engine = SolverEngine::with_cache_capacity(Box::new(Ilpb::default()), 0);
+        let inst = instance(9, 8, 25.0);
+        let reqs: Vec<SolveRequest> =
+            (0..16).map(|_| SolveRequest::new(inst.clone())).collect();
+        let outs = engine.solve_batch(&reqs);
+        assert_eq!(outs.len(), 16);
+        assert!(!outs[0].cached);
+        for o in &outs[1..] {
+            assert!(o.cached, "duplicates must reuse the first solve");
+            assert_eq!(o.decision, outs[0].decision);
+        }
+        // even with the LRU disabled, the batch dedup did the amortizing
+        assert_eq!(engine.stats().solves, 1);
+        assert_eq!(engine.stats().cache_hits, 15);
+    }
+
+    #[test]
+    fn tight_contact_window_forces_onboard_completion() {
+        // every activation stays ≥ half the (huge) input, so nothing can
+        // cross a nearly-closed link
+        let profile = ModelProfile::from_alphas(
+            "wide",
+            &[1000.0, 950.0, 900.0, 800.0, 700.0, 600.0, 500.0],
+        )
+        .unwrap();
+        let inst = InstanceBuilder::new(profile)
+            .data(Bytes::from_gb(100.0))
+            .build()
+            .unwrap();
+        let engine = ilpb_engine();
+        let tel = Telemetry::unconstrained().with_contact_remaining(Seconds(1.0));
+        let out = engine.solve_parts(&inst, &tel);
+        assert_eq!(
+            out.decision.split,
+            inst.depth(),
+            "only the no-transmission split survives a closed window"
+        );
+        assert!(out.tightened || Ilpb::default().decide(&inst).split == inst.depth());
+    }
+
+    #[test]
+    fn battery_tightening_bounds_the_energy() {
+        let inst = instance(12, 10, 200.0);
+        let costs = inst.split_costs();
+        let e_max = costs
+            .iter()
+            .map(|c| c.energy.value())
+            .fold(f64::NEG_INFINITY, f64::max);
+        let e_min = costs
+            .iter()
+            .map(|c| c.energy.value())
+            .fold(f64::INFINITY, f64::min);
+        // pick a SoC that strictly excludes the most expensive split but
+        // keeps the cheapest
+        let soc = (e_min / e_max + 1.0) / 2.0;
+        let engine = SolverEngine::new(Box::new(Ars)); // ARS = max-energy policy
+        let out = engine.solve_parts(&inst, &Telemetry::unconstrained().with_battery_soc(soc));
+        assert!(
+            out.decision.costs.energy.value() <= soc * e_max * (1.0 + 1e-6),
+            "energy {} exceeds SoC budget {}",
+            out.decision.costs.energy.value(),
+            soc * e_max
+        );
+    }
+
+    #[test]
+    fn unsatisfiable_telemetry_relaxes_to_the_unconstrained_decision() {
+        let inst = instance(13, 6, 50.0);
+        let engine = ilpb_engine();
+        // zero window AND an impossible deadline: nothing survives
+        let tel = Telemetry::unconstrained()
+            .with_contact_remaining(Seconds(0.0))
+            .with_deadline(Seconds(1e-9));
+        let out = engine.solve_parts(&inst, &tel);
+        let unconstrained = Ilpb::default().decide(&inst);
+        assert_eq!(out.decision.split, unconstrained.split);
+        assert_eq!(engine.stats().relaxed, 1);
+    }
+
+    #[test]
+    fn repair_picks_the_best_surviving_split() {
+        // Force ARG (split 0) into a closed contact window: the repair
+        // must agree with brute-force argmin-Z over the surviving set.
+        let inst = instance(14, 9, 80.0);
+        let engine = SolverEngine::new(Box::new(Arg));
+        let tel = Telemetry::unconstrained().with_contact_remaining(Seconds(0.5));
+        let out = engine.solve_parts(&inst, &tel);
+        assert!(out.tightened, "ARG's split 0 cannot fit a closed window");
+        let obj = inst.objective();
+        let k = inst.depth();
+        let best = (0..=k)
+            .filter(|&s| {
+                s == k
+                    || inst
+                        .downlink
+                        .transmission_time(inst.wire_bytes(s))
+                        .value()
+                        <= 0.5
+            })
+            .map(|s| (s, inst.z_of_split(s, &obj)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        assert_eq!(out.decision.split, best.0);
+        assert!((out.decision.z - best.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constrained_and_unconstrained_solves_never_alias() {
+        let inst = instance(15, 8, 120.0);
+        let engine = ilpb_engine();
+        let free = engine.solve_parts(&inst, &Telemetry::unconstrained());
+        let tight = engine.solve_parts(
+            &inst,
+            &Telemetry::unconstrained().with_contact_remaining(Seconds(1.0)),
+        );
+        // distinct fingerprints ⇒ the second call was a fresh solve
+        assert!(!tight.cached);
+        let free_again = engine.solve_parts(&inst, &Telemetry::unconstrained());
+        assert!(free_again.cached);
+        assert_eq!(free_again.decision, free.decision);
+    }
+
+    #[test]
+    fn exact_engines_agree_through_the_full_api() {
+        let engines = [
+            SolverRegistry::engine("ilpb").unwrap(),
+            SolverRegistry::engine("dp").unwrap(),
+            SolverRegistry::engine("exhaustive").unwrap(),
+        ];
+        for seed in 0..30 {
+            let inst = instance(1000 + seed, 1 + (seed as usize % 20), 75.0);
+            let oracle = Exhaustive.decide(&inst);
+            for e in &engines {
+                let out = e.solve(&SolveRequest::new(inst.clone()));
+                assert!(
+                    (out.decision.z - oracle.z).abs() < 1e-9,
+                    "{} disagrees with the oracle at seed {seed}",
+                    e.policy_name()
+                );
+            }
+        }
+    }
+}

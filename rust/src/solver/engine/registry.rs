@@ -1,0 +1,107 @@
+//! String-keyed solver construction — the one place policy names map to
+//! types.
+//!
+//! The CLI, config files, benches and examples all select solvers by name;
+//! before the registry each of them hard-coded the `match`. Now
+//! [`SolverRegistry::policy`] is the single source of truth and
+//! [`SolverRegistry::engine`] wraps the result in a [`SolverEngine`]
+//! (telemetry tightening + decision cache) in one call.
+
+use super::SolverEngine;
+use crate::solver::baselines::{Arg, Ars, Greedy};
+use crate::solver::bnb::Ilpb;
+use crate::solver::dp::DpSolver;
+use crate::solver::exhaustive::Exhaustive;
+use crate::solver::policy::OffloadPolicy;
+
+/// A thread-safe, engine-wrappable policy.
+pub type BoxedPolicy = Box<dyn OffloadPolicy + Send + Sync>;
+
+/// Registry of every built-in offloading policy.
+pub struct SolverRegistry;
+
+impl SolverRegistry {
+    /// Canonical registry keys, in preference order.
+    pub const NAMES: [&'static str; 6] = ["ilpb", "dp", "exhaustive", "arg", "ars", "greedy"];
+
+    /// `name1|name2|...` — for CLI help strings and error messages.
+    pub fn help() -> String {
+        Self::NAMES.join("|")
+    }
+
+    /// Construct the raw policy for a registry key. Keys are
+    /// case-insensitive and the display names ("ILPB", "DP-scan",
+    /// "Greedy-minTX", ...) are accepted as aliases.
+    pub fn policy(name: &str) -> anyhow::Result<BoxedPolicy> {
+        Ok(match name.to_ascii_lowercase().as_str() {
+            "ilpb" => Box::new(Ilpb::default()),
+            "dp" | "dp-scan" => Box::new(DpSolver),
+            "exhaustive" => Box::new(Exhaustive),
+            "arg" => Box::new(Arg),
+            "ars" => Box::new(Ars),
+            "greedy" | "greedy-mintx" => Box::new(Greedy),
+            other => anyhow::bail!("unknown policy `{other}` ({})", Self::help()),
+        })
+    }
+
+    /// Construct a [`SolverEngine`] (default cache) around a registry key.
+    pub fn engine(name: &str) -> anyhow::Result<SolverEngine> {
+        Ok(SolverEngine::new(Self::policy(name)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::profile::ModelProfile;
+    use crate::solver::instance::InstanceBuilder;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn every_registered_name_builds_and_decides() {
+        let mut rng = Pcg64::seeded(2);
+        let inst = InstanceBuilder::new(ModelProfile::sampled(6, &mut rng))
+            .build()
+            .unwrap();
+        let mut display_names = Vec::new();
+        for name in SolverRegistry::NAMES {
+            let policy = SolverRegistry::policy(name).unwrap();
+            let d = policy.decide(&inst);
+            assert!(d.split <= inst.depth(), "{name}: split out of range");
+            assert!(d.z.is_finite(), "{name}: non-finite Z");
+            display_names.push(policy.name());
+        }
+        display_names.sort_unstable();
+        display_names.dedup();
+        assert_eq!(
+            display_names.len(),
+            SolverRegistry::NAMES.len(),
+            "display names must be distinct"
+        );
+    }
+
+    #[test]
+    fn aliases_and_case_are_accepted() {
+        for alias in ["ILPB", "Dp-Scan", "GREEDY-MINTX", "Ars"] {
+            assert!(SolverRegistry::policy(alias).is_ok(), "alias {alias}");
+        }
+    }
+
+    #[test]
+    fn unknown_name_lists_the_registry() {
+        let err = SolverRegistry::policy("simplex")
+            .err()
+            .expect("unknown name must fail")
+            .to_string();
+        assert!(err.contains("simplex"));
+        for name in SolverRegistry::NAMES {
+            assert!(err.contains(name), "help must list {name}");
+        }
+    }
+
+    #[test]
+    fn engine_carries_the_policy_name() {
+        let e = SolverRegistry::engine("ilpb").unwrap();
+        assert_eq!(e.policy_name(), "ILPB");
+    }
+}

@@ -1,0 +1,131 @@
+//! Live context for one solve: what the platform knows *right now* that
+//! the static ILP instance does not.
+//!
+//! The paper solves each request against a fixed scenario; a serving
+//! system additionally knows the battery's state of charge, how much of
+//! the current contact window remains, how deep the local queue is, and
+//! whether the request carries a deadline. [`Telemetry`] carries those
+//! four signals into [`super::SolverEngine::solve`], which turns them
+//! into *constraint tightening*: feasible splits that the live context
+//! rules out are removed before the wrapped policy's answer is accepted.
+
+use crate::util::units::Seconds;
+
+/// Live platform context attached to a [`super::SolveRequest`].
+///
+/// Every field has an "unconstrained" value (the [`Default`]), under which
+/// the engine performs no tightening and behaves exactly like the wrapped
+/// [`crate::solver::OffloadPolicy`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Telemetry {
+    /// Battery state of charge in `[0, 1]`; `1.0` = full/unconstrained.
+    ///
+    /// Tightening: a split `s` is allowed only when its total on-board
+    /// energy does not exceed `battery_soc × E_max`, where `E_max` is the
+    /// most expensive feasible split of the instance. At full charge every
+    /// split passes; as the battery drains, energy-hungry splits drop out
+    /// first.
+    pub battery_soc: f64,
+    /// Usable link time remaining in the current contact window.
+    ///
+    /// Tightening: a split `s < K` is allowed only when the boundary
+    /// activation's *active transmission time* fits in the remaining
+    /// window (`s = K` needs no link and always passes). `None` = decide
+    /// on the instance's steady-state contact cadence (Eq. 3), which
+    /// already amortizes multi-window transfers.
+    pub contact_remaining: Option<Seconds>,
+    /// Requests already queued ahead of this one on the satellite.
+    ///
+    /// Used together with [`Telemetry::deadline`]: the on-board stage of a
+    /// split is assumed to wait behind `queue_depth` similar jobs on the
+    /// FIFO processing payload.
+    pub queue_depth: usize,
+    /// End-to-end latency bound for this request, if any.
+    ///
+    /// Tightening: a split `s` is allowed only when
+    /// `latency(s) + queue_depth · t_satellite(s)` meets the deadline.
+    pub deadline: Option<Seconds>,
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Telemetry::unconstrained()
+    }
+}
+
+impl Telemetry {
+    /// No live context: full battery, steady-state contact model, empty
+    /// queue, no deadline. The engine performs no tightening.
+    pub fn unconstrained() -> Self {
+        Telemetry {
+            battery_soc: 1.0,
+            contact_remaining: None,
+            queue_depth: 0,
+            deadline: None,
+        }
+    }
+
+    pub fn with_battery_soc(mut self, soc: f64) -> Self {
+        assert!((0.0..=1.0).contains(&soc), "SoC must be in [0, 1]");
+        self.battery_soc = soc;
+        self
+    }
+
+    pub fn with_contact_remaining(mut self, t: Seconds) -> Self {
+        self.contact_remaining = Some(t);
+        self
+    }
+
+    pub fn with_queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = depth;
+        self
+    }
+
+    pub fn with_deadline(mut self, d: Seconds) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// True when no field can tighten anything — the engine's fast path
+    /// (no per-split constraint scan, fingerprint without telemetry).
+    pub fn is_unconstrained(&self) -> bool {
+        self.battery_soc >= 1.0
+            && self.contact_remaining.is_none()
+            && self.deadline.is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_unconstrained() {
+        let t = Telemetry::default();
+        assert!(t.is_unconstrained());
+        assert_eq!(t.battery_soc, 1.0);
+        assert_eq!(t.queue_depth, 0);
+        assert!(t.contact_remaining.is_none());
+        assert!(t.deadline.is_none());
+    }
+
+    #[test]
+    fn any_constraint_clears_the_flag() {
+        assert!(!Telemetry::default().with_battery_soc(0.5).is_unconstrained());
+        assert!(!Telemetry::default()
+            .with_contact_remaining(Seconds(60.0))
+            .is_unconstrained());
+        assert!(!Telemetry::default()
+            .with_deadline(Seconds(10.0))
+            .is_unconstrained());
+        // queue depth alone constrains nothing (it only scales the
+        // deadline check)
+        assert!(Telemetry::default().with_queue_depth(5).is_unconstrained());
+    }
+
+    #[test]
+    #[should_panic(expected = "SoC must be in [0, 1]")]
+    fn rejects_out_of_range_soc() {
+        let _ = Telemetry::default().with_battery_soc(1.5);
+    }
+}

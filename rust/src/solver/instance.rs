@@ -484,6 +484,46 @@ impl Instance {
     pub fn z_of_split(&self, s: usize, obj: &Objective) -> f64 {
         obj.z(&self.evaluate_split(s))
     }
+
+    /// The full cost table: [`Costs`] for every feasible split
+    /// `s ∈ 0..=K`, computed in one O(K) prefix/suffix scan (the same
+    /// recurrence as [`Instance::objective`], which stays allocation-free
+    /// for the per-solve hot path). This is the single authoritative
+    /// whole-feasible-set evaluation for consumers that need every split
+    /// at once — the engine's telemetry tightening, figure tables.
+    pub fn split_costs(&self) -> Vec<Costs> {
+        let k = self.depth();
+        let mut cloud_suffix = Seconds::ZERO;
+        for i in 0..k {
+            cloud_suffix += self.delta_cloud(i);
+        }
+        let mut t_sat_prefix = Seconds::ZERO;
+        let mut e_proc_prefix = Joules::ZERO;
+        let mut out = Vec::with_capacity(k + 1);
+        for s in 0..=k {
+            let (t_tx, t_gc, e_tx) = if s < k {
+                (self.t_down(s), self.t_gc(s), self.e_off(s))
+            } else {
+                (Seconds::ZERO, Seconds::ZERO, Joules::ZERO)
+            };
+            out.push(Costs {
+                latency: t_sat_prefix + t_tx + t_gc + cloud_suffix,
+                energy: e_proc_prefix + e_tx,
+                t_satellite: t_sat_prefix,
+                t_downlink: t_tx,
+                t_ground_cloud: t_gc,
+                t_cloud: cloud_suffix,
+                e_processing: e_proc_prefix,
+                e_transmission: e_tx,
+            });
+            if s < k {
+                t_sat_prefix += self.delta_sat(s);
+                e_proc_prefix += self.e_sat(s);
+                cloud_suffix -= self.delta_cloud(s);
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -651,6 +691,25 @@ mod tests {
             e_transmission: Joules::ZERO,
         };
         assert_eq!(obj.z(&c), 0.5 * 0.0 + 0.5 * 0.5);
+    }
+
+    #[test]
+    fn split_costs_scan_matches_naive_evaluation() {
+        let inst = small_instance();
+        let table = inst.split_costs();
+        assert_eq!(table.len(), inst.depth() + 1);
+        for (s, scanned) in table.iter().enumerate() {
+            let direct = inst.evaluate_split(s);
+            assert!((scanned.latency - direct.latency).value().abs() < 1e-9);
+            assert!((scanned.energy - direct.energy).value().abs() < 1e-9);
+            assert!((scanned.t_satellite - direct.t_satellite).value().abs() < 1e-9);
+            assert!(
+                (scanned.e_transmission - direct.e_transmission)
+                    .value()
+                    .abs()
+                    < 1e-9
+            );
+        }
     }
 
     #[test]

@@ -14,11 +14,19 @@
 //!   total (the performance-optimized production path).
 //! * [`baselines`] — the paper's comparison points: ARG (all-on-ground)
 //!   and ARS (all-on-satellite), plus a greedy heuristic ablation.
-//! * [`policy`] — object-safe strategy interface used by the coordinator.
+//! * [`policy`] — object-safe strategy interface (the low-level SPI every
+//!   solver implements).
+//! * [`engine`] — the public solving API: [`SolverEngine`] wraps any
+//!   policy with telemetry-driven constraint tightening and an LRU
+//!   decision cache; [`SolverRegistry`] constructs solvers by name
+//!   (`"ilpb"`, `"dp"`, `"exhaustive"`, `"arg"`, `"ars"`, `"greedy"`).
+//!   Consumers (coordinator, simulator, CLI, benches, figures) go through
+//!   the engine; only solver implementations touch the SPI directly.
 
 pub mod baselines;
 pub mod bnb;
 pub mod dp;
+pub mod engine;
 pub mod exhaustive;
 pub mod instance;
 pub mod policy;
@@ -26,6 +34,9 @@ pub mod policy;
 pub use baselines::{Arg, Ars, Greedy};
 pub use bnb::{BnbStats, Ilpb};
 pub use dp::DpSolver;
+pub use engine::{
+    EngineStats, SolveOutcome, SolveRequest, SolverEngine, SolverRegistry, Telemetry,
+};
 pub use exhaustive::Exhaustive;
 pub use instance::{Costs, Decision, Instance, InstanceBuilder, Objective};
 pub use policy::OffloadPolicy;

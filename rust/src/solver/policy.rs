@@ -15,7 +15,7 @@ pub trait OffloadPolicy {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::solver::baselines::{Arg, Ars};
+    use crate::solver::baselines::{Arg, Ars, Greedy};
     use crate::solver::bnb::Ilpb;
     use crate::solver::dp::DpSolver;
     use crate::solver::exhaustive::Exhaustive;
@@ -35,6 +35,7 @@ mod tests {
             Box::new(DpSolver),
             Box::new(Arg),
             Box::new(Ars),
+            Box::new(Greedy),
         ];
         let mut names = Vec::new();
         for p in &policies {
@@ -43,8 +44,12 @@ mod tests {
             assert!(d.z.is_finite());
             names.push(p.name());
         }
+        assert!(
+            names.contains(&"Greedy-minTX"),
+            "Greedy must be exercised under its own name"
+        );
         names.sort_unstable();
         names.dedup();
-        assert_eq!(names.len(), 5, "names must be distinct");
+        assert_eq!(names.len(), 6, "names must be distinct");
     }
 }

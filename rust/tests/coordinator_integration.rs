@@ -13,7 +13,7 @@ use leo_infer::dnn::profile::ModelProfile;
 use leo_infer::link::downlink::DownlinkModel;
 use leo_infer::sim::workload::Request;
 use leo_infer::solver::instance::InstanceBuilder;
-use leo_infer::solver::Ilpb;
+use leo_infer::solver::SolverRegistry;
 use leo_infer::util::rng::Pcg64;
 use leo_infer::util::units::{BitsPerSec, Bytes, Seconds};
 
@@ -33,7 +33,7 @@ fn scheduler() -> Scheduler {
     Scheduler::new(
         InstanceBuilder::new(profile()),
         vec![profile()],
-        Box::new(Ilpb::default()),
+        SolverRegistry::engine("ilpb").unwrap(),
     )
 }
 
@@ -256,7 +256,7 @@ fn multi_model_batches_stay_separated() {
     let scheduler = Scheduler::new(
         InstanceBuilder::new(profiles[0].clone()),
         profiles,
-        Box::new(Ilpb::default()),
+        SolverRegistry::engine("ilpb").unwrap(),
     );
     let mut server = Server::new(
         ServerConfig {

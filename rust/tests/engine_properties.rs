@@ -1,0 +1,159 @@
+//! Property tests over the `solver::engine` public API: exact solvers
+//! agree through the engine, the decision cache replays bit-identically
+//! and skips ≥90% of solves on repeated workloads, and telemetry
+//! tightening never produces an infeasible or suboptimal-within-allowed
+//! decision.
+
+use leo_infer::dnn::profile::ModelProfile;
+use leo_infer::solver::instance::{Instance, InstanceBuilder};
+use leo_infer::solver::{
+    Exhaustive, OffloadPolicy, SolveRequest, SolverEngine, SolverRegistry, Telemetry,
+};
+use leo_infer::util::proptest::Runner;
+use leo_infer::util::rng::Pcg64;
+use leo_infer::util::units::{BitsPerSec, Bytes, Seconds, Watts};
+
+fn random_instance(rng: &mut Pcg64) -> Instance {
+    let k = 1 + rng.index(24);
+    InstanceBuilder::new(ModelProfile::sampled(k, rng))
+        .data(Bytes::from_gb(rng.uniform(0.5, 800.0)))
+        .beta_s_per_kb(rng.uniform(0.01, 0.03))
+        .gamma_s_per_kb(rng.uniform(0.0001, 0.001))
+        .rate(BitsPerSec::from_mbps(rng.uniform(10.0, 100.0)))
+        .gpu(
+            rng.uniform(50.0, 5000.0),
+            Watts(rng.uniform(1.0, 10.0)),
+            Watts(rng.uniform(0.05, 1.0)),
+            Watts(rng.uniform(0.01, 0.2)),
+        )
+        .p_off(Watts(rng.uniform(0.5, 10.0)))
+        .weights(0.5, 0.5)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn engine_wrapped_exact_solvers_agree_on_optimal_z() {
+    let engines: Vec<SolverEngine> = ["ilpb", "dp", "exhaustive"]
+        .iter()
+        .map(|n| SolverRegistry::engine(n).unwrap())
+        .collect();
+    Runner::new("engine(ilpb) == engine(dp) == engine(exhaustive)", 300).run(|rng| {
+        let inst = random_instance(rng);
+        let mut answers = Vec::new();
+        for e in &engines {
+            let out = e.solve(&SolveRequest::new(inst.clone()));
+            answers.push((e.policy_name(), out.decision.z, out.decision.split));
+        }
+        let (_, z0, s0) = answers[0];
+        for &(name, z, s) in &answers[1..] {
+            if (z - z0).abs() > 1e-9 {
+                return Err(format!("{name}: z {z} vs {z0} (splits {s} vs {s0})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cache_replays_bit_identical_decisions() {
+    let engine = SolverRegistry::engine("ilpb").unwrap();
+    Runner::new("cache replay is bit-identical", 100).run(|rng| {
+        let inst = random_instance(rng);
+        let req = SolveRequest::new(inst);
+        let first = engine.solve(&req);
+        let replay = engine.solve(&req);
+        if !replay.cached {
+            // LRU capacity can evict under many distinct instances, but
+            // an immediate replay must always hit
+            return Err("immediate replay missed the cache".into());
+        }
+        // bit-identical: full structural equality including the h vector
+        // and every cost component
+        (replay.decision == first.decision)
+            .then_some(())
+            .ok_or_else(|| format!("replayed {:?} != {:?}", replay.decision, first.decision))
+    });
+}
+
+#[test]
+fn repeated_workload_skips_over_ninety_percent_of_solves() {
+    // the acceptance workload: heavy traffic cycling a small set of
+    // request shapes, exactly what a batcher emits at steady state
+    let engine = SolverRegistry::engine("ilpb").unwrap();
+    let mut rng = Pcg64::seeded(0xCACE);
+    let shapes: Vec<Instance> = (0..25).map(|_| random_instance(&mut rng)).collect();
+    let fresh: Vec<f64> = shapes
+        .iter()
+        .map(|i| Exhaustive.decide(i).z)
+        .collect();
+    let total = 1000usize;
+    for i in 0..total {
+        let inst = &shapes[i % shapes.len()];
+        let out = engine.solve_parts(inst, &Telemetry::unconstrained());
+        assert!(
+            (out.decision.z - fresh[i % shapes.len()]).abs() < 1e-9,
+            "request {i}: cached path changed the optimum"
+        );
+    }
+    let stats = engine.stats();
+    assert_eq!(stats.requests, total as u64);
+    assert_eq!(stats.solves, shapes.len() as u64);
+    assert!(
+        stats.hit_rate() >= 0.9,
+        "must skip ≥90% of solves on a repeated workload, got {:.1}%",
+        stats.hit_rate() * 100.0
+    );
+}
+
+#[test]
+fn tightened_decisions_respect_telemetry_and_stay_feasible() {
+    let engine = SolverRegistry::engine("ilpb").unwrap();
+    Runner::new("telemetry tightening is sound", 200).run(|rng| {
+        let inst = random_instance(rng);
+        let k = inst.depth();
+        let window = Seconds(rng.uniform(1.0, 5000.0));
+        let tel = Telemetry::unconstrained().with_contact_remaining(window);
+        let out = engine.solve_parts(&inst, &tel);
+        let s = out.decision.split;
+        if s > k {
+            return Err(format!("split {s} out of range"));
+        }
+        // unless the engine had to relax (only possible when even s = K
+        // is excluded, which the contact rule never does), a transmitting
+        // split must fit the window
+        if s < k {
+            let tx = inst.downlink.transmission_time(inst.wire_bytes(s));
+            if tx.value() > window.value() * (1.0 + 1e-6) {
+                return Err(format!(
+                    "split {s} transmits for {} s into a {} s window",
+                    tx.value(),
+                    window.value()
+                ));
+            }
+        }
+        // and the result can never beat the unconstrained optimum
+        let best = Exhaustive.decide(&inst);
+        (out.decision.z >= best.z - 1e-9)
+            .then_some(())
+            .ok_or_else(|| "tightened decision beat the global optimum".into())
+    });
+}
+
+#[test]
+fn batch_solving_amortizes_and_matches_serial_solving() {
+    let mut rng = Pcg64::seeded(0xBA7C);
+    let engine = SolverRegistry::engine("dp").unwrap();
+    let serial = SolverRegistry::engine("dp").unwrap();
+    let shapes: Vec<Instance> = (0..4).map(|_| random_instance(&mut rng)).collect();
+    let reqs: Vec<SolveRequest> = (0..64)
+        .map(|i| SolveRequest::new(shapes[i % shapes.len()].clone()))
+        .collect();
+    let outs = engine.solve_batch(&reqs);
+    assert_eq!(outs.len(), reqs.len());
+    assert_eq!(engine.stats().solves, shapes.len() as u64);
+    for (req, out) in reqs.iter().zip(&outs) {
+        let expect = serial.solve(req);
+        assert_eq!(out.decision, expect.decision, "batch differs from serial");
+    }
+}

@@ -9,7 +9,7 @@ use leo_infer::orbit::propagator::CircularOrbit;
 use leo_infer::sim::contact::PeriodicContact;
 use leo_infer::sim::runner::{SimConfig, Simulator};
 use leo_infer::sim::workload::{PoissonWorkload, SizeDist};
-use leo_infer::solver::{Arg, Ars, Ilpb, OffloadPolicy};
+use leo_infer::solver::{Ilpb, OffloadPolicy, SolverRegistry};
 use leo_infer::util::rng::Pcg64;
 use leo_infer::util::units::{Bytes, Seconds};
 
@@ -53,7 +53,8 @@ fn week_long_simulation_conserves_and_orders() {
     .generate(horizon, &mut rng);
 
     let mut by_policy = Vec::new();
-    for policy in [&Ilpb::default() as &dyn OffloadPolicy, &Arg, &Ars] {
+    for name in ["ilpb", "arg", "ars"] {
+        let engine = SolverRegistry::engine(name).unwrap();
         let cfg = SimConfig {
             template: scen.instance_builder(profile.clone()),
             profiles: vec![profile.clone()],
@@ -63,14 +64,14 @@ fn week_long_simulation_conserves_and_orders() {
             ),
             horizon,
         };
-        let result = Simulator::new(cfg).run(&trace, policy);
+        let result = Simulator::new(cfg).run(&trace, &engine);
         assert_eq!(
             result.metrics.completed() as usize + result.metrics.rejected as usize,
             trace.len(),
             "{}: conservation",
-            policy.name()
+            engine.policy_name()
         );
-        by_policy.push((policy.name(), result));
+        by_policy.push((engine.policy_name(), result));
     }
     // ILPB's mean Z-weighted qualities: never above both baselines on both
     // axes simultaneously (weaker but assignment-free check: ILPB's
