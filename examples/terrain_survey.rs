@@ -47,14 +47,18 @@ fn main() -> anyhow::Result<()> {
         1.0 / 3600.0, // hourly captures
         SizeDist::Uniform(Bytes::from_gb(1.0), Bytes::from_gb(4.0)),
     );
-    let horizon = Seconds::from_hours(168.0); // one week
+    // one week of captures; the sim horizon is far larger so the queued
+    // tail drains rather than being cut off as unfinished (the horizon
+    // is enforced by the DES) — served + rejected stays accountable
+    let capture_window = Seconds::from_hours(168.0);
+    let horizon = Seconds::from_hours(100_000.0);
     let mut rng = Pcg64::seeded(0x7E44);
-    let trace = workload.generate(horizon, &mut rng);
+    let trace = workload.generate(capture_window, &mut rng);
     let profile = ModelProfile::sampled(scenario.depth, &mut rng);
     println!(
         "survey: {} captures over {:.0} h (λ:μ = 0.1:0.9), 80 Wh battery, 20% DoD floor\n",
         trace.len(),
-        horizon.hours()
+        capture_window.hours()
     );
 
     println!(
@@ -83,7 +87,7 @@ fn main() -> anyhow::Result<()> {
             "{:<6} {:>8} {:>9} {:>12.1} {:>11.1}% {:>10.1}",
             engine.policy_name(),
             m.completed(),
-            m.rejected,
+            m.rejected(),
             result.state.energy_drawn.value(),
             result.state.soc() * 100.0,
             m.mean_latency().value(),

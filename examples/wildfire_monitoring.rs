@@ -36,13 +36,17 @@ fn main() -> anyhow::Result<()> {
         SizeDist::LogUniform(Bytes::from_gb(5.0), Bytes::from_gb(80.0)),
     )
     .with_critical_fraction(0.2);
-    let horizon = Seconds::from_hours(48.0);
+    // captures arrive over 48 h; the sim horizon is far larger so the
+    // transmit-bound backlog drains instead of being cut off as
+    // unfinished (the horizon is enforced by the DES)
+    let capture_window = Seconds::from_hours(48.0);
+    let horizon = Seconds::from_hours(100_000.0);
     let mut rng = Pcg64::seeded(0xF15E);
-    let trace = workload.generate(horizon, &mut rng);
+    let trace = workload.generate(capture_window, &mut rng);
     println!(
         "wildfire watch: {} captures over {:.0} h (λ:μ = 0.9:0.1)\n",
         trace.len(),
-        horizon.hours()
+        capture_window.hours()
     );
 
     let profile = ModelProfile::sampled(scenario.depth, &mut rng);

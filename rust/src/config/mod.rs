@@ -5,12 +5,29 @@
 //! model, weights — with named presets (the Tiansuan defaults and the
 //! per-figure sweeps) and JSON load/save so runs are reproducible from
 //! config files.
+//!
+//! A [`FleetScenario`] layers the constellation on top: a Walker pattern,
+//! a ground station, per-satellite contact-window source (the paper's
+//! periodic cadence or first-principles orbital geometry), batteries,
+//! routing policy, and the capture workload — everything
+//! `leo-infer simulate --fleet` needs. Fleet files load from JSON or the
+//! TOML subset ([`crate::util::toml`]), keyed by file extension.
 
+use crate::coordinator::router::RoutingPolicy;
 use crate::dnn::profile::ModelProfile;
+use crate::energy::battery::Battery;
+use crate::energy::solar::SolarPanel;
+use crate::orbit::constellation::WalkerPattern;
+use crate::orbit::contact::ContactSchedule;
+use crate::orbit::eclipse::eclipse_fraction;
+use crate::orbit::geometry::GroundStation;
+use crate::sim::contact::{ContactModel, PeriodicContact, ScheduleContact};
+use crate::sim::fleet::{FleetSimConfig, SatelliteSpec, TelemetryMode};
+use crate::sim::workload::{PoissonWorkload, SizeDist};
 use crate::solver::instance::InstanceBuilder;
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
-use crate::util::units::{BitsPerSec, Bytes, Seconds, Watts};
+use crate::util::units::{BitsPerSec, Bytes, Joules, Seconds, Watts};
 
 /// A fully specified scenario (all paper §V-A parameters).
 #[derive(Debug, Clone, PartialEq)]
@@ -215,6 +232,288 @@ impl Scenario {
     }
 }
 
+// ===================================================================== fleet
+
+/// Where the per-satellite contact windows come from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContactSource {
+    /// The paper's fixed cadence (the base scenario's `t_cyc`/`t_con`),
+    /// phase-staggered across the fleet so passes don't all align.
+    Periodic,
+    /// First-principles geometry: each Walker orbit propagated over the
+    /// ground station into a [`ContactSchedule`].
+    Orbit,
+}
+
+impl ContactSource {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ContactSource::Periodic => "periodic",
+            ContactSource::Orbit => "orbit",
+        }
+    }
+
+    pub fn from_name(name: &str) -> anyhow::Result<ContactSource> {
+        match name {
+            "periodic" => Ok(ContactSource::Periodic),
+            "orbit" => Ok(ContactSource::Orbit),
+            other => anyhow::bail!("unknown contact source `{other}` (periodic|orbit)"),
+        }
+    }
+}
+
+/// A fully specified constellation scenario for the fleet DES.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetScenario {
+    pub name: String,
+    /// Link/compute/power parameters shared by every satellite.
+    pub base: Scenario,
+    // --- Walker delta pattern i:T/P/F ---
+    pub sats: usize,
+    pub planes: usize,
+    pub phasing: usize,
+    pub altitude_km: f64,
+    pub inclination_deg: f64,
+    // --- ground station ---
+    pub gs_name: String,
+    pub gs_lat_deg: f64,
+    pub gs_lon_deg: f64,
+    pub gs_min_elevation_deg: f64,
+    /// Contact-window source for the transmitters.
+    pub contact_source: ContactSource,
+    /// Routing policy name: `round-robin | least-loaded | contact-aware |
+    /// energy-aware` (see [`FleetScenario::routing_policy`]).
+    pub routing: String,
+    /// Battery floor for `energy-aware` routing.
+    pub min_soc: f64,
+    // --- per-satellite energy subsystem (0 capacity = unconstrained) ---
+    pub battery_capacity_j: f64,
+    pub battery_dod_floor: f64,
+    pub panel_area_m2: f64,
+    pub panel_efficiency: f64,
+    pub panel_pointing: f64,
+    // --- workload ---
+    /// Mean capture spacing, seconds (fleet-wide Poisson rate = 1/this).
+    pub interarrival_s: f64,
+    /// Log-uniform request size range, GB.
+    pub data_gb_lo: f64,
+    pub data_gb_hi: f64,
+    pub horizon_hours: f64,
+}
+
+impl FleetScenario {
+    /// The acceptance scenario: a Tiansuan-like Walker 6/3/1 at 500 km SSO
+    /// over Beijing, paper-cadence contacts, least-loaded routing,
+    /// unconstrained batteries.
+    pub fn walker_631() -> FleetScenario {
+        FleetScenario {
+            name: "walker-6-3-1".to_string(),
+            base: Scenario::tiansuan(),
+            sats: 6,
+            planes: 3,
+            phasing: 1,
+            altitude_km: 500.0,
+            inclination_deg: 97.4,
+            gs_name: "beijing".to_string(),
+            gs_lat_deg: 39.9,
+            gs_lon_deg: 116.4,
+            gs_min_elevation_deg: 10.0,
+            contact_source: ContactSource::Periodic,
+            routing: "least-loaded".to_string(),
+            min_soc: 0.2,
+            battery_capacity_j: 0.0,
+            battery_dod_floor: 0.2,
+            panel_area_m2: 0.06,
+            panel_efficiency: 0.3,
+            panel_pointing: 0.6,
+            interarrival_s: 1800.0,
+            data_gb_lo: 0.5,
+            data_gb_hi: 8.0,
+            horizon_hours: 48.0,
+        }
+    }
+
+    pub fn routing_policy(&self) -> anyhow::Result<RoutingPolicy> {
+        Ok(match self.routing.as_str() {
+            "round-robin" => RoutingPolicy::RoundRobin,
+            "least-loaded" => RoutingPolicy::LeastLoaded,
+            "contact-aware" => RoutingPolicy::ContactAware,
+            "energy-aware" => RoutingPolicy::EnergyAware {
+                min_soc: self.min_soc,
+            },
+            other => anyhow::bail!(
+                "unknown routing policy `{other}` \
+                 (round-robin|least-loaded|contact-aware|energy-aware)"
+            ),
+        })
+    }
+
+    pub fn pattern(&self) -> anyhow::Result<WalkerPattern> {
+        anyhow::ensure!(self.sats > 0 && self.planes > 0, "empty constellation");
+        anyhow::ensure!(
+            self.sats % self.planes == 0,
+            "satellites ({}) must divide evenly into planes ({})",
+            self.sats,
+            self.planes
+        );
+        anyhow::ensure!(self.phasing < self.planes, "phasing must be < planes");
+        Ok(WalkerPattern::new(
+            self.sats,
+            self.planes,
+            self.phasing,
+            self.inclination_deg,
+            self.altitude_km,
+        ))
+    }
+
+    pub fn ground_station(&self) -> GroundStation {
+        GroundStation::new(&self.gs_name, self.gs_lat_deg, self.gs_lon_deg)
+            .with_elevation_mask(self.gs_min_elevation_deg)
+    }
+
+    pub fn horizon(&self) -> Seconds {
+        Seconds::from_hours(self.horizon_hours)
+    }
+
+    /// The capture workload this scenario describes.
+    pub fn workload(&self) -> PoissonWorkload {
+        PoissonWorkload::new(
+            1.0 / self.interarrival_s,
+            SizeDist::LogUniform(
+                Bytes::from_gb(self.data_gb_lo),
+                Bytes::from_gb(self.data_gb_hi),
+            ),
+        )
+    }
+
+    /// Build the fleet DES configuration: one [`SatelliteSpec`] per Walker
+    /// slot, each with its own contact model (and battery, when
+    /// configured), live-telemetry solves, and the scenario's horizon.
+    pub fn sim_config(&self, profile: ModelProfile) -> anyhow::Result<FleetSimConfig> {
+        let constellation = self.pattern()?.build();
+        let gs = self.ground_station();
+        let horizon_s = self.horizon().value();
+        let t_cyc = Seconds::from_hours(self.base.t_cyc_hours);
+        let t_con = Seconds::from_minutes(self.base.t_con_minutes);
+        let mut sats = Vec::with_capacity(constellation.len());
+        for (id, sat) in constellation.satellites.iter().enumerate() {
+            let contact: Box<dyn ContactModel> = match self.contact_source {
+                ContactSource::Periodic => Box::new(
+                    PeriodicContact::new(t_cyc, t_con).with_phase(Seconds(
+                        t_cyc.value() * id as f64 / constellation.len() as f64,
+                    )),
+                ),
+                ContactSource::Orbit => Box::new(ScheduleContact::new(
+                    ContactSchedule::compute(&sat.orbit, &gs, horizon_s, 30.0),
+                )),
+            };
+            let mut spec = SatelliteSpec::new(&sat.name, contact);
+            if self.battery_capacity_j > 0.0 {
+                let sunlit = 1.0 - eclipse_fraction(&sat.orbit);
+                spec = spec.with_battery(
+                    Battery::new(Joules(self.battery_capacity_j), self.battery_dod_floor),
+                    SolarPanel::new(
+                        self.panel_area_m2,
+                        self.panel_efficiency,
+                        self.panel_pointing,
+                    ),
+                    sunlit,
+                );
+            }
+            sats.push(spec);
+        }
+        Ok(FleetSimConfig {
+            template: self.base.instance_builder(profile.clone()),
+            profiles: vec![profile],
+            sats,
+            routing: self.routing_policy()?,
+            telemetry: TelemetryMode::Live,
+            horizon: self.horizon(),
+        })
+    }
+
+    // ------------------------------------------------------------- file io
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("base", self.base.to_json()),
+            ("sats", Json::num(self.sats as f64)),
+            ("planes", Json::num(self.planes as f64)),
+            ("phasing", Json::num(self.phasing as f64)),
+            ("altitude_km", Json::num(self.altitude_km)),
+            ("inclination_deg", Json::num(self.inclination_deg)),
+            ("gs_name", Json::str(self.gs_name.clone())),
+            ("gs_lat_deg", Json::num(self.gs_lat_deg)),
+            ("gs_lon_deg", Json::num(self.gs_lon_deg)),
+            ("gs_min_elevation_deg", Json::num(self.gs_min_elevation_deg)),
+            ("contact_source", Json::str(self.contact_source.as_str())),
+            ("routing", Json::str(self.routing.clone())),
+            ("min_soc", Json::num(self.min_soc)),
+            ("battery_capacity_j", Json::num(self.battery_capacity_j)),
+            ("battery_dod_floor", Json::num(self.battery_dod_floor)),
+            ("panel_area_m2", Json::num(self.panel_area_m2)),
+            ("panel_efficiency", Json::num(self.panel_efficiency)),
+            ("panel_pointing", Json::num(self.panel_pointing)),
+            ("interarrival_s", Json::num(self.interarrival_s)),
+            ("data_gb_lo", Json::num(self.data_gb_lo)),
+            ("data_gb_hi", Json::num(self.data_gb_hi)),
+            ("horizon_hours", Json::num(self.horizon_hours)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<FleetScenario> {
+        let d = FleetScenario::walker_631();
+        let base = match v.opt("base") {
+            Some(b) => Scenario::from_json(b)?,
+            None => d.base,
+        };
+        Ok(FleetScenario {
+            name: v.str_or("name", &d.name)?.to_string(),
+            base,
+            sats: v.usize_or("sats", d.sats)?,
+            planes: v.usize_or("planes", d.planes)?,
+            phasing: v.usize_or("phasing", d.phasing)?,
+            altitude_km: v.f64_or("altitude_km", d.altitude_km)?,
+            inclination_deg: v.f64_or("inclination_deg", d.inclination_deg)?,
+            gs_name: v.str_or("gs_name", &d.gs_name)?.to_string(),
+            gs_lat_deg: v.f64_or("gs_lat_deg", d.gs_lat_deg)?,
+            gs_lon_deg: v.f64_or("gs_lon_deg", d.gs_lon_deg)?,
+            gs_min_elevation_deg: v.f64_or("gs_min_elevation_deg", d.gs_min_elevation_deg)?,
+            contact_source: ContactSource::from_name(
+                v.str_or("contact_source", d.contact_source.as_str())?,
+            )?,
+            routing: v.str_or("routing", &d.routing)?.to_string(),
+            min_soc: v.f64_or("min_soc", d.min_soc)?,
+            battery_capacity_j: v.f64_or("battery_capacity_j", d.battery_capacity_j)?,
+            battery_dod_floor: v.f64_or("battery_dod_floor", d.battery_dod_floor)?,
+            panel_area_m2: v.f64_or("panel_area_m2", d.panel_area_m2)?,
+            panel_efficiency: v.f64_or("panel_efficiency", d.panel_efficiency)?,
+            panel_pointing: v.f64_or("panel_pointing", d.panel_pointing)?,
+            interarrival_s: v.f64_or("interarrival_s", d.interarrival_s)?,
+            data_gb_lo: v.f64_or("data_gb_lo", d.data_gb_lo)?,
+            data_gb_hi: v.f64_or("data_gb_hi", d.data_gb_hi)?,
+            horizon_hours: v.f64_or("horizon_hours", d.horizon_hours)?,
+        })
+    }
+
+    pub fn save(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Load from a `.json` file or (by extension) the TOML subset.
+    pub fn load(path: &str) -> anyhow::Result<FleetScenario> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = if path.ends_with(".toml") {
+            crate::util::toml::parse(&text)?
+        } else {
+            Json::parse(&text)?
+        };
+        FleetScenario::from_json(&doc)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -269,5 +568,100 @@ mod tests {
         s.save(path).unwrap();
         assert_eq!(Scenario::load(path).unwrap(), s);
         let _ = std::fs::remove_file(path);
+    }
+
+    // ------------------------------------------------------------- fleet
+
+    #[test]
+    fn fleet_json_roundtrip_exact() {
+        let mut f = FleetScenario::walker_631();
+        f.contact_source = ContactSource::Orbit;
+        f.routing = "energy-aware".to_string();
+        f.battery_capacity_j = 1.0e5;
+        f.base = Scenario::transmission_dominant();
+        let back = FleetScenario::from_json(&f.to_json()).unwrap();
+        assert_eq!(f, back);
+    }
+
+    #[test]
+    fn fleet_partial_json_uses_defaults() {
+        let v = Json::parse(r#"{"sats": 12, "planes": 4, "routing": "round-robin"}"#).unwrap();
+        let f = FleetScenario::from_json(&v).unwrap();
+        assert_eq!(f.sats, 12);
+        assert_eq!(f.planes, 4);
+        assert_eq!(f.routing, "round-robin");
+        assert_eq!(f.altitude_km, 500.0); // default
+        assert_eq!(f.base.rate_mbps, 55.0); // default base
+    }
+
+    #[test]
+    fn fleet_loads_from_toml() {
+        let toml = r#"
+name = "toml-fleet"          # the TOML subset: comments, sections
+sats = 4
+planes = 2
+phasing = 1
+contact_source = "periodic"
+routing = "contact-aware"
+horizon_hours = 24.0
+
+[base]
+rate_mbps = 20.0
+data_gb = 5.0
+"#;
+        let dir = std::env::temp_dir().join("leo_infer_fleet_test.toml");
+        let path = dir.to_str().unwrap();
+        std::fs::write(path, toml).unwrap();
+        let f = FleetScenario::load(path).unwrap();
+        let _ = std::fs::remove_file(path);
+        assert_eq!(f.name, "toml-fleet");
+        assert_eq!(f.sats, 4);
+        assert_eq!(f.planes, 2);
+        assert_eq!(f.routing, "contact-aware");
+        assert_eq!(f.base.rate_mbps, 20.0);
+        assert_eq!(f.base.data_gb, 5.0);
+        assert_eq!(f.base.t_cyc_hours, 8.0); // base defaults still apply
+        assert_eq!(f.horizon_hours, 24.0);
+    }
+
+    #[test]
+    fn fleet_sim_config_builds_one_spec_per_slot() {
+        let mut rng = Pcg64::seeded(4);
+        let f = FleetScenario::walker_631();
+        let cfg = f.sim_config(ModelProfile::sampled(8, &mut rng)).unwrap();
+        assert_eq!(cfg.sats.len(), 6);
+        assert_eq!(cfg.sats[0].name, "sat-p0s0");
+        assert!(cfg.sats.iter().all(|s| s.battery.is_none()));
+        assert_eq!(cfg.horizon, Seconds::from_hours(48.0));
+        // staggered periodic phases: no two sats share a window start
+        assert!(cfg.sats[0].contact.is_up(0.0));
+        assert!(!cfg.sats[1].contact.is_up(0.0));
+    }
+
+    #[test]
+    fn fleet_battery_config_attaches_batteries() {
+        let mut rng = Pcg64::seeded(5);
+        let mut f = FleetScenario::walker_631();
+        f.battery_capacity_j = 2.0e5;
+        let cfg = f.sim_config(ModelProfile::sampled(8, &mut rng)).unwrap();
+        for s in &cfg.sats {
+            let (b, _, sunlit) = s.battery.as_ref().expect("battery configured");
+            assert_eq!(b.capacity(), Joules(2.0e5));
+            assert!((0.0..=1.0).contains(sunlit));
+        }
+    }
+
+    #[test]
+    fn fleet_validation_errors() {
+        let mut f = FleetScenario::walker_631();
+        f.routing = "nope".to_string();
+        assert!(f.routing_policy().is_err());
+        let mut g = FleetScenario::walker_631();
+        g.sats = 7; // does not divide into 3 planes
+        assert!(g.pattern().is_err());
+        let mut h = FleetScenario::walker_631();
+        h.phasing = 3;
+        assert!(h.pattern().is_err());
+        assert!(ContactSource::from_name("weekly").is_err());
     }
 }

@@ -72,25 +72,49 @@ pub enum Layer {
 }
 
 /// Error for invalid layer/shape combinations.
-#[derive(Debug, thiserror::Error, PartialEq)]
+/// (`thiserror` is unavailable offline, so `Display`/`Error` are manual.)
+#[derive(Debug, PartialEq)]
 pub enum ShapeError {
-    #[error("layer `{layer}` expects a CHW input, got flat")]
     NeedsChw { layer: String },
-    #[error("layer `{layer}` expects a flat input, got CHW")]
     NeedsFlat { layer: String },
-    #[error("kernel {kernel} larger than padded input {padded} in `{layer}`")]
     KernelTooLarge {
         layer: String,
         kernel: usize,
         padded: usize,
     },
-    #[error("residual block `{name}` does not preserve shape ({got:?} vs {want:?})")]
     ResidualMismatch {
         name: String,
         got: Shape,
         want: Shape,
     },
 }
+
+impl std::fmt::Display for ShapeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShapeError::NeedsChw { layer } => {
+                write!(f, "layer `{layer}` expects a CHW input, got flat")
+            }
+            ShapeError::NeedsFlat { layer } => {
+                write!(f, "layer `{layer}` expects a flat input, got CHW")
+            }
+            ShapeError::KernelTooLarge {
+                layer,
+                kernel,
+                padded,
+            } => write!(
+                f,
+                "kernel {kernel} larger than padded input {padded} in `{layer}`"
+            ),
+            ShapeError::ResidualMismatch { name, got, want } => write!(
+                f,
+                "residual block `{name}` does not preserve shape ({got:?} vs {want:?})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ShapeError {}
 
 fn conv_out(dim: usize, kernel: usize, stride: usize, padding: usize) -> Result<usize, ()> {
     let padded = dim + 2 * padding;

@@ -20,8 +20,11 @@
 //! * [`energy`] — on-board power model (Eq. 6/7), battery and solar harvest.
 //! * [`dnn`] — layer-level DNN profiles: per-layer output sizes (`α_k`),
 //!   FLOPs, and a model zoo computed analytically from layer shapes.
-//! * [`sim`] — a discrete-event constellation simulator used to validate
-//!   the closed-form latency/energy model under queueing and contention.
+//! * [`sim`] — a fleet-scale discrete-event simulator: N satellites with
+//!   per-satellite batteries, contact models ([`sim::ContactModel`]:
+//!   periodic, flaky, or orbit-derived), coordinator routing, and
+//!   telemetry-fed solves; validates the closed-form latency/energy model
+//!   under queueing and contention as its N = 1 special case.
 //! * [`coordinator`] — the serving runtime: request router, dynamic
 //!   batcher, contact-aware scheduler, admission control.
 //! * [`runtime`] — PJRT execution of AOT-compiled model stages; the chosen

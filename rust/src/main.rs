@@ -144,7 +144,32 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
         .opt("lambda", "latency weight (empty = preset)", Some(""))
         .opt("depth", "K for the sampled profile", Some("10"))
         .opt("seed", "RNG seed", Some("42"))
+        .opt(
+            "fleet",
+            "Walker spec T/P/F (e.g. 6/3/1) — run the fleet DES (empty = single satellite)",
+            Some(""),
+        )
+        .opt(
+            "fleet-config",
+            "FleetScenario file, .json or .toml (overrides --fleet and workload flags)",
+            Some(""),
+        )
+        .opt(
+            "routing",
+            "round-robin|least-loaded|contact-aware|energy-aware (fleet only)",
+            Some("least-loaded"),
+        )
+        .opt(
+            "contact",
+            "periodic|orbit — fleet contact-window source",
+            Some("periodic"),
+        )
         .parse_from(argv)?;
+    let fleet_config = args.get_str("fleet-config").unwrap_or("").to_string();
+    let fleet_spec = args.get_str("fleet").unwrap_or("").to_string();
+    if !fleet_config.is_empty() || !fleet_spec.is_empty() {
+        return simulate_fleet(&args, &fleet_config, &fleet_spec);
+    }
     let scenario = scenario_from(&args)?;
     let mut rng = Pcg64::seeded(args.get_u64("seed")?);
     let horizon = Seconds::from_hours(args.get_f64("hours")?);
@@ -166,12 +191,26 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
         horizon,
     };
     let result = Simulator::new(config).run(&trace, &engine);
-    let m = &result.metrics;
+    print_sim_summary(&result.metrics, trace.len(), horizon);
     println!(
-        "requests    : {} submitted, {} completed, {} rejected",
-        trace.len(),
+        "energy      : {:.1} J on-board total",
+        result.state.energy_drawn.value()
+    );
+    print_engine_stats(&engine);
+    Ok(())
+}
+
+/// The aggregate block shared by the single-satellite and fleet summaries.
+fn print_sim_summary(m: &leo_infer::sim::SimMetrics, submitted: usize, horizon: Seconds) {
+    println!(
+        "requests    : {} submitted, {} completed, {} rejected \
+         ({} admission / {} transmit), {} unfinished at horizon",
+        submitted,
         m.completed(),
-        m.rejected
+        m.rejected(),
+        m.rejected_admission,
+        m.rejected_transmit,
+        m.unfinished
     );
     println!(
         "latency     : mean {:.1} s, p50 {:.1} s, p99 {:.1} s",
@@ -179,12 +218,11 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
         m.latency_p50().value(),
         m.latency_p99().value()
     );
-    println!(
-        "energy      : {:.1} J on-board total",
-        result.state.energy_drawn.value()
-    );
     println!("downlinked  : {:.2} GB", m.total_downlinked.gb());
     println!("throughput  : {:.4} req/s", m.throughput(horizon));
+}
+
+fn print_engine_stats(engine: &leo_infer::solver::SolverEngine) {
     let stats = engine.stats();
     println!(
         "solver      : {} solves, {} cache hits ({:.1}% skipped), {:.1} ms solving",
@@ -193,6 +231,80 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
         stats.hit_rate() * 100.0,
         stats.solve_time_s * 1e3
     );
+}
+
+/// `simulate --fleet T/P/F` / `simulate --fleet-config file`: the
+/// constellation DES with coordinator routing and telemetry-fed solves.
+fn simulate_fleet(args: &Args, fleet_config: &str, fleet_spec: &str) -> anyhow::Result<()> {
+    use leo_infer::config::{ContactSource, FleetScenario};
+    use leo_infer::sim::fleet::FleetSimulator;
+
+    let fleet = if !fleet_config.is_empty() {
+        FleetScenario::load(fleet_config)?
+    } else {
+        let parts: Vec<&str> = fleet_spec.split('/').collect();
+        anyhow::ensure!(
+            parts.len() == 3,
+            "--fleet expects T/P/F (e.g. 6/3/1), got `{fleet_spec}`"
+        );
+        let mut f = FleetScenario::walker_631();
+        f.sats = parts[0]
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--fleet T: {e}"))?;
+        f.planes = parts[1]
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--fleet P: {e}"))?;
+        f.phasing = parts[2]
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--fleet F: {e}"))?;
+        f.name = format!("walker-{}-{}-{}", f.sats, f.planes, f.phasing);
+        f.base = scenario_from(args)?;
+        f.routing = args.get_str("routing").unwrap_or("least-loaded").to_string();
+        f.contact_source = ContactSource::from_name(args.get_str("contact").unwrap_or("periodic"))?;
+        f.horizon_hours = args.get_f64("hours")?;
+        f.interarrival_s = args.get_f64("interarrival-s")?;
+        let hi = args.get_f64("data-gb")?;
+        f.data_gb_lo = hi / 10.0;
+        f.data_gb_hi = hi;
+        f
+    };
+    let mut rng = Pcg64::seeded(args.get_u64("seed")?);
+    let trace = fleet.workload().generate(fleet.horizon(), &mut rng);
+    let profile = ModelProfile::sampled(args.get_usize("depth")?, &mut rng);
+    let engine = SolverRegistry::engine(args.get_str("policy").unwrap())?;
+    let sim = FleetSimulator::new(fleet.sim_config(profile)?);
+    let result = sim.run(&trace, &engine);
+    let m = &result.metrics;
+    println!(
+        "fleet       : {} — {} sats / {} planes / F={} @ {} km, routing {}, contacts {}",
+        fleet.name,
+        fleet.sats,
+        fleet.planes,
+        fleet.phasing,
+        fleet.altitude_km,
+        fleet.routing,
+        fleet.contact_source.as_str()
+    );
+    print_sim_summary(m, trace.len(), fleet.horizon());
+    println!("\nper-satellite:");
+    println!(
+        "{:<10} {:>10} {:>9} {:>8} {:>11} {:>13} {:>10} {:>7}",
+        "sat", "completed", "rej(adm)", "rej(tx)", "unfinished", "mean lat(s)", "down(GB)", "SoC%"
+    );
+    for (id, sat) in m.per_sat().iter().enumerate() {
+        println!(
+            "{:<10} {:>10} {:>9} {:>8} {:>11} {:>13.1} {:>10.2} {:>6.1}%",
+            sat.name,
+            sat.completed,
+            sat.rejected_admission,
+            sat.rejected_transmit,
+            sat.unfinished,
+            sat.mean_latency().value(),
+            sat.downlinked.gb(),
+            result.states[id].soc() * 100.0
+        );
+    }
+    print_engine_stats(&engine);
     Ok(())
 }
 

@@ -1,16 +1,51 @@
-//! Phase-aware periodic contact windows.
+//! Contact windows for the DES transmitter.
 //!
 //! The closed form (Eq. 3) counts whole contact periods; the DES needs the
 //! exact finish time of a transmission that starts at an arbitrary phase of
-//! the cycle. [`PeriodicContact`] models the paper's schedule — a window of
-//! `t_con` seconds opening every `t_cyc` seconds — and answers:
-//! "starting a `bytes`-sized transfer at time `t`, when does it finish?"
+//! the cycle. Two concrete models answer that, unified behind the
+//! [`ContactModel`] trait so the fleet simulator is agnostic to where its
+//! windows come from:
 //!
-//! Either constructed directly from `(t_cyc, t_con)` (paper preset) or
-//! fitted from a real [`crate::orbit::ContactSchedule`].
+//! * [`PeriodicContact`] — the paper's schedule (a window of `t_con`
+//!   seconds opening every `t_cyc` seconds), with optional deterministic
+//!   Bernoulli pass outages (the "flaky link" variant).
+//! * [`ScheduleContact`] — first-principles geometry: wraps a propagated
+//!   [`crate::orbit::ContactSchedule`] and walks its explicit windows.
+//!
+//! `PeriodicContact` can also be *fitted* from a real schedule
+//! ([`PeriodicContact::fit`]) when a scenario wants the paper's periodic
+//! abstraction with physically derived parameters.
 
 use crate::orbit::contact::ContactSchedule;
 use crate::util::units::{BitsPerSec, Bytes, Seconds};
+
+/// A source of contact windows, as the DES transmitter sees it.
+///
+/// All times are absolute simulation seconds. Implementations must be
+/// deterministic: the fleet simulator's reproducibility rests on it.
+pub trait ContactModel {
+    /// Is the link up at time `t`?
+    fn is_up(&self, t: f64) -> bool;
+
+    /// Usable link time remaining in the window containing `t`
+    /// ([`Seconds::ZERO`] when out of contact). Feeds the engine's
+    /// `contact_remaining` telemetry.
+    fn remaining_window(&self, t: f64) -> Seconds;
+
+    /// Finish time of a transfer of `bytes` at `rate` starting at `start`
+    /// (transmits only while in contact; resumes across windows). `None`
+    /// when the model's knowledge of future windows runs out before the
+    /// transfer can complete — a finite [`ScheduleContact`] ends, whereas a
+    /// periodic pattern always answers.
+    fn finish_transfer(&self, start: f64, bytes: Bytes, rate: BitsPerSec) -> Option<f64>;
+
+    /// Usable link time available in `[t, t + horizon)`.
+    fn usable_link_time(&self, t: f64, horizon: f64) -> f64;
+
+    /// Seconds from `t` until a link is available (0 when in contact);
+    /// `None` when no further window is known.
+    fn time_to_next_contact(&self, t: f64) -> Option<f64>;
+}
 
 /// Periodic contact pattern with phase 0 at t = 0 (window open during
 /// `[n·t_cyc, n·t_cyc + t_con)`).
@@ -176,6 +211,106 @@ impl PeriodicContact {
     /// equals `bytes/rate`; exposed for energy accounting symmetry.
     pub fn active_transmit_time(&self, bytes: Bytes, rate: BitsPerSec) -> Seconds {
         rate.transfer_time(bytes)
+    }
+}
+
+impl ContactModel for PeriodicContact {
+    fn is_up(&self, t: f64) -> bool {
+        self.in_contact(t)
+    }
+
+    fn remaining_window(&self, t: f64) -> Seconds {
+        if !self.in_contact(t) {
+            return Seconds::ZERO;
+        }
+        let rel = (t - self.phase.value()).rem_euclid(self.t_cyc.value());
+        Seconds(self.t_con.value() - rel)
+    }
+
+    fn finish_transfer(&self, start: f64, bytes: Bytes, rate: BitsPerSec) -> Option<f64> {
+        Some(PeriodicContact::transfer_finish(self, start, bytes, rate))
+    }
+
+    fn usable_link_time(&self, t: f64, horizon: f64) -> f64 {
+        self.link_time_within(t, horizon)
+    }
+
+    fn time_to_next_contact(&self, t: f64) -> Option<f64> {
+        if self.in_contact(t) {
+            return Some(0.0);
+        }
+        Some((self.next_window_start(t) - t).max(0.0))
+    }
+}
+
+/// Contact windows taken verbatim from a propagated
+/// [`crate::orbit::ContactSchedule`] — the first-principles source for
+/// fleet scenarios where every satellite has its own pass geometry.
+///
+/// Unlike [`PeriodicContact`], the schedule is finite: transfers that
+/// cannot complete before its last window closes report `None`, and the
+/// fleet simulator counts the request as unfinished.
+#[derive(Debug, Clone)]
+pub struct ScheduleContact {
+    pub schedule: ContactSchedule,
+}
+
+impl ScheduleContact {
+    pub fn new(schedule: ContactSchedule) -> Self {
+        ScheduleContact { schedule }
+    }
+}
+
+impl ContactModel for ScheduleContact {
+    fn is_up(&self, t: f64) -> bool {
+        self.schedule.window_at(t).is_some()
+    }
+
+    fn remaining_window(&self, t: f64) -> Seconds {
+        self.schedule
+            .window_at(t)
+            .map_or(Seconds::ZERO, |w| Seconds(w.end_s - t))
+    }
+
+    fn finish_transfer(&self, start: f64, bytes: Bytes, rate: BitsPerSec) -> Option<f64> {
+        if bytes.value() <= 0.0 {
+            return Some(start);
+        }
+        let mut remaining_s = rate.transfer_time(bytes).value();
+        // first window that ends after `start`
+        let idx = self.schedule.windows.partition_point(|w| w.end_s <= start);
+        for w in &self.schedule.windows[idx..] {
+            let open = w.start_s.max(start);
+            let avail = w.end_s - open;
+            if avail <= 0.0 {
+                continue;
+            }
+            if remaining_s <= avail {
+                return Some(open + remaining_s);
+            }
+            remaining_s -= avail;
+        }
+        None
+    }
+
+    fn usable_link_time(&self, t: f64, horizon: f64) -> f64 {
+        let end = t + horizon;
+        let mut acc = 0.0;
+        for w in &self.schedule.windows {
+            if w.start_s >= end {
+                break;
+            }
+            let lo = t.max(w.start_s);
+            let hi = end.min(w.end_s);
+            if hi > lo {
+                acc += hi - lo;
+            }
+        }
+        acc
+    }
+
+    fn time_to_next_contact(&self, t: f64) -> Option<f64> {
+        self.schedule.wait_until_contact(t).map(|w| w.value())
     }
 }
 
@@ -350,5 +485,94 @@ mod tests {
             c.transfer_finish(42.0, Bytes::ZERO, BitsPerSec::from_mbps(10.0)),
             42.0
         );
+    }
+
+    // ---------------------------------------------- ContactModel trait
+
+    use crate::orbit::contact::ContactWindow;
+
+    /// A hand-built schedule mirroring the Tiansuan periodic pattern over
+    /// `n` cycles, so the two models can be compared window for window.
+    fn periodic_as_schedule(n: usize) -> ScheduleContact {
+        let windows = (0..n)
+            .map(|i| ContactWindow {
+                start_s: i as f64 * 8.0 * 3600.0,
+                end_s: i as f64 * 8.0 * 3600.0 + 360.0,
+                max_elevation_deg: 90.0,
+            })
+            .collect();
+        ScheduleContact::new(ContactSchedule {
+            windows,
+            horizon_s: n as f64 * 8.0 * 3600.0,
+        })
+    }
+
+    #[test]
+    fn schedule_contact_matches_periodic_on_aligned_windows() {
+        let periodic = tiansuan();
+        let sched = periodic_as_schedule(20);
+        let rate = BitsPerSec::from_mbps(100.0);
+        let per_window = rate.data_in(Seconds::from_minutes(6.0));
+        for (start, factor) in [(0.0, 0.3), (180.0, 1.0), (3600.0, 2.5), (30_000.0, 4.2)] {
+            let bytes = Bytes(per_window.value() * factor);
+            let a = ContactModel::finish_transfer(&periodic, start, bytes, rate).unwrap();
+            let b = sched.finish_transfer(start, bytes, rate).unwrap();
+            assert!(
+                (a - b).abs() < 1e-6,
+                "start {start}, factor {factor}: periodic {a} vs schedule {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn schedule_contact_reports_exhaustion() {
+        let sched = periodic_as_schedule(2);
+        let rate = BitsPerSec::from_mbps(100.0);
+        // three windows' worth of data, two windows of schedule: no finish
+        let bytes = Bytes(rate.data_in(Seconds::from_minutes(6.0)).value() * 3.0);
+        assert_eq!(sched.finish_transfer(0.0, bytes, rate), None);
+        // but a fitting transfer still completes
+        let small = rate.data_in(Seconds(30.0));
+        assert_eq!(sched.finish_transfer(0.0, small, rate), Some(30.0));
+        assert_eq!(sched.finish_transfer(99.0, Bytes::ZERO, rate), Some(99.0));
+    }
+
+    #[test]
+    fn remaining_window_agrees_across_models() {
+        let periodic = tiansuan();
+        let sched = periodic_as_schedule(3);
+        for t in [0.0, 100.0, 359.0, 360.0, 4000.0, 8.0 * 3600.0 + 60.0] {
+            let a = periodic.remaining_window(t).value();
+            let b = sched.remaining_window(t).value();
+            assert!((a - b).abs() < 1e-9, "t = {t}: {a} vs {b}");
+        }
+        assert_eq!(periodic.remaining_window(0.0), Seconds(360.0));
+        assert_eq!(periodic.remaining_window(500.0), Seconds::ZERO);
+    }
+
+    #[test]
+    fn time_to_next_contact_semantics() {
+        let periodic = tiansuan();
+        assert_eq!(ContactModel::time_to_next_contact(&periodic, 100.0), Some(0.0));
+        assert_eq!(
+            ContactModel::time_to_next_contact(&periodic, 1000.0),
+            Some(8.0 * 3600.0 - 1000.0)
+        );
+        let sched = periodic_as_schedule(2);
+        assert_eq!(sched.time_to_next_contact(10.0), Some(0.0));
+        assert_eq!(sched.time_to_next_contact(400.0), Some(8.0 * 3600.0 - 400.0));
+        // past the last window: nothing left
+        assert_eq!(sched.time_to_next_contact(17.0 * 3600.0), None);
+    }
+
+    #[test]
+    fn usable_link_time_agrees_across_models() {
+        let periodic = tiansuan();
+        let sched = periodic_as_schedule(3);
+        for (t, horizon) in [(0.0, 100.0), (0.0, 16.0 * 3600.0), (1000.0, 1000.0)] {
+            let a = periodic.usable_link_time(t, horizon);
+            let b = sched.usable_link_time(t, horizon);
+            assert!((a - b).abs() < 1e-9, "t={t} h={horizon}: {a} vs {b}");
+        }
     }
 }

@@ -79,6 +79,13 @@ impl SatelliteState {
         self.battery.as_ref().map_or(1.0, Battery::soc)
     }
 
+    /// Bring the energy ledger current through `now` and report the state
+    /// of charge — the fleet simulator's per-arrival telemetry observation.
+    pub fn refresh(&mut self, now: f64) -> f64 {
+        self.accrue_harvest(now);
+        self.soc()
+    }
+
     fn accrue_harvest(&mut self, now: f64) {
         let dt = now - self.last_energy_update;
         self.last_energy_update = now;

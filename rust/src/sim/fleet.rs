@@ -1,0 +1,537 @@
+//! The fleet-scale discrete-event simulator.
+//!
+//! Where [`super::runner::Simulator`] models the paper's single satellite,
+//! [`FleetSimulator`] owns N satellites — each with its own battery,
+//! solar/eclipse harvest, processing FIFO, transmitter FIFO, and
+//! [`ContactModel`] — and routes every arrival through a coordinator
+//! [`RoutingPolicy`] before solving its offloading split. Per-request flow:
+//!
+//! ```text
+//! Arrival ──route──► satellite j ──(telemetry-fed solve: split s)──►
+//!     proc FIFO_j ──SatDone──┐ s == K: complete
+//!                            │ s <  K:
+//!     tx FIFO_j (contact_j) ──TxDone──► cloud ──CloudDone──► complete
+//! ```
+//!
+//! In [`TelemetryMode::Live`] each solve sees the chosen satellite's
+//! battery SoC, remaining contact window, and queue depth — the serving
+//! system's context-aware path. [`TelemetryMode::Unconstrained`]
+//! reproduces the paper's setting (the DES itself models the physical
+//! constraints); the single-satellite [`super::runner::Simulator`] is a
+//! thin N = 1 wrapper over this mode and stays bit-identical to its
+//! pre-fleet behavior.
+//!
+//! The event loop enforces [`FleetSimConfig::horizon`]: events scheduled
+//! past it are dropped and their requests counted as
+//! [`SimMetrics::unfinished`].
+
+use super::contact::ContactModel;
+use super::engine::EventQueue;
+use super::entities::SatelliteState;
+use super::metrics::{RequestRecord, SimMetrics};
+use super::workload::Request;
+use crate::coordinator::router::{Router, RoutingPolicy};
+use crate::coordinator::state::{ClusterState, SatelliteInfo};
+use crate::dnn::profile::ModelProfile;
+use crate::energy::battery::Battery;
+use crate::energy::solar::SolarPanel;
+use crate::solver::engine::{SolverEngine, Telemetry};
+use crate::solver::instance::{Instance, InstanceBuilder};
+use crate::util::units::{BitsPerSec, Bytes, Joules, Seconds};
+
+/// One satellite of the fleet: its contact window source and (optionally)
+/// its energy subsystem.
+pub struct SatelliteSpec {
+    pub name: String,
+    pub contact: Box<dyn ContactModel>,
+    /// `(battery, panel, orbit-average sunlit fraction)`; `None` = the
+    /// paper's unconstrained-energy setting.
+    pub battery: Option<(Battery, SolarPanel, f64)>,
+}
+
+impl SatelliteSpec {
+    pub fn new(name: &str, contact: Box<dyn ContactModel>) -> Self {
+        SatelliteSpec {
+            name: name.to_string(),
+            contact,
+            battery: None,
+        }
+    }
+
+    pub fn with_battery(mut self, battery: Battery, panel: SolarPanel, avg_sunlit: f64) -> Self {
+        self.battery = Some((battery, panel, avg_sunlit));
+        self
+    }
+}
+
+/// What the per-arrival solve gets to see.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TelemetryMode {
+    /// Solve under [`Telemetry::unconstrained`] — the paper's evaluation
+    /// setting, and the mode the legacy single-satellite wrapper uses so
+    /// its closed-form validation stays bit-identical.
+    Unconstrained,
+    /// Feed the chosen satellite's live SoC, remaining contact window, and
+    /// queue depth into every solve.
+    Live,
+}
+
+/// Scenario configuration for one fleet run.
+pub struct FleetSimConfig {
+    /// Template instance builder invoked per request (data size swapped in).
+    pub template: InstanceBuilder,
+    /// Model profiles, indexed by `Request::model`.
+    pub profiles: Vec<ModelProfile>,
+    /// The fleet, indexed by satellite id (the router's key space).
+    pub sats: Vec<SatelliteSpec>,
+    /// How arrivals are assigned to satellites.
+    pub routing: RoutingPolicy,
+    /// What the per-arrival solve sees.
+    pub telemetry: TelemetryMode,
+    /// Simulation horizon: events past it are dropped and counted as
+    /// unfinished.
+    pub horizon: Seconds,
+}
+
+/// Result of a fleet run.
+pub struct FleetResult {
+    /// Aggregate metrics; [`SimMetrics::per_sat`] has the breakdown.
+    pub metrics: SimMetrics,
+    /// Final per-satellite state, indexed by satellite id.
+    pub states: Vec<SatelliteState>,
+    pub horizon: Seconds,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Event {
+    Arrival(usize),
+    SatDone(usize),
+    TxDone(usize),
+    CloudDone(usize),
+}
+
+/// Per-request in-flight bookkeeping.
+#[derive(Debug, Clone)]
+struct Flight {
+    sat: usize,
+    split: usize,
+    depth: usize,
+    energy: Joules,
+    // cached costs from the decision instance
+    t_gc: Seconds,
+    t_cloud_suffix: Seconds,
+    tx_bytes: Bytes,
+    e_off: Joules,
+}
+
+pub struct FleetSimulator {
+    pub config: FleetSimConfig,
+    /// Mutable per-satellite state, indexed like `config.sats`.
+    pub states: Vec<SatelliteState>,
+    /// Downlink rate, resolved once from the template instead of
+    /// rebuilding an `Instance` per transmission event.
+    rate: BitsPerSec,
+}
+
+impl FleetSimulator {
+    pub fn new(config: FleetSimConfig) -> Self {
+        assert!(!config.sats.is_empty(), "fleet must have ≥ 1 satellite");
+        assert!(!config.profiles.is_empty(), "fleet needs ≥ 1 model profile");
+        let rate = config
+            .template
+            .clone()
+            .build()
+            .expect("template must be valid")
+            .downlink
+            .rate;
+        let states = config
+            .sats
+            .iter()
+            .map(|s| match &s.battery {
+                None => SatelliteState::new(),
+                Some((b, p, sunlit)) => SatelliteState::new().with_battery(*b, *p, *sunlit),
+            })
+            .collect();
+        FleetSimulator {
+            config,
+            states,
+            rate,
+        }
+    }
+
+    /// Build the per-request ILP instance (template + this request's D and
+    /// model profile).
+    fn instance_for(&self, req: &Request) -> Instance {
+        let profile = self.config.profiles[req.model % self.config.profiles.len()].clone();
+        self.config
+            .template
+            .clone()
+            .profile(profile)
+            .data(req.data)
+            .build()
+            .expect("template must be valid")
+    }
+
+    /// The live context the engine sees for a solve on satellite `sat`.
+    fn telemetry_for(&mut self, sat: usize, now: f64, queue_depth: usize) -> Telemetry {
+        match self.config.telemetry {
+            TelemetryMode::Unconstrained => Telemetry::unconstrained(),
+            TelemetryMode::Live => {
+                let soc = self.states[sat].refresh(now).clamp(0.0, 1.0);
+                let mut tel = Telemetry::unconstrained()
+                    .with_battery_soc(soc)
+                    .with_queue_depth(queue_depth);
+                let remaining = self.config.sats[sat].contact.remaining_window(now);
+                if remaining.value() > 0.0 {
+                    // in contact: the solve knows how much window is left.
+                    // Out of contact we leave the steady-state cadence
+                    // (Eq. 3) in charge — the transmitter FIFO already
+                    // models the wait for the next pass.
+                    tel = tel.with_contact_remaining(remaining);
+                }
+                tel
+            }
+        }
+    }
+
+    /// Run the scenario until all events drain or the horizon cuts them.
+    ///
+    /// Decisions go through the [`SolverEngine`]; in
+    /// [`TelemetryMode::Live`] repeated request shapes on satellites in
+    /// similar states still reuse cached decisions (telemetry is folded
+    /// into the cache fingerprint).
+    pub fn run(mut self, requests: &[Request], engine: &SolverEngine) -> FleetResult {
+        let n = self.config.sats.len();
+        let mut q: EventQueue<Event> = EventQueue::new();
+        let names: Vec<String> = self.config.sats.iter().map(|s| s.name.clone()).collect();
+        let mut metrics = SimMetrics::for_fleet(&names);
+        let mut flights: Vec<Option<Flight>> = vec![None; requests.len()];
+        let mut router = Router::new(self.config.routing);
+        let mut cluster = ClusterState::new();
+        for (id, name) in names.iter().enumerate() {
+            cluster.register(id, SatelliteInfo::idle(name));
+        }
+
+        for (i, r) in requests.iter().enumerate() {
+            q.schedule(r.arrival.value(), Event::Arrival(i));
+        }
+
+        let horizon = self.config.horizon.value();
+        while let Some(ev) = q.pop() {
+            let now = ev.time;
+            if now > horizon {
+                // the queue is time-ordered: everything left is late too
+                break;
+            }
+            match ev.event {
+                Event::Arrival(i) => {
+                    let req = &requests[i];
+                    // refresh the coordinator's view of every satellite
+                    for id in 0..n {
+                        let soc = self.states[id].refresh(now);
+                        let available = self.states[id]
+                            .battery
+                            .as_ref()
+                            .map_or(Joules(f64::INFINITY), Battery::available);
+                        let model = &self.config.sats[id].contact;
+                        let info = cluster.get_mut(id).expect("registered");
+                        info.soc = soc;
+                        info.energy_available = available;
+                        info.contact_remaining = model.remaining_window(now);
+                        info.next_contact_in =
+                            Seconds(model.time_to_next_contact(now).unwrap_or(f64::INFINITY));
+                    }
+                    let Some(sat) = router.route(req, &cluster) else {
+                        // no eligible satellite (e.g. every battery below
+                        // the energy-aware floor)
+                        metrics.reject_admission(None);
+                        continue;
+                    };
+                    let queue_depth = cluster.get(sat).expect("registered").queue_depth;
+                    let inst = self.instance_for(req);
+                    let tel = self.telemetry_for(sat, now, queue_depth);
+                    let s = engine.solve_parts(&inst, &tel).decision.split;
+                    let k = inst.depth();
+
+                    // satellite-side work and energy for stages 0..s
+                    let mut proc_time = Seconds::ZERO;
+                    let mut proc_energy = Joules::ZERO;
+                    for stage in 0..s {
+                        proc_time += inst.delta_sat(stage);
+                        proc_energy += inst.e_sat(stage);
+                    }
+                    // admission: battery must cover the processing draw
+                    if !self.states[sat].try_draw(now, proc_energy) {
+                        metrics.reject_admission(Some(sat));
+                        continue;
+                    }
+                    let (tx_bytes, e_off, t_gc) = if s < k {
+                        (inst.wire_bytes(s), inst.e_off(s), inst.t_gc(s))
+                    } else {
+                        (Bytes::ZERO, Joules::ZERO, Seconds::ZERO)
+                    };
+                    let mut t_cloud_suffix = Seconds::ZERO;
+                    for stage in s..k {
+                        t_cloud_suffix += inst.delta_cloud(stage);
+                    }
+                    cluster.note_enqueue(sat, tx_bytes);
+                    flights[i] = Some(Flight {
+                        sat,
+                        split: s,
+                        depth: k,
+                        energy: proc_energy,
+                        t_gc,
+                        t_cloud_suffix,
+                        tx_bytes,
+                        e_off,
+                    });
+
+                    // FIFO processing payload
+                    let start = now.max(self.states[sat].proc_free_at);
+                    let done = start + proc_time.value();
+                    self.states[sat].proc_free_at = done;
+                    q.schedule(done, Event::SatDone(i));
+                }
+                Event::SatDone(i) => {
+                    let (sat, split, depth, tx_bytes) = {
+                        let f = flights[i].as_ref().expect("flight in progress");
+                        (f.sat, f.split, f.depth, f.tx_bytes)
+                    };
+                    if split == depth {
+                        // all-on-satellite: complete here
+                        cluster.note_complete(sat, tx_bytes);
+                        complete(&mut metrics, requests, &mut flights, i, now);
+                        continue;
+                    }
+                    // FIFO transmitter with this satellite's contact windows
+                    let start = now.max(self.states[sat].tx_free_at);
+                    match self.config.sats[sat]
+                        .contact
+                        .finish_transfer(start, tx_bytes, self.rate)
+                    {
+                        Some(finish) => {
+                            self.states[sat].tx_free_at = finish;
+                            q.schedule(finish, Event::TxDone(i));
+                        }
+                        None => {
+                            // the contact schedule ends before the transfer
+                            // can: pin the transmitter and let the request
+                            // drain as unfinished
+                            self.states[sat].tx_free_at = f64::INFINITY;
+                        }
+                    }
+                }
+                Event::TxDone(i) => {
+                    let (sat, e_off, tx_bytes, t_gc, t_cloud_suffix) = {
+                        let f = flights[i].as_ref().expect("flight in progress");
+                        (f.sat, f.e_off, f.tx_bytes, f.t_gc, f.t_cloud_suffix)
+                    };
+                    // transmission energy at completion
+                    if !self.states[sat].try_draw(now, e_off) {
+                        metrics.reject_transmit(Some(sat));
+                        cluster.note_complete(sat, tx_bytes);
+                        flights[i] = None;
+                        continue;
+                    }
+                    if let Some(f) = flights[i].as_mut() {
+                        f.energy += e_off;
+                    }
+                    // the satellite's involvement ends here: free its queue
+                    // slot before the capacity-rich WAN/cloud hop so the
+                    // router and queue-depth telemetry see the true
+                    // on-board backlog
+                    cluster.note_complete(sat, tx_bytes);
+                    // WAN hop + cloud compute (both capacity-rich)
+                    let done = now + t_gc.value() + t_cloud_suffix.value();
+                    q.schedule(done, Event::CloudDone(i));
+                }
+                Event::CloudDone(i) => {
+                    complete(&mut metrics, requests, &mut flights, i, now);
+                }
+            }
+        }
+
+        // horizon drain: anything still in flight (or never admitted
+        // because its arrival event fell past the cut) is unfinished
+        for f in flights.iter().flatten() {
+            metrics.note_unfinished(Some(f.sat));
+        }
+        let accounted = metrics.completed() + metrics.rejected() + metrics.unfinished;
+        for _ in accounted..requests.len() as u64 {
+            metrics.note_unfinished(None);
+        }
+
+        FleetResult {
+            metrics,
+            states: self.states,
+            horizon: self.config.horizon,
+        }
+    }
+}
+
+fn complete(
+    metrics: &mut SimMetrics,
+    requests: &[Request],
+    flights: &mut [Option<Flight>],
+    i: usize,
+    now: f64,
+) {
+    let f = flights[i].take().expect("flight in progress");
+    let req = &requests[i];
+    metrics.record(RequestRecord {
+        id: req.id,
+        data: req.data,
+        split: f.split,
+        sat: f.sat,
+        arrival: req.arrival,
+        completed: Seconds(now),
+        latency: Seconds(now - req.arrival.value()),
+        energy: f.energy,
+        downlinked: f.tx_bytes,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::contact::PeriodicContact;
+    use crate::sim::workload::fixed_trace;
+    use crate::solver::engine::SolverRegistry;
+
+    fn profile() -> ModelProfile {
+        ModelProfile::from_alphas("test-net", &[1000.0, 500.0, 250.0, 100.0, 20.0, 4.0])
+            .unwrap()
+    }
+
+    fn spec(phase_s: f64) -> SatelliteSpec {
+        let contact = PeriodicContact::new(
+            Seconds::from_hours(8.0),
+            Seconds::from_minutes(6.0),
+        )
+        .with_phase(Seconds(phase_s));
+        SatelliteSpec::new(&format!("sat-{phase_s}"), Box::new(contact))
+    }
+
+    fn config(n: usize, routing: RoutingPolicy) -> FleetSimConfig {
+        let template = InstanceBuilder::new(profile())
+            .rate(crate::util::units::BitsPerSec::from_mbps(100.0))
+            .contact(Seconds::from_hours(8.0), Seconds::from_minutes(6.0));
+        FleetSimConfig {
+            template,
+            profiles: vec![profile()],
+            sats: (0..n).map(|i| spec(i as f64 * 100.0)).collect(),
+            routing,
+            telemetry: TelemetryMode::Live,
+            horizon: Seconds::from_hours(10_000.0),
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_work_across_the_fleet() {
+        let trace = fixed_trace(6, Seconds(10.0), Bytes::from_mb(50.0));
+        let engine = SolverRegistry::engine("ars").unwrap();
+        let result =
+            FleetSimulator::new(config(3, RoutingPolicy::RoundRobin)).run(&trace, &engine);
+        assert_eq!(result.metrics.completed(), 6);
+        for sat in result.metrics.per_sat() {
+            assert_eq!(sat.completed, 2, "{}: round-robin must balance", sat.name);
+        }
+        // every record carries its serving satellite
+        let mut seen = [0u64; 3];
+        for r in &result.metrics.records {
+            seen[r.sat] += 1;
+        }
+        assert_eq!(seen, [2, 2, 2]);
+    }
+
+    #[test]
+    fn least_loaded_beats_single_satellite_on_queueing() {
+        // back-to-back heavy ARS work: one satellite serializes, three
+        // satellites run in parallel, so fleet mean latency must drop
+        let trace = fixed_trace(6, Seconds(0.0), Bytes::from_mb(100.0));
+        let engine1 = SolverRegistry::engine("ars").unwrap();
+        let engine3 = SolverRegistry::engine("ars").unwrap();
+        let one = FleetSimulator::new(config(1, RoutingPolicy::LeastLoaded))
+            .run(&trace, &engine1);
+        let three = FleetSimulator::new(config(3, RoutingPolicy::LeastLoaded))
+            .run(&trace, &engine3);
+        assert_eq!(one.metrics.completed(), 6);
+        assert_eq!(three.metrics.completed(), 6);
+        assert!(
+            three.metrics.mean_latency() < one.metrics.mean_latency(),
+            "3 sats {} should beat 1 sat {}",
+            three.metrics.mean_latency(),
+            one.metrics.mean_latency()
+        );
+    }
+
+    #[test]
+    fn energy_aware_routing_rejects_when_all_depleted() {
+        use crate::energy::battery::Battery;
+        use crate::energy::solar::SolarPanel;
+        let mut cfg = config(2, RoutingPolicy::EnergyAware { min_soc: 0.9 });
+        for s in &mut cfg.sats {
+            // start far below the 0.9 floor: 100 J capacity, drained to 10%
+            let mut b = Battery::new(Joules(100.0), 0.0);
+            let _ = b.discharge(Joules(90.0));
+            s.battery = Some((b, SolarPanel::new(1e-9, 0.01, 0.01), 1.0));
+        }
+        let trace = fixed_trace(4, Seconds(1.0), Bytes::from_mb(10.0));
+        let engine = SolverRegistry::engine("ilpb").unwrap();
+        let result = FleetSimulator::new(cfg).run(&trace, &engine);
+        assert_eq!(result.metrics.completed(), 0);
+        assert_eq!(result.metrics.rejected_admission, 4, "router must refuse all");
+        assert_eq!(result.metrics.rejected_transmit, 0);
+    }
+
+    #[test]
+    fn horizon_cuts_late_work_as_unfinished() {
+        let mut cfg = config(1, RoutingPolicy::RoundRobin);
+        // one ARS request ≈ 3.66 ks of on-board work (100 MB); two
+        // requests serialize, so a horizon at 1.5× cuts the second
+        let inst = cfg
+            .template
+            .clone()
+            .data(Bytes::from_mb(100.0))
+            .build()
+            .unwrap();
+        let one = inst.evaluate_split(inst.depth()).latency.value();
+        cfg.horizon = Seconds(one * 1.5);
+        let trace = fixed_trace(2, Seconds(0.0), Bytes::from_mb(100.0));
+        let engine = SolverRegistry::engine("ars").unwrap();
+        let result = FleetSimulator::new(cfg).run(&trace, &engine);
+        assert_eq!(result.metrics.completed(), 1);
+        assert_eq!(result.metrics.unfinished, 1);
+        assert_eq!(result.metrics.per_sat()[0].unfinished, 1);
+        assert_eq!(result.metrics.records.len(), 1);
+    }
+
+    #[test]
+    fn live_telemetry_tightens_under_a_drained_battery() {
+        use crate::energy::battery::Battery;
+        use crate::energy::solar::SolarPanel;
+        // ARS (the max-energy policy) against a half-full battery: live
+        // SoC telemetry must tighten the all-on-satellite split away —
+        // every served request lands on a cheaper split than K.
+        let mut cfg = config(1, RoutingPolicy::RoundRobin);
+        let mut b = Battery::new(Joules(5.0e4), 0.0);
+        let _ = b.discharge(Joules(2.5e4));
+        cfg.sats[0].battery = Some((b, SolarPanel::new(1e-9, 0.01, 0.01), 1.0));
+        let trace = fixed_trace(8, Seconds(100.0), Bytes::from_mb(20.0));
+        let engine = SolverRegistry::engine("ars").unwrap();
+        let result = FleetSimulator::new(cfg).run(&trace, &engine);
+        assert!(
+            engine.stats().tightened > 0,
+            "half-full SoC must override ARS's max-energy split"
+        );
+        let depth = profile().depth();
+        for r in &result.metrics.records {
+            assert!(
+                r.split < depth,
+                "request {} kept the full-satellite split under a drained battery",
+                r.id
+            );
+        }
+        assert!(result.metrics.completed() > 0);
+    }
+}

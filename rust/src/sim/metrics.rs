@@ -1,4 +1,12 @@
 //! Simulation metrics: per-request records plus streaming aggregates.
+//!
+//! Rejections are phase-tagged — admission-time (the battery refused the
+//! processing draw when the request arrived) vs transmit-time (the battery
+//! refused the antenna draw when the transfer completed) — because the two
+//! failure modes call for different remedies (shed load earlier vs pick a
+//! smaller-payload split). `unfinished` counts requests the simulation
+//! horizon cut off mid-flight. Fleet runs additionally keep a per-satellite
+//! breakdown ([`SatMetrics`]) alongside the aggregate.
 
 use crate::util::stats::{LogHistogram, Welford};
 use crate::util::units::{Bytes, Joules, Seconds};
@@ -10,6 +18,8 @@ pub struct RequestRecord {
     pub data: Bytes,
     /// Chosen split (subtasks on the satellite).
     pub split: usize,
+    /// Index of the satellite that served the request (0 in single-sat runs).
+    pub sat: usize,
     pub arrival: Seconds,
     pub completed: Seconds,
     /// End-to-end latency (completed − arrival), includes queueing.
@@ -20,6 +30,46 @@ pub struct RequestRecord {
     pub downlinked: Bytes,
 }
 
+/// Per-satellite slice of a run's metrics.
+#[derive(Debug, Clone)]
+pub struct SatMetrics {
+    pub name: String,
+    pub completed: u64,
+    /// Battery refused the processing draw at arrival.
+    pub rejected_admission: u64,
+    /// Battery refused the antenna draw at transmit completion.
+    pub rejected_transmit: u64,
+    /// In flight on this satellite when the horizon cut the run.
+    pub unfinished: u64,
+    latency: Welford,
+    /// Total on-board energy of this satellite's completed requests.
+    pub energy: Joules,
+    pub downlinked: Bytes,
+}
+
+impl SatMetrics {
+    fn new(name: String) -> Self {
+        SatMetrics {
+            name,
+            completed: 0,
+            rejected_admission: 0,
+            rejected_transmit: 0,
+            unfinished: 0,
+            latency: Welford::new(),
+            energy: Joules::ZERO,
+            downlinked: Bytes::ZERO,
+        }
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected_admission + self.rejected_transmit
+    }
+
+    pub fn mean_latency(&self) -> Seconds {
+        Seconds(self.latency.mean())
+    }
+}
+
 /// Aggregated metrics over a run.
 #[derive(Debug, Clone)]
 pub struct SimMetrics {
@@ -28,7 +78,15 @@ pub struct SimMetrics {
     energy: Welford,
     latency_hist: LogHistogram,
     pub total_downlinked: Bytes,
-    pub rejected: u64,
+    /// Requests refused at arrival (battery could not cover processing).
+    pub rejected_admission: u64,
+    /// Requests refused at transmit completion (battery could not cover
+    /// the antenna draw).
+    pub rejected_transmit: u64,
+    /// Requests still in flight (or never admitted) when the horizon cut
+    /// the run.
+    pub unfinished: u64,
+    per_sat: Vec<SatMetrics>,
 }
 
 impl Default for SimMetrics {
@@ -45,8 +103,31 @@ impl SimMetrics {
             energy: Welford::new(),
             latency_hist: LogHistogram::new(1e-3),
             total_downlinked: Bytes::ZERO,
-            rejected: 0,
+            rejected_admission: 0,
+            rejected_transmit: 0,
+            unfinished: 0,
+            per_sat: Vec::new(),
         }
+    }
+
+    /// Pre-size the per-satellite breakdown with fleet names.
+    pub fn for_fleet(names: &[String]) -> Self {
+        let mut m = Self::new();
+        m.per_sat = names.iter().cloned().map(SatMetrics::new).collect();
+        m
+    }
+
+    fn sat_mut(&mut self, sat: usize) -> &mut SatMetrics {
+        while self.per_sat.len() <= sat {
+            let name = format!("sat-{}", self.per_sat.len());
+            self.per_sat.push(SatMetrics::new(name));
+        }
+        &mut self.per_sat[sat]
+    }
+
+    /// Per-satellite breakdown (indexed by satellite id).
+    pub fn per_sat(&self) -> &[SatMetrics] {
+        &self.per_sat
     }
 
     pub fn record(&mut self, r: RequestRecord) {
@@ -54,11 +135,43 @@ impl SimMetrics {
         self.energy.push(r.energy.value());
         self.latency_hist.record(r.latency.value());
         self.total_downlinked += r.downlinked;
+        let s = self.sat_mut(r.sat);
+        s.completed += 1;
+        s.latency.push(r.latency.value());
+        s.energy += r.energy;
+        s.downlinked += r.downlinked;
         self.records.push(r);
     }
 
-    pub fn reject(&mut self) {
-        self.rejected += 1;
+    /// Count an admission-time energy rejection (`None` = the router found
+    /// no eligible satellite; counted fleet-wide only).
+    pub fn reject_admission(&mut self, sat: Option<usize>) {
+        self.rejected_admission += 1;
+        if let Some(sat) = sat {
+            self.sat_mut(sat).rejected_admission += 1;
+        }
+    }
+
+    /// Count a transmit-time energy rejection.
+    pub fn reject_transmit(&mut self, sat: Option<usize>) {
+        self.rejected_transmit += 1;
+        if let Some(sat) = sat {
+            self.sat_mut(sat).rejected_transmit += 1;
+        }
+    }
+
+    /// Count a request the horizon cut off (`None` = the cut happened
+    /// before the request was routed to any satellite).
+    pub fn note_unfinished(&mut self, sat: Option<usize>) {
+        self.unfinished += 1;
+        if let Some(sat) = sat {
+            self.sat_mut(sat).unfinished += 1;
+        }
+    }
+
+    /// Total rejections across both phases.
+    pub fn rejected(&self) -> u64 {
+        self.rejected_admission + self.rejected_transmit
     }
 
     pub fn completed(&self) -> u64 {
@@ -98,11 +211,12 @@ impl SimMetrics {
 mod tests {
     use super::*;
 
-    fn rec(id: u64, latency: f64, energy: f64) -> RequestRecord {
+    fn rec(id: u64, sat: usize, latency: f64, energy: f64) -> RequestRecord {
         RequestRecord {
             id,
             data: Bytes::from_gb(1.0),
             split: 3,
+            sat,
             arrival: Seconds(0.0),
             completed: Seconds(latency),
             latency: Seconds(latency),
@@ -114,8 +228,8 @@ mod tests {
     #[test]
     fn aggregates_accumulate() {
         let mut m = SimMetrics::new();
-        m.record(rec(1, 10.0, 5.0));
-        m.record(rec(2, 20.0, 15.0));
+        m.record(rec(1, 0, 10.0, 5.0));
+        m.record(rec(2, 0, 20.0, 15.0));
         assert_eq!(m.completed(), 2);
         assert_eq!(m.mean_latency(), Seconds(15.0));
         assert_eq!(m.mean_energy(), Joules(10.0));
@@ -128,26 +242,67 @@ mod tests {
     fn throughput_per_second() {
         let mut m = SimMetrics::new();
         for i in 0..100 {
-            m.record(rec(i, 1.0, 1.0));
+            m.record(rec(i, 0, 1.0, 1.0));
         }
         assert!((m.throughput(Seconds(50.0)) - 2.0).abs() < 1e-12);
         assert_eq!(m.throughput(Seconds::ZERO), 0.0);
     }
 
     #[test]
-    fn rejection_counter() {
+    fn phase_tagged_rejections() {
         let mut m = SimMetrics::new();
-        m.reject();
-        m.reject();
-        assert_eq!(m.rejected, 2);
+        m.reject_admission(Some(0));
+        m.reject_admission(None);
+        m.reject_transmit(Some(1));
+        assert_eq!(m.rejected_admission, 2);
+        assert_eq!(m.rejected_transmit, 1);
+        assert_eq!(m.rejected(), 3);
         assert_eq!(m.completed(), 0);
+        // per-sat attribution: the unrouted rejection stays fleet-wide
+        assert_eq!(m.per_sat()[0].rejected_admission, 1);
+        assert_eq!(m.per_sat()[1].rejected_transmit, 1);
+        assert_eq!(
+            m.per_sat().iter().map(SatMetrics::rejected).sum::<u64>(),
+            2
+        );
+    }
+
+    #[test]
+    fn per_sat_breakdown_tracks_records() {
+        let mut m = SimMetrics::for_fleet(&["alpha".to_string(), "beta".to_string()]);
+        m.record(rec(1, 0, 10.0, 2.0));
+        m.record(rec(2, 1, 30.0, 4.0));
+        m.record(rec(3, 1, 50.0, 6.0));
+        m.note_unfinished(Some(1));
+        let sats = m.per_sat();
+        assert_eq!(sats.len(), 2);
+        assert_eq!(sats[0].name, "alpha");
+        assert_eq!(sats[0].completed, 1);
+        assert_eq!(sats[1].completed, 2);
+        assert_eq!(sats[1].mean_latency(), Seconds(40.0));
+        assert_eq!(sats[1].energy, Joules(10.0));
+        assert_eq!(sats[1].unfinished, 1);
+        assert_eq!(m.unfinished, 1);
+        // aggregate equals the sum of the slices
+        let total: u64 = sats.iter().map(|s| s.completed).sum();
+        assert_eq!(total, m.completed());
+    }
+
+    #[test]
+    fn per_sat_grows_on_demand() {
+        let mut m = SimMetrics::new();
+        m.record(rec(1, 3, 5.0, 1.0));
+        assert_eq!(m.per_sat().len(), 4);
+        assert_eq!(m.per_sat()[3].name, "sat-3");
+        assert_eq!(m.per_sat()[3].completed, 1);
+        assert_eq!(m.per_sat()[0].completed, 0);
     }
 
     #[test]
     fn percentiles_reasonable() {
         let mut m = SimMetrics::new();
         for i in 1..=100 {
-            m.record(rec(i, i as f64, 1.0));
+            m.record(rec(i, 0, i as f64, 1.0));
         }
         let p50 = m.latency_p50().value();
         assert!((p50 - 50.0).abs() / 50.0 < 0.15, "p50 {p50}");

@@ -9,22 +9,30 @@
 //! (`des_validation` bench, plus unit tests here).
 //!
 //! * [`engine`] — time-ordered event heap with deterministic tie-breaking.
-//! * [`contact`] — periodic contact-window arithmetic (phase-aware Eq. 3).
+//! * [`contact`] — the [`contact::ContactModel`] trait over periodic
+//!   (phase-aware Eq. 3, optional Bernoulli outages) and orbit-derived
+//!   contact windows.
 //! * [`entities`] — satellite (FIFO processor + FIFO transmitter), ground
 //!   station, cloud.
 //! * [`workload`] — capture-event generators (Poisson arrivals, size
 //!   distributions).
-//! * [`metrics`] — per-request records and aggregate statistics.
-//! * [`runner`] — ties it all together for one scenario.
+//! * [`metrics`] — per-request records, phase-tagged rejections, and
+//!   per-satellite/fleet aggregate statistics.
+//! * [`fleet`] — the N-satellite simulator: coordinator routing, per-
+//!   satellite batteries and contact models, telemetry-fed solves.
+//! * [`runner`] — the paper's single-satellite scenario, a thin N = 1
+//!   wrapper over [`fleet`].
 
 pub mod contact;
 pub mod engine;
 pub mod entities;
+pub mod fleet;
 pub mod metrics;
 pub mod runner;
 pub mod workload;
 
-pub use contact::PeriodicContact;
+pub use contact::{ContactModel, PeriodicContact, ScheduleContact};
 pub use engine::{EventQueue, ScheduledEvent};
-pub use metrics::{RequestRecord, SimMetrics};
+pub use fleet::{FleetResult, FleetSimConfig, FleetSimulator, SatelliteSpec, TelemetryMode};
+pub use metrics::{RequestRecord, SatMetrics, SimMetrics};
 pub use runner::{SimConfig, SimResult, Simulator};

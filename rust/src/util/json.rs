@@ -27,13 +27,27 @@ pub enum Json {
 }
 
 /// Parse or access error with a human-readable location/context.
-#[derive(Debug, thiserror::Error)]
+/// (`thiserror` is unavailable offline, so `Display`/`Error` are manual.)
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("json parse error at byte {pos}: {msg}")]
     Parse { pos: usize, msg: String },
-    #[error("json access error at `{path}`: {msg}")]
     Access { path: String, msg: String },
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Parse { pos, msg } => {
+                write!(f, "json parse error at byte {pos}: {msg}")
+            }
+            JsonError::Access { path, msg } => {
+                write!(f, "json access error at `{path}`: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ---------------------------------------------------------------- parse

@@ -1,7 +1,7 @@
 //! Supporting infrastructure built from scratch for the offline
-//! environment: deterministic RNG + distributions, a JSON
-//! parser/serializer, descriptive statistics, a CLI argument parser, a
-//! `log` backend, and strongly-typed physical units.
+//! environment: deterministic RNG + distributions, JSON and TOML-subset
+//! parsers, descriptive statistics, a CLI argument parser, a `log`
+//! backend, and strongly-typed physical units.
 
 pub mod cli;
 pub mod json;
@@ -9,4 +9,5 @@ pub mod logging;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
+pub mod toml;
 pub mod units;

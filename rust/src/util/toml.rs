@@ -1,0 +1,229 @@
+//! A minimal TOML-subset reader (config files only).
+//!
+//! The offline build environment has no `toml` crate, so this module
+//! covers exactly what scenario files need and nothing more:
+//!
+//! * `key = value` pairs with bare keys,
+//! * `[table]` and `[dotted.table]` headers (nesting via dots),
+//! * strings (`"..."` with `\" \\ \n \t` escapes), booleans, and numbers
+//!   (integer, float, exponent; `_` separators allowed),
+//! * `#` comments and blank lines.
+//!
+//! Arrays, inline tables, multi-line strings, and dates are *not*
+//! supported and fail loudly. The output is a [`Json`] object so the
+//! existing typed accessors (and every `from_json` constructor) work
+//! unchanged on both formats.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Parse a TOML-subset document into a [`Json::Obj`] tree.
+pub fn parse(text: &str) -> anyhow::Result<Json> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    let mut current: Vec<String> = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw)?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            anyhow::ensure!(
+                !rest.starts_with('['),
+                "line {lineno}: arrays of tables ([[...]]) are not supported"
+            );
+            let header = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow::anyhow!("line {lineno}: unterminated table header"))?;
+            let path: Vec<String> = header.split('.').map(|s| s.trim().to_string()).collect();
+            anyhow::ensure!(
+                path.iter().all(|s| is_bare_key(s)),
+                "line {lineno}: invalid table name `{header}`"
+            );
+            table_at(&mut root, &path, lineno)?;
+            current = path;
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("line {lineno}: expected `key = value`"))?;
+        let key = key.trim();
+        anyhow::ensure!(is_bare_key(key), "line {lineno}: invalid key `{key}`");
+        let value = parse_value(value.trim(), lineno)?;
+        let table = table_at(&mut root, &current, lineno)?;
+        anyhow::ensure!(
+            !table.contains_key(key),
+            "line {lineno}: duplicate key `{key}`"
+        );
+        table.insert(key.to_string(), value);
+    }
+    Ok(Json::Obj(root))
+}
+
+fn is_bare_key(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+}
+
+/// Cut a `#` comment, respecting `"` strings. Errors on an unterminated
+/// string so the caller gets a line number.
+fn strip_comment(line: &str) -> anyhow::Result<&str> {
+    let bytes = line.as_bytes();
+    let mut in_string = false;
+    let mut escaped = false;
+    for (i, &b) in bytes.iter().enumerate() {
+        if in_string {
+            if escaped {
+                escaped = false;
+            } else if b == b'\\' {
+                escaped = true;
+            } else if b == b'"' {
+                in_string = false;
+            }
+        } else if b == b'"' {
+            in_string = true;
+        } else if b == b'#' {
+            return Ok(&line[..i]);
+        }
+    }
+    anyhow::ensure!(!in_string, "unterminated string literal");
+    Ok(line)
+}
+
+/// Walk (creating as needed) to the table at `path`.
+fn table_at<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+    lineno: usize,
+) -> anyhow::Result<&'a mut BTreeMap<String, Json>> {
+    let mut cur = root;
+    for seg in path {
+        let entry = cur
+            .entry(seg.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        match entry {
+            Json::Obj(m) => cur = m,
+            _ => anyhow::bail!("line {lineno}: `{seg}` is both a value and a table"),
+        }
+    }
+    Ok(cur)
+}
+
+fn parse_value(text: &str, lineno: usize) -> anyhow::Result<Json> {
+    anyhow::ensure!(!text.is_empty(), "line {lineno}: missing value");
+    if let Some(rest) = text.strip_prefix('"') {
+        return parse_string(rest, lineno);
+    }
+    anyhow::ensure!(
+        !text.starts_with('['),
+        "line {lineno}: arrays are not supported by the TOML subset"
+    );
+    anyhow::ensure!(
+        !text.starts_with('{'),
+        "line {lineno}: inline tables are not supported by the TOML subset"
+    );
+    match text {
+        "true" => return Ok(Json::Bool(true)),
+        "false" => return Ok(Json::Bool(false)),
+        _ => {}
+    }
+    let cleaned: String = text.chars().filter(|&c| c != '_').collect();
+    cleaned
+        .parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| anyhow::anyhow!("line {lineno}: cannot parse value `{text}`"))
+}
+
+/// Parse the remainder of a `"` string (opening quote already consumed).
+fn parse_string(rest: &str, lineno: usize) -> anyhow::Result<Json> {
+    let mut out = String::new();
+    let mut chars = rest.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => {
+                let tail = chars.as_str().trim();
+                anyhow::ensure!(
+                    tail.is_empty(),
+                    "line {lineno}: trailing characters after string"
+                );
+                return Ok(Json::Str(out));
+            }
+            '\\' => match chars.next() {
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                other => anyhow::bail!("line {lineno}: unsupported escape `\\{other:?}`"),
+            },
+            c => out.push(c),
+        }
+    }
+    anyhow::bail!("line {lineno}: unterminated string literal")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_sections_and_comments() {
+        let doc = parse(
+            r#"
+# fleet scenario
+name = "walker-6-3-1"   # trailing comment
+sats = 6
+altitude_km = 500.5
+deep_space = false
+big = 1_000_000
+small = 1.5e-3
+
+[base]
+rate_mbps = 55.0
+ground_colocated = true
+
+[base.nested]
+x = 1
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name").unwrap(), "walker-6-3-1");
+        assert_eq!(doc.get_usize("sats").unwrap(), 6);
+        assert_eq!(doc.get_f64("altitude_km").unwrap(), 500.5);
+        assert!(!doc.get("deep_space").unwrap().as_bool().unwrap());
+        assert_eq!(doc.get_f64("big").unwrap(), 1e6);
+        assert_eq!(doc.get_f64("small").unwrap(), 1.5e-3);
+        let base = doc.get("base").unwrap();
+        assert_eq!(base.get_f64("rate_mbps").unwrap(), 55.0);
+        assert!(base.get("ground_colocated").unwrap().as_bool().unwrap());
+        assert_eq!(base.get("nested").unwrap().get_f64("x").unwrap(), 1.0);
+    }
+
+    #[test]
+    fn string_escapes_and_hash_inside_strings() {
+        let doc = parse(r#"s = "a \"quoted\" #hash\n""#).unwrap();
+        assert_eq!(doc.get_str("s").unwrap(), "a \"quoted\" #hash\n");
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        assert!(parse("just a line").is_err());
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("x = ").is_err());
+        assert!(parse("x = [1, 2]").is_err());
+        assert!(parse("x = \"open").is_err());
+        assert!(parse("x = 1\nx = 2").is_err());
+        assert!(parse("[[tables]]\n").is_err());
+        assert!(parse("x = nope").is_err());
+        // a key cannot also be a table
+        assert!(parse("x = 1\n[x]\ny = 2").is_err());
+    }
+
+    #[test]
+    fn output_feeds_json_accessors_like_json_does() {
+        let toml = parse("a = 1\n[t]\nb = \"two\"").unwrap();
+        let json = Json::parse(r#"{"a": 1, "t": {"b": "two"}}"#).unwrap();
+        assert_eq!(toml, json);
+    }
+}

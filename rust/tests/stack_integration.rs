@@ -45,12 +45,16 @@ fn week_long_simulation_conserves_and_orders() {
     let scen = Scenario::tiansuan().with_rate_mbps(20.0);
     let mut rng = Pcg64::seeded(6);
     let profile = ModelProfile::sampled(10, &mut rng);
-    let horizon = Seconds::from_hours(168.0);
+    // one week of captures; the *sim* horizon is far larger so the backlog
+    // drains completely (the horizon is enforced now — late events would
+    // otherwise be cut and counted unfinished)
+    let capture_window = Seconds::from_hours(168.0);
+    let horizon = Seconds::from_hours(200_000.0);
     let trace = PoissonWorkload::new(
         1.0 / 3600.0,
         SizeDist::LogUniform(Bytes::from_gb(1.0), Bytes::from_gb(50.0)),
     )
-    .generate(horizon, &mut rng);
+    .generate(capture_window, &mut rng);
 
     let mut by_policy = Vec::new();
     for name in ["ilpb", "arg", "ars"] {
@@ -66,9 +70,14 @@ fn week_long_simulation_conserves_and_orders() {
         };
         let result = Simulator::new(cfg).run(&trace, &engine);
         assert_eq!(
-            result.metrics.completed() as usize + result.metrics.rejected as usize,
+            result.metrics.completed() as usize + result.metrics.rejected() as usize,
             trace.len(),
             "{}: conservation",
+            engine.policy_name()
+        );
+        assert_eq!(
+            result.metrics.unfinished, 0,
+            "{}: a generous horizon must drain the backlog",
             engine.policy_name()
         );
         by_policy.push((engine.policy_name(), result));
