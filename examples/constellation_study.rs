@@ -83,7 +83,7 @@ fn main() -> anyhow::Result<()> {
         let mut scen = scenario.clone();
         scen.routing = routing.to_string();
         let engine = SolverRegistry::engine("ilpb")?;
-        let result = FleetSimulator::new(scen.sim_config(profile.clone())?).run(&trace, &engine);
+        let result = FleetSimulator::new(scen.sim_config(profile.clone())?).run(&trace, &engine)?;
         let m = &result.metrics;
         let per_sat: Vec<u64> = m.per_sat().iter().map(|s| s.completed).collect();
         println!(

@@ -81,7 +81,7 @@ fn main() -> anyhow::Result<()> {
             panel,
             sunlit,
         );
-        let result = Simulator::new(config).with_satellite(sat).run(&trace, &engine);
+        let result = Simulator::new(config).with_satellite(sat).run(&trace, &engine)?;
         let m = &result.metrics;
         println!(
             "{:<6} {:>8} {:>9} {:>12.1} {:>11.1}% {:>10.1}",

@@ -65,7 +65,7 @@ fn main() -> anyhow::Result<()> {
             ),
             horizon,
         };
-        let result = Simulator::new(config).run(&trace, &engine);
+        let result = Simulator::new(config).run(&trace, &engine)?;
         let m = &result.metrics;
         println!(
             "{:<6} {:>10} {:>12.1} {:>12.1} {:>12.1} {:>14.2}",

@@ -57,7 +57,9 @@ fn main() {
             .collect();
         for engine in &engines {
             let trace = fixed_trace(1, Seconds(0.0), Bytes::from_gb(2.0));
-            let result = Simulator::new(config(&scen, &profile)).run(&trace, engine);
+            let result = Simulator::new(config(&scen, &profile))
+                .run(&trace, engine)
+                .expect("valid trace");
             let rec = &result.metrics.records[0];
             let inst = scen
                 .instance_builder(profile.clone())
@@ -118,7 +120,8 @@ fn main() {
         )
         .generate(Seconds::from_hours(200.0), &mut wl_rng);
         let result = Simulator::new(config(&scen, &profile))
-            .run(&trace, &SolverRegistry::engine("ilpb").unwrap());
+            .run(&trace, &SolverRegistry::engine("ilpb").unwrap())
+            .expect("valid trace");
         let inst = scen
             .instance_builder(profile.clone())
             .data(Bytes::from_gb(2.0))

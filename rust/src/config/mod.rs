@@ -17,6 +17,7 @@ use crate::coordinator::router::RoutingPolicy;
 use crate::dnn::profile::ModelProfile;
 use crate::energy::battery::Battery;
 use crate::energy::solar::SolarPanel;
+use crate::link::isl::{IslMode, IslTopology};
 use crate::orbit::constellation::WalkerPattern;
 use crate::orbit::contact::ContactSchedule;
 use crate::orbit::eclipse::eclipse_fraction;
@@ -281,8 +282,13 @@ pub struct FleetScenario {
     pub gs_min_elevation_deg: f64,
     /// Contact-window source for the transmitters.
     pub contact_source: ContactSource,
+    /// Inter-satellite link pattern ([`IslMode`]): `off | ring | grid`.
+    pub isl: IslMode,
+    /// ISL rate at the reference range, Mbps (per-link rates scale with
+    /// epoch separation; see [`crate::link::isl::isl_rate`]).
+    pub isl_rate_mbps: f64,
     /// Routing policy name: `round-robin | least-loaded | contact-aware |
-    /// energy-aware` (see [`FleetScenario::routing_policy`]).
+    /// energy-aware | relay-aware` (see [`FleetScenario::routing_policy`]).
     pub routing: String,
     /// Battery floor for `energy-aware` routing.
     pub min_soc: f64,
@@ -319,6 +325,8 @@ impl FleetScenario {
             gs_lon_deg: 116.4,
             gs_min_elevation_deg: 10.0,
             contact_source: ContactSource::Periodic,
+            isl: IslMode::Off,
+            isl_rate_mbps: 200.0,
             routing: "least-loaded".to_string(),
             min_soc: 0.2,
             battery_capacity_j: 0.0,
@@ -341,9 +349,10 @@ impl FleetScenario {
             "energy-aware" => RoutingPolicy::EnergyAware {
                 min_soc: self.min_soc,
             },
+            "relay-aware" => RoutingPolicy::RelayAware,
             other => anyhow::bail!(
                 "unknown routing policy `{other}` \
-                 (round-robin|least-loaded|contact-aware|energy-aware)"
+                 (round-robin|least-loaded|contact-aware|energy-aware|relay-aware)"
             ),
         })
     }
@@ -422,11 +431,24 @@ impl FleetScenario {
             }
             sats.push(spec);
         }
+        if self.isl != IslMode::Off {
+            anyhow::ensure!(
+                self.isl_rate_mbps > 0.0 && self.isl_rate_mbps.is_finite(),
+                "isl_rate_mbps must be a positive finite rate when ISLs are enabled (got {})",
+                self.isl_rate_mbps
+            );
+        }
+        let isl = IslTopology::build(
+            &constellation,
+            self.isl,
+            BitsPerSec::from_mbps(self.isl_rate_mbps),
+        );
         Ok(FleetSimConfig {
             template: self.base.instance_builder(profile.clone()),
             profiles: vec![profile],
             sats,
             routing: self.routing_policy()?,
+            isl,
             telemetry: TelemetryMode::Live,
             horizon: self.horizon(),
         })
@@ -448,6 +470,8 @@ impl FleetScenario {
             ("gs_lon_deg", Json::num(self.gs_lon_deg)),
             ("gs_min_elevation_deg", Json::num(self.gs_min_elevation_deg)),
             ("contact_source", Json::str(self.contact_source.as_str())),
+            ("isl", Json::str(self.isl.as_str())),
+            ("isl_rate_mbps", Json::num(self.isl_rate_mbps)),
             ("routing", Json::str(self.routing.clone())),
             ("min_soc", Json::num(self.min_soc)),
             ("battery_capacity_j", Json::num(self.battery_capacity_j)),
@@ -483,6 +507,8 @@ impl FleetScenario {
             contact_source: ContactSource::from_name(
                 v.str_or("contact_source", d.contact_source.as_str())?,
             )?,
+            isl: IslMode::from_name(v.str_or("isl", d.isl.as_str())?)?,
+            isl_rate_mbps: v.f64_or("isl_rate_mbps", d.isl_rate_mbps)?,
             routing: v.str_or("routing", &d.routing)?.to_string(),
             min_soc: v.f64_or("min_soc", d.min_soc)?,
             battery_capacity_j: v.f64_or("battery_capacity_j", d.battery_capacity_j)?,
@@ -578,9 +604,33 @@ mod tests {
         f.contact_source = ContactSource::Orbit;
         f.routing = "energy-aware".to_string();
         f.battery_capacity_j = 1.0e5;
+        f.isl = IslMode::Grid;
+        f.isl_rate_mbps = 350.0;
         f.base = Scenario::transmission_dominant();
         let back = FleetScenario::from_json(&f.to_json()).unwrap();
         assert_eq!(f, back);
+    }
+
+    #[test]
+    fn fleet_isl_config_wires_the_topology() {
+        let mut rng = Pcg64::seeded(6);
+        let mut f = FleetScenario::walker_631();
+        assert_eq!(f.isl, IslMode::Off, "bent pipe by default");
+        let off = f.sim_config(ModelProfile::sampled(8, &mut rng)).unwrap();
+        assert!(off.isl.is_none());
+        f.isl = IslMode::Ring;
+        f.routing = "relay-aware".to_string();
+        let cfg = f.sim_config(ModelProfile::sampled(8, &mut rng)).unwrap();
+        let isl = cfg.isl.expect("ring topology built");
+        assert_eq!(isl.len(), 6);
+        // 6/3 Walker: 2 per plane ⇒ exactly one in-plane neighbor each
+        for id in 0..6 {
+            assert_eq!(isl.neighbors(id).len(), 1, "sat {id}");
+        }
+        assert_eq!(
+            cfg.routing,
+            crate::coordinator::router::RoutingPolicy::RelayAware
+        );
     }
 
     #[test]
@@ -602,6 +652,7 @@ sats = 4
 planes = 2
 phasing = 1
 contact_source = "periodic"
+isl = "grid"
 routing = "contact-aware"
 horizon_hours = 24.0
 
@@ -618,6 +669,8 @@ data_gb = 5.0
         assert_eq!(f.sats, 4);
         assert_eq!(f.planes, 2);
         assert_eq!(f.routing, "contact-aware");
+        assert_eq!(f.isl, IslMode::Grid);
+        assert_eq!(f.isl_rate_mbps, 200.0); // default reference rate
         assert_eq!(f.base.rate_mbps, 20.0);
         assert_eq!(f.base.data_gb, 5.0);
         assert_eq!(f.base.t_cyc_hours, 8.0); // base defaults still apply
@@ -663,5 +716,15 @@ data_gb = 5.0
         h.phasing = 3;
         assert!(h.pattern().is_err());
         assert!(ContactSource::from_name("weekly").is_err());
+        assert!(IslMode::from_name("mesh").is_err());
+        // a zero ISL rate must fail at config time, not panic mid-run
+        let mut rng = Pcg64::seeded(7);
+        let mut z = FleetScenario::walker_631();
+        z.isl = IslMode::Ring;
+        z.isl_rate_mbps = 0.0;
+        assert!(z.sim_config(ModelProfile::sampled(6, &mut rng)).is_err());
+        // ... but a disabled-ISL scenario ignores the rate entirely
+        z.isl = IslMode::Off;
+        assert!(z.sim_config(ModelProfile::sampled(6, &mut rng)).is_ok());
     }
 }

@@ -20,6 +20,13 @@ pub enum RoutingPolicy {
     ContactAware,
     /// Least-loaded, but disqualify satellites below a battery floor.
     EnergyAware { min_soc: f64 },
+    /// Contact-aware over the *effective* downlink horizon: scores each
+    /// satellite by `min(own next contact, best ISL neighbor's next
+    /// contact + relay lead time)`, so a satellite whose neighbor passes
+    /// soon is as good as one passing itself. Ties break on queue depth.
+    /// Degenerates to queue-tie-broken [`RoutingPolicy::ContactAware`]
+    /// when the fleet has no ISLs.
+    RelayAware,
 }
 
 /// The router.
@@ -58,6 +65,7 @@ impl Router {
             }
             RoutingPolicy::LeastLoaded => cluster.least_loaded(),
             RoutingPolicy::ContactAware => cluster.soonest_contact(),
+            RoutingPolicy::RelayAware => cluster.soonest_effective_contact(),
             RoutingPolicy::EnergyAware { min_soc } => cluster
                 .ids()
                 .into_iter()
@@ -116,6 +124,20 @@ mod tests {
         c.get_mut(1).unwrap().next_contact_in = Seconds(10.0);
         c.get_mut(2).unwrap().next_contact_in = Seconds(100.0);
         assert_eq!(r.route(&req(), &c), Some(1));
+    }
+
+    #[test]
+    fn relay_aware_routes_to_the_best_effective_contact() {
+        let mut r = Router::new(RoutingPolicy::RelayAware);
+        let mut c = cluster(3);
+        c.get_mut(0).unwrap().next_contact_in = Seconds(1000.0);
+        c.get_mut(1).unwrap().next_contact_in = Seconds(400.0);
+        c.get_mut(2).unwrap().next_contact_in = Seconds(800.0);
+        // no ISLs: behaves like contact-aware
+        assert_eq!(r.route(&req(), &c), Some(1));
+        // satellite 0's neighbor pass opens first ⇒ relay-aware flips to 0
+        c.get_mut(0).unwrap().neighbor_contact_in = Seconds(50.0);
+        assert_eq!(r.route(&req(), &c), Some(0));
     }
 
     #[test]

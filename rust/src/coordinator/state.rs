@@ -1,6 +1,6 @@
 //! Cluster state: the coordinator's view of every satellite.
 
-use crate::util::units::{Bytes, Joules, Seconds};
+use crate::util::units::{BitsPerSec, Bytes, Joules, Seconds};
 use std::collections::BTreeMap;
 
 /// Live view of one satellite.
@@ -20,6 +20,14 @@ pub struct SatelliteInfo {
     /// Seconds of usable link remaining in the current window (0 when out
     /// of contact).
     pub contact_remaining: Seconds,
+    /// Earliest downlink opportunity via an ISL neighbor: the
+    /// soonest-passing neighbor's next-contact wait less the one-way ISL
+    /// propagation (the tensor can leave that late and still make the
+    /// pass). Infinite when the fleet has no inter-satellite links.
+    pub neighbor_contact_in: Seconds,
+    /// ISL rate toward that same neighbor (zero when the satellite has
+    /// no links).
+    pub isl_rate: BitsPerSec,
 }
 
 impl SatelliteInfo {
@@ -32,11 +40,19 @@ impl SatelliteInfo {
             energy_available: Joules(f64::INFINITY),
             next_contact_in: Seconds::ZERO,
             contact_remaining: Seconds::from_minutes(6.0),
+            neighbor_contact_in: Seconds(f64::INFINITY),
+            isl_rate: BitsPerSec::ZERO,
         }
     }
 
     pub fn in_contact(&self) -> bool {
         self.next_contact_in.value() <= 0.0 && self.contact_remaining.value() > 0.0
+    }
+
+    /// Soonest downlink opportunity counting relays: the own next pass or
+    /// the best neighbor's (ISL lead time already folded in).
+    pub fn effective_contact_in(&self) -> Seconds {
+        self.next_contact_in.min(self.neighbor_contact_in)
     }
 }
 
@@ -92,6 +108,22 @@ impl ClusterState {
                     .value()
                     .partial_cmp(&b.next_contact_in.value())
                     .unwrap()
+                    .then(ida.cmp(idb))
+            })
+            .map(|(id, _)| *id)
+    }
+
+    /// Satellite whose *effective* contact (own pass or best ISL relay)
+    /// opens soonest; ties → shallower queue, then lowest id.
+    pub fn soonest_effective_contact(&self) -> Option<usize> {
+        self.sats
+            .iter()
+            .min_by(|(ida, a), (idb, b)| {
+                a.effective_contact_in()
+                    .value()
+                    .partial_cmp(&b.effective_contact_in().value())
+                    .unwrap()
+                    .then(a.queue_depth.cmp(&b.queue_depth))
                     .then(ida.cmp(idb))
             })
             .map(|(id, _)| *id)
@@ -167,6 +199,34 @@ mod tests {
         assert_eq!(c.get(0).unwrap().queue_depth, 0);
         c.note_complete(0, Bytes::from_mb(5.0)); // saturates, no underflow
         assert_eq!(c.get(0).unwrap().queue_depth, 0);
+    }
+
+    #[test]
+    fn effective_contact_prefers_the_relay_when_sooner() {
+        let mut s = SatelliteInfo::idle("x");
+        s.next_contact_in = Seconds(5000.0);
+        assert_eq!(s.effective_contact_in(), Seconds(5000.0), "no ISL: own pass");
+        s.neighbor_contact_in = Seconds(300.0);
+        assert_eq!(s.effective_contact_in(), Seconds(300.0));
+        s.neighbor_contact_in = Seconds(9000.0);
+        assert_eq!(s.effective_contact_in(), Seconds(5000.0));
+    }
+
+    #[test]
+    fn soonest_effective_contact_sees_through_relays() {
+        let mut c = cluster3();
+        c.get_mut(0).unwrap().next_contact_in = Seconds(500.0);
+        c.get_mut(1).unwrap().next_contact_in = Seconds(900.0);
+        c.get_mut(2).unwrap().next_contact_in = Seconds(700.0);
+        // without relays this mirrors soonest_contact
+        assert_eq!(c.soonest_effective_contact(), Some(0));
+        // satellite 1's neighbor pass makes it the best downlink path
+        c.get_mut(1).unwrap().neighbor_contact_in = Seconds(100.0);
+        assert_eq!(c.soonest_effective_contact(), Some(1));
+        // effective-contact ties break on queue depth
+        c.get_mut(2).unwrap().neighbor_contact_in = Seconds(100.0);
+        c.note_enqueue(1, Bytes::ZERO);
+        assert_eq!(c.soonest_effective_contact(), Some(2));
     }
 
     #[test]

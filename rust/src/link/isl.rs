@@ -1,0 +1,346 @@
+//! Inter-satellite links (ISLs): who can relay to whom, and how fast.
+//!
+//! The paper's offloading path is strictly bent-pipe — a satellite's only
+//! way down is its own ground pass. ISLs add the third placement the
+//! collaborative-computing literature shows dominating bent-pipe-only
+//! offloading (arXiv:2405.03181, arXiv:2211.08820): a satellite out of
+//! contact hands its intermediate tensor to a neighbor whose pass opens
+//! sooner. This module models the *topology* side of that — which Walker
+//! slots are linked and at what rate — while the relay dynamics (FIFOs,
+//! handoff events, energy) live in [`crate::sim::fleet`].
+//!
+//! Topology follows standard LEO practice (Starlink-style "+grid"):
+//!
+//! * **Ring** — intra-plane only: each satellite links fore and aft
+//!   neighbors in its own plane. Intra-plane ranges are constant for
+//!   circular orbits, so these links are stable.
+//! * **Grid** — ring plus cross-plane links to the same slot in the two
+//!   adjacent planes. Cross-plane ranges oscillate over an orbit; we take
+//!   the epoch separation as the design range (a few percent of rate, not
+//!   worth a per-event range solve for a serving-system study).
+//!
+//! Rates derive from a free-space link budget: received power falls with
+//! range squared, so the supported rate is scaled from a reference rate at
+//! a reference range, `R(d) = R_ref · min(1, (d_ref/d)²)`. Propagation
+//! delay is `d/c`. Both are fixed at build time, keeping the fleet DES
+//! deterministic.
+
+use crate::orbit::constellation::Constellation;
+use crate::util::units::{BitsPerSec, Seconds};
+
+/// Speed of light, km/s (propagation delay of a laser/Ka ISL).
+pub const LIGHT_SPEED_KM_S: f64 = 299_792.458;
+
+/// Range at which an ISL supports its full reference rate, km.
+pub const ISL_REFERENCE_RANGE_KM: f64 = 1000.0;
+
+/// Which ISL pattern a scenario wires up.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IslMode {
+    /// No inter-satellite links — the paper's bent-pipe-only setting.
+    Off,
+    /// Intra-plane fore/aft neighbors only.
+    Ring,
+    /// Ring plus cross-plane links to the same slot in adjacent planes.
+    Grid,
+}
+
+impl IslMode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            IslMode::Off => "off",
+            IslMode::Ring => "ring",
+            IslMode::Grid => "grid",
+        }
+    }
+
+    pub fn from_name(name: &str) -> anyhow::Result<IslMode> {
+        match name {
+            "off" => Ok(IslMode::Off),
+            "ring" => Ok(IslMode::Ring),
+            "grid" => Ok(IslMode::Grid),
+            other => anyhow::bail!("unknown ISL mode `{other}` (off|ring|grid)"),
+        }
+    }
+}
+
+/// One directed inter-satellite link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IslLink {
+    /// Neighbor satellite id (index into the fleet).
+    pub to: usize,
+    /// Design separation, km (epoch geometry).
+    pub range_km: f64,
+    /// Link-budget-derived sustained rate.
+    pub rate: BitsPerSec,
+    /// One-way propagation delay.
+    pub propagation: Seconds,
+}
+
+/// The fleet's ISL adjacency: per-satellite outgoing links.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IslTopology {
+    neighbors: Vec<Vec<IslLink>>,
+}
+
+/// Supported rate at range `d`, scaled from `reference` at
+/// [`ISL_REFERENCE_RANGE_KM`] by the inverse-square law (capped at the
+/// reference — transceivers don't overclock at short range).
+pub fn isl_rate(range_km: f64, reference: BitsPerSec) -> BitsPerSec {
+    assert!(range_km > 0.0, "ISL range must be positive");
+    let ratio = ISL_REFERENCE_RANGE_KM / range_km;
+    BitsPerSec(reference.value() * (ratio * ratio).min(1.0))
+}
+
+impl IslTopology {
+    /// Wire up `mode` links over a Walker constellation; `None` for
+    /// [`IslMode::Off`]. `reference_rate` is the rate at the reference
+    /// range; actual per-link rates scale with epoch separation.
+    pub fn build(
+        constellation: &Constellation,
+        mode: IslMode,
+        reference_rate: BitsPerSec,
+    ) -> Option<IslTopology> {
+        if mode == IslMode::Off {
+            return None;
+        }
+        let n = constellation.len();
+        let planes = 1 + constellation
+            .satellites
+            .iter()
+            .map(|s| s.plane)
+            .max()
+            .unwrap_or(0);
+        // index by declared (plane, slot) rather than positional
+        // arithmetic, so hand-built constellations with uneven planes or
+        // reordered satellites still wire correctly
+        let mut by_plane: Vec<Vec<usize>> = vec![Vec::new(); planes];
+        for (id, s) in constellation.satellites.iter().enumerate() {
+            by_plane[s.plane].push(id);
+        }
+        for ring in &mut by_plane {
+            ring.sort_by_key(|&id| constellation.satellites[id].slot);
+        }
+        let find_slot = |plane: usize, slot: usize| -> Option<usize> {
+            by_plane[plane]
+                .iter()
+                .copied()
+                .find(|&id| constellation.satellites[id].slot == slot)
+        };
+        let mut neighbors = Vec::with_capacity(n);
+        for (me, sat) in constellation.satellites.iter().enumerate() {
+            let mut ids: Vec<usize> = Vec::new();
+            let ring = &by_plane[sat.plane];
+            if ring.len() > 1 {
+                // intra-plane ring: fore and aft (identical in a 2-slot plane)
+                let pos = ring
+                    .iter()
+                    .position(|&id| id == me)
+                    .expect("satellite is in its own plane");
+                ids.push(ring[(pos + 1) % ring.len()]);
+                ids.push(ring[(pos + ring.len() - 1) % ring.len()]);
+            }
+            if mode == IslMode::Grid && planes > 1 {
+                // same-slot links to the adjacent planes, where that slot
+                // exists (uneven hand-built planes simply skip it)
+                ids.extend(find_slot((sat.plane + 1) % planes, sat.slot));
+                ids.extend(find_slot((sat.plane + planes - 1) % planes, sat.slot));
+            }
+            ids.sort_unstable();
+            ids.dedup();
+            let links = ids
+                .into_iter()
+                .filter(|&id| id != me)
+                .map(|id| {
+                    let a = sat.orbit.position_eci(0.0);
+                    let b = constellation.satellites[id].orbit.position_eci(0.0);
+                    let range_km = (a - b).norm();
+                    IslLink {
+                        to: id,
+                        range_km,
+                        rate: isl_rate(range_km, reference_rate),
+                        propagation: Seconds(range_km / LIGHT_SPEED_KM_S),
+                    }
+                })
+                .collect();
+            neighbors.push(links);
+        }
+        Some(IslTopology { neighbors })
+    }
+
+    /// Number of satellites the topology covers.
+    pub fn len(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.neighbors.is_empty()
+    }
+
+    /// Outgoing links of satellite `sat`.
+    pub fn neighbors(&self, sat: usize) -> &[IslLink] {
+        &self.neighbors[sat]
+    }
+
+    /// The highest-rate link out of `sat` (the telemetry's `isl_rate`).
+    pub fn best_rate(&self, sat: usize) -> Option<BitsPerSec> {
+        self.neighbors[sat]
+            .iter()
+            .map(|l| l.rate)
+            .max_by(|a, b| a.value().partial_cmp(&b.value()).expect("finite rates"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orbit::constellation::WalkerPattern;
+
+    fn walker(t: usize, p: usize) -> Constellation {
+        WalkerPattern::new(t, p, usize::from(p > 1), 53.0, 550.0).build()
+    }
+
+    #[test]
+    fn off_builds_nothing() {
+        let c = walker(6, 3);
+        assert!(IslTopology::build(&c, IslMode::Off, BitsPerSec::from_mbps(100.0)).is_none());
+    }
+
+    #[test]
+    fn ring_links_intra_plane_only() {
+        let c = walker(12, 3); // 4 per plane
+        let t = IslTopology::build(&c, IslMode::Ring, BitsPerSec::from_mbps(100.0)).unwrap();
+        assert_eq!(t.len(), 12);
+        for (id, sat) in c.satellites.iter().enumerate() {
+            let links = t.neighbors(id);
+            assert_eq!(links.len(), 2, "fore + aft in a 4-slot plane");
+            for l in links {
+                assert_eq!(c.satellites[l.to].plane, sat.plane, "ring stays in-plane");
+                assert_ne!(l.to, id);
+            }
+        }
+    }
+
+    #[test]
+    fn grid_adds_cross_plane_links() {
+        let c = walker(12, 3);
+        let t = IslTopology::build(&c, IslMode::Grid, BitsPerSec::from_mbps(100.0)).unwrap();
+        for (id, sat) in c.satellites.iter().enumerate() {
+            let links = t.neighbors(id);
+            assert_eq!(links.len(), 4, "2 intra-plane + 2 cross-plane");
+            let cross = links
+                .iter()
+                .filter(|l| c.satellites[l.to].plane != sat.plane)
+                .count();
+            assert_eq!(cross, 2);
+            for l in links
+                .iter()
+                .filter(|l| c.satellites[l.to].plane != sat.plane)
+            {
+                assert_eq!(c.satellites[l.to].slot, sat.slot, "same-slot cross links");
+            }
+        }
+    }
+
+    #[test]
+    fn two_per_plane_dedups_fore_and_aft() {
+        let c = walker(6, 3); // 2 per plane: fore == aft
+        let t = IslTopology::build(&c, IslMode::Ring, BitsPerSec::from_mbps(100.0)).unwrap();
+        for id in 0..6 {
+            assert_eq!(t.neighbors(id).len(), 1, "sat {id}");
+        }
+    }
+
+    #[test]
+    fn single_plane_grid_degenerates_to_ring() {
+        let c = walker(4, 1);
+        let ring = IslTopology::build(&c, IslMode::Ring, BitsPerSec::from_mbps(100.0)).unwrap();
+        let grid = IslTopology::build(&c, IslMode::Grid, BitsPerSec::from_mbps(100.0)).unwrap();
+        for id in 0..4 {
+            assert_eq!(ring.neighbors(id), grid.neighbors(id));
+        }
+    }
+
+    #[test]
+    fn hand_built_uneven_planes_wire_by_declared_plane_and_slot() {
+        use crate::orbit::constellation::NamedOrbit;
+        use crate::orbit::propagator::CircularOrbit;
+        // plane 0 holds slots 0..2, plane 1 holds slot 0 only: positional
+        // arithmetic would mis-wire this; declared-(plane, slot) lookup
+        // must not
+        let mk = |plane: usize, slot: usize, raan: f64, phase: f64| NamedOrbit {
+            name: format!("p{plane}s{slot}"),
+            plane,
+            slot,
+            orbit: CircularOrbit::new(550.0, 53.0, raan, phase),
+        };
+        let c = Constellation {
+            satellites: vec![
+                mk(0, 0, 0.0, 0.0),
+                mk(0, 1, 0.0, 120.0),
+                mk(0, 2, 0.0, 240.0),
+                mk(1, 0, 90.0, 0.0),
+            ],
+        };
+        let t = IslTopology::build(&c, IslMode::Grid, BitsPerSec::from_mbps(100.0)).unwrap();
+        // plane-1's lone satellite: no intra-plane ring, one deduped
+        // cross-plane link to (0, 0)
+        assert_eq!(t.neighbors(3).iter().map(|l| l.to).collect::<Vec<_>>(), vec![0]);
+        // (0, 1): fore/aft in plane 0; slot 1 does not exist in plane 1
+        let mut ids: Vec<usize> = t.neighbors(1).iter().map(|l| l.to).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 2]);
+        // (0, 0): fore/aft plus the cross link to plane 1's slot 0
+        let mut ids: Vec<usize> = t.neighbors(0).iter().map(|l| l.to).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn links_are_symmetric_in_range_and_rate() {
+        let c = walker(12, 3);
+        let t = IslTopology::build(&c, IslMode::Grid, BitsPerSec::from_mbps(200.0)).unwrap();
+        for id in 0..12 {
+            for l in t.neighbors(id) {
+                let back = t
+                    .neighbors(l.to)
+                    .iter()
+                    .find(|b| b.to == id)
+                    .expect("reverse link exists");
+                assert!((back.range_km - l.range_km).abs() < 1e-9);
+                assert_eq!(back.rate, l.rate);
+            }
+        }
+    }
+
+    #[test]
+    fn rate_falls_with_range_squared() {
+        let reference = BitsPerSec::from_mbps(100.0);
+        assert_eq!(isl_rate(500.0, reference), reference, "capped at reference");
+        assert_eq!(isl_rate(1000.0, reference), reference);
+        let far = isl_rate(2000.0, reference);
+        assert!((far.mbps() - 25.0).abs() < 1e-9, "inverse square: {far}");
+        assert!(isl_rate(4000.0, reference).mbps() < far.mbps());
+    }
+
+    #[test]
+    fn propagation_delay_matches_range() {
+        let c = walker(12, 3);
+        let t = IslTopology::build(&c, IslMode::Ring, BitsPerSec::from_mbps(100.0)).unwrap();
+        for l in t.neighbors(0) {
+            assert!((l.propagation.value() - l.range_km / LIGHT_SPEED_KM_S).abs() < 1e-12);
+            assert!(l.propagation.value() > 0.0);
+            assert!(l.propagation.value() < 0.1, "LEO neighbors are < 30 000 km");
+        }
+    }
+
+    #[test]
+    fn best_rate_is_the_nearest_neighbor() {
+        let c = walker(12, 3);
+        let t = IslTopology::build(&c, IslMode::Grid, BitsPerSec::from_mbps(100.0)).unwrap();
+        let best = t.best_rate(0).unwrap();
+        for l in t.neighbors(0) {
+            assert!(l.rate.value() <= best.value());
+        }
+    }
+}

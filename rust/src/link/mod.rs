@@ -14,11 +14,18 @@
 //! additionally derive elevation-dependent rates from a link budget
 //! ([`channel`]) so the discrete-event simulator can model rate variation
 //! *within* a pass, which the closed form averages away.
+//!
+//! Beyond the paper's bent-pipe path, [`isl`] wires inter-satellite links
+//! over a Walker constellation (ring / grid patterns, range-derived rates)
+//! so the fleet DES can relay intermediate tensors to a neighbor whose
+//! ground pass opens sooner.
 
 pub mod channel;
 pub mod downlink;
 pub mod ground;
+pub mod isl;
 
 pub use channel::{LinkBudget, RatePolicy};
 pub use downlink::{downlink_latency, DownlinkModel};
 pub use ground::GroundCloudLink;
+pub use isl::{isl_rate, IslLink, IslMode, IslTopology};

@@ -164,6 +164,16 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
             "periodic|orbit — fleet contact-window source",
             Some("periodic"),
         )
+        .opt(
+            "isl",
+            "off|ring|grid — inter-satellite links for relay offloading (fleet only)",
+            Some("off"),
+        )
+        .opt(
+            "isl-rate-mbps",
+            "ISL rate at the 1000 km reference range (fleet only)",
+            Some("200"),
+        )
         .parse_from(argv)?;
     let fleet_config = args.get_str("fleet-config").unwrap_or("").to_string();
     let fleet_spec = args.get_str("fleet").unwrap_or("").to_string();
@@ -190,7 +200,7 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
         ),
         horizon,
     };
-    let result = Simulator::new(config).run(&trace, &engine);
+    let result = Simulator::new(config).run(&trace, &engine)?;
     print_sim_summary(&result.metrics, trace.len(), horizon);
     println!(
         "energy      : {:.1} J on-board total",
@@ -234,9 +244,11 @@ fn print_engine_stats(engine: &leo_infer::solver::SolverEngine) {
 }
 
 /// `simulate --fleet T/P/F` / `simulate --fleet-config file`: the
-/// constellation DES with coordinator routing and telemetry-fed solves.
+/// constellation DES with coordinator routing, optional ISL relaying, and
+/// telemetry-fed solves.
 fn simulate_fleet(args: &Args, fleet_config: &str, fleet_spec: &str) -> anyhow::Result<()> {
     use leo_infer::config::{ContactSource, FleetScenario};
+    use leo_infer::link::isl::IslMode;
     use leo_infer::sim::fleet::FleetSimulator;
 
     let fleet = if !fleet_config.is_empty() {
@@ -261,6 +273,8 @@ fn simulate_fleet(args: &Args, fleet_config: &str, fleet_spec: &str) -> anyhow::
         f.base = scenario_from(args)?;
         f.routing = args.get_str("routing").unwrap_or("least-loaded").to_string();
         f.contact_source = ContactSource::from_name(args.get_str("contact").unwrap_or("periodic"))?;
+        f.isl = IslMode::from_name(args.get_str("isl").unwrap_or("off"))?;
+        f.isl_rate_mbps = args.get_f64("isl-rate-mbps")?;
         f.horizon_hours = args.get_f64("hours")?;
         f.interarrival_s = args.get_f64("interarrival-s")?;
         let hi = args.get_f64("data-gb")?;
@@ -273,32 +287,43 @@ fn simulate_fleet(args: &Args, fleet_config: &str, fleet_spec: &str) -> anyhow::
     let profile = ModelProfile::sampled(args.get_usize("depth")?, &mut rng);
     let engine = SolverRegistry::engine(args.get_str("policy").unwrap())?;
     let sim = FleetSimulator::new(fleet.sim_config(profile)?);
-    let result = sim.run(&trace, &engine);
+    let result = sim.run(&trace, &engine)?;
     let m = &result.metrics;
     println!(
-        "fleet       : {} — {} sats / {} planes / F={} @ {} km, routing {}, contacts {}",
+        "fleet       : {} — {} sats / {} planes / F={} @ {} km, routing {}, contacts {}, isl {}",
         fleet.name,
         fleet.sats,
         fleet.planes,
         fleet.phasing,
         fleet.altitude_km,
         fleet.routing,
-        fleet.contact_source.as_str()
+        fleet.contact_source.as_str(),
+        fleet.isl.as_str()
     );
     print_sim_summary(m, trace.len(), fleet.horizon());
+    if fleet.isl != IslMode::Off {
+        println!(
+            "relays      : {} handoffs, {:.2} GB over ISLs",
+            m.relays,
+            m.relayed_bytes.gb()
+        );
+    }
     println!("\nper-satellite:");
     println!(
-        "{:<10} {:>10} {:>9} {:>8} {:>11} {:>13} {:>10} {:>7}",
-        "sat", "completed", "rej(adm)", "rej(tx)", "unfinished", "mean lat(s)", "down(GB)", "SoC%"
+        "{:<10} {:>10} {:>9} {:>8} {:>11} {:>8} {:>8} {:>13} {:>10} {:>7}",
+        "sat", "completed", "rej(adm)", "rej(tx)", "unfinished", "rly out", "rly in",
+        "mean lat(s)", "down(GB)", "SoC%"
     );
     for (id, sat) in m.per_sat().iter().enumerate() {
         println!(
-            "{:<10} {:>10} {:>9} {:>8} {:>11} {:>13.1} {:>10.2} {:>6.1}%",
+            "{:<10} {:>10} {:>9} {:>8} {:>11} {:>8} {:>8} {:>13.1} {:>10.2} {:>6.1}%",
             sat.name,
             sat.completed,
             sat.rejected_admission,
             sat.rejected_transmit,
             sat.unfinished,
+            sat.relays_out,
+            sat.relays_in,
             sat.mean_latency().value(),
             sat.downlinked.gb(),
             result.states[id].soc() * 100.0

@@ -36,7 +36,9 @@ pub trait ContactModel {
     /// (transmits only while in contact; resumes across windows). `None`
     /// when the model's knowledge of future windows runs out before the
     /// transfer can complete — a finite [`ScheduleContact`] ends, whereas a
-    /// periodic pattern always answers.
+    /// periodic pattern always answers. A non-finite `start` (the fleet
+    /// simulator pins a dead transmitter at `+∞`) must return `None`, not
+    /// loop or produce NaN.
     fn finish_transfer(&self, start: f64, bytes: Bytes, rate: BitsPerSec) -> Option<f64>;
 
     /// Usable link time available in `[t, t + horizon)`.
@@ -183,6 +185,9 @@ impl PeriodicContact {
     /// Finish time of a transfer of `bytes` at `rate` starting at `t`
     /// (transmits only while in contact; resumes across windows).
     pub fn transfer_finish(&self, t: f64, bytes: Bytes, rate: BitsPerSec) -> f64 {
+        // a NaN/∞ start would cycle the window walk forever on NaN
+        // comparisons; fail loudly here (the trait impl maps it to None)
+        assert!(t.is_finite(), "transfer_finish needs a finite start, got {t}");
         if bytes.value() <= 0.0 {
             return t;
         }
@@ -228,6 +233,9 @@ impl ContactModel for PeriodicContact {
     }
 
     fn finish_transfer(&self, start: f64, bytes: Bytes, rate: BitsPerSec) -> Option<f64> {
+        if !start.is_finite() {
+            return None;
+        }
         Some(PeriodicContact::transfer_finish(self, start, bytes, rate))
     }
 
@@ -273,6 +281,9 @@ impl ContactModel for ScheduleContact {
     }
 
     fn finish_transfer(&self, start: f64, bytes: Bytes, rate: BitsPerSec) -> Option<f64> {
+        if !start.is_finite() {
+            return None;
+        }
         if bytes.value() <= 0.0 {
             return Some(start);
         }
@@ -535,6 +546,43 @@ mod tests {
         let small = rate.data_in(Seconds(30.0));
         assert_eq!(sched.finish_transfer(0.0, small, rate), Some(30.0));
         assert_eq!(sched.finish_transfer(99.0, Bytes::ZERO, rate), Some(99.0));
+    }
+
+    #[test]
+    fn non_finite_starts_are_refused_not_looped() {
+        // the fleet simulator pins a dead transmitter at tx_free_at = +∞;
+        // a later transfer attempt must answer None immediately in both
+        // models (the periodic walk would otherwise spin on NaN phases)
+        let rate = BitsPerSec::from_mbps(10.0);
+        let bytes = Bytes::from_mb(5.0);
+        let periodic = tiansuan();
+        let sched = periodic_as_schedule(3);
+        for start in [f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            assert_eq!(
+                ContactModel::finish_transfer(&periodic, start, bytes, rate),
+                None,
+                "periodic, start = {start}"
+            );
+            assert_eq!(
+                sched.finish_transfer(start, bytes, rate),
+                None,
+                "schedule, start = {start}"
+            );
+            // zero-byte transfers are refused too: a dead transmitter has
+            // no meaningful finish time to report
+            assert_eq!(
+                ContactModel::finish_transfer(&periodic, start, Bytes::ZERO, rate),
+                None
+            );
+            assert_eq!(sched.finish_transfer(start, Bytes::ZERO, rate), None);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "finite start")]
+    fn inherent_transfer_finish_rejects_non_finite_start() {
+        let rate = BitsPerSec::from_mbps(10.0);
+        let _ = tiansuan().transfer_finish(f64::INFINITY, Bytes::from_mb(1.0), rate);
     }
 
     #[test]

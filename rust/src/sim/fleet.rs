@@ -9,9 +9,20 @@
 //! ```text
 //! Arrival ──route──► satellite j ──(telemetry-fed solve: split s)──►
 //!     proc FIFO_j ──SatDone──┐ s == K: complete
-//!                            │ s <  K:
+//!                            │ s <  K, own pass soonest:
 //!     tx FIFO_j (contact_j) ──TxDone──► cloud ──CloudDone──► complete
+//!                            │ s <  K, neighbor m's pass sooner (ISL on):
+//!     ISL j→m ──RelayTxDone──RelayRxDone──► tx FIFO_m (contact_m)
+//!         ──TxDone──► cloud ──CloudDone──► complete
 //! ```
+//!
+//! With an [`IslTopology`] configured, a satellite whose own ground pass
+//! is far away hands the boundary tensor to the neighbor whose pass (plus
+//! the ISL serialization and propagation) opens soonest — the relay
+//! placement the bent-pipe paper cannot express. The decision is made at
+//! `SatDone` time against live transmitter/contact state, the ISL
+//! serialization draws the source's antenna power, and the neighbor's
+//! transmitter FIFO and battery carry the downlink from there.
 //!
 //! In [`TelemetryMode::Live`] each solve sees the chosen satellite's
 //! battery SoC, remaining contact window, and queue depth — the serving
@@ -35,6 +46,7 @@ use crate::coordinator::state::{ClusterState, SatelliteInfo};
 use crate::dnn::profile::ModelProfile;
 use crate::energy::battery::Battery;
 use crate::energy::solar::SolarPanel;
+use crate::link::isl::{IslLink, IslTopology};
 use crate::solver::engine::{SolverEngine, Telemetry};
 use crate::solver::instance::{Instance, InstanceBuilder};
 use crate::util::units::{BitsPerSec, Bytes, Joules, Seconds};
@@ -86,6 +98,9 @@ pub struct FleetSimConfig {
     pub sats: Vec<SatelliteSpec>,
     /// How arrivals are assigned to satellites.
     pub routing: RoutingPolicy,
+    /// Inter-satellite links; `None` = the paper's bent-pipe-only fleet
+    /// (every boundary tensor waits for its own satellite's pass).
+    pub isl: Option<IslTopology>,
     /// What the per-arrival solve sees.
     pub telemetry: TelemetryMode,
     /// Simulation horizon: events past it are dropped and counted as
@@ -106,6 +121,10 @@ pub struct FleetResult {
 enum Event {
     Arrival(usize),
     SatDone(usize),
+    /// The boundary tensor finished serializing onto the ISL.
+    RelayTxDone(usize),
+    /// The boundary tensor arrived at the relay neighbor.
+    RelayRxDone(usize),
     TxDone(usize),
     CloudDone(usize),
 }
@@ -117,11 +136,20 @@ struct Flight {
     split: usize,
     depth: usize,
     energy: Joules,
+    /// Neighbor carrying the downlink when the tensor was relayed.
+    relay: Option<usize>,
     // cached costs from the decision instance
     t_gc: Seconds,
     t_cloud_suffix: Seconds,
     tx_bytes: Bytes,
     e_off: Joules,
+}
+
+impl Flight {
+    /// The satellite whose transmitter and battery carry the downlink.
+    fn downlink_sat(&self) -> usize {
+        self.relay.unwrap_or(self.sat)
+    }
 }
 
 pub struct FleetSimulator {
@@ -137,6 +165,13 @@ impl FleetSimulator {
     pub fn new(config: FleetSimConfig) -> Self {
         assert!(!config.sats.is_empty(), "fleet must have ≥ 1 satellite");
         assert!(!config.profiles.is_empty(), "fleet needs ≥ 1 model profile");
+        if let Some(isl) = &config.isl {
+            assert_eq!(
+                isl.len(),
+                config.sats.len(),
+                "ISL topology must cover exactly the fleet"
+            );
+        }
         let rate = config
             .template
             .clone()
@@ -160,9 +195,11 @@ impl FleetSimulator {
     }
 
     /// Build the per-request ILP instance (template + this request's D and
-    /// model profile).
+    /// model profile). Model ids are validated up front by
+    /// [`FleetSimulator::run`], so indexing is direct — no silent
+    /// wrap-around onto the wrong profile.
     fn instance_for(&self, req: &Request) -> Instance {
-        let profile = self.config.profiles[req.model % self.config.profiles.len()].clone();
+        let profile = self.config.profiles[req.model].clone();
         self.config
             .template
             .clone()
@@ -170,6 +207,156 @@ impl FleetSimulator {
             .data(req.data)
             .build()
             .expect("template must be valid")
+    }
+
+    /// The relay option satellite `sat` could advertise right now: the
+    /// `(rate, serialization budget)` of the neighbor whose ground pass
+    /// opens first (rate breaks ties), where the budget is the pass wait
+    /// *less* the one-way ISL propagation — a tensor whose serialization
+    /// fits the budget arrives at the neighbor by the time its pass
+    /// opens. The pair always describes ONE concrete link — mixing the
+    /// best rate and the best wait of *different* neighbors would
+    /// advertise a relay nobody offers. `None` when the fleet has no
+    /// ISLs, every neighbor's transmitter is dead, or no neighbor has a
+    /// future pass.
+    fn relay_view(&self, sat: usize, now: f64) -> Option<(BitsPerSec, Seconds)> {
+        let isl = self.config.isl.as_ref()?;
+        let mut best: Option<(f64, f64)> = None; // (wait, rate)
+        for link in isl.neighbors(sat) {
+            if !self.states[link.to].tx_free_at.is_finite() {
+                continue; // a pinned transmitter can't carry a relay
+            }
+            let Some(wait) = self.config.sats[link.to].contact.time_to_next_contact(now)
+            else {
+                continue; // schedule exhausted: no future pass
+            };
+            let wait = (wait - link.propagation.value()).max(0.0);
+            if !wait.is_finite() {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((bw, br)) => wait < bw || (wait == bw && link.rate.value() > br),
+            };
+            if better {
+                best = Some((wait, link.rate.value()));
+            }
+        }
+        let (wait, rate) = best?;
+        Some((BitsPerSec(rate), Seconds(wait)))
+    }
+
+    /// Choose the relay for a boundary tensor leaving `sat` at `now`, if
+    /// any neighbor's estimated downlink start (ISL serialization +
+    /// propagation + transmitter queue + pass wait) beats the own
+    /// transmitter's. Ties keep the bent pipe; neighbor ties break on the
+    /// lowest id, keeping runs deterministic. ISL terminals are modeled
+    /// capacity-rich (point-to-point lasers, no FIFO): concurrent
+    /// handoffs on one link overlap — only the ground-facing transmitter
+    /// queues.
+    fn pick_relay(&self, sat: usize, now: f64, tx_bytes: Bytes) -> Option<IslLink> {
+        let isl = self.config.isl.as_ref()?;
+        if tx_bytes.value() <= 0.0 {
+            return None;
+        }
+        let own_start = {
+            let free = self.states[sat].tx_free_at;
+            if free.is_finite() {
+                let t = now.max(free);
+                self.config.sats[sat]
+                    .contact
+                    .time_to_next_contact(t)
+                    .map_or(f64::INFINITY, |w| t + w)
+            } else {
+                f64::INFINITY
+            }
+        };
+        let mut best: Option<(f64, IslLink)> = None;
+        for link in isl.neighbors(sat) {
+            let free = self.states[link.to].tx_free_at;
+            if !free.is_finite() {
+                continue;
+            }
+            let arrive =
+                now + link.rate.transfer_time(tx_bytes).value() + link.propagation.value();
+            let ready = arrive.max(free);
+            let Some(wait) = self.config.sats[link.to].contact.time_to_next_contact(ready)
+            else {
+                continue;
+            };
+            let start = ready + wait;
+            let better = match best {
+                None => true,
+                Some((b, bl)) => start < b || (start == b && link.to < bl.to),
+            };
+            if better {
+                best = Some((start, *link));
+            }
+        }
+        let (start, link) = best?;
+        (start < own_start).then_some(link)
+    }
+
+    /// Push request `i`'s boundary tensor onto satellite `sat`'s
+    /// ground-facing transmitter FIFO — shared by the bent-pipe (SatDone)
+    /// and relay (RelayRxDone) paths so the dead-transmitter and
+    /// phantom-backlog handling can never diverge between them: a pinned
+    /// transmitter short-circuits, a transfer the contact schedule cannot
+    /// carry pins it (releasing the router's queue slot and counting the
+    /// request unfinished), and otherwise `TxDone` is scheduled.
+    #[allow(clippy::too_many_arguments)]
+    fn enqueue_downlink(
+        &mut self,
+        sat: usize,
+        i: usize,
+        tx_bytes: Bytes,
+        now: f64,
+        q: &mut EventQueue<Event>,
+        cluster: &mut ClusterState,
+        metrics: &mut SimMetrics,
+        flights: &mut [Option<Flight>],
+    ) {
+        if !self.states[sat].tx_free_at.is_finite() {
+            cluster.note_complete(sat, tx_bytes);
+            metrics.note_unfinished(Some(sat));
+            flights[i] = None;
+            return;
+        }
+        let start = now.max(self.states[sat].tx_free_at);
+        match self.config.sats[sat]
+            .contact
+            .finish_transfer(start, tx_bytes, self.rate)
+        {
+            Some(finish) => {
+                self.states[sat].tx_free_at = finish;
+                q.schedule(finish, Event::TxDone(i));
+            }
+            None => {
+                // the contact schedule ends before the transfer can: pin
+                // the transmitter, release the router's queue slot, and
+                // account the loss — leaving the slot held would inflate
+                // this satellite's queue for the rest of the run (the
+                // phantom-backlog bug)
+                self.states[sat].tx_free_at = f64::INFINITY;
+                cluster.note_complete(sat, tx_bytes);
+                metrics.note_unfinished(Some(sat));
+                flights[i] = None;
+            }
+        }
+    }
+
+    /// The configured link `src → dst` (panics if the relay decision and
+    /// topology ever disagree — that would be a simulator bug).
+    fn link_between(&self, src: usize, dst: usize) -> IslLink {
+        *self
+            .config
+            .isl
+            .as_ref()
+            .expect("relay implies a topology")
+            .neighbors(src)
+            .iter()
+            .find(|l| l.to == dst)
+            .expect("relay target must be a neighbor")
     }
 
     /// The live context the engine sees for a solve on satellite `sat`.
@@ -189,6 +376,12 @@ impl FleetSimulator {
                     // models the wait for the next pass.
                     tel = tel.with_contact_remaining(remaining);
                 }
+                if let Some((rate, wait)) = self.relay_view(sat, now) {
+                    // a live relay option relaxes the window rule: splits
+                    // whose tensor crosses the ISL before the neighbor's
+                    // pass stay feasible even as the own window closes
+                    tel = tel.with_relay(rate, wait);
+                }
                 tel
             }
         }
@@ -200,7 +393,24 @@ impl FleetSimulator {
     /// [`TelemetryMode::Live`] repeated request shapes on satellites in
     /// similar states still reuse cached decisions (telemetry is folded
     /// into the cache fingerprint).
-    pub fn run(mut self, requests: &[Request], engine: &SolverEngine) -> FleetResult {
+    ///
+    /// Errors if any request references a model id outside the configured
+    /// profile set — a bad trace must fail loudly, not silently run the
+    /// wrong network.
+    pub fn run(
+        mut self,
+        requests: &[Request],
+        engine: &SolverEngine,
+    ) -> anyhow::Result<FleetResult> {
+        for r in requests {
+            anyhow::ensure!(
+                r.model < self.config.profiles.len(),
+                "request {} references model {} but only {} profile(s) are configured",
+                r.id,
+                r.model,
+                self.config.profiles.len()
+            );
+        }
         let n = self.config.sats.len();
         let mut q: EventQueue<Event> = EventQueue::new();
         let names: Vec<String> = self.config.sats.iter().map(|s| s.name.clone()).collect();
@@ -241,6 +451,19 @@ impl FleetSimulator {
                         info.next_contact_in =
                             Seconds(model.time_to_next_contact(now).unwrap_or(f64::INFINITY));
                     }
+                    // relay horizon per satellite — only RelayAware's
+                    // soonest_effective_contact reads these fields, so
+                    // skip the O(n · neighbors) scan for other policies
+                    if matches!(self.config.routing, RoutingPolicy::RelayAware) {
+                        for id in 0..n {
+                            let (rate, wait) = self
+                                .relay_view(id, now)
+                                .unwrap_or((BitsPerSec::ZERO, Seconds(f64::INFINITY)));
+                            let info = cluster.get_mut(id).expect("registered");
+                            info.isl_rate = rate;
+                            info.neighbor_contact_in = wait;
+                        }
+                    }
                     let Some(sat) = router.route(req, &cluster) else {
                         // no eligible satellite (e.g. every battery below
                         // the energy-aware floor)
@@ -280,6 +503,7 @@ impl FleetSimulator {
                         split: s,
                         depth: k,
                         energy: proc_energy,
+                        relay: None,
                         t_gc,
                         t_cloud_suffix,
                         tx_bytes,
@@ -303,33 +527,87 @@ impl FleetSimulator {
                         complete(&mut metrics, requests, &mut flights, i, now);
                         continue;
                     }
-                    // FIFO transmitter with this satellite's contact windows
-                    let start = now.max(self.states[sat].tx_free_at);
-                    match self.config.sats[sat]
-                        .contact
-                        .finish_transfer(start, tx_bytes, self.rate)
-                    {
-                        Some(finish) => {
-                            self.states[sat].tx_free_at = finish;
-                            q.schedule(finish, Event::TxDone(i));
+                    // ISL relay: hand the tensor to the neighbor whose
+                    // pass (after serialization + propagation + its queue)
+                    // opens before our own transmitter could deliver
+                    if let Some(link) = self.pick_relay(sat, now, tx_bytes) {
+                        if let Some(f) = flights[i].as_mut() {
+                            f.relay = Some(link.to);
                         }
-                        None => {
-                            // the contact schedule ends before the transfer
-                            // can: pin the transmitter and let the request
-                            // drain as unfinished
-                            self.states[sat].tx_free_at = f64::INFINITY;
-                        }
+                        let serialize = link.rate.transfer_time(tx_bytes).value();
+                        q.schedule(now + serialize, Event::RelayTxDone(i));
+                        continue;
                     }
+                    // no relay: this satellite's own FIFO transmitter (or
+                    // its dead-transmitter short-circuit) carries it
+                    self.enqueue_downlink(
+                        sat,
+                        i,
+                        tx_bytes,
+                        now,
+                        &mut q,
+                        &mut cluster,
+                        &mut metrics,
+                        &mut flights,
+                    );
                 }
-                Event::TxDone(i) => {
-                    let (sat, e_off, tx_bytes, t_gc, t_cloud_suffix) = {
+                Event::RelayTxDone(i) => {
+                    let (sat, relay, tx_bytes, e_off) = {
                         let f = flights[i].as_ref().expect("flight in progress");
-                        (f.sat, f.e_off, f.tx_bytes, f.t_gc, f.t_cloud_suffix)
+                        (f.sat, f.downlink_sat(), f.tx_bytes, f.e_off)
                     };
-                    // transmission energy at completion
-                    if !self.states[sat].try_draw(now, e_off) {
+                    // ISL serialization draws the source's antenna power:
+                    // same P_off over the (usually shorter) ISL transmit
+                    // time, so scale the downlink transmit energy by the
+                    // rate ratio
+                    let link = self.link_between(sat, relay);
+                    let e_isl = Joules(e_off.value() * self.rate.value() / link.rate.value());
+                    if !self.states[sat].try_draw(now, e_isl) {
                         metrics.reject_transmit(Some(sat));
                         cluster.note_complete(sat, tx_bytes);
+                        flights[i] = None;
+                        continue;
+                    }
+                    if let Some(f) = flights[i].as_mut() {
+                        f.energy += e_isl;
+                    }
+                    // count the handoff only now that the serialization
+                    // actually happened (an energy refusal above means no
+                    // bytes ever crossed the ISL)
+                    metrics.note_relay(sat, relay, tx_bytes);
+                    // the tensor has left this satellite: its queue slot
+                    // frees here, the neighbor's opens at reception
+                    cluster.note_complete(sat, tx_bytes);
+                    q.schedule(now + link.propagation.value(), Event::RelayRxDone(i));
+                }
+                Event::RelayRxDone(i) => {
+                    let (relay, tx_bytes) = {
+                        let f = flights[i].as_ref().expect("flight in progress");
+                        (f.downlink_sat(), f.tx_bytes)
+                    };
+                    cluster.note_enqueue(relay, tx_bytes);
+                    // the neighbor's transmitter FIFO carries the downlink
+                    self.enqueue_downlink(
+                        relay,
+                        i,
+                        tx_bytes,
+                        now,
+                        &mut q,
+                        &mut cluster,
+                        &mut metrics,
+                        &mut flights,
+                    );
+                }
+                Event::TxDone(i) => {
+                    let (down_sat, e_off, tx_bytes, t_gc, t_cloud_suffix) = {
+                        let f = flights[i].as_ref().expect("flight in progress");
+                        (f.downlink_sat(), f.e_off, f.tx_bytes, f.t_gc, f.t_cloud_suffix)
+                    };
+                    // transmission energy at completion, drawn from the
+                    // satellite that actually keyed the antenna
+                    if !self.states[down_sat].try_draw(now, e_off) {
+                        metrics.reject_transmit(Some(down_sat));
+                        cluster.note_complete(down_sat, tx_bytes);
                         flights[i] = None;
                         continue;
                     }
@@ -340,7 +618,7 @@ impl FleetSimulator {
                     // slot before the capacity-rich WAN/cloud hop so the
                     // router and queue-depth telemetry see the true
                     // on-board backlog
-                    cluster.note_complete(sat, tx_bytes);
+                    cluster.note_complete(down_sat, tx_bytes);
                     // WAN hop + cloud compute (both capacity-rich)
                     let done = now + t_gc.value() + t_cloud_suffix.value();
                     q.schedule(done, Event::CloudDone(i));
@@ -361,11 +639,11 @@ impl FleetSimulator {
             metrics.note_unfinished(None);
         }
 
-        FleetResult {
+        Ok(FleetResult {
             metrics,
             states: self.states,
             horizon: self.config.horizon,
-        }
+        })
     }
 }
 
@@ -388,6 +666,7 @@ fn complete(
         latency: Seconds(now - req.arrival.value()),
         energy: f.energy,
         downlinked: f.tx_bytes,
+        relay: f.relay,
     });
 }
 
@@ -421,6 +700,7 @@ mod tests {
             profiles: vec![profile()],
             sats: (0..n).map(|i| spec(i as f64 * 100.0)).collect(),
             routing,
+            isl: None,
             telemetry: TelemetryMode::Live,
             horizon: Seconds::from_hours(10_000.0),
         }
@@ -431,7 +711,9 @@ mod tests {
         let trace = fixed_trace(6, Seconds(10.0), Bytes::from_mb(50.0));
         let engine = SolverRegistry::engine("ars").unwrap();
         let result =
-            FleetSimulator::new(config(3, RoutingPolicy::RoundRobin)).run(&trace, &engine);
+            FleetSimulator::new(config(3, RoutingPolicy::RoundRobin))
+                .run(&trace, &engine)
+                .unwrap();
         assert_eq!(result.metrics.completed(), 6);
         for sat in result.metrics.per_sat() {
             assert_eq!(sat.completed, 2, "{}: round-robin must balance", sat.name);
@@ -452,9 +734,11 @@ mod tests {
         let engine1 = SolverRegistry::engine("ars").unwrap();
         let engine3 = SolverRegistry::engine("ars").unwrap();
         let one = FleetSimulator::new(config(1, RoutingPolicy::LeastLoaded))
-            .run(&trace, &engine1);
+            .run(&trace, &engine1)
+            .unwrap();
         let three = FleetSimulator::new(config(3, RoutingPolicy::LeastLoaded))
-            .run(&trace, &engine3);
+            .run(&trace, &engine3)
+            .unwrap();
         assert_eq!(one.metrics.completed(), 6);
         assert_eq!(three.metrics.completed(), 6);
         assert!(
@@ -478,7 +762,7 @@ mod tests {
         }
         let trace = fixed_trace(4, Seconds(1.0), Bytes::from_mb(10.0));
         let engine = SolverRegistry::engine("ilpb").unwrap();
-        let result = FleetSimulator::new(cfg).run(&trace, &engine);
+        let result = FleetSimulator::new(cfg).run(&trace, &engine).unwrap();
         assert_eq!(result.metrics.completed(), 0);
         assert_eq!(result.metrics.rejected_admission, 4, "router must refuse all");
         assert_eq!(result.metrics.rejected_transmit, 0);
@@ -499,7 +783,7 @@ mod tests {
         cfg.horizon = Seconds(one * 1.5);
         let trace = fixed_trace(2, Seconds(0.0), Bytes::from_mb(100.0));
         let engine = SolverRegistry::engine("ars").unwrap();
-        let result = FleetSimulator::new(cfg).run(&trace, &engine);
+        let result = FleetSimulator::new(cfg).run(&trace, &engine).unwrap();
         assert_eq!(result.metrics.completed(), 1);
         assert_eq!(result.metrics.unfinished, 1);
         assert_eq!(result.metrics.per_sat()[0].unfinished, 1);
@@ -519,7 +803,7 @@ mod tests {
         cfg.sats[0].battery = Some((b, SolarPanel::new(1e-9, 0.01, 0.01), 1.0));
         let trace = fixed_trace(8, Seconds(100.0), Bytes::from_mb(20.0));
         let engine = SolverRegistry::engine("ars").unwrap();
-        let result = FleetSimulator::new(cfg).run(&trace, &engine);
+        let result = FleetSimulator::new(cfg).run(&trace, &engine).unwrap();
         assert!(
             engine.stats().tightened > 0,
             "half-full SoC must override ARS's max-energy split"
@@ -533,5 +817,196 @@ mod tests {
             );
         }
         assert!(result.metrics.completed() > 0);
+    }
+
+    // ------------------------------------------------- bugfix regressions
+
+    use crate::orbit::contact::{ContactSchedule, ContactWindow};
+    use crate::sim::contact::ScheduleContact;
+
+    /// A satellite whose schedule holds exactly one tiny window — any real
+    /// transfer outruns it, killing the transmitter.
+    fn doomed_spec(name: &str) -> SatelliteSpec {
+        let schedule = ContactSchedule {
+            windows: vec![ContactWindow {
+                start_s: 0.0,
+                end_s: 0.5,
+                max_elevation_deg: 90.0,
+            }],
+            horizon_s: 1.0,
+        };
+        SatelliteSpec::new(name, Box::new(ScheduleContact::new(schedule)))
+    }
+
+    #[test]
+    fn dead_transmitter_releases_the_queue_slot_for_routing() {
+        // Phantom-backlog regression: satellite 0's transmitter dies on
+        // the first transfer. With the slot released, least-loaded
+        // routing keeps seeing an empty queue on sat 0 and (tie → lowest
+        // id) sends *every* request there; before the fix the stuck slot
+        // pushed all later requests onto sat 1 forever.
+        let template = InstanceBuilder::new(profile())
+            .rate(crate::util::units::BitsPerSec::from_mbps(100.0))
+            .contact(Seconds::from_hours(8.0), Seconds::from_minutes(6.0));
+        let cfg = FleetSimConfig {
+            template,
+            profiles: vec![profile()],
+            sats: vec![doomed_spec("doomed"), spec(0.0)],
+            routing: RoutingPolicy::LeastLoaded,
+            isl: None,
+            // unconstrained: the window telemetry would otherwise tighten
+            // ARG's split away from the doomed transmitter
+            telemetry: TelemetryMode::Unconstrained,
+            horizon: Seconds::from_hours(10_000.0),
+        };
+        let trace = fixed_trace(4, Seconds(5000.0), Bytes::from_mb(50.0));
+        let engine = SolverRegistry::engine("arg").unwrap();
+        let result = FleetSimulator::new(cfg).run(&trace, &engine).unwrap();
+        let m = &result.metrics;
+        assert_eq!(m.per_sat()[0].unfinished, 4, "all four must land on sat 0");
+        assert_eq!(m.per_sat()[1].completed, 0);
+        assert_eq!(m.per_sat()[1].unfinished, 0);
+        assert_eq!(m.completed() + m.rejected() + m.unfinished, 4);
+    }
+
+    #[test]
+    fn pinned_transmitter_short_circuits_without_panicking() {
+        // Poisoned-transmitter regression: after the schedule dies,
+        // every later SatDone used to call finish_transfer(∞, …) — an
+        // untested non-finite input that spun the periodic walk. The
+        // short-circuit must count the request and move on.
+        let template = InstanceBuilder::new(profile())
+            .rate(crate::util::units::BitsPerSec::from_mbps(100.0))
+            .contact(Seconds::from_hours(8.0), Seconds::from_minutes(6.0));
+        let cfg = FleetSimConfig {
+            template,
+            profiles: vec![profile()],
+            sats: vec![doomed_spec("doomed")],
+            routing: RoutingPolicy::RoundRobin,
+            isl: None,
+            telemetry: TelemetryMode::Unconstrained,
+            horizon: Seconds::from_hours(10_000.0),
+        };
+        let trace = fixed_trace(3, Seconds(100.0), Bytes::from_mb(50.0));
+        let engine = SolverRegistry::engine("arg").unwrap();
+        let result = FleetSimulator::new(cfg).run(&trace, &engine).unwrap();
+        assert_eq!(result.metrics.unfinished, 3);
+        assert_eq!(result.metrics.completed(), 0);
+        assert!(!result.states[0].tx_free_at.is_finite(), "stays pinned");
+    }
+
+    #[test]
+    fn bad_model_ids_are_rejected_not_aliased() {
+        // Silent-aliasing regression: model 7 against a single profile
+        // used to wrap to profile 0; now the trace is refused.
+        let trace = vec![Request {
+            id: 42,
+            arrival: Seconds(1.0),
+            data: Bytes::from_mb(10.0),
+            model: 7,
+            class: 0,
+        }];
+        let engine = SolverRegistry::engine("ilpb").unwrap();
+        let err = FleetSimulator::new(config(2, RoutingPolicy::RoundRobin))
+            .run(&trace, &engine)
+            .expect_err("out-of-range model id must fail");
+        let msg = err.to_string();
+        assert!(msg.contains("model 7"), "unhelpful error: {msg}");
+        assert!(msg.contains("request 42"), "unhelpful error: {msg}");
+    }
+
+    // --------------------------------------------------------- ISL relay
+
+    use crate::link::isl::{IslMode, IslTopology};
+    use crate::orbit::constellation::WalkerPattern;
+
+    /// Two satellites, one plane: each is the other's only ISL neighbor.
+    /// The reference rate is generous so the (antipodal, test-only)
+    /// geometry still yields a usable link.
+    fn pair_topology() -> IslTopology {
+        let c = WalkerPattern::new(2, 1, 0, 53.0, 500.0).build();
+        IslTopology::build(&c, IslMode::Ring, BitsPerSec::from_mbps(50_000.0)).unwrap()
+    }
+
+    /// One mid-gap ARG request on sat 0 (next own pass ≈ 8 h away) while
+    /// sat 1's pass opens at 4 h: the relay must roughly halve latency.
+    fn relay_scenario(isl: Option<IslTopology>) -> (FleetSimConfig, Vec<Request>) {
+        let template = InstanceBuilder::new(profile())
+            .rate(crate::util::units::BitsPerSec::from_mbps(100.0))
+            .contact(Seconds::from_hours(8.0), Seconds::from_minutes(6.0));
+        let cfg = FleetSimConfig {
+            template,
+            profiles: vec![profile()],
+            sats: vec![spec(0.0), spec(4.0 * 3600.0)],
+            routing: RoutingPolicy::RoundRobin,
+            isl,
+            telemetry: TelemetryMode::Unconstrained,
+            horizon: Seconds::from_hours(10_000.0),
+        };
+        let trace = vec![Request {
+            id: 0,
+            arrival: Seconds(1000.0),
+            data: Bytes::from_mb(100.0),
+            model: 0,
+            class: 0,
+        }];
+        (cfg, trace)
+    }
+
+    #[test]
+    fn relay_hands_the_tensor_to_the_sooner_pass() {
+        let (bent_cfg, trace) = relay_scenario(None);
+        let bent = FleetSimulator::new(bent_cfg)
+            .run(&trace, &SolverRegistry::engine("arg").unwrap())
+            .unwrap();
+        let (relay_cfg, _) = relay_scenario(Some(pair_topology()));
+        let relayed = FleetSimulator::new(relay_cfg)
+            .run(&trace, &SolverRegistry::engine("arg").unwrap())
+            .unwrap();
+
+        assert_eq!(bent.metrics.completed(), 1);
+        assert_eq!(bent.metrics.relays, 0);
+        assert_eq!(bent.metrics.records[0].relay, None);
+
+        assert_eq!(relayed.metrics.completed(), 1);
+        assert_eq!(relayed.metrics.relays, 1, "the gap must trigger a relay");
+        let r = &relayed.metrics.records[0];
+        assert_eq!(r.relay, Some(1), "sat 1's 4 h pass beats sat 0's 8 h");
+        assert_eq!(r.sat, 0, "the record still belongs to the serving sat");
+        assert!(
+            r.latency.value() < 0.6 * bent.metrics.records[0].latency.value(),
+            "relay {} vs bent pipe {}",
+            r.latency,
+            bent.metrics.records[0].latency
+        );
+        assert_eq!(relayed.metrics.relayed_bytes, Bytes::from_mb(100.0));
+        assert_eq!(relayed.metrics.per_sat()[0].relays_out, 1);
+        assert_eq!(relayed.metrics.per_sat()[1].relays_in, 1);
+        // the relayed request cost more energy (ISL + downlink) than the
+        // bent-pipe one (downlink only)
+        assert!(r.energy.value() > bent.metrics.records[0].energy.value());
+    }
+
+    #[test]
+    fn relay_is_skipped_when_the_own_pass_is_sooner() {
+        // flip the phases: the serving satellite's pass opens first, so
+        // the topology exists but stays idle
+        let (mut cfg, trace) = relay_scenario(Some(pair_topology()));
+        cfg.sats = vec![spec(4.0 * 3600.0), spec(0.0)];
+        // route to sat 0 whose pass is at 4 h; neighbor's next is at 8 h
+        let result = FleetSimulator::new(cfg)
+            .run(&trace, &SolverRegistry::engine("arg").unwrap())
+            .unwrap();
+        assert_eq!(result.metrics.completed(), 1);
+        assert_eq!(result.metrics.relays, 0, "no relay when the own pass wins");
+        assert_eq!(result.metrics.records[0].relay, None);
+    }
+
+    #[test]
+    #[should_panic(expected = "ISL topology must cover")]
+    fn topology_fleet_size_mismatch_is_refused() {
+        let mut cfg = config(3, RoutingPolicy::RoundRobin);
+        cfg.isl = Some(pair_topology()); // 2-sat topology, 3-sat fleet
+        let _ = FleetSimulator::new(cfg);
     }
 }

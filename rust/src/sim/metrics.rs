@@ -6,7 +6,8 @@
 //! failure modes call for different remedies (shed load earlier vs pick a
 //! smaller-payload split). `unfinished` counts requests the simulation
 //! horizon cut off mid-flight. Fleet runs additionally keep a per-satellite
-//! breakdown ([`SatMetrics`]) alongside the aggregate.
+//! breakdown ([`SatMetrics`]) alongside the aggregate, including the ISL
+//! relay traffic (handoffs out, handoffs in, bytes crossing ISLs).
 
 use crate::util::stats::{LogHistogram, Welford};
 use crate::util::units::{Bytes, Joules, Seconds};
@@ -24,10 +25,14 @@ pub struct RequestRecord {
     pub completed: Seconds,
     /// End-to-end latency (completed − arrival), includes queueing.
     pub latency: Seconds,
-    /// Satellite-side energy drawn by this request.
+    /// Satellite-side energy drawn by this request (both satellites when
+    /// the request was relayed).
     pub energy: Joules,
     /// Bytes downlinked for this request.
     pub downlinked: Bytes,
+    /// Satellite that performed the downlink when the boundary tensor was
+    /// handed over an ISL; `None` for the paper's bent-pipe path.
+    pub relay: Option<usize>,
 }
 
 /// Per-satellite slice of a run's metrics.
@@ -41,6 +46,12 @@ pub struct SatMetrics {
     pub rejected_transmit: u64,
     /// In flight on this satellite when the horizon cut the run.
     pub unfinished: u64,
+    /// Boundary tensors this satellite handed to an ISL neighbor.
+    pub relays_out: u64,
+    /// Boundary tensors this satellite downlinked for a neighbor.
+    pub relays_in: u64,
+    /// Bytes this satellite pushed over its ISLs.
+    pub relayed_bytes: Bytes,
     latency: Welford,
     /// Total on-board energy of this satellite's completed requests.
     pub energy: Joules,
@@ -55,6 +66,9 @@ impl SatMetrics {
             rejected_admission: 0,
             rejected_transmit: 0,
             unfinished: 0,
+            relays_out: 0,
+            relays_in: 0,
+            relayed_bytes: Bytes::ZERO,
             latency: Welford::new(),
             energy: Joules::ZERO,
             downlinked: Bytes::ZERO,
@@ -86,6 +100,11 @@ pub struct SimMetrics {
     /// Requests still in flight (or never admitted) when the horizon cut
     /// the run.
     pub unfinished: u64,
+    /// Boundary tensors handed over an ISL instead of the capturing
+    /// satellite's own downlink.
+    pub relays: u64,
+    /// Total bytes that crossed ISLs.
+    pub relayed_bytes: Bytes,
     per_sat: Vec<SatMetrics>,
 }
 
@@ -106,6 +125,8 @@ impl SimMetrics {
             rejected_admission: 0,
             rejected_transmit: 0,
             unfinished: 0,
+            relays: 0,
+            relayed_bytes: Bytes::ZERO,
             per_sat: Vec::new(),
         }
     }
@@ -169,6 +190,16 @@ impl SimMetrics {
         }
     }
 
+    /// Count an ISL handoff: `src` pushed `bytes` to `dst`'s transmitter.
+    pub fn note_relay(&mut self, src: usize, dst: usize, bytes: Bytes) {
+        self.relays += 1;
+        self.relayed_bytes += bytes;
+        let s = self.sat_mut(src);
+        s.relays_out += 1;
+        s.relayed_bytes += bytes;
+        self.sat_mut(dst).relays_in += 1;
+    }
+
     /// Total rejections across both phases.
     pub fn rejected(&self) -> u64 {
         self.rejected_admission + self.rejected_transmit
@@ -222,6 +253,7 @@ mod tests {
             latency: Seconds(latency),
             energy: Joules(energy),
             downlinked: Bytes::from_mb(10.0),
+            relay: None,
         }
     }
 
@@ -286,6 +318,24 @@ mod tests {
         // aggregate equals the sum of the slices
         let total: u64 = sats.iter().map(|s| s.completed).sum();
         assert_eq!(total, m.completed());
+    }
+
+    #[test]
+    fn relay_accounting_attributes_both_ends() {
+        let mut m = SimMetrics::for_fleet(&["a".to_string(), "b".to_string()]);
+        m.note_relay(0, 1, Bytes::from_mb(40.0));
+        m.note_relay(0, 1, Bytes::from_mb(10.0));
+        m.note_relay(1, 0, Bytes::from_mb(5.0));
+        assert_eq!(m.relays, 3);
+        assert_eq!(m.relayed_bytes, Bytes::from_mb(55.0));
+        assert_eq!(m.per_sat()[0].relays_out, 2);
+        assert_eq!(m.per_sat()[0].relays_in, 1);
+        assert_eq!(m.per_sat()[0].relayed_bytes, Bytes::from_mb(50.0));
+        assert_eq!(m.per_sat()[1].relays_out, 1);
+        assert_eq!(m.per_sat()[1].relays_in, 2);
+        assert_eq!(m.per_sat()[1].relayed_bytes, Bytes::from_mb(5.0));
+        // relays are bookkeeping, not outcomes: no completion implied
+        assert_eq!(m.completed(), 0);
     }
 
     #[test]

@@ -19,7 +19,8 @@
 //! * [`metrics`] — per-request records, phase-tagged rejections, and
 //!   per-satellite/fleet aggregate statistics.
 //! * [`fleet`] — the N-satellite simulator: coordinator routing, per-
-//!   satellite batteries and contact models, telemetry-fed solves.
+//!   satellite batteries and contact models, ISL relay handoffs
+//!   ([`crate::link::isl`]), telemetry-fed solves.
 //! * [`runner`] — the paper's single-satellite scenario, a thin N = 1
 //!   wrapper over [`fleet`].
 

@@ -72,7 +72,10 @@ impl Simulator {
     /// Decisions go through the [`SolverEngine`]: repeated request shapes
     /// (fixed-size capture traces, the common case) reuse cached
     /// decisions instead of re-solving per arrival.
-    pub fn run(self, requests: &[Request], engine: &SolverEngine) -> SimResult {
+    ///
+    /// Errors if the trace references a model id outside
+    /// [`SimConfig::profiles`] (same validation as the fleet DES).
+    pub fn run(self, requests: &[Request], engine: &SolverEngine) -> anyhow::Result<SimResult> {
         let Simulator { config, satellite } = self;
         let SimConfig {
             template,
@@ -85,17 +88,18 @@ impl Simulator {
             profiles,
             sats: vec![SatelliteSpec::new("sat-0", Box::new(contact))],
             routing: RoutingPolicy::RoundRobin,
+            isl: None,
             telemetry: TelemetryMode::Unconstrained,
             horizon,
         };
         let mut sim = FleetSimulator::new(fleet);
         sim.states[0] = satellite;
-        let mut result = sim.run(requests, engine);
-        SimResult {
+        let mut result = sim.run(requests, engine)?;
+        Ok(SimResult {
             metrics: result.metrics,
             state: result.states.remove(0),
             horizon: result.horizon,
-        }
+        })
     }
 }
 
@@ -148,7 +152,7 @@ mod tests {
         // split 0, arrival at t=0 (window-aligned): DES latency == Eq. 5.
         let cfg = config(100.0);
         let trace = fixed_trace(1, Seconds(0.0), Bytes::from_gb(2.0));
-        let result = Simulator::new(cfg).run(&trace, &engine("arg"));
+        let result = Simulator::new(cfg).run(&trace, &engine("arg")).unwrap();
         assert_eq!(result.metrics.completed(), 1);
         let inst = InstanceBuilder::new(profile())
             .rate(BitsPerSec::from_mbps(100.0))
@@ -172,7 +176,7 @@ mod tests {
     fn single_ars_request_matches_closed_form() {
         let cfg = config(100.0);
         let trace = fixed_trace(1, Seconds(0.0), Bytes::from_mb(100.0));
-        let result = Simulator::new(cfg).run(&trace, &engine("ars"));
+        let result = Simulator::new(cfg).run(&trace, &engine("ars")).unwrap();
         assert_eq!(result.metrics.completed(), 1);
         let inst = InstanceBuilder::new(profile())
             .rate(BitsPerSec::from_mbps(100.0))
@@ -193,7 +197,7 @@ mod tests {
         // first to finish processing.
         let cfg = config(100.0);
         let trace = fixed_trace(2, Seconds(0.0), Bytes::from_mb(100.0));
-        let result = Simulator::new(cfg).run(&trace, &engine("ars"));
+        let result = Simulator::new(cfg).run(&trace, &engine("ars")).unwrap();
         assert_eq!(result.metrics.completed(), 2);
         let l0 = result.metrics.records[0].latency.value();
         let l1 = result.metrics.records[1].latency.value();
@@ -208,8 +212,8 @@ mod tests {
         let cfg_a = draining_config(50.0);
         let cfg_b = draining_config(50.0);
         let trace = fixed_trace(5, Seconds(10.0), Bytes::from_gb(1.0));
-        let arg = Simulator::new(cfg_a).run(&trace, &engine("arg"));
-        let ilpb = Simulator::new(cfg_b).run(&trace, &engine("ilpb"));
+        let arg = Simulator::new(cfg_a).run(&trace, &engine("arg")).unwrap();
+        let ilpb = Simulator::new(cfg_b).run(&trace, &engine("ilpb")).unwrap();
         assert!(ilpb.metrics.total_downlinked <= arg.metrics.total_downlinked);
         assert_eq!(ilpb.metrics.completed(), 5);
     }
@@ -226,7 +230,7 @@ mod tests {
             1.0,
         );
         let trace = fixed_trace(10, Seconds(1.0), Bytes::from_gb(5.0));
-        let result = Simulator::new(cfg).with_satellite(sat).run(&trace, &engine("ars"));
+        let result = Simulator::new(cfg).with_satellite(sat).run(&trace, &engine("ars")).unwrap();
         assert!(
             result.metrics.rejected() > 0,
             "energy-starved satellite must reject work"
@@ -250,7 +254,7 @@ mod tests {
         let t_one = inst.evaluate_split(inst.depth()).latency.value();
         cfg.horizon = Seconds(t_one * 1.5);
         let trace = fixed_trace(2, Seconds(0.0), Bytes::from_mb(100.0));
-        let result = Simulator::new(cfg).run(&trace, &engine("ars"));
+        let result = Simulator::new(cfg).run(&trace, &engine("ars")).unwrap();
         assert_eq!(result.metrics.completed(), 1);
         assert_eq!(result.metrics.unfinished, 1);
         assert_eq!(result.metrics.rejected(), 0);
@@ -270,8 +274,8 @@ mod tests {
             )
             .generate(Seconds::from_hours(24.0), &mut rng)
         };
-        let a = Simulator::new(config(60.0)).run(&trace, &engine("ilpb"));
-        let b = Simulator::new(config(60.0)).run(&trace, &engine("ilpb"));
+        let a = Simulator::new(config(60.0)).run(&trace, &engine("ilpb")).unwrap();
+        let b = Simulator::new(config(60.0)).run(&trace, &engine("ilpb")).unwrap();
         assert_eq!(a.metrics.completed(), b.metrics.completed());
         assert_eq!(a.metrics.mean_latency(), b.metrics.mean_latency());
         assert_eq!(a.metrics.total_downlinked, b.metrics.total_downlinked);

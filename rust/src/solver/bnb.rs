@@ -21,6 +21,12 @@
 //!
 //! The paper's termination tolerance (`|Ans' − Ans| < 1e-5`, line 7) is
 //! supported via [`Ilpb::with_epsilon`]; the default is 0 (exact optimum).
+//! The tolerance is enforced through the *bound*: a subtree is cut as soon
+//! as its admissible lower bound cannot improve the incumbent by more than
+//! ε, which guarantees `Ans − Z* ≤ ε` against the true optimum `Z*`.
+//! (Stopping on a sub-ε *consecutive* improvement — a literal reading of
+//! line 7 — does not bound the distance to the optimum: many small
+//! improvements can accumulate past ε.)
 
 use super::instance::{Decision, Instance, Objective};
 use super::policy::OffloadPolicy;
@@ -98,11 +104,7 @@ impl Ilpb {
         // prefix is the only expandable spine, visited in order.
         let mut t_prefix = Seconds::ZERO;
         let mut e_prefix = Joules::ZERO;
-        let mut done = false;
         for depth in 0..=k {
-            if done {
-                break;
-            }
             stats.nodes += 1;
 
             // Branch h_{depth+1} = 0: the assignment completes as split
@@ -120,10 +122,6 @@ impl Ilpb {
             };
             stats.leaves += 1;
             if leaf_z < best_z {
-                if (best_z - leaf_z).abs() < self.epsilon {
-                    // paper line 7: negligible improvement ⇒ stop early
-                    done = true;
-                }
                 best_z = leaf_z;
                 best_split = depth;
                 stats.improvements += 1;
@@ -135,13 +133,17 @@ impl Ilpb {
                     // Admissible bound for every completion below this
                     // node: committed satellite prefix (including subtask
                     // `depth` now placed on the satellite) + optimistic
-                    // remainder, zero future transmission energy.
+                    // remainder, zero future transmission energy. With a
+                    // termination tolerance, cut as soon as nothing deeper
+                    // can improve the incumbent by more than ε — this is
+                    // what guarantees `best_z − Z* ≤ ε` (the true optimum
+                    // Z* never sits below a surviving lower bound).
                     let t_lb = t_prefix + delta_sat[depth] + best_suffix[depth + 1];
                     let e_lb = e_prefix + e_sat[depth];
                     let z_lb = z_from_raw(&obj, e_lb, t_lb);
-                    if z_lb >= best_z {
+                    if z_lb >= best_z - self.epsilon {
                         stats.pruned += 1;
-                        break; // nothing deeper can improve
+                        break; // nothing deeper can improve beyond ε
                     }
                 }
                 t_prefix += delta_sat[depth];
@@ -323,6 +325,34 @@ mod tests {
         assert!(stats.leaves >= 1);
         assert!(stats.nodes >= stats.leaves); // every leaf hangs off a node
         assert!(stats.improvements >= 1);
+    }
+
+    #[test]
+    fn epsilon_stop_is_within_epsilon_of_the_optimum() {
+        // the paper's |Ans' − Ans| < ε guarantee, as a property over
+        // random instances and tolerances: the early-stopped answer never
+        // sits more than ε above the exhaustive optimum
+        for (name, eps) in [
+            ("eps=1e-5", 1e-5),
+            ("eps=1e-3", 1e-3),
+            ("eps=0.05", 0.05),
+        ] {
+            Runner::new(name, 150).run(|rng| {
+                let inst = random_instance(rng);
+                let (d, _) = Ilpb::default().with_epsilon(eps).solve(&inst);
+                let oracle = Exhaustive.decide(&inst);
+                let gap = d.z - oracle.z;
+                if gap > eps + 1e-12 {
+                    return Err(format!(
+                        "K={}: z={} is {gap} above the optimum {} (ε={eps})",
+                        inst.depth(),
+                        d.z,
+                        oracle.z
+                    ));
+                }
+                Ok(())
+            });
+        }
     }
 
     #[test]

@@ -217,6 +217,12 @@ pub fn fingerprint(inst: &Instance, telemetry: &Telemetry) -> u64 {
         telemetry.contact_remaining.is_some().hash(&mut h);
         if let Some(t) = telemetry.contact_remaining {
             quantize(t.value()).hash(&mut h);
+            // relay relaxation can only change an answer while a window
+            // constraint is active, so fold it in only here
+            if let (Some(r), Some(w)) = (telemetry.isl_rate, telemetry.neighbor_contact_in) {
+                quantize(r.value()).hash(&mut h);
+                quantize(w.value()).hash(&mut h);
+            }
         }
         telemetry.deadline.is_some().hash(&mut h);
         if let Some(d) = telemetry.deadline {
@@ -360,5 +366,26 @@ mod tests {
         assert_ne!(fingerprint(&inst, &free), fingerprint(&inst, &rushed));
         let rushed_queued = rushed.with_queue_depth(3);
         assert_ne!(fingerprint(&inst, &rushed), fingerprint(&inst, &rushed_queued));
+    }
+
+    #[test]
+    fn relay_telemetry_keys_only_under_a_window_constraint() {
+        use crate::util::units::BitsPerSec;
+        let mut rng = Pcg64::seeded(9);
+        let inst = InstanceBuilder::new(ModelProfile::sampled(5, &mut rng))
+            .build()
+            .unwrap();
+        let free = Telemetry::default();
+        // relay fields without a window constraint relax nothing ⇒ same key
+        let relay_only =
+            Telemetry::default().with_relay(BitsPerSec::from_mbps(80.0), Seconds(300.0));
+        assert_eq!(fingerprint(&inst, &free), fingerprint(&inst, &relay_only));
+        // under an active window the relay option can change the answer
+        let window = Telemetry::default().with_contact_remaining(Seconds(30.0));
+        let window_relay = window.with_relay(BitsPerSec::from_mbps(80.0), Seconds(300.0));
+        assert_ne!(fingerprint(&inst, &window), fingerprint(&inst, &window_relay));
+        // and a different relay quality is a different key
+        let slower = window.with_relay(BitsPerSec::from_mbps(8.0), Seconds(300.0));
+        assert_ne!(fingerprint(&inst, &window_relay), fingerprint(&inst, &slower));
     }
 }

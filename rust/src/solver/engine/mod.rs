@@ -345,7 +345,20 @@ fn allowed_splits(inst: &Instance, tel: &Telemetry, costs: &[Costs]) -> Option<V
             if s < k {
                 let tx = inst.downlink.transmission_time(inst.wire_bytes(s));
                 if tx.value() > window.value() + EPS * window.value().max(1.0) {
-                    allowed[s] = false;
+                    // the own window can't carry it, but a cheap relay
+                    // still can: the boundary tensor crosses the ISL
+                    // before the neighbor's pass opens, so the earlier
+                    // split costs no extra latency via the neighbor
+                    let relayable = match (tel.isl_rate, tel.neighbor_contact_in) {
+                        (Some(rate), Some(wait)) => {
+                            rate.transfer_time(inst.wire_bytes(s)).value()
+                                <= wait.value() + EPS * wait.value().max(1.0)
+                        }
+                        _ => false,
+                    };
+                    if !relayable {
+                        allowed[s] = false;
+                    }
                 }
             }
         }
@@ -478,6 +491,33 @@ mod tests {
             "only the no-transmission split survives a closed window"
         );
         assert!(out.tightened || Ilpb::default().decide(&inst).split == inst.depth());
+    }
+
+    #[test]
+    fn cheap_relay_reopens_window_excluded_splits() {
+        use crate::util::units::BitsPerSec;
+        // ARG wants split 0; a nearly closed window excludes it ...
+        let inst = instance(14, 9, 80.0);
+        let engine = SolverEngine::new(Box::new(Arg));
+        let window = Telemetry::unconstrained().with_contact_remaining(Seconds(0.5));
+        let repaired = engine.solve_parts(&inst, &window);
+        assert!(repaired.tightened, "split 0 cannot fit a 0.5 s window");
+        // ... but a fast ISL with a generous neighbor wait carries every
+        // boundary tensor, so ARG's split survives untightened
+        let relayed = Telemetry::unconstrained()
+            .with_contact_remaining(Seconds(0.5))
+            .with_relay(BitsPerSec::from_mbps(10_000.0), Seconds(1e7));
+        let out = engine.solve_parts(&inst, &relayed);
+        assert!(!out.tightened, "relay must relax the window rule");
+        assert_eq!(out.decision.split, 0);
+        // a starved ISL (can't finish before the neighbor's pass) does
+        // not reopen anything: same repair as the relay-free solve
+        let starved = Telemetry::unconstrained()
+            .with_contact_remaining(Seconds(0.5))
+            .with_relay(BitsPerSec(1.0), Seconds(1.0));
+        let out = engine.solve_parts(&inst, &starved);
+        assert!(out.tightened);
+        assert_eq!(out.decision.split, repaired.decision.split);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! into *constraint tightening*: feasible splits that the live context
 //! rules out are removed before the wrapped policy's answer is accepted.
 
-use crate::util::units::Seconds;
+use crate::util::units::{BitsPerSec, Seconds};
 
 /// Live platform context attached to a [`super::SolveRequest`].
 ///
@@ -45,6 +45,21 @@ pub struct Telemetry {
     /// Tightening: a split `s` is allowed only when
     /// `latency(s) + queue_depth · t_satellite(s)` meets the deadline.
     pub deadline: Option<Seconds>,
+    /// ISL rate toward the relay neighbor whose ground pass opens first,
+    /// when the platform has one ([`crate::link::isl::IslTopology`]).
+    /// Both relay fields always describe the same concrete link.
+    ///
+    /// Relaxation (paired with [`Telemetry::neighbor_contact_in`]): a
+    /// split the *own* contact window excludes stays allowed when its
+    /// boundary tensor crosses the ISL before the neighbor's pass opens —
+    /// a cheap relay means closing windows no longer force a later split.
+    /// Never tightens on its own.
+    pub isl_rate: Option<BitsPerSec>,
+    /// Serialization budget toward that relay neighbor: seconds until its
+    /// ground pass opens, less the one-way ISL propagation — a tensor
+    /// whose ISL serialization fits this budget arrives by the pass.
+    /// See [`Telemetry::isl_rate`].
+    pub neighbor_contact_in: Option<Seconds>,
 }
 
 impl Default for Telemetry {
@@ -62,6 +77,8 @@ impl Telemetry {
             contact_remaining: None,
             queue_depth: 0,
             deadline: None,
+            isl_rate: None,
+            neighbor_contact_in: None,
         }
     }
 
@@ -86,8 +103,19 @@ impl Telemetry {
         self
     }
 
+    /// Advertise a relay option: the best ISL rate and the wait until that
+    /// neighbor's pass opens. Only *relaxes* the contact-window rule.
+    pub fn with_relay(mut self, isl_rate: BitsPerSec, neighbor_contact_in: Seconds) -> Self {
+        assert!(isl_rate.value() > 0.0, "ISL rate must be positive");
+        self.isl_rate = Some(isl_rate);
+        self.neighbor_contact_in = Some(neighbor_contact_in);
+        self
+    }
+
     /// True when no field can tighten anything — the engine's fast path
     /// (no per-split constraint scan, fingerprint without telemetry).
+    /// Relay fields are ignored: they only relax the window rule, so with
+    /// no window constraint active they cannot change any answer.
     pub fn is_unconstrained(&self) -> bool {
         self.battery_soc >= 1.0
             && self.contact_remaining.is_none()
@@ -121,6 +149,23 @@ mod tests {
         // queue depth alone constrains nothing (it only scales the
         // deadline check)
         assert!(Telemetry::default().with_queue_depth(5).is_unconstrained());
+        // relay availability alone relaxes, never tightens
+        assert!(Telemetry::default()
+            .with_relay(BitsPerSec::from_mbps(100.0), Seconds(60.0))
+            .is_unconstrained());
+    }
+
+    #[test]
+    fn relay_builder_sets_both_fields() {
+        let t = Telemetry::default().with_relay(BitsPerSec::from_mbps(50.0), Seconds(120.0));
+        assert_eq!(t.isl_rate, Some(BitsPerSec::from_mbps(50.0)));
+        assert_eq!(t.neighbor_contact_in, Some(Seconds(120.0)));
+    }
+
+    #[test]
+    #[should_panic(expected = "ISL rate must be positive")]
+    fn rejects_zero_isl_rate() {
+        let _ = Telemetry::default().with_relay(BitsPerSec::ZERO, Seconds(1.0));
     }
 
     #[test]

@@ -52,18 +52,22 @@ fn n1_fleet_matches_the_legacy_simulator_bit_identically() {
         contact,
         horizon,
     };
-    let legacy = Simulator::new(legacy_cfg).run(&trace, &SolverRegistry::engine("ilpb").unwrap());
+    let legacy = Simulator::new(legacy_cfg)
+        .run(&trace, &SolverRegistry::engine("ilpb").unwrap())
+        .unwrap();
 
     let fleet_cfg = FleetSimConfig {
         template: template(60.0),
         profiles: vec![profile()],
         sats: vec![SatelliteSpec::new("sat-0", Box::new(contact))],
         routing: RoutingPolicy::RoundRobin,
+        isl: None,
         telemetry: TelemetryMode::Unconstrained,
         horizon,
     };
-    let fleet =
-        FleetSimulator::new(fleet_cfg).run(&trace, &SolverRegistry::engine("ilpb").unwrap());
+    let fleet = FleetSimulator::new(fleet_cfg)
+        .run(&trace, &SolverRegistry::engine("ilpb").unwrap())
+        .unwrap();
 
     assert!(!legacy.metrics.records.is_empty());
     assert_eq!(
@@ -94,7 +98,9 @@ fn fleet_runs_with_many_satellites_are_deterministic() {
         let trace = scen.workload().generate(scen.horizon(), &mut rng);
         let profile = ModelProfile::sampled(8, &mut rng);
         let engine = SolverRegistry::engine("ilpb").unwrap();
-        FleetSimulator::new(scen.sim_config(profile).unwrap()).run(&trace, &engine)
+        FleetSimulator::new(scen.sim_config(profile).unwrap())
+            .run(&trace, &engine)
+            .unwrap()
     };
     let a = run();
     let b = run();
@@ -159,7 +165,9 @@ fn fleet_conserves_requests_across_all_buckets() {
     let trace = scen.workload().generate(scen.horizon(), &mut rng);
     let profile = ModelProfile::sampled(10, &mut rng);
     let engine = SolverRegistry::engine("ilpb").unwrap();
-    let result = FleetSimulator::new(scen.sim_config(profile).unwrap()).run(&trace, &engine);
+    let result = FleetSimulator::new(scen.sim_config(profile).unwrap())
+        .run(&trace, &engine)
+        .unwrap();
     let m = &result.metrics;
     assert_eq!(
         m.completed() + m.rejected() + m.unfinished,
@@ -170,6 +178,83 @@ fn fleet_conserves_requests_across_all_buckets() {
     let sat_completed: u64 = m.per_sat().iter().map(|s| s.completed).sum();
     assert_eq!(sat_completed, m.completed());
     assert!(m.per_sat().iter().map(|s| s.rejected()).sum::<u64>() <= m.rejected());
+}
+
+/// Conservation holds with ISL relaying in the loop: every request lands
+/// in exactly one bucket even when tensors hop between satellites, and
+/// the relay telemetry stays internally consistent.
+#[test]
+fn relay_fleet_conserves_requests_across_all_buckets() {
+    let mut scen = FleetScenario::walker_631();
+    scen.horizon_hours = 48.0;
+    scen.interarrival_s = 1200.0;
+    scen.isl = leo_infer::link::isl::IslMode::Grid;
+    scen.routing = "relay-aware".to_string();
+    scen.battery_capacity_j = 5.0e5;
+    let mut rng = Pcg64::seeded(29);
+    let trace = scen.workload().generate(scen.horizon(), &mut rng);
+    let profile = ModelProfile::sampled(10, &mut rng);
+    let engine = SolverRegistry::engine("ilpb").unwrap();
+    let result = FleetSimulator::new(scen.sim_config(profile).unwrap())
+        .run(&trace, &engine)
+        .unwrap();
+    let m = &result.metrics;
+    assert_eq!(
+        m.completed() + m.rejected() + m.unfinished,
+        trace.len() as u64,
+        "every request must land in exactly one bucket with relays on"
+    );
+    let sat_completed: u64 = m.per_sat().iter().map(|s| s.completed).sum();
+    assert_eq!(sat_completed, m.completed());
+    // relay bookkeeping tiles: every handoff has exactly one sender and
+    // one receiver
+    let out: u64 = m.per_sat().iter().map(|s| s.relays_out).sum();
+    let inn: u64 = m.per_sat().iter().map(|s| s.relays_in).sum();
+    assert_eq!(out, m.relays);
+    assert_eq!(inn, m.relays);
+    let relayed: f64 = m.per_sat().iter().map(|s| s.relayed_bytes.value()).sum();
+    assert!((relayed - m.relayed_bytes.value()).abs() < 1e-6);
+    // records agree with the aggregate relay count
+    let relayed_records = m.records.iter().filter(|r| r.relay.is_some()).count() as u64;
+    assert!(
+        relayed_records <= m.relays,
+        "some relayed requests may be rejected/unfinished, never the reverse"
+    );
+}
+
+/// RelayAware routing over an ISL grid is deterministic: identical
+/// configuration and trace reproduce records, relay counts, and
+/// per-satellite breakdowns exactly.
+#[test]
+fn relay_aware_routing_is_deterministic() {
+    let run = || -> FleetResult {
+        let mut scen = FleetScenario::walker_631();
+        scen.horizon_hours = 48.0;
+        scen.interarrival_s = 1500.0;
+        scen.data_gb_lo = 0.2;
+        scen.data_gb_hi = 2.0;
+        scen.isl = leo_infer::link::isl::IslMode::Grid;
+        scen.routing = "relay-aware".to_string();
+        let mut rng = Pcg64::seeded(37);
+        let trace = scen.workload().generate(scen.horizon(), &mut rng);
+        let profile = ModelProfile::sampled(8, &mut rng);
+        let engine = SolverRegistry::engine("ilpb").unwrap();
+        FleetSimulator::new(scen.sim_config(profile).unwrap())
+            .run(&trace, &engine)
+            .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert!(a.metrics.completed() > 0, "scenario must serve something");
+    assert_eq!(a.metrics.records, b.metrics.records);
+    assert_eq!(a.metrics.relays, b.metrics.relays);
+    assert_eq!(a.metrics.relayed_bytes, b.metrics.relayed_bytes);
+    assert_eq!(a.metrics.unfinished, b.metrics.unfinished);
+    for (sa, sb) in a.metrics.per_sat().iter().zip(b.metrics.per_sat()) {
+        assert_eq!(sa.completed, sb.completed, "{}", sa.name);
+        assert_eq!(sa.relays_out, sb.relays_out, "{}", sa.name);
+        assert_eq!(sa.relays_in, sb.relays_in, "{}", sa.name);
+    }
 }
 
 /// Orbit-derived contact schedules drive the fleet end to end: a Walker
@@ -186,7 +271,9 @@ fn orbit_derived_fleet_serves_captures_end_to_end() {
     let trace = scen.workload().generate(scen.horizon(), &mut rng);
     let profile = ModelProfile::sampled(10, &mut rng);
     let engine = SolverRegistry::engine("ilpb").unwrap();
-    let result = FleetSimulator::new(scen.sim_config(profile).unwrap()).run(&trace, &engine);
+    let result = FleetSimulator::new(scen.sim_config(profile).unwrap())
+        .run(&trace, &engine)
+        .unwrap();
     let m = &result.metrics;
     assert!(
         m.completed() > 0,

@@ -68,7 +68,7 @@ fn week_long_simulation_conserves_and_orders() {
             ),
             horizon,
         };
-        let result = Simulator::new(cfg).run(&trace, &engine);
+        let result = Simulator::new(cfg).run(&trace, &engine).unwrap();
         assert_eq!(
             result.metrics.completed() as usize + result.metrics.rejected() as usize,
             trace.len(),
