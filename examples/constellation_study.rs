@@ -1,4 +1,5 @@
-//! Constellation study: orbit-derived contact windows + fleet DES.
+//! Constellation study: orbit-derived contact windows + fleet DES — now a
+//! thin wrapper over the [`leo_infer::exp`] sweep subsystem.
 //!
 //! ```bash
 //! cargo run --release --example constellation_study
@@ -8,19 +9,16 @@
 //! satellite in closed form. Here we *derive* per-satellite contact
 //! windows from first-principles orbital geometry for a Walker 6/3/1
 //! constellation over a real ground-station site, then run the fleet
-//! discrete-event simulator end-to-end on them: every capture is routed
-//! by the coordinator, solved under live per-satellite telemetry (battery
-//! SoC, remaining window, queue depth), processed through that
-//! satellite's FIFOs, and downlinked through its own passes. Routing
-//! policies are compared on the same trace.
+//! discrete-event simulator end-to-end on them. The routing-policy
+//! comparison is a one-axis [`SweepSpec`] executed by the parallel
+//! runner: cells share a replication seed, so every policy is scored on
+//! the *same* capture trace (common random numbers), exactly like the
+//! old hand-rolled loop — minus the loop.
 
 use leo_infer::config::{ContactSource, FleetScenario};
-use leo_infer::dnn::profile::ModelProfile;
+use leo_infer::exp::{self, Axes, SweepSpec};
 use leo_infer::orbit::contact::ContactSchedule;
 use leo_infer::orbit::eclipse::eclipse_fraction;
-use leo_infer::sim::fleet::FleetSimulator;
-use leo_infer::solver::SolverRegistry;
-use leo_infer::util::rng::Pcg64;
 use leo_infer::util::units::Seconds;
 
 fn main() -> anyhow::Result<()> {
@@ -65,38 +63,31 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // the same 24 h capture trace through the DES under each routing policy
-    let mut rng = Pcg64::seeded(0xC0457);
-    let trace = scenario.workload().generate(scenario.horizon(), &mut rng);
-    let profile = ModelProfile::sampled(10, &mut rng);
+    // the same 24 h capture trace through the DES under each routing
+    // policy: a one-axis sweep (ILPB solves throughout)
+    let spec = SweepSpec {
+        name: "constellation-study".to_string(),
+        seed: 0xC0457,
+        replications: 1,
+        base: scenario,
+        axes: Axes {
+            routing: vec![
+                "round-robin".to_string(),
+                "least-loaded".to_string(),
+                "contact-aware".to_string(),
+            ],
+            ..Axes::default()
+        },
+    };
+    let result = exp::run_sweep(&spec, exp::default_threads())?;
     println!(
-        "\nrouting {} captures ({:.1}-{:.1} GB) through the fleet DES:",
-        trace.len(),
-        scenario.data_gb_lo,
-        scenario.data_gb_hi
+        "\nrouting {} captures ({:.1}-{:.1} GB) through the fleet DES ({} cells):",
+        result.cells[0].submitted,
+        spec.base.data_gb_lo,
+        spec.base.data_gb_hi,
+        result.cells.len()
     );
-    println!(
-        "{:<14} {:>9} {:>9} {:>11} {:>13} {:>10} {:>12}",
-        "policy", "completed", "rejected", "unfinished", "mean lat(s)", "down(GB)", "per-sat done"
-    );
-    for routing in ["round-robin", "least-loaded", "contact-aware"] {
-        let mut scen = scenario.clone();
-        scen.routing = routing.to_string();
-        let engine = SolverRegistry::engine("ilpb")?;
-        let result = FleetSimulator::new(scen.sim_config(profile.clone())?).run(&trace, &engine)?;
-        let m = &result.metrics;
-        let per_sat: Vec<u64> = m.per_sat().iter().map(|s| s.completed).collect();
-        println!(
-            "{:<14} {:>9} {:>9} {:>11} {:>13.1} {:>10.2} {:>12}",
-            routing,
-            m.completed(),
-            m.rejected(),
-            m.unfinished,
-            m.mean_latency().value(),
-            m.total_downlinked.gb(),
-            format!("{per_sat:?}")
-        );
-    }
+    print!("{}", exp::comparison_table(&result, "routing")?);
 
     println!(
         "\nContact-aware routing sends downlink-heavy work to the satellite \

@@ -1,4 +1,5 @@
-//! Relay study: ISL offloading vs the paper's bent pipe.
+//! Relay study: ISL offloading vs the paper's bent pipe — now a thin
+//! wrapper over the [`leo_infer::exp`] sweep subsystem.
 //!
 //! ```bash
 //! cargo run --release --example relay_study            # full 48 h study
@@ -12,146 +13,136 @@
 //! so a boundary tensor produced mid-gap waits on average ~4 h for its own
 //! satellite's downlink.
 //!
-//! Inter-satellite links change that arithmetic: with a `grid` topology a
-//! satellite's tensor can cross an ISL to whichever neighbor (fore/aft in
-//! plane, same slot in the adjacent planes) passes next, cutting the wait
-//! to the fleet's pass spacing. The same trace is pushed through three
-//! configurations:
+//! The study is the cross product {ars, ilpb} × {isl off, isl grid},
+//! declared as a [`SweepSpec`] and executed by the deterministic parallel
+//! runner. Cells sharing a replication share a seed (common random
+//! numbers), so every configuration sees the *same* capture trace — the
+//! pairing the old hand-rolled loop achieved by generating one trace up
+//! front. Three of the four cells are the original study:
 //!
-//! * `ars · isl off`  — all-on-satellite: no downlink at all, every stage
-//!   computed on the (slow) capture satellite;
-//! * `ilpb · isl off` — the paper's bent pipe: optimal split, own pass only;
-//! * `ilpb · isl grid`— the relay path this study is about.
+//! * `ars · off`   — all-on-satellite: no downlink at all;
+//! * `ilpb · off`  — the paper's bent pipe: optimal split, own pass only;
+//! * `ilpb · grid` — the relay path this study is about.
 //!
 //! The run asserts the headline result — relays beat both baselines on
 //! mean latency — so CI fails if the relay path ever rots.
 
 use leo_infer::config::FleetScenario;
-use leo_infer::dnn::profile::ModelProfile;
+use leo_infer::exp::{self, Axes, CellResult, SweepSpec};
 use leo_infer::link::isl::IslMode;
-use leo_infer::sim::fleet::{FleetResult, FleetSimulator};
-use leo_infer::sim::workload::Request;
-use leo_infer::solver::SolverRegistry;
-use leo_infer::util::rng::Pcg64;
 
-fn scenario(smoke: bool) -> FleetScenario {
-    let mut scen = FleetScenario::walker_631();
-    scen.name = "relay-study-8-4-1".to_string();
-    scen.sats = 8;
-    scen.planes = 4;
-    scen.phasing = 1;
+fn spec(smoke: bool) -> SweepSpec {
+    let mut base = FleetScenario::walker_631();
+    base.name = "relay-study-8-4-1".to_string();
+    base.sats = 8;
+    base.planes = 4;
+    base.phasing = 1;
     // capture-bound arrivals: the router cannot chase ground passes
-    scen.routing = "round-robin".to_string();
+    base.routing = "round-robin".to_string();
     // optical-class ISL reference rate; per-link rates scale with range
-    scen.isl_rate_mbps = 1000.0;
+    base.isl_rate_mbps = 1000.0;
     // modest tensors keep the all-on-satellite baseline stable (≈ 0.1–0.5
     // GB is 3–10 ks of on-board compute at the paper's β)
-    scen.data_gb_lo = 0.1;
-    scen.data_gb_hi = 0.5;
+    base.data_gb_lo = 0.1;
+    base.data_gb_hi = 0.5;
     if smoke {
-        scen.horizon_hours = 12.0;
-        scen.interarrival_s = 3600.0;
+        base.horizon_hours = 12.0;
+        base.interarrival_s = 3600.0;
     } else {
-        scen.horizon_hours = 48.0;
-        scen.interarrival_s = 1800.0;
+        base.horizon_hours = 48.0;
+        base.interarrival_s = 1800.0;
     }
-    scen
+    SweepSpec {
+        name: "relay-study".to_string(),
+        seed: 0x15_1AB,
+        replications: 1,
+        base,
+        axes: Axes {
+            solver: vec!["ars".to_string(), "ilpb".to_string()],
+            isl: vec![IslMode::Off, IslMode::Grid],
+            ..Axes::default()
+        },
+    }
 }
 
-fn run(
-    scen: &FleetScenario,
-    policy: &str,
-    isl: IslMode,
-    trace: &[Request],
-    profile: &ModelProfile,
-) -> anyhow::Result<FleetResult> {
-    let mut scen = scen.clone();
-    scen.isl = isl;
-    let engine = SolverRegistry::engine(policy)?;
-    FleetSimulator::new(scen.sim_config(profile.clone())?).run(trace, &engine)
+/// The cell for a (solver, isl) coordinate.
+fn pick<'a>(cells: &'a [CellResult], solver: &str, isl: IslMode) -> &'a CellResult {
+    cells
+        .iter()
+        .find(|c| c.cell.solver == solver && c.cell.scenario.isl == isl)
+        .expect("configuration in grid")
 }
 
 fn main() -> anyhow::Result<()> {
     leo_infer::util::logging::init();
     let smoke = std::env::args().any(|a| a == "--smoke");
-    let scen = scenario(smoke);
-
-    let mut rng = Pcg64::seeded(0x15_1AB);
-    let trace = scen.workload().generate(scen.horizon(), &mut rng);
-    let profile = ModelProfile::sampled(10, &mut rng);
+    let spec = spec(smoke);
+    let scen = &spec.base;
     println!(
-        "relay study{}: Walker {}/{}/{} @ {} km, {} captures ({:.1}-{:.1} GB) over {} h,\n\
-         one {:.0}-min pass per satellite every {:.0} h (staggered 1 h apart)\n",
+        "relay study{}: Walker {}/{}/{} @ {} km, {:.1}-{:.1} GB captures over {} h,\n\
+         one {:.0}-min pass per satellite every {:.0} h (staggered 1 h apart)\n\
+         grid: {} cells over solver x isl, common random numbers per replication\n",
         if smoke { " (smoke)" } else { "" },
         scen.sats,
         scen.planes,
         scen.phasing,
         scen.altitude_km,
-        trace.len(),
         scen.data_gb_lo,
         scen.data_gb_hi,
         scen.horizon_hours,
         scen.base.t_con_minutes,
         scen.base.t_cyc_hours,
+        spec.len(),
     );
 
-    let ars = run(&scen, "ars", IslMode::Off, &trace, &profile)?;
-    let bent = run(&scen, "ilpb", IslMode::Off, &trace, &profile)?;
-    let relay = run(&scen, "ilpb", IslMode::Grid, &trace, &profile)?;
+    let result = exp::run_sweep(&spec, exp::default_threads())?;
 
     println!(
-        "{:<16} {:>9} {:>11} {:>13} {:>11} {:>7} {:>10}",
-        "configuration", "completed", "unfinished", "mean lat(s)", "p50 lat(s)", "relays", "isl(GB)"
+        "{:<16} {:>9} {:>11} {:>13} {:>11} {:>10} {:>7} {:>10}",
+        "configuration", "completed", "unfinished", "mean lat(s)", "p50 lat(s)", "p95 lat(s)",
+        "relays", "isl(GB)"
     );
-    for (name, r) in [
-        ("ars · isl off", &ars),
-        ("ilpb · isl off", &bent),
-        ("ilpb · isl grid", &relay),
-    ] {
-        let m = &r.metrics;
+    for c in &result.cells {
         println!(
-            "{:<16} {:>9} {:>11} {:>13.0} {:>11.0} {:>7} {:>10.2}",
-            name,
-            m.completed(),
-            m.unfinished,
-            m.mean_latency().value(),
-            m.latency_p50().value(),
-            m.relays,
-            m.relayed_bytes.gb()
+            "{:<16} {:>9} {:>11} {:>13.0} {:>11.0} {:>10.0} {:>7} {:>10.2}",
+            format!("{} · isl {}", c.cell.solver, c.cell.scenario.isl.as_str()),
+            c.completed,
+            c.unfinished,
+            c.mean_latency_s(),
+            c.p50_latency_s(),
+            c.p95_latency_s(),
+            c.relays,
+            c.relayed_gb
         );
     }
+    println!("\nby isl mode:");
+    print!("{}", exp::comparison_table(&result, "isl")?);
 
-    let relay_mean = relay.metrics.mean_latency().value();
-    let bent_mean = bent.metrics.mean_latency().value();
-    let ars_mean = ars.metrics.mean_latency().value();
+    let ars = pick(&result.cells, "ars", IslMode::Off);
+    let bent = pick(&result.cells, "ilpb", IslMode::Off);
+    let relay = pick(&result.cells, "ilpb", IslMode::Grid);
     println!(
         "\nrelay vs bent pipe: {:.0}% of the mean latency; vs all-on-satellite: {:.0}%",
-        100.0 * relay_mean / bent_mean,
-        100.0 * relay_mean / ars_mean
-    );
-    println!(
-        "{} of {} completed requests crossed an ISL",
-        relay
-            .metrics
-            .records
-            .iter()
-            .filter(|r| r.relay.is_some())
-            .count(),
-        relay.metrics.completed()
+        100.0 * relay.mean_latency_s() / bent.mean_latency_s(),
+        100.0 * relay.mean_latency_s() / ars.mean_latency_s()
     );
 
     // the acceptance bar: relays must beat BOTH baselines on mean latency
     anyhow::ensure!(
-        relay.metrics.completed() > 0 && relay.metrics.relays > 0,
+        relay.completed > 0 && relay.relays > 0,
         "the contact-starved scenario must actually exercise relays"
     );
     anyhow::ensure!(
-        relay_mean < bent_mean,
-        "relay ({relay_mean:.0} s) must beat the bent pipe ({bent_mean:.0} s)"
+        relay.mean_latency_s() < bent.mean_latency_s(),
+        "relay ({:.0} s) must beat the bent pipe ({:.0} s)",
+        relay.mean_latency_s(),
+        bent.mean_latency_s()
     );
     anyhow::ensure!(
-        relay_mean < ars_mean,
-        "relay ({relay_mean:.0} s) must beat all-on-satellite ({ars_mean:.0} s)"
+        relay.mean_latency_s() < ars.mean_latency_s(),
+        "relay ({:.0} s) must beat all-on-satellite ({:.0} s)",
+        relay.mean_latency_s(),
+        ars.mean_latency_s()
     );
     println!("\nOK: ISL relaying dominates both bent-pipe and all-on-satellite baselines.");
     Ok(())

@@ -34,7 +34,7 @@ fn main() {
         scen.data_gb_lo = 0.2;
         scen.data_gb_hi = 2.0;
         let mut rng = Pcg64::seeded(0xF1EE7);
-        let trace = scen.workload().generate(scen.horizon(), &mut rng);
+        let trace = scen.workload().unwrap().generate(scen.horizon(), &mut rng);
         let profile = ModelProfile::sampled(10, &mut rng);
         let mut last = None;
         let wall = time_median(1, 3, || {
@@ -78,7 +78,7 @@ fn main() {
         scen.isl = isl;
         scen.routing = "relay-aware".to_string();
         let mut rng = Pcg64::seeded(0xF1EE8);
-        let trace = scen.workload().generate(scen.horizon(), &mut rng);
+        let trace = scen.workload().unwrap().generate(scen.horizon(), &mut rng);
         let profile = ModelProfile::sampled(10, &mut rng);
         let mut last = None;
         let wall = time_median(1, 3, || {

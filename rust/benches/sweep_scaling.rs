@@ -1,0 +1,78 @@
+//! Sweep-runner scaling: wall-clock vs worker threads on a fixed grid,
+//! with the determinism invariant asserted at every width.
+//!
+//! ```bash
+//! cargo bench --bench sweep_scaling
+//! ```
+//!
+//! The grid is embarrassingly parallel (cells share nothing), so the
+//! runner should scale near-linearly until the core count or the longest
+//! single cell dominates. The bench also re-asserts the subsystem's
+//! hard requirement where it matters most — under real contention:
+//! every thread width must export byte-identical CSV.
+
+mod common;
+
+use common::{banner, fmt_time, time_median};
+use leo_infer::config::FleetScenario;
+use leo_infer::exp::{self, Axes, SweepSpec};
+
+fn bench_spec() -> SweepSpec {
+    let mut base = FleetScenario::walker_631();
+    base.sats = 8;
+    base.planes = 4;
+    base.phasing = 1;
+    base.horizon_hours = 24.0;
+    base.interarrival_s = 600.0;
+    base.data_gb_lo = 0.05;
+    base.data_gb_hi = 0.5;
+    SweepSpec {
+        name: "sweep-scaling".to_string(),
+        seed: 1234,
+        replications: 2,
+        base,
+        axes: Axes {
+            solver: vec!["ilpb".into(), "arg".into(), "ars".into(), "greedy".into()],
+            routing: vec!["round-robin".into(), "least-loaded".into()],
+            ..Axes::default()
+        },
+    }
+}
+
+fn main() {
+    let spec = bench_spec();
+    banner(&format!(
+        "sweep runner scaling — {} cells (4 solvers x 2 routings x 2 reps)",
+        spec.len()
+    ));
+
+    let reference = exp::to_csv(&exp::run_sweep(&spec, 1).expect("serial sweep"));
+    let serial_s = time_median(0, 3, || {
+        let _ = exp::run_sweep(&spec, 1).unwrap();
+    });
+
+    println!(
+        "{:>8} {:>12} {:>9} {:>12}",
+        "threads", "median", "speedup", "identical?"
+    );
+    println!("{:>8} {:>12} {:>9.2} {:>12}", 1, fmt_time(serial_s), 1.0, "ref");
+    for threads in [2, 4, 8] {
+        let result = exp::run_sweep(&spec, threads).expect("threaded sweep");
+        let csv = exp::to_csv(&result);
+        assert_eq!(
+            csv, reference,
+            "{threads}-thread exports must be byte-identical to serial"
+        );
+        let t = time_median(0, 3, || {
+            let _ = exp::run_sweep(&spec, threads).unwrap();
+        });
+        println!(
+            "{:>8} {:>12} {:>9.2} {:>12}",
+            threads,
+            fmt_time(t),
+            serial_s / t,
+            "yes"
+        );
+    }
+    println!("\nOK: exports byte-identical at every thread width.");
+}

@@ -384,15 +384,23 @@ impl FleetScenario {
         Seconds::from_hours(self.horizon_hours)
     }
 
-    /// The capture workload this scenario describes.
-    pub fn workload(&self) -> PoissonWorkload {
-        PoissonWorkload::new(
-            1.0 / self.interarrival_s,
-            SizeDist::LogUniform(
-                Bytes::from_gb(self.data_gb_lo),
-                Bytes::from_gb(self.data_gb_hi),
-            ),
-        )
+    /// The capture workload this scenario describes. Errors on degenerate
+    /// parameters (non-positive spacing, `data_gb_lo <= 0`, inverted size
+    /// bounds) instead of letting [`SizeDist::sample`] produce NaN sizes.
+    pub fn workload(&self) -> anyhow::Result<PoissonWorkload> {
+        anyhow::ensure!(
+            self.interarrival_s > 0.0 && self.interarrival_s.is_finite(),
+            "interarrival_s must be a positive finite spacing, got {}",
+            self.interarrival_s
+        );
+        let sizes = SizeDist::LogUniform(
+            Bytes::from_gb(self.data_gb_lo),
+            Bytes::from_gb(self.data_gb_hi),
+        );
+        sizes
+            .validate()
+            .map_err(|e| anyhow::anyhow!("workload size distribution: {e}"))?;
+        Ok(PoissonWorkload::new(1.0 / self.interarrival_s, sizes))
     }
 
     /// Build the fleet DES configuration: one [`SatelliteSpec`] per Walker
@@ -492,7 +500,7 @@ impl FleetScenario {
             Some(b) => Scenario::from_json(b)?,
             None => d.base,
         };
-        Ok(FleetScenario {
+        let f = FleetScenario {
             name: v.str_or("name", &d.name)?.to_string(),
             base,
             sats: v.usize_or("sats", d.sats)?,
@@ -520,7 +528,11 @@ impl FleetScenario {
             data_gb_lo: v.f64_or("data_gb_lo", d.data_gb_lo)?,
             data_gb_hi: v.f64_or("data_gb_hi", d.data_gb_hi)?,
             horizon_hours: v.f64_or("horizon_hours", d.horizon_hours)?,
-        })
+        };
+        // a scenario whose workload cannot be sampled must fail at parse
+        // time, not NaN-sample mid-run
+        f.workload()?;
+        Ok(f)
     }
 
     pub fn save(&self, path: &str) -> anyhow::Result<()> {
@@ -675,6 +687,25 @@ data_gb = 5.0
         assert_eq!(f.base.data_gb, 5.0);
         assert_eq!(f.base.t_cyc_hours, 8.0); // base defaults still apply
         assert_eq!(f.horizon_hours, 24.0);
+    }
+
+    #[test]
+    fn fleet_degenerate_workload_bounds_fail_at_parse_time() {
+        // lo = 0 under the log-uniform size draw used to sample NaN sizes
+        let v = Json::parse(r#"{"data_gb_lo": 0.0, "data_gb_hi": 8.0}"#).unwrap();
+        let err = FleetScenario::from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("log-uniform"), "unhelpful error: {err}");
+        // inverted bounds
+        let v = Json::parse(r#"{"data_gb_lo": 9.0, "data_gb_hi": 2.0}"#).unwrap();
+        assert!(FleetScenario::from_json(&v).is_err());
+        // zero spacing
+        let v = Json::parse(r#"{"interarrival_s": 0}"#).unwrap();
+        assert!(FleetScenario::from_json(&v).is_err());
+        // programmatic mutation hits the same guard via workload()
+        let mut f = FleetScenario::walker_631();
+        f.data_gb_lo = -1.0;
+        assert!(f.workload().is_err());
+        assert!(FleetScenario::walker_631().workload().is_ok());
     }
 
     #[test]

@@ -211,6 +211,100 @@ mod tests {
     }
 
     #[test]
+    fn critical_flush_takes_only_its_own_model() {
+        // class-1 expedite must not sweep other models' queues along
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Seconds(100.0),
+            expedite_critical: true,
+        });
+        assert!(b.offer(req(0, 0, 0), Seconds(0.0)).is_none());
+        assert!(b.offer(req(1, 2, 0), Seconds(0.0)).is_none());
+        let batch = b.offer(req(2, 2, 1), Seconds(0.1)).unwrap();
+        assert_eq!(batch.model, 2);
+        assert_eq!(batch.len(), 2, "only model-2's queue flushes");
+        assert!(batch.requests.iter().all(|r| r.model == 2));
+        assert_eq!(b.buffered(), 1, "model-0 request stays pending");
+    }
+
+    #[test]
+    fn size_trigger_fires_before_the_deadline() {
+        // batch fills at t = 0.3 while the deadline would fire at t = 2.0:
+        // the size trigger must flush first, and the subsequent deadline
+        // sweep must find nothing left for that model
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 3,
+            max_wait: Seconds(2.0),
+            expedite_critical: false,
+        });
+        assert!(b.offer(req(0, 0, 0), Seconds(0.0)).is_none());
+        assert!(b.offer(req(1, 0, 0), Seconds(0.2)).is_none());
+        let batch = b.offer(req(2, 0, 0), Seconds(0.3)).expect("size trigger");
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch.formed_at, Seconds(0.3), "flushed at fill, not deadline");
+        assert!(b.sweep(Seconds(2.0)).is_empty(), "nothing left to expire");
+    }
+
+    #[test]
+    fn deadline_trigger_fires_when_the_batch_never_fills() {
+        // one request short of max_batch: only the deadline can flush it,
+        // and it must not fire a tick early
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 3,
+            max_wait: Seconds(2.0),
+            expedite_critical: false,
+        });
+        b.offer(req(0, 0, 0), Seconds(0.0));
+        b.offer(req(1, 0, 0), Seconds(1.0));
+        assert!(b.sweep(Seconds(1.9)).is_empty(), "deadline not yet reached");
+        let batches = b.sweep(Seconds(2.0));
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].len(), 2, "partial batch flushes at deadline");
+        // the deadline clock runs from the OLDEST member (t = 0), not the
+        // latest arrival (t = 1) — otherwise head-of-line requests starve
+        assert_eq!(batches[0].requests[0].id, 0);
+    }
+
+    #[test]
+    fn no_flushed_batch_ever_mixes_models() {
+        // randomized arrivals over 5 models through all three flush paths
+        // (size, deadline, critical): every batch must be model-uniform
+        // and every offered request must come back exactly once
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::seeded(0xBA7C4);
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Seconds(3.0),
+            expedite_critical: true,
+        });
+        let mut flushed: Vec<Batch> = Vec::new();
+        let mut offered = 0u64;
+        let mut now = 0.0;
+        for id in 0..500 {
+            now += rng.uniform(0.0, 1.0);
+            let model = rng.index(5);
+            let class = u8::from(rng.chance(0.1));
+            offered += 1;
+            if let Some(batch) = b.offer(req(id, model, class), Seconds(now)) {
+                flushed.push(batch);
+            }
+            flushed.extend(b.sweep(Seconds(now)));
+        }
+        flushed.extend(b.flush_all(Seconds(now + 10.0)));
+        for batch in &flushed {
+            assert!(!batch.is_empty());
+            assert!(
+                batch.requests.iter().all(|r| r.model == batch.model),
+                "batch for model {} mixes models", batch.model
+            );
+            assert!(batch.len() <= 4, "never exceeds max_batch");
+        }
+        let total: usize = flushed.iter().map(Batch::len).sum();
+        assert_eq!(total as u64, offered, "requests conserved across flushes");
+        assert_eq!(b.buffered(), 0);
+    }
+
+    #[test]
     fn flush_all_drains() {
         let mut b = DynamicBatcher::new(BatchPolicy::default());
         b.offer(req(0, 0, 0), Seconds(0.0));

@@ -1,0 +1,330 @@
+//! Streaming aggregation and exports for sweep results.
+//!
+//! Per-cell rows export to CSV and JSON (byte-identical across thread
+//! counts — every value is a deterministic function of the cell seed and
+//! configuration). Grouped views merge the cells' mergeable
+//! [`StreamingSummary`]s, so a group's P50/P95/P99 pool *every request*
+//! served by every cell in the group — not an average of per-cell
+//! percentiles, which would be statistically meaningless.
+
+use super::grid::{format_f64, AXIS_NAMES};
+use super::runner::{CellResult, SweepResult};
+use crate::util::json::Json;
+use crate::util::stats::StreamingSummary;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Exported per-cell columns, after the axis columns.
+const METRIC_COLUMNS: [&str; 18] = [
+    "submitted",
+    "completed",
+    "rejected_admission",
+    "rejected_transmit",
+    "unfinished",
+    "relays",
+    "mean_latency_s",
+    "p50_latency_s",
+    "p95_latency_s",
+    "p99_latency_s",
+    "mean_energy_j",
+    "total_energy_j",
+    "downlinked_gb",
+    "relayed_gb",
+    "throughput_rps",
+    "solves",
+    "cache_hits",
+    "tightened",
+];
+
+fn metric_values(c: &CellResult) -> Vec<String> {
+    vec![
+        c.submitted.to_string(),
+        c.completed.to_string(),
+        c.rejected_admission.to_string(),
+        c.rejected_transmit.to_string(),
+        c.unfinished.to_string(),
+        c.relays.to_string(),
+        format_f64(c.mean_latency_s()),
+        format_f64(c.p50_latency_s()),
+        format_f64(c.p95_latency_s()),
+        format_f64(c.p99_latency_s()),
+        format_f64(c.mean_energy_j),
+        format_f64(c.total_energy_j),
+        format_f64(c.downlinked_gb),
+        format_f64(c.relayed_gb),
+        format_f64(c.throughput_rps),
+        c.solves.to_string(),
+        c.cache_hits.to_string(),
+        c.tightened.to_string(),
+    ]
+}
+
+/// The CSV header shared by [`to_csv`] and [`csv_row`].
+pub fn csv_header() -> String {
+    let mut cols = vec!["index".to_string(), "seed".to_string()];
+    cols.extend(AXIS_NAMES.iter().map(|s| s.to_string()));
+    cols.extend(METRIC_COLUMNS.iter().map(|s| s.to_string()));
+    cols.join(",")
+}
+
+/// One cell as a CSV row (no trailing newline). Axis values in this
+/// crate's grids never contain commas or quotes, so no escaping is
+/// needed — asserted here so a future axis can't silently corrupt rows.
+pub fn csv_row(c: &CellResult) -> String {
+    let mut cols = vec![c.cell.index.to_string(), c.cell.seed.to_string()];
+    for axis in AXIS_NAMES {
+        let v = c.cell.axis_value(axis).expect("built-in axis");
+        assert!(
+            !v.contains(',') && !v.contains('"') && !v.contains('\n'),
+            "axis value `{v}` needs CSV escaping"
+        );
+        cols.push(v);
+    }
+    cols.extend(metric_values(c));
+    cols.join(",")
+}
+
+/// The whole sweep as a CSV document (header + one row per cell, in
+/// index order).
+pub fn to_csv(result: &SweepResult) -> String {
+    let mut out = csv_header();
+    out.push('\n');
+    for c in &result.cells {
+        out.push_str(&csv_row(c));
+        out.push('\n');
+    }
+    out
+}
+
+/// The whole sweep as a JSON document: spec name plus one object per
+/// cell. Keys sort deterministically (BTreeMap-backed writer).
+pub fn to_json(result: &SweepResult) -> Json {
+    let cells = result.cells.iter().map(|c| {
+        // the seed is a full-range u64; JSON numbers are f64-backed, so
+        // export it as a string to keep `--cell` replay inputs exact
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("index", Json::num(c.cell.index as f64)),
+            ("seed", Json::str(c.cell.seed.to_string())),
+        ];
+        for axis in AXIS_NAMES {
+            pairs.push((axis, Json::str(c.cell.axis_value(axis).expect("built-in axis"))));
+        }
+        let nums: [(&str, f64); 18] = [
+            ("submitted", c.submitted as f64),
+            ("completed", c.completed as f64),
+            ("rejected_admission", c.rejected_admission as f64),
+            ("rejected_transmit", c.rejected_transmit as f64),
+            ("unfinished", c.unfinished as f64),
+            ("relays", c.relays as f64),
+            ("mean_latency_s", c.mean_latency_s()),
+            ("p50_latency_s", c.p50_latency_s()),
+            ("p95_latency_s", c.p95_latency_s()),
+            ("p99_latency_s", c.p99_latency_s()),
+            ("mean_energy_j", c.mean_energy_j),
+            ("total_energy_j", c.total_energy_j),
+            ("downlinked_gb", c.downlinked_gb),
+            ("relayed_gb", c.relayed_gb),
+            ("throughput_rps", c.throughput_rps),
+            ("solves", c.solves as f64),
+            ("cache_hits", c.cache_hits as f64),
+            ("tightened", c.tightened as f64),
+        ];
+        for (k, v) in nums {
+            pairs.push((k, Json::num(v)));
+        }
+        Json::obj(pairs)
+    });
+    Json::obj(vec![
+        ("sweep", Json::str(result.spec_name.clone())),
+        ("cells", Json::arr(cells)),
+    ])
+}
+
+/// Aggregate over all cells sharing one value on a group axis.
+#[derive(Debug, Clone)]
+pub struct AxisGroup {
+    /// The shared axis value (e.g. `"ilpb"` when grouping by solver).
+    pub value: String,
+    pub cells: usize,
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub unfinished: u64,
+    pub relays: u64,
+    /// Pooled request latencies across every cell in the group.
+    pub latency: StreamingSummary,
+    pub total_energy_j: f64,
+    pub downlinked_gb: f64,
+}
+
+impl AxisGroup {
+    /// Completed / submitted (0 for an empty group).
+    pub fn completion_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            0.0
+        } else {
+            self.completed as f64 / self.submitted as f64
+        }
+    }
+}
+
+/// Group the sweep's cells by their value on `axis`, merging the
+/// streaming latency summaries. Groups come back sorted by value
+/// (BTreeMap order) for deterministic reporting.
+pub fn group_by(result: &SweepResult, axis: &str) -> anyhow::Result<Vec<AxisGroup>> {
+    let mut groups: BTreeMap<String, AxisGroup> = BTreeMap::new();
+    for c in &result.cells {
+        let value = c.cell.axis_value(axis)?;
+        let g = groups.entry(value.clone()).or_insert_with(|| AxisGroup {
+            value,
+            cells: 0,
+            submitted: 0,
+            completed: 0,
+            rejected: 0,
+            unfinished: 0,
+            relays: 0,
+            latency: StreamingSummary::for_latency(),
+            total_energy_j: 0.0,
+            downlinked_gb: 0.0,
+        });
+        g.cells += 1;
+        g.submitted += c.submitted;
+        g.completed += c.completed;
+        g.rejected += c.rejected_admission + c.rejected_transmit;
+        g.unfinished += c.unfinished;
+        g.relays += c.relays;
+        g.latency.merge(&c.latency);
+        g.total_energy_j += c.total_energy_j;
+        g.downlinked_gb += c.downlinked_gb;
+    }
+    Ok(groups.into_values().collect())
+}
+
+/// A plain-text comparison table over one axis — the human-readable
+/// counterpart of the CSV export.
+pub fn comparison_table(result: &SweepResult, axis: &str) -> anyhow::Result<String> {
+    let groups = group_by(result, axis)?;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<16} {:>6} {:>10} {:>10} {:>7} {:>11} {:>9} {:>9} {:>11} {:>10}",
+        axis, "cells", "completed", "unfinished", "done%", "mean lat(s)", "p50(s)", "p95(s)", "energy(kJ)", "down(GB)"
+    );
+    for g in &groups {
+        let _ = writeln!(
+            out,
+            "{:<16} {:>6} {:>10} {:>10} {:>6.1}% {:>11.1} {:>9.1} {:>9.1} {:>11.1} {:>10.2}",
+            g.value,
+            g.cells,
+            g.completed,
+            g.unfinished,
+            g.completion_rate() * 100.0,
+            g.latency.mean(),
+            g.latency.p50(),
+            g.latency.p95(),
+            g.total_energy_j / 1e3,
+            g.downlinked_gb,
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FleetScenario;
+    use crate::exp::grid::{Axes, SweepSpec};
+    use crate::exp::runner::run_sweep;
+
+    fn swept() -> SweepResult {
+        let mut base = FleetScenario::walker_631();
+        base.sats = 4;
+        base.planes = 2;
+        base.horizon_hours = 3.0;
+        base.interarrival_s = 900.0;
+        base.data_gb_lo = 0.05;
+        base.data_gb_hi = 0.5;
+        let spec = SweepSpec {
+            name: "agg-test".to_string(),
+            seed: 5,
+            replications: 2,
+            base,
+            axes: Axes {
+                solver: vec!["arg".into(), "ars".into()],
+                ..Axes::default()
+            },
+        };
+        run_sweep(&spec, 2).unwrap()
+    }
+
+    #[test]
+    fn csv_has_header_plus_one_row_per_cell() {
+        let result = swept();
+        let csv = to_csv(&result);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 1 + result.cells.len());
+        assert!(lines[0].starts_with("index,seed,solver,"));
+        let cols = lines[0].split(',').count();
+        for (i, row) in lines[1..].iter().enumerate() {
+            assert_eq!(row.split(',').count(), cols, "row {i} column count");
+            assert!(row.starts_with(&format!("{i},")), "rows in index order");
+        }
+    }
+
+    #[test]
+    fn json_export_parses_back_and_matches_the_csv() {
+        let result = swept();
+        let doc = to_json(&result);
+        let text = doc.to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get_str("sweep").unwrap(), "agg-test");
+        let cells = back.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), result.cells.len());
+        for (i, (cell, r)) in cells.iter().zip(&result.cells).enumerate() {
+            assert_eq!(cell.get_usize("index").unwrap(), i);
+            assert_eq!(cell.get_f64("completed").unwrap(), r.completed as f64);
+            assert_eq!(
+                cell.get_f64("mean_latency_s").unwrap(),
+                r.mean_latency_s(),
+                "cell {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn grouping_pools_latencies_not_percentile_averages() {
+        let result = swept();
+        let by_solver = group_by(&result, "solver").unwrap();
+        assert_eq!(by_solver.len(), 2, "two solver values");
+        // sorted by value
+        assert_eq!(by_solver[0].value, "arg");
+        assert_eq!(by_solver[1].value, "ars");
+        for g in &by_solver {
+            assert_eq!(g.cells, 2, "two replications per solver");
+            // the pooled summary counts every completed request
+            assert_eq!(g.latency.count(), g.completed);
+            assert_eq!(
+                g.completed + g.rejected + g.unfinished,
+                g.submitted,
+                "{}: groups conserve requests",
+                g.value
+            );
+        }
+        // grouping by rep instead slices the same cells the other way
+        let by_rep = group_by(&result, "rep").unwrap();
+        assert_eq!(by_rep.len(), 2);
+        let total_a: u64 = by_solver.iter().map(|g| g.completed).sum();
+        let total_b: u64 = by_rep.iter().map(|g| g.completed).sum();
+        assert_eq!(total_a, total_b);
+        assert!(group_by(&result, "warp-drive").is_err());
+    }
+
+    #[test]
+    fn comparison_table_lists_every_group() {
+        let result = swept();
+        let table = comparison_table(&result, "solver").unwrap();
+        assert!(table.contains("arg"));
+        assert!(table.contains("ars"));
+        assert!(table.lines().count() >= 3, "header + two groups");
+    }
+}

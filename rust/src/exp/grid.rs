@@ -1,0 +1,715 @@
+//! Declarative sweep specs: a base [`FleetScenario`] plus axes, expanded
+//! into a cross-product of individually-seeded, self-contained [`Cell`]s.
+//!
+//! Every axis left empty collapses to the base scenario's value, so a
+//! spec names only what it varies. Expansion order is fixed (solver →
+//! routing → isl → walker → interarrival → rate → data size → battery →
+//! replication, replication innermost), which makes `Cell::index` a
+//! stable coordinate: the same spec always yields the same cells in the
+//! same order, and [`SweepSpec::cell`] rebuilds any single cell from its
+//! index without expanding the rest of the grid.
+//!
+//! **Seeding.** A cell's RNG seed is derived deterministically from the
+//! spec seed and the cell's *replication* coordinate (not the full
+//! index): cells that differ only in solver/routing/ISL/… share a seed,
+//! so compared configurations see the *same* capture trace and sampled
+//! profile — common random numbers, the variance-reduction the old
+//! hand-rolled studies got by generating one trace up front. Cells whose
+//! workload parameters differ (arrival rate, size bounds, horizon)
+//! naturally diverge even under a shared seed. Any cell is reproducible
+//! in isolation from its reported `(index, seed)` pair.
+//!
+//! Specs load from JSON or the TOML subset ([`crate::util::toml`]).
+//! Because the TOML subset has no arrays, every axis also accepts a
+//! comma-separated string (`solver = "ilpb,arg"`), and single scalars
+//! are promoted to one-element axes; the JSON form additionally accepts
+//! real arrays.
+
+use crate::config::FleetScenario;
+use crate::link::isl::IslMode;
+use crate::solver::SolverRegistry;
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+
+/// A Walker delta-pattern coordinate `T/P/F` for the constellation axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WalkerAxis {
+    pub sats: usize,
+    pub planes: usize,
+    pub phasing: usize,
+}
+
+impl WalkerAxis {
+    pub fn as_spec(&self) -> String {
+        format!("{}/{}/{}", self.sats, self.planes, self.phasing)
+    }
+
+    /// Parse `"T/P/F"` (e.g. `"6/3/1"`).
+    pub fn parse(text: &str) -> anyhow::Result<WalkerAxis> {
+        let parts: Vec<&str> = text.split('/').collect();
+        anyhow::ensure!(
+            parts.len() == 3,
+            "walker axis expects T/P/F (e.g. 6/3/1), got `{text}`"
+        );
+        let num = |s: &str, what: &str| -> anyhow::Result<usize> {
+            s.trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("walker {what} `{s}`: {e}"))
+        };
+        Ok(WalkerAxis {
+            sats: num(parts[0], "T")?,
+            planes: num(parts[1], "P")?,
+            phasing: num(parts[2], "F")?,
+        })
+    }
+}
+
+/// The swept axes. An empty axis means "use the base scenario's value"
+/// (a one-point axis); the cross product of all axes times
+/// `replications` is the experiment grid.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Axes {
+    /// Solver registry names (`ilpb | dp | exhaustive | arg | ars | greedy`).
+    pub solver: Vec<String>,
+    /// Routing policy names (see [`FleetScenario::routing_policy`]).
+    pub routing: Vec<String>,
+    /// ISL pattern (`off | ring | grid`).
+    pub isl: Vec<IslMode>,
+    /// Constellation shape `T/P/F`.
+    pub walker: Vec<WalkerAxis>,
+    /// Mean capture spacing, seconds (arrival rate = 1/this).
+    pub interarrival_s: Vec<f64>,
+    /// Satellite-ground rate, Mbps.
+    pub rate_mbps: Vec<f64>,
+    /// Upper bound of the log-uniform size draw, GB. The lower bound
+    /// scales to preserve the base scenario's `lo/hi` ratio, so the axis
+    /// shifts the whole distribution rather than just stretching it.
+    pub data_gb_hi: Vec<f64>,
+    /// Battery capacity, J (0 = unconstrained).
+    pub battery_capacity_j: Vec<f64>,
+}
+
+/// Axis names, in expansion order (replication last/innermost). These are
+/// the group-by keys [`super::aggregate`] accepts and the per-cell columns
+/// the exports carry.
+pub const AXIS_NAMES: [&str; 9] = [
+    "solver",
+    "routing",
+    "isl",
+    "walker",
+    "interarrival_s",
+    "rate_mbps",
+    "data_gb_hi",
+    "battery_capacity_j",
+    "rep",
+];
+
+/// A declarative experiment grid over the fleet DES.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepSpec {
+    pub name: String,
+    /// Base seed every cell seed derives from.
+    pub seed: u64,
+    /// Independent replications per configuration (≥ 1).
+    pub replications: usize,
+    /// The scenario every cell starts from.
+    pub base: FleetScenario,
+    pub axes: Axes,
+}
+
+/// One fully materialized grid point: everything a worker needs to run
+/// the cell with zero shared state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cell {
+    /// Flat position in the expansion order (the row key of every export).
+    pub index: usize,
+    /// Replication coordinate (innermost axis).
+    pub rep: usize,
+    /// RNG seed for this cell's trace + profile draw (see module docs).
+    pub seed: u64,
+    /// Solver registry name.
+    pub solver: String,
+    /// The concrete scenario (axes applied to the base).
+    pub scenario: FleetScenario,
+}
+
+impl Cell {
+    /// The cell's value on a named axis, rendered for exports/grouping.
+    pub fn axis_value(&self, axis: &str) -> anyhow::Result<String> {
+        Ok(match axis {
+            "solver" => self.solver.clone(),
+            "routing" => self.scenario.routing.clone(),
+            "isl" => self.scenario.isl.as_str().to_string(),
+            "walker" => format!(
+                "{}/{}/{}",
+                self.scenario.sats, self.scenario.planes, self.scenario.phasing
+            ),
+            "interarrival_s" => format_f64(self.scenario.interarrival_s),
+            "rate_mbps" => format_f64(self.scenario.base.rate_mbps),
+            "data_gb_hi" => format_f64(self.scenario.data_gb_hi),
+            "battery_capacity_j" => format_f64(self.scenario.battery_capacity_j),
+            "rep" => self.rep.to_string(),
+            other => anyhow::bail!(
+                "unknown axis `{other}` ({})",
+                AXIS_NAMES.join("|")
+            ),
+        })
+    }
+}
+
+/// Deterministic, well-mixed number formatting for exports: shortest
+/// round-trip `f64` display (stable across platforms for identical bits).
+pub(crate) fn format_f64(x: f64) -> String {
+    format!("{x}")
+}
+
+/// Derive the seed shared by every cell of replication `rep` (see the
+/// module docs for why seeds key on the replication, not the full index).
+pub fn replication_seed(base_seed: u64, rep: u64) -> u64 {
+    let mut sm = SplitMix64::new(
+        base_seed ^ (rep.wrapping_add(1)).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    sm.next_u64()
+}
+
+/// The resolved (never-empty) axes after base-value defaulting.
+struct Resolved {
+    solver: Vec<String>,
+    routing: Vec<String>,
+    isl: Vec<IslMode>,
+    walker: Vec<WalkerAxis>,
+    interarrival_s: Vec<f64>,
+    rate_mbps: Vec<f64>,
+    data_gb_hi: Vec<f64>,
+    battery_capacity_j: Vec<f64>,
+}
+
+impl SweepSpec {
+    /// A one-cell spec over the given base (axes default to base values).
+    pub fn point(name: &str, base: FleetScenario) -> SweepSpec {
+        SweepSpec {
+            name: name.to_string(),
+            seed: 42,
+            replications: 1,
+            base,
+            axes: Axes::default(),
+        }
+    }
+
+    fn resolved(&self) -> Resolved {
+        let or = |xs: &[f64], d: f64| if xs.is_empty() { vec![d] } else { xs.to_vec() };
+        Resolved {
+            solver: if self.axes.solver.is_empty() {
+                vec!["ilpb".to_string()]
+            } else {
+                self.axes.solver.clone()
+            },
+            routing: if self.axes.routing.is_empty() {
+                vec![self.base.routing.clone()]
+            } else {
+                self.axes.routing.clone()
+            },
+            isl: if self.axes.isl.is_empty() {
+                vec![self.base.isl]
+            } else {
+                self.axes.isl.clone()
+            },
+            walker: if self.axes.walker.is_empty() {
+                vec![WalkerAxis {
+                    sats: self.base.sats,
+                    planes: self.base.planes,
+                    phasing: self.base.phasing,
+                }]
+            } else {
+                self.axes.walker.clone()
+            },
+            interarrival_s: or(&self.axes.interarrival_s, self.base.interarrival_s),
+            rate_mbps: or(&self.axes.rate_mbps, self.base.base.rate_mbps),
+            data_gb_hi: or(&self.axes.data_gb_hi, self.base.data_gb_hi),
+            battery_capacity_j: or(&self.axes.battery_capacity_j, self.base.battery_capacity_j),
+        }
+    }
+
+    /// Total number of cells in the grid.
+    pub fn len(&self) -> usize {
+        let r = self.resolved();
+        r.solver.len()
+            * r.routing.len()
+            * r.isl.len()
+            * r.walker.len()
+            * r.interarrival_s.len()
+            * r.rate_mbps.len()
+            * r.data_gb_hi.len()
+            * r.battery_capacity_j.len()
+            * self.replications.max(1)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Validate every axis value up front so a bad grid fails before any
+    /// cell runs (a worker failing mid-sweep on cell 731 of 1024 wastes
+    /// everything before it).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.replications >= 1, "replications must be >= 1");
+        let r = self.resolved();
+        for s in &r.solver {
+            SolverRegistry::policy(s)
+                .map_err(|e| anyhow::anyhow!("solver axis: {e}"))?;
+        }
+        for routing in &r.routing {
+            let mut probe = self.base.clone();
+            probe.routing = routing.clone();
+            probe
+                .routing_policy()
+                .map_err(|e| anyhow::anyhow!("routing axis: {e}"))?;
+        }
+        for w in &r.walker {
+            let mut probe = self.base.clone();
+            probe.sats = w.sats;
+            probe.planes = w.planes;
+            probe.phasing = w.phasing;
+            probe
+                .pattern()
+                .map_err(|e| anyhow::anyhow!("walker axis {}: {e}", w.as_spec()))?;
+        }
+        for &ia in &r.interarrival_s {
+            anyhow::ensure!(
+                ia > 0.0 && ia.is_finite(),
+                "interarrival_s axis value must be positive and finite, got {ia}"
+            );
+        }
+        for &rate in &r.rate_mbps {
+            anyhow::ensure!(
+                rate > 0.0 && rate.is_finite(),
+                "rate_mbps axis value must be positive and finite, got {rate}"
+            );
+        }
+        for &hi in &r.data_gb_hi {
+            let mut probe = self.base.clone();
+            apply_data_hi(&mut probe, &self.base, hi);
+            probe
+                .workload()
+                .map_err(|e| anyhow::anyhow!("data_gb_hi axis value {hi}: {e}"))?;
+        }
+        for &b in &r.battery_capacity_j {
+            anyhow::ensure!(
+                b >= 0.0 && b.is_finite(),
+                "battery_capacity_j axis value must be >= 0 and finite, got {b}"
+            );
+        }
+        Ok(())
+    }
+
+    /// Materialize cell `index` (row-major over the expansion order).
+    /// Panics if `index >= self.len()`; axes are assumed validated.
+    pub fn cell(&self, index: usize) -> Cell {
+        let r = self.resolved();
+        let reps = self.replications.max(1);
+        assert!(index < self.len(), "cell index {index} out of range");
+        // peel coordinates innermost-first
+        let mut rest = index;
+        let rep = rest % reps;
+        rest /= reps;
+        let battery = r.battery_capacity_j[rest % r.battery_capacity_j.len()];
+        rest /= r.battery_capacity_j.len();
+        let data_hi = r.data_gb_hi[rest % r.data_gb_hi.len()];
+        rest /= r.data_gb_hi.len();
+        let rate = r.rate_mbps[rest % r.rate_mbps.len()];
+        rest /= r.rate_mbps.len();
+        let ia = r.interarrival_s[rest % r.interarrival_s.len()];
+        rest /= r.interarrival_s.len();
+        let walker = r.walker[rest % r.walker.len()];
+        rest /= r.walker.len();
+        let isl = r.isl[rest % r.isl.len()];
+        rest /= r.isl.len();
+        let routing = &r.routing[rest % r.routing.len()];
+        rest /= r.routing.len();
+        let solver = &r.solver[rest % r.solver.len()];
+
+        let mut scen = self.base.clone();
+        scen.name = format!("{}#{index}", self.name);
+        scen.routing = routing.clone();
+        scen.isl = isl;
+        scen.sats = walker.sats;
+        scen.planes = walker.planes;
+        scen.phasing = walker.phasing;
+        scen.interarrival_s = ia;
+        scen.base.rate_mbps = rate;
+        apply_data_hi(&mut scen, &self.base, data_hi);
+        scen.battery_capacity_j = battery;
+        Cell {
+            index,
+            rep,
+            seed: replication_seed(self.seed, rep as u64),
+            solver: solver.clone(),
+            scenario: scen,
+        }
+    }
+
+    /// Expand the full grid, validating first.
+    pub fn expand(&self) -> anyhow::Result<Vec<Cell>> {
+        self.validate()?;
+        Ok((0..self.len()).map(|i| self.cell(i)).collect())
+    }
+
+    /// A CI-sized variant: horizon capped at 6 h, single replication.
+    /// Everything else (axes, seeds for rep 0) is unchanged, so a smoke
+    /// run exercises the same grid shape the full run would.
+    pub fn smoke(mut self) -> SweepSpec {
+        self.base.horizon_hours = self.base.horizon_hours.min(6.0);
+        self.replications = 1;
+        self
+    }
+
+    // ------------------------------------------------------------- file io
+
+    pub fn to_json(&self) -> Json {
+        let strs = |xs: &[String]| Json::arr(xs.iter().map(|s| Json::str(s.as_str())));
+        let nums = |xs: &[f64]| Json::arr(xs.iter().map(|&x| Json::num(x)));
+        let mut axes: Vec<(&str, Json)> = Vec::new();
+        if !self.axes.solver.is_empty() {
+            axes.push(("solver", strs(&self.axes.solver)));
+        }
+        if !self.axes.routing.is_empty() {
+            axes.push(("routing", strs(&self.axes.routing)));
+        }
+        if !self.axes.isl.is_empty() {
+            axes.push((
+                "isl",
+                Json::arr(self.axes.isl.iter().map(|m| Json::str(m.as_str()))),
+            ));
+        }
+        if !self.axes.walker.is_empty() {
+            axes.push((
+                "walker",
+                Json::arr(self.axes.walker.iter().map(|w| Json::str(w.as_spec()))),
+            ));
+        }
+        if !self.axes.interarrival_s.is_empty() {
+            axes.push(("interarrival_s", nums(&self.axes.interarrival_s)));
+        }
+        if !self.axes.rate_mbps.is_empty() {
+            axes.push(("rate_mbps", nums(&self.axes.rate_mbps)));
+        }
+        if !self.axes.data_gb_hi.is_empty() {
+            axes.push(("data_gb_hi", nums(&self.axes.data_gb_hi)));
+        }
+        if !self.axes.battery_capacity_j.is_empty() {
+            axes.push(("battery_capacity_j", nums(&self.axes.battery_capacity_j)));
+        }
+        // seeds are full-range u64 and JSON numbers are f64-backed:
+        // large seeds serialize as strings so round-trips stay exact
+        let seed = if self.seed < (1u64 << 53) {
+            Json::num(self.seed as f64)
+        } else {
+            Json::str(self.seed.to_string())
+        };
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("seed", seed),
+            ("replications", Json::num(self.replications as f64)),
+            ("base", self.base.to_json()),
+            ("axes", Json::obj(axes)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<SweepSpec> {
+        let base = match v.opt("base") {
+            Some(b) => FleetScenario::from_json(b)?,
+            None => FleetScenario::walker_631(),
+        };
+        let axes = match v.opt("axes") {
+            Some(a) => Axes {
+                solver: str_list(a, "solver")?,
+                routing: str_list(a, "routing")?,
+                isl: str_list(a, "isl")?
+                    .iter()
+                    .map(|s| IslMode::from_name(s))
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+                walker: str_list(a, "walker")?
+                    .iter()
+                    .map(|s| WalkerAxis::parse(s))
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+                interarrival_s: f64_list(a, "interarrival_s")?,
+                rate_mbps: f64_list(a, "rate_mbps")?,
+                data_gb_hi: f64_list(a, "data_gb_hi")?,
+                battery_capacity_j: f64_list(a, "battery_capacity_j")?,
+            },
+            None => Axes::default(),
+        };
+        let spec = SweepSpec {
+            name: v.str_or("name", "sweep")?.to_string(),
+            seed: match v.opt("seed") {
+                Some(Json::Str(s)) => s
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("seed `{s}`: {e}"))?,
+                Some(s) => s.as_u64()?,
+                None => 42,
+            },
+            replications: v.usize_or("replications", 1)?,
+            base,
+            axes,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn save(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Load from a `.json` file or (by extension) the TOML subset.
+    pub fn load(path: &str) -> anyhow::Result<SweepSpec> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = if path.ends_with(".toml") {
+            crate::util::toml::parse(&text)?
+        } else {
+            Json::parse(&text)?
+        };
+        SweepSpec::from_json(&doc)
+    }
+}
+
+/// Shift the log-uniform size distribution to a new upper bound,
+/// preserving the base's lo/hi ratio.
+fn apply_data_hi(scen: &mut FleetScenario, base: &FleetScenario, hi: f64) {
+    let ratio = if base.data_gb_hi > 0.0 {
+        base.data_gb_lo / base.data_gb_hi
+    } else {
+        0.1
+    };
+    scen.data_gb_hi = hi;
+    scen.data_gb_lo = hi * ratio;
+}
+
+/// An axis field as strings: accepts a JSON array (of strings), a single
+/// string (comma-split — the TOML-subset form), or is absent (empty axis).
+fn str_list(v: &Json, key: &str) -> anyhow::Result<Vec<String>> {
+    match v.opt(key) {
+        None => Ok(Vec::new()),
+        Some(Json::Arr(items)) => items
+            .iter()
+            .map(|i| {
+                i.as_str()
+                    .map(str::to_string)
+                    .map_err(|e| anyhow::anyhow!("axis {key}: {e}"))
+            })
+            .collect(),
+        Some(Json::Str(s)) => Ok(s
+            .split(',')
+            .map(str::trim)
+            .filter(|p| !p.is_empty())
+            .map(str::to_string)
+            .collect()),
+        Some(other) => anyhow::bail!(
+            "axis {key}: expected an array or comma-separated string, found {other}"
+        ),
+    }
+}
+
+/// An axis field as numbers: accepts a JSON array (of numbers), a single
+/// number, or a comma-separated string of numbers (the TOML-subset form).
+fn f64_list(v: &Json, key: &str) -> anyhow::Result<Vec<f64>> {
+    match v.opt(key) {
+        None => Ok(Vec::new()),
+        Some(Json::Num(x)) => Ok(vec![*x]),
+        Some(Json::Arr(items)) => items
+            .iter()
+            .map(|i| i.as_f64().map_err(|e| anyhow::anyhow!("axis {key}: {e}")))
+            .collect(),
+        Some(Json::Str(s)) => s
+            .split(',')
+            .map(str::trim)
+            .filter(|p| !p.is_empty())
+            .map(|p| {
+                p.parse::<f64>()
+                    .map_err(|e| anyhow::anyhow!("axis {key}: `{p}` is not a number: {e}"))
+            })
+            .collect(),
+        Some(other) => anyhow::bail!(
+            "axis {key}: expected an array, number, or comma-separated string, found {other}"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> SweepSpec {
+        let mut base = FleetScenario::walker_631();
+        base.sats = 4;
+        base.planes = 2;
+        base.horizon_hours = 4.0;
+        base.interarrival_s = 1200.0;
+        SweepSpec {
+            name: "test-grid".to_string(),
+            seed: 7,
+            replications: 2,
+            base,
+            axes: Axes {
+                solver: vec!["ilpb".into(), "arg".into()],
+                routing: vec!["round-robin".into(), "least-loaded".into()],
+                ..Axes::default()
+            },
+        }
+    }
+
+    #[test]
+    fn cross_product_size_and_order_are_stable() {
+        let spec = small_spec();
+        assert_eq!(spec.len(), 2 * 2 * 2);
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), 8);
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+            // rebuilding any cell standalone reproduces it exactly
+            assert_eq!(*c, spec.cell(i));
+        }
+        // replication is the innermost axis
+        assert_eq!(cells[0].rep, 0);
+        assert_eq!(cells[1].rep, 1);
+        assert_eq!(cells[0].solver, cells[1].solver);
+        assert_eq!(cells[0].scenario.routing, cells[1].scenario.routing);
+        // solver is the outermost axis
+        assert_eq!(cells[0].solver, "ilpb");
+        assert_eq!(cells[7].solver, "arg");
+    }
+
+    #[test]
+    fn seeds_pair_configurations_by_replication() {
+        let cells = small_spec().expand().unwrap();
+        // same rep ⇒ same seed across every configuration (common random
+        // numbers), different reps ⇒ different seeds
+        for c in &cells {
+            assert_eq!(c.seed, replication_seed(7, c.rep as u64));
+        }
+        assert_ne!(cells[0].seed, cells[1].seed);
+        assert_eq!(cells[0].seed, cells[2].seed);
+        // a different base seed moves every cell seed
+        let mut other = small_spec();
+        other.seed = 8;
+        assert_ne!(other.cell(0).seed, cells[0].seed);
+    }
+
+    #[test]
+    fn empty_axes_collapse_to_the_base() {
+        let spec = SweepSpec::point("point", FleetScenario::walker_631());
+        assert_eq!(spec.len(), 1);
+        let c = spec.expand().unwrap().remove(0);
+        assert_eq!(c.solver, "ilpb");
+        assert_eq!(c.scenario.routing, "least-loaded");
+        assert_eq!(c.scenario.sats, 6);
+        assert_eq!(c.scenario.isl, IslMode::Off);
+    }
+
+    #[test]
+    fn data_axis_preserves_the_lo_hi_ratio() {
+        let mut spec = SweepSpec::point("d", FleetScenario::walker_631());
+        // base: 0.5..8.0 GB ⇒ ratio 1/16
+        spec.axes.data_gb_hi = vec![16.0];
+        let c = spec.expand().unwrap().remove(0);
+        assert_eq!(c.scenario.data_gb_hi, 16.0);
+        assert!((c.scenario.data_gb_lo - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validation_rejects_bad_axis_values() {
+        let mut s = small_spec();
+        s.axes.solver.push("simplex".into());
+        assert!(s.expand().is_err(), "unknown solver");
+        let mut s = small_spec();
+        s.axes.routing.push("telepathy".into());
+        assert!(s.expand().is_err(), "unknown routing");
+        let mut s = small_spec();
+        s.axes.walker = vec![WalkerAxis {
+            sats: 7,
+            planes: 3,
+            phasing: 1,
+        }];
+        assert!(s.expand().is_err(), "indivisible walker");
+        let mut s = small_spec();
+        s.axes.interarrival_s = vec![0.0];
+        assert!(s.expand().is_err(), "zero spacing");
+        let mut s = small_spec();
+        s.axes.data_gb_hi = vec![-2.0];
+        assert!(s.expand().is_err(), "negative size bound");
+        let mut s = small_spec();
+        s.replications = 0;
+        assert!(s.expand().is_err(), "zero replications");
+        assert!(WalkerAxis::parse("6/3").is_err());
+        assert!(WalkerAxis::parse("a/b/c").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_the_grid() {
+        let spec = small_spec();
+        let back = SweepSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(spec, back);
+        assert_eq!(spec.expand().unwrap(), back.expand().unwrap());
+        // full-range seeds survive the f64-backed JSON number path
+        let mut big = small_spec();
+        big.seed = u64::MAX - 3;
+        let text = big.to_json().to_string_pretty();
+        let back = SweepSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.seed, big.seed, "large seeds must round-trip exactly");
+    }
+
+    #[test]
+    fn toml_subset_accepts_comma_lists() {
+        let toml = r#"
+name = "toml-sweep"
+seed = 11
+replications = 2
+
+[axes]
+solver = "ilpb, arg"
+isl = "off,grid"
+walker = "4/2/1, 8/4/1"
+interarrival_s = "900, 1800"
+rate_mbps = 55
+
+[base]
+sats = 4
+planes = 2
+horizon_hours = 6.0
+"#;
+        let path = std::env::temp_dir().join("leo_infer_sweep_test.toml");
+        let path = path.to_str().unwrap();
+        std::fs::write(path, toml).unwrap();
+        let spec = SweepSpec::load(path).unwrap();
+        let _ = std::fs::remove_file(path);
+        assert_eq!(spec.name, "toml-sweep");
+        assert_eq!(spec.axes.solver, vec!["ilpb", "arg"]);
+        assert_eq!(spec.axes.isl, vec![IslMode::Off, IslMode::Grid]);
+        assert_eq!(spec.axes.walker[1].sats, 8);
+        assert_eq!(spec.axes.interarrival_s, vec![900.0, 1800.0]);
+        assert_eq!(spec.axes.rate_mbps, vec![55.0]);
+        // 2 solvers × 2 isl × 2 walker × 2 interarrival × 2 reps
+        assert_eq!(spec.len(), 32);
+    }
+
+    #[test]
+    fn smoke_caps_horizon_and_replications() {
+        let spec = small_spec().smoke();
+        assert_eq!(spec.replications, 1);
+        assert!(spec.base.horizon_hours <= 6.0);
+        assert_eq!(spec.len(), 4);
+        // rep-0 seeds unchanged: smoke cells reproduce full-run cells
+        assert_eq!(spec.cell(0).seed, replication_seed(7, 0));
+    }
+
+    #[test]
+    fn axis_value_covers_every_axis() {
+        let c = small_spec().cell(0);
+        for axis in AXIS_NAMES {
+            assert!(c.axis_value(axis).is_ok(), "axis {axis}");
+        }
+        assert!(c.axis_value("flux-capacitor").is_err());
+        assert_eq!(c.axis_value("walker").unwrap(), "4/2/1");
+        assert_eq!(c.axis_value("rep").unwrap(), "0");
+    }
+}

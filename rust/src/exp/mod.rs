@@ -1,0 +1,28 @@
+//! The experiment-sweep subsystem: declarative scenario grids, a
+//! deterministic parallel runner, and streaming aggregation.
+//!
+//! The paper's evaluation — and every study this repo grows beyond it —
+//! is a *grid*: solvers × routing policies × ISL modes × constellation
+//! shapes × workload intensities, replicated across seeds. Before `exp`,
+//! each study hand-rolled its own loop, seeding, and reporting in a
+//! bespoke example binary; now a study is a [`grid::SweepSpec`] (inline
+//! or a JSON/TOML file), executed by [`runner::run_sweep`] over a worker
+//! pool, and reported by [`aggregate`] as CSV, JSON, and plain-text
+//! comparison tables. The `leo-infer sweep` subcommand drives the same
+//! path from spec files.
+//!
+//! The load-bearing invariant, asserted in `rust/tests/sweep_properties.rs`
+//! and by CI on every push: **parallel and serial execution produce
+//! byte-identical exports.** Every cell is self-contained (own RNG stream
+//! from a deterministically derived seed, own solver engine, own
+//! simulator), results re-assemble by cell index, and exports carry no
+//! wall-clock values — so `--threads 8` equals `--threads 1` bit for bit,
+//! and any cell re-runs standalone from its reported seed.
+
+pub mod aggregate;
+pub mod grid;
+pub mod runner;
+
+pub use aggregate::{comparison_table, csv_header, csv_row, group_by, to_csv, to_json, AxisGroup};
+pub use grid::{Axes, Cell, SweepSpec, WalkerAxis, AXIS_NAMES};
+pub use runner::{default_threads, run_cell, run_sweep, CellResult, SweepResult};

@@ -1,0 +1,245 @@
+//! Parallel sweep execution over a `std::thread` worker pool.
+//!
+//! Each worker claims cells off a shared atomic counter and runs them
+//! **self-contained**: the cell's own [`Pcg64`] stream (from its seed),
+//! its own [`SolverEngine`] (so decision caches never leak across
+//! configurations), its own [`FleetSimulator`]. Nothing a cell computes
+//! depends on which worker ran it or in what order, and results are
+//! re-assembled by cell index — so a sweep at `--threads 8` is
+//! bit-identical to `--threads 1` (asserted by
+//! `rust/tests/sweep_properties.rs` and the CI smoke run).
+//!
+//! Threads-and-channels is the same substrate as
+//! [`crate::coordinator::server`]: no async runtime exists in the
+//! offline environment, and a pool of OS threads saturates the embarrassingly
+//! parallel grid just fine.
+
+use super::grid::{Cell, SweepSpec};
+use crate::dnn::profile::ModelProfile;
+use crate::sim::fleet::FleetSimulator;
+use crate::solver::SolverRegistry;
+use crate::util::rng::Pcg64;
+use crate::util::stats::StreamingSummary;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Deterministic per-cell outcome: the cell plus every exported metric.
+/// Wall-clock timing is deliberately *not* captured here — exports must
+/// be byte-identical across thread counts and runs.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub cell: Cell,
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected_admission: u64,
+    pub rejected_transmit: u64,
+    pub unfinished: u64,
+    pub relays: u64,
+    /// Mergeable latency summary over this cell's completed requests —
+    /// the single source for the cell's latency mean and percentiles
+    /// (see the accessor methods).
+    pub latency: StreamingSummary,
+    pub mean_energy_j: f64,
+    pub total_energy_j: f64,
+    pub downlinked_gb: f64,
+    pub relayed_gb: f64,
+    pub throughput_rps: f64,
+    // engine counters (deterministic: counts, not wall time)
+    pub solves: u64,
+    pub cache_hits: u64,
+    pub tightened: u64,
+}
+
+impl CellResult {
+    /// Mean end-to-end latency over completed requests, seconds.
+    pub fn mean_latency_s(&self) -> f64 {
+        self.latency.mean()
+    }
+
+    pub fn p50_latency_s(&self) -> f64 {
+        self.latency.p50()
+    }
+
+    pub fn p95_latency_s(&self) -> f64 {
+        self.latency.p95()
+    }
+
+    pub fn p99_latency_s(&self) -> f64 {
+        self.latency.p99()
+    }
+}
+
+/// The executed sweep: cells ordered by index, regardless of which worker
+/// finished first.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub spec_name: String,
+    pub cells: Vec<CellResult>,
+}
+
+/// Run one cell start to finish. Fully self-contained and deterministic:
+/// the trace and sampled profile derive from `cell.seed`, the engine and
+/// simulator are fresh. Re-running any cell standalone from its reported
+/// seed reproduces its exported row exactly.
+pub fn run_cell(cell: &Cell) -> anyhow::Result<CellResult> {
+    let scen = &cell.scenario;
+    let mut rng = Pcg64::seeded(cell.seed);
+    let trace = scen.workload()?.generate(scen.horizon(), &mut rng);
+    let profile = ModelProfile::sampled(scen.base.depth, &mut rng);
+    let engine = SolverRegistry::engine(&cell.solver)?;
+    let sim = FleetSimulator::new(scen.sim_config(profile)?);
+    let result = sim.run(&trace, &engine)?;
+    let m = &result.metrics;
+    let stats = engine.stats();
+    Ok(CellResult {
+        cell: cell.clone(),
+        submitted: trace.len() as u64,
+        completed: m.completed(),
+        rejected_admission: m.rejected_admission,
+        rejected_transmit: m.rejected_transmit,
+        unfinished: m.unfinished,
+        relays: m.relays,
+        latency: m.latency_summary().clone(),
+        mean_energy_j: m.mean_energy().value(),
+        total_energy_j: m.total_energy().value(),
+        downlinked_gb: m.total_downlinked.gb(),
+        relayed_gb: m.relayed_bytes.gb(),
+        throughput_rps: m.throughput(result.horizon),
+        solves: stats.solves,
+        cache_hits: stats.cache_hits,
+        tightened: stats.tightened,
+    })
+}
+
+/// Execute every cell of the spec across `threads` workers (clamped to
+/// `[1, cells]`). Cells are claimed dynamically (a long cell does not
+/// stall the queue behind it) and re-assembled by index; on failure the
+/// *lowest-indexed* failing cell's error is returned, independent of
+/// scheduling.
+pub fn run_sweep(spec: &SweepSpec, threads: usize) -> anyhow::Result<SweepResult> {
+    let cells = spec.expand()?;
+    let n = cells.len();
+    let threads = threads.clamp(1, n.max(1));
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, anyhow::Result<CellResult>)>();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let next = &next;
+            let cells = &cells;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                if tx.send((i, run_cell(&cells[i]))).is_err() {
+                    break;
+                }
+            });
+        }
+    });
+    drop(tx);
+    let mut slots: Vec<Option<anyhow::Result<CellResult>>> = (0..n).map(|_| None).collect();
+    for (i, r) in rx {
+        slots[i] = Some(r);
+    }
+    let mut out = Vec::with_capacity(n);
+    for (i, slot) in slots.into_iter().enumerate() {
+        let result = slot
+            .ok_or_else(|| anyhow::anyhow!("worker pool lost cell {i}"))?
+            .map_err(|e| anyhow::anyhow!("cell {i}: {e}"))?;
+        out.push(result);
+    }
+    Ok(SweepResult {
+        spec_name: spec.name.clone(),
+        cells: out,
+    })
+}
+
+/// `std::thread::available_parallelism()` with a serial fallback — the
+/// default for `--threads 0`.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(std::num::NonZeroUsize::get)
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::grid::Axes;
+    use crate::config::FleetScenario;
+
+    fn tiny_spec() -> SweepSpec {
+        let mut base = FleetScenario::walker_631();
+        base.sats = 4;
+        base.planes = 2;
+        base.horizon_hours = 3.0;
+        base.interarrival_s = 900.0;
+        base.data_gb_lo = 0.05;
+        base.data_gb_hi = 0.5;
+        SweepSpec {
+            name: "runner-test".to_string(),
+            seed: 3,
+            replications: 1,
+            base,
+            axes: Axes {
+                solver: vec!["arg".into(), "ars".into()],
+                ..Axes::default()
+            },
+        }
+    }
+
+    #[test]
+    fn sweep_runs_every_cell_in_order() {
+        let spec = tiny_spec();
+        let result = run_sweep(&spec, 2).unwrap();
+        assert_eq!(result.cells.len(), 2);
+        for (i, c) in result.cells.iter().enumerate() {
+            assert_eq!(c.cell.index, i);
+            assert!(c.submitted > 0, "cell {i} generated no trace");
+            assert_eq!(
+                c.completed + c.rejected_admission + c.rejected_transmit + c.unfinished,
+                c.submitted,
+                "cell {i} must conserve requests"
+            );
+        }
+        // common random numbers: both solvers saw the same trace
+        assert_eq!(result.cells[0].submitted, result.cells[1].submitted);
+    }
+
+    #[test]
+    fn standalone_cell_rerun_matches_the_sweep() {
+        let spec = tiny_spec();
+        let swept = run_sweep(&spec, 2).unwrap();
+        let lone = run_cell(&spec.cell(1)).unwrap();
+        let s = &swept.cells[1];
+        assert_eq!(lone.completed, s.completed);
+        assert_eq!(lone.mean_latency_s(), s.mean_latency_s());
+        assert_eq!(lone.p99_latency_s(), s.p99_latency_s());
+        assert_eq!(lone.total_energy_j, s.total_energy_j);
+        assert_eq!(lone.solves, s.solves);
+    }
+
+    #[test]
+    fn oversubscribed_pool_is_clamped_and_correct() {
+        let spec = tiny_spec();
+        let wide = run_sweep(&spec, 64).unwrap();
+        let narrow = run_sweep(&spec, 1).unwrap();
+        for (a, b) in wide.cells.iter().zip(&narrow.cells) {
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.mean_latency_s(), b.mean_latency_s());
+        }
+    }
+
+    #[test]
+    fn bad_cell_reports_its_index() {
+        // an unknown solver sneaks past expand only if validation is
+        // skipped — go through run_cell directly to exercise the error path
+        let spec = tiny_spec();
+        let mut cell = spec.cell(0);
+        cell.solver = "bogus".to_string();
+        let err = run_cell(&cell).expect_err("unknown solver must fail");
+        assert!(err.to_string().contains("bogus"));
+    }
+}

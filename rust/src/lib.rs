@@ -27,6 +27,10 @@
 //!   under queueing and contention as its N = 1 special case.
 //! * [`coordinator`] — the serving runtime: request router, dynamic
 //!   batcher, contact-aware scheduler, admission control.
+//! * [`exp`] — the experiment-sweep subsystem: declarative scenario grids
+//!   ([`exp::SweepSpec`]), a deterministic parallel runner (serial ≡
+//!   parallel, bit for bit), and streaming CSV/JSON/table aggregation —
+//!   driven by the `leo-infer sweep` subcommand.
 //! * [`runtime`] — PJRT execution of AOT-compiled model stages; the chosen
 //!   split is *physically executed* (prefix on the "satellite" client,
 //!   activation serialized, suffix on the "cloud" client).
@@ -44,6 +48,7 @@ pub mod coordinator;
 pub mod figures;
 pub mod dnn;
 pub mod energy;
+pub mod exp;
 pub mod link;
 pub mod orbit;
 pub mod runtime;

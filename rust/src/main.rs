@@ -6,6 +6,8 @@
 //! * `solve`    — one offloading decision (paper Algorithm 1) for a given
 //!   scenario/model/data size.
 //! * `simulate` — discrete-event simulation of a capture workload.
+//! * `sweep`    — execute an experiment grid from a spec file (see
+//!   [`leo_infer::exp`]): parallel, deterministic, CSV/JSON exports.
 //! * `figures`  — regenerate the paper's Fig. 2/3/4 tables.
 //! * `models`   — list the DNN zoo with per-layer profiles.
 //! * `contacts` — derive contact windows from orbital geometry.
@@ -30,6 +32,7 @@ fn main() -> anyhow::Result<()> {
     match cmd.as_str() {
         "solve" => solve(argv),
         "simulate" => simulate(argv),
+        "sweep" => sweep(argv),
         "figures" => figures(argv),
         "models" => list_models(),
         "contacts" => contacts(argv),
@@ -37,7 +40,7 @@ fn main() -> anyhow::Result<()> {
         _ => {
             println!(
                 "leo-infer — energy & time-aware DNN inference offloading for LEO satellites\n\n\
-                 USAGE: leo-infer <solve|simulate|figures|models|contacts|serve> [options]\n\
+                 USAGE: leo-infer <solve|simulate|sweep|figures|models|contacts|serve> [options]\n\
                  Run a subcommand with --help for its options."
             );
             Ok(())
@@ -223,9 +226,10 @@ fn print_sim_summary(m: &leo_infer::sim::SimMetrics, submitted: usize, horizon: 
         m.unfinished
     );
     println!(
-        "latency     : mean {:.1} s, p50 {:.1} s, p99 {:.1} s",
+        "latency     : mean {:.1} s, p50 {:.1} s, p95 {:.1} s, p99 {:.1} s",
         m.mean_latency().value(),
         m.latency_p50().value(),
+        m.latency_p95().value(),
         m.latency_p99().value()
     );
     println!("downlinked  : {:.2} GB", m.total_downlinked.gb());
@@ -283,7 +287,7 @@ fn simulate_fleet(args: &Args, fleet_config: &str, fleet_spec: &str) -> anyhow::
         f
     };
     let mut rng = Pcg64::seeded(args.get_u64("seed")?);
-    let trace = fleet.workload().generate(fleet.horizon(), &mut rng);
+    let trace = fleet.workload()?.generate(fleet.horizon(), &mut rng);
     let profile = ModelProfile::sampled(args.get_usize("depth")?, &mut rng);
     let engine = SolverRegistry::engine(args.get_str("policy").unwrap())?;
     let sim = FleetSimulator::new(fleet.sim_config(profile)?);
@@ -310,13 +314,13 @@ fn simulate_fleet(args: &Args, fleet_config: &str, fleet_spec: &str) -> anyhow::
     }
     println!("\nper-satellite:");
     println!(
-        "{:<10} {:>10} {:>9} {:>8} {:>11} {:>8} {:>8} {:>13} {:>10} {:>7}",
+        "{:<10} {:>10} {:>9} {:>8} {:>11} {:>8} {:>8} {:>13} {:>10} {:>10} {:>10} {:>7}",
         "sat", "completed", "rej(adm)", "rej(tx)", "unfinished", "rly out", "rly in",
-        "mean lat(s)", "down(GB)", "SoC%"
+        "mean lat(s)", "p50(s)", "p95(s)", "down(GB)", "SoC%"
     );
     for (id, sat) in m.per_sat().iter().enumerate() {
         println!(
-            "{:<10} {:>10} {:>9} {:>8} {:>11} {:>8} {:>8} {:>13.1} {:>10.2} {:>6.1}%",
+            "{:<10} {:>10} {:>9} {:>8} {:>11} {:>8} {:>8} {:>13.1} {:>10.1} {:>10.1} {:>10.2} {:>6.1}%",
             sat.name,
             sat.completed,
             sat.rejected_admission,
@@ -325,11 +329,131 @@ fn simulate_fleet(args: &Args, fleet_config: &str, fleet_spec: &str) -> anyhow::
             sat.relays_out,
             sat.relays_in,
             sat.mean_latency().value(),
+            sat.latency_p50().value(),
+            sat.latency_p95().value(),
             sat.downlinked.gb(),
             result.states[id].soc() * 100.0
         );
     }
     print_engine_stats(&engine);
+    Ok(())
+}
+
+/// `leo-infer sweep <spec> [--threads N] [--out dir] [--smoke] [--verify]`
+/// — execute an experiment grid (see [`leo_infer::exp`]). Parallel and
+/// serial runs export byte-identical CSV/JSON; `--verify` asserts that on
+/// the spot (the CI smoke check), `--cell` re-runs one cell standalone
+/// from its derived seed.
+fn sweep(argv: Vec<String>) -> anyhow::Result<()> {
+    use leo_infer::exp;
+
+    let args = Args::new(
+        "leo-infer sweep",
+        "run an experiment grid from a JSON/TOML sweep spec",
+    )
+    .opt("threads", "worker threads (0 = available parallelism)", Some("0"))
+    .opt(
+        "out",
+        "directory for <sweep>.csv / <sweep>.json exports (empty = print only)",
+        Some(""),
+    )
+    .opt("by", "comparison-table axis (repeatable via commas)", Some("solver"))
+    .opt("cell", "run only this cell index and print its row (empty = all)", Some(""))
+    .flag("smoke", "CI-sized run: horizon capped at 6 h, 1 replication")
+    .flag(
+        "verify",
+        "also run serially and assert byte-identical exports (determinism check)",
+    )
+    .parse_from(argv)?;
+    let spec_path = args
+        .positional()
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: leo-infer sweep <spec.json|spec.toml> [options]"))?;
+    let mut spec = exp::SweepSpec::load(spec_path)?;
+    if args.flag_set("smoke") {
+        spec = spec.smoke();
+    }
+    println!(
+        "sweep `{}`: {} cells ({} replication(s)), seed {}",
+        spec.name,
+        spec.len(),
+        spec.replications,
+        spec.seed
+    );
+
+    // single-cell replay: the standalone-reproducibility path. It prints
+    // exactly one row, so flags that only make sense for a full grid are
+    // refused rather than silently ignored.
+    if let Some(raw) = args.get_str("cell").filter(|v| !v.is_empty()) {
+        anyhow::ensure!(
+            !args.flag_set("verify"),
+            "--cell replays one cell; --verify needs the full grid"
+        );
+        anyhow::ensure!(
+            args.get_str("out").unwrap_or("").is_empty(),
+            "--cell prints one row to stdout; --out needs the full grid"
+        );
+        let index: usize = raw
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--cell={raw} is not an index: {e}"))?;
+        anyhow::ensure!(
+            index < spec.len(),
+            "--cell {index} out of range (grid has {} cells)",
+            spec.len()
+        );
+        spec.validate()?;
+        let result = exp::run_cell(&spec.cell(index))?;
+        println!("{}", exp::csv_header());
+        println!("{}", exp::csv_row(&result));
+        return Ok(());
+    }
+
+    let threads = match args.get_usize("threads")? {
+        0 => exp::default_threads(),
+        n => n,
+    };
+    let t0 = std::time::Instant::now();
+    let result = exp::run_sweep(&spec, threads)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let csv = exp::to_csv(&result);
+    let json = exp::to_json(&result).to_string_pretty();
+
+    if args.flag_set("verify") {
+        let serial = exp::run_sweep(&spec, 1)?;
+        anyhow::ensure!(
+            exp::to_csv(&serial) == csv && exp::to_json(&serial).to_string_pretty() == json,
+            "DETERMINISM VIOLATION: {threads}-thread exports differ from serial"
+        );
+        println!("verify      : serial ≡ {threads}-thread exports, byte for byte");
+    }
+
+    let completed: u64 = result.cells.iter().map(|c| c.completed).sum();
+    let submitted: u64 = result.cells.iter().map(|c| c.submitted).sum();
+    println!(
+        "ran         : {} cells on {} thread(s) in {:.2} s — {} of {} requests completed",
+        result.cells.len(),
+        threads,
+        wall,
+        completed,
+        submitted
+    );
+    for axis in args.get_str("by").unwrap_or("solver").split(',') {
+        let axis = axis.trim();
+        if axis.is_empty() {
+            continue;
+        }
+        println!("\nby {axis}:");
+        print!("{}", exp::comparison_table(&result, axis)?);
+    }
+
+    if let Some(dir) = args.get_str("out").filter(|p| !p.is_empty()) {
+        std::fs::create_dir_all(dir)?;
+        let csv_path = format!("{dir}/{}.csv", spec.name);
+        let json_path = format!("{dir}/{}.json", spec.name);
+        std::fs::write(&csv_path, &csv)?;
+        std::fs::write(&json_path, &json)?;
+        println!("\nwrote {csv_path} and {json_path}");
+    }
     Ok(())
 }
 

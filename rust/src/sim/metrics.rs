@@ -9,7 +9,7 @@
 //! breakdown ([`SatMetrics`]) alongside the aggregate, including the ISL
 //! relay traffic (handoffs out, handoffs in, bytes crossing ISLs).
 
-use crate::util::stats::{LogHistogram, Welford};
+use crate::util::stats::{StreamingSummary, Welford};
 use crate::util::units::{Bytes, Joules, Seconds};
 
 /// Completion record for one request.
@@ -52,7 +52,7 @@ pub struct SatMetrics {
     pub relays_in: u64,
     /// Bytes this satellite pushed over its ISLs.
     pub relayed_bytes: Bytes,
-    latency: Welford,
+    latency: StreamingSummary,
     /// Total on-board energy of this satellite's completed requests.
     pub energy: Joules,
     pub downlinked: Bytes,
@@ -69,7 +69,7 @@ impl SatMetrics {
             relays_out: 0,
             relays_in: 0,
             relayed_bytes: Bytes::ZERO,
-            latency: Welford::new(),
+            latency: StreamingSummary::for_latency(),
             energy: Joules::ZERO,
             downlinked: Bytes::ZERO,
         }
@@ -82,15 +82,32 @@ impl SatMetrics {
     pub fn mean_latency(&self) -> Seconds {
         Seconds(self.latency.mean())
     }
+
+    pub fn latency_p50(&self) -> Seconds {
+        Seconds(self.latency.p50())
+    }
+
+    pub fn latency_p95(&self) -> Seconds {
+        Seconds(self.latency.p95())
+    }
+
+    pub fn latency_p99(&self) -> Seconds {
+        Seconds(self.latency.p99())
+    }
+
+    /// The mergeable latency summary (the sweep harness pools these
+    /// across cells without re-reading records).
+    pub fn latency_summary(&self) -> &StreamingSummary {
+        &self.latency
+    }
 }
 
 /// Aggregated metrics over a run.
 #[derive(Debug, Clone)]
 pub struct SimMetrics {
     pub records: Vec<RequestRecord>,
-    latency: Welford,
+    latency: StreamingSummary,
     energy: Welford,
-    latency_hist: LogHistogram,
     pub total_downlinked: Bytes,
     /// Requests refused at arrival (battery could not cover processing).
     pub rejected_admission: u64,
@@ -118,9 +135,8 @@ impl SimMetrics {
     pub fn new() -> Self {
         SimMetrics {
             records: Vec::new(),
-            latency: Welford::new(),
+            latency: StreamingSummary::for_latency(),
             energy: Welford::new(),
-            latency_hist: LogHistogram::new(1e-3),
             total_downlinked: Bytes::ZERO,
             rejected_admission: 0,
             rejected_transmit: 0,
@@ -154,7 +170,6 @@ impl SimMetrics {
     pub fn record(&mut self, r: RequestRecord) {
         self.latency.push(r.latency.value());
         self.energy.push(r.energy.value());
-        self.latency_hist.record(r.latency.value());
         self.total_downlinked += r.downlinked;
         let s = self.sat_mut(r.sat);
         s.completed += 1;
@@ -222,11 +237,22 @@ impl SimMetrics {
     }
 
     pub fn latency_p50(&self) -> Seconds {
-        Seconds(self.latency_hist.quantile(0.5))
+        Seconds(self.latency.p50())
+    }
+
+    pub fn latency_p95(&self) -> Seconds {
+        Seconds(self.latency.p95())
     }
 
     pub fn latency_p99(&self) -> Seconds {
-        Seconds(self.latency_hist.quantile(0.99))
+        Seconds(self.latency.p99())
+    }
+
+    /// The mergeable latency summary: the sweep harness clones this per
+    /// cell and [`crate::util::stats::StreamingSummary::merge`]s across a
+    /// group to get pooled P50/P95/P99 without buffering samples.
+    pub fn latency_summary(&self) -> &StreamingSummary {
+        &self.latency
     }
 
     /// Completed requests per simulated second.
@@ -356,7 +382,37 @@ mod tests {
         }
         let p50 = m.latency_p50().value();
         assert!((p50 - 50.0).abs() / 50.0 < 0.15, "p50 {p50}");
+        let p95 = m.latency_p95().value();
+        assert!((p95 - 95.0).abs() / 95.0 < 0.15, "p95 {p95}");
         let p99 = m.latency_p99().value();
         assert!((p99 - 99.0).abs() / 99.0 < 0.15, "p99 {p99}");
+        assert!(p50 <= p95 && p95 <= p99, "quantiles must be monotone");
+    }
+
+    #[test]
+    fn per_sat_percentiles_track_their_own_tail() {
+        // sat 0 serves a tight distribution, sat 1 a heavy tail: the
+        // per-sat percentiles must separate what the fleet mean hides
+        let mut m = SimMetrics::for_fleet(&["tight".to_string(), "tail".to_string()]);
+        for i in 0..100 {
+            m.record(rec(i, 0, 10.0, 1.0));
+            let lat = if i < 90 { 10.0 } else { 1000.0 };
+            m.record(rec(100 + i, 1, lat, 1.0));
+        }
+        let tight = &m.per_sat()[0];
+        let tail = &m.per_sat()[1];
+        assert!((tight.latency_p99().value() - 10.0).abs() / 10.0 < 0.10);
+        assert!(
+            tail.latency_p99().value() > 500.0,
+            "p99 {} must expose the tail",
+            tail.latency_p99().value()
+        );
+        // ...while the two satellites' p50s agree
+        assert!((tail.latency_p50().value() - tight.latency_p50().value()).abs() < 2.0);
+        // pooling the per-sat summaries reproduces the aggregate
+        let mut pooled = tight.latency_summary().clone();
+        pooled.merge(tail.latency_summary());
+        assert_eq!(pooled.count(), m.completed());
+        assert_eq!(pooled.p99(), m.latency_summary().p99());
     }
 }

@@ -21,6 +21,56 @@ pub enum SizeDist {
 }
 
 impl SizeDist {
+    /// Reject degenerate bounds before anything samples from them:
+    /// `LogUniform` with `lo <= 0` would feed `ln()` a non-positive value
+    /// (NaN/-inf sizes), and inverted bounds would sample garbage from an
+    /// empty range. Called by [`PoissonWorkload::new`] and at config parse
+    /// time, so a bad scenario fails loudly instead of producing nonsense
+    /// request sizes.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let finite = |b: Bytes, what: &str| -> anyhow::Result<()> {
+            anyhow::ensure!(
+                b.value().is_finite(),
+                "{what} size must be finite, got {}",
+                b.value()
+            );
+            Ok(())
+        };
+        match *self {
+            SizeDist::Fixed(b) => {
+                finite(b, "fixed request")?;
+                anyhow::ensure!(b.value() > 0.0, "fixed request size must be > 0");
+            }
+            SizeDist::Uniform(lo, hi) => {
+                finite(lo, "uniform lower-bound")?;
+                finite(hi, "uniform upper-bound")?;
+                anyhow::ensure!(lo.value() >= 0.0, "uniform lower bound must be >= 0");
+                anyhow::ensure!(
+                    lo.value() <= hi.value(),
+                    "uniform bounds inverted: lo {} > hi {}",
+                    lo.value(),
+                    hi.value()
+                );
+            }
+            SizeDist::LogUniform(lo, hi) => {
+                finite(lo, "log-uniform lower-bound")?;
+                finite(hi, "log-uniform upper-bound")?;
+                anyhow::ensure!(
+                    lo.value() > 0.0,
+                    "log-uniform lower bound must be > 0 (ln of {} is undefined)",
+                    lo.value()
+                );
+                anyhow::ensure!(
+                    lo.value() <= hi.value(),
+                    "log-uniform bounds inverted: lo {} > hi {}",
+                    lo.value(),
+                    hi.value()
+                );
+            }
+        }
+        Ok(())
+    }
+
     pub fn sample(&self, rng: &mut Pcg64) -> Bytes {
         match *self {
             SizeDist::Fixed(b) => b,
@@ -61,8 +111,14 @@ pub struct PoissonWorkload {
 }
 
 impl PoissonWorkload {
+    /// Panics on a non-positive rate or a degenerate size distribution
+    /// (see [`SizeDist::validate`]); config-file paths validate with an
+    /// error before reaching here.
     pub fn new(rate_hz: f64, sizes: SizeDist) -> Self {
         assert!(rate_hz > 0.0);
+        if let Err(e) = sizes.validate() {
+            panic!("invalid size distribution: {e}");
+        }
         PoissonWorkload {
             rate_hz,
             sizes,
@@ -183,6 +239,74 @@ mod tests {
             counts[r.model] += 1;
         }
         assert!(counts[0] > counts[4], "model 0 should dominate: {counts:?}");
+    }
+
+    // ------------------------------------------- degenerate-bounds guards
+
+    #[test]
+    fn validate_rejects_degenerate_bounds() {
+        // lo <= 0 under LogUniform used to sample NaN/-inf silently
+        assert!(SizeDist::LogUniform(Bytes(0.0), Bytes::from_gb(1.0))
+            .validate()
+            .is_err());
+        assert!(SizeDist::LogUniform(Bytes(-1.0), Bytes::from_gb(1.0))
+            .validate()
+            .is_err());
+        // inverted ranges sample garbage
+        assert!(
+            SizeDist::LogUniform(Bytes::from_gb(2.0), Bytes::from_gb(1.0))
+                .validate()
+                .is_err()
+        );
+        assert!(SizeDist::Uniform(Bytes::from_gb(2.0), Bytes::from_gb(1.0))
+            .validate()
+            .is_err());
+        assert!(SizeDist::Uniform(Bytes(-1.0), Bytes::from_gb(1.0))
+            .validate()
+            .is_err());
+        // non-finite bounds are nonsense everywhere
+        assert!(SizeDist::Fixed(Bytes(f64::NAN)).validate().is_err());
+        assert!(SizeDist::Uniform(Bytes(0.0), Bytes(f64::INFINITY))
+            .validate()
+            .is_err());
+        assert!(SizeDist::Fixed(Bytes(0.0)).validate().is_err());
+        // healthy distributions pass
+        assert!(SizeDist::Fixed(Bytes::from_mb(5.0)).validate().is_ok());
+        assert!(SizeDist::Uniform(Bytes::ZERO, Bytes::from_gb(1.0))
+            .validate()
+            .is_ok());
+        assert!(
+            SizeDist::LogUniform(Bytes::from_gb(0.5), Bytes::from_gb(8.0))
+                .validate()
+                .is_ok()
+        );
+        // degenerate-but-legal: lo == hi collapses to a point mass
+        assert!(
+            SizeDist::LogUniform(Bytes::from_gb(1.0), Bytes::from_gb(1.0))
+                .validate()
+                .is_ok()
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid size distribution")]
+    fn workload_construction_rejects_bad_dist() {
+        let _ = PoissonWorkload::new(
+            0.1,
+            SizeDist::LogUniform(Bytes(0.0), Bytes::from_gb(1.0)),
+        );
+    }
+
+    #[test]
+    fn valid_samples_stay_finite_and_in_range() {
+        let mut rng = Pcg64::seeded(46);
+        let dist = SizeDist::LogUniform(Bytes::from_gb(0.1), Bytes::from_gb(10.0));
+        dist.validate().unwrap();
+        for _ in 0..1000 {
+            let b = dist.sample(&mut rng);
+            assert!(b.value().is_finite());
+            assert!((0.1..=10.0).contains(&b.gb()), "{} GB", b.gb());
+        }
     }
 
     #[test]

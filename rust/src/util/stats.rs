@@ -252,6 +252,27 @@ impl LogHistogram {
         self.total
     }
 
+    /// The smallest resolvable value this histogram was built with.
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// Merge another histogram (parallel aggregation). Both sides must have
+    /// been built with the same `scale` — bucket boundaries are a pure
+    /// function of it, so equal scales make the merge exact (bucket-wise
+    /// addition), while differing scales would silently misalign buckets.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        assert_eq!(
+            self.scale, other.scale,
+            "cannot merge LogHistograms with different scales"
+        );
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.underflow += other.underflow;
+        self.total += other.total;
+    }
+
     /// Approximate quantile (`q` in `[0,1]`): returns the geometric midpoint
     /// of the bucket containing the q-th sample.
     pub fn quantile(&self, q: f64) -> f64 {
@@ -272,6 +293,84 @@ impl LogHistogram {
             }
         }
         self.scale * (self.ratio_ln * self.counts.len() as f64).exp()
+    }
+}
+
+/// Mergeable streaming summary: a [`Welford`] accumulator for exact
+/// mean/std/min/max plus a [`LogHistogram`] for P50/P95/P99 capture —
+/// everything the sweep harness needs to aggregate millions of latencies
+/// across parallel workers without buffering samples. Merging two
+/// summaries built from disjoint sample streams is exact for the moments
+/// and bucket-exact for the quantiles, so parallel aggregation produces
+/// the same numbers as a single serial pass.
+#[derive(Debug, Clone)]
+pub struct StreamingSummary {
+    welford: Welford,
+    hist: LogHistogram,
+}
+
+impl StreamingSummary {
+    /// `scale` = smallest value the quantile histogram resolves (values
+    /// below it land in an underflow bucket reported as `scale / 2`).
+    pub fn new(scale: f64) -> Self {
+        StreamingSummary {
+            welford: Welford::new(),
+            hist: LogHistogram::new(scale),
+        }
+    }
+
+    /// Default scale for latency-in-seconds streams: 1 ms resolution.
+    pub fn for_latency() -> Self {
+        Self::new(1e-3)
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.welford.push(x);
+        self.hist.record(x);
+    }
+
+    /// Merge another summary (parallel / grouped aggregation). Histogram
+    /// scales must match (see [`LogHistogram::merge`]).
+    pub fn merge(&mut self, other: &StreamingSummary) {
+        self.welford.merge(&other.welford);
+        self.hist.merge(&other.hist);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.welford.count()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.welford.mean()
+    }
+
+    pub fn std(&self) -> f64 {
+        self.welford.std()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.welford.min()
+    }
+
+    pub fn max(&self) -> f64 {
+        self.welford.max()
+    }
+
+    /// Approximate quantile (`q` in `[0,1]`), ≤ ~9% relative bucket error.
+    pub fn quantile(&self, q: f64) -> f64 {
+        self.hist.quantile(q)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
     }
 }
 
@@ -364,6 +463,81 @@ mod tests {
         assert!((p50 - 0.5).abs() / 0.5 < 0.10, "p50 ~ {p50}");
         let p99 = h.quantile(0.99);
         assert!((p99 - 0.99).abs() / 0.99 < 0.10, "p99 ~ {p99}");
+    }
+
+    #[test]
+    fn log_histogram_merge_equals_single_pass() {
+        let mut all = LogHistogram::new(1e-6);
+        let mut a = LogHistogram::new(1e-6);
+        let mut b = LogHistogram::new(1e-6);
+        for i in 1..=1000 {
+            let x = i as f64 * 1e-3;
+            all.record(x);
+            if i % 2 == 0 {
+                a.record(x);
+            } else {
+                b.record(x);
+            }
+        }
+        // plus some underflow on one side only
+        b.record(1e-9);
+        all.record(1e-9);
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        for q in [0.1, 0.5, 0.9, 0.95, 0.99] {
+            assert_eq!(a.quantile(q), all.quantile(q), "q = {q}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "different scales")]
+    fn log_histogram_merge_rejects_scale_mismatch() {
+        let mut a = LogHistogram::new(1e-6);
+        let b = LogHistogram::new(1e-3);
+        a.merge(&b);
+    }
+
+    #[test]
+    fn streaming_summary_matches_batch_stats() {
+        let xs: Vec<f64> = (1..=500).map(|i| i as f64 * 0.01).collect();
+        let mut ss = StreamingSummary::for_latency();
+        xs.iter().for_each(|&x| ss.push(x));
+        let s = Summary::of(&xs);
+        assert_eq!(ss.count(), 500);
+        assert!((ss.mean() - s.mean).abs() < 1e-9);
+        assert!((ss.std() - s.std).abs() < 1e-9);
+        assert_eq!(ss.min(), s.min);
+        assert_eq!(ss.max(), s.max);
+        // histogram quantiles within bucket error of the exact percentiles
+        assert!((ss.p50() - s.p50).abs() / s.p50 < 0.10, "p50 {}", ss.p50());
+        assert!((ss.p95() - s.p95).abs() / s.p95 < 0.10, "p95 {}", ss.p95());
+        assert!((ss.p99() - s.p99).abs() / s.p99 < 0.10, "p99 {}", ss.p99());
+    }
+
+    #[test]
+    fn streaming_summary_merge_equals_single_stream() {
+        let mut whole = StreamingSummary::for_latency();
+        let mut left = StreamingSummary::for_latency();
+        let mut right = StreamingSummary::for_latency();
+        for i in 1..=800 {
+            let x = (i as f64).sqrt();
+            whole.push(x);
+            if i <= 300 {
+                left.push(x);
+            } else {
+                right.push(x);
+            }
+        }
+        left.merge(&right);
+        assert_eq!(left.count(), whole.count());
+        assert!((left.mean() - whole.mean()).abs() < 1e-9);
+        assert!((left.std() - whole.std()).abs() < 1e-6);
+        assert_eq!(left.min(), whole.min());
+        assert_eq!(left.max(), whole.max());
+        // bucket counts add exactly ⇒ identical quantiles, not just close
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(left.quantile(q), whole.quantile(q), "q = {q}");
+        }
     }
 
     #[test]

@@ -95,7 +95,7 @@ fn fleet_runs_with_many_satellites_are_deterministic() {
         scen.data_gb_lo = 0.2;
         scen.data_gb_hi = 4.0;
         let mut rng = Pcg64::seeded(11);
-        let trace = scen.workload().generate(scen.horizon(), &mut rng);
+        let trace = scen.workload().unwrap().generate(scen.horizon(), &mut rng);
         let profile = ModelProfile::sampled(8, &mut rng);
         let engine = SolverRegistry::engine("ilpb").unwrap();
         FleetSimulator::new(scen.sim_config(profile).unwrap())
@@ -162,7 +162,7 @@ fn fleet_conserves_requests_across_all_buckets() {
     scen.interarrival_s = 1800.0;
     scen.battery_capacity_j = 5.0e5;
     let mut rng = Pcg64::seeded(23);
-    let trace = scen.workload().generate(scen.horizon(), &mut rng);
+    let trace = scen.workload().unwrap().generate(scen.horizon(), &mut rng);
     let profile = ModelProfile::sampled(10, &mut rng);
     let engine = SolverRegistry::engine("ilpb").unwrap();
     let result = FleetSimulator::new(scen.sim_config(profile).unwrap())
@@ -192,7 +192,7 @@ fn relay_fleet_conserves_requests_across_all_buckets() {
     scen.routing = "relay-aware".to_string();
     scen.battery_capacity_j = 5.0e5;
     let mut rng = Pcg64::seeded(29);
-    let trace = scen.workload().generate(scen.horizon(), &mut rng);
+    let trace = scen.workload().unwrap().generate(scen.horizon(), &mut rng);
     let profile = ModelProfile::sampled(10, &mut rng);
     let engine = SolverRegistry::engine("ilpb").unwrap();
     let result = FleetSimulator::new(scen.sim_config(profile).unwrap())
@@ -236,7 +236,7 @@ fn relay_aware_routing_is_deterministic() {
         scen.isl = leo_infer::link::isl::IslMode::Grid;
         scen.routing = "relay-aware".to_string();
         let mut rng = Pcg64::seeded(37);
-        let trace = scen.workload().generate(scen.horizon(), &mut rng);
+        let trace = scen.workload().unwrap().generate(scen.horizon(), &mut rng);
         let profile = ModelProfile::sampled(8, &mut rng);
         let engine = SolverRegistry::engine("ilpb").unwrap();
         FleetSimulator::new(scen.sim_config(profile).unwrap())
@@ -268,7 +268,7 @@ fn orbit_derived_fleet_serves_captures_end_to_end() {
     scen.data_gb_lo = 0.05;
     scen.data_gb_hi = 0.5;
     let mut rng = Pcg64::seeded(31);
-    let trace = scen.workload().generate(scen.horizon(), &mut rng);
+    let trace = scen.workload().unwrap().generate(scen.horizon(), &mut rng);
     let profile = ModelProfile::sampled(10, &mut rng);
     let engine = SolverRegistry::engine("ilpb").unwrap();
     let result = FleetSimulator::new(scen.sim_config(profile).unwrap())
