@@ -8,24 +8,32 @@
 //!
 //! A contact-starved Walker 8/4/1 under the paper's Tiansuan cadence: each
 //! satellite sees one 6-minute ground pass every 8 hours, staggered an
-//! hour apart across the fleet. Captures land round-robin — the capture-
-//! bound case where the router cannot shop for a satellite about to pass —
-//! so a boundary tensor produced mid-gap waits on average ~4 h for its own
-//! satellite's downlink.
+//! hour apart across the fleet, over a sparse ground segment (one station
+//! worth of contact per satellite). Captures land round-robin — the
+//! capture-bound case where the router cannot shop for a satellite about
+//! to pass — so a boundary tensor produced mid-gap waits on average ~4 h
+//! for its own satellite's downlink.
 //!
-//! The study is the cross product {ars, ilpb} × {isl off, isl grid},
-//! declared as a [`SweepSpec`] and executed by the deterministic parallel
-//! runner. Cells sharing a replication share a seed (common random
-//! numbers), so every configuration sees the *same* capture trace — the
-//! pairing the old hand-rolled loop achieved by generating one trace up
-//! front. Three of the four cells are the original study:
+//! The study is the cross product {ars, ilpb} × {isl off, isl grid} ×
+//! {1 hop, 4 hops}, declared as a [`SweepSpec`] and executed by the
+//! deterministic parallel runner. Cells sharing a replication share a
+//! seed (common random numbers), so every configuration sees the *same*
+//! capture trace. The interesting diagonal:
 //!
-//! * `ars · off`   — all-on-satellite: no downlink at all;
-//! * `ilpb · off`  — the paper's bent pipe: optimal split, own pass only;
-//! * `ilpb · grid` — the relay path this study is about.
+//! * `ars · off`       — all-on-satellite: no downlink at all;
+//! * `ilpb · off`      — the paper's bent pipe: optimal split, own pass only;
+//! * `ilpb · grid · 1` — PR 3's single-hop relay;
+//! * `ilpb · grid · 4` — multi-hop contact-graph routing
+//!   ([`leo_infer::link::route`]): the tensor chains across the grid to
+//!   whichever satellite passes first.
 //!
-//! The run asserts the headline result — relays beat both baselines on
-//! mean latency — so CI fails if the relay path ever rots.
+//! (The grid is a plain cross product, so `isl off` also appears at both
+//! hop bounds; the bound is inert without ISLs and those duplicate cells
+//! cost pennies at smoke scale — the assertions read the `1`-hop copies.)
+//!
+//! The run asserts the headline results — single-hop relaying beats both
+//! paper baselines, and multi-hop routing *strictly* beats single-hop —
+//! so CI fails if either path ever rots.
 
 use leo_infer::config::FleetScenario;
 use leo_infer::exp::{self, Axes, CellResult, SweepSpec};
@@ -60,16 +68,21 @@ fn spec(smoke: bool) -> SweepSpec {
         axes: Axes {
             solver: vec!["ars".to_string(), "ilpb".to_string()],
             isl: vec![IslMode::Off, IslMode::Grid],
+            route: vec![1, 4],
             ..Axes::default()
         },
     }
 }
 
-/// The cell for a (solver, isl) coordinate.
-fn pick<'a>(cells: &'a [CellResult], solver: &str, isl: IslMode) -> &'a CellResult {
+/// The cell for a (solver, isl, max-hops) coordinate.
+fn pick<'a>(cells: &'a [CellResult], solver: &str, isl: IslMode, hops: usize) -> &'a CellResult {
     cells
         .iter()
-        .find(|c| c.cell.solver == solver && c.cell.scenario.isl == isl)
+        .find(|c| {
+            c.cell.solver == solver
+                && c.cell.scenario.isl == isl
+                && c.cell.scenario.isl_max_hops == hops
+        })
         .expect("configuration in grid")
 }
 
@@ -81,7 +94,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "relay study{}: Walker {}/{}/{} @ {} km, {:.1}-{:.1} GB captures over {} h,\n\
          one {:.0}-min pass per satellite every {:.0} h (staggered 1 h apart)\n\
-         grid: {} cells over solver x isl, common random numbers per replication\n",
+         grid: {} cells over solver x isl x max-hops, common random numbers per replication\n",
         if smoke { " (smoke)" } else { "" },
         scen.sats,
         scen.planes,
@@ -98,52 +111,76 @@ fn main() -> anyhow::Result<()> {
     let result = exp::run_sweep(&spec, exp::default_threads())?;
 
     println!(
-        "{:<16} {:>9} {:>11} {:>13} {:>11} {:>10} {:>7} {:>10}",
+        "{:<20} {:>9} {:>11} {:>13} {:>11} {:>10} {:>7} {:>9} {:>10}",
         "configuration", "completed", "unfinished", "mean lat(s)", "p50 lat(s)", "p95 lat(s)",
-        "relays", "isl(GB)"
+        "relays", "reroutes", "isl(GB)"
     );
     for c in &result.cells {
         println!(
-            "{:<16} {:>9} {:>11} {:>13.0} {:>11.0} {:>10.0} {:>7} {:>10.2}",
-            format!("{} · isl {}", c.cell.solver, c.cell.scenario.isl.as_str()),
+            "{:<20} {:>9} {:>11} {:>13.0} {:>11.0} {:>10.0} {:>7} {:>9} {:>10.2}",
+            format!(
+                "{} · isl {} · ≤{}h",
+                c.cell.solver,
+                c.cell.scenario.isl.as_str(),
+                c.cell.scenario.isl_max_hops
+            ),
             c.completed,
             c.unfinished,
             c.mean_latency_s(),
             c.p50_latency_s(),
             c.p95_latency_s(),
             c.relays,
+            c.route_recomputes,
             c.relayed_gb
         );
     }
     println!("\nby isl mode:");
     print!("{}", exp::comparison_table(&result, "isl")?);
+    println!("by max hops:");
+    print!("{}", exp::comparison_table(&result, "route")?);
 
-    let ars = pick(&result.cells, "ars", IslMode::Off);
-    let bent = pick(&result.cells, "ilpb", IslMode::Off);
-    let relay = pick(&result.cells, "ilpb", IslMode::Grid);
+    let ars = pick(&result.cells, "ars", IslMode::Off, 1);
+    let bent = pick(&result.cells, "ilpb", IslMode::Off, 1);
+    let single = pick(&result.cells, "ilpb", IslMode::Grid, 1);
+    let multi = pick(&result.cells, "ilpb", IslMode::Grid, 4);
     println!(
-        "\nrelay vs bent pipe: {:.0}% of the mean latency; vs all-on-satellite: {:.0}%",
-        100.0 * relay.mean_latency_s() / bent.mean_latency_s(),
-        100.0 * relay.mean_latency_s() / ars.mean_latency_s()
+        "\nsingle-hop vs bent pipe: {:.0}% of the mean latency; \
+         multi-hop vs single-hop: {:.0}%",
+        100.0 * single.mean_latency_s() / bent.mean_latency_s(),
+        100.0 * multi.mean_latency_s() / single.mean_latency_s()
     );
 
-    // the acceptance bar: relays must beat BOTH baselines on mean latency
+    // the acceptance bar, part 1 (PR 3): single-hop relaying must beat
+    // BOTH paper baselines on mean latency
     anyhow::ensure!(
-        relay.completed > 0 && relay.relays > 0,
+        single.completed > 0 && single.relays > 0,
         "the contact-starved scenario must actually exercise relays"
     );
     anyhow::ensure!(
-        relay.mean_latency_s() < bent.mean_latency_s(),
-        "relay ({:.0} s) must beat the bent pipe ({:.0} s)",
-        relay.mean_latency_s(),
+        single.mean_latency_s() < bent.mean_latency_s(),
+        "single-hop relay ({:.0} s) must beat the bent pipe ({:.0} s)",
+        single.mean_latency_s(),
         bent.mean_latency_s()
     );
     anyhow::ensure!(
-        relay.mean_latency_s() < ars.mean_latency_s(),
-        "relay ({:.0} s) must beat all-on-satellite ({:.0} s)",
-        relay.mean_latency_s(),
+        single.mean_latency_s() < ars.mean_latency_s(),
+        "single-hop relay ({:.0} s) must beat all-on-satellite ({:.0} s)",
+        single.mean_latency_s(),
         ars.mean_latency_s()
     );
-    println!("\nOK: ISL relaying dominates both bent-pipe and all-on-satellite baselines.");
+    // part 2 (this PR): multi-hop contact-graph routing must *strictly*
+    // beat the single-hop relay in the sparse-ground-station fleet — only
+    // 3 of the 7 other satellites are one hop away, so the chain reaches
+    // passes the single hop cannot
+    anyhow::ensure!(
+        multi.mean_latency_s() < single.mean_latency_s(),
+        "multi-hop ({:.0} s) must strictly beat single-hop ({:.0} s)",
+        multi.mean_latency_s(),
+        single.mean_latency_s()
+    );
+    println!(
+        "\nOK: relays dominate both paper baselines, and multi-hop routing \
+         strictly beats single-hop."
+    );
     Ok(())
 }

@@ -33,6 +33,7 @@ use crate::util::units::{BitsPerSec, Bytes, Joules, Seconds, Watts};
 /// A fully specified scenario (all paper §V-A parameters).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Scenario {
+    /// Preset or file-derived scenario label.
     pub name: String,
     /// Request data size `D`, GB.
     pub data_gb: f64,
@@ -127,22 +128,26 @@ impl Scenario {
         self
     }
 
+    /// Override the request size `D` (GB).
     pub fn with_data_gb(mut self, gb: f64) -> Scenario {
         self.data_gb = gb;
         self
     }
 
+    /// Override the satellite-ground rate `R_i` (Mbps).
     pub fn with_rate_mbps(mut self, mbps: f64) -> Scenario {
         self.rate_mbps = mbps;
         self
     }
 
+    /// Override the objective weights (energy `μ`, latency `λ`).
     pub fn with_weights(mut self, mu: f64, lambda: f64) -> Scenario {
         self.mu = mu;
         self.lambda = lambda;
         self
     }
 
+    /// Override the subtask count `K` for sampled profiles.
     pub fn with_depth(mut self, k: usize) -> Scenario {
         self.depth = k;
         self
@@ -175,6 +180,7 @@ impl Scenario {
 
     // ------------------------------------------------------------- JSON io
 
+    /// Serialize to a JSON object (every field, flat).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::str(self.name.clone())),
@@ -198,6 +204,8 @@ impl Scenario {
         ])
     }
 
+    /// Read from a JSON object; absent fields take the
+    /// [`Scenario::tiansuan`] defaults.
     pub fn from_json(v: &Json) -> anyhow::Result<Scenario> {
         let d = Scenario::tiansuan();
         Ok(Scenario {
@@ -222,11 +230,13 @@ impl Scenario {
         })
     }
 
+    /// Write the scenario to `path` as pretty JSON.
     pub fn save(&self, path: &str) -> anyhow::Result<()> {
         std::fs::write(path, self.to_json().to_string_pretty())?;
         Ok(())
     }
 
+    /// Load a scenario from a JSON file.
     pub fn load(path: &str) -> anyhow::Result<Scenario> {
         let text = std::fs::read_to_string(path)?;
         Scenario::from_json(&Json::parse(&text)?)
@@ -247,6 +257,7 @@ pub enum ContactSource {
 }
 
 impl ContactSource {
+    /// The config-file / CLI name of this source.
     pub fn as_str(self) -> &'static str {
         match self {
             ContactSource::Periodic => "periodic",
@@ -254,6 +265,7 @@ impl ContactSource {
         }
     }
 
+    /// Parse a config-file / CLI name (`periodic | orbit`).
     pub fn from_name(name: &str) -> anyhow::Result<ContactSource> {
         match name {
             "periodic" => Ok(ContactSource::Periodic),
@@ -266,19 +278,29 @@ impl ContactSource {
 /// A fully specified constellation scenario for the fleet DES.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FleetScenario {
+    /// Scenario label (also names sweep exports).
     pub name: String,
     /// Link/compute/power parameters shared by every satellite.
     pub base: Scenario,
     // --- Walker delta pattern i:T/P/F ---
+    /// Total satellites `T`.
     pub sats: usize,
+    /// Orbital planes `P` (must divide `T`).
     pub planes: usize,
+    /// Walker phasing factor `F` (< `P`).
     pub phasing: usize,
+    /// Circular-orbit altitude, km.
     pub altitude_km: f64,
+    /// Orbit inclination, degrees.
     pub inclination_deg: f64,
     // --- ground station ---
+    /// Ground-station label.
     pub gs_name: String,
+    /// Ground-station latitude, degrees.
     pub gs_lat_deg: f64,
+    /// Ground-station longitude, degrees.
     pub gs_lon_deg: f64,
+    /// Minimum usable elevation, degrees.
     pub gs_min_elevation_deg: f64,
     /// Contact-window source for the transmitters.
     pub contact_source: ContactSource,
@@ -287,23 +309,35 @@ pub struct FleetScenario {
     /// ISL rate at the reference range, Mbps (per-link rates scale with
     /// epoch separation; see [`crate::link::isl::isl_rate`]).
     pub isl_rate_mbps: f64,
+    /// Hop bound for multi-hop ISL relay routing
+    /// ([`crate::link::route`]): `0` = bent pipe even with ISLs wired,
+    /// `1` = single-hop relay (the PR 3 behavior), larger values let
+    /// boundary tensors chain toward the earliest usable ground contact.
+    pub isl_max_hops: usize,
     /// Routing policy name: `round-robin | least-loaded | contact-aware |
     /// energy-aware | relay-aware` (see [`FleetScenario::routing_policy`]).
     pub routing: String,
     /// Battery floor for `energy-aware` routing.
     pub min_soc: f64,
     // --- per-satellite energy subsystem (0 capacity = unconstrained) ---
+    /// Battery capacity, J (`0` = the paper's unconstrained setting).
     pub battery_capacity_j: f64,
+    /// Depth-of-discharge floor in `[0, 1)`.
     pub battery_dod_floor: f64,
+    /// Solar panel area, m².
     pub panel_area_m2: f64,
+    /// Solar cell efficiency in `(0, 1]`.
     pub panel_efficiency: f64,
+    /// Panel pointing factor in `(0, 1]` (cosine losses).
     pub panel_pointing: f64,
     // --- workload ---
     /// Mean capture spacing, seconds (fleet-wide Poisson rate = 1/this).
     pub interarrival_s: f64,
     /// Log-uniform request size range, GB.
     pub data_gb_lo: f64,
+    /// Log-uniform request size upper bound, GB.
     pub data_gb_hi: f64,
+    /// Simulated horizon, hours.
     pub horizon_hours: f64,
 }
 
@@ -327,6 +361,7 @@ impl FleetScenario {
             contact_source: ContactSource::Periodic,
             isl: IslMode::Off,
             isl_rate_mbps: 200.0,
+            isl_max_hops: 4,
             routing: "least-loaded".to_string(),
             min_soc: 0.2,
             battery_capacity_j: 0.0,
@@ -341,6 +376,7 @@ impl FleetScenario {
         }
     }
 
+    /// Resolve [`FleetScenario::routing`] to a [`RoutingPolicy`].
     pub fn routing_policy(&self) -> anyhow::Result<RoutingPolicy> {
         Ok(match self.routing.as_str() {
             "round-robin" => RoutingPolicy::RoundRobin,
@@ -357,6 +393,7 @@ impl FleetScenario {
         })
     }
 
+    /// The Walker delta pattern `i:T/P/F` this scenario describes.
     pub fn pattern(&self) -> anyhow::Result<WalkerPattern> {
         anyhow::ensure!(self.sats > 0 && self.planes > 0, "empty constellation");
         anyhow::ensure!(
@@ -375,11 +412,13 @@ impl FleetScenario {
         ))
     }
 
+    /// The ground station this scenario downlinks to.
     pub fn ground_station(&self) -> GroundStation {
         GroundStation::new(&self.gs_name, self.gs_lat_deg, self.gs_lon_deg)
             .with_elevation_mask(self.gs_min_elevation_deg)
     }
 
+    /// The simulated horizon in seconds.
     pub fn horizon(&self) -> Seconds {
         Seconds::from_hours(self.horizon_hours)
     }
@@ -457,6 +496,7 @@ impl FleetScenario {
             sats,
             routing: self.routing_policy()?,
             isl,
+            isl_max_hops: self.isl_max_hops,
             telemetry: TelemetryMode::Live,
             horizon: self.horizon(),
         })
@@ -464,6 +504,7 @@ impl FleetScenario {
 
     // ------------------------------------------------------------- file io
 
+    /// Serialize to a JSON object (`base` nested, everything else flat).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::str(self.name.clone())),
@@ -480,6 +521,7 @@ impl FleetScenario {
             ("contact_source", Json::str(self.contact_source.as_str())),
             ("isl", Json::str(self.isl.as_str())),
             ("isl_rate_mbps", Json::num(self.isl_rate_mbps)),
+            ("isl_max_hops", Json::num(self.isl_max_hops as f64)),
             ("routing", Json::str(self.routing.clone())),
             ("min_soc", Json::num(self.min_soc)),
             ("battery_capacity_j", Json::num(self.battery_capacity_j)),
@@ -494,6 +536,9 @@ impl FleetScenario {
         ])
     }
 
+    /// Read from a JSON object; absent fields take the
+    /// [`FleetScenario::walker_631`] defaults. Fails fast on degenerate
+    /// workload parameters.
     pub fn from_json(v: &Json) -> anyhow::Result<FleetScenario> {
         let d = FleetScenario::walker_631();
         let base = match v.opt("base") {
@@ -517,6 +562,7 @@ impl FleetScenario {
             )?,
             isl: IslMode::from_name(v.str_or("isl", d.isl.as_str())?)?,
             isl_rate_mbps: v.f64_or("isl_rate_mbps", d.isl_rate_mbps)?,
+            isl_max_hops: v.usize_or("isl_max_hops", d.isl_max_hops)?,
             routing: v.str_or("routing", &d.routing)?.to_string(),
             min_soc: v.f64_or("min_soc", d.min_soc)?,
             battery_capacity_j: v.f64_or("battery_capacity_j", d.battery_capacity_j)?,
@@ -535,6 +581,7 @@ impl FleetScenario {
         Ok(f)
     }
 
+    /// Write the scenario to `path` as pretty JSON.
     pub fn save(&self, path: &str) -> anyhow::Result<()> {
         std::fs::write(path, self.to_json().to_string_pretty())?;
         Ok(())
@@ -618,6 +665,7 @@ mod tests {
         f.battery_capacity_j = 1.0e5;
         f.isl = IslMode::Grid;
         f.isl_rate_mbps = 350.0;
+        f.isl_max_hops = 2;
         f.base = Scenario::transmission_dominant();
         let back = FleetScenario::from_json(&f.to_json()).unwrap();
         assert_eq!(f, back);
@@ -633,6 +681,7 @@ mod tests {
         f.isl = IslMode::Ring;
         f.routing = "relay-aware".to_string();
         let cfg = f.sim_config(ModelProfile::sampled(8, &mut rng)).unwrap();
+        assert_eq!(cfg.isl_max_hops, 4, "default hop bound carries through");
         let isl = cfg.isl.expect("ring topology built");
         assert_eq!(isl.len(), 6);
         // 6/3 Walker: 2 per plane ⇒ exactly one in-plane neighbor each

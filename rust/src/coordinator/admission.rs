@@ -14,13 +14,33 @@ use crate::util::units::{Bytes, Seconds};
 /// Why a request was refused.
 #[derive(Debug, Clone, PartialEq)]
 pub enum AdmissionVerdict {
+    /// The request may proceed.
     Admit,
-    QueueFull { depth: usize, cap: usize },
-    BatteryLow { soc: f64, floor: f64 },
-    DeadlineInfeasible { needed: Bytes, movable: Bytes },
+    /// The target satellite's queue is at capacity.
+    QueueFull {
+        /// Current queue depth.
+        depth: usize,
+        /// The configured cap.
+        cap: usize,
+    },
+    /// The target satellite's battery is below the operating floor.
+    BatteryLow {
+        /// Current state of charge.
+        soc: f64,
+        /// The configured floor.
+        floor: f64,
+    },
+    /// Even the best-case payload cannot move before the deadline.
+    DeadlineInfeasible {
+        /// Bytes the deadline requires moving.
+        needed: Bytes,
+        /// Bytes the link can move in time.
+        movable: Bytes,
+    },
 }
 
 impl AdmissionVerdict {
+    /// True for [`AdmissionVerdict::Admit`].
     pub fn admitted(&self) -> bool {
         matches!(self, AdmissionVerdict::Admit)
     }
@@ -54,6 +74,7 @@ impl Default for AdmissionController {
 }
 
 impl AdmissionController {
+    /// Apply the three admission gates to `req` against `sat`'s state.
     pub fn check(
         &self,
         req: &Request,

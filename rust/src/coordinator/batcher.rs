@@ -16,7 +16,9 @@ use std::collections::BTreeMap;
 /// Batching policy knobs.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BatchPolicy {
+    /// Flush when a model's pending queue reaches this size.
     pub max_batch: usize,
+    /// Flush when a model's oldest pending request has waited this long.
     pub max_wait: Seconds,
     /// Flush class-1 (latency-critical) requests immediately.
     pub expedite_critical: bool,
@@ -35,17 +37,21 @@ impl Default for BatchPolicy {
 /// A flushed batch, ready for the scheduler.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Batch {
+    /// Model id shared by every request in the batch.
     pub model: usize,
+    /// The batched requests, in arrival order.
     pub requests: Vec<Request>,
     /// Time the batch was flushed.
     pub formed_at: Seconds,
 }
 
 impl Batch {
+    /// Number of requests in the batch.
     pub fn len(&self) -> usize {
         self.requests.len()
     }
 
+    /// True for a request-less batch (never produced by the batcher).
     pub fn is_empty(&self) -> bool {
         self.requests.is_empty()
     }
@@ -60,6 +66,7 @@ pub struct DynamicBatcher {
 }
 
 impl DynamicBatcher {
+    /// A batcher with empty queues. Panics on a zero `max_batch`.
     pub fn new(policy: BatchPolicy) -> Self {
         assert!(policy.max_batch >= 1);
         DynamicBatcher {
@@ -69,6 +76,7 @@ impl DynamicBatcher {
         }
     }
 
+    /// The policy this batcher was built with.
     pub fn policy(&self) -> BatchPolicy {
         self.policy
     }

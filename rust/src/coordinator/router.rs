@@ -37,6 +37,7 @@ pub struct Router {
 }
 
 impl Router {
+    /// A router applying `policy` (round-robin state starts at id 0).
     pub fn new(policy: RoutingPolicy) -> Self {
         Router {
             policy,
@@ -44,6 +45,7 @@ impl Router {
         }
     }
 
+    /// The policy this router applies.
     pub fn policy(&self) -> RoutingPolicy {
         self.policy
     }

@@ -17,6 +17,7 @@ use std::ops::Range;
 /// A scheduled batch, ready for execution.
 #[derive(Debug, Clone)]
 pub struct ExecutionPlan {
+    /// The batch being executed.
     pub batch: Batch,
     /// Chosen split (subtasks on the satellite).
     pub split: usize,
@@ -67,6 +68,8 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
+    /// A scheduler solving over `template` (per-batch data size and
+    /// model profile swapped in) via `engine`.
     pub fn new(
         template: InstanceBuilder,
         profiles: Vec<ModelProfile>,
@@ -87,6 +90,7 @@ impl Scheduler {
         self
     }
 
+    /// Name of the wrapped solver policy.
     pub fn policy_name(&self) -> &'static str {
         self.engine.policy_name()
     }
@@ -96,6 +100,7 @@ impl Scheduler {
         &self.engine
     }
 
+    /// The model profiles, indexed by model id.
     pub fn profiles(&self) -> &[ModelProfile] {
         &self.profiles
     }

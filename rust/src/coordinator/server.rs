@@ -56,8 +56,11 @@ pub struct ExecutionReport {
 /// A completed batch notification.
 #[derive(Debug)]
 pub struct Completion {
+    /// Satellite that executed the on-board stages.
     pub satellite: usize,
+    /// The plan that was executed.
     pub plan: ExecutionPlan,
+    /// What the executor measured.
     pub report: ExecutionReport,
 }
 
@@ -74,8 +77,11 @@ pub enum SubmitResult {
 
 /// Server configuration.
 pub struct ServerConfig {
+    /// How arrivals are assigned to satellites.
     pub routing: RoutingPolicy,
+    /// Dynamic batching knobs.
     pub batching: BatchPolicy,
+    /// Admission-control gates.
     pub admission: AdmissionController,
     /// Downlink model used for admission feasibility checks.
     pub downlink: DownlinkModel,
@@ -302,6 +308,7 @@ pub struct MockExecutor {
 }
 
 impl MockExecutor {
+    /// An executor that returns modelled costs without sleeping.
     pub fn instant() -> Self {
         MockExecutor { time_scale: 0.0 }
     }

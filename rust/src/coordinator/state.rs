@@ -6,6 +6,7 @@ use std::collections::BTreeMap;
 /// Live view of one satellite.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SatelliteInfo {
+    /// Satellite display name.
     pub name: String,
     /// Outstanding requests queued for on-board processing.
     pub queue_depth: usize,
@@ -20,17 +21,21 @@ pub struct SatelliteInfo {
     /// Seconds of usable link remaining in the current window (0 when out
     /// of contact).
     pub contact_remaining: Seconds,
-    /// Earliest downlink opportunity via an ISL neighbor: the
-    /// soonest-passing neighbor's next-contact wait less the one-way ISL
-    /// propagation (the tensor can leave that late and still make the
-    /// pass). Infinite when the fleet has no inter-satellite links.
+    /// Earliest downlink opportunity over the ISL network: the
+    /// soonest-passing *reachable* satellite's next-contact wait less the
+    /// relay path's summed one-way propagation (the tensor can leave that
+    /// late and still make the pass). Single-hop fleets see the best
+    /// neighbor; multi-hop fleets ([`crate::link::route::advertise`]) the
+    /// best path under the hop bound. Infinite when the fleet has no
+    /// inter-satellite links.
     pub neighbor_contact_in: Seconds,
-    /// ISL rate toward that same neighbor (zero when the satellite has
-    /// no links).
+    /// Effective ISL rate along that same relay path (the serialization
+    /// bottleneck; zero when the satellite has no links).
     pub isl_rate: BitsPerSec,
 }
 
 impl SatelliteInfo {
+    /// A fresh, unloaded satellite view (full battery, in contact).
     pub fn idle(name: &str) -> Self {
         SatelliteInfo {
             name: name.to_string(),
@@ -45,6 +50,7 @@ impl SatelliteInfo {
         }
     }
 
+    /// True while a ground-contact window is open.
     pub fn in_contact(&self) -> bool {
         self.next_contact_in.value() <= 0.0 && self.contact_remaining.value() > 0.0
     }
@@ -63,30 +69,37 @@ pub struct ClusterState {
 }
 
 impl ClusterState {
+    /// An empty registry.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Insert (or replace) satellite `id`'s view.
     pub fn register(&mut self, id: usize, info: SatelliteInfo) {
         self.sats.insert(id, info);
     }
 
+    /// Satellite `id`'s view, if registered.
     pub fn get(&self, id: usize) -> Option<&SatelliteInfo> {
         self.sats.get(&id)
     }
 
+    /// Mutable access to satellite `id`'s view.
     pub fn get_mut(&mut self, id: usize) -> Option<&mut SatelliteInfo> {
         self.sats.get_mut(&id)
     }
 
+    /// All registered ids, ascending.
     pub fn ids(&self) -> Vec<usize> {
         self.sats.keys().copied().collect()
     }
 
+    /// Number of registered satellites.
     pub fn len(&self) -> usize {
         self.sats.len()
     }
 
+    /// True when no satellite is registered.
     pub fn is_empty(&self) -> bool {
         self.sats.is_empty()
     }

@@ -9,23 +9,33 @@ pub const ELEM_BYTES: usize = 4;
 /// subtask `M_k`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Network {
+    /// Model name (zoo key).
     pub name: String,
+    /// Input activation shape.
     pub input: Shape,
+    /// The layers, in execution order.
     pub layers: Vec<Layer>,
 }
 
 /// Shape-checked trace of one layer in a network.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LayerTrace {
+    /// Position in the network.
     pub index: usize,
+    /// Human-readable layer tag.
     pub tag: String,
+    /// Activation shape entering the layer.
     pub in_shape: Shape,
+    /// Activation shape leaving the layer.
     pub out_shape: Shape,
+    /// Forward-pass floating-point operations.
     pub flops: u64,
+    /// Trainable parameter count.
     pub params: usize,
 }
 
 impl Network {
+    /// A named sequential network (panics on an empty layer list).
     pub fn new(name: &str, input: Shape, layers: Vec<Layer>) -> Self {
         assert!(!layers.is_empty(), "network must have at least one layer");
         Network {

@@ -75,16 +75,32 @@ pub enum Layer {
 /// (`thiserror` is unavailable offline, so `Display`/`Error` are manual.)
 #[derive(Debug, PartialEq)]
 pub enum ShapeError {
-    NeedsChw { layer: String },
-    NeedsFlat { layer: String },
-    KernelTooLarge {
+    /// A spatial layer received a flat input.
+    NeedsChw {
+        /// The offending layer's tag.
         layer: String,
+    },
+    /// A flat layer received a spatial (CHW) input.
+    NeedsFlat {
+        /// The offending layer's tag.
+        layer: String,
+    },
+    /// A convolution kernel exceeds its padded input extent.
+    KernelTooLarge {
+        /// The offending layer's tag.
+        layer: String,
+        /// Kernel size.
         kernel: usize,
+        /// Padded input extent.
         padded: usize,
     },
+    /// A residual block's inner chain changed the activation shape.
     ResidualMismatch {
+        /// The residual block's name.
         name: String,
+        /// Shape the inner chain produced.
         got: Shape,
+        /// Shape the skip path requires.
         want: Shape,
     },
 }

@@ -27,7 +27,9 @@ pub struct LayerProfile {
 /// The solver-facing profile of one model.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelProfile {
+    /// Model name (zoo key or synthetic label).
     pub name: String,
+    /// Per-subtask profiles, in execution order.
     pub layers: Vec<LayerProfile>,
 }
 

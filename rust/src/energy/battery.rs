@@ -7,6 +7,7 @@
 
 use crate::util::units::{Joules, Seconds, Watts};
 
+/// A finite battery with a depth-of-discharge floor, starting full.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Battery {
     /// Usable capacity, J.
@@ -28,6 +29,7 @@ pub enum Discharge {
 }
 
 impl Battery {
+    /// A full battery of `capacity` with the given DoD floor in `[0, 1)`.
     pub fn new(capacity: Joules, dod_floor: f64) -> Self {
         assert!(capacity.value() > 0.0);
         assert!((0.0..1.0).contains(&dod_floor));
@@ -43,10 +45,12 @@ impl Battery {
         Battery::new(Joules(80.0 * 3600.0), 0.2)
     }
 
+    /// Usable capacity.
     pub fn capacity(&self) -> Joules {
         self.capacity
     }
 
+    /// Currently stored energy.
     pub fn charge(&self) -> Joules {
         self.charge
     }

@@ -10,11 +10,14 @@ use std::collections::BTreeMap;
 /// Energy attributed to one task.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct EnergyUse {
+    /// Energy drawn by on-board processing (Eq. 6).
     pub processing: Joules,
+    /// Energy drawn by the antenna (Eq. 7).
     pub transmission: Joules,
 }
 
 impl EnergyUse {
+    /// Processing plus transmission.
     pub fn total(&self) -> Joules {
         self.processing + self.transmission
     }
@@ -27,22 +30,27 @@ pub struct EnergyLedger {
 }
 
 impl EnergyLedger {
+    /// An empty ledger.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Attribute processing energy to `task`.
     pub fn add_processing(&mut self, task: u64, e: Joules) {
         self.entries.entry(task).or_default().processing += e;
     }
 
+    /// Attribute transmission energy to `task`.
     pub fn add_transmission(&mut self, task: u64, e: Joules) {
         self.entries.entry(task).or_default().transmission += e;
     }
 
+    /// The energy attributed to `task` (zero if unseen).
     pub fn get(&self, task: u64) -> EnergyUse {
         self.entries.get(&task).copied().unwrap_or_default()
     }
 
+    /// Number of distinct tasks with attributed energy.
     pub fn task_count(&self) -> usize {
         self.entries.len()
     }

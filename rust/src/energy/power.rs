@@ -34,6 +34,7 @@ pub struct GpuPowerModel {
 }
 
 impl GpuPowerModel {
+    /// A power model from `ζ` and the Eq. 6 power constants.
     pub fn new(zeta_bytes_per_s: f64, p_max: Watts, p_idle: Watts, p_leak: Watts) -> Self {
         assert!(zeta_bytes_per_s > 0.0, "ζ must be positive");
         assert!(
@@ -87,6 +88,7 @@ pub struct TransmitPowerModel {
 }
 
 impl TransmitPowerModel {
+    /// A transmit model drawing `p_off` while the antenna is keyed.
     pub fn new(p_off: Watts) -> Self {
         assert!(p_off.value() >= 0.0);
         TransmitPowerModel { p_off }

@@ -12,6 +12,8 @@ use crate::util::units::{Joules, Seconds, Watts};
 /// Solar flux at 1 AU, W/m².
 pub const SOLAR_CONSTANT_W_M2: f64 = 1361.0;
 
+/// A solar panel model: area × efficiency × pointing against the solar
+/// constant.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SolarPanel {
     /// Panel area, m².
@@ -24,6 +26,7 @@ pub struct SolarPanel {
 }
 
 impl SolarPanel {
+    /// A panel from its area, cell efficiency, and pointing factor.
     pub fn new(area_m2: f64, efficiency: f64, pointing_factor: f64) -> Self {
         assert!(area_m2 > 0.0);
         assert!((0.0..=1.0).contains(&efficiency));

@@ -15,13 +15,14 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 /// Exported per-cell columns, after the axis columns.
-const METRIC_COLUMNS: [&str; 18] = [
+const METRIC_COLUMNS: [&str; 19] = [
     "submitted",
     "completed",
     "rejected_admission",
     "rejected_transmit",
     "unfinished",
     "relays",
+    "route_recomputes",
     "mean_latency_s",
     "p50_latency_s",
     "p95_latency_s",
@@ -44,6 +45,7 @@ fn metric_values(c: &CellResult) -> Vec<String> {
         c.rejected_transmit.to_string(),
         c.unfinished.to_string(),
         c.relays.to_string(),
+        c.route_recomputes.to_string(),
         format_f64(c.mean_latency_s()),
         format_f64(c.p50_latency_s()),
         format_f64(c.p95_latency_s()),
@@ -109,13 +111,14 @@ pub fn to_json(result: &SweepResult) -> Json {
         for axis in AXIS_NAMES {
             pairs.push((axis, Json::str(c.cell.axis_value(axis).expect("built-in axis"))));
         }
-        let nums: [(&str, f64); 18] = [
+        let nums: [(&str, f64); 19] = [
             ("submitted", c.submitted as f64),
             ("completed", c.completed as f64),
             ("rejected_admission", c.rejected_admission as f64),
             ("rejected_transmit", c.rejected_transmit as f64),
             ("unfinished", c.unfinished as f64),
             ("relays", c.relays as f64),
+            ("route_recomputes", c.route_recomputes as f64),
             ("mean_latency_s", c.mean_latency_s()),
             ("p50_latency_s", c.p50_latency_s()),
             ("p95_latency_s", c.p95_latency_s()),
@@ -145,15 +148,23 @@ pub fn to_json(result: &SweepResult) -> Json {
 pub struct AxisGroup {
     /// The shared axis value (e.g. `"ilpb"` when grouping by solver).
     pub value: String,
+    /// Number of cells pooled into this group.
     pub cells: usize,
+    /// Requests submitted across the group.
     pub submitted: u64,
+    /// Requests completed across the group.
     pub completed: u64,
+    /// Rejections (both phases) across the group.
     pub rejected: u64,
+    /// Horizon-cut requests across the group.
     pub unfinished: u64,
+    /// ISL handoffs across the group.
     pub relays: u64,
     /// Pooled request latencies across every cell in the group.
     pub latency: StreamingSummary,
+    /// Total satellite-side energy across the group, J.
     pub total_energy_j: f64,
+    /// Total downlinked bytes across the group, GB.
     pub downlinked_gb: f64,
 }
 

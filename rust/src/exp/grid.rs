@@ -3,8 +3,8 @@
 //!
 //! Every axis left empty collapses to the base scenario's value, so a
 //! spec names only what it varies. Expansion order is fixed (solver →
-//! routing → isl → walker → interarrival → rate → data size → battery →
-//! replication, replication innermost), which makes `Cell::index` a
+//! routing → isl → route → walker → interarrival → rate → data size →
+//! battery → replication, replication innermost), which makes `Cell::index` a
 //! stable coordinate: the same spec always yields the same cells in the
 //! same order, and [`SweepSpec::cell`] rebuilds any single cell from its
 //! index without expanding the rest of the grid.
@@ -34,12 +34,16 @@ use crate::util::rng::SplitMix64;
 /// A Walker delta-pattern coordinate `T/P/F` for the constellation axis.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct WalkerAxis {
+    /// Total satellites `T`.
     pub sats: usize,
+    /// Orbital planes `P`.
     pub planes: usize,
+    /// Phasing factor `F`.
     pub phasing: usize,
 }
 
 impl WalkerAxis {
+    /// Render as the `"T/P/F"` spec string.
     pub fn as_spec(&self) -> String {
         format!("{}/{}/{}", self.sats, self.planes, self.phasing)
     }
@@ -75,6 +79,9 @@ pub struct Axes {
     pub routing: Vec<String>,
     /// ISL pattern (`off | ring | grid`).
     pub isl: Vec<IslMode>,
+    /// ISL hop bound ([`FleetScenario::isl_max_hops`]): `0` = bent pipe,
+    /// `1` = single-hop relay, larger = multi-hop contact-graph routing.
+    pub route: Vec<usize>,
     /// Constellation shape `T/P/F`.
     pub walker: Vec<WalkerAxis>,
     /// Mean capture spacing, seconds (arrival rate = 1/this).
@@ -92,10 +99,11 @@ pub struct Axes {
 /// Axis names, in expansion order (replication last/innermost). These are
 /// the group-by keys [`super::aggregate`] accepts and the per-cell columns
 /// the exports carry.
-pub const AXIS_NAMES: [&str; 9] = [
+pub const AXIS_NAMES: [&str; 10] = [
     "solver",
     "routing",
     "isl",
+    "route",
     "walker",
     "interarrival_s",
     "rate_mbps",
@@ -107,6 +115,7 @@ pub const AXIS_NAMES: [&str; 9] = [
 /// A declarative experiment grid over the fleet DES.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepSpec {
+    /// Sweep name (labels exports and progress output).
     pub name: String,
     /// Base seed every cell seed derives from.
     pub seed: u64,
@@ -114,6 +123,7 @@ pub struct SweepSpec {
     pub replications: usize,
     /// The scenario every cell starts from.
     pub base: FleetScenario,
+    /// The swept axes (empty axes collapse to the base's values).
     pub axes: Axes,
 }
 
@@ -140,6 +150,7 @@ impl Cell {
             "solver" => self.solver.clone(),
             "routing" => self.scenario.routing.clone(),
             "isl" => self.scenario.isl.as_str().to_string(),
+            "route" => self.scenario.isl_max_hops.to_string(),
             "walker" => format!(
                 "{}/{}/{}",
                 self.scenario.sats, self.scenario.planes, self.scenario.phasing
@@ -177,6 +188,7 @@ struct Resolved {
     solver: Vec<String>,
     routing: Vec<String>,
     isl: Vec<IslMode>,
+    route: Vec<usize>,
     walker: Vec<WalkerAxis>,
     interarrival_s: Vec<f64>,
     rate_mbps: Vec<f64>,
@@ -214,6 +226,11 @@ impl SweepSpec {
             } else {
                 self.axes.isl.clone()
             },
+            route: if self.axes.route.is_empty() {
+                vec![self.base.isl_max_hops]
+            } else {
+                self.axes.route.clone()
+            },
             walker: if self.axes.walker.is_empty() {
                 vec![WalkerAxis {
                     sats: self.base.sats,
@@ -236,6 +253,7 @@ impl SweepSpec {
         r.solver.len()
             * r.routing.len()
             * r.isl.len()
+            * r.route.len()
             * r.walker.len()
             * r.interarrival_s.len()
             * r.rate_mbps.len()
@@ -244,6 +262,7 @@ impl SweepSpec {
             * self.replications.max(1)
     }
 
+    /// True for a zero-cell grid (never happens for valid specs).
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -322,6 +341,8 @@ impl SweepSpec {
         rest /= r.interarrival_s.len();
         let walker = r.walker[rest % r.walker.len()];
         rest /= r.walker.len();
+        let route = r.route[rest % r.route.len()];
+        rest /= r.route.len();
         let isl = r.isl[rest % r.isl.len()];
         rest /= r.isl.len();
         let routing = &r.routing[rest % r.routing.len()];
@@ -332,6 +353,7 @@ impl SweepSpec {
         scen.name = format!("{}#{index}", self.name);
         scen.routing = routing.clone();
         scen.isl = isl;
+        scen.isl_max_hops = route;
         scen.sats = walker.sats;
         scen.planes = walker.planes;
         scen.phasing = walker.phasing;
@@ -365,6 +387,7 @@ impl SweepSpec {
 
     // ------------------------------------------------------------- file io
 
+    /// Serialize the spec (base scenario nested, only non-empty axes).
     pub fn to_json(&self) -> Json {
         let strs = |xs: &[String]| Json::arr(xs.iter().map(|s| Json::str(s.as_str())));
         let nums = |xs: &[f64]| Json::arr(xs.iter().map(|&x| Json::num(x)));
@@ -379,6 +402,12 @@ impl SweepSpec {
             axes.push((
                 "isl",
                 Json::arr(self.axes.isl.iter().map(|m| Json::str(m.as_str()))),
+            ));
+        }
+        if !self.axes.route.is_empty() {
+            axes.push((
+                "route",
+                Json::arr(self.axes.route.iter().map(|&h| Json::num(h as f64))),
             ));
         }
         if !self.axes.walker.is_empty() {
@@ -415,6 +444,8 @@ impl SweepSpec {
         ])
     }
 
+    /// Read and validate a spec; absent fields take
+    /// [`FleetScenario::walker_631`]-based defaults.
     pub fn from_json(v: &Json) -> anyhow::Result<SweepSpec> {
         let base = match v.opt("base") {
             Some(b) => FleetScenario::from_json(b)?,
@@ -428,6 +459,7 @@ impl SweepSpec {
                     .iter()
                     .map(|s| IslMode::from_name(s))
                     .collect::<anyhow::Result<Vec<_>>>()?,
+                route: usize_list(a, "route")?,
                 walker: str_list(a, "walker")?
                     .iter()
                     .map(|s| WalkerAxis::parse(s))
@@ -456,6 +488,7 @@ impl SweepSpec {
         Ok(spec)
     }
 
+    /// Write the spec to `path` as pretty JSON.
     pub fn save(&self, path: &str) -> anyhow::Result<()> {
         std::fs::write(path, self.to_json().to_string_pretty())?;
         Ok(())
@@ -508,6 +541,21 @@ fn str_list(v: &Json, key: &str) -> anyhow::Result<Vec<String>> {
             "axis {key}: expected an array or comma-separated string, found {other}"
         ),
     }
+}
+
+/// An axis field as whole numbers (the `route` hop bounds): the numeric
+/// forms [`f64_list`] accepts, restricted to non-negative integers.
+fn usize_list(v: &Json, key: &str) -> anyhow::Result<Vec<usize>> {
+    f64_list(v, key)?
+        .into_iter()
+        .map(|x| {
+            anyhow::ensure!(
+                x >= 0.0 && x.fract() == 0.0 && x <= u32::MAX as f64,
+                "axis {key}: `{x}` is not a whole hop count"
+            );
+            Ok(x as usize)
+        })
+        .collect()
 }
 
 /// An axis field as numbers: accepts a JSON array (of numbers), a single
@@ -604,6 +652,27 @@ mod tests {
         assert_eq!(c.scenario.routing, "least-loaded");
         assert_eq!(c.scenario.sats, 6);
         assert_eq!(c.scenario.isl, IslMode::Off);
+        assert_eq!(c.scenario.isl_max_hops, 4, "base hop bound carries through");
+    }
+
+    #[test]
+    fn route_axis_sweeps_the_hop_bound() {
+        let mut spec = SweepSpec::point("hops", FleetScenario::walker_631());
+        spec.base.isl = IslMode::Grid;
+        spec.axes.route = vec![0, 1, 4];
+        assert_eq!(spec.len(), 3);
+        let cells = spec.expand().unwrap();
+        let bounds: Vec<usize> = cells.iter().map(|c| c.scenario.isl_max_hops).collect();
+        assert_eq!(bounds, vec![0, 1, 4]);
+        assert_eq!(cells[2].axis_value("route").unwrap(), "4");
+        // every cell still shares the replication seed (common random
+        // numbers across hop bounds)
+        assert!(cells.iter().all(|c| c.seed == cells[0].seed));
+        // fractional or negative hop counts are refused at parse time
+        let doc = Json::parse(r#"{"axes": {"route": [1.5]}}"#).unwrap();
+        assert!(SweepSpec::from_json(&doc).is_err());
+        let doc = Json::parse(r#"{"axes": {"route": "2,3"}}"#).unwrap();
+        assert_eq!(SweepSpec::from_json(&doc).unwrap().axes.route, vec![2, 3]);
     }
 
     #[test]
@@ -668,6 +737,7 @@ replications = 2
 [axes]
 solver = "ilpb, arg"
 isl = "off,grid"
+route = "1, 4"
 walker = "4/2/1, 8/4/1"
 interarrival_s = "900, 1800"
 rate_mbps = 55
@@ -685,11 +755,12 @@ horizon_hours = 6.0
         assert_eq!(spec.name, "toml-sweep");
         assert_eq!(spec.axes.solver, vec!["ilpb", "arg"]);
         assert_eq!(spec.axes.isl, vec![IslMode::Off, IslMode::Grid]);
+        assert_eq!(spec.axes.route, vec![1, 4]);
         assert_eq!(spec.axes.walker[1].sats, 8);
         assert_eq!(spec.axes.interarrival_s, vec![900.0, 1800.0]);
         assert_eq!(spec.axes.rate_mbps, vec![55.0]);
-        // 2 solvers × 2 isl × 2 walker × 2 interarrival × 2 reps
-        assert_eq!(spec.len(), 32);
+        // 2 solvers × 2 isl × 2 route × 2 walker × 2 interarrival × 2 reps
+        assert_eq!(spec.len(), 64);
     }
 
     #[test]

@@ -28,25 +28,43 @@ use std::sync::mpsc;
 /// be byte-identical across thread counts and runs.
 #[derive(Debug, Clone)]
 pub struct CellResult {
+    /// The grid point this result belongs to.
     pub cell: Cell,
+    /// Requests the cell's workload generated.
     pub submitted: u64,
+    /// Requests served to completion.
     pub completed: u64,
+    /// Arrival-time energy rejections.
     pub rejected_admission: u64,
+    /// Transmit-time energy rejections.
     pub rejected_transmit: u64,
+    /// Requests the horizon cut off.
     pub unfinished: u64,
+    /// ISL handoffs performed (one per hop).
     pub relays: u64,
+    /// Mid-flight route replans that changed a tensor's remaining path
+    /// ([`crate::sim::SimMetrics::route_recomputes`]).
+    pub route_recomputes: u64,
     /// Mergeable latency summary over this cell's completed requests —
     /// the single source for the cell's latency mean and percentiles
     /// (see the accessor methods).
     pub latency: StreamingSummary,
+    /// Mean satellite-side energy per completed request, J.
     pub mean_energy_j: f64,
+    /// Total satellite-side energy, J.
     pub total_energy_j: f64,
+    /// Total bytes downlinked, GB.
     pub downlinked_gb: f64,
+    /// Total bytes that crossed ISLs, GB.
     pub relayed_gb: f64,
+    /// Completions per simulated second.
     pub throughput_rps: f64,
     // engine counters (deterministic: counts, not wall time)
+    /// Full solves the engine performed.
     pub solves: u64,
+    /// Solves skipped by the decision cache.
     pub cache_hits: u64,
+    /// Decisions the live telemetry tightened away from the raw policy.
     pub tightened: u64,
 }
 
@@ -56,14 +74,17 @@ impl CellResult {
         self.latency.mean()
     }
 
+    /// Median end-to-end latency, seconds.
     pub fn p50_latency_s(&self) -> f64 {
         self.latency.p50()
     }
 
+    /// 95th-percentile end-to-end latency, seconds.
     pub fn p95_latency_s(&self) -> f64 {
         self.latency.p95()
     }
 
+    /// 99th-percentile end-to-end latency, seconds.
     pub fn p99_latency_s(&self) -> f64 {
         self.latency.p99()
     }
@@ -73,7 +94,9 @@ impl CellResult {
 /// finished first.
 #[derive(Debug, Clone)]
 pub struct SweepResult {
+    /// The executed spec's name (labels exports).
     pub spec_name: String,
+    /// One result per cell, ordered by [`Cell::index`].
     pub cells: Vec<CellResult>,
 }
 
@@ -99,6 +122,7 @@ pub fn run_cell(cell: &Cell) -> anyhow::Result<CellResult> {
         rejected_transmit: m.rejected_transmit,
         unfinished: m.unfinished,
         relays: m.relays,
+        route_recomputes: m.route_recomputes,
         latency: m.latency_summary().clone(),
         mean_energy_j: m.mean_energy().value(),
         total_energy_j: m.total_energy().value(),

@@ -20,9 +20,13 @@ const FIGURE_POLICIES: [&str; 3] = ["ilpb", "arg", "ars"];
 /// Per-algorithm aggregate at one sweep point.
 #[derive(Debug, Clone)]
 pub struct AlgoPoint {
+    /// Algorithm registry name (`ilpb | arg | ars`).
     pub name: &'static str,
+    /// Energy consumption across the seeds, J.
     pub energy_j: Summary,
+    /// Completion time across the seeds, s.
     pub time_s: Summary,
+    /// Objective value `Z` across the seeds.
     pub z: Summary,
     /// Mean chosen split (diagnostic; 0 for ARG, K for ARS).
     pub mean_split: f64,
@@ -33,6 +37,7 @@ pub struct AlgoPoint {
 pub struct SweepPoint {
     /// The sweep variable's value (GB, Mbps, or λ).
     pub x: f64,
+    /// One aggregate per compared algorithm.
     pub algos: Vec<AlgoPoint>,
 }
 

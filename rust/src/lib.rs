@@ -16,7 +16,9 @@
 //! * [`orbit`] — orbital mechanics: propagation, ground-station visibility,
 //!   contact windows (the paper's `t_cyc` / `t_con` derived from geometry).
 //! * [`link`] — satellite-ground channel and downlink latency (Eq. 3),
-//!   ground-to-cloud WAN (Eq. 4).
+//!   ground-to-cloud WAN (Eq. 4), inter-satellite links over Walker
+//!   constellations ([`link::isl`]), and earliest-arrival multi-hop
+//!   contact-graph routing over them ([`link::route`]).
 //! * [`energy`] — on-board power model (Eq. 6/7), battery and solar harvest.
 //! * [`dnn`] — layer-level DNN profiles: per-layer output sizes (`α_k`),
 //!   FLOPs, and a model zoo computed analytically from layer shapes.
@@ -41,7 +43,13 @@
 //!
 //! See `DESIGN.md` (repository root) for the per-experiment index and
 //! `EXPERIMENTS.md` (repository root) for measured-vs-paper results; the
-//! top-level `README.md` has the build-and-run quickstart.
+//! top-level `README.md` has the build-and-run quickstart and
+//! `docs/CLI.md` the full `leo-infer` command reference.
+
+// Every public item carries documentation; CI builds rustdoc with
+// `-D warnings`, so a missing or broken doc fails the build.
+#![warn(missing_docs)]
+#![warn(rustdoc::broken_intra_doc_links)]
 
 pub mod config;
 pub mod coordinator;

@@ -26,6 +26,7 @@ pub struct DownlinkModel {
 }
 
 impl DownlinkModel {
+    /// A downlink at `rate` under the periodic contact cadence.
     pub fn new(rate: BitsPerSec, contact_period: Seconds, contact_duration: Seconds) -> Self {
         assert!(rate.value() > 0.0, "rate must be positive");
         assert!(

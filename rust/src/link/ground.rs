@@ -16,6 +16,7 @@ pub struct GroundCloudLink {
 }
 
 impl GroundCloudLink {
+    /// A WAN hop at `rate` between ground station and data center.
     pub fn new(rate: BitsPerSec) -> Self {
         assert!(rate.value() > 0.0);
         GroundCloudLink {
@@ -24,6 +25,7 @@ impl GroundCloudLink {
         }
     }
 
+    /// A co-located data center: the WAN hop costs nothing.
     pub fn colocated() -> Self {
         GroundCloudLink {
             rate: BitsPerSec(f64::INFINITY),

@@ -46,6 +46,7 @@ pub enum IslMode {
 }
 
 impl IslMode {
+    /// The config-file / CLI name of this mode.
     pub fn as_str(self) -> &'static str {
         match self {
             IslMode::Off => "off",
@@ -54,6 +55,7 @@ impl IslMode {
         }
     }
 
+    /// Parse a config-file / CLI name (`off | ring | grid`).
     pub fn from_name(name: &str) -> anyhow::Result<IslMode> {
         match name {
             "off" => Ok(IslMode::Off),
@@ -173,6 +175,7 @@ impl IslTopology {
         self.neighbors.len()
     }
 
+    /// True for a topology over zero satellites.
     pub fn is_empty(&self) -> bool {
         self.neighbors.is_empty()
     }
@@ -309,6 +312,40 @@ mod tests {
                     .expect("reverse link exists");
                 assert!((back.range_km - l.range_km).abs() < 1e-9);
                 assert_eq!(back.rate, l.rate);
+            }
+        }
+    }
+
+    /// Every edge of every ring *and* grid topology is bidirectional, and
+    /// every link's rate and propagation delay are strictly positive and
+    /// finite — the invariants the multi-hop router
+    /// ([`crate::link::route`]) leans on.
+    #[test]
+    fn ring_and_grid_edges_are_symmetric_with_positive_rates() {
+        for (tt, p) in [(6, 3), (12, 3), (8, 4), (4, 1)] {
+            let c = walker(tt, p);
+            for mode in [IslMode::Ring, IslMode::Grid] {
+                let t = IslTopology::build(&c, mode, BitsPerSec::from_mbps(150.0)).unwrap();
+                assert_eq!(t.len(), tt);
+                assert!(!t.is_empty());
+                for id in 0..tt {
+                    for l in t.neighbors(id) {
+                        assert!(
+                            t.neighbors(l.to).iter().any(|b| b.to == id),
+                            "{mode:?} {tt}/{p}: edge {id}→{} lacks its reverse",
+                            l.to
+                        );
+                        assert!(
+                            l.rate.value() > 0.0 && l.rate.value().is_finite(),
+                            "{mode:?} {tt}/{p}: non-positive rate on {id}→{}",
+                            l.to
+                        );
+                        assert!(
+                            l.propagation.value() > 0.0 && l.propagation.value().is_finite()
+                        );
+                        assert!(l.range_km > 0.0);
+                    }
+                }
             }
         }
     }

@@ -17,15 +17,18 @@
 //!
 //! Beyond the paper's bent-pipe path, [`isl`] wires inter-satellite links
 //! over a Walker constellation (ring / grid patterns, range-derived rates)
-//! so the fleet DES can relay intermediate tensors to a neighbor whose
-//! ground pass opens sooner.
+//! and [`route`] finds earliest-arrival multi-hop paths over them, so the
+//! fleet DES can relay intermediate tensors — across one ISL or several —
+//! to whichever satellite's ground pass opens first.
 
 pub mod channel;
 pub mod downlink;
 pub mod ground;
 pub mod isl;
+pub mod route;
 
 pub use channel::{LinkBudget, RatePolicy};
 pub use downlink::{downlink_latency, DownlinkModel};
 pub use ground::GroundCloudLink;
 pub use isl::{isl_rate, IslLink, IslMode, IslTopology};
+pub use route::{advertise, plan, plan_own, DownlinkOracle, RoutePlan};

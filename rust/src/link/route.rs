@@ -1,0 +1,580 @@
+//! Multi-hop contact-graph routing over the ISL topology.
+//!
+//! PR 3's relay offloading compared exactly two options for a boundary
+//! tensor: the capturing satellite's own next ground pass, or a *single*
+//! ISL hop to the neighbor whose pass (plus serialization, propagation,
+//! and transmitter queue) opens soonest. Computing-aware routing for LEO
+//! networks (arXiv:2211.08820) and collaborative satellite computing with
+//! adaptive DNN splitting (arXiv:2405.03181) both show the real
+//! latency/energy frontier lives further out: the tensor should travel
+//! *multi-hop* ISL paths to whichever satellite in the constellation has
+//! the earliest usable ground contact.
+//!
+//! This module is that generalization. Conceptually it searches a
+//! **time-expanded contact graph** whose nodes are `(satellite,
+//! tensor-arrival-time)` pairs and whose edges are
+//!
+//! * **ISL traversals** — serialize the tensor onto the link
+//!   (`bytes / rate`), then fly it (`range / c`); the arrival time at the
+//!   neighbor is the departure time plus both, and
+//! * **ground-contact downlinks** — wait for the carrying satellite's
+//!   transmitter queue (`tx_free_at`), then for its next contact window.
+//!
+//! Because both edge classes are non-negative and the downlink wait is
+//! monotone in the arrival time (leaving later never opens a pass
+//! earlier), a label-correcting Dijkstra over per-satellite
+//! `(arrival, energy)` labels finds the **earliest-arrival path** without
+//! materializing the time expansion. Path cost is the estimated downlink
+//! start at the ground; exact ties break on total ISL energy, which under
+//! the inverse-square rate budget of [`super::isl`] is proportional to
+//! `Σ 1/rate` over the traversed links (each hop keys the source antenna
+//! for `bytes/rate` seconds at the same offload power). Ties are common,
+//! not pathological: every tensor ready inside the same contact gap of a
+//! given satellite shares that satellite's next pass start.
+//!
+//! Two entry points mirror the two places the fleet DES needs routes:
+//!
+//! * [`plan`] — the *execution* decision for a concrete tensor: bytes- and
+//!   queue-aware, evaluated hop by hop exactly as
+//!   [`crate::sim::fleet::FleetSimulator`] will replay it. With
+//!   `max_hops = 1` it reproduces PR 3's single-hop relay choice
+//!   arithmetic term for term; with `max_hops = 0` it degenerates to the
+//!   paper's bent pipe.
+//! * [`advertise`] — the *telemetry* view: a bytes-free
+//!   `(effective rate, serialization budget)` pair describing the best
+//!   relay opportunity right now, fed to
+//!   [`crate::solver::engine::Telemetry`] and the relay-aware router.
+//!   With `max_hops = 1` it reproduces PR 3's single-neighbor
+//!   advertisement exactly.
+
+use super::isl::{IslLink, IslTopology};
+use crate::util::units::{BitsPerSec, Bytes, Seconds};
+
+/// What the route search needs to know about each satellite's
+/// ground-facing transmitter. [`crate::sim::fleet::FleetSimulator`]
+/// implements this over its live per-satellite state; tests implement it
+/// over fixtures.
+///
+/// All times are absolute simulation seconds, matching
+/// [`crate::sim::ContactModel`]. Implementations must be deterministic —
+/// route choices feed the reproducibility guarantees of the fleet DES and
+/// the sweep runner.
+pub trait DownlinkOracle {
+    /// Earliest absolute time satellite `sat`'s transmitter frees up.
+    /// `+∞` marks a dead (pinned) transmitter that can never downlink.
+    fn tx_free_at(&self, sat: usize) -> f64;
+
+    /// Seconds from `t` until satellite `sat`'s next ground contact opens
+    /// (0 when in contact); `None` when no further window is known.
+    fn next_contact_wait(&self, sat: usize, t: f64) -> Option<f64>;
+}
+
+/// The chosen path for one boundary tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoutePlan {
+    /// ISL hops in traversal order, source first. Empty = the capturing
+    /// satellite's own transmitter (the paper's bent pipe).
+    pub hops: Vec<IslLink>,
+    /// Estimated downlink start at the final satellite (absolute seconds);
+    /// `+∞` when no satellite on the path has a usable future pass.
+    pub ground_start: f64,
+    /// Energy tie-break key: `Σ 1/rate` over the hops (proportional to
+    /// the total ISL serialization energy at fixed offload power and
+    /// tensor size). Zero for the bent-pipe plan.
+    pub isl_cost: f64,
+}
+
+impl RoutePlan {
+    /// The satellite whose transmitter performs the downlink, given the
+    /// tensor starts at `src`.
+    pub fn downlink_sat(&self, src: usize) -> usize {
+        self.hops.last().map_or(src, |l| l.to)
+    }
+
+    /// Number of ISL hops the plan traverses (0 = bent pipe).
+    pub fn len(&self) -> usize {
+        self.hops.len()
+    }
+
+    /// True for the bent-pipe (no-hop) plan.
+    pub fn is_empty(&self) -> bool {
+        self.hops.is_empty()
+    }
+}
+
+/// The bent-pipe plan: `src`'s own transmitter, queue then next pass —
+/// what [`plan`] falls back to and what a fleet without ISLs always uses.
+pub fn plan_own(oracle: &dyn DownlinkOracle, src: usize, now: f64) -> RoutePlan {
+    let free = oracle.tx_free_at(src);
+    let ground_start = if free.is_finite() {
+        let t = now.max(free);
+        oracle
+            .next_contact_wait(src, t)
+            .map_or(f64::INFINITY, |w| t + w)
+    } else {
+        f64::INFINITY
+    };
+    RoutePlan {
+        hops: Vec::new(),
+        ground_start,
+        isl_cost: 0.0,
+    }
+}
+
+/// True when some frontier entry is at least as good on *both* keys —
+/// a Pareto check, because a later-but-cheaper label can still win an
+/// exact ground-start tie downstream.
+fn pareto_dominated(frontier: &[(f64, f64)], a: f64, b: f64) -> bool {
+    frontier.iter().any(|&(fa, fb)| fa <= a && fb <= b)
+}
+
+/// Choose the earliest-arrival downlink path for a tensor of `bytes`
+/// leaving satellite `src` at `now`, traversing at most `max_hops` ISLs.
+///
+/// Candidate scores are estimated downlink starts: for the bent pipe,
+/// `max(now, tx_free) + wait`; for a relay path, the tensor's arrival at
+/// the final satellite (serialize + propagation summed over the hops),
+/// queued behind that transmitter, plus its pass wait. Exact score ties
+/// break on [`RoutePlan::isl_cost`] (total ISL energy), then on fewer
+/// hops / lowest satellite ids — all deterministic. A relay is chosen
+/// only when it *strictly* beats the bent pipe, so `max_hops = 0` (or an
+/// empty neighborhood) always yields the own-transmitter plan, and
+/// `max_hops = 1` reproduces PR 3's single-hop relay decision — with one
+/// deliberate exception: when two *different* neighbors' candidate starts
+/// are the identical float (their pass starts coincide exactly and both
+/// transmitters are ready first), PR 3 took the lowest id while this
+/// search takes the cheaper (faster) link, as the energy tie-break
+/// specifies. Within one satellite ties cluster on its pass start and are
+/// common; across two satellites they require coinciding pass instants.
+///
+/// Satellites with dead transmitters cannot *end* a path (they can never
+/// downlink) but can still *carry* one — ISL terminals are independent of
+/// the ground-facing transmitter.
+pub fn plan(
+    topology: &IslTopology,
+    oracle: &dyn DownlinkOracle,
+    src: usize,
+    bytes: Bytes,
+    now: f64,
+    max_hops: usize,
+) -> RoutePlan {
+    let own = plan_own(oracle, src, now);
+    if max_hops == 0 {
+        return own;
+    }
+    // simple paths never revisit, so n−1 hops bound any useful search
+    let cap = max_hops.min(topology.len().saturating_sub(1));
+    struct Label {
+        at: usize,
+        arrival: f64,
+        cost: f64,
+        hops: Vec<IslLink>,
+    }
+    let mut best: Option<RoutePlan> = None;
+    // per-satellite Pareto frontier over (arrival, cost) labels
+    let mut seen: Vec<Vec<(f64, f64)>> = vec![Vec::new(); topology.len()];
+    let mut frontier = vec![Label {
+        at: src,
+        arrival: now,
+        cost: 0.0,
+        hops: Vec::new(),
+    }];
+    for _ in 0..cap {
+        let mut next = Vec::new();
+        for lab in &frontier {
+            for link in topology.neighbors(lab.at) {
+                if link.to == src || lab.hops.iter().any(|h| h.to == link.to) {
+                    continue; // simple paths only
+                }
+                let arrival = lab.arrival
+                    + link.rate.transfer_time(bytes).value()
+                    + link.propagation.value();
+                if !arrival.is_finite() {
+                    continue;
+                }
+                let cost = lab.cost + 1.0 / link.rate.value();
+                // downlink candidate: end the path here
+                let free = oracle.tx_free_at(link.to);
+                if free.is_finite() {
+                    let ready = arrival.max(free);
+                    if let Some(wait) = oracle.next_contact_wait(link.to, ready) {
+                        let start = ready + wait;
+                        let better = match &best {
+                            None => start.is_finite(),
+                            Some(b) => {
+                                start < b.ground_start
+                                    || (start == b.ground_start && cost < b.isl_cost)
+                            }
+                        };
+                        if better {
+                            let mut hops = lab.hops.clone();
+                            hops.push(*link);
+                            best = Some(RoutePlan {
+                                hops,
+                                ground_start: start,
+                                isl_cost: cost,
+                            });
+                        }
+                    }
+                }
+                // extension candidate: keep traveling (Pareto-pruned; the
+                // level-by-level sweep in ascending neighbor order makes
+                // first-come labels the lexicographically smallest paths)
+                if !pareto_dominated(&seen[link.to], arrival, cost) {
+                    seen[link.to].push((arrival, cost));
+                    let mut hops = lab.hops.clone();
+                    hops.push(*link);
+                    next.push(Label {
+                        at: link.to,
+                        arrival,
+                        cost,
+                        hops,
+                    });
+                }
+            }
+        }
+        frontier = next;
+        if frontier.is_empty() {
+            break;
+        }
+    }
+    match best {
+        Some(b) if b.ground_start < own.ground_start => b,
+        _ => own,
+    }
+}
+
+/// The relay opportunity satellite `src` can advertise *right now*, for
+/// telemetry: `(effective rate, serialization budget)` of the multi-hop
+/// path reaching the satellite whose ground pass opens first.
+///
+/// The budget is that satellite's pass wait measured at `now`, less the
+/// path's summed one-way propagation — a tensor whose total serialization
+/// fits the budget arrives at the downlinking satellite by the time its
+/// pass opens. The effective rate is the harmonic combination
+/// `1 / Σ (1/rate)` (total serialization of `D` bytes over the path is
+/// `D / rate_eff`), reported as the concrete link rate for single-hop
+/// paths. The pair always describes ONE concrete path; mixing the best
+/// budget and best rate of *different* paths would advertise a relay
+/// nobody offers.
+///
+/// Paths end only at satellites with live transmitters and a known future
+/// pass (dead intermediates may still carry). Candidates order by
+/// earliest pass (smallest budget), ties by highest effective rate — at
+/// `max_hops = 1` this reproduces PR 3's single-neighbor advertisement
+/// exactly. `None` when `max_hops = 0`, the neighborhood is empty, or no
+/// reachable satellite can ever downlink.
+pub fn advertise(
+    topology: &IslTopology,
+    oracle: &dyn DownlinkOracle,
+    src: usize,
+    now: f64,
+    max_hops: usize,
+) -> Option<(BitsPerSec, Seconds)> {
+    if max_hops == 0 {
+        return None;
+    }
+    let cap = max_hops.min(topology.len().saturating_sub(1));
+    struct Label {
+        at: usize,
+        prop: f64,
+        inv_rate: f64,
+        path: Vec<usize>,
+    }
+    let mut best: Option<(f64, f64)> = None; // (budget, rate_eff)
+    let mut seen: Vec<Vec<(f64, f64)>> = vec![Vec::new(); topology.len()];
+    let mut frontier = vec![Label {
+        at: src,
+        prop: 0.0,
+        inv_rate: 0.0,
+        path: Vec::new(),
+    }];
+    for _ in 0..cap {
+        let mut next = Vec::new();
+        for lab in &frontier {
+            for link in topology.neighbors(lab.at) {
+                if link.to == src || lab.path.contains(&link.to) {
+                    continue;
+                }
+                let prop = lab.prop + link.propagation.value();
+                let inv_rate = lab.inv_rate + 1.0 / link.rate.value();
+                // single-hop rate is the link's own (no harmonic round
+                // trip through 1/(1/r), which can drift a ulp)
+                let rate_eff = if lab.path.is_empty() {
+                    link.rate.value()
+                } else {
+                    1.0 / inv_rate
+                };
+                // downlink candidate: a pinned transmitter can't carry a
+                // relay, a schedule past its last window offers no pass
+                if oracle.tx_free_at(link.to).is_finite() {
+                    if let Some(wait) = oracle.next_contact_wait(link.to, now) {
+                        let budget = (wait - prop).max(0.0);
+                        if budget.is_finite() {
+                            let better = match best {
+                                None => true,
+                                Some((bb, br)) => {
+                                    budget < bb || (budget == bb && rate_eff > br)
+                                }
+                            };
+                            if better {
+                                best = Some((budget, rate_eff));
+                            }
+                        }
+                    }
+                }
+                if !pareto_dominated(&seen[link.to], prop, inv_rate) {
+                    seen[link.to].push((prop, inv_rate));
+                    let mut path = lab.path.clone();
+                    path.push(link.to);
+                    next.push(Label {
+                        at: link.to,
+                        prop,
+                        inv_rate,
+                        path,
+                    });
+                }
+            }
+        }
+        frontier = next;
+        if frontier.is_empty() {
+            break;
+        }
+    }
+    best.map(|(budget, rate)| (BitsPerSec(rate), Seconds(budget)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::link::isl::IslMode;
+    use crate::orbit::constellation::{Constellation, NamedOrbit, WalkerPattern};
+    use crate::orbit::propagator::CircularOrbit;
+
+    /// Fixture oracle: per-satellite transmitter state plus absolute pass
+    /// start times.
+    struct Fixture {
+        free: Vec<f64>,
+        passes: Vec<Vec<f64>>,
+    }
+
+    impl DownlinkOracle for Fixture {
+        fn tx_free_at(&self, sat: usize) -> f64 {
+            self.free[sat]
+        }
+
+        fn next_contact_wait(&self, sat: usize, t: f64) -> Option<f64> {
+            self.passes[sat].iter().find(|&&p| p >= t).map(|&p| p - t)
+        }
+    }
+
+    fn fixture(n: usize, passes: &[f64]) -> Fixture {
+        Fixture {
+            free: vec![0.0; n],
+            passes: passes.iter().map(|&p| vec![p]).collect(),
+        }
+    }
+
+    /// A 4-satellite single-plane ring: 0–1–2–3–0, all ranges equal.
+    fn ring4() -> IslTopology {
+        let c = WalkerPattern::new(4, 1, 0, 53.0, 550.0).build();
+        IslTopology::build(&c, IslMode::Ring, BitsPerSec::from_mbps(10_000.0)).unwrap()
+    }
+
+    #[test]
+    fn max_hops_zero_is_the_bent_pipe() {
+        let t = ring4();
+        let o = fixture(4, &[9000.0, 100.0, 100.0, 100.0]);
+        let p = plan(&t, &o, 0, Bytes::from_mb(10.0), 0.0, 0);
+        assert!(p.is_empty());
+        assert_eq!(p.ground_start, 9000.0);
+        assert_eq!(p.isl_cost, 0.0);
+        assert_eq!(p.downlink_sat(0), 0);
+        assert!(advertise(&t, &o, 0, 0.0, 0).is_none());
+    }
+
+    #[test]
+    fn own_pass_winning_keeps_the_bent_pipe() {
+        let t = ring4();
+        let o = fixture(4, &[50.0, 9000.0, 9000.0, 9000.0]);
+        let p = plan(&t, &o, 0, Bytes::from_mb(10.0), 0.0, 3);
+        assert!(p.is_empty(), "own 50 s pass must beat any relay");
+        assert_eq!(p.ground_start, 50.0);
+    }
+
+    /// `max_hops = 1` must reproduce PR 3's single-hop arithmetic term
+    /// for term: own `max(now, free) + wait` vs per-neighbor
+    /// `max(now + serialize + propagation, free) + wait`, strict
+    /// improvement required.
+    #[test]
+    fn single_hop_plan_matches_the_pr3_relay_formula() {
+        let t = ring4();
+        let bytes = Bytes::from_mb(40.0);
+        let now = 500.0;
+        let mut o = fixture(4, &[20_000.0, 6000.0, 900.0, 8000.0]);
+        o.free[3] = 7000.0; // sat 3's transmitter is busy until its pass
+        let p = plan(&t, &o, 0, bytes, now, 1);
+        // expected, by the PR 3 formula over 0's neighbors {1, 3}
+        let mut expect: Option<(f64, usize)> = None;
+        for link in t.neighbors(0) {
+            let arrive =
+                now + link.rate.transfer_time(bytes).value() + link.propagation.value();
+            let ready = arrive.max(o.free[link.to]);
+            let start = ready + o.next_contact_wait(link.to, ready).unwrap();
+            let better = match expect {
+                None => true,
+                Some((b, bid)) => start < b || (start == b && link.to < bid),
+            };
+            if better {
+                expect = Some((start, link.to));
+            }
+        }
+        let (start, to) = expect.unwrap();
+        assert!(start < 20_000.0, "the fixture must make relaying worthwhile");
+        assert_eq!(p.hops.len(), 1);
+        assert_eq!(p.hops[0].to, to);
+        assert_eq!(p.ground_start, start, "bit-identical start estimate");
+    }
+
+    #[test]
+    fn two_hops_reach_the_distant_early_pass() {
+        let t = ring4();
+        // sat 2 (two hops from 0) passes almost immediately; everything
+        // else waits hours
+        let o = fixture(4, &[30_000.0, 28_000.0, 1000.0, 28_000.0]);
+        let bytes = Bytes::from_mb(10.0);
+        let one = plan(&t, &o, 0, bytes, 0.0, 1);
+        let two = plan(&t, &o, 0, bytes, 0.0, 2);
+        assert!(one.len() <= 1);
+        assert_eq!(two.len(), 2, "the hop bound was the only obstacle");
+        assert_eq!(two.downlink_sat(0), 2);
+        // 0→2 runs via 1 or via 3 (near-symmetric ring; floating-point
+        // range rounding may tilt the energy tie either way)
+        assert!(two.hops[0].to == 1 || two.hops[0].to == 3);
+        assert!(two.ground_start < one.ground_start);
+        assert!(two.isl_cost > 0.0);
+        // the raised bound never *hurts*: 3 hops finds the same path
+        assert_eq!(plan(&t, &o, 0, bytes, 0.0, 3), two);
+    }
+
+    /// A 3-satellite *line* 0 – 1 – 2 (uneven planes, grid wiring):
+    /// satellite 2 is reachable only through satellite 1.
+    fn line3() -> IslTopology {
+        let mk = |plane: usize, slot: usize, raan: f64, phase: f64| NamedOrbit {
+            name: format!("p{plane}s{slot}"),
+            plane,
+            slot,
+            orbit: CircularOrbit::new(550.0, 53.0, raan, phase),
+        };
+        let c = Constellation {
+            satellites: vec![mk(0, 1, 0.0, 180.0), mk(0, 0, 0.0, 0.0), mk(1, 0, 90.0, 0.0)],
+        };
+        IslTopology::build(&c, IslMode::Grid, BitsPerSec::from_mbps(10_000.0)).unwrap()
+    }
+
+    #[test]
+    fn dead_transmitters_carry_but_never_downlink() {
+        let t = line3();
+        let mut o = fixture(3, &[30_000.0, 500.0, 1000.0]);
+        o.free[1] = f64::INFINITY; // sat 1: best pass, dead transmitter
+        let p = plan(&t, &o, 0, Bytes::from_mb(10.0), 0.0, 2);
+        assert_eq!(
+            p.downlink_sat(0),
+            2,
+            "path must route *through* dead sat 1 to sat 2"
+        );
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.hops[0].to, 1);
+        // with the carrier's transmitter alive, its earlier pass ends the
+        // path one hop sooner instead
+        o.free[1] = 0.0;
+        let p = plan(&t, &o, 0, Bytes::from_mb(10.0), 0.0, 2);
+        assert_eq!(p.downlink_sat(0), 1);
+        assert_eq!(p.len(), 1);
+    }
+
+    /// An exact ground-start tie (both candidates ready before the same
+    /// pass opens) resolves by total ISL energy: the faster link costs
+    /// less antenna time, even when it belongs to the higher-id neighbor.
+    #[test]
+    fn ground_start_ties_break_on_isl_energy() {
+        // hand-built plane: slot 1 sits 180° from slot 0 (long, slow
+        // link), slot 2 only 90° away (short, fast link); ring wiring
+        // links 0 to both
+        let mk = |slot: usize, phase: f64| NamedOrbit {
+            name: format!("s{slot}"),
+            plane: 0,
+            slot,
+            orbit: CircularOrbit::new(550.0, 53.0, 0.0, phase),
+        };
+        let c = Constellation {
+            satellites: vec![mk(0, 0.0), mk(1, 180.0), mk(2, 90.0)],
+        };
+        let t = IslTopology::build(&c, IslMode::Ring, BitsPerSec::from_mbps(10_000.0)).unwrap();
+        let r01 = t.neighbors(0).iter().find(|l| l.to == 1).unwrap().rate;
+        let r02 = t.neighbors(0).iter().find(|l| l.to == 2).unwrap().rate;
+        assert!(r02.value() > r01.value(), "90° chord must be the faster link");
+        // both neighbors pass at exactly t = 5000 and both transmitters
+        // free at exactly t = 4000 (the tensor arrives well before), so
+        // the two candidate starts are the *same float*: 4000 + 1000
+        let mut o = fixture(3, &[40_000.0, 5000.0, 5000.0]);
+        o.free[1] = 4000.0;
+        o.free[2] = 4000.0;
+        let p = plan(&t, &o, 0, Bytes::from_kb(1.0), 0.0, 1);
+        assert_eq!(p.ground_start, 5000.0);
+        assert_eq!(
+            p.downlink_sat(0),
+            2,
+            "equal starts must resolve to the cheaper (faster) link"
+        );
+    }
+
+    #[test]
+    fn single_hop_advertisement_matches_the_pr3_view() {
+        let t = ring4();
+        let now = 200.0;
+        let mut o = fixture(4, &[50_000.0, 7000.0, 900.0, 4000.0]);
+        o.free[3] = f64::INFINITY; // dead neighbor is skipped entirely
+        let (rate, budget) = advertise(&t, &o, 0, now, 1).unwrap();
+        // the only live neighbor of 0 is 1: budget = wait − propagation
+        let link = t.neighbors(0).iter().find(|l| l.to == 1).unwrap();
+        assert_eq!(rate, link.rate, "single-hop rate is the concrete link's");
+        assert_eq!(
+            budget.value(),
+            (7000.0 - now) - link.propagation.value(),
+            "PR 3 budget arithmetic"
+        );
+    }
+
+    #[test]
+    fn multi_hop_advertisement_reaches_the_earliest_pass() {
+        let t = ring4();
+        let o = fixture(4, &[50_000.0, 10_000.0, 3000.0, 10_000.0]);
+        let (r1, b1) = advertise(&t, &o, 0, 0.0, 1).unwrap();
+        let (r2, b2) = advertise(&t, &o, 0, 0.0, 2).unwrap();
+        // one hop only sees the 10 000 s passes (neighbors 1 and 3 are
+        // geometrically interchangeable up to float rounding); two hops
+        // reach sat 2
+        let link = t.neighbors(0).iter().find(|l| l.to == 1).unwrap();
+        assert!((b1.value() - (10_000.0 - link.propagation.value())).abs() < 1e-6);
+        assert!(b2.value() < b1.value(), "sat 2's pass opens far sooner");
+        assert!(
+            (b2.value() - (3000.0 - 2.0 * link.propagation.value())).abs() < 1e-6,
+            "budget subtracts both hops' propagation"
+        );
+        // two serializations: the effective rate is the harmonic half
+        assert!((r1.value() - link.rate.value()).abs() < 1.0);
+        assert!((r2.value() - link.rate.value() / 2.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn advertisement_is_none_when_nobody_can_downlink() {
+        let t = ring4();
+        let mut o = fixture(4, &[1000.0; 4]);
+        for f in &mut o.free {
+            *f = f64::INFINITY;
+        }
+        o.free[0] = 0.0; // own transmitter is irrelevant to the adverts
+        assert!(advertise(&t, &o, 0, 0.0, 3).is_none());
+    }
+}

@@ -159,7 +159,7 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
         )
         .opt(
             "routing",
-            "round-robin|least-loaded|contact-aware|energy-aware (fleet only)",
+            "round-robin|least-loaded|contact-aware|energy-aware|relay-aware (fleet only)",
             Some("least-loaded"),
         )
         .opt(
@@ -176,6 +176,11 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
             "isl-rate-mbps",
             "ISL rate at the 1000 km reference range (fleet only)",
             Some("200"),
+        )
+        .opt(
+            "isl-max-hops",
+            "relay-path hop bound: 0 = bent pipe, 1 = single hop, N = multi-hop routing",
+            Some("4"),
         )
         .parse_from(argv)?;
     let fleet_config = args.get_str("fleet-config").unwrap_or("").to_string();
@@ -279,6 +284,7 @@ fn simulate_fleet(args: &Args, fleet_config: &str, fleet_spec: &str) -> anyhow::
         f.contact_source = ContactSource::from_name(args.get_str("contact").unwrap_or("periodic"))?;
         f.isl = IslMode::from_name(args.get_str("isl").unwrap_or("off"))?;
         f.isl_rate_mbps = args.get_f64("isl-rate-mbps")?;
+        f.isl_max_hops = args.get_usize("isl-max-hops")?;
         f.horizon_hours = args.get_f64("hours")?;
         f.interarrival_s = args.get_f64("interarrival-s")?;
         let hi = args.get_f64("data-gb")?;
@@ -302,14 +308,24 @@ fn simulate_fleet(args: &Args, fleet_config: &str, fleet_spec: &str) -> anyhow::
         fleet.altitude_km,
         fleet.routing,
         fleet.contact_source.as_str(),
-        fleet.isl.as_str()
+        if fleet.isl == IslMode::Off {
+            "off".to_string()
+        } else {
+            format!("{} (≤ {} hops)", fleet.isl.as_str(), fleet.isl_max_hops)
+        }
     );
     print_sim_summary(m, trace.len(), fleet.horizon());
     if fleet.isl != IslMode::Off {
+        let hops: usize = m.records.iter().map(|r| r.path_len).sum();
+        let relayed = m.records.iter().filter(|r| r.relay.is_some()).count();
         println!(
-            "relays      : {} handoffs, {:.2} GB over ISLs",
+            "relays      : {} handoffs, {:.2} GB over ISLs, {} requests relayed \
+             (mean path {:.2} hops), {} mid-flight reroutes",
             m.relays,
-            m.relayed_bytes.gb()
+            m.relayed_bytes.gb(),
+            relayed,
+            if relayed > 0 { hops as f64 / relayed as f64 } else { 0.0 },
+            m.route_recomputes
         );
     }
     println!("\nper-satellite:");

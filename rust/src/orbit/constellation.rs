@@ -27,18 +27,26 @@ pub struct WalkerPattern {
 /// A generated constellation: satellite orbits plus naming metadata.
 #[derive(Debug, Clone)]
 pub struct Constellation {
+    /// Every satellite, ordered plane-major (`p0s0, p0s1, …`).
     pub satellites: Vec<NamedOrbit>,
 }
 
+/// One satellite's orbit plus its place in the constellation.
 #[derive(Debug, Clone)]
 pub struct NamedOrbit {
+    /// Display name (`sat-pXsY` for Walker builds).
     pub name: String,
+    /// Orbital plane index.
     pub plane: usize,
+    /// Slot index within the plane.
     pub slot: usize,
+    /// The orbit itself.
     pub orbit: CircularOrbit,
 }
 
 impl WalkerPattern {
+    /// A Walker delta pattern `i:T/P/F` at the given inclination and
+    /// altitude (panics unless `P` divides `T` and `F < P`).
     pub fn new(
         total: usize,
         planes: usize,
@@ -101,10 +109,12 @@ impl Constellation {
         }
     }
 
+    /// Number of satellites.
     pub fn len(&self) -> usize {
         self.satellites.len()
     }
 
+    /// True for a constellation with no satellites.
     pub fn is_empty(&self) -> bool {
         self.satellites.is_empty()
     }

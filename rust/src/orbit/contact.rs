@@ -21,10 +21,12 @@ pub struct ContactWindow {
 }
 
 impl ContactWindow {
+    /// Window length (set − rise).
     pub fn duration(&self) -> Seconds {
         Seconds(self.end_s - self.start_s)
     }
 
+    /// Is `t` inside the window?
     pub fn contains(&self, t: f64) -> bool {
         t >= self.start_s && t < self.end_s
     }
@@ -33,7 +35,9 @@ impl ContactWindow {
 /// A precomputed ordered list of contact windows over a horizon.
 #[derive(Debug, Clone, Default)]
 pub struct ContactSchedule {
+    /// The windows, ordered by rise time.
     pub windows: Vec<ContactWindow>,
+    /// How far the schedule was computed (nothing is known beyond it).
     pub horizon_s: f64,
 }
 

@@ -5,31 +5,39 @@ use super::propagator::EARTH_RADIUS_KM;
 /// A plain 3-vector in kilometers (frame given by context).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct Vec3 {
+    /// X component, km.
     pub x: f64,
+    /// Y component, km.
     pub y: f64,
+    /// Z component, km.
     pub z: f64,
 }
 
 impl Vec3 {
+    /// A vector from components.
     pub fn new(x: f64, y: f64, z: f64) -> Self {
         Vec3 { x, y, z }
     }
 
+    /// Dot product.
     #[inline]
     pub fn dot(self, o: Vec3) -> f64 {
         self.x * o.x + self.y * o.y + self.z * o.z
     }
 
+    /// Euclidean length.
     #[inline]
     pub fn norm(self) -> f64 {
         self.dot(self).sqrt()
     }
 
+    /// Scale every component by `k`.
     #[inline]
     pub fn scaled(self, k: f64) -> Vec3 {
         Vec3::new(self.x * k, self.y * k, self.z * k)
     }
 
+    /// The unit vector in this direction (debug-panics on zero length).
     #[inline]
     pub fn unit(self) -> Vec3 {
         let n = self.norm();
@@ -55,8 +63,11 @@ impl std::ops::Sub for Vec3 {
 /// A ground station fixed on the (spherical) Earth surface.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GroundStation {
+    /// Station name.
     pub name: String,
+    /// Geodetic latitude, degrees.
     pub lat_deg: f64,
+    /// Geodetic longitude, degrees.
     pub lon_deg: f64,
     /// Minimum usable elevation angle, degrees (antenna mask; typically
     /// 5–10° for LEO downlink).
@@ -67,6 +78,7 @@ pub struct GroundStation {
 }
 
 impl GroundStation {
+    /// A station at the given coordinates (10° mask, no data center).
     pub fn new(name: &str, lat_deg: f64, lon_deg: f64) -> Self {
         assert!((-90.0..=90.0).contains(&lat_deg), "latitude {lat_deg}");
         GroundStation {
@@ -78,11 +90,13 @@ impl GroundStation {
         }
     }
 
+    /// Set the minimum usable elevation, degrees.
     pub fn with_elevation_mask(mut self, deg: f64) -> Self {
         self.min_elevation_deg = deg;
         self
     }
 
+    /// Declare a co-located cloud data center.
     pub fn with_datacenter(mut self, attached: bool) -> Self {
         self.has_datacenter = attached;
         self

@@ -27,6 +27,8 @@ pub struct CircularOrbit {
 }
 
 impl CircularOrbit {
+    /// A circular orbit from altitude, inclination, RAAN, and initial
+    /// phase (all angles in degrees).
     pub fn new(altitude_km: f64, inclination_deg: f64, raan_deg: f64, phase_deg: f64) -> Self {
         assert!(altitude_km > 0.0, "orbit must be above the surface");
         CircularOrbit {

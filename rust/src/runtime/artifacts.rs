@@ -8,22 +8,34 @@ use std::path::{Path, PathBuf};
 /// One lowered stage executable.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StageArtifact {
+    /// Stage position in the split pipeline.
     pub index: usize,
+    /// Stage name from the compile step.
     pub name: String,
+    /// Physical batch size this artifact was lowered for.
     pub batch: usize,
+    /// Input tensor shape (batch-major).
     pub in_shape: Vec<usize>,
+    /// Output tensor shape (batch-major).
     pub out_shape: Vec<usize>,
+    /// Serialized input size, bytes.
     pub in_bytes: usize,
+    /// Serialized output size, bytes (what a cut here downlinks).
     pub out_bytes: usize,
+    /// Path to the lowered executable.
     pub path: PathBuf,
 }
 
 /// Parsed `manifest.json`.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Model name the artifacts were compiled from.
     pub model: String,
+    /// Batch sizes with compiled artifacts.
     pub batch_sizes: Vec<usize>,
+    /// Every stage artifact, all batch sizes.
     pub stages: Vec<StageArtifact>,
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
 }
 

@@ -30,7 +30,9 @@ struct CompiledStage {
 /// Timing of one stage execution.
 #[derive(Debug, Clone, Copy)]
 pub struct StageTiming {
+    /// Stage index.
     pub index: usize,
+    /// Wall-clock execution time, seconds.
     pub seconds: f64,
 }
 
@@ -76,14 +78,17 @@ impl StageRuntime {
         })
     }
 
+    /// Number of compiled stages.
     pub fn depth(&self) -> usize {
         self.stages.len()
     }
 
+    /// The physical batch size the stages were compiled for.
     pub fn batch(&self) -> usize {
         self.batch
     }
 
+    /// Stage `k`'s artifact metadata.
     pub fn stage_meta(&self, k: usize) -> &StageArtifact {
         &self.stages[k].meta
     }

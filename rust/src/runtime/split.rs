@@ -28,6 +28,8 @@ pub struct SplitExecutor {
 }
 
 impl SplitExecutor {
+    /// Pair a satellite-side and a cloud-side runtime (depths and batch
+    /// sizes must match).
     pub fn new(satellite: StageRuntime, cloud: StageRuntime) -> anyhow::Result<Self> {
         anyhow::ensure!(
             satellite.depth() == cloud.depth(),
@@ -47,10 +49,12 @@ impl SplitExecutor {
         })
     }
 
+    /// The physical batch size both sites run.
     pub fn batch(&self) -> usize {
         self.satellite.batch()
     }
 
+    /// Number of stages (the split range is `0..=depth`).
     pub fn depth(&self) -> usize {
         self.satellite.depth()
     }

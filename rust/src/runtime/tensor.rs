@@ -10,11 +10,14 @@ use crate::util::rng::Pcg64;
 /// A dense row-major f32 tensor on the host.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HostTensor {
+    /// Dimension extents, batch-major.
     pub shape: Vec<usize>,
+    /// Row-major element storage.
     pub data: Vec<f32>,
 }
 
 impl HostTensor {
+    /// A tensor from parts (errors when the element count mismatches).
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> anyhow::Result<HostTensor> {
         let n: usize = shape.iter().product();
         anyhow::ensure!(
@@ -26,6 +29,7 @@ impl HostTensor {
         Ok(HostTensor { shape, data })
     }
 
+    /// An all-zero tensor of `shape`.
     pub fn zeros(shape: Vec<usize>) -> HostTensor {
         let n = shape.iter().product();
         HostTensor {
@@ -45,6 +49,7 @@ impl HostTensor {
         }
     }
 
+    /// Total element count.
     pub fn elements(&self) -> usize {
         self.data.len()
     }

@@ -58,7 +58,9 @@ pub trait ContactModel {
 /// index and `outage_seed`, so simulations stay reproducible.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PeriodicContact {
+    /// Contact period (`t_cyc`).
     pub t_cyc: Seconds,
+    /// Contact duration per window (`t_con`).
     pub t_con: Seconds,
     /// Offset of the first window start (allows sims that begin mid-cycle).
     pub phase: Seconds,
@@ -69,6 +71,7 @@ pub struct PeriodicContact {
 }
 
 impl PeriodicContact {
+    /// A reliable periodic pattern (no outages, phase 0).
     pub fn new(t_cyc: Seconds, t_con: Seconds) -> Self {
         assert!(t_con.value() > 0.0 && t_cyc.value() >= t_con.value());
         PeriodicContact {
@@ -99,6 +102,7 @@ impl PeriodicContact {
         (sm.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64) < self.outage_rate
     }
 
+    /// Offset the first window start to `phase`.
     pub fn with_phase(mut self, phase: Seconds) -> Self {
         self.phase = phase;
         self
@@ -260,10 +264,12 @@ impl ContactModel for PeriodicContact {
 /// fleet simulator counts the request as unfinished.
 #[derive(Debug, Clone)]
 pub struct ScheduleContact {
+    /// The propagated windows this model walks.
     pub schedule: ContactSchedule,
 }
 
 impl ScheduleContact {
+    /// Wrap a propagated schedule.
     pub fn new(schedule: ContactSchedule) -> Self {
         ScheduleContact { schedule }
     }

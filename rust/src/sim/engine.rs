@@ -10,8 +10,10 @@ use std::collections::BinaryHeap;
 /// A scheduled occurrence of `E` at `time`.
 #[derive(Debug, Clone)]
 pub struct ScheduledEvent<E> {
+    /// Absolute simulation time of the event, seconds.
     pub time: f64,
     seq: u64,
+    /// The caller's event payload.
     pub event: E,
 }
 
@@ -56,6 +58,7 @@ impl<E> Default for EventQueue<E> {
 }
 
 impl<E> EventQueue<E> {
+    /// An empty queue.
     pub fn new() -> Self {
         EventQueue {
             heap: BinaryHeap::new(),
@@ -99,10 +102,12 @@ impl<E> EventQueue<E> {
         Some(ev)
     }
 
+    /// True when no events remain.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
 
+    /// Number of pending events.
     pub fn len(&self) -> usize {
         self.heap.len()
     }

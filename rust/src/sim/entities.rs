@@ -30,6 +30,7 @@ pub struct SatelliteState {
 }
 
 impl SatelliteState {
+    /// A fresh satellite: both resources free at t = 0, no battery.
     pub fn new() -> Self {
         SatelliteState {
             proc_free_at: 0.0,

@@ -11,18 +11,25 @@
 //!     proc FIFO_j ──SatDone──┐ s == K: complete
 //!                            │ s <  K, own pass soonest:
 //!     tx FIFO_j (contact_j) ──TxDone──► cloud ──CloudDone──► complete
-//!                            │ s <  K, neighbor m's pass sooner (ISL on):
-//!     ISL j→m ──RelayTxDone──RelayRxDone──► tx FIFO_m (contact_m)
+//!                            │ s <  K, a relay path lands sooner (ISL on):
+//!     ISL j→m₁ ──RelayTxDone──RelayRxDone──► … ──► ISL m_{h−1}→m_h
+//!         ──RelayTxDone──RelayRxDone──► tx FIFO_{m_h} (contact_{m_h})
 //!         ──TxDone──► cloud ──CloudDone──► complete
 //! ```
 //!
 //! With an [`IslTopology`] configured, a satellite whose own ground pass
-//! is far away hands the boundary tensor to the neighbor whose pass (plus
-//! the ISL serialization and propagation) opens soonest — the relay
-//! placement the bent-pipe paper cannot express. The decision is made at
-//! `SatDone` time against live transmitter/contact state, the ISL
-//! serialization draws the source's antenna power, and the neighbor's
-//! transmitter FIFO and battery carry the downlink from there.
+//! is far away hands the boundary tensor down the multi-hop ISL path
+//! ([`crate::link::route::plan`]) whose final satellite's pass — after
+//! every hop's serialization and propagation, plus that transmitter's
+//! queue — opens soonest, bounded by [`FleetSimConfig::isl_max_hops`]
+//! (`1` is PR 3's single-hop relay, `0` the paper's bent pipe). The path
+//! is chosen at `SatDone` time against live transmitter/contact state and
+//! *re-derived at every intermediate hop* (conditions change while the
+//! tensor flies; adopted changes count in
+//! [`SimMetrics::route_recomputes`]). Each hop's serialization draws that
+//! hop's source antenna power, every transited satellite's
+//! [`super::metrics::SatMetrics::transit_bytes`] records the carry, and
+//! the final satellite's transmitter FIFO and battery carry the downlink.
 //!
 //! In [`TelemetryMode::Live`] each solve sees the chosen satellite's
 //! battery SoC, remaining contact window, and queue depth — the serving
@@ -47,6 +54,7 @@ use crate::dnn::profile::ModelProfile;
 use crate::energy::battery::Battery;
 use crate::energy::solar::SolarPanel;
 use crate::link::isl::{IslLink, IslTopology};
+use crate::link::route::{self, DownlinkOracle};
 use crate::solver::engine::{SolverEngine, Telemetry};
 use crate::solver::instance::{Instance, InstanceBuilder};
 use crate::util::units::{BitsPerSec, Bytes, Joules, Seconds};
@@ -54,7 +62,9 @@ use crate::util::units::{BitsPerSec, Bytes, Joules, Seconds};
 /// One satellite of the fleet: its contact window source and (optionally)
 /// its energy subsystem.
 pub struct SatelliteSpec {
+    /// Display name (per-satellite metrics carry it).
     pub name: String,
+    /// Where this satellite's ground-contact windows come from.
     pub contact: Box<dyn ContactModel>,
     /// `(battery, panel, orbit-average sunlit fraction)`; `None` = the
     /// paper's unconstrained-energy setting.
@@ -62,6 +72,7 @@ pub struct SatelliteSpec {
 }
 
 impl SatelliteSpec {
+    /// A satellite with unconstrained energy (the paper's setting).
     pub fn new(name: &str, contact: Box<dyn ContactModel>) -> Self {
         SatelliteSpec {
             name: name.to_string(),
@@ -70,6 +81,8 @@ impl SatelliteSpec {
         }
     }
 
+    /// Attach a battery recharged by `panel` at the orbit-averaged
+    /// sunlit fraction.
     pub fn with_battery(mut self, battery: Battery, panel: SolarPanel, avg_sunlit: f64) -> Self {
         self.battery = Some((battery, panel, avg_sunlit));
         self
@@ -101,6 +114,12 @@ pub struct FleetSimConfig {
     /// Inter-satellite links; `None` = the paper's bent-pipe-only fleet
     /// (every boundary tensor waits for its own satellite's pass).
     pub isl: Option<IslTopology>,
+    /// Hop bound for ISL relay paths ([`crate::link::route::plan`]):
+    /// `0` forces the bent pipe even with a topology configured, `1`
+    /// reproduces PR 3's single-hop relay, larger values open the full
+    /// contact-graph search. Ignored when [`FleetSimConfig::isl`] is
+    /// `None`.
+    pub isl_max_hops: usize,
     /// What the per-arrival solve sees.
     pub telemetry: TelemetryMode,
     /// Simulation horizon: events past it are dropped and counted as
@@ -114,6 +133,7 @@ pub struct FleetResult {
     pub metrics: SimMetrics,
     /// Final per-satellite state, indexed by satellite id.
     pub states: Vec<SatelliteState>,
+    /// The horizon the run enforced.
     pub horizon: Seconds,
 }
 
@@ -121,9 +141,9 @@ pub struct FleetResult {
 enum Event {
     Arrival(usize),
     SatDone(usize),
-    /// The boundary tensor finished serializing onto the ISL.
+    /// The boundary tensor finished serializing onto the current hop's ISL.
     RelayTxDone(usize),
-    /// The boundary tensor arrived at the relay neighbor.
+    /// The boundary tensor arrived at the current hop's target satellite.
     RelayRxDone(usize),
     TxDone(usize),
     CloudDone(usize),
@@ -136,7 +156,12 @@ struct Flight {
     split: usize,
     depth: usize,
     energy: Joules,
-    /// Neighbor carrying the downlink when the tensor was relayed.
+    /// Planned ISL hops, traversal order (empty = bent pipe). Replanning
+    /// at intermediate hops may rewrite the untraveled suffix.
+    route: Vec<IslLink>,
+    /// Index into [`Flight::route`] of the hop currently in flight.
+    hop: usize,
+    /// Satellite carrying the downlink when the tensor was relayed.
     relay: Option<usize>,
     // cached costs from the decision instance
     t_gc: Seconds,
@@ -150,9 +175,38 @@ impl Flight {
     fn downlink_sat(&self) -> usize {
         self.relay.unwrap_or(self.sat)
     }
+
+    /// The satellite the current hop departs from.
+    fn hop_src(&self) -> usize {
+        if self.hop == 0 {
+            self.sat
+        } else {
+            self.route[self.hop - 1].to
+        }
+    }
 }
 
+/// [`DownlinkOracle`] view over the fleet's live transmitter state — what
+/// [`route::plan`] and [`route::advertise`] consult.
+struct FleetOracle<'a> {
+    sats: &'a [SatelliteSpec],
+    states: &'a [SatelliteState],
+}
+
+impl DownlinkOracle for FleetOracle<'_> {
+    fn tx_free_at(&self, sat: usize) -> f64 {
+        self.states[sat].tx_free_at
+    }
+
+    fn next_contact_wait(&self, sat: usize, t: f64) -> Option<f64> {
+        self.sats[sat].contact.time_to_next_contact(t)
+    }
+}
+
+/// The fleet-scale discrete-event simulator (see the module docs for the
+/// event flow).
 pub struct FleetSimulator {
+    /// The run's scenario configuration.
     pub config: FleetSimConfig,
     /// Mutable per-satellite state, indexed like `config.sats`.
     pub states: Vec<SatelliteState>,
@@ -162,6 +216,8 @@ pub struct FleetSimulator {
 }
 
 impl FleetSimulator {
+    /// Build a simulator over `config`. Panics on an empty fleet, empty
+    /// profile set, or an ISL topology whose size mismatches the fleet.
     pub fn new(config: FleetSimConfig) -> Self {
         assert!(!config.sats.is_empty(), "fleet must have ≥ 1 satellite");
         assert!(!config.profiles.is_empty(), "fleet needs ≥ 1 model profile");
@@ -209,92 +265,48 @@ impl FleetSimulator {
             .expect("template must be valid")
     }
 
-    /// The relay option satellite `sat` could advertise right now: the
-    /// `(rate, serialization budget)` of the neighbor whose ground pass
-    /// opens first (rate breaks ties), where the budget is the pass wait
-    /// *less* the one-way ISL propagation — a tensor whose serialization
-    /// fits the budget arrives at the neighbor by the time its pass
-    /// opens. The pair always describes ONE concrete link — mixing the
-    /// best rate and the best wait of *different* neighbors would
-    /// advertise a relay nobody offers. `None` when the fleet has no
-    /// ISLs, every neighbor's transmitter is dead, or no neighbor has a
-    /// future pass.
+    /// The relay option satellite `sat` could advertise right now
+    /// ([`route::advertise`] under the configured hop bound): the
+    /// `(effective rate, serialization budget)` of the multi-hop path to
+    /// the satellite whose ground pass opens first. `None` when the fleet
+    /// has no ISLs, the hop bound is 0, or no reachable satellite can
+    /// downlink.
     fn relay_view(&self, sat: usize, now: f64) -> Option<(BitsPerSec, Seconds)> {
         let isl = self.config.isl.as_ref()?;
-        let mut best: Option<(f64, f64)> = None; // (wait, rate)
-        for link in isl.neighbors(sat) {
-            if !self.states[link.to].tx_free_at.is_finite() {
-                continue; // a pinned transmitter can't carry a relay
-            }
-            let Some(wait) = self.config.sats[link.to].contact.time_to_next_contact(now)
-            else {
-                continue; // schedule exhausted: no future pass
-            };
-            let wait = (wait - link.propagation.value()).max(0.0);
-            if !wait.is_finite() {
-                continue;
-            }
-            let better = match best {
-                None => true,
-                Some((bw, br)) => wait < bw || (wait == bw && link.rate.value() > br),
-            };
-            if better {
-                best = Some((wait, link.rate.value()));
-            }
-        }
-        let (wait, rate) = best?;
-        Some((BitsPerSec(rate), Seconds(wait)))
+        let oracle = FleetOracle {
+            sats: &self.config.sats,
+            states: &self.states,
+        };
+        route::advertise(isl, &oracle, sat, now, self.config.isl_max_hops)
     }
 
-    /// Choose the relay for a boundary tensor leaving `sat` at `now`, if
-    /// any neighbor's estimated downlink start (ISL serialization +
-    /// propagation + transmitter queue + pass wait) beats the own
-    /// transmitter's. Ties keep the bent pipe; neighbor ties break on the
-    /// lowest id, keeping runs deterministic. ISL terminals are modeled
-    /// capacity-rich (point-to-point lasers, no FIFO): concurrent
-    /// handoffs on one link overlap — only the ground-facing transmitter
-    /// queues.
-    fn pick_relay(&self, sat: usize, now: f64, tx_bytes: Bytes) -> Option<IslLink> {
-        let isl = self.config.isl.as_ref()?;
-        if tx_bytes.value() <= 0.0 {
-            return None;
-        }
-        let own_start = {
-            let free = self.states[sat].tx_free_at;
-            if free.is_finite() {
-                let t = now.max(free);
-                self.config.sats[sat]
-                    .contact
-                    .time_to_next_contact(t)
-                    .map_or(f64::INFINITY, |w| t + w)
-            } else {
-                f64::INFINITY
-            }
+    /// Choose the downlink path for a boundary tensor leaving `sat` at
+    /// `now` ([`route::plan`] under the given hop bound — the configured
+    /// [`FleetSimConfig::isl_max_hops`] at `SatDone`, the leftover budget
+    /// at intermediate replans): the bent pipe unless a relay path's
+    /// estimated downlink start (per-hop serialization + propagation,
+    /// final transmitter queue + pass wait) *strictly* beats the own
+    /// transmitter's. ISL terminals are modeled capacity-rich
+    /// (point-to-point lasers, no FIFO): concurrent handoffs on one link
+    /// overlap — only the ground-facing transmitter queues. Returns the
+    /// bent-pipe plan for empty tensors: nothing to relay.
+    fn pick_route(
+        &self,
+        sat: usize,
+        now: f64,
+        tx_bytes: Bytes,
+        max_hops: usize,
+    ) -> route::RoutePlan {
+        let oracle = FleetOracle {
+            sats: &self.config.sats,
+            states: &self.states,
         };
-        let mut best: Option<(f64, IslLink)> = None;
-        for link in isl.neighbors(sat) {
-            let free = self.states[link.to].tx_free_at;
-            if !free.is_finite() {
-                continue;
+        match &self.config.isl {
+            Some(isl) if tx_bytes.value() > 0.0 => {
+                route::plan(isl, &oracle, sat, tx_bytes, now, max_hops)
             }
-            let arrive =
-                now + link.rate.transfer_time(tx_bytes).value() + link.propagation.value();
-            let ready = arrive.max(free);
-            let Some(wait) = self.config.sats[link.to].contact.time_to_next_contact(ready)
-            else {
-                continue;
-            };
-            let start = ready + wait;
-            let better = match best {
-                None => true,
-                Some((b, bl)) => start < b || (start == b && link.to < bl.to),
-            };
-            if better {
-                best = Some((start, *link));
-            }
+            _ => route::plan_own(&oracle, sat, now),
         }
-        let (start, link) = best?;
-        (start < own_start).then_some(link)
     }
 
     /// Push request `i`'s boundary tensor onto satellite `sat`'s
@@ -343,20 +355,6 @@ impl FleetSimulator {
                 flights[i] = None;
             }
         }
-    }
-
-    /// The configured link `src → dst` (panics if the relay decision and
-    /// topology ever disagree — that would be a simulator bug).
-    fn link_between(&self, src: usize, dst: usize) -> IslLink {
-        *self
-            .config
-            .isl
-            .as_ref()
-            .expect("relay implies a topology")
-            .neighbors(src)
-            .iter()
-            .find(|l| l.to == dst)
-            .expect("relay target must be a neighbor")
     }
 
     /// The live context the engine sees for a solve on satellite `sat`.
@@ -453,7 +451,10 @@ impl FleetSimulator {
                     }
                     // relay horizon per satellite — only RelayAware's
                     // soonest_effective_contact reads these fields, so
-                    // skip the O(n · neighbors) scan for other policies
+                    // other policies skip the per-satellite contact-graph
+                    // searches entirely (each is a bounded-hop label sweep,
+                    // ~deg^min(hops, n−1) expansions; the fleet_scaling
+                    // bench pins the cost class)
                     if matches!(self.config.routing, RoutingPolicy::RelayAware) {
                         for id in 0..n {
                             let (rate, wait) = self
@@ -503,6 +504,8 @@ impl FleetSimulator {
                         split: s,
                         depth: k,
                         energy: proc_energy,
+                        route: Vec::new(),
+                        hop: 0,
                         relay: None,
                         t_gc,
                         t_cloud_suffix,
@@ -527,14 +530,19 @@ impl FleetSimulator {
                         complete(&mut metrics, requests, &mut flights, i, now);
                         continue;
                     }
-                    // ISL relay: hand the tensor to the neighbor whose
-                    // pass (after serialization + propagation + its queue)
-                    // opens before our own transmitter could deliver
-                    if let Some(link) = self.pick_relay(sat, now, tx_bytes) {
+                    // ISL relay: hand the tensor down the multi-hop path
+                    // whose final pass (after every hop's serialization +
+                    // propagation and that transmitter's queue) opens
+                    // before our own transmitter could deliver
+                    let plan = self.pick_route(sat, now, tx_bytes, self.config.isl_max_hops);
+                    if !plan.hops.is_empty() {
+                        let first = plan.hops[0];
                         if let Some(f) = flights[i].as_mut() {
-                            f.relay = Some(link.to);
+                            f.relay = Some(plan.downlink_sat(sat));
+                            f.route = plan.hops;
+                            f.hop = 0;
                         }
-                        let serialize = link.rate.transfer_time(tx_bytes).value();
+                        let serialize = first.rate.transfer_time(tx_bytes).value();
                         q.schedule(now + serialize, Event::RelayTxDone(i));
                         continue;
                     }
@@ -552,19 +560,18 @@ impl FleetSimulator {
                     );
                 }
                 Event::RelayTxDone(i) => {
-                    let (sat, relay, tx_bytes, e_off) = {
+                    let (hop_src, link, tx_bytes, e_off) = {
                         let f = flights[i].as_ref().expect("flight in progress");
-                        (f.sat, f.downlink_sat(), f.tx_bytes, f.e_off)
+                        (f.hop_src(), f.route[f.hop], f.tx_bytes, f.e_off)
                     };
-                    // ISL serialization draws the source's antenna power:
-                    // same P_off over the (usually shorter) ISL transmit
-                    // time, so scale the downlink transmit energy by the
-                    // rate ratio
-                    let link = self.link_between(sat, relay);
+                    // ISL serialization draws this hop's source antenna
+                    // power: same P_off over the (usually shorter) ISL
+                    // transmit time, so scale the downlink transmit energy
+                    // by the rate ratio
                     let e_isl = Joules(e_off.value() * self.rate.value() / link.rate.value());
-                    if !self.states[sat].try_draw(now, e_isl) {
-                        metrics.reject_transmit(Some(sat));
-                        cluster.note_complete(sat, tx_bytes);
+                    if !self.states[hop_src].try_draw(now, e_isl) {
+                        metrics.reject_transmit(Some(hop_src));
+                        cluster.note_complete(hop_src, tx_bytes);
                         flights[i] = None;
                         continue;
                     }
@@ -574,21 +581,46 @@ impl FleetSimulator {
                     // count the handoff only now that the serialization
                     // actually happened (an energy refusal above means no
                     // bytes ever crossed the ISL)
-                    metrics.note_relay(sat, relay, tx_bytes);
+                    metrics.note_relay(hop_src, link.to, tx_bytes);
                     // the tensor has left this satellite: its queue slot
-                    // frees here, the neighbor's opens at reception
-                    cluster.note_complete(sat, tx_bytes);
+                    // frees here, the next carrier's opens at reception
+                    cluster.note_complete(hop_src, tx_bytes);
                     q.schedule(now + link.propagation.value(), Event::RelayRxDone(i));
                 }
                 Event::RelayRxDone(i) => {
-                    let (relay, tx_bytes) = {
+                    let (here, hop, route_len, tx_bytes) = {
                         let f = flights[i].as_ref().expect("flight in progress");
-                        (f.downlink_sat(), f.tx_bytes)
+                        (f.route[f.hop].to, f.hop, f.route.len(), f.tx_bytes)
                     };
-                    cluster.note_enqueue(relay, tx_bytes);
-                    // the neighbor's transmitter FIFO carries the downlink
+                    cluster.note_enqueue(here, tx_bytes);
+                    if hop + 1 < route_len {
+                        // intermediate carrier: re-derive the best
+                        // remaining path under the leftover hop budget —
+                        // queues and schedules moved while the tensor flew
+                        let budget = self.config.isl_max_hops - (hop + 1);
+                        let replan = self.pick_route(here, now, tx_bytes, budget);
+                        let f = flights[i].as_mut().expect("flight in progress");
+                        if replan.hops[..] != f.route[hop + 1..] {
+                            metrics.route_recomputes += 1;
+                            f.route.truncate(hop + 1);
+                            f.route.extend(replan.hops.iter().copied());
+                            f.relay = Some(f.route.last().expect("≥ 1 hop").to);
+                        }
+                        if f.route.len() > hop + 1 {
+                            // keep traveling: serialize onto the next hop
+                            f.hop = hop + 1;
+                            let next = f.route[f.hop];
+                            let serialize = next.rate.transfer_time(tx_bytes).value();
+                            q.schedule(now + serialize, Event::RelayTxDone(i));
+                            continue;
+                        }
+                        // the replan says this carrier's own pass is now
+                        // the earliest: downlink from here
+                    }
+                    // final carrier: its transmitter FIFO takes the
+                    // downlink (or its dead-transmitter short-circuit)
                     self.enqueue_downlink(
-                        relay,
+                        here,
                         i,
                         tx_bytes,
                         now,
@@ -667,6 +699,7 @@ fn complete(
         energy: f.energy,
         downlinked: f.tx_bytes,
         relay: f.relay,
+        path_len: f.route.len(),
     });
 }
 
@@ -701,6 +734,7 @@ mod tests {
             sats: (0..n).map(|i| spec(i as f64 * 100.0)).collect(),
             routing,
             isl: None,
+            isl_max_hops: 1,
             telemetry: TelemetryMode::Live,
             horizon: Seconds::from_hours(10_000.0),
         }
@@ -854,6 +888,7 @@ mod tests {
             sats: vec![doomed_spec("doomed"), spec(0.0)],
             routing: RoutingPolicy::LeastLoaded,
             isl: None,
+            isl_max_hops: 0,
             // unconstrained: the window telemetry would otherwise tighten
             // ARG's split away from the doomed transmitter
             telemetry: TelemetryMode::Unconstrained,
@@ -884,6 +919,7 @@ mod tests {
             sats: vec![doomed_spec("doomed")],
             routing: RoutingPolicy::RoundRobin,
             isl: None,
+            isl_max_hops: 0,
             telemetry: TelemetryMode::Unconstrained,
             horizon: Seconds::from_hours(10_000.0),
         };
@@ -940,6 +976,8 @@ mod tests {
             sats: vec![spec(0.0), spec(4.0 * 3600.0)],
             routing: RoutingPolicy::RoundRobin,
             isl,
+            // the PR 3 setting: a single relay hop
+            isl_max_hops: 1,
             telemetry: TelemetryMode::Unconstrained,
             horizon: Seconds::from_hours(10_000.0),
         };
@@ -1008,5 +1046,196 @@ mod tests {
         let mut cfg = config(3, RoutingPolicy::RoundRobin);
         cfg.isl = Some(pair_topology()); // 2-sat topology, 3-sat fleet
         let _ = FleetSimulator::new(cfg);
+    }
+
+    // ----------------------------------------------- multi-hop routing
+
+    /// Four satellites, one plane: the 0–1–2–3–0 ring. Satellite 2 sits
+    /// two hops from satellite 0.
+    fn ring4_topology() -> IslTopology {
+        let c = WalkerPattern::new(4, 1, 0, 53.0, 550.0).build();
+        IslTopology::build(&c, IslMode::Ring, BitsPerSec::from_mbps(50_000.0)).unwrap()
+    }
+
+    /// One ARG capture on sat 0 mid-gap. Passes: sat 0 at 16 000 s,
+    /// sats 1/3 at 15 000 s, sat 2 (two hops away) at 3 600 s — distinct
+    /// phases everywhere so no decision rests on a floating-point tie.
+    fn ring_scenario(max_hops: usize) -> (FleetSimConfig, Vec<Request>) {
+        let template = InstanceBuilder::new(profile())
+            .rate(crate::util::units::BitsPerSec::from_mbps(100.0))
+            .contact(Seconds::from_hours(8.0), Seconds::from_minutes(6.0));
+        let cfg = FleetSimConfig {
+            template,
+            profiles: vec![profile()],
+            sats: vec![spec(16_000.0), spec(15_000.0), spec(3600.0), spec(15_000.0)],
+            routing: RoutingPolicy::RoundRobin,
+            isl: Some(ring4_topology()),
+            isl_max_hops: max_hops,
+            telemetry: TelemetryMode::Unconstrained,
+            horizon: Seconds::from_hours(10_000.0),
+        };
+        let trace = vec![Request {
+            id: 0,
+            arrival: Seconds(1000.0),
+            data: Bytes::from_mb(50.0),
+            model: 0,
+            class: 0,
+        }];
+        (cfg, trace)
+    }
+
+    #[test]
+    fn max_hops_zero_reproduces_the_bent_pipe_bit_identically() {
+        // the acceptance criterion's other endpoint: a wired topology
+        // with a zero hop budget must be indistinguishable from no ISLs
+        let (no_isl_cfg, trace) = relay_scenario(None);
+        let no_isl = FleetSimulator::new(no_isl_cfg)
+            .run(&trace, &SolverRegistry::engine("arg").unwrap())
+            .unwrap();
+        let (mut zero_cfg, _) = relay_scenario(Some(pair_topology()));
+        zero_cfg.isl_max_hops = 0;
+        let zero = FleetSimulator::new(zero_cfg)
+            .run(&trace, &SolverRegistry::engine("arg").unwrap())
+            .unwrap();
+        assert_eq!(no_isl.metrics.records, zero.metrics.records);
+        assert_eq!(zero.metrics.relays, 0);
+        assert_eq!(zero.metrics.route_recomputes, 0);
+    }
+
+    #[test]
+    fn multi_hop_relay_chains_to_the_distant_pass() {
+        let (single_cfg, trace) = ring_scenario(1);
+        let single = FleetSimulator::new(single_cfg)
+            .run(&trace, &SolverRegistry::engine("arg").unwrap())
+            .unwrap();
+        let (multi_cfg, _) = ring_scenario(4);
+        let multi = FleetSimulator::new(multi_cfg)
+            .run(&trace, &SolverRegistry::engine("arg").unwrap())
+            .unwrap();
+
+        // one hop can only reach the 15 000 s passes
+        assert_eq!(single.metrics.completed(), 1);
+        assert_eq!(single.metrics.relays, 1);
+        assert_eq!(single.metrics.records[0].path_len, 1);
+
+        // the raised bound chains 0 → {1|3} → 2 into the 3 600 s pass
+        assert_eq!(multi.metrics.completed(), 1);
+        let r = &multi.metrics.records[0];
+        assert_eq!(r.relay, Some(2), "sat 2's pass is hours earlier");
+        assert_eq!(r.path_len, 2);
+        assert_eq!(r.sat, 0, "the record belongs to the capturing sat");
+        assert_eq!(multi.metrics.relays, 2, "one handoff per hop");
+        assert_eq!(multi.metrics.relayed_bytes, Bytes::from_mb(100.0));
+        assert!(
+            r.latency.value() < 0.5 * single.metrics.records[0].latency.value(),
+            "multi-hop {} must beat single-hop {}",
+            r.latency,
+            single.metrics.records[0].latency
+        );
+        // per-sat accounting: the source sent once, the intermediate
+        // carried and forwarded, the terminus downlinked
+        let m = &multi.metrics;
+        assert_eq!(m.per_sat()[0].relays_out, 1);
+        let term = r.relay.unwrap();
+        assert_eq!(m.per_sat()[term].relays_in, 1);
+        assert_eq!(m.per_sat()[term].transit_bytes, Bytes::from_mb(50.0));
+        let inter: Vec<usize> = (0..4)
+            .filter(|&s| s != 0 && s != 2 && m.per_sat()[s].relays_in > 0)
+            .collect();
+        assert_eq!(inter.len(), 1, "exactly one intermediate carrier");
+        assert_eq!(m.per_sat()[inter[0]].relays_out, 1, "carried and forwarded");
+        assert_eq!(m.per_sat()[inter[0]].transit_bytes, Bytes::from_mb(50.0));
+        // two serializations cost more ISL energy than one
+        assert!(r.energy.value() > single.metrics.records[0].energy.value());
+        // nothing moved the plan mid-flight in this quiet scenario
+        assert_eq!(m.route_recomputes, 0);
+    }
+
+    /// A 3-satellite *line* 0 – 1 – 2 (hand-built uneven planes; grid
+    /// wiring): satellite 0 has the single neighbor 1, and satellite 2 is
+    /// reachable only through it — no alternative paths, so replanning
+    /// outcomes are fully pinned down.
+    fn line3_topology() -> IslTopology {
+        use crate::orbit::constellation::{Constellation, NamedOrbit};
+        use crate::orbit::propagator::CircularOrbit;
+        let mk = |plane: usize, slot: usize, raan: f64, phase: f64| NamedOrbit {
+            name: format!("p{plane}s{slot}"),
+            plane,
+            slot,
+            orbit: CircularOrbit::new(550.0, 53.0, raan, phase),
+        };
+        let c = Constellation {
+            // index 0 = (p0, s1): in-plane pair with (p0, s0) only;
+            // index 1 = (p0, s0): pair link + cross-plane to (p1, s0);
+            // index 2 = (p1, s0): cross-plane link to (p0, s0) only
+            satellites: vec![mk(0, 1, 0.0, 180.0), mk(0, 0, 0.0, 0.0), mk(1, 0, 90.0, 0.0)],
+        };
+        IslTopology::build(&c, IslMode::Grid, BitsPerSec::from_mbps(50_000.0)).unwrap()
+    }
+
+    #[test]
+    fn intermediate_replanning_reroutes_around_a_dying_transmitter() {
+        // Request A (at 1000 s) routes 0 → 1 → 2 toward sat 2's lone
+        // 3600 s window, but its 200 MB tensor outruns that window and
+        // pins sat 2's transmitter when A's downlink is enqueued
+        // (~1009.7 s). Request B (at 1007.5 s — after A's first hop
+        // departs sat 0 at ~1006.4 s, so least-loaded still ties to
+        // sat 0) plans the same path while sat 2 is still alive, but
+        // *arrives* at satellite 1 (~1014 s) after the pinning — its
+        // replan must drop the dead terminus and downlink from
+        // satellite 1 (whose 15 000 s pass strictly beats going back:
+        // satellite 0 passes at 16 000 s).
+        let template = InstanceBuilder::new(profile())
+            .rate(crate::util::units::BitsPerSec::from_mbps(100.0))
+            .contact(Seconds::from_hours(8.0), Seconds::from_minutes(6.0));
+        let doomed = ContactSchedule {
+            windows: vec![ContactWindow {
+                start_s: 3600.0,
+                end_s: 3610.0,
+                max_elevation_deg: 90.0,
+            }],
+            horizon_s: 4000.0,
+        };
+        let cfg = FleetSimConfig {
+            template,
+            profiles: vec![profile()],
+            sats: vec![
+                spec(16_000.0),
+                spec(15_000.0),
+                SatelliteSpec::new("doomed", Box::new(ScheduleContact::new(doomed))),
+            ],
+            routing: RoutingPolicy::LeastLoaded,
+            isl: Some(line3_topology()),
+            isl_max_hops: 4,
+            telemetry: TelemetryMode::Unconstrained,
+            horizon: Seconds::from_hours(10_000.0),
+        };
+        let mk = |id: u64, at: f64| Request {
+            id,
+            arrival: Seconds(at),
+            data: Bytes::from_mb(200.0),
+            model: 0,
+            class: 0,
+        };
+        // least-loaded ties route both captures to satellite 0
+        let trace = vec![mk(0, 1000.0), mk(1, 1007.5)];
+        let result = FleetSimulator::new(cfg)
+            .run(&trace, &SolverRegistry::engine("arg").unwrap())
+            .unwrap();
+        let m = &result.metrics;
+        // A died with sat 2's schedule; B completed from its carrier
+        assert_eq!(m.unfinished, 1);
+        assert_eq!(m.completed(), 1);
+        assert_eq!(m.route_recomputes, 1, "B's mid-flight replan");
+        assert!(!result.states[2].tx_free_at.is_finite(), "sat 2 pinned");
+        let b = &m.records[0];
+        assert_eq!(b.id, 1);
+        assert_eq!(b.path_len, 1, "the replanned route stops at the carrier");
+        assert_eq!(b.relay, Some(1), "downlinked by the carrier");
+        assert_eq!(b.sat, 0);
+        // hops: A took two, B took one before the replan cut its route
+        assert_eq!(m.relays, 3);
+        assert_eq!(m.per_sat()[1].transit_bytes, Bytes::from_mb(400.0));
+        assert_eq!(m.per_sat()[2].transit_bytes, Bytes::from_mb(200.0));
     }
 }

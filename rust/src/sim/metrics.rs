@@ -15,13 +15,17 @@ use crate::util::units::{Bytes, Joules, Seconds};
 /// Completion record for one request.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RequestRecord {
+    /// Request id from the workload trace.
     pub id: u64,
+    /// Capture size `D`.
     pub data: Bytes,
     /// Chosen split (subtasks on the satellite).
     pub split: usize,
     /// Index of the satellite that served the request (0 in single-sat runs).
     pub sat: usize,
+    /// Arrival (submission) time.
     pub arrival: Seconds,
+    /// Completion time.
     pub completed: Seconds,
     /// End-to-end latency (completed − arrival), includes queueing.
     pub latency: Seconds,
@@ -33,12 +37,17 @@ pub struct RequestRecord {
     /// Satellite that performed the downlink when the boundary tensor was
     /// handed over an ISL; `None` for the paper's bent-pipe path.
     pub relay: Option<usize>,
+    /// Number of ISL hops the boundary tensor traversed (0 = bent pipe,
+    /// 1 = PR 3's single-hop relay, ≥ 2 = multi-hop contact-graph route).
+    pub path_len: usize,
 }
 
 /// Per-satellite slice of a run's metrics.
 #[derive(Debug, Clone)]
 pub struct SatMetrics {
+    /// Satellite name (from its [`crate::sim::fleet::SatelliteSpec`]).
     pub name: String,
+    /// Requests this satellite served to completion.
     pub completed: u64,
     /// Battery refused the processing draw at arrival.
     pub rejected_admission: u64,
@@ -46,15 +55,21 @@ pub struct SatMetrics {
     pub rejected_transmit: u64,
     /// In flight on this satellite when the horizon cut the run.
     pub unfinished: u64,
-    /// Boundary tensors this satellite handed to an ISL neighbor.
+    /// ISL handoffs this satellite originated (one per hop departed).
     pub relays_out: u64,
-    /// Boundary tensors this satellite downlinked for a neighbor.
+    /// ISL handoffs this satellite received (one per hop landed — as the
+    /// downlinking terminus or as an intermediate carrier).
     pub relays_in: u64,
     /// Bytes this satellite pushed over its ISLs.
     pub relayed_bytes: Bytes,
+    /// Bytes this satellite received over ISLs on behalf of other
+    /// satellites — tensors it carried in transit or downlinked for the
+    /// capturing satellite.
+    pub transit_bytes: Bytes,
     latency: StreamingSummary,
     /// Total on-board energy of this satellite's completed requests.
     pub energy: Joules,
+    /// Bytes this satellite downlinked to the ground.
     pub downlinked: Bytes,
 }
 
@@ -69,28 +84,34 @@ impl SatMetrics {
             relays_out: 0,
             relays_in: 0,
             relayed_bytes: Bytes::ZERO,
+            transit_bytes: Bytes::ZERO,
             latency: StreamingSummary::for_latency(),
             energy: Joules::ZERO,
             downlinked: Bytes::ZERO,
         }
     }
 
+    /// Total rejections across both phases.
     pub fn rejected(&self) -> u64 {
         self.rejected_admission + self.rejected_transmit
     }
 
+    /// Mean end-to-end latency of this satellite's completions.
     pub fn mean_latency(&self) -> Seconds {
         Seconds(self.latency.mean())
     }
 
+    /// Median latency of this satellite's completions.
     pub fn latency_p50(&self) -> Seconds {
         Seconds(self.latency.p50())
     }
 
+    /// 95th-percentile latency of this satellite's completions.
     pub fn latency_p95(&self) -> Seconds {
         Seconds(self.latency.p95())
     }
 
+    /// 99th-percentile latency of this satellite's completions.
     pub fn latency_p99(&self) -> Seconds {
         Seconds(self.latency.p99())
     }
@@ -105,9 +126,11 @@ impl SatMetrics {
 /// Aggregated metrics over a run.
 #[derive(Debug, Clone)]
 pub struct SimMetrics {
+    /// One completion record per served request, in completion order.
     pub records: Vec<RequestRecord>,
     latency: StreamingSummary,
     energy: Welford,
+    /// Total bytes downlinked across the run.
     pub total_downlinked: Bytes,
     /// Requests refused at arrival (battery could not cover processing).
     pub rejected_admission: u64,
@@ -117,11 +140,15 @@ pub struct SimMetrics {
     /// Requests still in flight (or never admitted) when the horizon cut
     /// the run.
     pub unfinished: u64,
-    /// Boundary tensors handed over an ISL instead of the capturing
-    /// satellite's own downlink.
+    /// ISL handoffs performed (one per hop: a tensor traversing an
+    /// h-hop route counts h times).
     pub relays: u64,
-    /// Total bytes that crossed ISLs.
+    /// Total bytes that crossed ISLs (per hop, like [`SimMetrics::relays`]).
     pub relayed_bytes: Bytes,
+    /// Intermediate-hop replans that *changed* the remaining route —
+    /// transmitter queues or contact schedules moved while the tensor was
+    /// in flight and the contact-graph search found a better tail.
+    pub route_recomputes: u64,
     per_sat: Vec<SatMetrics>,
 }
 
@@ -132,6 +159,7 @@ impl Default for SimMetrics {
 }
 
 impl SimMetrics {
+    /// An empty recorder (per-satellite slices grow on demand).
     pub fn new() -> Self {
         SimMetrics {
             records: Vec::new(),
@@ -143,6 +171,7 @@ impl SimMetrics {
             unfinished: 0,
             relays: 0,
             relayed_bytes: Bytes::ZERO,
+            route_recomputes: 0,
             per_sat: Vec::new(),
         }
     }
@@ -167,6 +196,8 @@ impl SimMetrics {
         &self.per_sat
     }
 
+    /// Record one completed request into the aggregate and its
+    /// satellite's slice.
     pub fn record(&mut self, r: RequestRecord) {
         self.latency.push(r.latency.value());
         self.energy.push(r.energy.value());
@@ -205,14 +236,17 @@ impl SimMetrics {
         }
     }
 
-    /// Count an ISL handoff: `src` pushed `bytes` to `dst`'s transmitter.
+    /// Count one ISL handoff (one hop): `src` pushed `bytes` to `dst`,
+    /// which now carries them in transit.
     pub fn note_relay(&mut self, src: usize, dst: usize, bytes: Bytes) {
         self.relays += 1;
         self.relayed_bytes += bytes;
         let s = self.sat_mut(src);
         s.relays_out += 1;
         s.relayed_bytes += bytes;
-        self.sat_mut(dst).relays_in += 1;
+        let d = self.sat_mut(dst);
+        d.relays_in += 1;
+        d.transit_bytes += bytes;
     }
 
     /// Total rejections across both phases.
@@ -220,30 +254,37 @@ impl SimMetrics {
         self.rejected_admission + self.rejected_transmit
     }
 
+    /// Requests served to completion.
     pub fn completed(&self) -> u64 {
         self.latency.count()
     }
 
+    /// Mean end-to-end latency over completions.
     pub fn mean_latency(&self) -> Seconds {
         Seconds(self.latency.mean())
     }
 
+    /// Mean satellite-side energy per completed request.
     pub fn mean_energy(&self) -> Joules {
         Joules(self.energy.mean())
     }
 
+    /// Total satellite-side energy over all completed requests.
     pub fn total_energy(&self) -> Joules {
         Joules(self.energy.mean() * self.energy.count() as f64)
     }
 
+    /// Median end-to-end latency.
     pub fn latency_p50(&self) -> Seconds {
         Seconds(self.latency.p50())
     }
 
+    /// 95th-percentile end-to-end latency.
     pub fn latency_p95(&self) -> Seconds {
         Seconds(self.latency.p95())
     }
 
+    /// 99th-percentile end-to-end latency.
     pub fn latency_p99(&self) -> Seconds {
         Seconds(self.latency.p99())
     }
@@ -280,6 +321,7 @@ mod tests {
             energy: Joules(energy),
             downlinked: Bytes::from_mb(10.0),
             relay: None,
+            path_len: 0,
         }
     }
 
@@ -360,8 +402,12 @@ mod tests {
         assert_eq!(m.per_sat()[1].relays_out, 1);
         assert_eq!(m.per_sat()[1].relays_in, 2);
         assert_eq!(m.per_sat()[1].relayed_bytes, Bytes::from_mb(5.0));
+        // transit bytes land on the receiving side of each hop
+        assert_eq!(m.per_sat()[0].transit_bytes, Bytes::from_mb(5.0));
+        assert_eq!(m.per_sat()[1].transit_bytes, Bytes::from_mb(50.0));
         // relays are bookkeeping, not outcomes: no completion implied
         assert_eq!(m.completed(), 0);
+        assert_eq!(m.route_recomputes, 0);
     }
 
     #[test]

@@ -44,17 +44,24 @@ pub struct SimConfig {
 
 /// Result of a run.
 pub struct SimResult {
+    /// Aggregate metrics for the run.
     pub metrics: SimMetrics,
+    /// Final satellite state (battery, counters).
     pub state: SatelliteState,
+    /// The horizon the run enforced.
     pub horizon: Seconds,
 }
 
+/// The single-satellite simulator (an N = 1 fleet under the hood).
 pub struct Simulator {
+    /// The run's configuration.
     pub config: SimConfig,
+    /// The satellite's initial state (battery optional).
     pub satellite: SatelliteState,
 }
 
 impl Simulator {
+    /// A simulator over `config` with a fresh, unconstrained satellite.
     pub fn new(config: SimConfig) -> Self {
         Simulator {
             config,
@@ -62,6 +69,7 @@ impl Simulator {
         }
     }
 
+    /// Replace the initial satellite state (e.g. to attach a battery).
     pub fn with_satellite(mut self, s: SatelliteState) -> Self {
         self.satellite = s;
         self
@@ -89,6 +97,7 @@ impl Simulator {
             sats: vec![SatelliteSpec::new("sat-0", Box::new(contact))],
             routing: RoutingPolicy::RoundRobin,
             isl: None,
+            isl_max_hops: 0,
             telemetry: TelemetryMode::Unconstrained,
             horizon,
         };

@@ -71,6 +71,7 @@ impl SizeDist {
         Ok(())
     }
 
+    /// Draw one request size.
     pub fn sample(&self, rng: &mut Pcg64) -> Bytes {
         match *self {
             SizeDist::Fixed(b) => b,
@@ -86,6 +87,7 @@ impl SizeDist {
 /// One inference request to be scheduled.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Request {
+    /// Unique id within the trace (assigned in arrival order).
     pub id: u64,
     /// Capture (arrival) time, seconds after epoch.
     pub arrival: Seconds,
@@ -103,6 +105,7 @@ pub struct Request {
 pub struct PoissonWorkload {
     /// Mean arrivals per second.
     pub rate_hz: f64,
+    /// Distribution of capture sizes.
     pub sizes: SizeDist,
     /// Number of distinct models (sampled Zipf-skewed).
     pub model_count: usize,
@@ -127,12 +130,14 @@ impl PoissonWorkload {
         }
     }
 
+    /// Draw each request's model id uniformly from `0..n`.
     pub fn with_models(mut self, n: usize) -> Self {
         assert!(n >= 1);
         self.model_count = n;
         self
     }
 
+    /// Mark a fraction `f` of requests as latency-critical (class 1).
     pub fn with_critical_fraction(mut self, f: f64) -> Self {
         assert!((0.0..=1.0).contains(&f));
         self.critical_fraction = f;

@@ -64,11 +64,13 @@ impl Default for Ilpb {
 }
 
 impl Ilpb {
+    /// Set the optimality tolerance `ε` (Algorithm 1's stop rule).
     pub fn with_epsilon(mut self, eps: f64) -> Self {
         self.epsilon = eps;
         self
     }
 
+    /// Disable pruning (exhaustive enumeration; for validation).
     pub fn without_bounding(mut self) -> Self {
         self.bounding = false;
         self

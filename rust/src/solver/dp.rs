@@ -12,6 +12,7 @@ use super::policy::OffloadPolicy;
 use crate::util::units::{Joules, Seconds};
 
 #[derive(Debug, Clone, Copy, Default)]
+/// The dynamic-programming solver (exact argmin over splits).
 pub struct DpSolver;
 
 impl OffloadPolicy for DpSolver {

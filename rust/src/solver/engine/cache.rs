@@ -33,7 +33,9 @@ const NIL: usize = usize::MAX;
 /// hits can report it faithfully).
 #[derive(Debug, Clone, PartialEq)]
 pub struct CachedDecision {
+    /// The cached decision.
     pub decision: Decision,
+    /// Whether telemetry tightening changed the wrapped policy's answer.
     pub tightened: bool,
 }
 
@@ -70,14 +72,17 @@ impl<V> LruCache<V> {
         }
     }
 
+    /// Maximum entries before LRU eviction.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
+    /// Entries currently cached.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// True when nothing is cached.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
@@ -122,6 +127,7 @@ impl<V> LruCache<V> {
         self.push_front(idx);
     }
 
+    /// Drop every entry.
     pub fn clear(&mut self) {
         self.map.clear();
         self.nodes.clear();

@@ -49,11 +49,14 @@ const EPS: f64 = 1e-9;
 /// One solve: the static problem plus the live context.
 #[derive(Debug, Clone)]
 pub struct SolveRequest {
+    /// The ILP instance to solve.
     pub instance: Instance,
+    /// Live platform context for constraint tightening.
     pub telemetry: Telemetry,
 }
 
 impl SolveRequest {
+    /// A request with unconstrained telemetry.
     pub fn new(instance: Instance) -> Self {
         SolveRequest {
             instance,
@@ -61,6 +64,7 @@ impl SolveRequest {
         }
     }
 
+    /// Attach live telemetry to the request.
     pub fn with_telemetry(mut self, telemetry: Telemetry) -> Self {
         self.telemetry = telemetry;
         self

@@ -45,20 +45,21 @@ pub struct Telemetry {
     /// Tightening: a split `s` is allowed only when
     /// `latency(s) + queue_depth · t_satellite(s)` meets the deadline.
     pub deadline: Option<Seconds>,
-    /// ISL rate toward the relay neighbor whose ground pass opens first,
-    /// when the platform has one ([`crate::link::isl::IslTopology`]).
-    /// Both relay fields always describe the same concrete link.
+    /// Effective ISL rate along the relay path whose final ground pass
+    /// opens first, when the platform has one (single link or multi-hop
+    /// chain — see [`crate::link::route::advertise`]). Both relay fields
+    /// always describe the same concrete path.
     ///
     /// Relaxation (paired with [`Telemetry::neighbor_contact_in`]): a
     /// split the *own* contact window excludes stays allowed when its
-    /// boundary tensor crosses the ISL before the neighbor's pass opens —
-    /// a cheap relay means closing windows no longer force a later split.
-    /// Never tightens on its own.
+    /// boundary tensor crosses the ISLs before the relaying satellite's
+    /// pass opens — a cheap relay means closing windows no longer force a
+    /// later split. Never tightens on its own.
     pub isl_rate: Option<BitsPerSec>,
-    /// Serialization budget toward that relay neighbor: seconds until its
-    /// ground pass opens, less the one-way ISL propagation — a tensor
-    /// whose ISL serialization fits this budget arrives by the pass.
-    /// See [`Telemetry::isl_rate`].
+    /// Serialization budget toward that relay path's downlinking
+    /// satellite: seconds until its ground pass opens, less the path's
+    /// summed one-way propagation — a tensor whose ISL serialization fits
+    /// this budget arrives by the pass. See [`Telemetry::isl_rate`].
     pub neighbor_contact_in: Option<Seconds>,
 }
 
@@ -82,22 +83,26 @@ impl Telemetry {
         }
     }
 
+    /// Set the battery state of charge (panics outside `[0, 1]`).
     pub fn with_battery_soc(mut self, soc: f64) -> Self {
         assert!((0.0..=1.0).contains(&soc), "SoC must be in [0, 1]");
         self.battery_soc = soc;
         self
     }
 
+    /// Declare the usable link time left in the current window.
     pub fn with_contact_remaining(mut self, t: Seconds) -> Self {
         self.contact_remaining = Some(t);
         self
     }
 
+    /// Declare the requests already queued ahead of this one.
     pub fn with_queue_depth(mut self, depth: usize) -> Self {
         self.queue_depth = depth;
         self
     }
 
+    /// Attach an end-to-end latency bound.
     pub fn with_deadline(mut self, d: Seconds) -> Self {
         self.deadline = Some(d);
         self

@@ -63,15 +63,21 @@ pub struct Instance {
 /// Raw (unnormalized) totals for one assignment.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Costs {
+    /// End-to-end latency (Eq. 5 total).
     pub latency: Seconds,
+    /// Satellite-side energy (Eq. 8 total).
     pub energy: Joules,
     /// Eq. 5 decomposition, for the figure reports.
     pub t_satellite: Seconds,
+    /// Downlink term of Eq. 5 (incl. multi-window waiting).
     pub t_downlink: Seconds,
+    /// Ground-station → cloud WAN term of Eq. 5.
     pub t_ground_cloud: Seconds,
+    /// Cloud-compute term of Eq. 5.
     pub t_cloud: Seconds,
     /// Eq. 8 decomposition.
     pub e_processing: Joules,
+    /// Transmission term of Eq. 8.
     pub e_transmission: Joules,
 }
 
@@ -79,11 +85,17 @@ pub struct Costs {
 /// the objective `Z` (Eq. 9).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Objective {
+    /// Smallest feasible energy (normalization floor).
     pub e_min: Joules,
+    /// Largest feasible energy (normalization ceiling).
     pub e_max: Joules,
+    /// Smallest feasible latency.
     pub t_min: Seconds,
+    /// Largest feasible latency.
     pub t_max: Seconds,
+    /// Energy weight `μ`.
     pub mu: f64,
+    /// Latency weight `λ`.
     pub lambda: f64,
 }
 
@@ -123,6 +135,7 @@ pub struct Decision {
 }
 
 impl Decision {
+    /// A decision for split `s` of `k` subtasks (derives `h`).
     pub fn new(split: usize, z: f64, costs: Costs, k: usize) -> Decision {
         Decision {
             split,
@@ -182,6 +195,7 @@ impl InstanceBuilder {
         }
     }
 
+    /// Set the request data size `D`.
     pub fn data(mut self, d: Bytes) -> Self {
         self.data = d;
         self
@@ -194,42 +208,52 @@ impl InstanceBuilder {
         self
     }
 
+    /// Set the satellite processing coefficient `β`, s/KB.
     pub fn beta_s_per_kb(mut self, b: f64) -> Self {
         self.beta_s_per_kb = b;
         self
     }
 
+    /// Set the cloud processing coefficient `γ`, s/KB.
     pub fn gamma_s_per_kb(mut self, g: f64) -> Self {
         self.gamma_s_per_kb = g;
         self
     }
 
+    /// Set the constraint (10) cap `γ_max`, s/KB.
     pub fn gamma_max_s_per_kb(mut self, g: f64) -> Self {
         self.gamma_max_s_per_kb = g;
         self
     }
 
+    /// Set the satellite-ground link rate `R_i`.
     pub fn rate(mut self, r: BitsPerSec) -> Self {
         self.rate = r;
         self
     }
 
+    /// Set the contact cadence (`t_cyc` period, `t_con` duration).
     pub fn contact(mut self, t_cyc: Seconds, t_con: Seconds) -> Self {
         self.t_cyc = t_cyc;
         self.t_con = t_con;
         self
     }
 
+    /// Set the ground-station → cloud WAN rate.
     pub fn ground_rate(mut self, r: BitsPerSec) -> Self {
         self.ground_rate = r;
         self
     }
 
+    /// Declare the data center co-located with the ground station
+    /// (zeroes the WAN hop).
     pub fn ground_colocated(mut self, yes: bool) -> Self {
         self.ground_colocated = yes;
         self
     }
 
+    /// Set the on-board accelerator model (`ζ` throughput and the
+    /// Eq. 6/7 power constants).
     pub fn gpu(mut self, zeta_kb_per_s: f64, p_max: Watts, p_idle: Watts, p_leak: Watts) -> Self {
         self.zeta_kb_per_s = zeta_kb_per_s;
         self.p_max = p_max;
@@ -238,6 +262,7 @@ impl InstanceBuilder {
         self
     }
 
+    /// Set the antenna transmit power `P^off`.
     pub fn p_off(mut self, p: Watts) -> Self {
         self.p_off = p;
         self
@@ -258,6 +283,7 @@ impl InstanceBuilder {
         self
     }
 
+    /// Validate and freeze the instance (precomputes per-stage costs).
     pub fn build(self) -> anyhow::Result<Instance> {
         anyhow::ensure!(
             (self.mu + self.lambda - 1.0).abs() < 1e-9,

@@ -39,6 +39,7 @@ pub struct Args {
 }
 
 impl Args {
+    /// Start a parser for `program`, described by `about` in `--help`.
     pub fn new(program: &str, about: &str) -> Self {
         Args {
             program: program.to_string(),
@@ -124,6 +125,7 @@ impl Args {
         Ok(self)
     }
 
+    /// The rendered `--help` text.
     pub fn usage(&self) -> String {
         let mut s = String::new();
         let _ = writeln!(s, "{} — {}", self.program, self.about);
@@ -147,14 +149,17 @@ impl Args {
 
     // ------------------------------------------------------------ accessors
 
+    /// Was the boolean flag `--name` passed?
     pub fn flag_set(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The raw value of `--name` (its default when not passed).
     pub fn get_str(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(String::as_str)
     }
 
+    /// `--name` parsed as a float.
     pub fn get_f64(&self, name: &str) -> anyhow::Result<f64> {
         let raw = self
             .values
@@ -164,6 +169,7 @@ impl Args {
             .map_err(|e| anyhow::anyhow!("--{name}={raw} is not a number: {e}"))
     }
 
+    /// `--name` parsed as an unsigned integer.
     pub fn get_u64(&self, name: &str) -> anyhow::Result<u64> {
         let raw = self
             .values
@@ -173,10 +179,12 @@ impl Args {
             .map_err(|e| anyhow::anyhow!("--{name}={raw} is not an integer: {e}"))
     }
 
+    /// `--name` parsed as a `usize`.
     pub fn get_usize(&self, name: &str) -> anyhow::Result<usize> {
         Ok(self.get_u64(name)? as usize)
     }
 
+    /// Arguments that were not options, in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }

@@ -10,6 +10,22 @@
 //! this module is the substrate replacement: a recursive-descent parser and
 //! a pretty/compact writer over a [`Json`] enum, plus ergonomic typed
 //! accessors that produce good error messages for config validation.
+//!
+//! Parsing and writing round-trip exactly (object keys are sorted, so the
+//! writer is deterministic):
+//!
+//! ```
+//! use leo_infer::util::json::Json;
+//!
+//! let doc = Json::parse(r#"{"name": "leo", "k": 3, "ok": true, "xs": [1, 2]}"#).unwrap();
+//! assert_eq!(doc.get_str("name").unwrap(), "leo");
+//! assert_eq!(doc.get_usize("k").unwrap(), 3);
+//! assert_eq!(doc.get("xs").unwrap().as_arr().unwrap().len(), 2);
+//!
+//! // write → parse returns the identical tree, in both renderings
+//! assert_eq!(Json::parse(&doc.to_string_pretty()).unwrap(), doc);
+//! assert_eq!(Json::parse(&doc.to_string()).unwrap(), doc);
+//! ```
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -18,11 +34,17 @@ use std::fmt;
 /// is deterministic (stable ordering regardless of insertion order).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always stored as `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array of values.
     Arr(Vec<Json>),
+    /// An object; keys sorted for deterministic output.
     Obj(BTreeMap<String, Json>),
 }
 
@@ -30,8 +52,20 @@ pub enum Json {
 /// (`thiserror` is unavailable offline, so `Display`/`Error` are manual.)
 #[derive(Debug)]
 pub enum JsonError {
-    Parse { pos: usize, msg: String },
-    Access { path: String, msg: String },
+    /// The document failed to parse at byte offset `pos`.
+    Parse {
+        /// Byte offset of the failure in the input text.
+        pos: usize,
+        /// What the parser expected or found.
+        msg: String,
+    },
+    /// A typed accessor was applied to the wrong shape of value.
+    Access {
+        /// Dotted key path to the offending value.
+        path: String,
+        /// What the accessor expected or found.
+        msg: String,
+    },
 }
 
 impl fmt::Display for JsonError {
@@ -93,6 +127,7 @@ impl Json {
         }
     }
 
+    /// The value as a number.
     pub fn as_f64(&self) -> Result<f64, JsonError> {
         match self {
             Json::Num(x) => Ok(*x),
@@ -100,6 +135,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative whole number.
     pub fn as_u64(&self) -> Result<u64, JsonError> {
         let x = self.as_f64()?;
         if x < 0.0 || x.fract() != 0.0 || x > u64::MAX as f64 {
@@ -108,10 +144,12 @@ impl Json {
         Ok(x as u64)
     }
 
+    /// The value as a non-negative whole number, `usize`-sized.
     pub fn as_usize(&self) -> Result<usize, JsonError> {
         Ok(self.as_u64()? as usize)
     }
 
+    /// The value as a boolean.
     pub fn as_bool(&self) -> Result<bool, JsonError> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -119,6 +157,7 @@ impl Json {
         }
     }
 
+    /// The value as a string slice.
     pub fn as_str(&self) -> Result<&str, JsonError> {
         match self {
             Json::Str(s) => Ok(s),
@@ -126,6 +165,7 @@ impl Json {
         }
     }
 
+    /// The value as an array slice.
     pub fn as_arr(&self) -> Result<&[Json], JsonError> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -133,6 +173,7 @@ impl Json {
         }
     }
 
+    /// The value as an object map.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>, JsonError> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -145,10 +186,12 @@ impl Json {
         self.get(key)?.as_f64().map_err(|e| e.prefix(key))
     }
 
+    /// `obj.get_usize("x")` == `obj.get("x")?.as_usize()?` with path context.
     pub fn get_usize(&self, key: &str) -> Result<usize, JsonError> {
         self.get(key)?.as_usize().map_err(|e| e.prefix(key))
     }
 
+    /// `obj.get_str("x")` == `obj.get("x")?.as_str()?` with path context.
     pub fn get_str(&self, key: &str) -> Result<&str, JsonError> {
         self.get(key)?.as_str().map_err(|e| e.prefix(key))
     }
@@ -161,6 +204,7 @@ impl Json {
         }
     }
 
+    /// `usize` field with a default when absent.
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, JsonError> {
         match self.opt(key) {
             Some(v) => v.as_usize().map_err(|e| e.prefix(key)),
@@ -168,6 +212,7 @@ impl Json {
         }
     }
 
+    /// String field with a default when absent.
     pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> Result<&'a str, JsonError> {
         match self.opt(key) {
             Some(v) => v.as_str().map_err(|e| e.prefix(key)),
@@ -175,6 +220,7 @@ impl Json {
         }
     }
 
+    /// Boolean field with a default when absent.
     pub fn bool_or(&self, key: &str, default: bool) -> Result<bool, JsonError> {
         match self.opt(key) {
             Some(v) => v.as_bool().map_err(|e| e.prefix(key)),
@@ -264,18 +310,22 @@ impl Json {
 
     // ---------------------------------------------------------- constructors
 
+    /// Build an object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build an array from any value iterator.
     pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
         Json::Arr(items.into_iter().collect())
     }
 
+    /// Wrap a number.
     pub fn num(x: f64) -> Json {
         Json::Num(x)
     }
 
+    /// Wrap a string.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }

@@ -29,6 +29,7 @@ pub struct Runner {
 }
 
 impl Runner {
+    /// A runner executing `cases` cases, labeled `name` in failures.
     pub fn new(name: &str, cases: u64) -> Self {
         // Honour an environment override so failures can be replayed:
         // LEO_INFER_PROPTEST_SEED=<seed> cargo test ...

@@ -8,13 +8,21 @@
 /// Summary statistics over a sample.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Sample size.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Sample standard deviation (n − 1 denominator).
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Median.
     pub p50: f64,
+    /// 95th percentile.
     pub p95: f64,
+    /// 99th percentile.
     pub p99: f64,
     /// Half-width of the 95% confidence interval on the mean
     /// (normal approximation; the benches use n ≥ 30).
@@ -131,6 +139,7 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// An empty accumulator.
     pub fn new() -> Self {
         Welford {
             n: 0,
@@ -141,6 +150,7 @@ impl Welford {
         }
     }
 
+    /// Fold one sample into the running moments.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let delta = x - self.mean;
@@ -150,10 +160,12 @@ impl Welford {
         self.max = self.max.max(x);
     }
 
+    /// Number of samples folded in.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean (0 before any sample).
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -162,6 +174,7 @@ impl Welford {
         }
     }
 
+    /// Sample variance (n − 1 denominator; 0 below two samples).
     pub fn variance(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -170,10 +183,12 @@ impl Welford {
         }
     }
 
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.variance().sqrt()
     }
 
+    /// Smallest sample seen (0 before any sample).
     pub fn min(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -182,6 +197,7 @@ impl Welford {
         }
     }
 
+    /// Largest sample seen (0 before any sample).
     pub fn max(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -237,6 +253,7 @@ impl LogHistogram {
         }
     }
 
+    /// Count one sample into its logarithmic bucket.
     pub fn record(&mut self, x: f64) {
         self.total += 1;
         if x < self.scale {
@@ -248,6 +265,7 @@ impl LogHistogram {
         self.counts[idx] += 1;
     }
 
+    /// Number of samples recorded (underflows included).
     pub fn count(&self) -> u64 {
         self.total
     }
@@ -324,6 +342,7 @@ impl StreamingSummary {
         Self::new(1e-3)
     }
 
+    /// Fold one sample into both the moments and the quantile histogram.
     pub fn push(&mut self, x: f64) {
         self.welford.push(x);
         self.hist.record(x);
@@ -336,22 +355,27 @@ impl StreamingSummary {
         self.hist.merge(&other.hist);
     }
 
+    /// Number of samples folded in.
     pub fn count(&self) -> u64 {
         self.welford.count()
     }
 
+    /// Running mean.
     pub fn mean(&self) -> f64 {
         self.welford.mean()
     }
 
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.welford.std()
     }
 
+    /// Smallest sample seen.
     pub fn min(&self) -> f64 {
         self.welford.min()
     }
 
+    /// Largest sample seen.
     pub fn max(&self) -> f64 {
         self.welford.max()
     }
@@ -361,14 +385,17 @@ impl StreamingSummary {
         self.hist.quantile(q)
     }
 
+    /// Median (bucket-approximate).
     pub fn p50(&self) -> f64 {
         self.quantile(0.50)
     }
 
+    /// 95th percentile (bucket-approximate).
     pub fn p95(&self) -> f64 {
         self.quantile(0.95)
     }
 
+    /// 99th percentile (bucket-approximate).
     pub fn p99(&self) -> f64 {
         self.quantile(0.99)
     }

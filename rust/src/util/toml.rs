@@ -12,12 +12,41 @@
 //! Arrays, inline tables, multi-line strings, and dates are *not*
 //! supported and fail loudly. The output is a [`Json`] object so the
 //! existing typed accessors (and every `from_json` constructor) work
-//! unchanged on both formats.
+//! unchanged on both formats:
+//!
+//! ```
+//! use leo_infer::util::toml;
+//!
+//! let doc = toml::parse(r#"
+//! name = "demo-fleet"      # comments and blank lines are fine
+//! sats = 4
+//!
+//! [base]
+//! rate_mbps = 55.0
+//! ground_colocated = true
+//! "#).unwrap();
+//! assert_eq!(doc.get_str("name").unwrap(), "demo-fleet");
+//! assert_eq!(doc.get_usize("sats").unwrap(), 4);
+//! let base = doc.get("base").unwrap();
+//! assert_eq!(base.get_f64("rate_mbps").unwrap(), 55.0);
+//! assert!(base.get("ground_colocated").unwrap().as_bool().unwrap());
+//! ```
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
 /// Parse a TOML-subset document into a [`Json::Obj`] tree.
+///
+/// The tree is indistinguishable from parsing the equivalent JSON, so
+/// either format feeds the same `from_json` constructors:
+///
+/// ```
+/// use leo_infer::util::{json::Json, toml};
+///
+/// let from_toml = toml::parse("x = 1.5\n[t]\nok = false\n").unwrap();
+/// let from_json = Json::parse(r#"{"x": 1.5, "t": {"ok": false}}"#).unwrap();
+/// assert_eq!(from_toml, from_json);
+/// ```
 pub fn parse(text: &str) -> anyhow::Result<Json> {
     let mut root: BTreeMap<String, Json> = BTreeMap::new();
     let mut current: Vec<String> = Vec::new();

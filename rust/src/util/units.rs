@@ -13,26 +13,34 @@ macro_rules! unit {
     ($(#[$doc:meta])* $name:ident, $suffix:expr) => {
         $(#[$doc])*
         #[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
-        pub struct $name(pub f64);
+        pub struct $name(
+            /// Magnitude in this unit's base scale.
+            pub f64,
+        );
 
         impl $name {
+            /// The zero quantity.
             pub const ZERO: $name = $name(0.0);
 
+            /// The raw `f64` magnitude (in this unit's base scale).
             #[inline]
             pub fn value(self) -> f64 {
                 self.0
             }
 
+            /// The larger of the two quantities.
             #[inline]
             pub fn max(self, other: $name) -> $name {
                 $name(self.0.max(other.0))
             }
 
+            /// The smaller of the two quantities.
             #[inline]
             pub fn min(self, other: $name) -> $name {
                 $name(self.0.min(other.0))
             }
 
+            /// True unless the magnitude is NaN or infinite.
             #[inline]
             pub fn is_finite(self) -> bool {
                 self.0.is_finite()
@@ -151,48 +159,59 @@ unit!(
 );
 
 impl Bytes {
+    /// Binary kilobytes (KiB) to bytes.
     pub fn from_kb(kb: f64) -> Bytes {
         Bytes(kb * 1024.0)
     }
 
+    /// Binary megabytes (MiB) to bytes.
     pub fn from_mb(mb: f64) -> Bytes {
         Bytes(mb * 1024.0 * 1024.0)
     }
 
+    /// Binary gigabytes (GiB) to bytes.
     pub fn from_gb(gb: f64) -> Bytes {
         Bytes(gb * 1024.0 * 1024.0 * 1024.0)
     }
 
+    /// Magnitude in binary kilobytes.
     pub fn kb(self) -> f64 {
         self.0 / 1024.0
     }
 
+    /// Magnitude in binary megabytes.
     pub fn mb(self) -> f64 {
         self.0 / (1024.0 * 1024.0)
     }
 
+    /// Magnitude in binary gigabytes.
     pub fn gb(self) -> f64 {
         self.0 / (1024.0 * 1024.0 * 1024.0)
     }
 
+    /// Magnitude in bits (8 per byte).
     pub fn bits(self) -> f64 {
         self.0 * 8.0
     }
 }
 
 impl Seconds {
+    /// Minutes to seconds.
     pub fn from_minutes(m: f64) -> Seconds {
         Seconds(m * 60.0)
     }
 
+    /// Hours to seconds.
     pub fn from_hours(h: f64) -> Seconds {
         Seconds(h * 3600.0)
     }
 
+    /// Magnitude in minutes.
     pub fn minutes(self) -> f64 {
         self.0 / 60.0
     }
 
+    /// Magnitude in hours.
     pub fn hours(self) -> f64 {
         self.0 / 3600.0
     }
@@ -204,6 +223,7 @@ impl BitsPerSec {
         BitsPerSec(mbps * 1e6)
     }
 
+    /// Magnitude in megabits per second (SI).
     pub fn mbps(self) -> f64 {
         self.0 / 1e6
     }

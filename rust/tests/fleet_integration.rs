@@ -62,6 +62,7 @@ fn n1_fleet_matches_the_legacy_simulator_bit_identically() {
         sats: vec![SatelliteSpec::new("sat-0", Box::new(contact))],
         routing: RoutingPolicy::RoundRobin,
         isl: None,
+        isl_max_hops: 0,
         telemetry: TelemetryMode::Unconstrained,
         horizon,
     };

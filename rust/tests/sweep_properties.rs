@@ -14,8 +14,9 @@ use leo_infer::exp::{self, Axes, SweepSpec};
 use leo_infer::link::isl::IslMode;
 
 /// A grid small enough for the test suite but wide enough to exercise
-/// multiple axes, relays, and replications: 2 solvers × 2 routings ×
-/// 2 ISL modes × 2 reps = 16 cells.
+/// multiple axes, relays, multi-hop routing, and replications:
+/// 2 solvers × 2 routings × 2 ISL modes × 2 hop bounds × 2 reps =
+/// 32 cells.
 fn wide_spec() -> SweepSpec {
     let mut base = FleetScenario::walker_631();
     base.sats = 4;
@@ -35,6 +36,7 @@ fn wide_spec() -> SweepSpec {
             solver: vec!["ilpb".into(), "arg".into()],
             routing: vec!["round-robin".into(), "least-loaded".into()],
             isl: vec![IslMode::Off, IslMode::Grid],
+            route: vec![1, 3],
             ..Axes::default()
         },
     }
@@ -45,7 +47,7 @@ fn parallel_and_serial_exports_are_byte_identical() {
     let spec = wide_spec();
     let serial = exp::run_sweep(&spec, 1).unwrap();
     let parallel = exp::run_sweep(&spec, 8).unwrap();
-    assert_eq!(serial.cells.len(), 16);
+    assert_eq!(serial.cells.len(), 32);
     assert_eq!(
         exp::to_csv(&serial),
         exp::to_csv(&parallel),
@@ -84,7 +86,7 @@ fn grouped_aggregates_are_thread_count_invariant() {
     let spec = wide_spec();
     let serial = exp::run_sweep(&spec, 1).unwrap();
     let parallel = exp::run_sweep(&spec, 8).unwrap();
-    for axis in ["solver", "routing", "isl", "rep"] {
+    for axis in ["solver", "routing", "isl", "route", "rep"] {
         let a = exp::comparison_table(&serial, axis).unwrap();
         let b = exp::comparison_table(&parallel, axis).unwrap();
         assert_eq!(a, b, "axis {axis}");
@@ -106,7 +108,7 @@ fn committed_ci_spec_loads_and_is_deterministic() {
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../specs/ci_sweep.toml");
     let spec = SweepSpec::load(path).unwrap().smoke();
     assert_eq!(spec.replications, 1, "--smoke collapses replications");
-    assert_eq!(spec.len(), 4, "2 solvers x 2 routings");
+    assert_eq!(spec.len(), 16, "2 solvers x 2 routings x 2 isl x 2 hop bounds");
     let serial = exp::run_sweep(&spec, 1).unwrap();
     let threaded = exp::run_sweep(&spec, 2).unwrap();
     assert_eq!(exp::to_csv(&serial), exp::to_csv(&threaded));
