@@ -8,6 +8,10 @@
 //! is the only O(N) term per event.
 //!
 //! Run: `cargo bench --bench fleet_scaling`
+//!
+//! Besides the console tables, the run drops `BENCH_fleet.json` in the
+//! working directory (machine-readable rows, same numbers as the tables)
+//! so the perf trajectory can be tracked across commits.
 
 mod common;
 
@@ -16,9 +20,12 @@ use leo_infer::config::FleetScenario;
 use leo_infer::dnn::profile::ModelProfile;
 use leo_infer::sim::fleet::FleetSimulator;
 use leo_infer::solver::SolverRegistry;
+use leo_infer::util::json::Json;
 use leo_infer::util::rng::Pcg64;
 
 fn main() {
+    let mut scaling_rows: Vec<Json> = Vec::new();
+    let mut isl_rows: Vec<Json> = Vec::new();
     banner("fleet DES scaling (periodic contacts, least-loaded routing, ILPB)");
     println!(
         "{:>5} {:>7} {:>10} {:>9} {:>11} {:>12} {:>12}",
@@ -54,6 +61,16 @@ fn main() {
             fmt_time(wall),
             trace.len() as f64 / wall
         );
+        scaling_rows.push(Json::obj(vec![
+            ("sats", Json::num(t as f64)),
+            ("planes", Json::num(p as f64)),
+            ("requests", Json::num(trace.len() as f64)),
+            ("completed", Json::num(m.completed() as f64)),
+            ("rejected", Json::num(m.rejected() as f64)),
+            ("unfinished", Json::num(m.unfinished as f64)),
+            ("wall_s", Json::num(wall)),
+            ("req_per_s", Json::num(trace.len() as f64 / wall)),
+        ]));
     }
     // ISL overhead: the relay path adds a per-SatDone neighbor scan and
     // two extra events per handoff — it must not change the cost class.
@@ -95,6 +112,23 @@ fn main() {
             result.metrics.relays,
             fmt_time(wall)
         );
+        isl_rows.push(Json::obj(vec![
+            ("isl", Json::str(isl.as_str())),
+            ("requests", Json::num(trace.len() as f64)),
+            ("completed", Json::num(result.metrics.completed() as f64)),
+            ("relays", Json::num(result.metrics.relays as f64)),
+            ("wall_s", Json::num(wall)),
+        ]));
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("fleet_scaling")),
+        ("scaling", Json::arr(scaling_rows)),
+        ("isl_overhead", Json::arr(isl_rows)),
+    ]);
+    match std::fs::write("BENCH_fleet.json", report.to_string_pretty()) {
+        Ok(()) => println!("\nwrote BENCH_fleet.json"),
+        Err(e) => println!("\nwarning: could not write BENCH_fleet.json: {e}"),
     }
 
     println!(

@@ -22,6 +22,7 @@ use crate::orbit::constellation::WalkerPattern;
 use crate::orbit::contact::ContactSchedule;
 use crate::orbit::eclipse::eclipse_fraction;
 use crate::orbit::geometry::GroundStation;
+use crate::placement::{EvictionPolicy, ModelArtifact, PlacementConfig, PlacementPolicy};
 use crate::sim::contact::{ContactModel, PeriodicContact, ScheduleContact};
 use crate::sim::fleet::{FleetSimConfig, SatelliteSpec, TelemetryMode};
 use crate::sim::workload::{PoissonWorkload, SizeDist};
@@ -330,6 +331,21 @@ pub struct FleetScenario {
     pub panel_efficiency: f64,
     /// Panel pointing factor in `(0, 1]` (cosine losses).
     pub panel_pointing: f64,
+    // --- model placement / artifact caching ---
+    /// Per-satellite artifact storage budget, MB (`0` = unlimited; with
+    /// `everywhere` placement an unlimited budget keeps the placement
+    /// layer passive and the fleet bit-identical to pre-placement runs).
+    pub storage_budget_mb: f64,
+    /// Placement policy name: `everywhere | static | demand`
+    /// ([`PlacementPolicy::from_name`]).
+    pub placement: String,
+    /// Eviction policy name: `lru | lfu | pinned`
+    /// ([`EvictionPolicy::from_name`]).
+    pub eviction: String,
+    /// Total weight footprint per model, MB — what
+    /// [`ModelArtifact::from_profile`] spreads across the profile's
+    /// layers.
+    pub model_weights_mb: f64,
     // --- workload ---
     /// Mean capture spacing, seconds (fleet-wide Poisson rate = 1/this).
     pub interarrival_s: f64,
@@ -369,6 +385,10 @@ impl FleetScenario {
             panel_area_m2: 0.06,
             panel_efficiency: 0.3,
             panel_pointing: 0.6,
+            storage_budget_mb: 0.0,
+            placement: "everywhere".to_string(),
+            eviction: "lru".to_string(),
+            model_weights_mb: 200.0,
             interarrival_s: 1800.0,
             data_gb_lo: 0.5,
             data_gb_hi: 8.0,
@@ -442,6 +462,41 @@ impl FleetScenario {
         Ok(PoissonWorkload::new(1.0 / self.interarrival_s, sizes))
     }
 
+    /// Resolve the placement axis into a [`PlacementConfig`] over
+    /// `profiles` (artifact `i` footprints profile `i` at
+    /// [`FleetScenario::model_weights_mb`]). A zero storage budget means
+    /// unlimited, so the default `everywhere`-with-no-budget scenario
+    /// stays passive ([`PlacementConfig::is_passive`]) and the fleet runs
+    /// bit-identically to pre-placement builds.
+    pub fn placement_config(
+        &self,
+        profiles: &[ModelProfile],
+    ) -> anyhow::Result<PlacementConfig> {
+        anyhow::ensure!(
+            self.storage_budget_mb >= 0.0 && self.storage_budget_mb.is_finite(),
+            "storage_budget_mb must be a finite non-negative size, got {}",
+            self.storage_budget_mb
+        );
+        anyhow::ensure!(
+            self.model_weights_mb > 0.0 && self.model_weights_mb.is_finite(),
+            "model_weights_mb must be a positive finite size, got {}",
+            self.model_weights_mb
+        );
+        Ok(PlacementConfig {
+            policy: PlacementPolicy::from_name(&self.placement)?,
+            eviction: EvictionPolicy::from_name(&self.eviction)?,
+            budget: (self.storage_budget_mb > 0.0)
+                .then(|| Bytes::from_mb(self.storage_budget_mb)),
+            artifacts: profiles
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    ModelArtifact::from_profile(i, p, Bytes::from_mb(self.model_weights_mb))
+                })
+                .collect(),
+        })
+    }
+
     /// Build the fleet DES configuration: one [`SatelliteSpec`] per Walker
     /// slot, each with its own contact model (and battery, when
     /// configured), live-telemetry solves, and the scenario's horizon.
@@ -490,6 +545,7 @@ impl FleetScenario {
             self.isl,
             BitsPerSec::from_mbps(self.isl_rate_mbps),
         );
+        let placement = self.placement_config(std::slice::from_ref(&profile))?;
         Ok(FleetSimConfig {
             template: self.base.instance_builder(profile.clone()),
             profiles: vec![profile],
@@ -498,6 +554,7 @@ impl FleetScenario {
             isl,
             isl_max_hops: self.isl_max_hops,
             telemetry: TelemetryMode::Live,
+            placement,
             horizon: self.horizon(),
         })
     }
@@ -529,6 +586,10 @@ impl FleetScenario {
             ("panel_area_m2", Json::num(self.panel_area_m2)),
             ("panel_efficiency", Json::num(self.panel_efficiency)),
             ("panel_pointing", Json::num(self.panel_pointing)),
+            ("storage_budget_mb", Json::num(self.storage_budget_mb)),
+            ("placement", Json::str(self.placement.clone())),
+            ("eviction", Json::str(self.eviction.clone())),
+            ("model_weights_mb", Json::num(self.model_weights_mb)),
             ("interarrival_s", Json::num(self.interarrival_s)),
             ("data_gb_lo", Json::num(self.data_gb_lo)),
             ("data_gb_hi", Json::num(self.data_gb_hi)),
@@ -570,14 +631,21 @@ impl FleetScenario {
             panel_area_m2: v.f64_or("panel_area_m2", d.panel_area_m2)?,
             panel_efficiency: v.f64_or("panel_efficiency", d.panel_efficiency)?,
             panel_pointing: v.f64_or("panel_pointing", d.panel_pointing)?,
+            storage_budget_mb: v.f64_or("storage_budget_mb", d.storage_budget_mb)?,
+            placement: v.str_or("placement", &d.placement)?.to_string(),
+            eviction: v.str_or("eviction", &d.eviction)?.to_string(),
+            model_weights_mb: v.f64_or("model_weights_mb", d.model_weights_mb)?,
             interarrival_s: v.f64_or("interarrival_s", d.interarrival_s)?,
             data_gb_lo: v.f64_or("data_gb_lo", d.data_gb_lo)?,
             data_gb_hi: v.f64_or("data_gb_hi", d.data_gb_hi)?,
             horizon_hours: v.f64_or("horizon_hours", d.horizon_hours)?,
         };
         // a scenario whose workload cannot be sampled must fail at parse
-        // time, not NaN-sample mid-run
+        // time, not NaN-sample mid-run — and unknown placement axis names
+        // fail here too, before any sweep cell runs
         f.workload()?;
+        PlacementPolicy::from_name(&f.placement)?;
+        EvictionPolicy::from_name(&f.eviction)?;
         Ok(f)
     }
 
@@ -666,9 +734,48 @@ mod tests {
         f.isl = IslMode::Grid;
         f.isl_rate_mbps = 350.0;
         f.isl_max_hops = 2;
+        f.storage_budget_mb = 256.0;
+        f.placement = "demand".to_string();
+        f.eviction = "lfu".to_string();
+        f.model_weights_mb = 120.0;
         f.base = Scenario::transmission_dominant();
         let back = FleetScenario::from_json(&f.to_json()).unwrap();
         assert_eq!(f, back);
+    }
+
+    #[test]
+    fn fleet_placement_config_arms_only_when_constrained() {
+        let mut rng = Pcg64::seeded(8);
+        let mut f = FleetScenario::walker_631();
+        // the default scenario is passive: bit-identical to pre-placement
+        let cfg = f.sim_config(ModelProfile::sampled(6, &mut rng)).unwrap();
+        assert!(cfg.placement.is_passive());
+        assert_eq!(cfg.placement.artifacts.len(), 1);
+        // a storage budget arms the machinery; the artifact footprints the
+        // profile at the configured weight size
+        f.storage_budget_mb = 512.0;
+        f.placement = "demand".to_string();
+        let cfg = f.sim_config(ModelProfile::sampled(6, &mut rng)).unwrap();
+        assert!(!cfg.placement.is_passive());
+        assert_eq!(cfg.placement.budget, Some(Bytes::from_mb(512.0)));
+        let total = cfg.placement.artifacts[0].total_bytes().mb();
+        assert!((total - 200.0).abs() < 1.0, "default 200 MB weights, got {total}");
+        // bad axis values fail loudly, at config and at parse time
+        f.placement = "gossip".to_string();
+        assert!(f.sim_config(ModelProfile::sampled(6, &mut rng)).is_err());
+        f.placement = "demand".to_string();
+        f.eviction = "fifo".to_string();
+        assert!(f.sim_config(ModelProfile::sampled(6, &mut rng)).is_err());
+        f.eviction = "lru".to_string();
+        f.storage_budget_mb = -5.0;
+        assert!(f.placement_config(&[]).is_err());
+        f.storage_budget_mb = 512.0;
+        f.model_weights_mb = 0.0;
+        assert!(f.placement_config(&[]).is_err());
+        let v = Json::parse(r#"{"placement": "nope"}"#).unwrap();
+        assert!(FleetScenario::from_json(&v).is_err());
+        let v = Json::parse(r#"{"eviction": "fifo"}"#).unwrap();
+        assert!(FleetScenario::from_json(&v).is_err());
     }
 
     #[test]

@@ -9,17 +9,32 @@ use super::state::ClusterState;
 use crate::sim::workload::Request;
 
 /// Routing policies.
+///
+/// Every policy except [`RoutingPolicy::RoundRobin`] is *cache-aware*:
+/// the per-satellite weight-miss penalty
+/// ([`super::state::SatelliteInfo::miss_penalty_s`], refreshed by the
+/// fleet simulator for the arriving request's model) enters the score, so
+/// a satellite that already holds the model beats one that would first
+/// have to fetch its weights over ISLs. With placement passive every
+/// penalty is zero and the scores reduce to their classic forms.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum RoutingPolicy {
-    /// Cycle through satellites regardless of load.
+    /// Cycle through satellites regardless of load — deliberately
+    /// cache-oblivious (the placement ablation baseline).
     RoundRobin,
-    /// Satellite with the fewest queued requests.
+    /// Satellite with the fewest queued requests; cache-aware: warm
+    /// satellites are preferred outright.
     LeastLoaded,
     /// Satellite whose next ground contact opens soonest — best for
-    /// downlink-heavy (low-split) traffic.
+    /// downlink-heavy (low-split) traffic. Cache-aware: the miss penalty
+    /// delays the downlink start, so it adds onto the contact wait.
     ContactAware,
     /// Least-loaded, but disqualify satellites below a battery floor.
-    EnergyAware { min_soc: f64 },
+    /// Cache-aware like [`RoutingPolicy::LeastLoaded`].
+    EnergyAware {
+        /// Battery floor below which a satellite is ineligible.
+        min_soc: f64,
+    },
     /// Contact-aware over the *effective* downlink horizon: scores each
     /// satellite by `min(own next contact, best ISL neighbor's next
     /// contact + relay lead time)`, so a satellite whose neighbor passes
@@ -51,10 +66,13 @@ impl Router {
     }
 
     /// Pick a satellite for `req`. Returns `None` when no satellite is
-    /// eligible (e.g. all below the energy floor).
+    /// eligible (e.g. all below the energy floor). The request-specific
+    /// cache state enters through the cluster view: the fleet simulator
+    /// refreshes every satellite's miss penalty for `req`'s model before
+    /// routing, so the scores below already see it.
     pub fn route(&mut self, req: &Request, cluster: &ClusterState) -> Option<usize> {
-        let _ = req; // current policies are request-agnostic; class-aware
-                     // routing extends here
+        let _ = req; // the per-model miss penalty is pre-folded into the
+                     // cluster view; class-aware routing extends here
         if cluster.is_empty() {
             return None;
         }
@@ -65,14 +83,21 @@ impl Router {
                 self.rr_next = (self.rr_next + 1) % ids.len();
                 Some(pick)
             }
-            RoutingPolicy::LeastLoaded => cluster.least_loaded(),
-            RoutingPolicy::ContactAware => cluster.soonest_contact(),
-            RoutingPolicy::RelayAware => cluster.soonest_effective_contact(),
+            RoutingPolicy::LeastLoaded => cluster.least_loaded_warm(),
+            RoutingPolicy::ContactAware => cluster.soonest_contact_warm(),
+            RoutingPolicy::RelayAware => cluster.soonest_effective_contact_warm(),
             RoutingPolicy::EnergyAware { min_soc } => cluster
                 .ids()
                 .into_iter()
                 .filter(|id| cluster.get(*id).map_or(false, |s| s.soc >= min_soc))
-                .min_by_key(|id| (cluster.get(*id).unwrap().queue_depth, *id)),
+                .min_by(|a, b| {
+                    let sa = cluster.get(*a).unwrap();
+                    let sb = cluster.get(*b).unwrap();
+                    sa.miss_penalty_s
+                        .total_cmp(&sb.miss_penalty_s)
+                        .then(sa.queue_depth.cmp(&sb.queue_depth))
+                        .then(a.cmp(b))
+                }),
         }
     }
 }
@@ -156,6 +181,30 @@ mod tests {
             c.get_mut(i).unwrap().soc = 0.0;
         }
         assert_eq!(r.route(&req(), &c), None);
+    }
+
+    #[test]
+    fn cache_penalties_steer_every_policy_but_round_robin() {
+        let mut c = cluster(3);
+        // satellite 0 would have to fetch the model (20 s), 1 and 2 are
+        // warm; 1 carries a deeper queue than 2
+        c.get_mut(0).unwrap().miss_penalty_s = 20.0;
+        c.note_enqueue(1, Bytes::ZERO);
+        let mut ll = Router::new(RoutingPolicy::LeastLoaded);
+        assert_eq!(ll.route(&req(), &c), Some(2), "warm + shallow queue");
+        let mut ea = Router::new(RoutingPolicy::EnergyAware { min_soc: 0.3 });
+        assert_eq!(ea.route(&req(), &c), Some(2));
+        // contact-aware: 0 passes first but the fetch eats the head start
+        c.get_mut(0).unwrap().next_contact_in = Seconds(5.0);
+        c.get_mut(1).unwrap().next_contact_in = Seconds(10.0);
+        c.get_mut(2).unwrap().next_contact_in = Seconds(60.0);
+        let mut ca = Router::new(RoutingPolicy::ContactAware);
+        assert_eq!(ca.route(&req(), &c), Some(1), "5 + 20 > 10");
+        let mut ra = Router::new(RoutingPolicy::RelayAware);
+        assert_eq!(ra.route(&req(), &c), Some(1));
+        // round-robin stays cache-oblivious: it still cycles through 0
+        let mut rr = Router::new(RoutingPolicy::RoundRobin);
+        assert_eq!(rr.route(&req(), &c), Some(0));
     }
 
     #[test]

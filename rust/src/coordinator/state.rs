@@ -32,6 +32,14 @@ pub struct SatelliteInfo {
     /// Effective ISL rate along that same relay path (the serialization
     /// bottleneck; zero when the satellite has no links).
     pub isl_rate: BitsPerSec,
+    /// Estimated extra seconds a request routed here right now would wait
+    /// for a model-weight fetch: zero when the requested model is already
+    /// resident in this satellite's artifact store (or placement is
+    /// passive), otherwise the cheapest weight-transfer time from a warm
+    /// satellite over the ISL route (or from the ground). The fleet
+    /// simulator refreshes this per arrival for the arriving request's
+    /// model, like [`SatelliteInfo::neighbor_contact_in`].
+    pub miss_penalty_s: f64,
 }
 
 impl SatelliteInfo {
@@ -47,6 +55,7 @@ impl SatelliteInfo {
             contact_remaining: Seconds::from_minutes(6.0),
             neighbor_contact_in: Seconds(f64::INFINITY),
             isl_rate: BitsPerSec::ZERO,
+            miss_penalty_s: 0.0,
         }
     }
 
@@ -136,6 +145,54 @@ impl ClusterState {
                     .value()
                     .partial_cmp(&b.effective_contact_in().value())
                     .unwrap()
+                    .then(a.queue_depth.cmp(&b.queue_depth))
+                    .then(ida.cmp(idb))
+            })
+            .map(|(id, _)| *id)
+    }
+
+    /// Cache-aware [`ClusterState::least_loaded`]: the weight-miss
+    /// penalty is the leading key, so a satellite that already holds the
+    /// requested model always beats one that would have to fetch it
+    /// first; warm ties fall back to queue depth, then id. Identical to
+    /// `least_loaded` when every penalty is zero (placement passive).
+    pub fn least_loaded_warm(&self) -> Option<usize> {
+        self.sats
+            .iter()
+            .min_by(|(ida, a), (idb, b)| {
+                a.miss_penalty_s
+                    .total_cmp(&b.miss_penalty_s)
+                    .then(a.queue_depth.cmp(&b.queue_depth))
+                    .then(ida.cmp(idb))
+            })
+            .map(|(id, _)| *id)
+    }
+
+    /// Cache-aware [`ClusterState::soonest_contact`]: the miss penalty is
+    /// a weight-transfer delay before the downlink can start, so it adds
+    /// straight onto the contact wait. Identical to `soonest_contact`
+    /// when every penalty is zero.
+    pub fn soonest_contact_warm(&self) -> Option<usize> {
+        self.sats
+            .iter()
+            .min_by(|(ida, a), (idb, b)| {
+                (a.next_contact_in.value() + a.miss_penalty_s)
+                    .total_cmp(&(b.next_contact_in.value() + b.miss_penalty_s))
+                    .then(ida.cmp(idb))
+            })
+            .map(|(id, _)| *id)
+    }
+
+    /// Cache-aware [`ClusterState::soonest_effective_contact`]: the miss
+    /// penalty adds onto the effective (own-pass or relayed) downlink
+    /// wait. Identical to `soonest_effective_contact` when every penalty
+    /// is zero.
+    pub fn soonest_effective_contact_warm(&self) -> Option<usize> {
+        self.sats
+            .iter()
+            .min_by(|(ida, a), (idb, b)| {
+                (a.effective_contact_in().value() + a.miss_penalty_s)
+                    .total_cmp(&(b.effective_contact_in().value() + b.miss_penalty_s))
                     .then(a.queue_depth.cmp(&b.queue_depth))
                     .then(ida.cmp(idb))
             })
@@ -240,6 +297,31 @@ mod tests {
         c.get_mut(2).unwrap().neighbor_contact_in = Seconds(100.0);
         c.note_enqueue(1, Bytes::ZERO);
         assert_eq!(c.soonest_effective_contact(), Some(2));
+    }
+
+    #[test]
+    fn warm_selectors_prefer_resident_models() {
+        let mut c = cluster3();
+        // zero penalties everywhere: warm variants equal the base ones
+        assert_eq!(c.least_loaded_warm(), c.least_loaded());
+        assert_eq!(c.soonest_contact_warm(), c.soonest_contact());
+        assert_eq!(
+            c.soonest_effective_contact_warm(),
+            c.soonest_effective_contact()
+        );
+        // satellite 0 would have to fetch the model: a warm, busier
+        // satellite wins the least-loaded tie-break
+        c.get_mut(0).unwrap().miss_penalty_s = 12.0;
+        c.note_enqueue(1, Bytes::ZERO);
+        assert_eq!(c.least_loaded(), Some(0), "oblivious pick unchanged");
+        assert_eq!(c.least_loaded_warm(), Some(2));
+        // contact-aware: the penalty delays the downlink start
+        c.get_mut(0).unwrap().next_contact_in = Seconds(10.0);
+        c.get_mut(1).unwrap().next_contact_in = Seconds(15.0);
+        c.get_mut(2).unwrap().next_contact_in = Seconds(40.0);
+        assert_eq!(c.soonest_contact(), Some(0));
+        assert_eq!(c.soonest_contact_warm(), Some(1), "10 + 12 > 15");
+        assert_eq!(c.soonest_effective_contact_warm(), Some(1));
     }
 
     #[test]

@@ -82,11 +82,19 @@ impl ModelProfile {
     }
 
     /// Profile from measured activation sizes: `sizes[0]` = input bytes,
-    /// `sizes[k]` = bytes leaving subtask k (length K+1).
+    /// `sizes[k]` = bytes leaving subtask k (length K+1). Every size must
+    /// be a finite positive number — a zero, negative, NaN, or infinite
+    /// size is rejected here rather than letting NaN ratios propagate
+    /// into solver instances.
     pub fn from_alphas(name: &str, sizes_bytes: &[f64]) -> anyhow::Result<ModelProfile> {
         anyhow::ensure!(sizes_bytes.len() >= 2, "need input + at least one output");
+        for (i, &s) in sizes_bytes.iter().enumerate() {
+            anyhow::ensure!(
+                s.is_finite() && s > 0.0,
+                "layer size {i} must be a finite positive byte count, got {s}"
+            );
+        }
         let d0 = sizes_bytes[0];
-        anyhow::ensure!(d0 > 0.0, "input size must be positive");
         let k = sizes_bytes.len() - 1;
         Ok(ModelProfile {
             name: name.to_string(),
@@ -178,5 +186,32 @@ mod tests {
     fn from_alphas_rejects_degenerate() {
         assert!(ModelProfile::from_alphas("x", &[100.0]).is_err());
         assert!(ModelProfile::from_alphas("x", &[0.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn from_alphas_rejects_non_finite_and_non_positive_sizes() {
+        // empty / singleton
+        assert!(ModelProfile::from_alphas("x", &[]).is_err());
+        // a NaN or infinity anywhere must error, not poison the ratios
+        assert!(ModelProfile::from_alphas("x", &[100.0, f64::NAN]).is_err());
+        assert!(ModelProfile::from_alphas("x", &[f64::INFINITY, 10.0]).is_err());
+        assert!(ModelProfile::from_alphas("x", &[100.0, 50.0, f64::NEG_INFINITY]).is_err());
+        // zero or negative interior sizes are as degenerate as a zero input
+        assert!(ModelProfile::from_alphas("x", &[100.0, 0.0, 10.0]).is_err());
+        assert!(ModelProfile::from_alphas("x", &[100.0, -5.0]).is_err());
+        // the error names the offending position
+        let err = ModelProfile::from_alphas("x", &[100.0, 50.0, -1.0])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("layer size 2"), "{err}");
+        // and a clean vector still parses
+        assert!(ModelProfile::from_alphas("x", &[100.0, 50.0, 10.0]).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one subtask")]
+    fn sampled_rejects_zero_depth() {
+        let mut rng = Pcg64::seeded(1);
+        let _ = ModelProfile::sampled(0, &mut rng);
     }
 }

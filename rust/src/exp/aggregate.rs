@@ -15,7 +15,7 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 /// Exported per-cell columns, after the axis columns.
-const METRIC_COLUMNS: [&str; 19] = [
+const METRIC_COLUMNS: [&str; 23] = [
     "submitted",
     "completed",
     "rejected_admission",
@@ -35,6 +35,10 @@ const METRIC_COLUMNS: [&str; 19] = [
     "solves",
     "cache_hits",
     "tightened",
+    "artifact_hits",
+    "artifact_misses",
+    "evictions",
+    "weight_gb_in",
 ];
 
 fn metric_values(c: &CellResult) -> Vec<String> {
@@ -58,6 +62,10 @@ fn metric_values(c: &CellResult) -> Vec<String> {
         c.solves.to_string(),
         c.cache_hits.to_string(),
         c.tightened.to_string(),
+        c.artifact_hits.to_string(),
+        c.artifact_misses.to_string(),
+        c.evictions.to_string(),
+        format_f64(c.weight_gb_in),
     ]
 }
 
@@ -111,7 +119,7 @@ pub fn to_json(result: &SweepResult) -> Json {
         for axis in AXIS_NAMES {
             pairs.push((axis, Json::str(c.cell.axis_value(axis).expect("built-in axis"))));
         }
-        let nums: [(&str, f64); 19] = [
+        let nums: [(&str, f64); 23] = [
             ("submitted", c.submitted as f64),
             ("completed", c.completed as f64),
             ("rejected_admission", c.rejected_admission as f64),
@@ -131,6 +139,10 @@ pub fn to_json(result: &SweepResult) -> Json {
             ("solves", c.solves as f64),
             ("cache_hits", c.cache_hits as f64),
             ("tightened", c.tightened as f64),
+            ("artifact_hits", c.artifact_hits as f64),
+            ("artifact_misses", c.artifact_misses as f64),
+            ("evictions", c.evictions as f64),
+            ("weight_gb_in", c.weight_gb_in),
         ];
         for (k, v) in nums {
             pairs.push((k, Json::num(v)));
@@ -275,6 +287,11 @@ mod tests {
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 1 + result.cells.len());
         assert!(lines[0].starts_with("index,seed,solver,"));
+        assert!(
+            lines[0].ends_with("artifact_hits,artifact_misses,evictions,weight_gb_in"),
+            "placement counters close every row"
+        );
+        assert!(lines[0].contains(",storage_mb,placement,rep,"));
         let cols = lines[0].split(',').count();
         for (i, row) in lines[1..].iter().enumerate() {
             assert_eq!(row.split(',').count(), cols, "row {i} column count");
@@ -299,6 +316,11 @@ mod tests {
                 r.mean_latency_s(),
                 "cell {i}"
             );
+            // the base scenario leaves placement passive: counters export
+            // as honest zeros, not missing columns
+            assert_eq!(cell.get_f64("artifact_hits").unwrap(), 0.0);
+            assert_eq!(cell.get_f64("weight_gb_in").unwrap(), 0.0);
+            assert_eq!(cell.get_str("placement").unwrap(), "everywhere");
         }
     }
 

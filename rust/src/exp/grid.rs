@@ -4,7 +4,8 @@
 //! Every axis left empty collapses to the base scenario's value, so a
 //! spec names only what it varies. Expansion order is fixed (solver →
 //! routing → isl → route → walker → interarrival → rate → data size →
-//! battery → replication, replication innermost), which makes `Cell::index` a
+//! battery → storage → placement → replication, replication innermost),
+//! which makes `Cell::index` a
 //! stable coordinate: the same spec always yields the same cells in the
 //! same order, and [`SweepSpec::cell`] rebuilds any single cell from its
 //! index without expanding the rest of the grid.
@@ -27,6 +28,7 @@
 
 use crate::config::FleetScenario;
 use crate::link::isl::IslMode;
+use crate::placement::PlacementPolicy;
 use crate::solver::SolverRegistry;
 use crate::util::json::Json;
 use crate::util::rng::SplitMix64;
@@ -94,12 +96,16 @@ pub struct Axes {
     pub data_gb_hi: Vec<f64>,
     /// Battery capacity, J (0 = unconstrained).
     pub battery_capacity_j: Vec<f64>,
+    /// Per-satellite artifact storage budget, MB (0 = unlimited).
+    pub storage_mb: Vec<f64>,
+    /// Placement policy names (`everywhere | static | demand`).
+    pub placement: Vec<String>,
 }
 
 /// Axis names, in expansion order (replication last/innermost). These are
 /// the group-by keys [`super::aggregate`] accepts and the per-cell columns
 /// the exports carry.
-pub const AXIS_NAMES: [&str; 10] = [
+pub const AXIS_NAMES: [&str; 12] = [
     "solver",
     "routing",
     "isl",
@@ -109,6 +115,8 @@ pub const AXIS_NAMES: [&str; 10] = [
     "rate_mbps",
     "data_gb_hi",
     "battery_capacity_j",
+    "storage_mb",
+    "placement",
     "rep",
 ];
 
@@ -159,6 +167,8 @@ impl Cell {
             "rate_mbps" => format_f64(self.scenario.base.rate_mbps),
             "data_gb_hi" => format_f64(self.scenario.data_gb_hi),
             "battery_capacity_j" => format_f64(self.scenario.battery_capacity_j),
+            "storage_mb" => format_f64(self.scenario.storage_budget_mb),
+            "placement" => self.scenario.placement.clone(),
             "rep" => self.rep.to_string(),
             other => anyhow::bail!(
                 "unknown axis `{other}` ({})",
@@ -194,6 +204,8 @@ struct Resolved {
     rate_mbps: Vec<f64>,
     data_gb_hi: Vec<f64>,
     battery_capacity_j: Vec<f64>,
+    storage_mb: Vec<f64>,
+    placement: Vec<String>,
 }
 
 impl SweepSpec {
@@ -244,6 +256,12 @@ impl SweepSpec {
             rate_mbps: or(&self.axes.rate_mbps, self.base.base.rate_mbps),
             data_gb_hi: or(&self.axes.data_gb_hi, self.base.data_gb_hi),
             battery_capacity_j: or(&self.axes.battery_capacity_j, self.base.battery_capacity_j),
+            storage_mb: or(&self.axes.storage_mb, self.base.storage_budget_mb),
+            placement: if self.axes.placement.is_empty() {
+                vec![self.base.placement.clone()]
+            } else {
+                self.axes.placement.clone()
+            },
         }
     }
 
@@ -259,6 +277,8 @@ impl SweepSpec {
             * r.rate_mbps.len()
             * r.data_gb_hi.len()
             * r.battery_capacity_j.len()
+            * r.storage_mb.len()
+            * r.placement.len()
             * self.replications.max(1)
     }
 
@@ -318,6 +338,16 @@ impl SweepSpec {
                 "battery_capacity_j axis value must be >= 0 and finite, got {b}"
             );
         }
+        for &mb in &r.storage_mb {
+            anyhow::ensure!(
+                mb >= 0.0 && mb.is_finite(),
+                "storage_mb axis value must be >= 0 and finite, got {mb}"
+            );
+        }
+        for p in &r.placement {
+            PlacementPolicy::from_name(p)
+                .map_err(|e| anyhow::anyhow!("placement axis: {e}"))?;
+        }
         Ok(())
     }
 
@@ -331,6 +361,10 @@ impl SweepSpec {
         let mut rest = index;
         let rep = rest % reps;
         rest /= reps;
+        let placement = &r.placement[rest % r.placement.len()];
+        rest /= r.placement.len();
+        let storage = r.storage_mb[rest % r.storage_mb.len()];
+        rest /= r.storage_mb.len();
         let battery = r.battery_capacity_j[rest % r.battery_capacity_j.len()];
         rest /= r.battery_capacity_j.len();
         let data_hi = r.data_gb_hi[rest % r.data_gb_hi.len()];
@@ -361,6 +395,8 @@ impl SweepSpec {
         scen.base.rate_mbps = rate;
         apply_data_hi(&mut scen, &self.base, data_hi);
         scen.battery_capacity_j = battery;
+        scen.storage_budget_mb = storage;
+        scen.placement = placement.clone();
         Cell {
             index,
             rep,
@@ -428,6 +464,12 @@ impl SweepSpec {
         if !self.axes.battery_capacity_j.is_empty() {
             axes.push(("battery_capacity_j", nums(&self.axes.battery_capacity_j)));
         }
+        if !self.axes.storage_mb.is_empty() {
+            axes.push(("storage_mb", nums(&self.axes.storage_mb)));
+        }
+        if !self.axes.placement.is_empty() {
+            axes.push(("placement", strs(&self.axes.placement)));
+        }
         // seeds are full-range u64 and JSON numbers are f64-backed:
         // large seeds serialize as strings so round-trips stay exact
         let seed = if self.seed < (1u64 << 53) {
@@ -468,6 +510,8 @@ impl SweepSpec {
                 rate_mbps: f64_list(a, "rate_mbps")?,
                 data_gb_hi: f64_list(a, "data_gb_hi")?,
                 battery_capacity_j: f64_list(a, "battery_capacity_j")?,
+                storage_mb: f64_list(a, "storage_mb")?,
+                placement: str_list(a, "placement")?,
             },
             None => Axes::default(),
         };
@@ -771,6 +815,31 @@ horizon_hours = 6.0
         assert_eq!(spec.len(), 4);
         // rep-0 seeds unchanged: smoke cells reproduce full-run cells
         assert_eq!(spec.cell(0).seed, replication_seed(7, 0));
+    }
+
+    #[test]
+    fn placement_axis_sweeps_storage_and_policy() {
+        let mut spec = SweepSpec::point("cache", FleetScenario::walker_631());
+        spec.axes.storage_mb = vec![0.0, 150.0];
+        spec.axes.placement = vec!["everywhere".into(), "demand".into()];
+        assert_eq!(spec.len(), 4);
+        let cells = spec.expand().unwrap();
+        // placement is the inner of the two new axes
+        assert_eq!(cells[0].scenario.placement, "everywhere");
+        assert_eq!(cells[1].scenario.placement, "demand");
+        assert_eq!(cells[0].scenario.storage_budget_mb, 0.0);
+        assert_eq!(cells[2].scenario.storage_budget_mb, 150.0);
+        assert_eq!(cells[3].axis_value("storage_mb").unwrap(), "150");
+        assert_eq!(cells[3].axis_value("placement").unwrap(), "demand");
+        // common random numbers across cache configurations
+        assert!(cells.iter().all(|c| c.seed == cells[0].seed));
+        // bad axis values are refused before any cell runs
+        let mut bad = SweepSpec::point("bad", FleetScenario::walker_631());
+        bad.axes.placement = vec!["gossip".into()];
+        assert!(bad.expand().is_err(), "unknown placement policy");
+        let mut neg = SweepSpec::point("neg", FleetScenario::walker_631());
+        neg.axes.storage_mb = vec![-1.0];
+        assert!(neg.expand().is_err(), "negative storage budget");
     }
 
     #[test]

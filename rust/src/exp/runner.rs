@@ -66,6 +66,15 @@ pub struct CellResult {
     pub cache_hits: u64,
     /// Decisions the live telemetry tightened away from the raw policy.
     pub tightened: u64,
+    // placement counters (zero whenever placement is passive)
+    /// Requests served by a satellite already holding the model.
+    pub artifact_hits: u64,
+    /// Requests that had to fetch the model's weights first.
+    pub artifact_misses: u64,
+    /// Artifacts evicted to make room for fetched weights.
+    pub evictions: u64,
+    /// Model weights transferred into satellites, GB.
+    pub weight_gb_in: f64,
 }
 
 impl CellResult {
@@ -132,6 +141,10 @@ pub fn run_cell(cell: &Cell) -> anyhow::Result<CellResult> {
         solves: stats.solves,
         cache_hits: stats.cache_hits,
         tightened: stats.tightened,
+        artifact_hits: m.artifact_hits,
+        artifact_misses: m.artifact_misses,
+        evictions: m.evictions,
+        weight_gb_in: m.weight_bytes_in.gb(),
     })
 }
 

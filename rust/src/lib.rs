@@ -33,6 +33,10 @@
 //!   ([`exp::SweepSpec`]), a deterministic parallel runner (serial ≡
 //!   parallel, bit for bit), and streaming CSV/JSON/table aggregation —
 //!   driven by the `leo-infer sweep` subcommand.
+//! * [`placement`] — fleet-wide model placement: the artifact catalog,
+//!   per-satellite byte-budget stores with pluggable eviction, and the
+//!   placement policies behind cache-aware routing and on-demand weight
+//!   fetches over ISLs.
 //! * [`runtime`] — PJRT execution of AOT-compiled model stages; the chosen
 //!   split is *physically executed* (prefix on the "satellite" client,
 //!   activation serialized, suffix on the "cloud" client).
@@ -59,6 +63,7 @@ pub mod energy;
 pub mod exp;
 pub mod link;
 pub mod orbit;
+pub mod placement;
 pub mod runtime;
 pub mod sim;
 pub mod solver;

@@ -26,7 +26,7 @@
 //! deterministic.
 
 use crate::orbit::constellation::Constellation;
-use crate::util::units::{BitsPerSec, Seconds};
+use crate::util::units::{BitsPerSec, Bytes, Seconds};
 
 /// Speed of light, km/s (propagation delay of a laser/Ka ISL).
 pub const LIGHT_SPEED_KM_S: f64 = 299_792.458;
@@ -191,6 +191,52 @@ impl IslTopology {
             .iter()
             .map(|l| l.rate)
             .max_by(|a, b| a.value().partial_cmp(&b.value()).expect("finite rates"))
+    }
+
+    /// Cheapest bounded-hop transfer time of `bytes` from `src` to `dst`:
+    /// per hop, serialization at the link rate plus one-way propagation,
+    /// summed along the best route using at most `max_hops` links.
+    /// `Some(0)` when `src == dst`; `None` when `dst` is unreachable
+    /// within the bound. Queueing is deliberately excluded — this is the
+    /// placement layer's weight-fetch cost estimate, while the fleet DES
+    /// executes the fetch it picks as real events.
+    pub fn cheapest_transfer(
+        &self,
+        src: usize,
+        dst: usize,
+        bytes: Bytes,
+        max_hops: usize,
+    ) -> Option<Seconds> {
+        if src == dst {
+            return Some(Seconds::ZERO);
+        }
+        let n = self.neighbors.len();
+        if src >= n || dst >= n {
+            return None;
+        }
+        // Bellman-Ford with `max_hops` relaxation rounds: after round h,
+        // dist[v] is the cheapest cost over ≤ h links, which enforces the
+        // hop bound without tracking explicit routes. The result is a
+        // pure minimum, so it is deterministic regardless of iteration
+        // order.
+        let mut dist = vec![f64::INFINITY; n];
+        dist[src] = 0.0;
+        for _ in 0..max_hops {
+            let mut next = dist.clone();
+            for (u, links) in self.neighbors.iter().enumerate() {
+                if !dist[u].is_finite() {
+                    continue;
+                }
+                for l in links {
+                    let c = dist[u] + l.rate.transfer_time(bytes).value() + l.propagation.value();
+                    if c < next[l.to] {
+                        next[l.to] = c;
+                    }
+                }
+            }
+            dist = next;
+        }
+        dist[dst].is_finite().then(|| Seconds(dist[dst]))
     }
 }
 
@@ -369,6 +415,35 @@ mod tests {
             assert!(l.propagation.value() > 0.0);
             assert!(l.propagation.value() < 0.1, "LEO neighbors are < 30 000 km");
         }
+    }
+
+    #[test]
+    fn cheapest_transfer_costs_serialize_plus_propagation() {
+        let c = walker(12, 3);
+        let t = IslTopology::build(&c, IslMode::Grid, BitsPerSec::from_mbps(100.0)).unwrap();
+        let bytes = Bytes::from_mb(100.0);
+        // self-transfer is free
+        assert_eq!(t.cheapest_transfer(0, 0, bytes, 0), Some(Seconds::ZERO));
+        // zero hops reaches nothing else
+        assert_eq!(t.cheapest_transfer(0, 1, bytes, 0), None);
+        // one hop to a direct neighbor costs exactly its link
+        let l = t.neighbors(0)[0];
+        let one = t.cheapest_transfer(0, l.to, bytes, 1).unwrap();
+        assert!(
+            (one.value() - (l.rate.transfer_time(bytes).value() + l.propagation.value())).abs()
+                < 1e-9
+        );
+        // widening the hop budget never makes a route dearer
+        for dst in 1..12 {
+            let h2 = t.cheapest_transfer(0, dst, bytes, 2);
+            let h4 = t.cheapest_transfer(0, dst, bytes, 4).unwrap();
+            if let Some(h2) = h2 {
+                assert!(h4.value() <= h2.value() + 1e-12, "dst {dst}");
+            }
+            assert!(h4.value() > 0.0);
+        }
+        // out-of-range satellites are unreachable, not a panic
+        assert_eq!(t.cheapest_transfer(0, 99, bytes, 4), None);
     }
 
     #[test]

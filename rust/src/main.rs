@@ -182,6 +182,16 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
             "relay-path hop bound: 0 = bent pipe, 1 = single hop, N = multi-hop routing",
             Some("4"),
         )
+        .opt(
+            "storage-mb",
+            "per-satellite artifact storage budget in MB, 0 = unlimited (fleet only)",
+            Some("0"),
+        )
+        .opt(
+            "placement",
+            "everywhere|static|demand — model-weight placement policy (fleet only)",
+            Some("everywhere"),
+        )
         .parse_from(argv)?;
     let fleet_config = args.get_str("fleet-config").unwrap_or("").to_string();
     let fleet_spec = args.get_str("fleet").unwrap_or("").to_string();
@@ -285,6 +295,8 @@ fn simulate_fleet(args: &Args, fleet_config: &str, fleet_spec: &str) -> anyhow::
         f.isl = IslMode::from_name(args.get_str("isl").unwrap_or("off"))?;
         f.isl_rate_mbps = args.get_f64("isl-rate-mbps")?;
         f.isl_max_hops = args.get_usize("isl-max-hops")?;
+        f.storage_budget_mb = args.get_f64("storage-mb")?;
+        f.placement = args.get_str("placement").unwrap_or("everywhere").to_string();
         f.horizon_hours = args.get_f64("hours")?;
         f.interarrival_s = args.get_f64("interarrival-s")?;
         let hi = args.get_f64("data-gb")?;
@@ -326,6 +338,33 @@ fn simulate_fleet(args: &Args, fleet_config: &str, fleet_spec: &str) -> anyhow::
             relayed,
             if relayed > 0 { hops as f64 / relayed as f64 } else { 0.0 },
             m.route_recomputes
+        );
+    }
+    // the placement block only prints when the machinery is armed — a
+    // passive (everywhere, unlimited) fleet has nothing to report
+    if fleet.storage_budget_mb > 0.0 || fleet.placement != "everywhere" {
+        let looked_up = m.artifact_hits + m.artifact_misses;
+        let warm = if looked_up > 0 {
+            m.artifact_hits as f64 / looked_up as f64 * 100.0
+        } else {
+            100.0
+        };
+        let budget = if fleet.storage_budget_mb > 0.0 {
+            format!("{} MB", fleet.storage_budget_mb)
+        } else {
+            "unlimited".to_string()
+        };
+        println!(
+            "placement   : {} ({} eviction, {} budget) — {} hits / {} misses \
+             ({:.1}% warm), {} evictions, {:.2} GB weights fetched",
+            fleet.placement,
+            fleet.eviction,
+            budget,
+            m.artifact_hits,
+            m.artifact_misses,
+            warm,
+            m.evictions,
+            m.weight_bytes_in.gb()
         );
     }
     println!("\nper-satellite:");

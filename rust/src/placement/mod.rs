@@ -1,0 +1,576 @@
+//! Fleet-wide model placement and artifact caching.
+//!
+//! The paper assumes every satellite can run every DNN; at fleet scale the
+//! model artifacts themselves — weights plus AOT-compiled stage binaries —
+//! are a scarce resource that has to live *somewhere*, and shipping them
+//! over ISLs competes with tensor traffic. This module makes them
+//! first-class:
+//!
+//! * [`ModelArtifact`] — the catalog entry: the per-subtask byte footprint
+//!   of one model, derived from a [`ModelProfile`]'s layer shares or from a
+//!   compiled [`Manifest`]'s stage binaries, so any split range maps to a
+//!   byte count.
+//! * [`ArtifactStore`] — a per-satellite byte-budget store with pluggable
+//!   eviction ([`EvictionPolicy`]: LRU, LFU, or pinned). Eviction honors
+//!   the batcher's never-mix-models invariant: a model with queued or
+//!   in-flight work is passed an in-flight pin and is never evicted.
+//! * [`PlacementPolicy`] + [`PlacementConfig`] — which models start out
+//!   resident on which satellites ([`PlacementConfig::store_for`]), and
+//!   whether cold satellites fetch weights over ISLs on demand.
+//!
+//! The fleet simulator ([`crate::sim::fleet`]) executes misses as real
+//! weight-fetch events (ISL serialize + propagation + energy on both
+//! batteries) and feeds per-satellite miss penalties to the cache-aware
+//! router ([`crate::coordinator::router`]). The default configuration
+//! ([`PlacementConfig::is_passive`]) keeps every model resident everywhere
+//! with no budget, which reproduces the pre-placement fleet behavior bit
+//! for bit.
+
+use crate::dnn::profile::ModelProfile;
+use crate::runtime::artifacts::Manifest;
+use crate::util::units::Bytes;
+use std::collections::BTreeMap;
+
+/// On-board footprint of one model: weights plus compiled stage binaries,
+/// broken down per subtask so a split range maps to bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelArtifact {
+    /// Model id — the index into the fleet's profile list that a
+    /// [`crate::sim::workload::Request`] carries as its `model` field.
+    pub id: usize,
+    /// Human-readable name (profile or manifest model name).
+    pub name: String,
+    /// Bytes of weights + compiled stage binary per subtask, in execution
+    /// order (length = model depth `K`).
+    pub stage_bytes: Vec<Bytes>,
+}
+
+impl ModelArtifact {
+    /// Derive a footprint from a solver profile: `total` bytes of weights
+    /// spread across the `K` subtasks proportionally to their input share
+    /// `α_k` (bigger activations ⇒ bigger layers ⇒ more parameters — the
+    /// same heuristic the paper uses to scale per-layer compute).
+    pub fn from_profile(id: usize, profile: &ModelProfile, total: Bytes) -> ModelArtifact {
+        let alphas = profile.alphas();
+        let sum: f64 = alphas.iter().sum();
+        let stage_bytes = alphas
+            .iter()
+            .map(|a| Bytes(total.value() * a / sum.max(f64::MIN_POSITIVE)))
+            .collect();
+        ModelArtifact {
+            id,
+            name: profile.name.clone(),
+            stage_bytes,
+        }
+    }
+
+    /// Derive a footprint from a compiled artifact manifest: each stage's
+    /// bytes are the on-disk size of its lowered executable for the given
+    /// batch variant.
+    pub fn from_manifest(
+        id: usize,
+        manifest: &Manifest,
+        batch: usize,
+    ) -> anyhow::Result<ModelArtifact> {
+        let stages = manifest.stages_for_batch(batch);
+        anyhow::ensure!(!stages.is_empty(), "no stages for batch {batch}");
+        let mut stage_bytes = Vec::with_capacity(stages.len());
+        for s in &stages {
+            let meta = std::fs::metadata(&s.path)
+                .map_err(|e| anyhow::anyhow!("stat {}: {e}", s.path.display()))?;
+            stage_bytes.push(Bytes(meta.len() as f64));
+        }
+        Ok(ModelArtifact {
+            id,
+            name: manifest.model.clone(),
+            stage_bytes,
+        })
+    }
+
+    /// Total bytes a satellite stores to run this model at any split.
+    pub fn total_bytes(&self) -> Bytes {
+        Bytes(self.stage_bytes.iter().map(Bytes::value).sum())
+    }
+
+    /// Bytes covering the on-board prefix of a split decision: the first
+    /// `split` subtasks (0 = nothing on board, depth = the whole model).
+    pub fn bytes_up_to(&self, split: usize) -> Bytes {
+        Bytes(
+            self.stage_bytes
+                .iter()
+                .take(split)
+                .map(Bytes::value)
+                .sum(),
+        )
+    }
+}
+
+/// Eviction discipline of a satellite's [`ArtifactStore`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    /// Evict the least-recently-used resident model first.
+    Lru,
+    /// Evict the least-frequently-used resident model first (ties broken
+    /// by recency, then id).
+    Lfu,
+    /// Never evict: the initial residency is permanent and everything
+    /// else streams through without becoming resident.
+    Pinned,
+}
+
+impl EvictionPolicy {
+    /// Canonical lowercase name (CLI / config / sweep-axis value).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EvictionPolicy::Lru => "lru",
+            EvictionPolicy::Lfu => "lfu",
+            EvictionPolicy::Pinned => "pinned",
+        }
+    }
+
+    /// Parse a canonical name back into a policy.
+    pub fn from_name(name: &str) -> anyhow::Result<EvictionPolicy> {
+        match name {
+            "lru" => Ok(EvictionPolicy::Lru),
+            "lfu" => Ok(EvictionPolicy::Lfu),
+            "pinned" => Ok(EvictionPolicy::Pinned),
+            other => anyhow::bail!("unknown eviction policy `{other}` (lru|lfu|pinned)"),
+        }
+    }
+}
+
+/// Which models start out resident on which satellites.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Every satellite preloads the full catalog in id order (the paper's
+    /// implicit assumption; with an unlimited budget this is the passive
+    /// pre-placement behavior).
+    Everywhere,
+    /// Satellite `i` starts its preload at artifact `i mod n`, so a
+    /// storage-constrained fleet collectively covers the catalog even when
+    /// no single satellite can hold it.
+    Static,
+    /// Satellites start cold and fetch weights over ISLs on first use.
+    Demand,
+}
+
+impl PlacementPolicy {
+    /// Canonical lowercase name (CLI / config / sweep-axis value).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PlacementPolicy::Everywhere => "everywhere",
+            PlacementPolicy::Static => "static",
+            PlacementPolicy::Demand => "demand",
+        }
+    }
+
+    /// Parse a canonical name back into a policy.
+    pub fn from_name(name: &str) -> anyhow::Result<PlacementPolicy> {
+        match name {
+            "everywhere" => Ok(PlacementPolicy::Everywhere),
+            "static" => Ok(PlacementPolicy::Static),
+            "demand" => Ok(PlacementPolicy::Demand),
+            other => anyhow::bail!("unknown placement policy `{other}` (everywhere|static|demand)"),
+        }
+    }
+}
+
+/// Fleet-level placement configuration handed to the simulator.
+#[derive(Debug, Clone)]
+pub struct PlacementConfig {
+    /// Initial-residency policy.
+    pub policy: PlacementPolicy,
+    /// Eviction discipline of every satellite's store.
+    pub eviction: EvictionPolicy,
+    /// Per-satellite storage budget (`None` = unlimited).
+    pub budget: Option<Bytes>,
+    /// Artifact catalog, indexed by model id (parallel to the fleet's
+    /// profile list).
+    pub artifacts: Vec<ModelArtifact>,
+}
+
+impl Default for PlacementConfig {
+    fn default() -> Self {
+        PlacementConfig {
+            policy: PlacementPolicy::Everywhere,
+            eviction: EvictionPolicy::Lru,
+            budget: None,
+            artifacts: Vec::new(),
+        }
+    }
+}
+
+impl PlacementConfig {
+    /// True when placement cannot change any simulation outcome: every
+    /// model resident everywhere with no budget. The fleet simulator
+    /// short-circuits all placement machinery in this state, which is how
+    /// the default configuration stays bit-identical to pre-placement
+    /// behavior.
+    pub fn is_passive(&self) -> bool {
+        self.policy == PlacementPolicy::Everywhere && self.budget.is_none()
+    }
+
+    /// Build satellite `sat`'s store with the policy's initial residency.
+    /// Seeding never evicts: models are preloaded in policy order until
+    /// the budget refuses one, then the preload stops.
+    pub fn store_for(&self, sat: usize) -> ArtifactStore {
+        let mut store = ArtifactStore::new(self.budget, self.eviction);
+        let n = self.artifacts.len();
+        let order: Vec<usize> = match self.policy {
+            PlacementPolicy::Everywhere => (0..n).collect(),
+            PlacementPolicy::Static => (0..n).map(|i| (sat + i) % n.max(1)).collect(),
+            PlacementPolicy::Demand => Vec::new(),
+        };
+        for id in order {
+            if !store.seed(id, self.artifacts[id].total_bytes()) {
+                break;
+            }
+        }
+        store
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    bytes: Bytes,
+    last_used: u64,
+    uses: u64,
+}
+
+/// A satellite's resident-model store: a byte budget, an eviction policy,
+/// and a deterministic logical access clock (no wall time — sweep runs
+/// must stay bit-reproducible).
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    budget: Option<Bytes>,
+    eviction: EvictionPolicy,
+    used: Bytes,
+    entries: BTreeMap<usize, Entry>,
+    clock: u64,
+}
+
+impl ArtifactStore {
+    /// An empty store (`None` budget = unlimited).
+    pub fn new(budget: Option<Bytes>, eviction: EvictionPolicy) -> ArtifactStore {
+        ArtifactStore {
+            budget,
+            eviction,
+            used: Bytes::ZERO,
+            entries: BTreeMap::new(),
+            clock: 0,
+        }
+    }
+
+    /// Is the model resident?
+    pub fn contains(&self, model: usize) -> bool {
+        self.entries.contains_key(&model)
+    }
+
+    /// Record an access (a cache hit): bumps recency and frequency.
+    /// Returns false when the model is not resident.
+    pub fn touch(&mut self, model: usize) -> bool {
+        self.clock += 1;
+        let clock = self.clock;
+        match self.entries.get_mut(&model) {
+            Some(e) => {
+                e.last_used = clock;
+                e.uses += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Preload a model during placement seeding. Never evicts: returns
+    /// false (and changes nothing) when the remaining budget cannot hold
+    /// the model.
+    pub fn seed(&mut self, model: usize, bytes: Bytes) -> bool {
+        if self.entries.contains_key(&model) {
+            return true;
+        }
+        if let Some(budget) = self.budget {
+            if self.used.value() + bytes.value() > budget.value() {
+                return false;
+            }
+        }
+        self.clock += 1;
+        self.entries.insert(
+            model,
+            Entry {
+                bytes,
+                last_used: self.clock,
+                uses: 0,
+            },
+        );
+        self.used += bytes;
+        true
+    }
+
+    /// Make a fetched model resident, evicting per policy as needed.
+    /// `inflight[m] > 0` pins model `m` against eviction (the batcher's
+    /// never-mix-models invariant: queued or in-flight work keeps its
+    /// model on board). Returns the evicted model ids, or `None` when the
+    /// model could not be made resident (it streamed through: the fetch
+    /// still happened, but nothing stays cached and nothing was evicted).
+    pub fn insert(&mut self, model: usize, bytes: Bytes, inflight: &[u64]) -> Option<Vec<usize>> {
+        self.clock += 1;
+        let clock = self.clock;
+        if let Some(e) = self.entries.get_mut(&model) {
+            e.last_used = clock;
+            e.uses += 1;
+            return Some(Vec::new());
+        }
+        let fresh = Entry {
+            bytes,
+            last_used: clock,
+            uses: 1,
+        };
+        let Some(budget) = self.budget else {
+            self.entries.insert(model, fresh);
+            self.used += bytes;
+            return Some(Vec::new());
+        };
+        let mut victims: Vec<usize> = Vec::new();
+        if self.used.value() + bytes.value() > budget.value() {
+            if self.eviction == EvictionPolicy::Pinned {
+                return None;
+            }
+            let policy = self.eviction;
+            let mut candidates: Vec<(usize, u64, u64, f64)> = self
+                .entries
+                .iter()
+                .filter(|(id, _)| inflight.get(**id).copied().unwrap_or(0) == 0)
+                .map(|(id, e)| (*id, e.last_used, e.uses, e.bytes.value()))
+                .collect();
+            candidates.sort_by_key(|&(id, last_used, uses, _)| match policy {
+                EvictionPolicy::Lru => (last_used, 0, id),
+                EvictionPolicy::Lfu => (uses, last_used, id),
+                EvictionPolicy::Pinned => unreachable!("pinned stores never evict"),
+            });
+            let mut freed = 0.0;
+            for &(id, _, _, victim_bytes) in &candidates {
+                if self.used.value() - freed + bytes.value() <= budget.value() {
+                    break;
+                }
+                freed += victim_bytes;
+                victims.push(id);
+            }
+            if self.used.value() - freed + bytes.value() > budget.value() {
+                return None;
+            }
+        }
+        for id in &victims {
+            let e = self.entries.remove(id).expect("victim is resident");
+            self.used = Bytes(self.used.value() - e.bytes.value());
+        }
+        self.entries.insert(model, fresh);
+        self.used += bytes;
+        Some(victims)
+    }
+
+    /// Bytes currently resident.
+    pub fn used_bytes(&self) -> Bytes {
+        self.used
+    }
+
+    /// The storage budget (`None` = unlimited).
+    pub fn budget(&self) -> Option<Bytes> {
+        self.budget
+    }
+
+    /// Resident model ids, ascending.
+    pub fn resident(&self) -> Vec<usize> {
+        self.entries.keys().copied().collect()
+    }
+
+    /// Number of resident models.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is resident.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn artifact(id: usize, mb: f64) -> ModelArtifact {
+        ModelArtifact {
+            id,
+            name: format!("m{id}"),
+            stage_bytes: vec![Bytes::from_mb(mb / 2.0), Bytes::from_mb(mb / 2.0)],
+        }
+    }
+
+    #[test]
+    fn profile_footprint_partitions_total() {
+        let mut rng = Pcg64::seeded(3);
+        let p = ModelProfile::sampled(8, &mut rng);
+        let a = ModelArtifact::from_profile(2, &p, Bytes::from_mb(200.0));
+        assert_eq!(a.id, 2);
+        assert_eq!(a.stage_bytes.len(), 8);
+        assert!((a.total_bytes().value() - Bytes::from_mb(200.0).value()).abs() < 1.0);
+        // α shrinks with depth, so the first stage is the biggest
+        assert!(a.stage_bytes[0].value() > a.stage_bytes[7].value());
+        // split-range bytes are monotone and bracket the total
+        assert_eq!(a.bytes_up_to(0), Bytes::ZERO);
+        for s in 1..=8 {
+            assert!(a.bytes_up_to(s).value() > a.bytes_up_to(s - 1).value());
+        }
+        assert_eq!(a.bytes_up_to(8), a.total_bytes());
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in [
+            PlacementPolicy::Everywhere,
+            PlacementPolicy::Static,
+            PlacementPolicy::Demand,
+        ] {
+            assert_eq!(PlacementPolicy::from_name(p.as_str()).unwrap(), p);
+        }
+        for e in [EvictionPolicy::Lru, EvictionPolicy::Lfu, EvictionPolicy::Pinned] {
+            assert_eq!(EvictionPolicy::from_name(e.as_str()).unwrap(), e);
+        }
+        assert!(PlacementPolicy::from_name("greedy").is_err());
+        assert!(EvictionPolicy::from_name("fifo").is_err());
+    }
+
+    #[test]
+    fn unlimited_store_holds_everything() {
+        let mut s = ArtifactStore::new(None, EvictionPolicy::Lru);
+        for id in 0..50 {
+            assert_eq!(s.insert(id, Bytes::from_gb(10.0), &[]), Some(vec![]));
+        }
+        assert_eq!(s.len(), 50);
+        assert!(s.contains(49));
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_model() {
+        let mut s = ArtifactStore::new(Some(Bytes::from_mb(300.0)), EvictionPolicy::Lru);
+        assert_eq!(s.insert(0, Bytes::from_mb(100.0), &[]), Some(vec![]));
+        assert_eq!(s.insert(1, Bytes::from_mb(100.0), &[]), Some(vec![]));
+        assert_eq!(s.insert(2, Bytes::from_mb(100.0), &[]), Some(vec![]));
+        // touch 0 so model 1 becomes the LRU victim
+        assert!(s.touch(0));
+        assert_eq!(s.insert(3, Bytes::from_mb(100.0), &[]), Some(vec![1]));
+        assert_eq!(s.resident(), vec![0, 2, 3]);
+        assert_eq!(s.used_bytes(), Bytes::from_mb(300.0));
+    }
+
+    #[test]
+    fn lfu_evicts_the_least_used_model() {
+        let mut s = ArtifactStore::new(Some(Bytes::from_mb(200.0)), EvictionPolicy::Lfu);
+        s.insert(0, Bytes::from_mb(100.0), &[]);
+        s.insert(1, Bytes::from_mb(100.0), &[]);
+        // three extra uses for 0, one for 1 — despite 1 being more recent
+        s.touch(0);
+        s.touch(0);
+        s.touch(0);
+        s.touch(1);
+        assert_eq!(s.insert(2, Bytes::from_mb(100.0), &[]), Some(vec![1]));
+        assert_eq!(s.resident(), vec![0, 2]);
+    }
+
+    #[test]
+    fn pinned_store_never_evicts() {
+        let mut s = ArtifactStore::new(Some(Bytes::from_mb(150.0)), EvictionPolicy::Pinned);
+        assert_eq!(s.insert(0, Bytes::from_mb(100.0), &[]), Some(vec![]));
+        // does not fit and nothing may be evicted: streams through
+        assert_eq!(s.insert(1, Bytes::from_mb(100.0), &[]), None);
+        assert_eq!(s.resident(), vec![0]);
+        // a small model still fits the remaining space
+        assert_eq!(s.insert(2, Bytes::from_mb(50.0), &[]), Some(vec![]));
+        assert_eq!(s.resident(), vec![0, 2]);
+    }
+
+    #[test]
+    fn inflight_models_are_pinned_against_eviction() {
+        let mut s = ArtifactStore::new(Some(Bytes::from_mb(200.0)), EvictionPolicy::Lru);
+        s.insert(0, Bytes::from_mb(100.0), &[]);
+        s.insert(1, Bytes::from_mb(100.0), &[]);
+        // model 0 is the LRU victim, but it has in-flight work: evict 1
+        let inflight = [2, 0];
+        assert_eq!(s.insert(2, Bytes::from_mb(100.0), &inflight), Some(vec![1]));
+        assert_eq!(s.resident(), vec![0, 2]);
+        // with both pinned, nothing can be made resident
+        let all_pinned = [1, 0, 1];
+        assert_eq!(s.insert(3, Bytes::from_mb(100.0), &all_pinned), None);
+        assert_eq!(s.resident(), vec![0, 2]);
+    }
+
+    #[test]
+    fn oversized_models_stream_without_churn() {
+        let mut s = ArtifactStore::new(Some(Bytes::from_mb(100.0)), EvictionPolicy::Lru);
+        s.insert(0, Bytes::from_mb(80.0), &[]);
+        // bigger than the whole budget: no eviction cascade
+        assert_eq!(s.insert(1, Bytes::from_mb(200.0), &[]), None);
+        assert_eq!(s.resident(), vec![0]);
+        assert_eq!(s.used_bytes(), Bytes::from_mb(80.0));
+    }
+
+    #[test]
+    fn one_insert_can_evict_several_victims() {
+        let mut s = ArtifactStore::new(Some(Bytes::from_mb(300.0)), EvictionPolicy::Lru);
+        s.insert(0, Bytes::from_mb(100.0), &[]);
+        s.insert(1, Bytes::from_mb(100.0), &[]);
+        s.insert(2, Bytes::from_mb(100.0), &[]);
+        assert_eq!(s.insert(3, Bytes::from_mb(250.0), &[]), Some(vec![0, 1, 2]));
+        assert_eq!(s.resident(), vec![3]);
+        assert_eq!(s.used_bytes(), Bytes::from_mb(250.0));
+    }
+
+    #[test]
+    fn everywhere_seeding_preloads_in_id_order() {
+        let cfg = PlacementConfig {
+            policy: PlacementPolicy::Everywhere,
+            eviction: EvictionPolicy::Lru,
+            budget: Some(Bytes::from_mb(250.0)),
+            artifacts: (0..4).map(|i| artifact(i, 100.0)).collect(),
+        };
+        // 100 MB each, 250 MB budget: the first two fit, the third stops
+        // the preload
+        let s = cfg.store_for(0);
+        assert_eq!(s.resident(), vec![0, 1]);
+        assert!(!cfg.is_passive());
+    }
+
+    #[test]
+    fn static_seeding_stripes_across_the_fleet() {
+        let cfg = PlacementConfig {
+            policy: PlacementPolicy::Static,
+            eviction: EvictionPolicy::Lru,
+            budget: Some(Bytes::from_mb(150.0)),
+            artifacts: (0..3).map(|i| artifact(i, 100.0)).collect(),
+        };
+        assert_eq!(cfg.store_for(0).resident(), vec![0]);
+        assert_eq!(cfg.store_for(1).resident(), vec![1]);
+        assert_eq!(cfg.store_for(2).resident(), vec![2]);
+        assert_eq!(cfg.store_for(3).resident(), vec![0]);
+    }
+
+    #[test]
+    fn demand_seeding_starts_cold_and_default_is_passive() {
+        let cfg = PlacementConfig {
+            policy: PlacementPolicy::Demand,
+            eviction: EvictionPolicy::Lru,
+            budget: Some(Bytes::from_mb(500.0)),
+            artifacts: (0..3).map(|i| artifact(i, 100.0)).collect(),
+        };
+        assert!(cfg.store_for(0).is_empty());
+        assert!(PlacementConfig::default().is_passive());
+        // an unlimited Everywhere store with artifacts is still passive
+        let passive = PlacementConfig {
+            artifacts: (0..3).map(|i| artifact(i, 100.0)).collect(),
+            ..PlacementConfig::default()
+        };
+        assert!(passive.is_passive());
+        assert_eq!(passive.store_for(0).resident(), vec![0, 1, 2]);
+    }
+}

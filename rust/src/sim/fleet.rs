@@ -39,6 +39,22 @@
 //! thin N = 1 wrapper over this mode and stays bit-identical to its
 //! pre-fleet behavior.
 //!
+//! With an *active* [`PlacementConfig`] (anything but the default
+//! everywhere/unlimited setting) each satellite also owns an
+//! [`ArtifactStore`] of model weights. Before routing, every satellite's
+//! [`SatelliteInfo::miss_penalty_s`] is refreshed for the arriving
+//! request's model — the estimated weight-fetch time a cold satellite
+//! would pay — so the cache-aware policies prefer warm satellites. A
+//! request that still lands cold first pulls the weights as a real
+//! `FetchDone` event: from the cheapest warm satellite over the bounded
+//! ISL graph ([`IslTopology::cheapest_transfer`]) or from the ground
+//! archive at the downlink rate, delaying processing by the transfer
+//! time, drawing antenna energy on both ends, and counting in
+//! [`super::metrics::SatMetrics::weight_bytes_in`]. Making the model
+//! resident may evict cold models per [`crate::placement::EvictionPolicy`]
+//! — but never one with queued or in-flight work (the batcher's
+//! never-mix-models invariant: [`ArtifactStore::insert`] pins them).
+//!
 //! The event loop enforces [`FleetSimConfig::horizon`]: events scheduled
 //! past it are dropped and their requests counted as
 //! [`SimMetrics::unfinished`].
@@ -55,9 +71,10 @@ use crate::energy::battery::Battery;
 use crate::energy::solar::SolarPanel;
 use crate::link::isl::{IslLink, IslTopology};
 use crate::link::route::{self, DownlinkOracle};
+use crate::placement::{ArtifactStore, PlacementConfig};
 use crate::solver::engine::{SolverEngine, Telemetry};
 use crate::solver::instance::{Instance, InstanceBuilder};
-use crate::util::units::{BitsPerSec, Bytes, Joules, Seconds};
+use crate::util::units::{BitsPerSec, Bytes, Joules, Seconds, Watts};
 
 /// One satellite of the fleet: its contact window source and (optionally)
 /// its energy subsystem.
@@ -122,6 +139,12 @@ pub struct FleetSimConfig {
     pub isl_max_hops: usize,
     /// What the per-arrival solve sees.
     pub telemetry: TelemetryMode,
+    /// Model placement: which weights start resident where, per-satellite
+    /// storage budgets, and eviction. The default — every model
+    /// everywhere, unlimited ([`PlacementConfig::is_passive`]) — disables
+    /// every placement code path and is bit-identical to the
+    /// pre-placement simulator.
+    pub placement: PlacementConfig,
     /// Simulation horizon: events past it are dropped and counted as
     /// unfinished.
     pub horizon: Seconds,
@@ -140,6 +163,9 @@ pub struct FleetResult {
 #[derive(Debug, Clone, Copy)]
 enum Event {
     Arrival(usize),
+    /// The model's weights finished landing on the serving satellite
+    /// (cache-miss path only): processing may join the FIFO now.
+    FetchDone(usize),
     SatDone(usize),
     /// The boundary tensor finished serializing onto the current hop's ISL.
     RelayTxDone(usize),
@@ -168,6 +194,16 @@ struct Flight {
     t_cloud_suffix: Seconds,
     tx_bytes: Bytes,
     e_off: Joules,
+    /// Warm satellite a pending weight fetch pulls from (`None` = ground
+    /// archive, or no fetch at all).
+    fetch_src: Option<usize>,
+    /// Weight-transfer time of the pending fetch (zero on a cache hit or
+    /// with passive placement).
+    fetch_time: Seconds,
+    /// On-board processing time for stages `0..split` — kept on the
+    /// flight so a weight fetch can defer the FIFO reservation to
+    /// `FetchDone`.
+    proc_time: Seconds,
 }
 
 impl Flight {
@@ -210,14 +246,25 @@ pub struct FleetSimulator {
     pub config: FleetSimConfig,
     /// Mutable per-satellite state, indexed like `config.sats`.
     pub states: Vec<SatelliteState>,
+    /// Per-satellite artifact stores, indexed like `config.sats`. Empty
+    /// when placement is passive (the default): no store is consulted on
+    /// the passive path.
+    pub stores: Vec<ArtifactStore>,
     /// Downlink rate, resolved once from the template instead of
     /// rebuilding an `Instance` per transmission event.
     rate: BitsPerSec,
+    /// Antenna power from the template: a weight fetch draws
+    /// `p_off × transfer time` on both ends of the transfer.
+    p_off: Watts,
+    /// Cached `!config.placement.is_passive()`.
+    placement_active: bool,
 }
 
 impl FleetSimulator {
     /// Build a simulator over `config`. Panics on an empty fleet, empty
-    /// profile set, or an ISL topology whose size mismatches the fleet.
+    /// profile set, an ISL topology whose size mismatches the fleet, or an
+    /// active placement whose artifact catalog does not cover the profile
+    /// set.
     pub fn new(config: FleetSimConfig) -> Self {
         assert!(!config.sats.is_empty(), "fleet must have ≥ 1 satellite");
         assert!(!config.profiles.is_empty(), "fleet needs ≥ 1 model profile");
@@ -228,13 +275,27 @@ impl FleetSimulator {
                 "ISL topology must cover exactly the fleet"
             );
         }
-        let rate = config
+        let probe = config
             .template
             .clone()
             .build()
-            .expect("template must be valid")
-            .downlink
-            .rate;
+            .expect("template must be valid");
+        let rate = probe.downlink.rate;
+        let p_off = probe.tx.p_off;
+        let placement_active = !config.placement.is_passive();
+        if placement_active {
+            assert!(
+                config.placement.artifacts.len() >= config.profiles.len(),
+                "placement catalog must cover every model profile"
+            );
+        }
+        let stores = if placement_active {
+            (0..config.sats.len())
+                .map(|s| config.placement.store_for(s))
+                .collect()
+        } else {
+            Vec::new()
+        };
         let states = config
             .sats
             .iter()
@@ -246,7 +307,10 @@ impl FleetSimulator {
         FleetSimulator {
             config,
             states,
+            stores,
             rate,
+            p_off,
+            placement_active,
         }
     }
 
@@ -306,6 +370,44 @@ impl FleetSimulator {
                 route::plan(isl, &oracle, sat, tx_bytes, now, max_hops)
             }
             _ => route::plan_own(&oracle, sat, now),
+        }
+    }
+
+    /// Where satellite `sat` would pull `model`'s weights from right now,
+    /// and how long the transfer takes: the warm satellite with the
+    /// cheapest bounded-hop ISL route
+    /// ([`IslTopology::cheapest_transfer`]; serialization + propagation
+    /// per hop, queueing excluded — weights ride the capacity-rich laser
+    /// terminals, not the ground-facing FIFO), or the ground archive at
+    /// the downlink rate (the command path needs no warm source) when
+    /// that is cheaper or no warm satellite is reachable. Doubles as the
+    /// router's miss-penalty estimate, so routing and execution can never
+    /// disagree about what a miss costs.
+    fn fetch_plan(&self, sat: usize, model: usize) -> (Option<usize>, Seconds) {
+        let bytes = self.config.placement.artifacts[model].total_bytes();
+        let ground = self.rate.transfer_time(bytes);
+        let mut best: Option<(f64, usize)> = None;
+        if let Some(isl) = &self.config.isl {
+            for (w, store) in self.stores.iter().enumerate() {
+                if w == sat || !store.contains(model) {
+                    continue;
+                }
+                if let Some(t) =
+                    isl.cheapest_transfer(w, sat, bytes, self.config.isl_max_hops)
+                {
+                    let better = match best {
+                        None => true,
+                        Some((cost, _)) => t.value() < cost,
+                    };
+                    if better {
+                        best = Some((t.value(), w));
+                    }
+                }
+            }
+        }
+        match best {
+            Some((cost, w)) if cost < ground.value() => (Some(w), Seconds(cost)),
+            _ => (None, ground),
         }
     }
 
@@ -414,6 +516,10 @@ impl FleetSimulator {
         let names: Vec<String> = self.config.sats.iter().map(|s| s.name.clone()).collect();
         let mut metrics = SimMetrics::for_fleet(&names);
         let mut flights: Vec<Option<Flight>> = vec![None; requests.len()];
+        // per-satellite, per-model count of admitted-but-unprocessed work:
+        // the eviction pin set (the batcher's never-mix-models invariant —
+        // a model with queued batches must stay resident)
+        let mut inflight: Vec<Vec<u64>> = vec![vec![0; self.config.profiles.len()]; n];
         let mut router = Router::new(self.config.routing);
         let mut cluster = ClusterState::new();
         for (id, name) in names.iter().enumerate() {
@@ -465,6 +571,21 @@ impl FleetSimulator {
                             info.neighbor_contact_in = wait;
                         }
                     }
+                    // cache-aware routing: refresh every satellite's
+                    // weight-miss penalty for *this* request's model (zero
+                    // when warm — [`Self::fetch_plan`] otherwise). With
+                    // passive placement every penalty stays 0.0 and the
+                    // warm selectors reduce to their classic forms.
+                    if self.placement_active {
+                        for id in 0..n {
+                            let penalty = if self.stores[id].contains(req.model) {
+                                0.0
+                            } else {
+                                self.fetch_plan(id, req.model).1.value()
+                            };
+                            cluster.get_mut(id).expect("registered").miss_penalty_s = penalty;
+                        }
+                    }
                     let Some(sat) = router.route(req, &cluster) else {
                         // no eligible satellite (e.g. every battery below
                         // the energy-aware floor)
@@ -489,6 +610,20 @@ impl FleetSimulator {
                         metrics.reject_admission(Some(sat));
                         continue;
                     }
+                    // placement: are the weights on board? A miss becomes
+                    // a real fetch event that delays processing.
+                    let mut fetch: Option<(Option<usize>, Seconds)> = None;
+                    if self.placement_active {
+                        if self.stores[sat].touch(req.model) {
+                            metrics.note_artifact_hit(sat);
+                        } else {
+                            let bytes =
+                                self.config.placement.artifacts[req.model].total_bytes();
+                            metrics.note_artifact_miss(sat, bytes);
+                            fetch = Some(self.fetch_plan(sat, req.model));
+                        }
+                        inflight[sat][req.model] += 1;
+                    }
                     let (tx_bytes, e_off, t_gc) = if s < k {
                         (inst.wire_bytes(s), inst.e_off(s), inst.t_gc(s))
                     } else {
@@ -511,9 +646,60 @@ impl FleetSimulator {
                         t_cloud_suffix,
                         tx_bytes,
                         e_off,
+                        fetch_src: fetch.and_then(|(src, _)| src),
+                        fetch_time: fetch.map_or(Seconds::ZERO, |(_, t)| t),
+                        proc_time,
                     });
 
-                    // FIFO processing payload
+                    match fetch {
+                        Some((_, t)) => {
+                            // the weights must land before stage 0 can run
+                            q.schedule(now + t.value(), Event::FetchDone(i));
+                        }
+                        None => {
+                            // FIFO processing payload
+                            let start = now.max(self.states[sat].proc_free_at);
+                            let done = start + proc_time.value();
+                            self.states[sat].proc_free_at = done;
+                            q.schedule(done, Event::SatDone(i));
+                        }
+                    }
+                }
+                Event::FetchDone(i) => {
+                    let (sat, fetch_src, fetch_time, proc_time) = {
+                        let f = flights[i].as_ref().expect("flight in progress");
+                        (f.sat, f.fetch_src, f.fetch_time, f.proc_time)
+                    };
+                    let model = requests[i].model;
+                    let bytes = self.config.placement.artifacts[model].total_bytes();
+                    // make the model resident. In-flight models are pinned
+                    // against eviction; an over-budget model streams
+                    // through — the fetch happened, nothing stays cached.
+                    if let Some(victims) = self.stores[sat].insert(model, bytes, &inflight[sat])
+                    {
+                        for _ in victims {
+                            metrics.note_eviction(sat);
+                        }
+                    }
+                    // both ends keyed their terminals for the whole
+                    // transfer. The draws are best-effort: the request was
+                    // admitted (and its processing energy reserved) at
+                    // arrival, so a refusal here surfaces only in the
+                    // per-satellite energy_rejections counter.
+                    let e_fetch = Joules(self.p_off.value() * fetch_time.value());
+                    if self.states[sat].try_draw(now, e_fetch) {
+                        if let Some(f) = flights[i].as_mut() {
+                            f.energy += e_fetch;
+                        }
+                    }
+                    if let Some(src) = fetch_src {
+                        if self.states[src].try_draw(now, e_fetch) {
+                            if let Some(f) = flights[i].as_mut() {
+                                f.energy += e_fetch;
+                            }
+                        }
+                    }
+                    // weights on board: join the processing FIFO
                     let start = now.max(self.states[sat].proc_free_at);
                     let done = start + proc_time.value();
                     self.states[sat].proc_free_at = done;
@@ -524,6 +710,12 @@ impl FleetSimulator {
                         let f = flights[i].as_ref().expect("flight in progress");
                         (f.sat, f.split, f.depth, f.tx_bytes)
                     };
+                    // processing finished: this request no longer holds
+                    // its model's eviction pin
+                    if self.placement_active {
+                        let m = requests[i].model;
+                        inflight[sat][m] = inflight[sat][m].saturating_sub(1);
+                    }
                     if split == depth {
                         // all-on-satellite: complete here
                         cluster.note_complete(sat, tx_bytes);
@@ -736,6 +928,7 @@ mod tests {
             isl: None,
             isl_max_hops: 1,
             telemetry: TelemetryMode::Live,
+            placement: PlacementConfig::default(),
             horizon: Seconds::from_hours(10_000.0),
         }
     }
@@ -892,6 +1085,7 @@ mod tests {
             // unconstrained: the window telemetry would otherwise tighten
             // ARG's split away from the doomed transmitter
             telemetry: TelemetryMode::Unconstrained,
+            placement: PlacementConfig::default(),
             horizon: Seconds::from_hours(10_000.0),
         };
         let trace = fixed_trace(4, Seconds(5000.0), Bytes::from_mb(50.0));
@@ -921,6 +1115,7 @@ mod tests {
             isl: None,
             isl_max_hops: 0,
             telemetry: TelemetryMode::Unconstrained,
+            placement: PlacementConfig::default(),
             horizon: Seconds::from_hours(10_000.0),
         };
         let trace = fixed_trace(3, Seconds(100.0), Bytes::from_mb(50.0));
@@ -979,6 +1174,7 @@ mod tests {
             // the PR 3 setting: a single relay hop
             isl_max_hops: 1,
             telemetry: TelemetryMode::Unconstrained,
+            placement: PlacementConfig::default(),
             horizon: Seconds::from_hours(10_000.0),
         };
         let trace = vec![Request {
@@ -1072,6 +1268,7 @@ mod tests {
             isl: Some(ring4_topology()),
             isl_max_hops: max_hops,
             telemetry: TelemetryMode::Unconstrained,
+            placement: PlacementConfig::default(),
             horizon: Seconds::from_hours(10_000.0),
         };
         let trace = vec![Request {
@@ -1208,6 +1405,7 @@ mod tests {
             isl: Some(line3_topology()),
             isl_max_hops: 4,
             telemetry: TelemetryMode::Unconstrained,
+            placement: PlacementConfig::default(),
             horizon: Seconds::from_hours(10_000.0),
         };
         let mk = |id: u64, at: f64| Request {
@@ -1237,5 +1435,138 @@ mod tests {
         assert_eq!(m.relays, 3);
         assert_eq!(m.per_sat()[1].transit_bytes, Bytes::from_mb(400.0));
         assert_eq!(m.per_sat()[2].transit_bytes, Bytes::from_mb(200.0));
+    }
+
+    // --------------------------------------------------------- placement
+
+    use crate::placement::{EvictionPolicy, ModelArtifact, PlacementPolicy};
+
+    /// One 100 MB-class artifact per profile, footprints split per layer.
+    fn catalog(profiles: &[ModelProfile], mb: f64) -> Vec<ModelArtifact> {
+        profiles
+            .iter()
+            .enumerate()
+            .map(|(i, p)| ModelArtifact::from_profile(i, p, Bytes::from_mb(mb)))
+            .collect()
+    }
+
+    #[test]
+    fn demand_placement_fetches_once_then_hits() {
+        let mut cfg = config(1, RoutingPolicy::RoundRobin);
+        cfg.placement = PlacementConfig {
+            policy: PlacementPolicy::Demand,
+            eviction: EvictionPolicy::Lru,
+            budget: None,
+            artifacts: catalog(&cfg.profiles, 100.0),
+        };
+        let trace = fixed_trace(3, Seconds(5000.0), Bytes::from_mb(10.0));
+        let engine = SolverRegistry::engine("ilpb").unwrap();
+        let result = FleetSimulator::new(cfg).run(&trace, &engine).unwrap();
+        let m = &result.metrics;
+        assert_eq!(m.completed(), 3);
+        assert_eq!(m.artifact_misses, 1, "only the first request is cold");
+        assert_eq!(m.artifact_hits, 2);
+        assert_eq!(m.evictions, 0);
+        // the ~100 MB of weights crossed the ground uplink exactly once
+        let mb_in = m.weight_bytes_in.mb();
+        assert!((mb_in - 100.0).abs() < 1.0, "weights in: {mb_in} MB");
+        assert_eq!(m.per_sat()[0].artifact_misses, 1);
+        assert_eq!(m.per_sat()[0].artifact_hits, 2);
+    }
+
+    #[test]
+    fn cache_aware_routing_keeps_models_where_they_live() {
+        // static striping over a 120 MB budget: sat 0 holds model 0,
+        // sat 1 holds model 1 — neither can hold both
+        let scenario = |routing: RoutingPolicy| {
+            let mut cfg = config(2, routing);
+            let profile_b =
+                ModelProfile::from_alphas("test-net-b", &[800.0, 400.0, 80.0, 8.0]).unwrap();
+            cfg.profiles = vec![profile(), profile_b];
+            cfg.placement = PlacementConfig {
+                policy: PlacementPolicy::Static,
+                eviction: EvictionPolicy::Lru,
+                budget: Some(Bytes::from_mb(120.0)),
+                artifacts: catalog(&cfg.profiles, 100.0),
+            };
+            cfg
+        };
+        let mk = |id: u64, at: f64, model: usize| Request {
+            id,
+            arrival: Seconds(at),
+            data: Bytes::from_mb(10.0),
+            model,
+            class: 0,
+        };
+        let trace = vec![
+            mk(0, 1000.0, 0),
+            mk(1, 6000.0, 0),
+            mk(2, 11_000.0, 1),
+            mk(3, 16_000.0, 1),
+        ];
+        // least-loaded is cache-aware: every request lands on the
+        // satellite already holding its model, whatever the queues say
+        let warm = FleetSimulator::new(scenario(RoutingPolicy::LeastLoaded))
+            .run(&trace, &SolverRegistry::engine("ilpb").unwrap())
+            .unwrap();
+        assert_eq!(warm.metrics.artifact_misses, 0);
+        assert_eq!(warm.metrics.artifact_hits, 4);
+        assert_eq!(warm.metrics.per_sat()[0].artifact_hits, 2);
+        assert_eq!(warm.metrics.per_sat()[1].artifact_hits, 2);
+        assert_eq!(warm.metrics.evictions, 0);
+        // round-robin is cache-oblivious: it lands requests cold and
+        // thrashes the one-model budget
+        let cold = FleetSimulator::new(scenario(RoutingPolicy::RoundRobin))
+            .run(&trace, &SolverRegistry::engine("ilpb").unwrap())
+            .unwrap();
+        assert!(cold.metrics.artifact_misses > 0, "round-robin must go cold");
+        assert!(cold.metrics.evictions > 0, "the 120 MB budget must thrash");
+    }
+
+    #[test]
+    fn weights_ride_the_isl_when_a_neighbor_is_warm() {
+        // round-robin pins the lone model-1 request to cold satellite 0;
+        // satellite 1 holds the weights. With ISLs the fetch crosses the
+        // 50 Gbps laser; without, the 100 Mbps ground uplink pays ~8 s.
+        let scenario = |isl: Option<IslTopology>| {
+            let mut cfg = config(2, RoutingPolicy::RoundRobin);
+            let profile_b =
+                ModelProfile::from_alphas("test-net-b", &[800.0, 400.0, 80.0, 8.0]).unwrap();
+            cfg.profiles = vec![profile(), profile_b];
+            cfg.isl = isl;
+            cfg.placement = PlacementConfig {
+                policy: PlacementPolicy::Static,
+                eviction: EvictionPolicy::Lru,
+                budget: Some(Bytes::from_mb(120.0)),
+                artifacts: catalog(&cfg.profiles, 100.0),
+            };
+            cfg
+        };
+        let trace = vec![Request {
+            id: 0,
+            arrival: Seconds(1000.0),
+            data: Bytes::from_mb(10.0),
+            model: 1,
+            class: 0,
+        }];
+        let over_isl = FleetSimulator::new(scenario(Some(pair_topology())))
+            .run(&trace, &SolverRegistry::engine("ars").unwrap())
+            .unwrap();
+        let from_ground = FleetSimulator::new(scenario(None))
+            .run(&trace, &SolverRegistry::engine("ars").unwrap())
+            .unwrap();
+        for m in [&over_isl.metrics, &from_ground.metrics] {
+            assert_eq!(m.completed(), 1);
+            assert_eq!(m.artifact_misses, 1);
+            let mb_in = m.per_sat()[0].weight_bytes_in.mb();
+            assert!((mb_in - 100.0).abs() < 1.0, "weights in: {mb_in} MB");
+            // weight fetches are not tensor relays
+            assert_eq!(m.relays, 0);
+        }
+        // ARS keeps everything on board, so latency is fetch + compute:
+        // the laser fetch must reclaim most of the 8 s ground transfer
+        let gap = from_ground.metrics.records[0].latency.value()
+            - over_isl.metrics.records[0].latency.value();
+        assert!(gap > 5.0, "ISL fetch must beat the ground fetch, gap {gap} s");
     }
 }

@@ -66,6 +66,17 @@ pub struct SatMetrics {
     /// satellites — tensors it carried in transit or downlinked for the
     /// capturing satellite.
     pub transit_bytes: Bytes,
+    /// Requests that found their model resident in this satellite's
+    /// artifact store.
+    pub artifact_hits: u64,
+    /// Requests that arrived with their model cold (a weight fetch was
+    /// scheduled before processing could start).
+    pub artifact_misses: u64,
+    /// Models evicted from this satellite's artifact store.
+    pub evictions: u64,
+    /// Model weight bytes fetched into this satellite (over ISLs or from
+    /// the ground when no warm neighbor was reachable).
+    pub weight_bytes_in: Bytes,
     latency: StreamingSummary,
     /// Total on-board energy of this satellite's completed requests.
     pub energy: Joules,
@@ -85,6 +96,10 @@ impl SatMetrics {
             relays_in: 0,
             relayed_bytes: Bytes::ZERO,
             transit_bytes: Bytes::ZERO,
+            artifact_hits: 0,
+            artifact_misses: 0,
+            evictions: 0,
+            weight_bytes_in: Bytes::ZERO,
             latency: StreamingSummary::for_latency(),
             energy: Joules::ZERO,
             downlinked: Bytes::ZERO,
@@ -149,6 +164,14 @@ pub struct SimMetrics {
     /// transmitter queues or contact schedules moved while the tensor was
     /// in flight and the contact-graph search found a better tail.
     pub route_recomputes: u64,
+    /// Requests whose model was resident on arrival (fleet-wide).
+    pub artifact_hits: u64,
+    /// Requests whose model was cold on arrival (fleet-wide).
+    pub artifact_misses: u64,
+    /// Artifact-store evictions across the fleet.
+    pub evictions: u64,
+    /// Model weight bytes fetched across the fleet.
+    pub weight_bytes_in: Bytes,
     per_sat: Vec<SatMetrics>,
 }
 
@@ -172,6 +195,10 @@ impl SimMetrics {
             relays: 0,
             relayed_bytes: Bytes::ZERO,
             route_recomputes: 0,
+            artifact_hits: 0,
+            artifact_misses: 0,
+            evictions: 0,
+            weight_bytes_in: Bytes::ZERO,
             per_sat: Vec::new(),
         }
     }
@@ -247,6 +274,29 @@ impl SimMetrics {
         let d = self.sat_mut(dst);
         d.relays_in += 1;
         d.transit_bytes += bytes;
+    }
+
+    /// Count an artifact-store hit: the request's model was resident on
+    /// `sat` when the request arrived.
+    pub fn note_artifact_hit(&mut self, sat: usize) {
+        self.artifact_hits += 1;
+        self.sat_mut(sat).artifact_hits += 1;
+    }
+
+    /// Count an artifact-store miss on `sat` and the `bytes` of model
+    /// weights fetched in to serve it.
+    pub fn note_artifact_miss(&mut self, sat: usize, bytes: Bytes) {
+        self.artifact_misses += 1;
+        self.weight_bytes_in += bytes;
+        let s = self.sat_mut(sat);
+        s.artifact_misses += 1;
+        s.weight_bytes_in += bytes;
+    }
+
+    /// Count one model evicted from `sat`'s artifact store.
+    pub fn note_eviction(&mut self, sat: usize) {
+        self.evictions += 1;
+        self.sat_mut(sat).evictions += 1;
     }
 
     /// Total rejections across both phases.
@@ -408,6 +458,28 @@ mod tests {
         // relays are bookkeeping, not outcomes: no completion implied
         assert_eq!(m.completed(), 0);
         assert_eq!(m.route_recomputes, 0);
+    }
+
+    #[test]
+    fn artifact_accounting_attributes_per_satellite() {
+        let mut m = SimMetrics::for_fleet(&["a".to_string(), "b".to_string()]);
+        m.note_artifact_hit(0);
+        m.note_artifact_hit(0);
+        m.note_artifact_miss(1, Bytes::from_mb(200.0));
+        m.note_artifact_miss(1, Bytes::from_mb(100.0));
+        m.note_eviction(1);
+        assert_eq!(m.artifact_hits, 2);
+        assert_eq!(m.artifact_misses, 2);
+        assert_eq!(m.evictions, 1);
+        assert_eq!(m.weight_bytes_in, Bytes::from_mb(300.0));
+        assert_eq!(m.per_sat()[0].artifact_hits, 2);
+        assert_eq!(m.per_sat()[0].artifact_misses, 0);
+        assert_eq!(m.per_sat()[1].artifact_misses, 2);
+        assert_eq!(m.per_sat()[1].evictions, 1);
+        assert_eq!(m.per_sat()[1].weight_bytes_in, Bytes::from_mb(300.0));
+        // cache bookkeeping is not an outcome bucket
+        assert_eq!(m.completed(), 0);
+        assert_eq!(m.rejected(), 0);
     }
 
     #[test]

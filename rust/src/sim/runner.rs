@@ -99,6 +99,7 @@ impl Simulator {
             isl: None,
             isl_max_hops: 0,
             telemetry: TelemetryMode::Unconstrained,
+            placement: crate::placement::PlacementConfig::default(),
             horizon,
         };
         let mut sim = FleetSimulator::new(fleet);

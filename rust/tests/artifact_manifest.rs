@@ -1,0 +1,144 @@
+//! Failure-mode coverage for the AOT artifact manifest loader, plus the
+//! measured-profile → solver round trip — all over synthetic manifests
+//! written to the OS temp dir, so the tests run whether or not the real
+//! compiled artifacts exist.
+
+use leo_infer::config::Scenario;
+use leo_infer::placement::ModelArtifact;
+use leo_infer::runtime::artifacts::Manifest;
+use leo_infer::solver::{SolveRequest, SolverRegistry};
+use std::path::PathBuf;
+
+/// A fresh manifest dir under the OS temp dir. Each test passes its own
+/// tag so parallel test threads never collide.
+fn setup(tag: &str, manifest_json: &str, stage_files: &[(&str, usize)]) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("leo_infer_manifest_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    for (name, bytes) in stage_files {
+        std::fs::write(dir.join(name), vec![0u8; *bytes]).unwrap();
+    }
+    std::fs::write(dir.join("manifest.json"), manifest_json).unwrap();
+    dir
+}
+
+/// A consistent two-stage, batch-1 manifest: a 256-element input
+/// (1024 B at f32), a 64-element boundary tensor, 10-element logits.
+fn valid_json() -> String {
+    r#"{
+  "model": "tiny2",
+  "batch_sizes": [1],
+  "stages": [
+    {
+      "index": 0, "name": "s0", "batch": 1,
+      "in_shape": [1, 8, 8, 4], "out_shape": [1, 4, 4, 4],
+      "in_bytes": 1024, "out_bytes": 256,
+      "path": "s0.bin"
+    },
+    {
+      "index": 1, "name": "s1", "batch": 1,
+      "in_shape": [1, 4, 4, 4], "out_shape": [1, 10],
+      "in_bytes": 256, "out_bytes": 40,
+      "path": "s1.bin"
+    }
+  ]
+}"#
+    .to_string()
+}
+
+/// The lowered-executable files the valid manifest points at.
+const STAGES: [(&str, usize); 2] = [("s0.bin", 7000), ("s1.bin", 3000)];
+
+#[test]
+fn missing_dir_and_garbage_json_fail_cleanly() {
+    let err = Manifest::load("/nonexistent/nowhere").unwrap_err().to_string();
+    assert!(err.contains("manifest.json"), "unhelpful error: {err}");
+    let dir = setup("garbage", "{ not json at all", &[]);
+    assert!(Manifest::load(&dir).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn missing_stage_file_fails_validation() {
+    // manifest names s1.bin but only s0.bin exists on disk
+    let dir = setup("missing_file", &valid_json(), &STAGES[..1]);
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("missing artifact file"), "unhelpful error: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn batch_without_stages_fails_validation() {
+    // batch_sizes promises an 8-variant no stage provides
+    let json = valid_json().replace("\"batch_sizes\": [1]", "\"batch_sizes\": [1, 8]");
+    let dir = setup("batch_gap", &json, &STAGES);
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(
+        err.contains("batch 8: expected 2 stages, found 0"),
+        "unhelpful error: {err}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn broken_shape_chain_fails_validation() {
+    // stage 1 consumes [1, 64] while stage 0 produces [1, 4, 4, 4]
+    // (same element count, so in_bytes stays self-consistent — only the
+    // chain check can catch it)
+    let json = valid_json().replace("\"in_shape\": [1, 4, 4, 4]", "\"in_shape\": [1, 64]");
+    let dir = setup("shape_chain", &json, &STAGES);
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(
+        err.contains("shape chain broken at s0 → s1"),
+        "unhelpful error: {err}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn inconsistent_in_bytes_fails_validation() {
+    let json = valid_json().replace("\"in_bytes\": 1024", "\"in_bytes\": 999");
+    let dir = setup("bad_bytes", &json, &STAGES);
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(
+        err.contains("s0: in_bytes inconsistent with shape"),
+        "unhelpful error: {err}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn measured_profile_round_trips_into_a_solvable_instance() {
+    let dir = setup("roundtrip", &valid_json(), &STAGES);
+    let m = Manifest::load(&dir).unwrap();
+    assert_eq!(m.depth(), 2);
+    let profile = m.measured_profile(1).unwrap();
+    assert_eq!(profile.depth(), 2);
+    // absent batch variants are refused, not silently empty
+    let err = m.measured_profile(4).unwrap_err().to_string();
+    assert!(err.contains("no stages for batch 4"), "unhelpful error: {err}");
+    // the measured sizes drive a real solve end to end
+    let inst = Scenario::tiansuan().instance_builder(profile).build().unwrap();
+    let engine = SolverRegistry::engine("ilpb").unwrap();
+    let outcome = engine.solve(&SolveRequest::new(inst.clone()));
+    assert!(outcome.decision.split <= inst.depth());
+    assert!(outcome.decision.z.is_finite());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn from_manifest_footprints_the_on_disk_stage_files() {
+    let dir = setup("footprint", &valid_json(), &STAGES);
+    let m = Manifest::load(&dir).unwrap();
+    let art = ModelArtifact::from_manifest(3, &m, 1).unwrap();
+    assert_eq!(art.id, 3);
+    assert_eq!(art.name, "tiny2");
+    // stage bytes come from fs metadata of the lowered executables
+    assert_eq!(art.total_bytes().value(), 10_000.0);
+    assert_eq!(art.bytes_up_to(0).value(), 0.0);
+    assert_eq!(art.bytes_up_to(1).value(), 7000.0);
+    assert_eq!(art.bytes_up_to(2).value(), 10_000.0);
+    let err = ModelArtifact::from_manifest(0, &m, 4).unwrap_err().to_string();
+    assert!(err.contains("no stages for batch 4"), "unhelpful error: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -5,6 +5,7 @@
 use leo_infer::config::{ContactSource, FleetScenario};
 use leo_infer::coordinator::router::RoutingPolicy;
 use leo_infer::dnn::profile::ModelProfile;
+use leo_infer::placement::{EvictionPolicy, ModelArtifact, PlacementConfig, PlacementPolicy};
 use leo_infer::sim::contact::PeriodicContact;
 use leo_infer::sim::fleet::{
     FleetResult, FleetSimConfig, FleetSimulator, SatelliteSpec, TelemetryMode,
@@ -64,6 +65,7 @@ fn n1_fleet_matches_the_legacy_simulator_bit_identically() {
         isl: None,
         isl_max_hops: 0,
         telemetry: TelemetryMode::Unconstrained,
+        placement: PlacementConfig::default(),
         horizon,
     };
     let fleet = FleetSimulator::new(fleet_cfg)
@@ -83,6 +85,67 @@ fn n1_fleet_matches_the_legacy_simulator_bit_identically() {
         legacy.state.energy_drawn.value(),
         fleet.states[0].energy_drawn.value()
     );
+}
+
+/// The placement acceptance criterion: an *active* placement layer —
+/// `Everywhere` seeding with a huge (finite) budget, so every store is
+/// exercised but every lookup hits — reproduces the passive default run
+/// bit-identically. Warm stores mean zero miss penalties, zero fetch
+/// events, and identical event ordering; only the hit counters may move.
+#[test]
+fn everywhere_with_room_for_everything_is_bit_identical() {
+    let trace = mixed_trace(13);
+    let horizon = Seconds::from_hours(100_000.0);
+    let build = |placement: PlacementConfig| {
+        let contact =
+            PeriodicContact::new(Seconds::from_hours(8.0), Seconds::from_minutes(6.0));
+        let phased =
+            PeriodicContact::new(Seconds::from_hours(8.0), Seconds::from_minutes(6.0))
+                .with_phase(Seconds(14_400.0));
+        FleetSimConfig {
+            template: template(60.0),
+            profiles: vec![profile()],
+            sats: vec![
+                SatelliteSpec::new("sat-0", Box::new(contact)),
+                SatelliteSpec::new("sat-1", Box::new(phased)),
+            ],
+            routing: RoutingPolicy::LeastLoaded,
+            isl: None,
+            isl_max_hops: 0,
+            telemetry: TelemetryMode::Live,
+            placement,
+            horizon,
+        }
+    };
+    let passive = FleetSimulator::new(build(PlacementConfig::default()))
+        .run(&trace, &SolverRegistry::engine("ilpb").unwrap())
+        .unwrap();
+    let active_cfg = PlacementConfig {
+        policy: PlacementPolicy::Everywhere,
+        eviction: EvictionPolicy::Lru,
+        budget: Some(Bytes::from_gb(1.0e6)),
+        artifacts: vec![ModelArtifact::from_profile(0, &profile(), Bytes::from_mb(200.0))],
+    };
+    assert!(!active_cfg.is_passive(), "a finite budget must arm the machinery");
+    let active = FleetSimulator::new(build(active_cfg))
+        .run(&trace, &SolverRegistry::engine("ilpb").unwrap())
+        .unwrap();
+
+    assert!(!passive.metrics.records.is_empty());
+    assert_eq!(
+        passive.metrics.records, active.metrics.records,
+        "warm placement must be bit-identical to the passive default"
+    );
+    assert_eq!(passive.metrics.unfinished, active.metrics.unfinished);
+    assert_eq!(passive.metrics.rejected_admission, active.metrics.rejected_admission);
+    assert_eq!(passive.metrics.total_downlinked, active.metrics.total_downlinked);
+    // the passive run never consults a store; the active one always hits
+    assert_eq!(passive.metrics.artifact_hits, 0);
+    assert_eq!(passive.metrics.artifact_misses, 0);
+    assert!(active.metrics.artifact_hits > 0);
+    assert_eq!(active.metrics.artifact_misses, 0);
+    assert_eq!(active.metrics.evictions, 0);
+    assert_eq!(active.metrics.weight_bytes_in, Bytes::ZERO);
 }
 
 /// Fleet runs are deterministic: identical configuration and trace produce
