@@ -33,6 +33,7 @@ fn config(scen: &Scenario, profile: &ModelProfile) -> SimConfig {
             Seconds::from_hours(scen.t_cyc_hours),
             Seconds::from_minutes(scen.t_con_minutes),
         ),
+        timing: false,
         // generous: the horizon is enforced now, and the queued-traffic
         // section below must drain completely for the mean-latency
         // comparison against the closed form to stay meaningful

@@ -7,7 +7,14 @@
 //! costs O(events), not O(N · events) — the Arrival-time cluster refresh
 //! is the only O(N) term per event.
 //!
-//! Run: `cargo bench --bench fleet_scaling`
+//! The mega-constellation section drives a Walker 40/40 (1600 satellites,
+//! grid ISLs, relay-aware routing) through the hot path twice — route
+//! cache on and off — and reports event throughput and the cache hit
+//! rate. The two runs must agree on every request outcome (the cache is
+//! bit-identical by construction; asserted here too).
+//!
+//! Run: `cargo bench --bench fleet_scaling`  (add `-- --smoke` for the
+//! CI-sized grid: fewer rows, shorter horizons, single rep)
 //!
 //! Besides the console tables, the run drops `BENCH_fleet.json` in the
 //! working directory (machine-readable rows, same numbers as the tables)
@@ -24,19 +31,24 @@ use leo_infer::util::json::Json;
 use leo_infer::util::rng::Pcg64;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (warmup, reps) = if smoke { (0, 1) } else { (1, 3) };
     let mut scaling_rows: Vec<Json> = Vec::new();
     let mut isl_rows: Vec<Json> = Vec::new();
+    let mut mega_rows: Vec<Json> = Vec::new();
     banner("fleet DES scaling (periodic contacts, least-loaded routing, ILPB)");
     println!(
         "{:>5} {:>7} {:>10} {:>9} {:>11} {:>12} {:>12}",
         "sats", "reqs", "completed", "rejected", "unfinished", "wall", "req/s (sim)"
     );
-    for (t, p) in [(1usize, 1usize), (2, 1), (6, 3), (12, 3), (24, 6)] {
+    let full_grid: &[(usize, usize)] = &[(1, 1), (2, 1), (6, 3), (12, 3), (24, 6)];
+    let grid = if smoke { &full_grid[..3] } else { full_grid };
+    for &(t, p) in grid {
         let mut scen = FleetScenario::walker_631();
         scen.sats = t;
         scen.planes = p;
         scen.phasing = usize::from(p > 1);
-        scen.horizon_hours = 24.0;
+        scen.horizon_hours = if smoke { 6.0 } else { 24.0 };
         scen.interarrival_s = 3600.0 / t as f64; // constant per-sat load
         scen.data_gb_lo = 0.2;
         scen.data_gb_hi = 2.0;
@@ -44,7 +56,7 @@ fn main() {
         let trace = scen.workload().unwrap().generate(scen.horizon(), &mut rng);
         let profile = ModelProfile::sampled(10, &mut rng);
         let mut last = None;
-        let wall = time_median(1, 3, || {
+        let wall = time_median(warmup, reps, || {
             let engine = SolverRegistry::engine("ilpb").unwrap();
             let sim = FleetSimulator::new(scen.sim_config(profile.clone()).unwrap());
             last = Some(sim.run(&trace, &engine).expect("valid trace"));
@@ -88,7 +100,7 @@ fn main() {
         scen.sats = 12;
         scen.planes = 3;
         scen.phasing = 1;
-        scen.horizon_hours = 24.0;
+        scen.horizon_hours = if smoke { 6.0 } else { 24.0 };
         scen.interarrival_s = 300.0;
         scen.data_gb_lo = 0.2;
         scen.data_gb_hi = 2.0;
@@ -98,7 +110,7 @@ fn main() {
         let trace = scen.workload().unwrap().generate(scen.horizon(), &mut rng);
         let profile = ModelProfile::sampled(10, &mut rng);
         let mut last = None;
-        let wall = time_median(1, 3, || {
+        let wall = time_median(warmup, reps, || {
             let engine = SolverRegistry::engine("ilpb").unwrap();
             let sim = FleetSimulator::new(scen.sim_config(profile.clone()).unwrap());
             last = Some(sim.run(&trace, &engine).expect("valid trace"));
@@ -121,10 +133,92 @@ fn main() {
         ]));
     }
 
+    // Mega-constellation hot path: Walker 40/40 = 1600 satellites on a
+    // grid ISL mesh, relay-aware routing (every arrival scans the whole
+    // fleet's advertised relay routes). Captures come in synchronized
+    // sweeps — bursts of simultaneous requests, the imaging-constellation
+    // pattern — so between transmitter writes the route cache turns that
+    // scan from 1600 bounded Dijkstras per arrival into 1600 LRU probes.
+    banner("mega-constellation hot path (Walker 40/40, grid ISL, relay-aware, ILPB)");
+    println!(
+        "{:>6} {:>7} {:>10} {:>9} {:>12} {:>11} {:>9}",
+        "cache", "reqs", "completed", "events", "wall", "events/s", "hit rate"
+    );
+    let mut outcomes: Vec<(u64, u64, u64)> = Vec::new();
+    for cache_on in [true, false] {
+        let mut scen = FleetScenario::walker_631();
+        scen.name = "walker-40-40".to_string();
+        scen.sats = 1600;
+        scen.planes = 40;
+        scen.phasing = 1;
+        scen.horizon_hours = if smoke { 0.25 } else { 1.0 };
+        scen.isl = leo_infer::link::isl::IslMode::Grid;
+        scen.routing = "relay-aware".to_string();
+        scen.route_cache = cache_on;
+        // a capture sweep every minute: 20 simultaneous arrivals per burst
+        let mut trace = Vec::new();
+        let mut t = 0.0;
+        while t < scen.horizon().value() {
+            for _ in 0..20 {
+                trace.push(leo_infer::sim::workload::Request {
+                    id: trace.len() as u64,
+                    arrival: leo_infer::util::units::Seconds(t),
+                    data: leo_infer::util::units::Bytes::from_gb(0.5),
+                    model: 0,
+                    class: 0,
+                });
+            }
+            t += 60.0;
+        }
+        let mut rng = Pcg64::seeded(0xF1EE9);
+        let profile = ModelProfile::sampled(10, &mut rng);
+        let mut last = None;
+        let wall = time_median(0, 1, || {
+            let engine = SolverRegistry::engine("ilpb").unwrap();
+            let mut cfg = scen.sim_config(profile.clone()).unwrap();
+            cfg.timing = true;
+            let sim = FleetSimulator::new(cfg);
+            last = Some(sim.run(&trace, &engine).expect("valid trace"));
+        });
+        let result = last.expect("at least one timed run");
+        let m = &result.metrics;
+        let t = result.timing.expect("timing was requested");
+        outcomes.push((m.completed(), m.rejected(), m.unfinished));
+        println!(
+            "{:>6} {:>7} {:>10} {:>9} {:>12} {:>11.0} {:>8.1}%",
+            if cache_on { "on" } else { "off" },
+            trace.len(),
+            m.completed(),
+            t.events,
+            fmt_time(wall),
+            t.events_per_sec(),
+            m.route_cache_hit_rate() * 100.0
+        );
+        mega_rows.push(Json::obj(vec![
+            ("route_cache", Json::Bool(cache_on)),
+            ("sats", Json::num(1600.0)),
+            ("planes", Json::num(40.0)),
+            ("requests", Json::num(trace.len() as f64)),
+            ("completed", Json::num(m.completed() as f64)),
+            ("events", Json::num(t.events as f64)),
+            ("wall_s", Json::num(wall)),
+            ("events_per_sec", Json::num(t.events_per_sec())),
+            ("route_cache_hits", Json::num(m.route_cache_hits as f64)),
+            ("route_cache_misses", Json::num(m.route_cache_misses as f64)),
+            ("route_cache_hit_rate", Json::num(m.route_cache_hit_rate())),
+        ]));
+    }
+    assert_eq!(
+        outcomes[0], outcomes[1],
+        "route cache on/off must agree on every request outcome"
+    );
+
     let report = Json::obj(vec![
         ("bench", Json::str("fleet_scaling")),
+        ("smoke", Json::Bool(smoke)),
         ("scaling", Json::arr(scaling_rows)),
         ("isl_overhead", Json::arr(isl_rows)),
+        ("walker_40_40", Json::arr(mega_rows)),
     ]);
     match std::fs::write("BENCH_fleet.json", report.to_string_pretty()) {
         Ok(()) => println!("\nwrote BENCH_fleet.json"),
@@ -134,6 +228,7 @@ fn main() {
     println!(
         "\nOK: N=1 matches the single-satellite runner's cost; larger fleets \
          amortize routing and per-satellite telemetry across parallel FIFOs, \
-         and ISL relaying stays O(neighbors) per transmit decision."
+         ISL relaying stays O(neighbors) per transmit decision, and the \
+         route cache holds Walker 40/40 to LRU-probe cost per arrival."
     );
 }

@@ -315,6 +315,10 @@ pub struct FleetScenario {
     /// `1` = single-hop relay (the PR 3 behavior), larger values let
     /// boundary tensors chain toward the earliest usable ground contact.
     pub isl_max_hops: usize,
+    /// Memoize route searches between transmitter-state changes
+    /// ([`FleetSimConfig::route_cache`]). On by default; `false` is the
+    /// bit-identical escape hatch (CLI: `--route-cache off`).
+    pub route_cache: bool,
     /// Routing policy name: `round-robin | least-loaded | contact-aware |
     /// energy-aware | relay-aware` (see [`FleetScenario::routing_policy`]).
     pub routing: String,
@@ -378,6 +382,7 @@ impl FleetScenario {
             isl: IslMode::Off,
             isl_rate_mbps: 200.0,
             isl_max_hops: 4,
+            route_cache: true,
             routing: "least-loaded".to_string(),
             min_soc: 0.2,
             battery_capacity_j: 0.0,
@@ -555,6 +560,10 @@ impl FleetScenario {
             isl_max_hops: self.isl_max_hops,
             telemetry: TelemetryMode::Live,
             placement,
+            route_cache: self.route_cache,
+            // callers opt into timing per run (CLI `--timing`), it is not
+            // a scenario property
+            timing: false,
             horizon: self.horizon(),
         })
     }
@@ -579,6 +588,7 @@ impl FleetScenario {
             ("isl", Json::str(self.isl.as_str())),
             ("isl_rate_mbps", Json::num(self.isl_rate_mbps)),
             ("isl_max_hops", Json::num(self.isl_max_hops as f64)),
+            ("route_cache", Json::Bool(self.route_cache)),
             ("routing", Json::str(self.routing.clone())),
             ("min_soc", Json::num(self.min_soc)),
             ("battery_capacity_j", Json::num(self.battery_capacity_j)),
@@ -624,6 +634,7 @@ impl FleetScenario {
             isl: IslMode::from_name(v.str_or("isl", d.isl.as_str())?)?,
             isl_rate_mbps: v.f64_or("isl_rate_mbps", d.isl_rate_mbps)?,
             isl_max_hops: v.usize_or("isl_max_hops", d.isl_max_hops)?,
+            route_cache: v.bool_or("route_cache", d.route_cache)?,
             routing: v.str_or("routing", &d.routing)?.to_string(),
             min_soc: v.f64_or("min_soc", d.min_soc)?,
             battery_capacity_j: v.f64_or("battery_capacity_j", d.battery_capacity_j)?,
@@ -734,6 +745,7 @@ mod tests {
         f.isl = IslMode::Grid;
         f.isl_rate_mbps = 350.0;
         f.isl_max_hops = 2;
+        f.route_cache = false;
         f.storage_budget_mb = 256.0;
         f.placement = "demand".to_string();
         f.eviction = "lfu".to_string();

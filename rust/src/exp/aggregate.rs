@@ -15,7 +15,7 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 /// Exported per-cell columns, after the axis columns.
-const METRIC_COLUMNS: [&str; 23] = [
+const METRIC_COLUMNS: [&str; 25] = [
     "submitted",
     "completed",
     "rejected_admission",
@@ -39,6 +39,8 @@ const METRIC_COLUMNS: [&str; 23] = [
     "artifact_misses",
     "evictions",
     "weight_gb_in",
+    "route_cache_hits",
+    "route_cache_misses",
 ];
 
 fn metric_values(c: &CellResult) -> Vec<String> {
@@ -66,6 +68,8 @@ fn metric_values(c: &CellResult) -> Vec<String> {
         c.artifact_misses.to_string(),
         c.evictions.to_string(),
         format_f64(c.weight_gb_in),
+        c.route_cache_hits.to_string(),
+        c.route_cache_misses.to_string(),
     ]
 }
 
@@ -119,7 +123,7 @@ pub fn to_json(result: &SweepResult) -> Json {
         for axis in AXIS_NAMES {
             pairs.push((axis, Json::str(c.cell.axis_value(axis).expect("built-in axis"))));
         }
-        let nums: [(&str, f64); 23] = [
+        let nums: [(&str, f64); 25] = [
             ("submitted", c.submitted as f64),
             ("completed", c.completed as f64),
             ("rejected_admission", c.rejected_admission as f64),
@@ -143,6 +147,8 @@ pub fn to_json(result: &SweepResult) -> Json {
             ("artifact_misses", c.artifact_misses as f64),
             ("evictions", c.evictions as f64),
             ("weight_gb_in", c.weight_gb_in),
+            ("route_cache_hits", c.route_cache_hits as f64),
+            ("route_cache_misses", c.route_cache_misses as f64),
         ];
         for (k, v) in nums {
             pairs.push((k, Json::num(v)));
@@ -288,8 +294,8 @@ mod tests {
         assert_eq!(lines.len(), 1 + result.cells.len());
         assert!(lines[0].starts_with("index,seed,solver,"));
         assert!(
-            lines[0].ends_with("artifact_hits,artifact_misses,evictions,weight_gb_in"),
-            "placement counters close every row"
+            lines[0].ends_with("evictions,weight_gb_in,route_cache_hits,route_cache_misses"),
+            "placement and route-cache counters close every row"
         );
         assert!(lines[0].contains(",storage_mb,placement,rep,"));
         let cols = lines[0].split(',').count();

@@ -45,6 +45,11 @@ pub struct CellResult {
     /// Mid-flight route replans that changed a tensor's remaining path
     /// ([`crate::sim::SimMetrics::route_recomputes`]).
     pub route_recomputes: u64,
+    /// Route searches answered from the route-plan cache
+    /// ([`crate::sim::SimMetrics::route_cache_hits`]).
+    pub route_cache_hits: u64,
+    /// Route searches that ran in full and were then cached.
+    pub route_cache_misses: u64,
     /// Mergeable latency summary over this cell's completed requests —
     /// the single source for the cell's latency mean and percentiles
     /// (see the accessor methods).
@@ -132,6 +137,8 @@ pub fn run_cell(cell: &Cell) -> anyhow::Result<CellResult> {
         unfinished: m.unfinished,
         relays: m.relays,
         route_recomputes: m.route_recomputes,
+        route_cache_hits: m.route_cache_hits,
+        route_cache_misses: m.route_cache_misses,
         latency: m.latency_summary().clone(),
         mean_energy_j: m.mean_energy().value(),
         total_energy_j: m.total_energy().value(),

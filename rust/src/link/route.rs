@@ -46,6 +46,13 @@
 //!   [`crate::solver::engine::Telemetry`] and the relay-aware router.
 //!   With `max_hops = 1` it reproduces PR 3's single-neighbor
 //!   advertisement exactly.
+//!
+//! Both have `*_with` variants ([`plan_with`], [`advertise_with`])
+//! taking a caller-owned [`RouteScratch`] so hot callers (the fleet DES
+//! runs one search per transmit decision and per relay-aware telemetry
+//! refresh) reuse the per-satellite frontier buffers instead of
+//! allocating them per call. Results are identical by construction — the
+//! wrappers simply pass a throwaway scratch.
 
 use super::isl::{IslLink, IslTopology};
 use crate::util::units::{BitsPerSec, Bytes, Seconds};
@@ -128,6 +135,51 @@ fn pareto_dominated(frontier: &[(f64, f64)], a: f64, b: f64) -> bool {
     frontier.iter().any(|&(fa, fb)| fa <= a && fb <= b)
 }
 
+/// Reusable per-satellite Pareto frontiers for [`plan_with`] and
+/// [`advertise_with`].
+///
+/// The searches keep one `(key₁, key₂)` frontier per satellite; at fleet
+/// scale, allocating (and dropping) a `Vec<Vec<…>>` per call dominated
+/// the planner's cost. A `RouteScratch` owns those vectors across calls
+/// and invalidates them *lazily* with an epoch stamp — beginning a new
+/// search is O(1), and a frontier is cleared only when the new search
+/// actually touches its satellite. One scratch serves both entry points
+/// (never concurrently); the convenience wrappers [`plan`] and
+/// [`advertise`] allocate a throwaway one per call.
+#[derive(Debug, Default)]
+pub struct RouteScratch {
+    seen: Vec<Vec<(f64, f64)>>,
+    stamp: Vec<u64>,
+    epoch: u64,
+}
+
+impl RouteScratch {
+    /// An empty scratch; frontiers grow to the topology size on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start a new search over `n` satellites: bump the epoch (lazily
+    /// invalidating every frontier) and make sure `n` slots exist.
+    fn begin(&mut self, n: usize) {
+        if self.seen.len() < n {
+            self.seen.resize_with(n, Vec::new);
+            self.stamp.resize(n, 0);
+        }
+        self.epoch += 1;
+    }
+
+    /// Satellite `i`'s frontier for the current search, cleared on first
+    /// touch this epoch.
+    fn frontier(&mut self, i: usize) -> &mut Vec<(f64, f64)> {
+        if self.stamp[i] != self.epoch {
+            self.stamp[i] = self.epoch;
+            self.seen[i].clear();
+        }
+        &mut self.seen[i]
+    }
+}
+
 /// Choose the earliest-arrival downlink path for a tensor of `bytes`
 /// leaving satellite `src` at `now`, traversing at most `max_hops` ISLs.
 ///
@@ -158,6 +210,22 @@ pub fn plan(
     now: f64,
     max_hops: usize,
 ) -> RoutePlan {
+    plan_with(topology, oracle, src, bytes, now, max_hops, &mut RouteScratch::new())
+}
+
+/// [`plan`] with caller-owned scratch buffers: identical results, no
+/// per-call frontier allocation. The fleet DES calls this once per
+/// `SatDone`/replan, reusing one [`RouteScratch`] across the whole run.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_with(
+    topology: &IslTopology,
+    oracle: &dyn DownlinkOracle,
+    src: usize,
+    bytes: Bytes,
+    now: f64,
+    max_hops: usize,
+    scratch: &mut RouteScratch,
+) -> RoutePlan {
     let own = plan_own(oracle, src, now);
     if max_hops == 0 {
         return own;
@@ -172,7 +240,7 @@ pub fn plan(
     }
     let mut best: Option<RoutePlan> = None;
     // per-satellite Pareto frontier over (arrival, cost) labels
-    let mut seen: Vec<Vec<(f64, f64)>> = vec![Vec::new(); topology.len()];
+    scratch.begin(topology.len());
     let mut frontier = vec![Label {
         at: src,
         arrival: now,
@@ -220,8 +288,9 @@ pub fn plan(
                 // extension candidate: keep traveling (Pareto-pruned; the
                 // level-by-level sweep in ascending neighbor order makes
                 // first-come labels the lexicographically smallest paths)
-                if !pareto_dominated(&seen[link.to], arrival, cost) {
-                    seen[link.to].push((arrival, cost));
+                let fr = scratch.frontier(link.to);
+                if !pareto_dominated(fr, arrival, cost) {
+                    fr.push((arrival, cost));
                     let mut hops = lab.hops.clone();
                     hops.push(*link);
                     next.push(Label {
@@ -271,6 +340,19 @@ pub fn advertise(
     now: f64,
     max_hops: usize,
 ) -> Option<(BitsPerSec, Seconds)> {
+    advertise_with(topology, oracle, src, now, max_hops, &mut RouteScratch::new())
+}
+
+/// [`advertise`] with caller-owned scratch buffers: identical results,
+/// no per-call frontier allocation (see [`RouteScratch`]).
+pub fn advertise_with(
+    topology: &IslTopology,
+    oracle: &dyn DownlinkOracle,
+    src: usize,
+    now: f64,
+    max_hops: usize,
+    scratch: &mut RouteScratch,
+) -> Option<(BitsPerSec, Seconds)> {
     if max_hops == 0 {
         return None;
     }
@@ -282,7 +364,7 @@ pub fn advertise(
         path: Vec<usize>,
     }
     let mut best: Option<(f64, f64)> = None; // (budget, rate_eff)
-    let mut seen: Vec<Vec<(f64, f64)>> = vec![Vec::new(); topology.len()];
+    scratch.begin(topology.len());
     let mut frontier = vec![Label {
         at: src,
         prop: 0.0,
@@ -323,8 +405,9 @@ pub fn advertise(
                         }
                     }
                 }
-                if !pareto_dominated(&seen[link.to], prop, inv_rate) {
-                    seen[link.to].push((prop, inv_rate));
+                let fr = scratch.frontier(link.to);
+                if !pareto_dominated(fr, prop, inv_rate) {
+                    fr.push((prop, inv_rate));
                     let mut path = lab.path.clone();
                     path.push(link.to);
                     next.push(Label {
@@ -565,6 +648,26 @@ mod tests {
         // two serializations: the effective rate is the harmonic half
         assert!((r1.value() - link.rate.value()).abs() < 1.0);
         assert!((r2.value() - link.rate.value() / 2.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn reused_scratch_matches_fresh_allocations() {
+        // one scratch across many searches (different sources, bounds,
+        // and entry points) must reproduce the allocate-per-call results
+        let t = ring4();
+        let o = fixture(4, &[30_000.0, 28_000.0, 1000.0, 28_000.0]);
+        let bytes = Bytes::from_mb(10.0);
+        let mut scratch = RouteScratch::new();
+        for src in 0..4 {
+            for hops in 0..4 {
+                let fresh = plan(&t, &o, src, bytes, 0.0, hops);
+                let reused = plan_with(&t, &o, src, bytes, 0.0, hops, &mut scratch);
+                assert_eq!(fresh, reused, "plan src={src} hops={hops}");
+                let fresh_adv = advertise(&t, &o, src, 0.0, hops);
+                let reused_adv = advertise_with(&t, &o, src, 0.0, hops, &mut scratch);
+                assert_eq!(fresh_adv, reused_adv, "advertise src={src} hops={hops}");
+            }
+        }
     }
 
     #[test]

@@ -192,6 +192,12 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
             "everywhere|static|demand — model-weight placement policy (fleet only)",
             Some("everywhere"),
         )
+        .opt(
+            "route-cache",
+            "on|off — route-plan memoization, bit-identical either way (empty = scenario preset)",
+            Some(""),
+        )
+        .flag("timing", "print an end-of-run hot-path breakdown (events/s, solve vs route)")
         .parse_from(argv)?;
     let fleet_config = args.get_str("fleet-config").unwrap_or("").to_string();
     let fleet_spec = args.get_str("fleet").unwrap_or("").to_string();
@@ -216,6 +222,7 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
             Seconds::from_hours(scenario.t_cyc_hours),
             Seconds::from_minutes(scenario.t_con_minutes),
         ),
+        timing: args.flag_set("timing"),
         horizon,
     };
     let result = Simulator::new(config).run(&trace, &engine)?;
@@ -225,6 +232,9 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
         result.state.energy_drawn.value()
     );
     print_engine_stats(&engine);
+    if let Some(t) = &result.timing {
+        print_timing(t, &result.metrics);
+    }
     Ok(())
 }
 
@@ -259,6 +269,38 @@ fn print_engine_stats(engine: &leo_infer::solver::SolverEngine) {
         stats.cache_hits,
         stats.hit_rate() * 100.0,
         stats.solve_time_s * 1e3
+    );
+}
+
+/// The route-cache counter line (printed only when the cache saw traffic —
+/// a disabled or bent-pipe run has nothing to report).
+fn print_route_cache_stats(m: &leo_infer::sim::SimMetrics) {
+    if m.route_cache_hits + m.route_cache_misses > 0 {
+        println!(
+            "route cache : {} hits, {} misses ({:.1}% hit rate)",
+            m.route_cache_hits,
+            m.route_cache_misses,
+            m.route_cache_hit_rate() * 100.0
+        );
+    }
+}
+
+/// The `--timing` end-of-run breakdown: event throughput plus where the
+/// wall clock went (solve / route / everything else).
+fn print_timing(t: &leo_infer::sim::RunTiming, m: &leo_infer::sim::SimMetrics) {
+    println!(
+        "timing      : {} events in {:.3} s wall ({:.0} events/s)",
+        t.events,
+        t.wall_s,
+        t.events_per_sec()
+    );
+    println!(
+        "              solve {:.1} ms, route {:.1} ms, dispatch {:.1} ms \
+         (route-cache hit rate {:.1}%)",
+        t.solve_s * 1e3,
+        t.route_s * 1e3,
+        t.dispatch_s * 1e3,
+        m.route_cache_hit_rate() * 100.0
     );
 }
 
@@ -308,7 +350,15 @@ fn simulate_fleet(args: &Args, fleet_config: &str, fleet_spec: &str) -> anyhow::
     let trace = fleet.workload()?.generate(fleet.horizon(), &mut rng);
     let profile = ModelProfile::sampled(args.get_usize("depth")?, &mut rng);
     let engine = SolverRegistry::engine(args.get_str("policy").unwrap())?;
-    let sim = FleetSimulator::new(fleet.sim_config(profile)?);
+    let mut cfg = fleet.sim_config(profile)?;
+    match args.get_str("route-cache").unwrap_or("") {
+        "" => {}
+        "on" => cfg.route_cache = true,
+        "off" => cfg.route_cache = false,
+        other => anyhow::bail!("--route-cache expects on|off, got `{other}`"),
+    }
+    cfg.timing = args.flag_set("timing");
+    let sim = FleetSimulator::new(cfg);
     let result = sim.run(&trace, &engine)?;
     let m = &result.metrics;
     println!(
@@ -391,6 +441,10 @@ fn simulate_fleet(args: &Args, fleet_config: &str, fleet_spec: &str) -> anyhow::
         );
     }
     print_engine_stats(&engine);
+    print_route_cache_stats(m);
+    if let Some(t) = &result.timing {
+        print_timing(t, m);
+    }
     Ok(())
 }
 

@@ -58,6 +58,33 @@
 //! The event loop enforces [`FleetSimConfig::horizon`]: events scheduled
 //! past it are dropped and their requests counted as
 //! [`SimMetrics::unfinished`].
+//!
+//! # The mega-constellation hot path
+//!
+//! At Walker-constellation scale (hundreds to thousands of satellites,
+//! millions of events) three costs dominate and each has a dedicated
+//! countermeasure, all bit-identical to the naive path:
+//!
+//! * **Event ordering** — the queue is a bucket-indexed calendar
+//!   ([`super::engine::EventQueue`]) whose pop order provably matches the
+//!   binary heap it replaced.
+//! * **Route search** — [`route::plan`] / [`route::advertise`] results are
+//!   memoized in an LRU keyed by the *exact bits* of `(source, hop bound,
+//!   time, tensor size)` plus a transmitter **generation counter** bumped
+//!   on every `tx_free_at` write, so a cached plan can never survive a
+//!   transmitter-state change (the mid-flight replan around a dying
+//!   transmitter still fires). [`FleetSimConfig::route_cache`] is the
+//!   escape hatch; hit/miss counts land in
+//!   [`SimMetrics::route_cache_hits`] / [`SimMetrics::route_cache_misses`].
+//! * **State layout** — the run loop keeps the per-satellite FIFO clocks
+//!   in flat struct-of-arrays vectors (written back into
+//!   [`SatelliteState`] at the end) and reuses one
+//!   [`route::RouteScratch`] across every search instead of allocating
+//!   fresh Dijkstra frontiers per call.
+//!
+//! Set [`FleetSimConfig::timing`] (CLI: `--timing`) to collect a
+//! [`RunTiming`] wall-clock breakdown of where a run actually spends its
+//! time.
 
 use super::contact::ContactModel;
 use super::engine::EventQueue;
@@ -74,7 +101,11 @@ use crate::link::route::{self, DownlinkOracle};
 use crate::placement::{ArtifactStore, PlacementConfig};
 use crate::solver::engine::{SolverEngine, Telemetry};
 use crate::solver::instance::{Instance, InstanceBuilder};
+use crate::util::lru::LruCache;
 use crate::util::units::{BitsPerSec, Bytes, Joules, Seconds, Watts};
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+use std::time::Instant;
 
 /// One satellite of the fleet: its contact window source and (optionally)
 /// its energy subsystem.
@@ -145,6 +176,17 @@ pub struct FleetSimConfig {
     /// every placement code path and is bit-identical to the
     /// pre-placement simulator.
     pub placement: PlacementConfig,
+    /// Memoize [`route::plan`] / [`route::advertise`] results between
+    /// transmitter-state changes (see the module docs). `false` is the
+    /// escape hatch: every search runs fresh, results stay bit-identical,
+    /// and the cache counters read zero. Ignored (no effect) without an
+    /// ISL topology.
+    pub route_cache: bool,
+    /// Collect a [`RunTiming`] wall-clock breakdown during the run
+    /// (returned in [`FleetResult::timing`]). Off by default: the
+    /// instrumentation costs two monotonic-clock reads per solve and per
+    /// route search.
+    pub timing: bool,
     /// Simulation horizon: events past it are dropped and counted as
     /// unfinished.
     pub horizon: Seconds,
@@ -158,6 +200,43 @@ pub struct FleetResult {
     pub states: Vec<SatelliteState>,
     /// The horizon the run enforced.
     pub horizon: Seconds,
+    /// Wall-clock breakdown, present iff [`FleetSimConfig::timing`] was
+    /// set.
+    pub timing: Option<RunTiming>,
+}
+
+/// Wall-clock profile of one fleet run (collected when
+/// [`FleetSimConfig::timing`] is set; `leo-infer simulate --timing` on
+/// the CLI).
+///
+/// The buckets are disjoint: `solve_s` and `route_s` are measured around
+/// the solver and route-search calls, and `dispatch_s` is the remainder
+/// of `wall_s` — event-queue operations, FIFO bookkeeping, energy
+/// accounting, and metrics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RunTiming {
+    /// Events popped from the queue (including a final over-horizon pop).
+    pub events: u64,
+    /// Total wall-clock seconds inside [`FleetSimulator::run`].
+    pub wall_s: f64,
+    /// Wall-clock seconds inside solver calls.
+    pub solve_s: f64,
+    /// Wall-clock seconds inside route planning / advertisement
+    /// (route-cache lookups included).
+    pub route_s: f64,
+    /// `wall_s − solve_s − route_s`, clamped at zero.
+    pub dispatch_s: f64,
+}
+
+impl RunTiming {
+    /// Events processed per wall-clock second (zero on a zero-length run).
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.events as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -223,19 +302,109 @@ impl Flight {
 }
 
 /// [`DownlinkOracle`] view over the fleet's live transmitter state — what
-/// [`route::plan`] and [`route::advertise`] consult.
+/// [`route::plan`] and [`route::advertise`] consult. Reads the run loop's
+/// flat transmitter-clock array ([`HotPath::tx_free`]), not the
+/// [`SatelliteState`] structs: the searches only ever touch this one
+/// field, and the dense `f64` slice keeps the sweep cache-friendly.
 struct FleetOracle<'a> {
     sats: &'a [SatelliteSpec],
-    states: &'a [SatelliteState],
+    tx_free: &'a [f64],
 }
 
 impl DownlinkOracle for FleetOracle<'_> {
     fn tx_free_at(&self, sat: usize) -> f64 {
-        self.states[sat].tx_free_at
+        self.tx_free[sat]
     }
 
     fn next_contact_wait(&self, sat: usize, t: f64) -> Option<f64> {
         self.sats[sat].contact.time_to_next_contact(t)
+    }
+}
+
+/// Route-cache capacity (entries per cache, plan and advertise each).
+/// Sized to hold one advertisement per satellite for a Walker 40/40
+/// fleet (1600 keys) plus headroom for concurrent plans, while the
+/// slab's exact-LRU eviction bounds memory on bigger fleets.
+const ROUTE_CACHE_CAPACITY: usize = 4096;
+
+/// Cache key for a route search: the *exact bits* of every input the
+/// search reads, so a hit returns exactly what the search would have
+/// computed. `tag` separates the plan (1) and advertise (0) key spaces;
+/// `route_gen` is the transmitter generation — any `tx_free` write bumps
+/// it, instantly orphaning every older key. No quantization: unlike the
+/// solver's decision cache, nearby-but-different inputs must miss or the
+/// cache-on/off escape hatch would not be bit-identical.
+fn route_key(
+    tag: u8,
+    src: usize,
+    max_hops: usize,
+    now: f64,
+    route_gen: u64,
+    bytes_bits: u64,
+) -> u64 {
+    let mut h = DefaultHasher::new();
+    tag.hash(&mut h);
+    src.hash(&mut h);
+    max_hops.hash(&mut h);
+    now.to_bits().hash(&mut h);
+    route_gen.hash(&mut h);
+    bytes_bits.hash(&mut h);
+    h.finish()
+}
+
+/// The run loop's struct-of-arrays hot state: flat per-satellite FIFO
+/// clocks (mirrored back into [`SatelliteState`] when the run ends), the
+/// route-plan caches with their generation counter, and the reusable
+/// search scratch. Lives only inside [`FleetSimulator::run`].
+struct HotPath {
+    /// When each satellite's processing FIFO frees up
+    /// (struct-of-arrays mirror of [`SatelliteState::proc_free_at`]).
+    proc_free: Vec<f64>,
+    /// When each ground-facing transmitter frees up — the routing
+    /// oracle's only mutable input.
+    tx_free: Vec<f64>,
+    /// Transmitter generation: bumped by every [`HotPath::touch_tx`] so
+    /// stale cached routes can never hit.
+    route_gen: u64,
+    /// Memoized [`route::plan`] results.
+    plan_cache: LruCache<route::RoutePlan>,
+    /// Memoized [`route::advertise`] results.
+    adv_cache: LruCache<Option<(BitsPerSec, Seconds)>>,
+    /// Reused Dijkstra frontier buffers for every uncached search.
+    scratch: route::RouteScratch,
+    /// Route caching live (config switch ∧ an ISL topology exists).
+    enabled: bool,
+    hits: u64,
+    misses: u64,
+    /// Mirror of [`FleetSimConfig::timing`]: accumulate `route_s`.
+    timing: bool,
+    route_s: f64,
+}
+
+impl HotPath {
+    fn new(states: &[SatelliteState], enabled: bool, timing: bool) -> Self {
+        let cap = if enabled { ROUTE_CACHE_CAPACITY } else { 0 };
+        HotPath {
+            proc_free: states.iter().map(|s| s.proc_free_at).collect(),
+            tx_free: states.iter().map(|s| s.tx_free_at).collect(),
+            route_gen: 0,
+            plan_cache: LruCache::new(cap),
+            adv_cache: LruCache::new(cap),
+            scratch: route::RouteScratch::new(),
+            enabled,
+            hits: 0,
+            misses: 0,
+            timing,
+            route_s: 0.0,
+        }
+    }
+
+    /// Write a transmitter clock and invalidate every cached route: the
+    /// generation is part of the cache key, so the bump orphans (rather
+    /// than scans) all existing entries.
+    fn touch_tx(&mut self, sat: usize, free_at: f64) {
+        self.tx_free[sat] = free_at;
+        self.route_gen += 1;
     }
 }
 
@@ -315,17 +484,14 @@ impl FleetSimulator {
     }
 
     /// Build the per-request ILP instance (template + this request's D and
-    /// model profile). Model ids are validated up front by
+    /// model profile) by reference — no per-request builder or profile
+    /// clone on the admission path. Model ids are validated up front by
     /// [`FleetSimulator::run`], so indexing is direct — no silent
     /// wrap-around onto the wrong profile.
     fn instance_for(&self, req: &Request) -> Instance {
-        let profile = self.config.profiles[req.model].clone();
         self.config
             .template
-            .clone()
-            .profile(profile)
-            .data(req.data)
-            .build()
+            .build_for(&self.config.profiles[req.model], req.data)
             .expect("template must be valid")
     }
 
@@ -334,14 +500,40 @@ impl FleetSimulator {
     /// `(effective rate, serialization budget)` of the multi-hop path to
     /// the satellite whose ground pass opens first. `None` when the fleet
     /// has no ISLs, the hop bound is 0, or no reachable satellite can
-    /// downlink.
-    fn relay_view(&self, sat: usize, now: f64) -> Option<(BitsPerSec, Seconds)> {
+    /// downlink. Memoized in [`HotPath::adv_cache`] when the route cache
+    /// is on — between transmitter writes, the whole fleet's
+    /// advertisements for one arrival burst are computed once.
+    fn relay_view(&self, hot: &mut HotPath, sat: usize, now: f64) -> Option<(BitsPerSec, Seconds)> {
         let isl = self.config.isl.as_ref()?;
-        let oracle = FleetOracle {
-            sats: &self.config.sats,
-            states: &self.states,
+        let t0 = hot.timing.then(Instant::now);
+        let hops = self.config.isl_max_hops;
+        let out = if hot.enabled {
+            let key = route_key(0, sat, hops, now, hot.route_gen, 0);
+            let cached = hot.adv_cache.get(key).copied();
+            if let Some(v) = cached {
+                hot.hits += 1;
+                v
+            } else {
+                hot.misses += 1;
+                let oracle = FleetOracle {
+                    sats: &self.config.sats,
+                    tx_free: &hot.tx_free,
+                };
+                let v = route::advertise_with(isl, &oracle, sat, now, hops, &mut hot.scratch);
+                hot.adv_cache.insert(key, v);
+                v
+            }
+        } else {
+            let oracle = FleetOracle {
+                sats: &self.config.sats,
+                tx_free: &hot.tx_free,
+            };
+            route::advertise_with(isl, &oracle, sat, now, hops, &mut hot.scratch)
         };
-        route::advertise(isl, &oracle, sat, now, self.config.isl_max_hops)
+        if let Some(t0) = t0 {
+            hot.route_s += t0.elapsed().as_secs_f64();
+        }
+        out
     }
 
     /// Choose the downlink path for a boundary tensor leaving `sat` at
@@ -353,24 +545,65 @@ impl FleetSimulator {
     /// transmitter's. ISL terminals are modeled capacity-rich
     /// (point-to-point lasers, no FIFO): concurrent handoffs on one link
     /// overlap — only the ground-facing transmitter queues. Returns the
-    /// bent-pipe plan for empty tensors: nothing to relay.
+    /// bent-pipe plan for empty tensors: nothing to relay. Full searches
+    /// are memoized in [`HotPath::plan_cache`] when the route cache is on
+    /// (the trivial bent-pipe fallback is never cached — or counted).
     fn pick_route(
         &self,
+        hot: &mut HotPath,
         sat: usize,
         now: f64,
         tx_bytes: Bytes,
         max_hops: usize,
     ) -> route::RoutePlan {
-        let oracle = FleetOracle {
-            sats: &self.config.sats,
-            states: &self.states,
-        };
-        match &self.config.isl {
+        let t0 = hot.timing.then(Instant::now);
+        let plan = match &self.config.isl {
             Some(isl) if tx_bytes.value() > 0.0 => {
-                route::plan(isl, &oracle, sat, tx_bytes, now, max_hops)
+                if hot.enabled {
+                    let bits = tx_bytes.value().to_bits();
+                    let key = route_key(1, sat, max_hops, now, hot.route_gen, bits);
+                    let cached = hot.plan_cache.get(key).cloned();
+                    if let Some(v) = cached {
+                        hot.hits += 1;
+                        v
+                    } else {
+                        hot.misses += 1;
+                        let oracle = FleetOracle {
+                            sats: &self.config.sats,
+                            tx_free: &hot.tx_free,
+                        };
+                        let v = route::plan_with(
+                            isl,
+                            &oracle,
+                            sat,
+                            tx_bytes,
+                            now,
+                            max_hops,
+                            &mut hot.scratch,
+                        );
+                        hot.plan_cache.insert(key, v.clone());
+                        v
+                    }
+                } else {
+                    let oracle = FleetOracle {
+                        sats: &self.config.sats,
+                        tx_free: &hot.tx_free,
+                    };
+                    route::plan_with(isl, &oracle, sat, tx_bytes, now, max_hops, &mut hot.scratch)
+                }
             }
-            _ => route::plan_own(&oracle, sat, now),
+            _ => {
+                let oracle = FleetOracle {
+                    sats: &self.config.sats,
+                    tx_free: &hot.tx_free,
+                };
+                route::plan_own(&oracle, sat, now)
+            }
+        };
+        if let Some(t0) = t0 {
+            hot.route_s += t0.elapsed().as_secs_f64();
         }
+        plan
     }
 
     /// Where satellite `sat` would pull `model`'s weights from right now,
@@ -420,7 +653,8 @@ impl FleetSimulator {
     /// request unfinished), and otherwise `TxDone` is scheduled.
     #[allow(clippy::too_many_arguments)]
     fn enqueue_downlink(
-        &mut self,
+        &self,
+        hot: &mut HotPath,
         sat: usize,
         i: usize,
         tx_bytes: Bytes,
@@ -430,19 +664,19 @@ impl FleetSimulator {
         metrics: &mut SimMetrics,
         flights: &mut [Option<Flight>],
     ) {
-        if !self.states[sat].tx_free_at.is_finite() {
+        if !hot.tx_free[sat].is_finite() {
             cluster.note_complete(sat, tx_bytes);
             metrics.note_unfinished(Some(sat));
             flights[i] = None;
             return;
         }
-        let start = now.max(self.states[sat].tx_free_at);
+        let start = now.max(hot.tx_free[sat]);
         match self.config.sats[sat]
             .contact
             .finish_transfer(start, tx_bytes, self.rate)
         {
             Some(finish) => {
-                self.states[sat].tx_free_at = finish;
+                hot.touch_tx(sat, finish);
                 q.schedule(finish, Event::TxDone(i));
             }
             None => {
@@ -450,8 +684,11 @@ impl FleetSimulator {
                 // the transmitter, release the router's queue slot, and
                 // account the loss — leaving the slot held would inflate
                 // this satellite's queue for the rest of the run (the
-                // phantom-backlog bug)
-                self.states[sat].tx_free_at = f64::INFINITY;
+                // phantom-backlog bug). The pin is a transmitter-state
+                // write like any other: touch_tx bumps the route
+                // generation so every cached plan through this satellite
+                // dies with it.
+                hot.touch_tx(sat, f64::INFINITY);
                 cluster.note_complete(sat, tx_bytes);
                 metrics.note_unfinished(Some(sat));
                 flights[i] = None;
@@ -460,7 +697,13 @@ impl FleetSimulator {
     }
 
     /// The live context the engine sees for a solve on satellite `sat`.
-    fn telemetry_for(&mut self, sat: usize, now: f64, queue_depth: usize) -> Telemetry {
+    fn telemetry_for(
+        &mut self,
+        hot: &mut HotPath,
+        sat: usize,
+        now: f64,
+        queue_depth: usize,
+    ) -> Telemetry {
         match self.config.telemetry {
             TelemetryMode::Unconstrained => Telemetry::unconstrained(),
             TelemetryMode::Live => {
@@ -476,7 +719,7 @@ impl FleetSimulator {
                     // models the wait for the next pass.
                     tel = tel.with_contact_remaining(remaining);
                 }
-                if let Some((rate, wait)) = self.relay_view(sat, now) {
+                if let Some((rate, wait)) = self.relay_view(hot, sat, now) {
                     // a live relay option relaxes the window rule: splits
                     // whose tensor crosses the ISL before the neighbor's
                     // pass stay feasible even as the own window closes
@@ -530,9 +773,22 @@ impl FleetSimulator {
             q.schedule(r.arrival.value(), Event::Arrival(i));
         }
 
+        // the struct-of-arrays hot state: FIFO clocks, route caches, and
+        // search scratch (see the module docs' hot-path section)
+        let timing_on = self.config.timing;
+        let run_start = Instant::now();
+        let mut events: u64 = 0;
+        let mut solve_s = 0.0f64;
+        let mut hot = HotPath::new(
+            &self.states,
+            self.config.route_cache && self.config.isl.is_some(),
+            timing_on,
+        );
+
         let horizon = self.config.horizon.value();
         while let Some(ev) = q.pop() {
             let now = ev.time;
+            events += 1;
             if now > horizon {
                 // the queue is time-ordered: everything left is late too
                 break;
@@ -564,7 +820,7 @@ impl FleetSimulator {
                     if matches!(self.config.routing, RoutingPolicy::RelayAware) {
                         for id in 0..n {
                             let (rate, wait) = self
-                                .relay_view(id, now)
+                                .relay_view(&mut hot, id, now)
                                 .unwrap_or((BitsPerSec::ZERO, Seconds(f64::INFINITY)));
                             let info = cluster.get_mut(id).expect("registered");
                             info.isl_rate = rate;
@@ -594,8 +850,15 @@ impl FleetSimulator {
                     };
                     let queue_depth = cluster.get(sat).expect("registered").queue_depth;
                     let inst = self.instance_for(req);
-                    let tel = self.telemetry_for(sat, now, queue_depth);
-                    let s = engine.solve_parts(&inst, &tel).decision.split;
+                    let tel = self.telemetry_for(&mut hot, sat, now, queue_depth);
+                    let s = if timing_on {
+                        let t0 = Instant::now();
+                        let s = engine.solve_parts(&inst, &tel).decision.split;
+                        solve_s += t0.elapsed().as_secs_f64();
+                        s
+                    } else {
+                        engine.solve_parts(&inst, &tel).decision.split
+                    };
                     let k = inst.depth();
 
                     // satellite-side work and energy for stages 0..s
@@ -658,9 +921,9 @@ impl FleetSimulator {
                         }
                         None => {
                             // FIFO processing payload
-                            let start = now.max(self.states[sat].proc_free_at);
+                            let start = now.max(hot.proc_free[sat]);
                             let done = start + proc_time.value();
-                            self.states[sat].proc_free_at = done;
+                            hot.proc_free[sat] = done;
                             q.schedule(done, Event::SatDone(i));
                         }
                     }
@@ -700,9 +963,9 @@ impl FleetSimulator {
                         }
                     }
                     // weights on board: join the processing FIFO
-                    let start = now.max(self.states[sat].proc_free_at);
+                    let start = now.max(hot.proc_free[sat]);
                     let done = start + proc_time.value();
-                    self.states[sat].proc_free_at = done;
+                    hot.proc_free[sat] = done;
                     q.schedule(done, Event::SatDone(i));
                 }
                 Event::SatDone(i) => {
@@ -726,7 +989,8 @@ impl FleetSimulator {
                     // whose final pass (after every hop's serialization +
                     // propagation and that transmitter's queue) opens
                     // before our own transmitter could deliver
-                    let plan = self.pick_route(sat, now, tx_bytes, self.config.isl_max_hops);
+                    let plan =
+                        self.pick_route(&mut hot, sat, now, tx_bytes, self.config.isl_max_hops);
                     if !plan.hops.is_empty() {
                         let first = plan.hops[0];
                         if let Some(f) = flights[i].as_mut() {
@@ -741,6 +1005,7 @@ impl FleetSimulator {
                     // no relay: this satellite's own FIFO transmitter (or
                     // its dead-transmitter short-circuit) carries it
                     self.enqueue_downlink(
+                        &mut hot,
                         sat,
                         i,
                         tx_bytes,
@@ -790,7 +1055,7 @@ impl FleetSimulator {
                         // remaining path under the leftover hop budget —
                         // queues and schedules moved while the tensor flew
                         let budget = self.config.isl_max_hops - (hop + 1);
-                        let replan = self.pick_route(here, now, tx_bytes, budget);
+                        let replan = self.pick_route(&mut hot, here, now, tx_bytes, budget);
                         let f = flights[i].as_mut().expect("flight in progress");
                         if replan.hops[..] != f.route[hop + 1..] {
                             metrics.route_recomputes += 1;
@@ -812,6 +1077,7 @@ impl FleetSimulator {
                     // final carrier: its transmitter FIFO takes the
                     // downlink (or its dead-transmitter short-circuit)
                     self.enqueue_downlink(
+                        &mut hot,
                         here,
                         i,
                         tx_bytes,
@@ -863,10 +1129,30 @@ impl FleetSimulator {
             metrics.note_unfinished(None);
         }
 
+        // fold the struct-of-arrays clocks back into the per-satellite
+        // state structs the result exposes
+        for (i, s) in self.states.iter_mut().enumerate() {
+            s.proc_free_at = hot.proc_free[i];
+            s.tx_free_at = hot.tx_free[i];
+        }
+        metrics.route_cache_hits = hot.hits;
+        metrics.route_cache_misses = hot.misses;
+        let timing = timing_on.then(|| {
+            let wall_s = run_start.elapsed().as_secs_f64();
+            RunTiming {
+                events,
+                wall_s,
+                solve_s,
+                route_s: hot.route_s,
+                dispatch_s: (wall_s - solve_s - hot.route_s).max(0.0),
+            }
+        });
+
         Ok(FleetResult {
             metrics,
             states: self.states,
             horizon: self.config.horizon,
+            timing,
         })
     }
 }
@@ -929,6 +1215,8 @@ mod tests {
             isl_max_hops: 1,
             telemetry: TelemetryMode::Live,
             placement: PlacementConfig::default(),
+            route_cache: true,
+            timing: false,
             horizon: Seconds::from_hours(10_000.0),
         }
     }
@@ -1086,6 +1374,8 @@ mod tests {
             // ARG's split away from the doomed transmitter
             telemetry: TelemetryMode::Unconstrained,
             placement: PlacementConfig::default(),
+            route_cache: true,
+            timing: false,
             horizon: Seconds::from_hours(10_000.0),
         };
         let trace = fixed_trace(4, Seconds(5000.0), Bytes::from_mb(50.0));
@@ -1116,6 +1406,8 @@ mod tests {
             isl_max_hops: 0,
             telemetry: TelemetryMode::Unconstrained,
             placement: PlacementConfig::default(),
+            route_cache: true,
+            timing: false,
             horizon: Seconds::from_hours(10_000.0),
         };
         let trace = fixed_trace(3, Seconds(100.0), Bytes::from_mb(50.0));
@@ -1175,6 +1467,8 @@ mod tests {
             isl_max_hops: 1,
             telemetry: TelemetryMode::Unconstrained,
             placement: PlacementConfig::default(),
+            route_cache: true,
+            timing: false,
             horizon: Seconds::from_hours(10_000.0),
         };
         let trace = vec![Request {
@@ -1269,6 +1563,8 @@ mod tests {
             isl_max_hops: max_hops,
             telemetry: TelemetryMode::Unconstrained,
             placement: PlacementConfig::default(),
+            route_cache: true,
+            timing: false,
             horizon: Seconds::from_hours(10_000.0),
         };
         let trace = vec![Request {
@@ -1370,18 +1666,11 @@ mod tests {
         IslTopology::build(&c, IslMode::Grid, BitsPerSec::from_mbps(50_000.0)).unwrap()
     }
 
-    #[test]
-    fn intermediate_replanning_reroutes_around_a_dying_transmitter() {
-        // Request A (at 1000 s) routes 0 → 1 → 2 toward sat 2's lone
-        // 3600 s window, but its 200 MB tensor outruns that window and
-        // pins sat 2's transmitter when A's downlink is enqueued
-        // (~1009.7 s). Request B (at 1007.5 s — after A's first hop
-        // departs sat 0 at ~1006.4 s, so least-loaded still ties to
-        // sat 0) plans the same path while sat 2 is still alive, but
-        // *arrives* at satellite 1 (~1014 s) after the pinning — its
-        // replan must drop the dead terminus and downlink from
-        // satellite 1 (whose 15 000 s pass strictly beats going back:
-        // satellite 0 passes at 16 000 s).
+    /// The dying-transmitter replan scenario (see
+    /// [`intermediate_replanning_reroutes_around_a_dying_transmitter`]):
+    /// two 200 MB captures on satellite 0 whose planned terminus (sat 2)
+    /// pins mid-flight, forcing request B's intermediate replan.
+    fn dying_transmitter_scenario() -> (FleetSimConfig, Vec<Request>) {
         let template = InstanceBuilder::new(profile())
             .rate(crate::util::units::BitsPerSec::from_mbps(100.0))
             .contact(Seconds::from_hours(8.0), Seconds::from_minutes(6.0));
@@ -1406,6 +1695,8 @@ mod tests {
             isl_max_hops: 4,
             telemetry: TelemetryMode::Unconstrained,
             placement: PlacementConfig::default(),
+            route_cache: true,
+            timing: false,
             horizon: Seconds::from_hours(10_000.0),
         };
         let mk = |id: u64, at: f64| Request {
@@ -1416,7 +1707,25 @@ mod tests {
             class: 0,
         };
         // least-loaded ties route both captures to satellite 0
-        let trace = vec![mk(0, 1000.0), mk(1, 1007.5)];
+        (cfg, vec![mk(0, 1000.0), mk(1, 1007.5)])
+    }
+
+    #[test]
+    fn intermediate_replanning_reroutes_around_a_dying_transmitter() {
+        // Request A (at 1000 s) routes 0 → 1 → 2 toward sat 2's lone
+        // 3600 s window, but its 200 MB tensor outruns that window and
+        // pins sat 2's transmitter when A's downlink is enqueued
+        // (~1009.7 s). Request B (at 1007.5 s — after A's first hop
+        // departs sat 0 at ~1006.4 s, so least-loaded still ties to
+        // sat 0) plans the same path while sat 2 is still alive, but
+        // *arrives* at satellite 1 (~1014 s) after the pinning — its
+        // replan must drop the dead terminus and downlink from
+        // satellite 1 (whose 15 000 s pass strictly beats going back:
+        // satellite 0 passes at 16 000 s). The pin lands between B's plan
+        // and B's replan, so a route cache that missed the generation
+        // bump would serve B the stale path — this test pins the
+        // invalidation too.
+        let (cfg, trace) = dying_transmitter_scenario();
         let result = FleetSimulator::new(cfg)
             .run(&trace, &SolverRegistry::engine("arg").unwrap())
             .unwrap();
@@ -1568,5 +1877,133 @@ mod tests {
         let gap = from_ground.metrics.records[0].latency.value()
             - over_isl.metrics.records[0].latency.value();
         assert!(gap > 5.0, "ISL fetch must beat the ground fetch, gap {gap} s");
+    }
+
+    // ------------------------------------------------------- route cache
+
+    /// Run `cfg` over `trace` with the route cache forced on or off.
+    fn run_cached(mut cfg: FleetSimConfig, trace: &[Request], on: bool) -> FleetResult {
+        cfg.route_cache = on;
+        FleetSimulator::new(cfg)
+            .run(trace, &SolverRegistry::engine("arg").unwrap())
+            .unwrap()
+    }
+
+    #[test]
+    fn route_cache_off_is_bit_identical() {
+        // the escape-hatch criterion: every regression scenario must
+        // produce byte-identical records with the cache on and off.
+        // Single-hop relay:
+        let (cfg, trace) = relay_scenario(Some(pair_topology()));
+        let on = run_cached(cfg, &trace, true);
+        let (cfg, _) = relay_scenario(Some(pair_topology()));
+        let off = run_cached(cfg, &trace, false);
+        assert_eq!(on.metrics.records, off.metrics.records);
+        // the disabled path bypasses the cache outright — uncached
+        // searches are not "misses"
+        assert_eq!(off.metrics.route_cache_hits, 0);
+        assert_eq!(off.metrics.route_cache_misses, 0);
+        assert!(on.metrics.route_cache_misses > 0, "the relay search ran");
+
+        // multi-hop ring:
+        let (cfg, trace) = ring_scenario(4);
+        let on = run_cached(cfg, &trace, true);
+        let (cfg, _) = ring_scenario(4);
+        let off = run_cached(cfg, &trace, false);
+        assert_eq!(on.metrics.records, off.metrics.records);
+
+        // mid-flight replanning around the dying transmitter — the
+        // transmitter pin lands between plan and replan, so this leg
+        // fails if the generation bump ever goes missing:
+        let (cfg, trace) = dying_transmitter_scenario();
+        let on = run_cached(cfg, &trace, true);
+        let (cfg, _) = dying_transmitter_scenario();
+        let off = run_cached(cfg, &trace, false);
+        assert_eq!(on.metrics.records, off.metrics.records);
+        assert_eq!(on.metrics.route_recomputes, 1);
+        assert_eq!(off.metrics.route_recomputes, 1);
+    }
+
+    #[test]
+    fn route_cache_off_is_bit_identical_with_placement() {
+        // placement-active leg: a cold satellite pulls weights over the
+        // ISL while the tensor routing runs cached
+        let scenario = || {
+            let mut cfg = config(2, RoutingPolicy::RoundRobin);
+            let profile_b =
+                ModelProfile::from_alphas("test-net-b", &[800.0, 400.0, 80.0, 8.0]).unwrap();
+            cfg.profiles = vec![profile(), profile_b];
+            cfg.isl = Some(pair_topology());
+            cfg.telemetry = TelemetryMode::Unconstrained;
+            cfg.placement = PlacementConfig {
+                policy: PlacementPolicy::Static,
+                eviction: EvictionPolicy::Lru,
+                budget: Some(Bytes::from_mb(120.0)),
+                artifacts: catalog(&cfg.profiles, 100.0),
+            };
+            cfg
+        };
+        let trace = vec![Request {
+            id: 0,
+            arrival: Seconds(1000.0),
+            data: Bytes::from_mb(10.0),
+            model: 1,
+            class: 0,
+        }];
+        let on = run_cached(scenario(), &trace, true);
+        let off = run_cached(scenario(), &trace, false);
+        assert_eq!(on.metrics.records, off.metrics.records);
+        assert_eq!(on.metrics.artifact_misses, off.metrics.artifact_misses);
+        assert_eq!(on.metrics.weight_bytes_in, off.metrics.weight_bytes_in);
+    }
+
+    #[test]
+    fn burst_workload_exceeds_ninety_percent_route_cache_hits() {
+        // the acceptance bar: a repeated workload must run ≥ 90% of its
+        // route searches from the cache. RelayAware advertises the whole
+        // fleet on every arrival, and a burst of simultaneous arrivals
+        // shares one (time, generation) key space — only the first
+        // arrival pays the searches. ARS keeps every split on board, so
+        // no transmitter write ever bumps the generation mid-burst.
+        let mut cfg = config(2, RoutingPolicy::RelayAware);
+        cfg.isl = Some(pair_topology());
+        cfg.telemetry = TelemetryMode::Unconstrained;
+        let trace = fixed_trace(20, Seconds(0.0), Bytes::from_mb(10.0));
+        let engine = SolverRegistry::engine("ars").unwrap();
+        let result = FleetSimulator::new(cfg).run(&trace, &engine).unwrap();
+        let m = &result.metrics;
+        assert!(m.route_cache_misses > 0, "the first arrival must search");
+        assert!(
+            m.route_cache_hit_rate() >= 0.9,
+            "hit rate {:.3} ({} hits / {} misses)",
+            m.route_cache_hit_rate(),
+            m.route_cache_hits,
+            m.route_cache_misses
+        );
+    }
+
+    // ------------------------------------------------------------ timing
+
+    #[test]
+    fn timing_breakdown_covers_the_run() {
+        let mut cfg = config(2, RoutingPolicy::RoundRobin);
+        cfg.timing = true;
+        let trace = fixed_trace(4, Seconds(10.0), Bytes::from_mb(20.0));
+        let engine = SolverRegistry::engine("ilpb").unwrap();
+        let result = FleetSimulator::new(cfg).run(&trace, &engine).unwrap();
+        let t = result.timing.expect("timing was requested");
+        assert!(t.events >= 8, "≥ one arrival + one completion each: {}", t.events);
+        assert!(t.wall_s > 0.0);
+        assert!(t.solve_s >= 0.0 && t.route_s >= 0.0);
+        // the buckets are disjoint subintervals of the run…
+        assert!(t.solve_s + t.route_s <= t.wall_s + 1e-9);
+        // …and dispatch is exactly the remainder
+        assert!((t.wall_s - t.solve_s - t.route_s - t.dispatch_s).abs() < 1e-9);
+        assert!(t.events_per_sec() > 0.0);
+        // an untimed run carries no breakdown
+        let result = FleetSimulator::new(config(1, RoutingPolicy::RoundRobin))
+            .run(&fixed_trace(1, Seconds(0.0), Bytes::from_mb(1.0)), &engine)
+            .unwrap();
+        assert!(result.timing.is_none());
     }
 }

@@ -164,6 +164,15 @@ pub struct SimMetrics {
     /// transmitter queues or contact schedules moved while the tensor was
     /// in flight and the contact-graph search found a better tail.
     pub route_recomputes: u64,
+    /// Contact-graph searches answered from the route-plan cache (both
+    /// [`crate::link::route::plan`]-shaped execution queries and
+    /// [`crate::link::route::advertise`]-shaped telemetry queries).
+    /// Always 0 when the cache is disabled.
+    pub route_cache_hits: u64,
+    /// Contact-graph searches that ran because no cached result matched
+    /// the exact query and transmitter-state generation. Always 0 when
+    /// the cache is disabled (uncached searches are not misses).
+    pub route_cache_misses: u64,
     /// Requests whose model was resident on arrival (fleet-wide).
     pub artifact_hits: u64,
     /// Requests whose model was cold on arrival (fleet-wide).
@@ -195,6 +204,8 @@ impl SimMetrics {
             relays: 0,
             relayed_bytes: Bytes::ZERO,
             route_recomputes: 0,
+            route_cache_hits: 0,
+            route_cache_misses: 0,
             artifact_hits: 0,
             artifact_misses: 0,
             evictions: 0,
@@ -302,6 +313,17 @@ impl SimMetrics {
     /// Total rejections across both phases.
     pub fn rejected(&self) -> u64 {
         self.rejected_admission + self.rejected_transmit
+    }
+
+    /// Fraction of cached contact-graph searches answered without running
+    /// the search, in `[0, 1]` (0 when the route cache saw no queries —
+    /// disabled, no ISLs, or a hop bound of zero).
+    pub fn route_cache_hit_rate(&self) -> f64 {
+        let total = self.route_cache_hits + self.route_cache_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.route_cache_hits as f64 / total as f64
     }
 
     /// Requests served to completion.

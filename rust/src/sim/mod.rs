@@ -8,7 +8,8 @@
 //! no contention, simulated latency/energy reproduce Eq. 5/8 exactly
 //! (`des_validation` bench, plus unit tests here).
 //!
-//! * [`engine`] — time-ordered event heap with deterministic tie-breaking.
+//! * [`engine`] — time-ordered event queue (bucket-indexed calendar) with
+//!   deterministic tie-breaking.
 //! * [`contact`] — the [`contact::ContactModel`] trait over periodic
 //!   (phase-aware Eq. 3, optional Bernoulli outages) and orbit-derived
 //!   contact windows.
@@ -34,6 +35,8 @@ pub mod workload;
 
 pub use contact::{ContactModel, PeriodicContact, ScheduleContact};
 pub use engine::{EventQueue, ScheduledEvent};
-pub use fleet::{FleetResult, FleetSimConfig, FleetSimulator, SatelliteSpec, TelemetryMode};
+pub use fleet::{
+    FleetResult, FleetSimConfig, FleetSimulator, RunTiming, SatelliteSpec, TelemetryMode,
+};
 pub use metrics::{RequestRecord, SatMetrics, SimMetrics};
 pub use runner::{SimConfig, SimResult, Simulator};

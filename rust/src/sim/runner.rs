@@ -20,7 +20,7 @@
 
 use super::contact::PeriodicContact;
 use super::entities::SatelliteState;
-use super::fleet::{FleetSimConfig, FleetSimulator, SatelliteSpec, TelemetryMode};
+use super::fleet::{FleetSimConfig, FleetSimulator, RunTiming, SatelliteSpec, TelemetryMode};
 use super::metrics::SimMetrics;
 use super::workload::Request;
 use crate::coordinator::router::RoutingPolicy;
@@ -37,6 +37,9 @@ pub struct SimConfig {
     pub profiles: Vec<ModelProfile>,
     /// Contact pattern for the transmitter.
     pub contact: PeriodicContact,
+    /// Measure the run's hot-path timing breakdown (see
+    /// [`RunTiming`]; adds two `Instant` reads per event).
+    pub timing: bool,
     /// Simulation horizon: events past it are dropped and counted as
     /// [`SimMetrics::unfinished`].
     pub horizon: Seconds,
@@ -50,6 +53,8 @@ pub struct SimResult {
     pub state: SatelliteState,
     /// The horizon the run enforced.
     pub horizon: Seconds,
+    /// Hot-path timing breakdown (`Some` iff [`SimConfig::timing`]).
+    pub timing: Option<RunTiming>,
 }
 
 /// The single-satellite simulator (an N = 1 fleet under the hood).
@@ -89,6 +94,7 @@ impl Simulator {
             template,
             profiles,
             contact,
+            timing,
             horizon,
         } = config;
         let fleet = FleetSimConfig {
@@ -100,6 +106,8 @@ impl Simulator {
             isl_max_hops: 0,
             telemetry: TelemetryMode::Unconstrained,
             placement: crate::placement::PlacementConfig::default(),
+            route_cache: true,
+            timing,
             horizon,
         };
         let mut sim = FleetSimulator::new(fleet);
@@ -109,6 +117,7 @@ impl Simulator {
             metrics: result.metrics,
             state: result.states.remove(0),
             horizon: result.horizon,
+            timing: result.timing,
         })
     }
 }
@@ -144,6 +153,7 @@ mod tests {
                 Seconds::from_hours(8.0),
                 Seconds::from_minutes(6.0),
             ),
+            timing: false,
             horizon: Seconds::from_hours(48.0),
         }
     }

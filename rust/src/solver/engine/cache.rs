@@ -16,17 +16,18 @@
 //! alias.
 //!
 //! Eviction is true least-recently-used via an index-linked list over a
-//! slab — O(1) get/insert, no allocation churn after warm-up.
+//! slab — O(1) get/insert, no allocation churn after warm-up. The slab
+//! LRU and the [`quantize`] key helper live in [`crate::util::lru`]
+//! (shared with the fleet DES's route-plan cache) and are re-exported
+//! here so existing `solver::engine::cache` imports keep working.
 
 use crate::solver::instance::{Decision, Instance};
 use std::collections::hash_map::DefaultHasher;
-use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 
 use super::telemetry::Telemetry;
 
-/// Sentinel for "no neighbor" in the intrusive list.
-const NIL: usize = usize::MAX;
+pub use crate::util::lru::{quantize, LruCache};
 
 /// What the engine memoizes per fingerprint: the decision plus whether
 /// the producing solve was repaired by telemetry tightening (so cache
@@ -41,156 +42,6 @@ pub struct CachedDecision {
 
 /// The engine's decision cache.
 pub type DecisionCache = LruCache<CachedDecision>;
-
-struct Node<V> {
-    key: u64,
-    value: V,
-    prev: usize,
-    next: usize,
-}
-
-/// Fixed-capacity LRU map from 64-bit fingerprints to values.
-pub struct LruCache<V> {
-    capacity: usize,
-    map: HashMap<u64, usize>,
-    nodes: Vec<Node<V>>,
-    /// Most recently used.
-    head: usize,
-    /// Least recently used (evicted first).
-    tail: usize,
-}
-
-impl<V> LruCache<V> {
-    /// `capacity = 0` disables caching entirely (every lookup misses).
-    pub fn new(capacity: usize) -> Self {
-        LruCache {
-            capacity,
-            map: HashMap::with_capacity(capacity.min(4096)),
-            nodes: Vec::with_capacity(capacity.min(4096)),
-            head: NIL,
-            tail: NIL,
-        }
-    }
-
-    /// Maximum entries before LRU eviction.
-    pub fn capacity(&self) -> usize {
-        self.capacity
-    }
-
-    /// Entries currently cached.
-    pub fn len(&self) -> usize {
-        self.map.len()
-    }
-
-    /// True when nothing is cached.
-    pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
-    }
-
-    /// Look up a fingerprint, promoting it to most-recently-used.
-    pub fn get(&mut self, key: u64) -> Option<&V> {
-        let &idx = self.map.get(&key)?;
-        self.detach(idx);
-        self.push_front(idx);
-        Some(&self.nodes[idx].value)
-    }
-
-    /// Insert (or refresh) a value, evicting the LRU entry when full.
-    pub fn insert(&mut self, key: u64, value: V) {
-        if self.capacity == 0 {
-            return;
-        }
-        if let Some(&idx) = self.map.get(&key) {
-            self.nodes[idx].value = value;
-            self.detach(idx);
-            self.push_front(idx);
-            return;
-        }
-        let idx = if self.map.len() >= self.capacity {
-            // recycle the LRU slot
-            let idx = self.tail;
-            self.detach(idx);
-            self.map.remove(&self.nodes[idx].key);
-            self.nodes[idx].key = key;
-            self.nodes[idx].value = value;
-            idx
-        } else {
-            self.nodes.push(Node {
-                key,
-                value,
-                prev: NIL,
-                next: NIL,
-            });
-            self.nodes.len() - 1
-        };
-        self.map.insert(key, idx);
-        self.push_front(idx);
-    }
-
-    /// Drop every entry.
-    pub fn clear(&mut self) {
-        self.map.clear();
-        self.nodes.clear();
-        self.head = NIL;
-        self.tail = NIL;
-    }
-
-    fn detach(&mut self, idx: usize) {
-        let (prev, next) = (self.nodes[idx].prev, self.nodes[idx].next);
-        if prev != NIL {
-            self.nodes[prev].next = next;
-        } else if self.head == idx {
-            self.head = next;
-        }
-        if next != NIL {
-            self.nodes[next].prev = prev;
-        } else if self.tail == idx {
-            self.tail = prev;
-        }
-        self.nodes[idx].prev = NIL;
-        self.nodes[idx].next = NIL;
-    }
-
-    fn push_front(&mut self, idx: usize) {
-        self.nodes[idx].prev = NIL;
-        self.nodes[idx].next = self.head;
-        if self.head != NIL {
-            self.nodes[self.head].prev = idx;
-        }
-        self.head = idx;
-        if self.tail == NIL {
-            self.tail = idx;
-        }
-    }
-}
-
-/// Quantize a float to ~1e-5 relative precision as a hashable integer.
-///
-/// Log-domain rounding keeps the precision *relative* across the many
-/// orders of magnitude instance parameters span (bytes to hundreds of GB,
-/// seconds to days): values closer than one part in ~10⁵ collide, values
-/// a solver could distinguish do not. Zero, sign, and non-finite values
-/// get reserved encodings disjoint from every ln-domain bucket (ln(1.0)
-/// rounds to 0, so zero must NOT share that encoding — a 0.0-vs-1.0
-/// aliasing here would replay decisions across different constraints).
-pub fn quantize(x: f64) -> i64 {
-    if x == 0.0 {
-        return i64::MIN + 2;
-    }
-    if x.is_nan() {
-        return i64::MIN;
-    }
-    if x.is_infinite() {
-        return if x > 0.0 { i64::MAX } else { i64::MIN + 1 };
-    }
-    let mag = (x.abs().ln() * 1e5).round() as i64;
-    if x > 0.0 {
-        mag
-    } else {
-        // offset keeps negative values disjoint from positive ones
-        mag ^ (1 << 62)
-    }
-}
 
 /// 64-bit fingerprint of everything a solve depends on: the instance's
 /// quantized parameters plus any telemetry that tightens constraints.

@@ -285,6 +285,19 @@ impl InstanceBuilder {
 
     /// Validate and freeze the instance (precomputes per-stage costs).
     pub fn build(self) -> anyhow::Result<Instance> {
+        self.build_for(&self.profile, self.data)
+    }
+
+    /// Build an instance from this template with `profile` and `data`
+    /// swapped in, *without* consuming or cloning the template.
+    ///
+    /// This is the fleet DES's per-request path: the scenario template is
+    /// fixed, only the model profile and capture size vary, and cloning
+    /// the whole builder (including its resident [`ModelProfile`]) per
+    /// request just to overwrite both was the admission path's dominant
+    /// allocation. The borrowed profile is read once ([`ModelProfile::alphas`])
+    /// and never stored.
+    pub fn build_for(&self, profile: &ModelProfile, data: Bytes) -> anyhow::Result<Instance> {
         anyhow::ensure!(
             (self.mu + self.lambda - 1.0).abs() < 1e-9,
             "weights must satisfy μ + λ = 1 (got μ={}, λ={})",
@@ -292,14 +305,14 @@ impl InstanceBuilder {
             self.lambda
         );
         anyhow::ensure!(self.mu >= 0.0 && self.lambda >= 0.0, "weights must be ≥ 0");
-        anyhow::ensure!(self.data.value() > 0.0, "data size must be positive");
+        anyhow::ensure!(data.value() > 0.0, "data size must be positive");
         anyhow::ensure!(
             self.beta_s_per_kb > 0.0 && self.gamma_s_per_kb > 0.0,
             "processing coefficients must be positive"
         );
         let inst = Instance {
-            alphas: self.profile.alphas(),
-            data: self.data,
+            alphas: profile.alphas(),
+            data,
             beta_s_per_byte: self.beta_s_per_kb / 1024.0,
             gamma_s_per_byte: self.gamma_s_per_kb / 1024.0,
             gamma_max_s_per_byte: self.gamma_max_s_per_kb / 1024.0,

@@ -1,0 +1,216 @@
+//! Fingerprint-keyed LRU caching, shared by every memoized hot path.
+//!
+//! Grown out of the solver's decision cache
+//! ([`crate::solver::engine::cache`]) when the route planner gained a
+//! cache of its own: both subsystems key work by a 64-bit hash of the
+//! inputs that could change the answer and evict least-recently-used.
+//! This module holds the two reusable pieces — the slab-backed
+//! [`LruCache`] and the relative-precision [`quantize`] used to build
+//! hash keys from floats — while each caller keeps its own fingerprint
+//! function (what to hash is domain knowledge, how to store it is not).
+//!
+//! Eviction is true least-recently-used via an index-linked list over a
+//! slab — O(1) get/insert, no allocation churn after warm-up.
+
+use std::collections::HashMap;
+
+/// Sentinel for "no neighbor" in the intrusive list.
+const NIL: usize = usize::MAX;
+
+struct Node<V> {
+    key: u64,
+    value: V,
+    prev: usize,
+    next: usize,
+}
+
+/// Fixed-capacity LRU map from 64-bit fingerprints to values.
+pub struct LruCache<V> {
+    capacity: usize,
+    map: HashMap<u64, usize>,
+    nodes: Vec<Node<V>>,
+    /// Most recently used.
+    head: usize,
+    /// Least recently used (evicted first).
+    tail: usize,
+}
+
+impl<V> LruCache<V> {
+    /// `capacity = 0` disables caching entirely (every lookup misses).
+    pub fn new(capacity: usize) -> Self {
+        LruCache {
+            capacity,
+            map: HashMap::with_capacity(capacity.min(4096)),
+            nodes: Vec::with_capacity(capacity.min(4096)),
+            head: NIL,
+            tail: NIL,
+        }
+    }
+
+    /// Maximum entries before LRU eviction.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Entries currently cached.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Look up a fingerprint, promoting it to most-recently-used.
+    pub fn get(&mut self, key: u64) -> Option<&V> {
+        let &idx = self.map.get(&key)?;
+        self.detach(idx);
+        self.push_front(idx);
+        Some(&self.nodes[idx].value)
+    }
+
+    /// Insert (or refresh) a value, evicting the LRU entry when full.
+    pub fn insert(&mut self, key: u64, value: V) {
+        if self.capacity == 0 {
+            return;
+        }
+        if let Some(&idx) = self.map.get(&key) {
+            self.nodes[idx].value = value;
+            self.detach(idx);
+            self.push_front(idx);
+            return;
+        }
+        let idx = if self.map.len() >= self.capacity {
+            // recycle the LRU slot
+            let idx = self.tail;
+            self.detach(idx);
+            self.map.remove(&self.nodes[idx].key);
+            self.nodes[idx].key = key;
+            self.nodes[idx].value = value;
+            idx
+        } else {
+            self.nodes.push(Node {
+                key,
+                value,
+                prev: NIL,
+                next: NIL,
+            });
+            self.nodes.len() - 1
+        };
+        self.map.insert(key, idx);
+        self.push_front(idx);
+    }
+
+    /// Drop every entry.
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.nodes.clear();
+        self.head = NIL;
+        self.tail = NIL;
+    }
+
+    fn detach(&mut self, idx: usize) {
+        let (prev, next) = (self.nodes[idx].prev, self.nodes[idx].next);
+        if prev != NIL {
+            self.nodes[prev].next = next;
+        } else if self.head == idx {
+            self.head = next;
+        }
+        if next != NIL {
+            self.nodes[next].prev = prev;
+        } else if self.tail == idx {
+            self.tail = prev;
+        }
+        self.nodes[idx].prev = NIL;
+        self.nodes[idx].next = NIL;
+    }
+
+    fn push_front(&mut self, idx: usize) {
+        self.nodes[idx].prev = NIL;
+        self.nodes[idx].next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+}
+
+/// Quantize a float to ~1e-5 relative precision as a hashable integer.
+///
+/// Log-domain rounding keeps the precision *relative* across the many
+/// orders of magnitude instance parameters span (bytes to hundreds of GB,
+/// seconds to days): values closer than one part in ~10⁵ collide, values
+/// a solver could distinguish do not. Zero, sign, and non-finite values
+/// get reserved encodings disjoint from every ln-domain bucket (ln(1.0)
+/// rounds to 0, so zero must NOT share that encoding — a 0.0-vs-1.0
+/// aliasing here would replay decisions across different constraints).
+///
+/// Use this for keys where *physically indistinguishable* inputs should
+/// collide on purpose (the solver's decision cache). Caches that promise
+/// bit-identical results with caching on or off (the route-plan cache)
+/// must key on exact `f64::to_bits` instead — quantized keys would alias
+/// distinct inputs and replay a plan computed for different arithmetic.
+pub fn quantize(x: f64) -> i64 {
+    if x == 0.0 {
+        return i64::MIN + 2;
+    }
+    if x.is_nan() {
+        return i64::MIN;
+    }
+    if x.is_infinite() {
+        return if x > 0.0 { i64::MAX } else { i64::MIN + 1 };
+    }
+    let mag = (x.abs().ln() * 1e5).round() as i64;
+    if x > 0.0 {
+        mag
+    } else {
+        // offset keeps negative values disjoint from positive ones
+        mag ^ (1 << 62)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_promotes_and_insert_recycles_slots() {
+        let mut c: LruCache<i32> = LruCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        assert_eq!(c.get(1), Some(&10)); // 1 is now MRU
+        c.insert(3, 30); // evicts 2
+        assert!(c.get(2).is_none());
+        assert_eq!(c.get(1), Some(&10));
+        assert_eq!(c.get(3), Some(&30));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.capacity(), 2);
+    }
+
+    #[test]
+    fn clear_empties_without_shrinking_capacity() {
+        let mut c: LruCache<i32> = LruCache::new(4);
+        c.insert(7, 70);
+        c.insert(8, 80);
+        c.clear();
+        assert!(c.is_empty());
+        assert!(c.get(7).is_none());
+        c.insert(9, 90);
+        assert_eq!(c.get(9), Some(&90));
+    }
+
+    #[test]
+    fn quantize_reserved_encodings_stay_disjoint() {
+        assert_ne!(quantize(0.0), quantize(1.0));
+        assert_ne!(quantize(2.0), quantize(-2.0));
+        assert_ne!(quantize(f64::INFINITY), quantize(f64::NEG_INFINITY));
+        assert_ne!(quantize(0.0), quantize(f64::NAN));
+        // relative: a 1e-7 wiggle collides, a 1e-3 wiggle does not
+        assert_eq!(quantize(1234.5), quantize(1234.5 * (1.0 + 1e-7)));
+        assert_ne!(quantize(1234.5), quantize(1234.5 * 1.001));
+    }
+}

@@ -1,11 +1,13 @@
 //! Supporting infrastructure built from scratch for the offline
 //! environment: deterministic RNG + distributions, JSON and TOML-subset
 //! parsers, descriptive statistics, a CLI argument parser, a `log`
-//! backend, and strongly-typed physical units.
+//! backend, fingerprint-keyed LRU caching, and strongly-typed physical
+//! units.
 
 pub mod cli;
 pub mod json;
 pub mod logging;
+pub mod lru;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

@@ -51,6 +51,7 @@ fn n1_fleet_matches_the_legacy_simulator_bit_identically() {
         template: template(60.0),
         profiles: vec![profile()],
         contact,
+        timing: false,
         horizon,
     };
     let legacy = Simulator::new(legacy_cfg)
@@ -66,6 +67,8 @@ fn n1_fleet_matches_the_legacy_simulator_bit_identically() {
         isl_max_hops: 0,
         telemetry: TelemetryMode::Unconstrained,
         placement: PlacementConfig::default(),
+        route_cache: true,
+        timing: false,
         horizon,
     };
     let fleet = FleetSimulator::new(fleet_cfg)
@@ -114,6 +117,8 @@ fn everywhere_with_room_for_everything_is_bit_identical() {
             isl_max_hops: 0,
             telemetry: TelemetryMode::Live,
             placement,
+            route_cache: true,
+            timing: false,
             horizon,
         }
     };

@@ -66,6 +66,7 @@ fn week_long_simulation_conserves_and_orders() {
                 Seconds::from_hours(scen.t_cyc_hours),
                 Seconds::from_minutes(scen.t_con_minutes),
             ),
+            timing: false,
             horizon,
         };
         let result = Simulator::new(cfg).run(&trace, &engine).unwrap();
