@@ -97,6 +97,11 @@ fn fleet(routing: RoutingPolicy, placement: PlacementConfig) -> FleetSimConfig {
         isl_max_hops: 0,
         telemetry: TelemetryMode::Live,
         placement,
+        route_cache: true,
+        timing: false,
+        // the study doubles as CI's audit-enabled fleet scenario: it
+        // exercises stores, evictions, and pins under real contention
+        audit: true,
         horizon: Seconds::from_hours(100_000.0),
     }
 }

@@ -561,9 +561,10 @@ impl FleetScenario {
             telemetry: TelemetryMode::Live,
             placement,
             route_cache: self.route_cache,
-            // callers opt into timing per run (CLI `--timing`), it is not
-            // a scenario property
+            // callers opt into timing and auditing per run (CLI `--timing`
+            // / `--audit on`); neither is a scenario property
             timing: false,
+            audit: false,
             horizon: self.horizon(),
         })
     }

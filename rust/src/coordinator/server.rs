@@ -449,8 +449,10 @@ mod tests {
         s.submit(req(0, 1.0), Seconds(0.0)).unwrap();
         s.submit(req(1, 1.0), Seconds(0.0)).unwrap(); // flush at 2
         // wait for the worker
+        // lint:allow(wall_clock, reason = "test-only bounded wait on a real worker thread; no simulated time involved")
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
         let mut got = Vec::new();
+        // lint:allow(wall_clock, reason = "same test-only wait loop as the deadline above")
         while got.is_empty() && std::time::Instant::now() < deadline {
             got = s.poll_completions();
             std::thread::sleep(std::time::Duration::from_millis(1));

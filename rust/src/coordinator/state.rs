@@ -128,8 +128,7 @@ impl ClusterState {
             .min_by(|(ida, a), (idb, b)| {
                 a.next_contact_in
                     .value()
-                    .partial_cmp(&b.next_contact_in.value())
-                    .unwrap()
+                    .total_cmp(&b.next_contact_in.value())
                     .then(ida.cmp(idb))
             })
             .map(|(id, _)| *id)
@@ -143,8 +142,7 @@ impl ClusterState {
             .min_by(|(ida, a), (idb, b)| {
                 a.effective_contact_in()
                     .value()
-                    .partial_cmp(&b.effective_contact_in().value())
-                    .unwrap()
+                    .total_cmp(&b.effective_contact_in().value())
                     .then(a.queue_depth.cmp(&b.queue_depth))
                     .then(ida.cmp(idb))
             })
@@ -258,6 +256,23 @@ mod tests {
         c.get_mut(1).unwrap().next_contact_in = Seconds(100.0);
         c.get_mut(2).unwrap().next_contact_in = Seconds(900.0);
         assert_eq!(c.soonest_contact(), Some(1));
+    }
+
+    /// Regression for the float_ord lint's motivating hazard: a NaN
+    /// contact horizon (e.g. a poisoned telemetry feed) must not panic
+    /// the router — `total_cmp` sorts NaN after every real wait, so the
+    /// satellite with a real pass still wins deterministically.
+    #[test]
+    fn nan_contact_horizon_does_not_panic_routing() {
+        let mut c = cluster3();
+        c.get_mut(0).unwrap().next_contact_in = Seconds(f64::NAN);
+        c.get_mut(1).unwrap().next_contact_in = Seconds(100.0);
+        c.get_mut(2).unwrap().next_contact_in = Seconds(f64::NAN);
+        assert_eq!(c.soonest_contact(), Some(1));
+        assert_eq!(c.soonest_effective_contact(), Some(1));
+        // all-NaN stays total: lowest id, no panic
+        c.get_mut(1).unwrap().next_contact_in = Seconds(f64::NAN);
+        assert_eq!(c.soonest_contact(), Some(0));
     }
 
     #[test]

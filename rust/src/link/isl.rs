@@ -190,7 +190,7 @@ impl IslTopology {
         self.neighbors[sat]
             .iter()
             .map(|l| l.rate)
-            .max_by(|a, b| a.value().partial_cmp(&b.value()).expect("finite rates"))
+            .max_by(|a, b| a.value().total_cmp(&b.value()))
     }
 
     /// Cheapest bounded-hop transfer time of `bytes` from `src` to `dst`:

@@ -198,6 +198,12 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
             Some(""),
         )
         .flag("timing", "print an end-of-run hot-path breakdown (events/s, solve vs route)")
+        .opt(
+            "audit",
+            "on|off — runtime invariant audit, read-only checks that panic on \
+             inconsistent sim state (fleet only; empty = scenario preset)",
+            Some(""),
+        )
         .parse_from(argv)?;
     let fleet_config = args.get_str("fleet-config").unwrap_or("").to_string();
     let fleet_spec = args.get_str("fleet").unwrap_or("").to_string();
@@ -358,6 +364,12 @@ fn simulate_fleet(args: &Args, fleet_config: &str, fleet_spec: &str) -> anyhow::
         other => anyhow::bail!("--route-cache expects on|off, got `{other}`"),
     }
     cfg.timing = args.flag_set("timing");
+    match args.get_str("audit").unwrap_or("") {
+        "" => {}
+        "on" => cfg.audit = true,
+        "off" => cfg.audit = false,
+        other => anyhow::bail!("--audit expects on|off, got `{other}`"),
+    }
     let sim = FleetSimulator::new(cfg);
     let result = sim.run(&trace, &engine)?;
     let m = &result.metrics;

@@ -101,7 +101,7 @@ impl HostTensor {
                 let row = &self.data[i * c..(i + 1) * c];
                 row.iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(j, _)| j)
                     .unwrap_or(0)
             })

@@ -47,13 +47,17 @@ impl<E> Eq for ScheduledEvent<E> {}
 
 impl<E> Ord for ScheduledEvent<E> {
     fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap: invert for earliest-first. NaN times are
-        // rejected at push, so partial_cmp cannot fail here.
-        other
-            .time
-            .partial_cmp(&self.time)
-            .unwrap()
-            .then_with(|| other.seq.cmp(&self.seq))
+        // BinaryHeap is a max-heap: invert for earliest-first. Routed
+        // through `precedes` so every ordering in this module shares one
+        // total `(time, seq)` order and no comparator can panic on NaN
+        // (NaN times are rejected at push regardless).
+        if precedes(self.time, self.seq, other.time, other.seq) {
+            Ordering::Greater
+        } else if precedes(other.time, other.seq, self.time, self.seq) {
+            Ordering::Less
+        } else {
+            Ordering::Equal
+        }
     }
 }
 
@@ -176,12 +180,17 @@ impl<E> EventQueue<E> {
     pub fn pop(&mut self) -> Option<ScheduledEvent<E>> {
         if self.current.is_empty() {
             let (epoch, mut bucket) = self.calendar.pop_first()?;
-            // sort the incoming bucket descending so Vec::pop is the min
+            // Sort the incoming bucket descending so Vec::pop is the min.
+            // Same `precedes` order as the binary inserts into `current`,
+            // so the two paths can never disagree on a tie.
             bucket.sort_by(|a, b| {
-                b.time
-                    .partial_cmp(&a.time)
-                    .unwrap()
-                    .then_with(|| b.seq.cmp(&a.seq))
+                if precedes(a.time, a.seq, b.time, b.seq) {
+                    Ordering::Greater
+                } else if precedes(b.time, b.seq, a.time, a.seq) {
+                    Ordering::Less
+                } else {
+                    Ordering::Equal
+                }
             });
             self.current = bucket;
             self.current_epoch = epoch;

@@ -99,6 +99,7 @@ use crate::energy::solar::SolarPanel;
 use crate::link::isl::{IslLink, IslTopology};
 use crate::link::route::{self, DownlinkOracle};
 use crate::placement::{ArtifactStore, PlacementConfig};
+use crate::sim::invariants::Audit;
 use crate::solver::engine::{SolverEngine, Telemetry};
 use crate::solver::instance::{Instance, InstanceBuilder};
 use crate::util::lru::LruCache;
@@ -187,6 +188,13 @@ pub struct FleetSimConfig {
     /// instrumentation costs two monotonic-clock reads per solve and per
     /// route search.
     pub timing: bool,
+    /// Run the [`crate::sim::invariants`] audit: read-only checks (SoC
+    /// bounds, monotone event pops, store budgets, pin safety, request
+    /// conservation) that panic on the first inconsistent state instead
+    /// of exporting corrupt results. Enabling it never changes a run's
+    /// outcome. Off by default in release paths; the test suite and the
+    /// CLI's `--audit on` switch it on.
+    pub audit: bool,
     /// Simulation horizon: events past it are dropped and counted as
     /// unfinished.
     pub horizon: Seconds,
@@ -403,6 +411,7 @@ impl HotPath {
     /// generation is part of the cache key, so the bump orphans (rather
     /// than scans) all existing entries.
     fn touch_tx(&mut self, sat: usize, free_at: f64) {
+        // lint:allow(tx_state, reason = "this IS the sanctioned setter; the write and the generation bump are inseparable here")
         self.tx_free[sat] = free_at;
         self.route_gen += 1;
     }
@@ -786,8 +795,10 @@ impl FleetSimulator {
         );
 
         let horizon = self.config.horizon.value();
+        let mut audit = Audit::new(self.config.audit);
         while let Some(ev) = q.pop() {
             let now = ev.time;
+            audit.on_pop(now);
             events += 1;
             if now > horizon {
                 // the queue is time-ordered: everything left is late too
@@ -873,6 +884,7 @@ impl FleetSimulator {
                         metrics.reject_admission(Some(sat));
                         continue;
                     }
+                    audit.on_battery(sat, &self.states[sat]);
                     // placement: are the weights on board? A miss becomes
                     // a real fetch event that delays processing.
                     let mut fetch: Option<(Option<usize>, Seconds)> = None;
@@ -940,10 +952,12 @@ impl FleetSimulator {
                     // through — the fetch happened, nothing stays cached.
                     if let Some(victims) = self.stores[sat].insert(model, bytes, &inflight[sat])
                     {
+                        audit.on_eviction(sat, &victims, &inflight[sat]);
                         for _ in victims {
                             metrics.note_eviction(sat);
                         }
                     }
+                    audit.on_store(sat, &self.stores[sat]);
                     // both ends keyed their terminals for the whole
                     // transfer. The draws are best-effort: the request was
                     // admitted (and its processing energy reserved) at
@@ -955,12 +969,14 @@ impl FleetSimulator {
                             f.energy += e_fetch;
                         }
                     }
+                    audit.on_battery(sat, &self.states[sat]);
                     if let Some(src) = fetch_src {
                         if self.states[src].try_draw(now, e_fetch) {
                             if let Some(f) = flights[i].as_mut() {
                                 f.energy += e_fetch;
                             }
                         }
+                        audit.on_battery(src, &self.states[src]);
                     }
                     // weights on board: join the processing FIFO
                     let start = now.max(hot.proc_free[sat]);
@@ -1035,6 +1051,7 @@ impl FleetSimulator {
                     if let Some(f) = flights[i].as_mut() {
                         f.energy += e_isl;
                     }
+                    audit.on_battery(hop_src, &self.states[hop_src]);
                     // count the handoff only now that the serialization
                     // actually happened (an energy refusal above means no
                     // bytes ever crossed the ISL)
@@ -1104,6 +1121,7 @@ impl FleetSimulator {
                     if let Some(f) = flights[i].as_mut() {
                         f.energy += e_off;
                     }
+                    audit.on_battery(down_sat, &self.states[down_sat]);
                     // the satellite's involvement ends here: free its queue
                     // slot before the capacity-rich WAN/cloud hop so the
                     // router and queue-depth telemetry see the true
@@ -1128,11 +1146,13 @@ impl FleetSimulator {
         for _ in accounted..requests.len() as u64 {
             metrics.note_unfinished(None);
         }
+        audit.on_end(requests.len() as u64, &metrics);
 
         // fold the struct-of-arrays clocks back into the per-satellite
         // state structs the result exposes
         for (i, s) in self.states.iter_mut().enumerate() {
             s.proc_free_at = hot.proc_free[i];
+            // lint:allow(tx_state, reason = "end-of-run writeback from the SoA clocks; no route query can follow")
             s.tx_free_at = hot.tx_free[i];
         }
         metrics.route_cache_hits = hot.hits;
@@ -1217,6 +1237,7 @@ mod tests {
             placement: PlacementConfig::default(),
             route_cache: true,
             timing: false,
+            audit: true,
             horizon: Seconds::from_hours(10_000.0),
         }
     }
@@ -1376,6 +1397,7 @@ mod tests {
             placement: PlacementConfig::default(),
             route_cache: true,
             timing: false,
+            audit: true,
             horizon: Seconds::from_hours(10_000.0),
         };
         let trace = fixed_trace(4, Seconds(5000.0), Bytes::from_mb(50.0));
@@ -1408,6 +1430,7 @@ mod tests {
             placement: PlacementConfig::default(),
             route_cache: true,
             timing: false,
+            audit: true,
             horizon: Seconds::from_hours(10_000.0),
         };
         let trace = fixed_trace(3, Seconds(100.0), Bytes::from_mb(50.0));
@@ -1469,6 +1492,7 @@ mod tests {
             placement: PlacementConfig::default(),
             route_cache: true,
             timing: false,
+            audit: true,
             horizon: Seconds::from_hours(10_000.0),
         };
         let trace = vec![Request {
@@ -1565,6 +1589,7 @@ mod tests {
             placement: PlacementConfig::default(),
             route_cache: true,
             timing: false,
+            audit: true,
             horizon: Seconds::from_hours(10_000.0),
         };
         let trace = vec![Request {
@@ -1697,6 +1722,7 @@ mod tests {
             placement: PlacementConfig::default(),
             route_cache: true,
             timing: false,
+            audit: true,
             horizon: Seconds::from_hours(10_000.0),
         };
         let mk = |id: u64, at: f64| Request {

@@ -1,0 +1,296 @@
+//! Runtime invariant audit for the simulators.
+//!
+//! The static lints (`cargo xtask lint`, see `docs/LINTS.md`) rule out
+//! whole *classes* of nondeterminism at the source level; this module is
+//! the runtime half of the same bargain: a set of cheap checks threaded
+//! through [`crate::sim::FleetSimulator`] (and therefore the N=1
+//! [`crate::sim::Simulator`] wrapper) that catch state-machine bugs the
+//! type system cannot — a battery driven past its bounds, an event
+//! popped out of order, an artifact store over its byte budget, a pinned
+//! model evicted mid-fetch, or a request that simply vanishes from the
+//! books.
+//!
+//! Layout mirrors the two ways the checks are consumed:
+//!
+//! * **Pure predicates** ([`battery_in_bounds`], [`pops_monotone`],
+//!   [`store_within_budget`], [`eviction_respects_pins`],
+//!   [`requests_conserved`]) take plain values and return
+//!   `Result<(), Violation>`, so tests can seed violations directly
+//!   without building a whole simulator.
+//! * The stateful [`Audit`] wrapper owns the enable flag (plus the
+//!   last-pop clock) and panics with a descriptive message when an
+//!   enabled check fails.
+//!
+//! The audit is off by default in release runs (`FleetSimConfig::audit`
+//! and the CLI's `--audit on`), and on wherever the test suite builds a
+//! fleet config by hand. Every check is read-only: enabling the audit
+//! can never change a simulation's outcome, only abort it.
+
+use crate::placement::ArtifactStore;
+use crate::sim::entities::SatelliteState;
+use crate::sim::metrics::SimMetrics;
+use std::fmt;
+
+/// Absolute slack (joules) tolerated on battery bounds: the integrator
+/// clamps exactly, so this only absorbs representational noise.
+const CHARGE_SLACK_J: f64 = 1e-9;
+
+/// One failed invariant, with enough context to debug it.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Violation {
+    /// A battery charge left `[0, capacity]` (or went NaN).
+    Battery {
+        /// Satellite index.
+        sat: usize,
+        /// Observed charge, joules.
+        charge_j: f64,
+        /// Battery capacity, joules.
+        capacity_j: f64,
+    },
+    /// The event queue popped times that went backwards (or NaN).
+    EventOrder {
+        /// Previous pop time, seconds.
+        prev_s: f64,
+        /// Offending pop time, seconds.
+        now_s: f64,
+    },
+    /// An artifact store holds more bytes than its budget (or NaN).
+    StoreBudget {
+        /// Satellite index.
+        sat: usize,
+        /// Bytes resident.
+        used_bytes: f64,
+        /// Configured budget, bytes.
+        budget_bytes: f64,
+    },
+    /// An eviction victim still had in-flight requests (it was pinned).
+    PinnedEviction {
+        /// Satellite index.
+        sat: usize,
+        /// Evicted model id.
+        model: usize,
+        /// In-flight count that should have pinned it.
+        inflight: u64,
+    },
+    /// Request conservation broke: arrived ≠ completed + rejected +
+    /// unfinished (in-flight work at the horizon counts as unfinished).
+    Conservation {
+        /// Requests fed to the run.
+        arrived: u64,
+        /// Requests completed.
+        completed: u64,
+        /// Requests rejected (admission + transmit).
+        rejected: u64,
+        /// Requests unfinished at the horizon.
+        unfinished: u64,
+    },
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Violation::Battery {
+                sat,
+                charge_j,
+                capacity_j,
+            } => write!(
+                f,
+                "sat {sat}: battery charge {charge_j} J outside [0, {capacity_j}] J"
+            ),
+            Violation::EventOrder { prev_s, now_s } => {
+                write!(f, "event pop went backwards: {prev_s} s then {now_s} s")
+            }
+            Violation::StoreBudget {
+                sat,
+                used_bytes,
+                budget_bytes,
+            } => write!(
+                f,
+                "sat {sat}: artifact store holds {used_bytes} B over its {budget_bytes} B budget"
+            ),
+            Violation::PinnedEviction {
+                sat,
+                model,
+                inflight,
+            } => write!(
+                f,
+                "sat {sat}: evicted model {model} with {inflight} in-flight request(s) pinning it"
+            ),
+            Violation::Conservation {
+                arrived,
+                completed,
+                rejected,
+                unfinished,
+            } => write!(
+                f,
+                "request conservation broke: {arrived} arrived but \
+                 {completed} completed + {rejected} rejected + {unfinished} unfinished"
+            ),
+        }
+    }
+}
+
+/// SoC stays physical: `0 ≤ charge ≤ capacity` (NaN fails).
+pub fn battery_in_bounds(sat: usize, charge_j: f64, capacity_j: f64) -> Result<(), Violation> {
+    if charge_j >= -CHARGE_SLACK_J && charge_j <= capacity_j + CHARGE_SLACK_J {
+        Ok(())
+    } else {
+        Err(Violation::Battery {
+            sat,
+            charge_j,
+            capacity_j,
+        })
+    }
+}
+
+/// Pop times never decrease (NaN fails).
+pub fn pops_monotone(prev_s: f64, now_s: f64) -> Result<(), Violation> {
+    if now_s >= prev_s {
+        Ok(())
+    } else {
+        Err(Violation::EventOrder { prev_s, now_s })
+    }
+}
+
+/// Resident bytes never exceed the budget; `None` means unbudgeted.
+pub fn store_within_budget(
+    sat: usize,
+    used_bytes: f64,
+    budget_bytes: Option<f64>,
+) -> Result<(), Violation> {
+    match budget_bytes {
+        None => Ok(()),
+        Some(budget) if used_bytes <= budget => Ok(()),
+        Some(budget) => Err(Violation::StoreBudget {
+            sat,
+            used_bytes,
+            budget_bytes: budget,
+        }),
+    }
+}
+
+/// No eviction victim may still be pinned by in-flight requests.
+/// `inflight` is indexed by model id, as in the fleet run loop.
+pub fn eviction_respects_pins(
+    sat: usize,
+    victims: &[usize],
+    inflight: &[u64],
+) -> Result<(), Violation> {
+    for &model in victims {
+        let pins = inflight.get(model).copied().unwrap_or(0);
+        if pins > 0 {
+            return Err(Violation::PinnedEviction {
+                sat,
+                model,
+                inflight: pins,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Every request is accounted for exactly once at the horizon.
+pub fn requests_conserved(
+    arrived: u64,
+    completed: u64,
+    rejected: u64,
+    unfinished: u64,
+) -> Result<(), Violation> {
+    if completed + rejected + unfinished == arrived {
+        Ok(())
+    } else {
+        Err(Violation::Conservation {
+            arrived,
+            completed,
+            rejected,
+            unfinished,
+        })
+    }
+}
+
+/// The stateful audit handle threaded through a simulator run. When
+/// disabled every hook is a no-op branch; when enabled a failed check
+/// panics with the [`Violation`], aborting the run at the first
+/// inconsistent state rather than exporting corrupt results.
+#[derive(Debug)]
+pub struct Audit {
+    enabled: bool,
+    last_pop_s: f64,
+}
+
+impl Audit {
+    /// A new audit handle; `enabled = false` makes every hook a no-op.
+    pub fn new(enabled: bool) -> Audit {
+        Audit {
+            enabled,
+            last_pop_s: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Whether the audit is active.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record an event pop and enforce monotone non-decreasing times.
+    pub fn on_pop(&mut self, now_s: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.enforce(pops_monotone(self.last_pop_s, now_s));
+        self.last_pop_s = now_s;
+    }
+
+    /// Enforce battery bounds for one satellite (no-op without battery).
+    pub fn on_battery(&self, sat: usize, state: &SatelliteState) {
+        if !self.enabled {
+            return;
+        }
+        if let Some(b) = &state.battery {
+            self.enforce(battery_in_bounds(
+                sat,
+                b.charge().value(),
+                b.capacity().value(),
+            ));
+        }
+    }
+
+    /// Enforce the byte budget of one artifact store.
+    pub fn on_store(&self, sat: usize, store: &ArtifactStore) {
+        if !self.enabled {
+            return;
+        }
+        self.enforce(store_within_budget(
+            sat,
+            store.used_bytes().value(),
+            store.budget().map(|b| b.value()),
+        ));
+    }
+
+    /// Enforce that an eviction round touched no pinned model.
+    pub fn on_eviction(&self, sat: usize, victims: &[usize], inflight: &[u64]) {
+        if !self.enabled {
+            return;
+        }
+        self.enforce(eviction_respects_pins(sat, victims, inflight));
+    }
+
+    /// Enforce request conservation against the final metrics.
+    pub fn on_end(&self, arrived: u64, metrics: &SimMetrics) {
+        if !self.enabled {
+            return;
+        }
+        self.enforce(requests_conserved(
+            arrived,
+            metrics.completed(),
+            metrics.rejected(),
+            metrics.unfinished,
+        ));
+    }
+
+    fn enforce(&self, check: Result<(), Violation>) {
+        if let Err(v) = check {
+            panic!("sim invariant violated: {v}");
+        }
+    }
+}

@@ -24,17 +24,22 @@
 //!   ([`crate::link::isl`]), telemetry-fed solves.
 //! * [`runner`] — the paper's single-satellite scenario, a thin N = 1
 //!   wrapper over [`fleet`].
+//! * [`invariants`] — the opt-in runtime audit (SoC bounds, monotone
+//!   pops, store budgets, pin safety, request conservation) threaded
+//!   through the run loop; the runtime half of `cargo xtask lint`.
 
 pub mod contact;
 pub mod engine;
 pub mod entities;
 pub mod fleet;
+pub mod invariants;
 pub mod metrics;
 pub mod runner;
 pub mod workload;
 
 pub use contact::{ContactModel, PeriodicContact, ScheduleContact};
 pub use engine::{EventQueue, ScheduledEvent};
+pub use invariants::{Audit, Violation};
 pub use fleet::{
     FleetResult, FleetSimConfig, FleetSimulator, RunTiming, SatelliteSpec, TelemetryMode,
 };

@@ -108,6 +108,10 @@ impl Simulator {
             placement: crate::placement::PlacementConfig::default(),
             route_cache: true,
             timing,
+            // `SimConfig` keeps the paper's original shape, so the audit
+            // rides on build profile here: on under `cargo test`, off in
+            // release sweeps. It is read-only either way.
+            audit: cfg!(debug_assertions),
             horizon,
         };
         let mut sim = FleetSimulator::new(fleet);

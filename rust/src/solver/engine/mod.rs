@@ -34,6 +34,7 @@ pub use telemetry::Telemetry;
 
 use crate::solver::instance::{Costs, Decision, Instance};
 use crate::solver::policy::OffloadPolicy;
+// lint:allow(hash_iter, reason = "batch dedup map is lookup-only; outcomes keep request order")
 use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Instant;
@@ -231,6 +232,7 @@ impl SolverEngine {
     pub fn solve_batch(&self, reqs: &[SolveRequest]) -> Vec<SolveOutcome> {
         let mut out: Vec<Option<SolveOutcome>> = Vec::with_capacity(reqs.len());
         out.resize_with(reqs.len(), || None);
+        // lint:allow(hash_iter, reason = "fingerprint -> first-index lookups; never iterated, so arrival order alone decides outcomes")
         let mut first_of: HashMap<u64, usize> = HashMap::with_capacity(reqs.len());
         for (i, req) in reqs.iter().enumerate() {
             let key = fingerprint(&req.instance, &req.telemetry);
@@ -293,7 +295,7 @@ impl SolverEngine {
             .enumerate()
             .filter(|(_, &ok)| ok)
             .map(|(s, _)| (s, obj.z(&costs[s])))
-            .min_by(|a, b| a.1.partial_cmp(&b.1).expect("finite Z"))
+            .min_by(|a, b| a.1.total_cmp(&b.1))
             .expect("allowed set is non-empty");
         TightenedDecision {
             decision: Decision::new(best_s, best_z, costs[best_s], inst.depth()),
@@ -584,7 +586,7 @@ mod tests {
                         <= 0.5
             })
             .map(|s| (s, inst.z_of_split(s, &obj)))
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(&b.1))
             .unwrap();
         assert_eq!(out.decision.split, best.0);
         assert!((out.decision.z - best.1).abs() < 1e-12);

@@ -12,6 +12,7 @@
 //! Eviction is true least-recently-used via an index-linked list over a
 //! slab — O(1) get/insert, no allocation churn after warm-up.
 
+// lint:allow(hash_iter, reason = "point lookups only; iteration order comes from the intrusive list, never the map")
 use std::collections::HashMap;
 
 /// Sentinel for "no neighbor" in the intrusive list.
@@ -27,6 +28,7 @@ struct Node<V> {
 /// Fixed-capacity LRU map from 64-bit fingerprints to values.
 pub struct LruCache<V> {
     capacity: usize,
+    // lint:allow(hash_iter, reason = "fingerprint -> slab-index lookups; never iterated")
     map: HashMap<u64, usize>,
     nodes: Vec<Node<V>>,
     /// Most recently used.
@@ -40,6 +42,7 @@ impl<V> LruCache<V> {
     pub fn new(capacity: usize) -> Self {
         LruCache {
             capacity,
+            // lint:allow(hash_iter, reason = "see the field above: lookups only")
             map: HashMap::with_capacity(capacity.min(4096)),
             nodes: Vec::with_capacity(capacity.min(4096)),
             head: NIL,

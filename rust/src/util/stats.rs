@@ -54,7 +54,7 @@ impl Summary {
         };
         let std = var.sqrt();
         let mut sorted: Vec<f64> = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         Summary {
             n,
             mean,
@@ -86,7 +86,7 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
 /// Percentile over an unsorted slice (copies + sorts).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     percentile_sorted(&sorted, p)
 }
 

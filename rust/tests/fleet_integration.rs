@@ -69,6 +69,7 @@ fn n1_fleet_matches_the_legacy_simulator_bit_identically() {
         placement: PlacementConfig::default(),
         route_cache: true,
         timing: false,
+        audit: true,
         horizon,
     };
     let fleet = FleetSimulator::new(fleet_cfg)
@@ -119,6 +120,7 @@ fn everywhere_with_room_for_everything_is_bit_identical() {
             placement,
             route_cache: true,
             timing: false,
+            audit: true,
             horizon,
         }
     };

@@ -1,0 +1,187 @@
+//! The runtime invariant audit: seeded violations prove each check
+//! fires, the disabled audit is inert, and a contentious audit-enabled
+//! fleet run (batteries + cold stores + evictions) finishes clean —
+//! i.e. the checks catch corrupt state without false-positiving on a
+//! legitimate scenario.
+
+use leo_infer::coordinator::router::RoutingPolicy;
+use leo_infer::dnn::profile::ModelProfile;
+use leo_infer::energy::battery::Battery;
+use leo_infer::energy::solar::SolarPanel;
+use leo_infer::placement::{
+    EvictionPolicy, ModelArtifact, PlacementConfig, PlacementPolicy,
+};
+use leo_infer::sim::contact::PeriodicContact;
+use leo_infer::sim::fleet::{FleetSimConfig, FleetSimulator, SatelliteSpec, TelemetryMode};
+use leo_infer::sim::invariants::{
+    self, battery_in_bounds, eviction_respects_pins, pops_monotone, requests_conserved,
+    store_within_budget, Audit, Violation,
+};
+use leo_infer::sim::workload::Request;
+use leo_infer::solver::instance::InstanceBuilder;
+use leo_infer::solver::SolverRegistry;
+use leo_infer::util::units::{BitsPerSec, Bytes, Joules, Seconds};
+
+// ---------------------------------------------------------------- seeded
+// violations: every predicate must reject its namesake corruption
+
+#[test]
+fn negative_battery_draw_fires() {
+    let v = battery_in_bounds(3, -5.0, 100.0).unwrap_err();
+    assert!(matches!(v, Violation::Battery { sat: 3, .. }));
+    assert!(battery_in_bounds(0, 105.0, 100.0).is_err(), "overcharge");
+    assert!(battery_in_bounds(0, f64::NAN, 100.0).is_err(), "NaN charge");
+    assert!(battery_in_bounds(0, 0.0, 100.0).is_ok());
+    assert!(battery_in_bounds(0, 100.0, 100.0).is_ok());
+}
+
+#[test]
+fn out_of_order_event_injection_fires() {
+    let v = pops_monotone(10.0, 5.0).unwrap_err();
+    assert!(matches!(v, Violation::EventOrder { .. }));
+    assert!(pops_monotone(5.0, f64::NAN).is_err(), "NaN pop time");
+    assert!(pops_monotone(5.0, 5.0).is_ok(), "equal times are legal");
+    assert!(pops_monotone(5.0, 6.0).is_ok());
+}
+
+#[test]
+fn over_budget_store_insert_fires() {
+    let v = store_within_budget(1, 200.0e6, Some(100.0e6)).unwrap_err();
+    assert!(matches!(v, Violation::StoreBudget { sat: 1, .. }));
+    assert!(store_within_budget(1, 200.0e6, None).is_ok(), "unbudgeted");
+    assert!(store_within_budget(1, 100.0e6, Some(100.0e6)).is_ok());
+    assert!(store_within_budget(1, f64::NAN, Some(100.0e6)).is_err());
+}
+
+#[test]
+fn evicting_a_pinned_model_fires() {
+    // model 1 has 3 queued requests: evicting it must be caught
+    let v = eviction_respects_pins(2, &[1], &[0, 3]).unwrap_err();
+    assert_eq!(
+        v,
+        Violation::PinnedEviction {
+            sat: 2,
+            model: 1,
+            inflight: 3
+        }
+    );
+    assert!(eviction_respects_pins(2, &[0], &[0, 3]).is_ok());
+    assert!(eviction_respects_pins(2, &[], &[9, 9]).is_ok(), "no victims");
+}
+
+#[test]
+fn vanished_request_fires() {
+    let v = requests_conserved(10, 4, 2, 3).unwrap_err();
+    assert!(matches!(v, Violation::Conservation { arrived: 10, .. }));
+    assert!(requests_conserved(10, 4, 3, 3).is_ok());
+    assert!(requests_conserved(0, 0, 0, 0).is_ok());
+    assert!(requests_conserved(5, 3, 3, 0).is_err(), "double-counted");
+}
+
+// ------------------------------------------------------------ the Audit
+// wrapper: enabled it panics, disabled it is inert
+
+#[test]
+#[should_panic(expected = "sim invariant violated")]
+fn enabled_audit_panics_on_backwards_pop() {
+    let mut audit = Audit::new(true);
+    audit.on_pop(10.0);
+    audit.on_pop(3.0);
+}
+
+#[test]
+#[should_panic(expected = "sim invariant violated")]
+fn enabled_audit_panics_on_pinned_eviction() {
+    let audit = Audit::new(true);
+    audit.on_eviction(0, &[2], &[0, 0, 5]);
+}
+
+#[test]
+fn disabled_audit_never_panics() {
+    let mut audit = Audit::new(false);
+    assert!(!audit.enabled());
+    audit.on_pop(10.0);
+    audit.on_pop(3.0); // backwards: ignored
+    audit.on_eviction(0, &[2], &[0, 0, 5]); // pinned: ignored
+}
+
+#[test]
+fn violations_render_debuggable_messages() {
+    let v = invariants::battery_in_bounds(7, -1.5, 80.0).unwrap_err();
+    let msg = v.to_string();
+    assert!(msg.contains("sat 7"), "message was: {msg}");
+    assert!(msg.contains("-1.5"), "message was: {msg}");
+}
+
+// ------------------------------------------------------- end-to-end: a
+// contentious audited run must finish without tripping any check
+
+fn profile(name: &str) -> ModelProfile {
+    ModelProfile::from_alphas(name, &[1000.0, 500.0, 250.0, 100.0, 20.0, 4.0]).unwrap()
+}
+
+#[test]
+fn audited_fleet_run_with_batteries_and_evictions_is_clean() {
+    let profiles = vec![profile("net-a"), profile("net-b")];
+    // budget holds exactly one 200 MB model: alternating models force
+    // fetches, evictions, and pin checks on every satellite
+    let placement = PlacementConfig {
+        policy: PlacementPolicy::Demand,
+        eviction: EvictionPolicy::Lru,
+        budget: Some(Bytes::from_mb(250.0)),
+        artifacts: vec![
+            ModelArtifact::from_profile(0, &profiles[0], Bytes::from_mb(200.0)),
+            ModelArtifact::from_profile(1, &profiles[1], Bytes::from_mb(180.0)),
+        ],
+    };
+    let template = InstanceBuilder::new(profiles[0].clone())
+        .rate(BitsPerSec::from_mbps(100.0))
+        .contact(Seconds::from_hours(8.0), Seconds::from_minutes(6.0));
+    let sats = (0..2)
+        .map(|i| {
+            let contact = PeriodicContact::new(
+                Seconds::from_hours(8.0),
+                Seconds::from_minutes(6.0),
+            )
+            .with_phase(Seconds(i as f64 * 3600.0));
+            SatelliteSpec::new(&format!("sat-{i}"), Box::new(contact)).with_battery(
+                Battery::new(Joules(5.0e5), 0.1),
+                SolarPanel::new(1.0, 0.3, 0.8),
+                0.6,
+            )
+        })
+        .collect();
+    let cfg = FleetSimConfig {
+        template,
+        profiles,
+        sats,
+        routing: RoutingPolicy::LeastLoaded,
+        isl: None,
+        isl_max_hops: 0,
+        telemetry: TelemetryMode::Live,
+        placement,
+        route_cache: true,
+        timing: false,
+        audit: true,
+        horizon: Seconds::from_hours(100_000.0),
+    };
+    let trace: Vec<Request> = (0..12)
+        .map(|i| Request {
+            id: i,
+            arrival: Seconds(600.0 * i as f64),
+            data: Bytes::from_mb(40.0),
+            model: (i % 2) as usize,
+            class: 0,
+        })
+        .collect();
+    let engine = SolverRegistry::engine("ilpb").unwrap();
+    let result = FleetSimulator::new(cfg).run(&trace, &engine).unwrap();
+    // conservation holds (the audit already enforced it; assert anyway
+    // so the test documents the property, not just the absence of panic)
+    let m = &result.metrics;
+    assert_eq!(m.completed() + m.rejected() + m.unfinished, 12);
+    assert!(
+        m.artifact_misses > 0,
+        "alternating models over a one-model budget must miss"
+    );
+}

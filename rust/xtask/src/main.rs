@@ -1,0 +1,109 @@
+//! `cargo xtask` — project tooling for the leo-infer workspace.
+//!
+//! The only subcommand today is `lint`, which runs the determinism
+//! rules from [`rules`] over every `.rs` file under `rust/src` (or a
+//! `--root` override) and exits non-zero on any unallowed violation.
+//! See `docs/LINTS.md` for the rule catalogue and the
+//! `lint:allow(<rule>, reason = "...")` escape hatch.
+
+mod rules;
+mod scan;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => lint(&args[1..]),
+        _ => {
+            eprintln!("usage: cargo xtask lint [--root <src dir>]");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn lint(args: &[String]) -> ExitCode {
+    let mut root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../src");
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => match it.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => {
+                    eprintln!("xtask lint: --root needs a path");
+                    return ExitCode::from(2);
+                }
+            },
+            other => {
+                eprintln!("xtask lint: unknown argument `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let mut files = Vec::new();
+    if let Err(e) = collect_rs(&root, &mut files) {
+        eprintln!("xtask lint: cannot walk {}: {e}", root.display());
+        return ExitCode::from(2);
+    }
+    files.sort();
+
+    let mut violations = 0usize;
+    let mut warnings = 0usize;
+    for path in &files {
+        let rel = path
+            .strip_prefix(&root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = match fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("xtask lint: cannot read {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        };
+        let (found, warns) = rules::lint_file(&rel, &src);
+        for v in &found {
+            println!("{}:{}: [{}] {}", path.display(), v.line, v.rule, v.msg);
+        }
+        for w in &warns {
+            println!("warning: {w}");
+        }
+        violations += found.len();
+        warnings += warns.len();
+    }
+
+    if violations == 0 {
+        println!(
+            "lint: {} files clean ({} warning{})",
+            files.len(),
+            warnings,
+            if warnings == 1 { "" } else { "s" }
+        );
+        ExitCode::SUCCESS
+    } else {
+        println!(
+            "lint: {violations} violation{} across {} files",
+            if violations == 1 { "" } else { "s" },
+            files.len()
+        );
+        ExitCode::FAILURE
+    }
+}
+
+/// Recursively collect `.rs` files under `dir`.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

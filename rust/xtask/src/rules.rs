@@ -1,0 +1,388 @@
+//! The determinism lints (see `docs/LINTS.md` for the full catalogue).
+//!
+//! Four rules, each protecting a bit-identity or no-NaN-panic guarantee
+//! the simulator's regression suite depends on:
+//!
+//! * `hash_iter` — no `HashMap`/`HashSet` in the sources: their
+//!   iteration order is nondeterministic and one stray `for` over a
+//!   hash table can leak into DES event order, routing, metrics, or
+//!   sweep exports. Lookup-only uses are annotated with `lint:allow`.
+//! * `wall_clock` — no `Instant`/`SystemTime`/`thread_rng` outside the
+//!   allowlisted timing harnesses: simulated time must come from the
+//!   event queue, randomness from `util::rng`.
+//! * `float_ord` — no `partial_cmp` in `solver/`, `link/`, `sim/`,
+//!   `coordinator/`: float orderings there must use `f64::total_cmp`
+//!   (or the shared `precedes` helper) so a NaN can never panic or
+//!   reorder a comparator.
+//! * `tx_state` — transmitter state (`tx_free`/`tx_free_at`) may only
+//!   be written through the `route_gen`-bumping setter
+//!   (`HotPath::touch_tx`), so the route cache can never go stale.
+//!
+//! Every rule honours `// lint:allow(<rule>, reason = "...")` on the
+//! same or the preceding line; an allow without a reason is itself a
+//! violation (`allow_syntax`).
+
+use crate::scan::{scan, Allow};
+
+/// The rule names accepted by `lint:allow`.
+pub const RULES: [&str; 4] = ["hash_iter", "wall_clock", "float_ord", "tx_state"];
+
+/// Files (relative to `rust/src`, `/`-separated) where wall-clock and
+/// ambient-randomness sources are legitimate: the RNG itself, logging
+/// timestamps, the CLI front-end, and the opt-in `--timing` harnesses.
+const WALL_CLOCK_ALLOWED_FILES: [&str; 5] = [
+    "util/rng.rs",
+    "util/logging.rs",
+    "main.rs",
+    "sim/fleet.rs",
+    "solver/engine/mod.rs",
+];
+
+/// Directories whose float comparators feed deterministic decisions.
+const FLOAT_ORD_DIRS: [&str; 4] = ["solver/", "link/", "sim/", "coordinator/"];
+
+/// One lint finding, pointing at a file/line pair.
+#[derive(Debug)]
+pub struct Violation {
+    /// Path relative to the lint root, `/`-separated.
+    pub file: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// Rule that fired (`allow_syntax` for malformed directives).
+    pub rule: &'static str,
+    /// Human-readable explanation.
+    pub msg: String,
+}
+
+/// Lint one file. Returns the violations plus non-fatal warnings
+/// (currently: allow directives that excused nothing).
+pub fn lint_file(rel: &str, src: &str) -> (Vec<Violation>, Vec<String>) {
+    let scanned = scan(src);
+    let mut out = Vec::new();
+    let mut used = vec![false; scanned.allows.len()];
+
+    for a in &scanned.allows {
+        if !a.reason_ok {
+            out.push(Violation {
+                file: rel.to_owned(),
+                line: a.line,
+                rule: "allow_syntax",
+                msg: "malformed allow — expected lint:allow(<rule>, reason = \"...\") \
+                      with a non-empty reason"
+                    .to_owned(),
+            });
+        } else if !RULES.contains(&a.rule.as_str()) {
+            out.push(Violation {
+                file: rel.to_owned(),
+                line: a.line,
+                rule: "allow_syntax",
+                msg: format!("unknown rule `{}` in lint:allow", a.rule),
+            });
+        }
+    }
+
+    let wall_clock_applies = !WALL_CLOCK_ALLOWED_FILES.contains(&rel);
+    let float_ord_applies = FLOAT_ORD_DIRS.iter().any(|d| rel.starts_with(d));
+    let tx_state_applies = rel.starts_with("sim/") && rel != "sim/entities.rs";
+
+    for (idx, text) in scanned.lines.iter().enumerate() {
+        let line = idx + 1;
+        if (has_token(text, "HashMap") || has_token(text, "HashSet"))
+            && !allowed(&scanned.allows, &mut used, "hash_iter", line)
+        {
+            out.push(Violation {
+                file: rel.to_owned(),
+                line,
+                rule: "hash_iter",
+                msg: "HashMap/HashSet iteration order is nondeterministic; use \
+                      BTreeMap/BTreeSet, sort before iterating, or annotate a \
+                      lookup-only use"
+                    .to_owned(),
+            });
+        }
+        if wall_clock_applies {
+            for tok in ["Instant", "SystemTime", "thread_rng"] {
+                if has_token(text, tok) {
+                    if !allowed(&scanned.allows, &mut used, "wall_clock", line) {
+                        out.push(Violation {
+                            file: rel.to_owned(),
+                            line,
+                            rule: "wall_clock",
+                            msg: format!(
+                                "`{tok}` outside the allowlist; simulated time comes \
+                                 from the event queue, randomness from util::rng"
+                            ),
+                        });
+                    }
+                    break;
+                }
+            }
+        }
+        if float_ord_applies
+            && has_partial_cmp_use(text)
+            && !allowed(&scanned.allows, &mut used, "float_ord", line)
+        {
+            out.push(Violation {
+                file: rel.to_owned(),
+                line,
+                rule: "float_ord",
+                msg: "float ordering via partial_cmp is a NaN panic/ordering hazard \
+                      here; use f64::total_cmp"
+                    .to_owned(),
+            });
+        }
+        if tx_state_applies
+            && has_tx_assignment(text)
+            && !allowed(&scanned.allows, &mut used, "tx_state", line)
+        {
+            out.push(Violation {
+                file: rel.to_owned(),
+                line,
+                rule: "tx_state",
+                msg: "transmitter state must be mutated through the route_gen-bumping \
+                      setter (HotPath::touch_tx) so cached routes are invalidated"
+                    .to_owned(),
+            });
+        }
+    }
+
+    let mut warnings = Vec::new();
+    for (i, a) in scanned.allows.iter().enumerate() {
+        if a.reason_ok && RULES.contains(&a.rule.as_str()) && !used[i] {
+            warnings.push(format!(
+                "{rel}:{}: lint:allow({}) excuses nothing (stale directive?)",
+                a.line, a.rule
+            ));
+        }
+    }
+    (out, warnings)
+}
+
+/// Does any well-formed allow for `rule` cover `line`? Marks it used.
+fn allowed(allows: &[Allow], used: &mut [bool], rule: &str, line: usize) -> bool {
+    let mut hit = false;
+    for (i, a) in allows.iter().enumerate() {
+        if a.reason_ok && a.rule == rule && (a.line == line || a.line + 1 == line) {
+            used[i] = true;
+            hit = true;
+        }
+    }
+    hit
+}
+
+/// Whole-word occurrence check: `tok` bounded by non-identifier bytes.
+fn has_token(text: &str, tok: &str) -> bool {
+    !token_starts(text, tok).is_empty()
+}
+
+/// Byte offsets of whole-word occurrences of `tok` in `text`.
+fn token_starts(text: &str, tok: &str) -> Vec<usize> {
+    let bytes = text.as_bytes();
+    let mut found = Vec::new();
+    let mut from = 0usize;
+    while let Some(pos) = text[from..].find(tok) {
+        let start = from + pos;
+        let end = start + tok.len();
+        let left_ok = start == 0 || !is_ident(bytes[start - 1]);
+        let right_ok = end >= bytes.len() || !is_ident(bytes[end]);
+        if left_ok && right_ok {
+            found.push(start);
+        }
+        from = start + 1;
+    }
+    found
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// A `partial_cmp` token that is a *use*, not the `fn partial_cmp`
+/// definition inside a `PartialOrd` impl.
+fn has_partial_cmp_use(text: &str) -> bool {
+    token_starts(text, "partial_cmp").iter().any(|&start| {
+        let head = text[..start].trim_end();
+        let is_def = head.ends_with("fn")
+            && (head.len() == 2 || !is_ident(head.as_bytes()[head.len() - 3]));
+        !is_def
+    })
+}
+
+/// A write to `tx_free`/`tx_free_at`: the token followed (on the same
+/// line) by an assignment operator — a bare `=` or a compound `+=`-style
+/// one, but not `==`, `<=`, `>=`, `!=`, or `=>`.
+fn has_tx_assignment(text: &str) -> bool {
+    let bytes = text.as_bytes();
+    for tok in ["tx_free", "tx_free_at"] {
+        for &start in &token_starts(text, tok) {
+            let mut p = start + tok.len();
+            while p < bytes.len() {
+                if bytes[p] == b'=' {
+                    let prev = bytes[p - 1];
+                    let next = bytes.get(p + 1).copied();
+                    let comparison = matches!(prev, b'=' | b'!' | b'<' | b'>')
+                        || matches!(next, Some(b'=') | Some(b'>'));
+                    if !comparison {
+                        return true;
+                    }
+                }
+                p += 1;
+            }
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_fired(rel: &str, src: &str) -> Vec<&'static str> {
+        lint_file(rel, src).0.into_iter().map(|v| v.rule).collect()
+    }
+
+    // --- hash_iter ------------------------------------------------------
+
+    #[test]
+    fn hash_iter_flags_hashmap_and_hashset() {
+        assert_eq!(
+            rules_fired("exp/grid.rs", "use std::collections::HashMap;\n"),
+            vec!["hash_iter"]
+        );
+        assert_eq!(
+            rules_fired("sim/fleet.rs", "let s: HashSet<u64> = HashSet::new();\n"),
+            vec!["hash_iter"]
+        );
+    }
+
+    #[test]
+    fn hash_iter_passes_btreemap_and_comments() {
+        assert!(rules_fired("exp/grid.rs", "use std::collections::BTreeMap;\n").is_empty());
+        assert!(rules_fired("exp/grid.rs", "// a HashMap would be wrong here\n").is_empty());
+        let lowercase_path = "use std::collections::hash_map::DefaultHasher;\n";
+        assert!(rules_fired("util/hash.rs", lowercase_path).is_empty());
+    }
+
+    #[test]
+    fn hash_iter_allow_with_reason_suppresses() {
+        let src = "use std::collections::HashMap; // lint:allow(hash_iter, reason = \"O(1) \
+                   lookups only; the intrusive list provides order\")\n";
+        let (violations, warnings) = lint_file("util/lru.rs", src);
+        assert!(violations.is_empty());
+        assert!(warnings.is_empty());
+    }
+
+    #[test]
+    fn allow_without_reason_is_a_violation() {
+        let src = "use std::collections::HashMap; // lint:allow(hash_iter)\n";
+        let fired = rules_fired("util/lru.rs", src);
+        assert!(fired.contains(&"allow_syntax"));
+        assert!(fired.contains(&"hash_iter"), "a reasonless allow must not suppress");
+    }
+
+    #[test]
+    fn allow_with_unknown_rule_is_a_violation() {
+        let src = "// lint:allow(no_such_rule, reason = \"nope\")\nlet x = 1;\n";
+        assert_eq!(rules_fired("sim/fleet.rs", src), vec!["allow_syntax"]);
+    }
+
+    #[test]
+    fn unused_allow_warns() {
+        let src = "// lint:allow(hash_iter, reason = \"left over\")\nlet x = 1;\n";
+        let (violations, warnings) = lint_file("sim/fleet.rs", src);
+        assert!(violations.is_empty());
+        assert_eq!(warnings.len(), 1);
+    }
+
+    // --- wall_clock -----------------------------------------------------
+
+    #[test]
+    fn wall_clock_flags_instant_outside_allowlist() {
+        assert_eq!(
+            rules_fired("sim/engine.rs", "let t0 = Instant::now();\n"),
+            vec!["wall_clock"]
+        );
+        assert_eq!(
+            rules_fired("coordinator/server.rs", "let r = thread_rng();\n"),
+            vec!["wall_clock"]
+        );
+        assert_eq!(
+            rules_fired("exp/grid.rs", "let t = std::time::SystemTime::now();\n"),
+            vec!["wall_clock"]
+        );
+    }
+
+    #[test]
+    fn wall_clock_passes_allowlisted_files_and_strings() {
+        assert!(rules_fired("main.rs", "let t0 = Instant::now();\n").is_empty());
+        assert!(rules_fired("util/rng.rs", "let r = thread_rng();\n").is_empty());
+        assert!(rules_fired("sim/fleet.rs", "let t0 = Instant::now();\n").is_empty());
+        assert!(rules_fired("sim/engine.rs", "let s = \"Instant::now\";\n").is_empty());
+    }
+
+    #[test]
+    fn wall_clock_allow_on_previous_line_suppresses() {
+        let src = "// lint:allow(wall_clock, reason = \"test-only wait loop\")\n\
+                   let deadline = std::time::Instant::now();\n";
+        let (violations, warnings) = lint_file("coordinator/server.rs", src);
+        assert!(violations.is_empty());
+        assert!(warnings.is_empty());
+    }
+
+    // --- float_ord ------------------------------------------------------
+
+    #[test]
+    fn float_ord_flags_partial_cmp_in_watched_dirs() {
+        let src = "xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n";
+        assert_eq!(rules_fired("solver/bnb.rs", src), vec!["float_ord"]);
+        assert_eq!(rules_fired("link/route.rs", src), vec!["float_ord"]);
+        assert_eq!(rules_fired("coordinator/router.rs", src), vec!["float_ord"]);
+    }
+
+    #[test]
+    fn float_ord_passes_total_cmp_definitions_and_other_dirs() {
+        assert!(rules_fired("sim/engine.rs", "xs.sort_by(|a, b| a.total_cmp(b));\n").is_empty());
+        let def = "fn partial_cmp(&self, other: &Self) -> Option<Ordering> {\n";
+        assert!(rules_fired("sim/engine.rs", def).is_empty(), "trait impl is a definition");
+        let usage = "xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n";
+        assert!(rules_fired("util/stats.rs", usage).is_empty(), "outside watched dirs");
+    }
+
+    // --- tx_state -------------------------------------------------------
+
+    #[test]
+    fn tx_state_flags_direct_writes() {
+        let plain = "self.tx_free[sat] = free_at;\n";
+        assert_eq!(rules_fired("sim/fleet.rs", plain), vec!["tx_state"]);
+        let field = "state.tx_free_at = 0.0;\n";
+        assert_eq!(rules_fired("sim/runner.rs", field), vec!["tx_state"]);
+        let compound = "hot.tx_free[s] += 1.0;\n";
+        assert_eq!(
+            rules_fired("sim/fleet.rs", compound),
+            vec!["tx_state"],
+            "compound assignment is still a write"
+        );
+    }
+
+    #[test]
+    fn tx_state_passes_reads_comparisons_and_entities() {
+        assert!(rules_fired("sim/fleet.rs", "let t = now.max(hot.tx_free[sat]);\n").is_empty());
+        let cmp = "if a.tx_free_at <= b.tx_free_at { f(); }\n";
+        assert!(rules_fired("sim/fleet.rs", cmp).is_empty());
+        assert!(rules_fired("sim/fleet.rs", "let eq = x.tx_free_at == y;\n").is_empty());
+        assert!(
+            rules_fired("sim/entities.rs", "self.tx_free_at = now;\n").is_empty(),
+            "the owning struct may initialise its own field"
+        );
+        assert!(rules_fired("link/route.rs", "peer.tx_free_at = 0.0;\n").is_empty());
+    }
+
+    #[test]
+    fn tx_state_allow_suppresses_the_sanctioned_setter() {
+        let src = "// lint:allow(tx_state, reason = \"this IS the setter\")\n\
+                   self.tx_free[sat] = free_at;\n";
+        let (violations, warnings) = lint_file("sim/fleet.rs", src);
+        assert!(violations.is_empty());
+        assert!(warnings.is_empty());
+    }
+}

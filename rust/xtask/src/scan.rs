@@ -1,0 +1,346 @@
+//! Comment/string-aware source scanner for the determinism lints.
+//!
+//! The lints in [`crate::rules`] are token-level, so the scanner's job is
+//! to (1) blank out everything that is *not* code — line comments, block
+//! comments (nested), string literals (including raw strings and byte
+//! strings), and char literals — while preserving line structure, and
+//! (2) extract `lint:allow(<rule>, reason = "...")` directives from the
+//! comments it blanks. Lifetimes (`'a`) are kept as code so a stray
+//! apostrophe never swallows the rest of a line.
+//!
+//! This is deliberately not a parser: the rules only need identifier
+//! tokens with correct comment/string classification, and a hand-rolled
+//! scanner keeps the crate dependency-free for the offline build.
+
+/// A `lint:allow` directive extracted from a comment.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    /// Rule name inside the parentheses (empty when malformed).
+    pub rule: String,
+    /// 1-based line the directive's comment starts on. The directive
+    /// covers this line and the next, so it works both as a trailing
+    /// comment and as a comment line above the code it excuses.
+    pub line: usize,
+    /// Whether the directive carries a non-empty `reason = "..."`.
+    pub reason_ok: bool,
+}
+
+/// One scanned file: code-only lines plus the allow directives found.
+#[derive(Debug)]
+pub struct Scanned {
+    /// Source lines with comments/strings/chars blanked to spaces.
+    pub lines: Vec<String>,
+    /// Every `lint:allow` directive, malformed ones included.
+    pub allows: Vec<Allow>,
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+/// Strip comments and literals from `src`, collecting allow directives.
+pub fn scan(src: &str) -> Scanned {
+    let bytes = src.as_bytes();
+    let mut out: Vec<u8> = Vec::with_capacity(bytes.len());
+    let mut allows = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    while i < bytes.len() {
+        let b = bytes[i];
+        // Line comment: blank it, but mine it for allow directives.
+        if b == b'/' && bytes.get(i + 1) == Some(&b'/') {
+            let start = i;
+            while i < bytes.len() && bytes[i] != b'\n' {
+                out.push(b' ');
+                i += 1;
+            }
+            if let Some(a) = parse_allow(&src[start..i], line) {
+                allows.push(a);
+            }
+            continue;
+        }
+        // Block comment (Rust block comments nest).
+        if b == b'/' && bytes.get(i + 1) == Some(&b'*') {
+            let mut depth = 1usize;
+            out.extend_from_slice(b"  ");
+            i += 2;
+            while i < bytes.len() && depth > 0 {
+                if bytes[i] == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                    depth += 1;
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if bytes[i] == b'*' && bytes.get(i + 1) == Some(&b'/') {
+                    depth -= 1;
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else {
+                    if bytes[i] == b'\n' {
+                        out.push(b'\n');
+                        line += 1;
+                    } else {
+                        out.push(b' ');
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw (byte) string: r"..", r#".."#, br#".."# — only when the
+        // prefix is not the tail of a longer identifier.
+        if (b == b'r' || b == b'b') && (i == 0 || !is_ident(bytes[i - 1])) {
+            if let Some((open_len, hashes)) = raw_string_open(&bytes[i..]) {
+                out.resize(out.len() + open_len, b' ');
+                i += open_len;
+                loop {
+                    if i >= bytes.len() {
+                        break;
+                    }
+                    if bytes[i] == b'"' && closes_raw(&bytes[i + 1..], hashes) {
+                        out.resize(out.len() + 1 + hashes, b' ');
+                        i += 1 + hashes;
+                        break;
+                    }
+                    if bytes[i] == b'\n' {
+                        out.push(b'\n');
+                        line += 1;
+                    } else {
+                        out.push(b' ');
+                    }
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        // Ordinary (or byte) string literal, escapes honoured.
+        if b == b'"' {
+            out.push(b' ');
+            i += 1;
+            while i < bytes.len() {
+                if bytes[i] == b'\\' && i + 1 < bytes.len() {
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if bytes[i] == b'"' {
+                    out.push(b' ');
+                    i += 1;
+                    break;
+                } else {
+                    if bytes[i] == b'\n' {
+                        out.push(b'\n');
+                        line += 1;
+                    } else {
+                        out.push(b' ');
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Apostrophe: lifetime (keep as code) or char literal (blank).
+        if b == b'\'' {
+            if is_lifetime(&bytes[i + 1..]) {
+                out.push(b'\'');
+                i += 1;
+                continue;
+            }
+            out.push(b' ');
+            i += 1;
+            while i < bytes.len() {
+                if bytes[i] == b'\\' && i + 1 < bytes.len() {
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if bytes[i] == b'\'' {
+                    out.push(b' ');
+                    i += 1;
+                    break;
+                } else {
+                    out.push(b' ');
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        if b == b'\n' {
+            line += 1;
+        }
+        out.push(b);
+        i += 1;
+    }
+
+    let text = String::from_utf8_lossy(&out).into_owned();
+    Scanned {
+        lines: text.lines().map(str::to_owned).collect(),
+        allows,
+    }
+}
+
+/// `bytes` starts right after an apostrophe: is this a lifetime?
+/// A lifetime is an identifier not followed by a closing quote
+/// (so `'a'` is a char literal but `'a>` / `'a,` are lifetimes).
+fn is_lifetime(bytes: &[u8]) -> bool {
+    match bytes.first() {
+        Some(&b) if is_ident_start(b) => {}
+        _ => return false,
+    }
+    let mut j = 1;
+    while j < bytes.len() && is_ident(bytes[j]) {
+        j += 1;
+    }
+    bytes.get(j) != Some(&b'\'')
+}
+
+/// Match a raw-string opener at the start of `bytes` (`r`, `br` plus
+/// zero or more `#` then `"`). Returns (prefix length, hash count).
+fn raw_string_open(bytes: &[u8]) -> Option<(usize, usize)> {
+    let mut j = 0usize;
+    if bytes.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    if bytes.get(j) != Some(&b'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while bytes.get(j + hashes) == Some(&b'#') {
+        hashes += 1;
+    }
+    if bytes.get(j + hashes) == Some(&b'"') {
+        Some((j + hashes + 1, hashes))
+    } else {
+        None
+    }
+}
+
+/// `bytes` starts right after a `"`: do `hashes` hash marks follow?
+fn closes_raw(bytes: &[u8], hashes: usize) -> bool {
+    bytes.len() >= hashes && bytes[..hashes].iter().all(|&b| b == b'#')
+}
+
+/// Parse a `lint:allow(<rule>, reason = "...")` directive out of one
+/// comment. Returns `None` when the comment has no directive at all;
+/// malformed directives come back with `reason_ok: false` so the lint
+/// driver can reject them (an allow without a reason is itself a
+/// violation). Reasons must not contain `)`.
+fn parse_allow(comment: &str, line: usize) -> Option<Allow> {
+    let idx = comment.find("lint:allow")?;
+    let rest = &comment[idx + "lint:allow".len()..];
+    let malformed = Some(Allow {
+        rule: String::new(),
+        line,
+        reason_ok: false,
+    });
+    let Some(open) = rest.strip_prefix('(') else {
+        return malformed;
+    };
+    let Some((body, _)) = open.split_once(')') else {
+        return malformed;
+    };
+    let (rule, reason) = match body.split_once(',') {
+        Some((r, rest)) => (r.trim(), Some(rest.trim())),
+        None => (body.trim(), None),
+    };
+    if rule.is_empty() || !rule.bytes().all(is_ident) {
+        return malformed;
+    }
+    let reason_ok = reason
+        .and_then(|r| r.strip_prefix("reason"))
+        .map(|r| r.trim_start())
+        .and_then(|r| r.strip_prefix('='))
+        .map(|r| r.trim_start())
+        .and_then(|r| r.strip_prefix('"'))
+        .and_then(|r| r.split_once('"'))
+        .is_some_and(|(text, _)| !text.trim().is_empty());
+    Some(Allow {
+        rule: rule.to_owned(),
+        line,
+        reason_ok,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code(src: &str) -> String {
+        scan(src).lines.join("\n")
+    }
+
+    #[test]
+    fn line_comments_are_blanked() {
+        let s = code("let x = 1; // HashMap here\nlet y = 2;");
+        assert!(!s.contains("HashMap"));
+        assert!(s.contains("let x = 1;"));
+        assert!(s.contains("let y = 2;"));
+    }
+
+    #[test]
+    fn nested_block_comments_are_blanked() {
+        let s = code("a /* outer /* Instant */ still comment */ b");
+        assert!(!s.contains("Instant"));
+        assert!(!s.contains("still"));
+        assert!(s.starts_with('a'));
+        assert!(s.trim_end().ends_with('b'));
+    }
+
+    #[test]
+    fn strings_and_raw_strings_are_blanked() {
+        let s = code("let a = \"Instant::now\"; let b = r#\"thread_rng \"x\" \"#; f(a)");
+        assert!(!s.contains("Instant"));
+        assert!(!s.contains("thread_rng"));
+        assert!(s.contains("f(a)"));
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        let s = code("let a = \"x\\\"SystemTime\"; g()");
+        assert!(!s.contains("SystemTime"));
+        assert!(s.contains("g()"));
+    }
+
+    #[test]
+    fn char_literals_are_blanked_but_lifetimes_survive() {
+        let s = code("fn f<'a>(x: &'a str) { let q = '\"'; let n = '\\n'; }");
+        assert!(s.contains("<'a>"));
+        assert!(s.contains("&'a str"));
+        assert!(!s.contains('"'));
+        let s2 = code("let c = 'I'; Instant");
+        assert!(s2.contains("Instant"));
+        assert!(!s2.contains("'I'"));
+    }
+
+    #[test]
+    fn line_structure_is_preserved() {
+        let scanned = scan("a\n/* two\nlines */\nb\n");
+        assert_eq!(scanned.lines.len(), 4);
+        assert_eq!(scanned.lines[3].trim(), "b");
+    }
+
+    #[test]
+    fn allow_with_reason_parses() {
+        let scanned = scan("// lint:allow(hash_iter, reason = \"lookup only\")\nuse x;\n");
+        assert_eq!(scanned.allows.len(), 1);
+        let a = &scanned.allows[0];
+        assert_eq!(a.rule, "hash_iter");
+        assert_eq!(a.line, 1);
+        assert!(a.reason_ok);
+    }
+
+    #[test]
+    fn allow_without_reason_is_flagged_malformed() {
+        let scanned = scan("let x = 1; // lint:allow(wall_clock)\n");
+        assert_eq!(scanned.allows.len(), 1);
+        assert!(!scanned.allows[0].reason_ok);
+        let scanned = scan("// lint:allow(wall_clock, reason = \"\")\n");
+        assert!(!scanned.allows[0].reason_ok);
+    }
+
+    #[test]
+    fn trailing_allow_records_its_own_line() {
+        let scanned = scan("line1\nlet m = x; // lint:allow(tx_state, reason = \"setter\")\n");
+        assert_eq!(scanned.allows[0].line, 2);
+    }
+}
