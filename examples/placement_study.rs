@@ -102,6 +102,7 @@ fn fleet(routing: RoutingPolicy, placement: PlacementConfig) -> FleetSimConfig {
         // the study doubles as CI's audit-enabled fleet scenario: it
         // exercises stores, evictions, and pins under real contention
         audit: true,
+        trace: None,
         horizon: Seconds::from_hours(100_000.0),
     }
 }

@@ -1,0 +1,126 @@
+//! Trace study: where does the latency of a contact-starved fleet go?
+//!
+//! ```bash
+//! cargo run --release --example trace_study            # full 48 h study
+//! cargo run --release --example trace_study -- --smoke # CI-sized run
+//! ```
+//!
+//! A Walker 8/4/1 whose satellites see a ground station for two minutes
+//! every three hours: captures finish processing quickly, then sit in
+//! the transmitter queue waiting for a pass. The aggregate metrics show
+//! the symptom (a brutal P99); the trace shows the *cause*. This study
+//! arms the [`leo_infer::obs`] recorder, replays the scenario, folds the
+//! captured spans into per-phase totals ([`Trace::phase_totals`]), and
+//! asserts the diagnosis: downlink transmission — queueing for a contact
+//! window plus the transfer itself — dominates every other phase.
+//!
+//! The run also writes both exporter formats (`trace_study.jsonl`,
+//! `trace_study_chrome.json`), re-validates them through
+//! [`leo_infer::obs::validate`], and cross-checks the trace against the
+//! metrics: exactly one `Done` mark per completed request. Load the
+//! Chrome file in `chrome://tracing` or [Perfetto](https://ui.perfetto.dev)
+//! to see the per-satellite tracks — docs/OBSERVABILITY.md walks through
+//! the picture.
+
+use leo_infer::config::FleetScenario;
+use leo_infer::dnn::profile::ModelProfile;
+use leo_infer::obs::{TraceEvent, TraceFormat};
+use leo_infer::sim::fleet::FleetSimulator;
+use leo_infer::solver::SolverRegistry;
+use leo_infer::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    leo_infer::util::logging::init();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let hours = if smoke { 12.0 } else { 48.0 };
+
+    // Walker 8/4/1, contact-starved: a 2-minute pass every 3 hours
+    let mut scen = FleetScenario::walker_631();
+    scen.name = "walker-8-4-1-starved".to_string();
+    scen.sats = 8;
+    scen.planes = 4;
+    scen.phasing = 1;
+    scen.base.t_cyc_hours = 3.0;
+    scen.base.t_con_minutes = 2.0;
+    scen.horizon_hours = hours;
+    scen.interarrival_s = 600.0;
+    scen.data_gb_lo = 0.2;
+    scen.data_gb_hi = 2.0;
+    scen.trace = true;
+    scen.trace_sample_every_s = 600.0;
+
+    let mut rng = Pcg64::seeded(0x17ACE);
+    let workload = scen.workload()?.generate(scen.horizon(), &mut rng);
+    let profile = ModelProfile::sampled(10, &mut rng);
+    let engine = SolverRegistry::engine("ilpb")?;
+    let result = FleetSimulator::new(scen.sim_config(profile)?).run(&workload, &engine)?;
+    let m = &result.metrics;
+    let trace = result.trace.expect("scenario armed the recorder");
+
+    println!(
+        "trace study{}: Walker 8/4/1, {:.0}-min pass every {:.0} h, {} captures over {:.0} h\n",
+        if smoke { " (smoke)" } else { "" },
+        scen.base.t_con_minutes,
+        scen.base.t_cyc_hours,
+        workload.len(),
+        hours,
+    );
+    println!(
+        "outcome     : {} completed, {} rejected, {} unfinished — mean lat {:.0} s, p99 {:.0} s",
+        m.completed(),
+        m.rejected(),
+        m.unfinished,
+        m.mean_latency().value(),
+        m.latency_p99().value()
+    );
+
+    // fold the spans into per-phase sim-time totals, largest first
+    let totals = trace.phase_totals();
+    println!("\n{:<14} {:>14} {:>9}", "phase", "sim-time (s)", "share");
+    let sum: f64 = totals.iter().map(|(_, t)| t).sum();
+    for (phase, t) in &totals {
+        println!("{phase:<14} {t:>14.0} {:>8.1}%", 100.0 * t / sum.max(1e-12));
+    }
+    let (dominant, dominant_s) = totals.first().expect("a run this size records spans");
+    println!("\ndominant phase: {dominant} ({dominant_s:.0} s of sim time)");
+
+    // the diagnosis this study exists to assert: transmission — waiting
+    // for a contact window plus the transfer — dominates a starved fleet
+    anyhow::ensure!(
+        dominant == "tx" || dominant == "tx_wait",
+        "expected the downlink phase to dominate a contact-starved fleet, got `{dominant}`"
+    );
+    // trace ↔ metrics cross-check: one Done mark per completed request
+    let done = trace.count(|e| matches!(e, TraceEvent::Done { .. }));
+    anyhow::ensure!(
+        done as u64 == m.completed(),
+        "{done} Done marks for {} completions",
+        m.completed()
+    );
+    // the gauge sampler ran: 600 s cadence over the whole horizon
+    let gauges = trace.count(|e| matches!(e, TraceEvent::Gauge { .. }));
+    anyhow::ensure!(gauges > 0, "gauge sampling was armed but recorded nothing");
+
+    // write both export formats and re-validate them through the same
+    // checker CI uses (`leo-infer trace-validate`)
+    for (path, format) in [
+        ("trace_study.jsonl", TraceFormat::Jsonl),
+        ("trace_study_chrome.json", TraceFormat::Chrome),
+    ] {
+        trace.write(path, format)?;
+        let text = std::fs::read_to_string(path)?;
+        let (detected, summary) = leo_infer::obs::validate(&text)?;
+        anyhow::ensure!(detected == format, "{path}: detected {:?}", detected);
+        println!(
+            "wrote {path}: {} events ({} spans, {} marks, {} gauges) — schema-valid {}",
+            summary.events,
+            summary.spans,
+            summary.marks,
+            summary.gauges,
+            format.as_str()
+        );
+    }
+
+    println!("\nOK: downlink transmission dominates the contact-starved fleet's latency.");
+    Ok(())
+}

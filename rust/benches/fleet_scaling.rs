@@ -224,6 +224,16 @@ fn main() {
         Ok(()) => println!("\nwrote BENCH_fleet.json"),
         Err(e) => println!("\nwarning: could not write BENCH_fleet.json: {e}"),
     }
+    // Smoke runs (the CI path, `cargo bench` runs from rust/) also drop a
+    // copy at the repo root, where the committed baseline lives — CI then
+    // diffs the two with `leo-infer bench-schema` (shape only, never the
+    // machine-dependent numbers).
+    if smoke {
+        match std::fs::write("../BENCH_fleet.json", report.to_string_pretty()) {
+            Ok(()) => println!("wrote ../BENCH_fleet.json (repo-root baseline candidate)"),
+            Err(e) => println!("warning: could not write ../BENCH_fleet.json: {e}"),
+        }
+    }
 
     println!(
         "\nOK: N=1 matches the single-satellite runner's cost; larger fleets \

@@ -18,6 +18,7 @@ use crate::dnn::profile::ModelProfile;
 use crate::energy::battery::Battery;
 use crate::energy::solar::SolarPanel;
 use crate::link::isl::{IslMode, IslTopology};
+use crate::obs::TraceConfig;
 use crate::orbit::constellation::WalkerPattern;
 use crate::orbit::contact::ContactSchedule;
 use crate::orbit::eclipse::eclipse_fraction;
@@ -359,6 +360,14 @@ pub struct FleetScenario {
     pub data_gb_hi: f64,
     /// Simulated horizon, hours.
     pub horizon_hours: f64,
+    // --- observability ---
+    /// Record a sim-time trace ([`crate::obs`]) during the run, returned
+    /// on [`crate::sim::FleetResult::trace`]. Off by default — tracing
+    /// never changes a run's outcome, but recording costs memory.
+    pub trace: bool,
+    /// Cadence of per-satellite gauge samples in the trace, sim seconds
+    /// (`0` = no gauge samples). Ignored unless [`FleetScenario::trace`].
+    pub trace_sample_every_s: f64,
 }
 
 impl FleetScenario {
@@ -398,6 +407,8 @@ impl FleetScenario {
             data_gb_lo: 0.5,
             data_gb_hi: 8.0,
             horizon_hours: 48.0,
+            trace: false,
+            trace_sample_every_s: 0.0,
         }
     }
 
@@ -446,6 +457,15 @@ impl FleetScenario {
     /// The simulated horizon in seconds.
     pub fn horizon(&self) -> Seconds {
         Seconds::from_hours(self.horizon_hours)
+    }
+
+    /// The [`TraceConfig`] this scenario asks for (`None` when
+    /// [`FleetScenario::trace`] is off).
+    pub fn trace_config(&self) -> Option<TraceConfig> {
+        self.trace.then(|| TraceConfig {
+            sample_every: Seconds(self.trace_sample_every_s),
+            ..TraceConfig::default()
+        })
     }
 
     /// The capture workload this scenario describes. Errors on degenerate
@@ -565,6 +585,7 @@ impl FleetScenario {
             // / `--audit on`); neither is a scenario property
             timing: false,
             audit: false,
+            trace: self.trace_config(),
             horizon: self.horizon(),
         })
     }
@@ -605,6 +626,8 @@ impl FleetScenario {
             ("data_gb_lo", Json::num(self.data_gb_lo)),
             ("data_gb_hi", Json::num(self.data_gb_hi)),
             ("horizon_hours", Json::num(self.horizon_hours)),
+            ("trace", Json::Bool(self.trace)),
+            ("trace_sample_every_s", Json::num(self.trace_sample_every_s)),
         ])
     }
 
@@ -651,6 +674,8 @@ impl FleetScenario {
             data_gb_lo: v.f64_or("data_gb_lo", d.data_gb_lo)?,
             data_gb_hi: v.f64_or("data_gb_hi", d.data_gb_hi)?,
             horizon_hours: v.f64_or("horizon_hours", d.horizon_hours)?,
+            trace: v.bool_or("trace", d.trace)?,
+            trace_sample_every_s: v.f64_or("trace_sample_every_s", d.trace_sample_every_s)?,
         };
         // a scenario whose workload cannot be sampled must fail at parse
         // time, not NaN-sample mid-run — and unknown placement axis names
@@ -751,9 +776,15 @@ mod tests {
         f.placement = "demand".to_string();
         f.eviction = "lfu".to_string();
         f.model_weights_mb = 120.0;
+        f.trace = true;
+        f.trace_sample_every_s = 600.0;
         f.base = Scenario::transmission_dominant();
         let back = FleetScenario::from_json(&f.to_json()).unwrap();
         assert_eq!(f, back);
+        // the trace fields arm the sim config
+        let tc = back.trace_config().expect("trace on");
+        assert_eq!(tc.sample_every, Seconds(600.0));
+        assert_eq!(FleetScenario::walker_631().trace_config(), None);
     }
 
     #[test]

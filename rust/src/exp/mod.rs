@@ -25,4 +25,4 @@ pub mod runner;
 
 pub use aggregate::{comparison_table, csv_header, csv_row, group_by, to_csv, to_json, AxisGroup};
 pub use grid::{Axes, Cell, SweepSpec, WalkerAxis, AXIS_NAMES};
-pub use runner::{default_threads, run_cell, run_sweep, CellResult, SweepResult};
+pub use runner::{default_threads, run_cell, run_cell_traced, run_sweep, CellResult, SweepResult};

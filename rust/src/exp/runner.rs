@@ -16,6 +16,7 @@
 
 use super::grid::{Cell, SweepSpec};
 use crate::dnn::profile::ModelProfile;
+use crate::obs::{Trace, TraceConfig};
 use crate::sim::fleet::FleetSimulator;
 use crate::solver::SolverRegistry;
 use crate::util::rng::Pcg64;
@@ -114,23 +115,54 @@ pub struct SweepResult {
     pub cells: Vec<CellResult>,
 }
 
-/// Run one cell start to finish. Fully self-contained and deterministic:
-/// the trace and sampled profile derive from `cell.seed`, the engine and
-/// simulator are fresh. Re-running any cell standalone from its reported
-/// seed reproduces its exported row exactly.
-pub fn run_cell(cell: &Cell) -> anyhow::Result<CellResult> {
+impl SweepResult {
+    /// Index of the cell with the highest P99 latency, or `None` for an
+    /// empty sweep. Ties keep the lowest index, and the scan compares
+    /// with [`f64::total_cmp`], so the answer is deterministic across
+    /// runs and thread counts — it drives `--worst-cell-trace`, which
+    /// re-runs the chosen cell standalone with tracing on.
+    pub fn worst_p99_cell(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, c) in self.cells.iter().enumerate() {
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    c.p99_latency_s().total_cmp(&self.cells[b].p99_latency_s())
+                        == std::cmp::Ordering::Greater
+                }
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        best
+    }
+}
+
+/// Shared body of [`run_cell`] / [`run_cell_traced`]: identical except
+/// for the optional trace-recorder override, so the traced re-run of a
+/// cell reproduces the untraced result bit for bit.
+fn run_cell_inner(
+    cell: &Cell,
+    trace_cfg: Option<TraceConfig>,
+) -> anyhow::Result<(CellResult, Option<Trace>)> {
     let scen = &cell.scenario;
     let mut rng = Pcg64::seeded(cell.seed);
-    let trace = scen.workload()?.generate(scen.horizon(), &mut rng);
+    let workload = scen.workload()?.generate(scen.horizon(), &mut rng);
     let profile = ModelProfile::sampled(scen.base.depth, &mut rng);
     let engine = SolverRegistry::engine(&cell.solver)?;
-    let sim = FleetSimulator::new(scen.sim_config(profile)?);
-    let result = sim.run(&trace, &engine)?;
+    let mut cfg = scen.sim_config(profile)?;
+    if let Some(tc) = trace_cfg {
+        cfg.trace = Some(tc);
+    }
+    let sim = FleetSimulator::new(cfg);
+    let mut result = sim.run(&workload, &engine)?;
+    let trace = result.trace.take();
     let m = &result.metrics;
     let stats = engine.stats();
-    Ok(CellResult {
+    let cell_result = CellResult {
         cell: cell.clone(),
-        submitted: trace.len() as u64,
+        submitted: workload.len() as u64,
         completed: m.completed(),
         rejected_admission: m.rejected_admission,
         rejected_transmit: m.rejected_transmit,
@@ -152,7 +184,27 @@ pub fn run_cell(cell: &Cell) -> anyhow::Result<CellResult> {
         artifact_misses: m.artifact_misses,
         evictions: m.evictions,
         weight_gb_in: m.weight_bytes_in.gb(),
-    })
+    };
+    Ok((cell_result, trace))
+}
+
+/// Run one cell start to finish. Fully self-contained and deterministic:
+/// the workload and sampled profile derive from `cell.seed`, the engine
+/// and simulator are fresh. Re-running any cell standalone from its
+/// reported seed reproduces its exported row exactly.
+pub fn run_cell(cell: &Cell) -> anyhow::Result<CellResult> {
+    run_cell_inner(cell, None).map(|(r, _)| r)
+}
+
+/// Run one cell with the trace recorder armed (overriding whatever the
+/// cell's scenario says), returning the result *and* the captured
+/// [`Trace`]. The metrics are bit-identical to [`run_cell`]'s — tracing
+/// observes the DES, it never perturbs it.
+pub fn run_cell_traced(cell: &Cell, trace: TraceConfig) -> anyhow::Result<(CellResult, Trace)> {
+    let (result, captured) = run_cell_inner(cell, Some(trace))?;
+    let captured =
+        captured.ok_or_else(|| anyhow::anyhow!("trace recorder was armed but produced nothing"))?;
+    Ok((result, captured))
 }
 
 /// Execute every cell of the spec across `threads` workers (clamped to
@@ -274,6 +326,44 @@ mod tests {
             assert_eq!(a.completed, b.completed);
             assert_eq!(a.mean_latency_s(), b.mean_latency_s());
         }
+    }
+
+    #[test]
+    fn traced_cell_rerun_is_bit_identical_and_captures_events() {
+        let spec = tiny_spec();
+        let plain = run_cell(&spec.cell(0)).unwrap();
+        let (traced, trace) = run_cell_traced(&spec.cell(0), TraceConfig::default()).unwrap();
+        // tracing observes, never perturbs
+        assert_eq!(traced.completed, plain.completed);
+        assert_eq!(traced.mean_latency_s(), plain.mean_latency_s());
+        assert_eq!(traced.p99_latency_s(), plain.p99_latency_s());
+        assert_eq!(traced.total_energy_j, plain.total_energy_j);
+        assert_eq!(traced.solves, plain.solves);
+        // and the capture is real: one Done mark per completion
+        let done = trace.count(|e| matches!(e, crate::obs::TraceEvent::Done { .. }));
+        assert_eq!(done as u64, plain.completed);
+        assert!(!trace.sats.is_empty());
+    }
+
+    #[test]
+    fn worst_p99_cell_picks_the_highest_and_breaks_ties_low() {
+        let spec = tiny_spec();
+        let result = run_sweep(&spec, 2).unwrap();
+        let worst = result.worst_p99_cell().unwrap();
+        let p99 = result.cells[worst].p99_latency_s();
+        for c in &result.cells {
+            assert!(p99 >= c.p99_latency_s());
+        }
+        // ties break to the lowest index
+        let mut tied = result.clone();
+        let clone = tied.cells[worst].clone();
+        tied.cells = vec![clone.clone(), clone];
+        tied.cells[0].cell.index = 0;
+        tied.cells[1].cell.index = 1;
+        assert_eq!(tied.worst_p99_cell(), Some(0));
+        // empty sweep has no worst cell
+        tied.cells.clear();
+        assert_eq!(tied.worst_p99_cell(), None);
     }
 
     #[test]

@@ -37,6 +37,11 @@
 //!   per-satellite byte-budget stores with pluggable eviction, and the
 //!   placement policies behind cache-aware routing and on-demand weight
 //!   fetches over ISLs.
+//! * [`obs`] — deterministic sim-time observability: the request-lifecycle
+//!   trace recorder threaded through the fleet DES, JSONL and Chrome
+//!   `trace_event` exporters with schema validation, and the
+//!   [`obs::MetricsRegistry`] name-addressed metric catalogue that
+//!   [`sim::SimMetrics`] projects into (see `docs/OBSERVABILITY.md`).
 //! * [`runtime`] — PJRT execution of AOT-compiled model stages; the chosen
 //!   split is *physically executed* (prefix on the "satellite" client,
 //!   activation serialized, suffix on the "cloud" client).
@@ -62,6 +67,7 @@ pub mod dnn;
 pub mod energy;
 pub mod exp;
 pub mod link;
+pub mod obs;
 pub mod orbit;
 pub mod placement;
 pub mod runtime;

@@ -13,9 +13,14 @@
 //! * `contacts` — derive contact windows from orbital geometry.
 //! * `serve`    — the e2e serving loop on AOT artifacts (see also
 //!   `examples/e2e_serving.rs`).
+//! * `trace-validate` — check a `--trace` export against the schema in
+//!   `docs/OBSERVABILITY.md` (JSONL or Chrome, auto-detected).
+//! * `bench-schema`   — compare the JSON *shape* of two bench reports
+//!   (CI diffs `BENCH_fleet.json` against the committed baseline).
 
 use leo_infer::config::Scenario;
 use leo_infer::dnn::{models, profile::ModelProfile};
+use leo_infer::obs::{Trace, TraceConfig, TraceEvent, TraceFormat};
 use leo_infer::solver::{SolveRequest, SolverRegistry};
 use leo_infer::util::cli::Args;
 use leo_infer::util::rng::Pcg64;
@@ -37,10 +42,13 @@ fn main() -> anyhow::Result<()> {
         "models" => list_models(),
         "contacts" => contacts(argv),
         "serve" => serve(argv),
+        "trace-validate" => trace_validate(argv),
+        "bench-schema" => bench_schema(argv),
         _ => {
             println!(
                 "leo-infer — energy & time-aware DNN inference offloading for LEO satellites\n\n\
-                 USAGE: leo-infer <solve|simulate|sweep|figures|models|contacts|serve> [options]\n\
+                 USAGE: leo-infer <solve|simulate|sweep|figures|models|contacts|serve|\
+                 trace-validate|bench-schema> [options]\n\
                  Run a subcommand with --help for its options."
             );
             Ok(())
@@ -204,6 +212,17 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
              inconsistent sim state (fleet only; empty = scenario preset)",
             Some(""),
         )
+        .opt(
+            "trace",
+            "write a deterministic sim-time trace of the run to this path (empty = off)",
+            Some(""),
+        )
+        .opt("trace-format", "jsonl|chrome — trace export format", Some("jsonl"))
+        .opt(
+            "trace-sample-every",
+            "per-satellite gauge sampling period in sim seconds (0 = no gauges)",
+            Some("0"),
+        )
         .parse_from(argv)?;
     let fleet_config = args.get_str("fleet-config").unwrap_or("").to_string();
     let fleet_spec = args.get_str("fleet").unwrap_or("").to_string();
@@ -221,6 +240,7 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
     .generate(horizon, &mut rng);
     let profile = ModelProfile::sampled(args.get_usize("depth")?, &mut rng);
     let engine = SolverRegistry::engine(args.get_str("policy").unwrap())?;
+    let trace_out = trace_flags(&args)?;
     let config = SimConfig {
         template: scenario.instance_builder(profile.clone()),
         profiles: vec![profile],
@@ -229,6 +249,7 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
             Seconds::from_minutes(scenario.t_con_minutes),
         ),
         timing: args.flag_set("timing"),
+        trace: trace_out.as_ref().map(|t| t.config.clone()),
         horizon,
     };
     let result = Simulator::new(config).run(&trace, &engine)?;
@@ -241,6 +262,56 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
     if let Some(t) = &result.timing {
         print_timing(t, &result.metrics);
     }
+    if let (Some(out), Some(captured)) = (&trace_out, &result.trace) {
+        write_trace(captured, &out.path, out.format)?;
+    }
+    Ok(())
+}
+
+/// The shared `--trace` / `--trace-format` / `--trace-sample-every`
+/// flag triple, parsed once for `simulate` and `sweep`.
+struct TraceOut {
+    path: String,
+    format: TraceFormat,
+    config: TraceConfig,
+}
+
+/// `None` when `--trace` (or `--worst-cell-trace`) is empty — tracing off.
+fn trace_flags_named(args: &Args, path_flag: &str) -> anyhow::Result<Option<TraceOut>> {
+    let path = args.get_str(path_flag).unwrap_or("").to_string();
+    if path.is_empty() {
+        return Ok(None);
+    }
+    let format = TraceFormat::from_name(args.get_str("trace-format").unwrap_or("jsonl"))?;
+    let config = TraceConfig {
+        sample_every: Seconds(args.get_f64("trace-sample-every")?),
+        ..TraceConfig::default()
+    };
+    Ok(Some(TraceOut {
+        path,
+        format,
+        config,
+    }))
+}
+
+fn trace_flags(args: &Args) -> anyhow::Result<Option<TraceOut>> {
+    trace_flags_named(args, "trace")
+}
+
+/// Write a captured trace and print the one-line receipt.
+fn write_trace(trace: &Trace, path: &str, format: TraceFormat) -> anyhow::Result<()> {
+    trace.write(path, format)?;
+    let spans = trace.count(|e| matches!(e, TraceEvent::Span { .. }));
+    let gauges = trace.count(|e| matches!(e, TraceEvent::Gauge { .. }));
+    println!(
+        "trace       : {} events ({} spans, {} gauges, {} dropped) -> {} ({})",
+        trace.events.len(),
+        spans,
+        gauges,
+        trace.dropped,
+        path,
+        format.as_str()
+    );
     Ok(())
 }
 
@@ -370,6 +441,10 @@ fn simulate_fleet(args: &Args, fleet_config: &str, fleet_spec: &str) -> anyhow::
         "off" => cfg.audit = false,
         other => anyhow::bail!("--audit expects on|off, got `{other}`"),
     }
+    let trace_out = trace_flags(args)?;
+    if let Some(out) = &trace_out {
+        cfg.trace = Some(out.config.clone());
+    }
     let sim = FleetSimulator::new(cfg);
     let result = sim.run(&trace, &engine)?;
     let m = &result.metrics;
@@ -457,6 +532,9 @@ fn simulate_fleet(args: &Args, fleet_config: &str, fleet_spec: &str) -> anyhow::
     if let Some(t) = &result.timing {
         print_timing(t, m);
     }
+    if let (Some(out), Some(captured)) = (&trace_out, &result.trace) {
+        write_trace(captured, &out.path, out.format)?;
+    }
     Ok(())
 }
 
@@ -484,6 +562,17 @@ fn sweep(argv: Vec<String>) -> anyhow::Result<()> {
     .flag(
         "verify",
         "also run serially and assert byte-identical exports (determinism check)",
+    )
+    .opt(
+        "worst-cell-trace",
+        "re-run the highest-P99 cell with tracing on and write the trace here (empty = off)",
+        Some(""),
+    )
+    .opt("trace-format", "jsonl|chrome — worst-cell trace format", Some("jsonl"))
+    .opt(
+        "trace-sample-every",
+        "gauge sampling period in sim seconds for the worst-cell trace (0 = no gauges)",
+        Some("0"),
     )
     .parse_from(argv)?;
     let spec_path = args
@@ -513,6 +602,10 @@ fn sweep(argv: Vec<String>) -> anyhow::Result<()> {
         anyhow::ensure!(
             args.get_str("out").unwrap_or("").is_empty(),
             "--cell prints one row to stdout; --out needs the full grid"
+        );
+        anyhow::ensure!(
+            args.get_str("worst-cell-trace").unwrap_or("").is_empty(),
+            "--cell replays one cell; --worst-cell-trace needs the full grid"
         );
         let index: usize = raw
             .parse()
@@ -574,6 +667,29 @@ fn sweep(argv: Vec<String>) -> anyhow::Result<()> {
         std::fs::write(&csv_path, &csv)?;
         std::fs::write(&json_path, &json)?;
         println!("\nwrote {csv_path} and {json_path}");
+    }
+
+    // worst-cell drill-down: re-run the highest-P99 cell standalone with
+    // the recorder armed. The re-run is bit-identical to the swept cell
+    // (same seed, same config), so the trace explains the exported row.
+    if let Some(out) = trace_flags_named(&args, "worst-cell-trace")? {
+        let worst = result
+            .worst_p99_cell()
+            .ok_or_else(|| anyhow::anyhow!("--worst-cell-trace: the sweep produced no cells"))?;
+        let cell = &result.cells[worst];
+        println!(
+            "\nworst cell  : #{worst} (solver {}, seed {}) — p99 {:.1} s",
+            cell.cell.solver,
+            cell.cell.seed,
+            cell.p99_latency_s()
+        );
+        let (rerun, trace) = exp::run_cell_traced(&cell.cell, out.config.clone())?;
+        anyhow::ensure!(
+            rerun.p99_latency_s() == cell.p99_latency_s()
+                && rerun.completed == cell.completed,
+            "traced re-run of cell {worst} diverged from the sweep — determinism violation"
+        );
+        write_trace(&trace, &out.path, out.format)?;
     }
     Ok(())
 }
@@ -775,5 +891,74 @@ fn serve(argv: Vec<String>) -> anyhow::Result<()> {
         completions.len(),
         completions.first().map(|c| c.plan.split).unwrap_or(0)
     );
+    Ok(())
+}
+
+/// `leo-infer trace-validate <file>` — check a `--trace` export against
+/// the schema in `docs/OBSERVABILITY.md`. The format (JSONL event log or
+/// Chrome `trace_event` JSON) is auto-detected; malformed JSON, unknown
+/// event kinds, or missing fields exit non-zero. CI runs this on every
+/// trace it captures.
+fn trace_validate(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::new(
+        "leo-infer trace-validate",
+        "validate a trace export (jsonl or chrome, auto-detected)",
+    )
+    .parse_from(argv)?;
+    let path = args
+        .positional()
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: leo-infer trace-validate <trace-file>"))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+    let (format, summary) =
+        leo_infer::obs::validate(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    println!(
+        "{path}: valid {} trace — {} events ({} spans, {} marks, {} gauges)",
+        format.as_str(),
+        summary.events,
+        summary.spans,
+        summary.marks,
+        summary.gauges
+    );
+    Ok(())
+}
+
+/// `leo-infer bench-schema <baseline.json> <candidate.json>` — compare
+/// the JSON *shape* of two bench reports: key sets and value kinds, not
+/// values. CI diffs the freshly written `BENCH_fleet.json` against the
+/// committed baseline, so a schema drift fails the build while the
+/// numbers stay free to move with the hardware.
+fn bench_schema(argv: Vec<String>) -> anyhow::Result<()> {
+    use leo_infer::util::json::Json;
+
+    let args = Args::new(
+        "leo-infer bench-schema",
+        "compare the JSON shape (keys and kinds, not values) of two reports",
+    )
+    .parse_from(argv)?;
+    let pos = args.positional();
+    anyhow::ensure!(
+        pos.len() == 2,
+        "usage: leo-infer bench-schema <baseline.json> <candidate.json>"
+    );
+    let load = |p: &str| -> anyhow::Result<Json> {
+        let text =
+            std::fs::read_to_string(p).map_err(|e| anyhow::anyhow!("cannot read {p}: {e}"))?;
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("{p}: {e}"))
+    };
+    let a = leo_infer::obs::json_schema(&load(&pos[0])?);
+    let b = leo_infer::obs::json_schema(&load(&pos[1])?);
+    anyhow::ensure!(
+        a == b,
+        "schema mismatch between {} and {}:\n--- {} ---\n{}\n--- {} ---\n{}",
+        pos[0],
+        pos[1],
+        pos[0],
+        a.to_string_pretty(),
+        pos[1],
+        b.to_string_pretty()
+    );
+    println!("schema match: {} == {}", pos[0], pos[1]);
     Ok(())
 }

@@ -1,0 +1,661 @@
+//! Trace serialization and validation: the JSONL event log, the Chrome
+//! `trace_event` export, and the JSON schema tooling CI uses to pin
+//! report shapes without pinning values.
+//!
+//! Both exports are pure functions of a [`Trace`] — which itself holds
+//! only sim-time values — so identical runs produce identical bytes.
+//! JSONL is the format the byte-identity tests assert on; the Chrome
+//! export adds viewer conveniences (name tables, per-satellite tracks)
+//! on top of the same events.
+
+use std::collections::BTreeMap;
+
+use super::recorder::{SpanPhase, Trace, TraceEvent, TraceFormat};
+use crate::util::json::Json;
+
+/// Schema version stamped into the JSONL meta line. Bump when an event
+/// kind changes shape; `leo-infer trace-validate` rejects versions it
+/// does not know.
+pub const SCHEMA_VERSION: u64 = 1;
+
+impl Trace {
+    /// One compact JSON object per line: a `meta` header (version,
+    /// satellite name table, drop count) followed by every event in
+    /// chronological order. Keys are emitted in sorted order and numbers
+    /// through the deterministic [`Json`] writer, so equal traces are
+    /// equal byte-for-byte.
+    pub fn to_jsonl(&self) -> String {
+        let meta = Json::obj(vec![
+            ("kind", Json::str("meta")),
+            ("version", Json::num(SCHEMA_VERSION as f64)),
+            (
+                "sats",
+                Json::arr(self.sats.iter().map(|s| Json::str(s.clone()))),
+            ),
+            ("dropped", Json::num(self.dropped as f64)),
+        ]);
+        let mut out = meta.to_string_compact();
+        out.push('\n');
+        for ev in &self.events {
+            out.push_str(&event_json(ev).to_string_compact());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Chrome `trace_event` JSON (the `{"traceEvents": [...]}` flavor),
+    /// loadable in `chrome://tracing` or <https://ui.perfetto.dev>.
+    ///
+    /// Layout: process 0 is the fleet (arrivals and unrouted rejects);
+    /// process `sat + 1` is one satellite with thread 0 (`proc`) carrying
+    /// processing slices and thread 1 (`tx`) carrying downlink slices.
+    /// Each routed request additionally owns an async track (category
+    /// `req`, id = request id) holding an enclosing `req-<id>` span with
+    /// fetch/relay/cloud phases nested inside it. Gauge samples become
+    /// counter tracks. Timestamps are sim-microseconds (`sim_s × 1e6`).
+    pub fn to_chrome(&self) -> Json {
+        let mut evs: Vec<Json> = Vec::new();
+        evs.push(meta_event("process_name", 0, 0, "fleet"));
+        for (i, name) in self.sats.iter().enumerate() {
+            let pid = i + 1;
+            evs.push(meta_event("process_name", pid, 0, name));
+            evs.push(meta_event("thread_name", pid, 0, "proc"));
+            evs.push(meta_event("thread_name", pid, 1, "tx"));
+        }
+        // Async events pair up by (cat, id); remember where each request
+        // was routed so its terminal `e` lands on the same process track
+        // as the opening `b`.
+        let mut routed_pid: BTreeMap<u64, usize> = BTreeMap::new();
+        for ev in &self.events {
+            if let TraceEvent::Routed { req, sat, .. } = ev {
+                routed_pid.insert(*req, sat + 1);
+            }
+        }
+        for ev in &self.events {
+            match ev {
+                TraceEvent::Arrival { req, t } => {
+                    evs.push(instant("arrival", 0, *t, vec![("req", Json::num(*req as f64))]));
+                }
+                TraceEvent::Routed {
+                    req,
+                    t,
+                    sat,
+                    split,
+                    depth,
+                } => {
+                    evs.push(async_edge("b", &req_name(*req), *req, sat + 1, *t));
+                    evs.push(instant(
+                        "routed",
+                        sat + 1,
+                        *t,
+                        vec![
+                            ("req", Json::num(*req as f64)),
+                            ("split", Json::num(*split as f64)),
+                            ("depth", Json::num(*depth as f64)),
+                        ],
+                    ));
+                }
+                TraceEvent::Span {
+                    req,
+                    sat,
+                    phase,
+                    queued,
+                    start,
+                    end,
+                } => match phase {
+                    SpanPhase::Proc | SpanPhase::Tx => {
+                        let tid = if *phase == SpanPhase::Proc { 0 } else { 1 };
+                        evs.push(Json::obj(vec![
+                            ("ph", Json::str("X")),
+                            ("name", Json::str(phase.as_str())),
+                            ("pid", Json::num((sat + 1) as f64)),
+                            ("tid", Json::num(tid as f64)),
+                            ("ts", Json::num(start * 1e6)),
+                            ("dur", Json::num((end - start) * 1e6)),
+                            (
+                                "args",
+                                Json::obj(vec![
+                                    ("req", Json::num(*req as f64)),
+                                    ("wait_s", Json::num(start - queued)),
+                                ]),
+                            ),
+                        ]));
+                    }
+                    _ => {
+                        // fetch / relay / cloud phases nest inside the
+                        // request's async track
+                        evs.push(async_edge("b", phase.as_str(), *req, sat + 1, *start));
+                        evs.push(async_edge("e", phase.as_str(), *req, sat + 1, *end));
+                    }
+                },
+                TraceEvent::Done { req, sat, t, split, .. } => {
+                    if let Some(pid) = routed_pid.get(req) {
+                        evs.push(async_edge("e", &req_name(*req), *req, *pid, *t));
+                    }
+                    evs.push(instant(
+                        "done",
+                        sat + 1,
+                        *t,
+                        vec![
+                            ("req", Json::num(*req as f64)),
+                            ("split", Json::num(*split as f64)),
+                        ],
+                    ));
+                }
+                TraceEvent::Reject { req, t, sat, phase } => {
+                    if let Some(pid) = routed_pid.get(req) {
+                        evs.push(async_edge("e", &req_name(*req), *req, *pid, *t));
+                    }
+                    evs.push(instant(
+                        "reject",
+                        sat.map_or(0, |s| s + 1),
+                        *t,
+                        vec![
+                            ("req", Json::num(*req as f64)),
+                            ("phase", Json::str(phase.as_str())),
+                        ],
+                    ));
+                }
+                TraceEvent::Unfinished { req, t, sat } => {
+                    if let Some(pid) = routed_pid.get(req) {
+                        evs.push(async_edge("e", &req_name(*req), *req, *pid, *t));
+                    }
+                    evs.push(instant(
+                        "unfinished",
+                        sat.map_or(0, |s| s + 1),
+                        *t,
+                        vec![("req", Json::num(*req as f64))],
+                    ));
+                }
+                TraceEvent::Gauge {
+                    sat,
+                    t,
+                    soc,
+                    queue,
+                    proc_busy_s,
+                    tx_busy_s,
+                    store_bytes,
+                } => {
+                    evs.push(Json::obj(vec![
+                        ("ph", Json::str("C")),
+                        ("name", Json::str("state")),
+                        ("pid", Json::num((sat + 1) as f64)),
+                        ("tid", Json::num(0.0)),
+                        ("ts", Json::num(t * 1e6)),
+                        (
+                            "args",
+                            Json::obj(vec![
+                                ("soc", Json::num(*soc)),
+                                ("queue", Json::num(*queue as f64)),
+                                ("proc_busy_s", Json::num(*proc_busy_s)),
+                                ("tx_busy_s", Json::num(*tx_busy_s)),
+                                ("store_bytes", Json::num(*store_bytes)),
+                            ]),
+                        ),
+                    ]));
+                }
+            }
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::arr(evs)),
+            ("displayTimeUnit", Json::str("ms")),
+        ])
+    }
+}
+
+fn req_name(req: u64) -> String {
+    format!("req-{req}")
+}
+
+fn meta_event(name: &str, pid: usize, tid: usize, value: &str) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("M")),
+        ("name", Json::str(name)),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(tid as f64)),
+        ("args", Json::obj(vec![("name", Json::str(value))])),
+    ])
+}
+
+fn instant(name: &str, pid: usize, t: f64, args: Vec<(&str, Json)>) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("i")),
+        ("name", Json::str(name)),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(0.0)),
+        ("ts", Json::num(t * 1e6)),
+        ("s", Json::str("p")),
+        ("args", Json::obj(args)),
+    ])
+}
+
+fn async_edge(ph: &str, name: &str, id: u64, pid: usize, t: f64) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str(ph)),
+        ("cat", Json::str("req")),
+        ("id", Json::num(id as f64)),
+        ("name", Json::str(name)),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(0.0)),
+        ("ts", Json::num(t * 1e6)),
+    ])
+}
+
+fn opt_sat(sat: &Option<usize>) -> Json {
+    match sat {
+        Some(s) => Json::num(*s as f64),
+        None => Json::Null,
+    }
+}
+
+fn event_json(ev: &TraceEvent) -> Json {
+    match ev {
+        TraceEvent::Arrival { req, t } => Json::obj(vec![
+            ("kind", Json::str("arrival")),
+            ("req", Json::num(*req as f64)),
+            ("t", Json::num(*t)),
+        ]),
+        TraceEvent::Routed {
+            req,
+            t,
+            sat,
+            split,
+            depth,
+        } => Json::obj(vec![
+            ("kind", Json::str("routed")),
+            ("req", Json::num(*req as f64)),
+            ("t", Json::num(*t)),
+            ("sat", Json::num(*sat as f64)),
+            ("split", Json::num(*split as f64)),
+            ("depth", Json::num(*depth as f64)),
+        ]),
+        TraceEvent::Span {
+            req,
+            sat,
+            phase,
+            queued,
+            start,
+            end,
+        } => Json::obj(vec![
+            ("kind", Json::str("span")),
+            ("phase", Json::str(phase.as_str())),
+            ("req", Json::num(*req as f64)),
+            ("sat", Json::num(*sat as f64)),
+            ("queued", Json::num(*queued)),
+            ("start", Json::num(*start)),
+            ("end", Json::num(*end)),
+        ]),
+        TraceEvent::Done {
+            req,
+            sat,
+            t,
+            split,
+            path,
+        } => Json::obj(vec![
+            ("kind", Json::str("done")),
+            ("req", Json::num(*req as f64)),
+            ("t", Json::num(*t)),
+            ("sat", Json::num(*sat as f64)),
+            ("split", Json::num(*split as f64)),
+            (
+                "path",
+                Json::arr(path.iter().map(|h| Json::num(*h as f64))),
+            ),
+        ]),
+        TraceEvent::Reject { req, t, sat, phase } => Json::obj(vec![
+            ("kind", Json::str("reject")),
+            ("phase", Json::str(phase.as_str())),
+            ("req", Json::num(*req as f64)),
+            ("t", Json::num(*t)),
+            ("sat", opt_sat(sat)),
+        ]),
+        TraceEvent::Unfinished { req, t, sat } => Json::obj(vec![
+            ("kind", Json::str("unfinished")),
+            ("req", Json::num(*req as f64)),
+            ("t", Json::num(*t)),
+            ("sat", opt_sat(sat)),
+        ]),
+        TraceEvent::Gauge {
+            sat,
+            t,
+            soc,
+            queue,
+            proc_busy_s,
+            tx_busy_s,
+            store_bytes,
+        } => Json::obj(vec![
+            ("kind", Json::str("gauge")),
+            ("sat", Json::num(*sat as f64)),
+            ("t", Json::num(*t)),
+            ("soc", Json::num(*soc)),
+            ("queue", Json::num(*queue as f64)),
+            ("proc_busy_s", Json::num(*proc_busy_s)),
+            ("tx_busy_s", Json::num(*tx_busy_s)),
+            ("store_bytes", Json::num(*store_bytes)),
+        ]),
+    }
+}
+
+// ------------------------------------------------------------- validation
+
+/// What a validation pass counted — printed by `leo-infer trace-validate`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TraceSummary {
+    /// Total events (JSONL lines after the meta header, or Chrome
+    /// `traceEvents` entries after metadata).
+    pub events: usize,
+    /// Lifecycle spans (`span` kinds, or Chrome `X`/`b` entries).
+    pub spans: usize,
+    /// Point marks (arrival/routed/done/reject/unfinished, or `i`).
+    pub marks: usize,
+    /// Gauge samples (`gauge` kinds, or `C` entries).
+    pub gauges: usize,
+}
+
+const SPAN_PHASES: [&str; 6] = ["fetch", "proc", "relay_tx", "relay_prop", "tx", "cloud"];
+const REJECT_PHASES: [&str; 2] = ["admission", "transmit"];
+
+fn require_num(v: &Json, line: usize, key: &str) -> anyhow::Result<f64> {
+    v.get_f64(key)
+        .map_err(|e| anyhow::anyhow!("line {line}: {e}"))
+}
+
+fn require_opt_sat(v: &Json, line: usize) -> anyhow::Result<()> {
+    match v.get("sat") {
+        Ok(Json::Null) | Ok(Json::Num(_)) => Ok(()),
+        Ok(other) => anyhow::bail!("line {line}: sat must be a number or null, got {other:?}"),
+        Err(e) => anyhow::bail!("line {line}: {e}"),
+    }
+}
+
+/// Validate a JSONL trace export: every line parses, the first line is a
+/// `meta` header with a known schema version, every event kind is known,
+/// required fields are present with the right types, and span times are
+/// ordered (`queued ≤ start ≤ end`).
+pub fn validate_jsonl(text: &str) -> anyhow::Result<TraceSummary> {
+    let mut summary = TraceSummary::default();
+    let mut saw_meta = false;
+    for (i, raw) in text.lines().enumerate() {
+        let line = i + 1;
+        if raw.is_empty() {
+            continue;
+        }
+        let v = Json::parse(raw).map_err(|e| anyhow::anyhow!("line {line}: {e}"))?;
+        let kind = v
+            .get_str("kind")
+            .map_err(|e| anyhow::anyhow!("line {line}: {e}"))?;
+        if !saw_meta {
+            if kind != "meta" {
+                anyhow::bail!("line {line}: first line must be a meta header, got kind `{kind}`");
+            }
+            let version = require_num(&v, line, "version")? as u64;
+            if version != SCHEMA_VERSION {
+                anyhow::bail!(
+                    "line {line}: schema version {version} (this build understands {SCHEMA_VERSION})"
+                );
+            }
+            v.get("sats")
+                .and_then(|s| s.as_arr())
+                .map_err(|e| anyhow::anyhow!("line {line}: {e}"))?;
+            require_num(&v, line, "dropped")?;
+            saw_meta = true;
+            continue;
+        }
+        summary.events += 1;
+        match kind {
+            "arrival" => {
+                require_num(&v, line, "req")?;
+                require_num(&v, line, "t")?;
+                summary.marks += 1;
+            }
+            "routed" => {
+                for key in ["req", "t", "sat", "split", "depth"] {
+                    require_num(&v, line, key)?;
+                }
+                summary.marks += 1;
+            }
+            "span" => {
+                let phase = v
+                    .get_str("phase")
+                    .map_err(|e| anyhow::anyhow!("line {line}: {e}"))?;
+                if !SPAN_PHASES.contains(&phase) {
+                    anyhow::bail!("line {line}: unknown span phase `{phase}`");
+                }
+                require_num(&v, line, "req")?;
+                require_num(&v, line, "sat")?;
+                let queued = require_num(&v, line, "queued")?;
+                let start = require_num(&v, line, "start")?;
+                let end = require_num(&v, line, "end")?;
+                if !(queued <= start && start <= end) {
+                    anyhow::bail!(
+                        "line {line}: span times out of order (queued {queued}, start {start}, end {end})"
+                    );
+                }
+                summary.spans += 1;
+            }
+            "done" => {
+                for key in ["req", "t", "sat", "split"] {
+                    require_num(&v, line, key)?;
+                }
+                v.get("path")
+                    .and_then(|p| p.as_arr())
+                    .map_err(|e| anyhow::anyhow!("line {line}: {e}"))?;
+                summary.marks += 1;
+            }
+            "reject" => {
+                let phase = v
+                    .get_str("phase")
+                    .map_err(|e| anyhow::anyhow!("line {line}: {e}"))?;
+                if !REJECT_PHASES.contains(&phase) {
+                    anyhow::bail!("line {line}: unknown reject phase `{phase}`");
+                }
+                require_num(&v, line, "req")?;
+                require_num(&v, line, "t")?;
+                require_opt_sat(&v, line)?;
+                summary.marks += 1;
+            }
+            "unfinished" => {
+                require_num(&v, line, "req")?;
+                require_num(&v, line, "t")?;
+                require_opt_sat(&v, line)?;
+                summary.marks += 1;
+            }
+            "gauge" => {
+                for key in [
+                    "sat",
+                    "t",
+                    "soc",
+                    "queue",
+                    "proc_busy_s",
+                    "tx_busy_s",
+                    "store_bytes",
+                ] {
+                    require_num(&v, line, key)?;
+                }
+                summary.gauges += 1;
+            }
+            other => anyhow::bail!("line {line}: unknown event kind `{other}`"),
+        }
+    }
+    if !saw_meta {
+        anyhow::bail!("trace is empty — no meta header");
+    }
+    Ok(summary)
+}
+
+const CHROME_PHASES: [&str; 6] = ["X", "b", "e", "i", "M", "C"];
+
+/// Validate a Chrome `trace_event` export: a `traceEvents` array whose
+/// entries carry a known `ph`, a `name`, numeric `pid`/`tid`, a numeric
+/// `ts` (metadata excepted), `dur` on complete events, and `cat`+`id` on
+/// async events.
+pub fn validate_chrome(text: &str) -> anyhow::Result<TraceSummary> {
+    let root = Json::parse(text).map_err(|e| anyhow::anyhow!("chrome trace: {e}"))?;
+    let events = root
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .map_err(|e| anyhow::anyhow!("chrome trace: {e}"))?;
+    let mut summary = TraceSummary::default();
+    for (i, ev) in events.iter().enumerate() {
+        let at = |e: crate::util::json::JsonError| anyhow::anyhow!("traceEvents[{i}]: {e}");
+        let ph = ev.get_str("ph").map_err(at)?;
+        if !CHROME_PHASES.contains(&ph) {
+            anyhow::bail!("traceEvents[{i}]: unknown ph `{ph}`");
+        }
+        ev.get_str("name").map_err(at)?;
+        ev.get_f64("pid").map_err(at)?;
+        ev.get_f64("tid").map_err(at)?;
+        if ph == "M" {
+            continue;
+        }
+        summary.events += 1;
+        ev.get_f64("ts").map_err(at)?;
+        match ph {
+            "X" => {
+                ev.get_f64("dur").map_err(at)?;
+                summary.spans += 1;
+            }
+            "b" | "e" => {
+                ev.get_str("cat").map_err(at)?;
+                ev.get_f64("id").map_err(at)?;
+                if ph == "b" {
+                    summary.spans += 1;
+                }
+            }
+            "i" => summary.marks += 1,
+            "C" => {
+                ev.get("args").and_then(|a| a.as_obj()).map_err(at)?;
+                summary.gauges += 1;
+            }
+            _ => {}
+        }
+    }
+    Ok(summary)
+}
+
+/// Validate a trace export of either format, sniffing which one it is:
+/// a document that parses whole and carries `traceEvents` is Chrome,
+/// anything else is treated as JSONL. Returns the detected format with
+/// the summary.
+pub fn validate(text: &str) -> anyhow::Result<(TraceFormat, TraceSummary)> {
+    if let Ok(root) = Json::parse(text) {
+        if root.opt("traceEvents").is_some() {
+            return Ok((TraceFormat::Chrome, validate_chrome(text)?));
+        }
+    }
+    Ok((TraceFormat::Jsonl, validate_jsonl(text)?))
+}
+
+// ---------------------------------------------------------- schema diff
+
+/// The type skeleton of a JSON document: objects keep their keys with
+/// each value replaced by its schema, arrays reduce to their first
+/// element's schema, and scalars become type-name strings. Two reports
+/// with the same shape but different numbers have equal schemas — this
+/// is what `leo-infer bench-schema` diffs so CI pins `BENCH_fleet.json`'s
+/// structure without freezing its measurements.
+pub fn json_schema(v: &Json) -> Json {
+    match v {
+        Json::Null => Json::str("null"),
+        Json::Bool(_) => Json::str("bool"),
+        Json::Num(_) => Json::str("number"),
+        Json::Str(_) => Json::str("string"),
+        Json::Arr(items) => Json::arr(items.first().map(json_schema)),
+        Json::Obj(m) => Json::Obj(m.iter().map(|(k, v)| (k.clone(), json_schema(v))).collect()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::recorder::{Recorder, RejectPhase, TraceConfig};
+    use super::*;
+    use crate::util::units::Seconds;
+
+    fn sample_trace() -> Trace {
+        let mut r = Recorder::new(TraceConfig {
+            capacity: 64,
+            sample_every: Seconds::ZERO,
+        });
+        r.arrival(0, 1.0);
+        r.routed(0, 1.0, 0, 3, 8);
+        r.span(SpanPhase::Proc, 0, 0, 1.0, 1.0, 4.0);
+        r.span(SpanPhase::RelayTx, 0, 0, 4.0, 4.0, 5.0);
+        r.span(SpanPhase::RelayProp, 0, 0, 5.0, 5.0, 5.01);
+        r.span(SpanPhase::Tx, 0, 1, 5.01, 6.0, 90.0);
+        r.span(SpanPhase::Cloud, 0, 1, 90.0, 90.0, 92.0);
+        r.done(0, 0, 92.0, 3, vec![1]);
+        r.arrival(1, 2.0);
+        r.reject(RejectPhase::Admission, 1, 2.0, None);
+        r.gauge(0.0, 0, 0.9, 1, 3.0, 0.0, 0.0);
+        r.finish(&["sat-0".into(), "sat-1".into()])
+    }
+
+    #[test]
+    fn jsonl_round_trips_through_the_validator() {
+        let text = sample_trace().to_jsonl();
+        let s = validate_jsonl(&text).unwrap();
+        assert_eq!(s.spans, 5);
+        assert_eq!(s.gauges, 1);
+        assert_eq!(s.marks, 5); // 2 arrivals, routed, done, reject
+        let (fmt, sniffed) = validate(&text).unwrap();
+        assert_eq!(fmt, TraceFormat::Jsonl);
+        assert_eq!(sniffed, s);
+    }
+
+    #[test]
+    fn unknown_kind_and_malformed_lines_fail() {
+        let mut text = sample_trace().to_jsonl();
+        text.push_str("{\"kind\":\"mystery\",\"t\":0}\n");
+        assert!(validate_jsonl(&text).is_err());
+        let mut text = sample_trace().to_jsonl();
+        text.push_str("{not json\n");
+        assert!(validate_jsonl(&text).is_err());
+        assert!(validate_jsonl("").is_err(), "missing meta header");
+    }
+
+    #[test]
+    fn chrome_export_validates_and_nests_phases() {
+        let chrome = sample_trace().to_chrome();
+        let text = chrome.to_string_pretty();
+        let s = validate_chrome(&text).unwrap();
+        assert!(s.spans >= 5, "proc/tx X slices plus async b pairs");
+        assert_eq!(s.gauges, 1);
+        let (fmt, _) = validate(&text).unwrap();
+        assert_eq!(fmt, TraceFormat::Chrome);
+        // the enclosing request span opens and closes, and the relay
+        // phases nest inside it on the same async id
+        let events = chrome.get("traceEvents").unwrap().as_arr().unwrap();
+        let b_names: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get_str("ph").is_ok_and(|p| p == "b"))
+            .map(|e| e.get_str("name").unwrap())
+            .collect();
+        assert!(b_names.contains(&"req-0"));
+        assert!(b_names.contains(&"relay_tx"));
+        assert!(b_names.contains(&"relay_prop"));
+        let closes = events
+            .iter()
+            .filter(|e| e.get_str("ph").is_ok_and(|p| p == "e"))
+            .count();
+        assert_eq!(closes, b_names.len(), "every async open has a close");
+    }
+
+    #[test]
+    fn chrome_validator_rejects_unknown_ph() {
+        let text = r#"{"traceEvents":[{"ph":"Z","name":"x","pid":0,"tid":0,"ts":0}]}"#;
+        assert!(validate_chrome(text).is_err());
+    }
+
+    #[test]
+    fn schema_ignores_values_but_pins_shape() {
+        let a = Json::parse(r#"{"rows":[{"sats":8,"wall_s":1.5}],"smoke":true}"#).unwrap();
+        let b = Json::parse(r#"{"rows":[{"sats":1600,"wall_s":220.0}],"smoke":false}"#).unwrap();
+        let c = Json::parse(r#"{"rows":[{"sats":8}],"smoke":true}"#).unwrap();
+        assert_eq!(json_schema(&a), json_schema(&b));
+        assert_ne!(json_schema(&a), json_schema(&c));
+        assert_eq!(
+            json_schema(&Json::parse("[]").unwrap()),
+            Json::parse("[]").unwrap()
+        );
+    }
+}

@@ -1,0 +1,42 @@
+//! Deterministic, sim-time-only tracing and metrics for the fleet DES.
+//!
+//! The simulator's end-of-run aggregates ([`crate::sim::SimMetrics`])
+//! answer *how much* — completions, rejects, latency quantiles — but not
+//! *where the time went*: solve vs. proc queue vs. ISL hops vs. waiting
+//! for a ground pass. This module adds that layer without giving up the
+//! repo's core invariant (byte-identical exports at any thread count, on
+//! any machine):
+//!
+//! * [`Recorder`] — a bounded ring buffer threaded through
+//!   [`crate::sim::FleetSimulator`] when [`crate::sim::FleetSimConfig::trace`]
+//!   is set. It captures the full request lifecycle (arrival → routed →
+//!   per-phase spans → done/reject/unfinished, with split index and relay
+//!   path) plus periodic per-satellite gauge samples (SoC, queue depths,
+//!   store bytes). Every timestamp is **sim seconds**; no wall-clock value
+//!   ever enters an event, so traces are reproducible bit for bit.
+//! * [`Trace`] — the finished recording, exportable as a JSONL event log
+//!   (one compact JSON object per line, for scripting) or as Chrome
+//!   `trace_event` JSON (open in `chrome://tracing` or
+//!   <https://ui.perfetto.dev>; one track per satellite with proc/tx
+//!   lanes, plus nested per-request async spans for fetch/relay/cloud
+//!   phases). [`validate`] checks either export against the schema —
+//!   CI runs it on every traced scenario.
+//! * [`MetricsRegistry`] — a unified catalogue of named counters, gauges,
+//!   and [`crate::util::stats::StreamingSummary`] histograms that
+//!   [`crate::sim::SimMetrics`] / [`crate::sim::SatMetrics`] project
+//!   into, so downstream consumers address metrics by name
+//!   (`"sim.completed"`, `"sat.<name>.energy_j"`) instead of by struct
+//!   field. The structs keep every existing field — the registry is a
+//!   projection, not a replacement — so untraced runs stay bit-identical.
+//!
+//! Schema, metric catalogue, and viewer how-to: `docs/OBSERVABILITY.md`.
+
+pub mod export;
+pub mod recorder;
+pub mod registry;
+
+pub use export::{json_schema, validate, validate_chrome, validate_jsonl, TraceSummary};
+pub use recorder::{
+    Recorder, RejectPhase, SpanPhase, Trace, TraceConfig, TraceEvent, TraceFormat,
+};
+pub use registry::{MetricValue, MetricsRegistry};

@@ -1,0 +1,503 @@
+//! The in-simulator side of tracing: event types, the bounded ring
+//! recorder, and the finished [`Trace`].
+//!
+//! Everything here is measured in **sim seconds**. The recorder never
+//! reads a clock; the DES hands it `now` at every hook. That is what
+//! keeps traces byte-identical across machines and sweep thread counts
+//! (the same property `exp` guarantees for its exports).
+
+use crate::util::units::Seconds;
+
+/// Default ring capacity: ~1M events. At the fleet DES's typical few
+/// events per request this covers hundreds of thousands of requests
+/// before the ring starts overwriting its oldest entries.
+pub const DEFAULT_CAPACITY: usize = 1 << 20;
+
+/// Tracing knobs, carried by [`crate::sim::FleetSimConfig::trace`].
+///
+/// `None` at the config level means tracing is fully off: the simulator
+/// takes no recorder branches and the run is bit-identical to a build
+/// without this module.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceConfig {
+    /// Ring buffer capacity in events. When full, the oldest events are
+    /// overwritten and [`Trace::dropped`] counts the loss.
+    pub capacity: usize,
+    /// Cadence of per-satellite gauge samples, in sim seconds.
+    /// `Seconds::ZERO` (the default) disables gauge sampling.
+    pub sample_every: Seconds,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            capacity: DEFAULT_CAPACITY,
+            sample_every: Seconds::ZERO,
+        }
+    }
+}
+
+/// Which export encoding [`Trace::write`] produces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceFormat {
+    /// One compact JSON object per line — the scripting format, and the
+    /// one the byte-identity guarantees are stated against.
+    Jsonl,
+    /// Chrome `trace_event` JSON for `chrome://tracing` / Perfetto.
+    Chrome,
+}
+
+impl TraceFormat {
+    /// Parse a CLI `--trace-format` value (`jsonl` or `chrome`).
+    pub fn from_name(name: &str) -> anyhow::Result<TraceFormat> {
+        match name {
+            "jsonl" => Ok(TraceFormat::Jsonl),
+            "chrome" => Ok(TraceFormat::Chrome),
+            other => anyhow::bail!("unknown trace format `{other}` — expected jsonl|chrome"),
+        }
+    }
+
+    /// The canonical name, as accepted by [`TraceFormat::from_name`].
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TraceFormat::Jsonl => "jsonl",
+            TraceFormat::Chrome => "chrome",
+        }
+    }
+}
+
+/// A request lifecycle phase with sim-time extent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanPhase {
+    /// Weight fetch ahead of on-board processing (placement subsystem).
+    Fetch,
+    /// On-board processing through the split point's stages.
+    Proc,
+    /// ISL serialization of the activation onto the next hop's link.
+    RelayTx,
+    /// ISL propagation between two satellites.
+    RelayProp,
+    /// Downlink: queueing for the transmitter plus the ground-contact
+    /// transfer itself (pass wait is inside `start..end`).
+    Tx,
+    /// Ground-station forwarding plus cloud-side suffix inference.
+    Cloud,
+}
+
+impl SpanPhase {
+    /// Wire name used in both export formats.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanPhase::Fetch => "fetch",
+            SpanPhase::Proc => "proc",
+            SpanPhase::RelayTx => "relay_tx",
+            SpanPhase::RelayProp => "relay_prop",
+            SpanPhase::Tx => "tx",
+            SpanPhase::Cloud => "cloud",
+        }
+    }
+}
+
+/// Why a request was rejected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectPhase {
+    /// Refused at arrival: no eligible satellite, or the admission
+    /// energy/deadline check failed on the routed satellite.
+    Admission,
+    /// Refused at transmit time: the energy check failed when the
+    /// downlink or relay transfer came due.
+    Transmit,
+}
+
+impl RejectPhase {
+    /// Wire name used in both export formats.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RejectPhase::Admission => "admission",
+            RejectPhase::Transmit => "transmit",
+        }
+    }
+}
+
+/// One recorded event. All `t`/`queued`/`start`/`end` fields are sim
+/// seconds since the start of the run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// A request reached the constellation.
+    Arrival {
+        /// Request id (workload-assigned, stable across runs).
+        req: u64,
+        /// Arrival time.
+        t: f64,
+    },
+    /// The coordinator picked a satellite and the solver picked a split.
+    Routed {
+        /// Request id.
+        req: u64,
+        /// Decision time (same sim instant as the arrival).
+        t: f64,
+        /// Serving satellite index.
+        sat: usize,
+        /// Chosen split index `s ∈ [0, depth]`.
+        split: usize,
+        /// Model depth `K` the split indexes into.
+        depth: usize,
+    },
+    /// A lifecycle phase with sim-time extent. Spans are recorded when
+    /// the phase is *scheduled*, so a later energy reject can cut a
+    /// request short after its last span (the reject mark follows).
+    Span {
+        /// Request id.
+        req: u64,
+        /// Satellite the phase runs on (for `relay_prop`, the hop source;
+        /// for `cloud`, the downlinking satellite).
+        sat: usize,
+        /// The phase.
+        phase: SpanPhase,
+        /// When the work was enqueued. `start - queued` is FIFO wait.
+        queued: f64,
+        /// When service began.
+        start: f64,
+        /// When service completed.
+        end: f64,
+    },
+    /// The request finished end-to-end.
+    Done {
+        /// Request id.
+        req: u64,
+        /// Serving satellite index.
+        sat: usize,
+        /// Completion time.
+        t: f64,
+        /// Split index the request ran with.
+        split: usize,
+        /// Relay path as hop-target satellite indices (empty = no relay).
+        path: Vec<usize>,
+    },
+    /// The request was refused.
+    Reject {
+        /// Request id.
+        req: u64,
+        /// Rejection time.
+        t: f64,
+        /// Satellite charged with the reject, if one was routed.
+        sat: Option<usize>,
+        /// Where in the lifecycle the refusal happened.
+        phase: RejectPhase,
+    },
+    /// The request could never finish (dead/pinned transmitter) or was
+    /// still in flight when the horizon closed.
+    Unfinished {
+        /// Request id.
+        req: u64,
+        /// Time the request was written off (horizon end for drains).
+        t: f64,
+        /// Satellite holding the request, if known.
+        sat: Option<usize>,
+    },
+    /// Periodic per-satellite state sample.
+    Gauge {
+        /// Satellite index.
+        sat: usize,
+        /// Sample tick (a multiple of [`TraceConfig::sample_every`]).
+        t: f64,
+        /// Battery state of charge in `[0,1]` (1.0 when unbatteried).
+        soc: f64,
+        /// Coordinator queue depth (admitted, not yet completed).
+        queue: usize,
+        /// Seconds of processing backlog ahead of a new job.
+        proc_busy_s: f64,
+        /// Seconds of transmit backlog, or `-1.0` when the transmitter
+        /// is pinned dead (the JSON export cannot carry infinity).
+        tx_busy_s: f64,
+        /// Bytes of model weights resident in the artifact store.
+        store_bytes: f64,
+    },
+}
+
+/// Bounded ring recorder the fleet DES writes into.
+///
+/// Hooks are cheap (`Vec` push or overwrite) and *never* feed back into
+/// the simulation: the recorder only observes. With the ring full, new
+/// events overwrite the oldest so a trace always holds the most recent
+/// window of the run, and [`Trace::dropped`] reports the loss.
+#[derive(Debug)]
+pub struct Recorder {
+    cfg: TraceConfig,
+    ring: Vec<TraceEvent>,
+    /// Next overwrite position once `ring.len() == cfg.capacity`.
+    head: usize,
+    dropped: u64,
+    /// Next gauge tick, in sim seconds.
+    next_sample: f64,
+}
+
+impl Recorder {
+    /// A recorder with the given knobs. Capacity 0 is clamped to 1 so
+    /// the ring type never has to special-case emptiness.
+    pub fn new(cfg: TraceConfig) -> Recorder {
+        let cfg = TraceConfig {
+            capacity: cfg.capacity.max(1),
+            ..cfg
+        };
+        Recorder {
+            ring: Vec::new(),
+            head: 0,
+            dropped: 0,
+            next_sample: 0.0,
+            cfg,
+        }
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        if self.ring.len() < self.cfg.capacity {
+            self.ring.push(ev);
+        } else {
+            self.ring[self.head] = ev;
+            self.head = (self.head + 1) % self.cfg.capacity;
+            self.dropped += 1;
+        }
+    }
+
+    /// Record a request arrival.
+    pub fn arrival(&mut self, req: u64, t: f64) {
+        self.push(TraceEvent::Arrival { req, t });
+    }
+
+    /// Record the routing + split decision for a request.
+    pub fn routed(&mut self, req: u64, t: f64, sat: usize, split: usize, depth: usize) {
+        self.push(TraceEvent::Routed {
+            req,
+            t,
+            sat,
+            split,
+            depth,
+        });
+    }
+
+    /// Record a lifecycle phase span.
+    pub fn span(
+        &mut self,
+        phase: SpanPhase,
+        req: u64,
+        sat: usize,
+        queued: f64,
+        start: f64,
+        end: f64,
+    ) {
+        self.push(TraceEvent::Span {
+            req,
+            sat,
+            phase,
+            queued,
+            start,
+            end,
+        });
+    }
+
+    /// Record an end-to-end completion.
+    pub fn done(&mut self, req: u64, sat: usize, t: f64, split: usize, path: Vec<usize>) {
+        self.push(TraceEvent::Done {
+            req,
+            sat,
+            t,
+            split,
+            path,
+        });
+    }
+
+    /// Record a rejection.
+    pub fn reject(&mut self, phase: RejectPhase, req: u64, t: f64, sat: Option<usize>) {
+        self.push(TraceEvent::Reject { req, t, sat, phase });
+    }
+
+    /// Record a request that can never finish.
+    pub fn unfinished(&mut self, req: u64, t: f64, sat: Option<usize>) {
+        self.push(TraceEvent::Unfinished { req, t, sat });
+    }
+
+    /// Record one satellite's gauge sample at tick `t`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gauge(
+        &mut self,
+        t: f64,
+        sat: usize,
+        soc: f64,
+        queue: usize,
+        proc_busy_s: f64,
+        tx_busy_s: f64,
+        store_bytes: f64,
+    ) {
+        self.push(TraceEvent::Gauge {
+            sat,
+            t,
+            soc,
+            queue,
+            proc_busy_s,
+            tx_busy_s,
+            store_bytes,
+        });
+    }
+
+    /// Advance the gauge clock: returns the next due tick `<= now`, or
+    /// `None` when sampling is off or the next tick is in the future.
+    /// The DES calls this in a loop at every event pop, so ticks land on
+    /// exact multiples of `sample_every` regardless of event spacing —
+    /// which is what makes gauge samples deterministic.
+    pub fn next_tick(&mut self, now: f64) -> Option<f64> {
+        let every = self.cfg.sample_every.value();
+        if every <= 0.0 || self.next_sample > now {
+            return None;
+        }
+        let t = self.next_sample;
+        self.next_sample += every;
+        Some(t)
+    }
+
+    /// Finish recording: unwind the ring into chronological order and
+    /// bundle the satellite name table.
+    pub fn finish(self, sats: &[String]) -> Trace {
+        let mut events = Vec::with_capacity(self.ring.len());
+        events.extend_from_slice(&self.ring[self.head..]);
+        events.extend_from_slice(&self.ring[..self.head]);
+        Trace {
+            sats: sats.to_vec(),
+            events,
+            dropped: self.dropped,
+        }
+    }
+}
+
+/// A finished recording, carried on [`crate::sim::FleetResult::trace`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    /// Satellite names, indexed by the `sat` fields in [`TraceEvent`].
+    pub sats: Vec<String>,
+    /// Events in record order (chronological by construction — the DES
+    /// pops events in nondecreasing sim time).
+    pub events: Vec<TraceEvent>,
+    /// Events lost to ring overwrite (0 unless the run outgrew
+    /// [`TraceConfig::capacity`]).
+    pub dropped: u64,
+}
+
+impl Trace {
+    /// Total sim-seconds per phase, descending, the `trace_study`
+    /// example's "where did the time go" table. Service time (`end -
+    /// start`) accrues under the phase's wire name; FIFO wait (`start -
+    /// queued`) accrues under `"<phase>_wait"` where positive.
+    pub fn phase_totals(&self) -> Vec<(String, f64)> {
+        let mut totals: std::collections::BTreeMap<String, f64> = std::collections::BTreeMap::new();
+        for ev in &self.events {
+            if let TraceEvent::Span {
+                phase,
+                queued,
+                start,
+                end,
+                ..
+            } = ev
+            {
+                *totals.entry(phase.as_str().to_string()).or_insert(0.0) += end - start;
+                let wait = start - queued;
+                if wait > 0.0 {
+                    *totals
+                        .entry(format!("{}_wait", phase.as_str()))
+                        .or_insert(0.0) += wait;
+                }
+            }
+        }
+        let mut rows: Vec<(String, f64)> = totals.into_iter().collect();
+        rows.sort_by(|a, b| b.1.total_cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        rows
+    }
+
+    /// Count of events matching a predicate — convenience for tests and
+    /// examples (`trace.count(|e| matches!(e, TraceEvent::Done { .. }))`).
+    pub fn count(&self, pred: impl Fn(&TraceEvent) -> bool) -> usize {
+        self.events.iter().filter(|e| pred(e)).count()
+    }
+
+    /// Serialize to the given format and write to `path`.
+    pub fn write(&self, path: &str, format: TraceFormat) -> anyhow::Result<()> {
+        let text = match format {
+            TraceFormat::Jsonl => self.to_jsonl(),
+            TraceFormat::Chrome => self.to_chrome().to_string_pretty(),
+        };
+        std::fs::write(path, text)
+            .map_err(|e| anyhow::anyhow!("writing trace to {path}: {e}"))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(capacity: usize) -> Recorder {
+        Recorder::new(TraceConfig {
+            capacity,
+            sample_every: Seconds::ZERO,
+        })
+    }
+
+    #[test]
+    fn ring_keeps_the_most_recent_events() {
+        let mut r = tiny(3);
+        for i in 0..5u64 {
+            r.arrival(i, i as f64);
+        }
+        let t = r.finish(&[]);
+        assert_eq!(t.dropped, 2);
+        let reqs: Vec<u64> = t
+            .events
+            .iter()
+            .map(|e| match e {
+                TraceEvent::Arrival { req, .. } => *req,
+                other => panic!("unexpected {other:?}"),
+            })
+            .collect();
+        assert_eq!(reqs, vec![2, 3, 4], "oldest overwritten, order kept");
+    }
+
+    #[test]
+    fn gauge_ticks_land_on_exact_multiples() {
+        let mut r = Recorder::new(TraceConfig {
+            capacity: 16,
+            sample_every: Seconds(10.0),
+        });
+        // first pop at t=25 owes ticks 0, 10, 20; next at 31 owes 30
+        let mut ticks = Vec::new();
+        while let Some(t) = r.next_tick(25.0) {
+            ticks.push(t);
+        }
+        assert_eq!(ticks, vec![0.0, 10.0, 20.0]);
+        assert_eq!(r.next_tick(31.0), Some(30.0));
+        assert_eq!(r.next_tick(31.0), None);
+    }
+
+    #[test]
+    fn sampling_off_never_ticks() {
+        let mut r = tiny(4);
+        assert_eq!(r.next_tick(1e9), None);
+    }
+
+    #[test]
+    fn phase_totals_rank_service_and_wait() {
+        let mut r = tiny(16);
+        r.span(SpanPhase::Proc, 0, 0, 0.0, 5.0, 8.0); // 3 s service, 5 s wait
+        r.span(SpanPhase::Tx, 0, 0, 8.0, 8.0, 108.0); // 100 s service
+        let totals = r.finish(&["s0".into()]).phase_totals();
+        assert_eq!(totals[0].0, "tx");
+        assert!((totals[0].1 - 100.0).abs() < 1e-9);
+        let wait = totals.iter().find(|(n, _)| n == "proc_wait").unwrap();
+        assert!((wait.1 - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn format_names_round_trip() {
+        for f in [TraceFormat::Jsonl, TraceFormat::Chrome] {
+            assert_eq!(TraceFormat::from_name(f.as_str()).unwrap(), f);
+        }
+        assert!(TraceFormat::from_name("perfetto").is_err());
+    }
+}

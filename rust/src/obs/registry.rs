@@ -1,0 +1,218 @@
+//! A unified, name-addressed catalogue of simulation metrics.
+//!
+//! [`crate::sim::SimMetrics`] and [`crate::sim::SatMetrics`] keep their
+//! struct fields (every exporter and test built on them stays
+//! bit-identical), but they now also *project* into a
+//! [`MetricsRegistry`]: a sorted map from metric name to counter, gauge,
+//! or [`StreamingSummary`] histogram. New consumers — exporters,
+//! dashboards, future subsystems — address metrics by name
+//! (`"sim.completed"`, `"sat.sat-03.energy_j"`) instead of growing the
+//! field-at-a-time plumbing another arm. The full catalogue is listed in
+//! `docs/OBSERVABILITY.md`.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+use crate::util::stats::StreamingSummary;
+
+/// One registered metric.
+#[derive(Debug, Clone)]
+pub enum MetricValue {
+    /// Monotone event count.
+    Counter(u64),
+    /// Point-in-time or end-of-run level (Joules, bytes, ratios).
+    Gauge(f64),
+    /// Streaming distribution (mean/std/min/max + P50/P95/P99).
+    Histogram(StreamingSummary),
+}
+
+/// Sorted name → metric map. Deterministic iteration order (it is a
+/// `BTreeMap`) keeps every export built from a registry byte-stable.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    entries: BTreeMap<String, MetricValue>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Set a counter, replacing any previous value under `name`.
+    pub fn counter(&mut self, name: &str, value: u64) {
+        self.entries
+            .insert(name.to_string(), MetricValue::Counter(value));
+    }
+
+    /// Add to a counter, creating it at `delta` if absent. Registering
+    /// `name` as a non-counter first is a programming error (panics).
+    pub fn add(&mut self, name: &str, delta: u64) {
+        match self
+            .entries
+            .entry(name.to_string())
+            .or_insert(MetricValue::Counter(0))
+        {
+            MetricValue::Counter(c) => *c += delta,
+            other => panic!("metric `{name}` is not a counter: {other:?}"),
+        }
+    }
+
+    /// Set a gauge, replacing any previous value under `name`.
+    pub fn gauge(&mut self, name: &str, value: f64) {
+        self.entries
+            .insert(name.to_string(), MetricValue::Gauge(value));
+    }
+
+    /// Register a histogram snapshot (cloned in).
+    pub fn histogram(&mut self, name: &str, summary: &StreamingSummary) {
+        self.entries
+            .insert(name.to_string(), MetricValue::Histogram(summary.clone()));
+    }
+
+    /// Look up a metric by name.
+    pub fn get(&self, name: &str) -> Option<&MetricValue> {
+        self.entries.get(name)
+    }
+
+    /// A counter's value, if `name` is a registered counter.
+    pub fn counter_value(&self, name: &str) -> Option<u64> {
+        match self.entries.get(name) {
+            Some(MetricValue::Counter(c)) => Some(*c),
+            _ => None,
+        }
+    }
+
+    /// A gauge's value, if `name` is a registered gauge.
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        match self.entries.get(name) {
+            Some(MetricValue::Gauge(g)) => Some(*g),
+            _ => None,
+        }
+    }
+
+    /// Iterate metrics in name order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &MetricValue)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Number of registered metrics.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is registered.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Fold another registry in: counters add, gauges take the other's
+    /// value, histograms merge (scales must match, see
+    /// [`StreamingSummary::merge`]). Used when aggregating per-worker or
+    /// per-cell registries.
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for (name, value) in &other.entries {
+            match (self.entries.get_mut(name), value) {
+                (Some(MetricValue::Counter(a)), MetricValue::Counter(b)) => *a += b,
+                (Some(MetricValue::Gauge(a)), MetricValue::Gauge(b)) => *a = *b,
+                (Some(MetricValue::Histogram(a)), MetricValue::Histogram(b)) => a.merge(b),
+                (Some(mine), theirs) => {
+                    panic!("metric `{name}` kind mismatch: {mine:?} vs {theirs:?}")
+                }
+                (None, v) => {
+                    self.entries.insert(name.clone(), v.clone());
+                }
+            }
+        }
+    }
+
+    /// Deterministic JSON snapshot: counters and gauges as numbers,
+    /// histograms as `{count, mean, min, max, p50, p95, p99}` objects.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.entries
+                .iter()
+                .map(|(name, value)| {
+                    let v = match value {
+                        MetricValue::Counter(c) => Json::num(*c as f64),
+                        MetricValue::Gauge(g) => Json::num(*g),
+                        MetricValue::Histogram(h) => Json::obj(vec![
+                            ("count", Json::num(h.count() as f64)),
+                            ("mean", Json::num(h.mean())),
+                            ("min", Json::num(h.min())),
+                            ("max", Json::num(h.max())),
+                            ("p50", Json::num(h.p50())),
+                            ("p95", Json::num(h.p95())),
+                            ("p99", Json::num(h.p99())),
+                        ]),
+                    };
+                    (name.clone(), v)
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_and_histograms_register() {
+        let mut reg = MetricsRegistry::new();
+        reg.counter("sim.completed", 41);
+        reg.add("sim.completed", 1);
+        reg.gauge("sim.total_energy_j", 12.5);
+        let mut lat = StreamingSummary::for_latency();
+        lat.push(1.0);
+        lat.push(3.0);
+        reg.histogram("sim.latency_s", &lat);
+        assert_eq!(reg.counter_value("sim.completed"), Some(42));
+        assert_eq!(reg.gauge_value("sim.total_energy_j"), Some(12.5));
+        assert_eq!(reg.len(), 3);
+        match reg.get("sim.latency_s") {
+            Some(MetricValue::Histogram(h)) => assert_eq!(h.count(), 2),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn merge_adds_counters_and_merges_histograms() {
+        let mut a = MetricsRegistry::new();
+        a.counter("c", 1);
+        let mut h = StreamingSummary::for_latency();
+        h.push(1.0);
+        a.histogram("h", &h);
+        let mut b = MetricsRegistry::new();
+        b.counter("c", 2);
+        b.gauge("g", 7.0);
+        let mut h2 = StreamingSummary::for_latency();
+        h2.push(3.0);
+        b.histogram("h", &h2);
+        a.merge(&b);
+        assert_eq!(a.counter_value("c"), Some(3));
+        assert_eq!(a.gauge_value("g"), Some(7.0));
+        match a.get("h") {
+            Some(MetricValue::Histogram(h)) => assert_eq!(h.count(), 2),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn json_snapshot_is_name_sorted() {
+        let mut reg = MetricsRegistry::new();
+        reg.gauge("zeta", 1.0);
+        reg.counter("alpha", 2);
+        let text = reg.to_json().to_string_compact();
+        assert!(text.find("alpha").unwrap() < text.find("zeta").unwrap());
+    }
+
+    #[test]
+    fn iteration_is_sorted_by_name() {
+        let mut reg = MetricsRegistry::new();
+        reg.counter("b", 1);
+        reg.counter("a", 1);
+        let names: Vec<&str> = reg.iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["a", "b"]);
+    }
+}

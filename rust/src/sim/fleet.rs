@@ -98,6 +98,7 @@ use crate::energy::battery::Battery;
 use crate::energy::solar::SolarPanel;
 use crate::link::isl::{IslLink, IslTopology};
 use crate::link::route::{self, DownlinkOracle};
+use crate::obs::{Recorder, RejectPhase, SpanPhase, Trace, TraceConfig};
 use crate::placement::{ArtifactStore, PlacementConfig};
 use crate::sim::invariants::Audit;
 use crate::solver::engine::{SolverEngine, Telemetry};
@@ -195,6 +196,13 @@ pub struct FleetSimConfig {
     /// outcome. Off by default in release paths; the test suite and the
     /// CLI's `--audit on` switch it on.
     pub audit: bool,
+    /// Sim-time tracing ([`crate::obs`]): record request lifecycle spans
+    /// and periodic per-satellite gauges into a bounded ring, returned as
+    /// [`FleetResult::trace`]. `None` (the default everywhere) records
+    /// nothing — the recorder is never constructed and the run is
+    /// bit-identical to an untraced build. The recorder only observes;
+    /// enabling it never changes a run's outcome either.
+    pub trace: Option<TraceConfig>,
     /// Simulation horizon: events past it are dropped and counted as
     /// unfinished.
     pub horizon: Seconds,
@@ -211,6 +219,8 @@ pub struct FleetResult {
     /// Wall-clock breakdown, present iff [`FleetSimConfig::timing`] was
     /// set.
     pub timing: Option<RunTiming>,
+    /// The sim-time trace, present iff [`FleetSimConfig::trace`] was set.
+    pub trace: Option<Trace>,
 }
 
 /// Wall-clock profile of one fleet run (collected when
@@ -666,15 +676,20 @@ impl FleetSimulator {
         hot: &mut HotPath,
         sat: usize,
         i: usize,
+        req_id: u64,
         tx_bytes: Bytes,
         now: f64,
         q: &mut EventQueue<Event>,
         cluster: &mut ClusterState,
         metrics: &mut SimMetrics,
         flights: &mut [Option<Flight>],
+        rec: &mut Option<Recorder>,
     ) {
         if !hot.tx_free[sat].is_finite() {
             cluster.note_complete(sat, tx_bytes);
+            if let Some(r) = rec.as_mut() {
+                r.unfinished(req_id, now, Some(sat));
+            }
             metrics.note_unfinished(Some(sat));
             flights[i] = None;
             return;
@@ -685,6 +700,12 @@ impl FleetSimulator {
             .finish_transfer(start, tx_bytes, self.rate)
         {
             Some(finish) => {
+                if let Some(r) = rec.as_mut() {
+                    // the pass wait is inside start..finish: the span
+                    // covers queueing for the transmitter (queued..start)
+                    // and the contact-gated transfer (start..finish)
+                    r.span(SpanPhase::Tx, req_id, sat, now, start, finish);
+                }
                 hot.touch_tx(sat, finish);
                 q.schedule(finish, Event::TxDone(i));
             }
@@ -699,6 +720,9 @@ impl FleetSimulator {
                 // dies with it.
                 hot.touch_tx(sat, f64::INFINITY);
                 cluster.note_complete(sat, tx_bytes);
+                if let Some(r) = rec.as_mut() {
+                    r.unfinished(req_id, now, Some(sat));
+                }
                 metrics.note_unfinished(Some(sat));
                 flights[i] = None;
             }
@@ -796,10 +820,33 @@ impl FleetSimulator {
 
         let horizon = self.config.horizon.value();
         let mut audit = Audit::new(self.config.audit);
+        // sim-time tracing: `None` leaves every hook below a single
+        // branch-not-taken — the recorder only observes, never feeds back
+        let mut rec: Option<Recorder> = self.config.trace.clone().map(Recorder::new);
         while let Some(ev) = q.pop() {
             let now = ev.time;
             audit.on_pop(now);
             events += 1;
+            // gauge samples land on exact multiples of the configured
+            // cadence (clamped to the horizon), stamped with the tick
+            // time — pops are deterministic, so samples are too
+            if let Some(r) = rec.as_mut() {
+                while let Some(tick) = r.next_tick(now.min(horizon)) {
+                    for id in 0..n {
+                        let queue = cluster.get(id).map_or(0, |s| s.queue_depth);
+                        let proc_busy = (hot.proc_free[id] - tick).max(0.0);
+                        let tx_busy = if hot.tx_free[id].is_finite() {
+                            (hot.tx_free[id] - tick).max(0.0)
+                        } else {
+                            // the export cannot carry infinity: -1.0 marks
+                            // a pinned (dead) transmitter
+                            -1.0
+                        };
+                        let store = self.stores.get(id).map_or(0.0, |s| s.used_bytes().value());
+                        r.gauge(tick, id, self.states[id].soc(), queue, proc_busy, tx_busy, store);
+                    }
+                }
+            }
             if now > horizon {
                 // the queue is time-ordered: everything left is late too
                 break;
@@ -807,6 +854,9 @@ impl FleetSimulator {
             match ev.event {
                 Event::Arrival(i) => {
                     let req = &requests[i];
+                    if let Some(r) = rec.as_mut() {
+                        r.arrival(req.id, now);
+                    }
                     // refresh the coordinator's view of every satellite
                     for id in 0..n {
                         let soc = self.states[id].refresh(now);
@@ -856,6 +906,9 @@ impl FleetSimulator {
                     let Some(sat) = router.route(req, &cluster) else {
                         // no eligible satellite (e.g. every battery below
                         // the energy-aware floor)
+                        if let Some(r) = rec.as_mut() {
+                            r.reject(RejectPhase::Admission, req.id, now, None);
+                        }
                         metrics.reject_admission(None);
                         continue;
                     };
@@ -871,6 +924,9 @@ impl FleetSimulator {
                         engine.solve_parts(&inst, &tel).decision.split
                     };
                     let k = inst.depth();
+                    if let Some(r) = rec.as_mut() {
+                        r.routed(req.id, now, sat, s, k);
+                    }
 
                     // satellite-side work and energy for stages 0..s
                     let mut proc_time = Seconds::ZERO;
@@ -881,6 +937,9 @@ impl FleetSimulator {
                     }
                     // admission: battery must cover the processing draw
                     if !self.states[sat].try_draw(now, proc_energy) {
+                        if let Some(r) = rec.as_mut() {
+                            r.reject(RejectPhase::Admission, req.id, now, Some(sat));
+                        }
                         metrics.reject_admission(Some(sat));
                         continue;
                     }
@@ -929,12 +988,18 @@ impl FleetSimulator {
                     match fetch {
                         Some((_, t)) => {
                             // the weights must land before stage 0 can run
+                            if let Some(r) = rec.as_mut() {
+                                r.span(SpanPhase::Fetch, req.id, sat, now, now, now + t.value());
+                            }
                             q.schedule(now + t.value(), Event::FetchDone(i));
                         }
                         None => {
                             // FIFO processing payload
                             let start = now.max(hot.proc_free[sat]);
                             let done = start + proc_time.value();
+                            if let Some(r) = rec.as_mut() {
+                                r.span(SpanPhase::Proc, req.id, sat, now, start, done);
+                            }
                             hot.proc_free[sat] = done;
                             q.schedule(done, Event::SatDone(i));
                         }
@@ -981,6 +1046,9 @@ impl FleetSimulator {
                     // weights on board: join the processing FIFO
                     let start = now.max(hot.proc_free[sat]);
                     let done = start + proc_time.value();
+                    if let Some(r) = rec.as_mut() {
+                        r.span(SpanPhase::Proc, requests[i].id, sat, now, start, done);
+                    }
                     hot.proc_free[sat] = done;
                     q.schedule(done, Event::SatDone(i));
                 }
@@ -998,7 +1066,7 @@ impl FleetSimulator {
                     if split == depth {
                         // all-on-satellite: complete here
                         cluster.note_complete(sat, tx_bytes);
-                        complete(&mut metrics, requests, &mut flights, i, now);
+                        complete(&mut metrics, requests, &mut flights, i, now, &mut rec);
                         continue;
                     }
                     // ISL relay: hand the tensor down the multi-hop path
@@ -1015,6 +1083,10 @@ impl FleetSimulator {
                             f.hop = 0;
                         }
                         let serialize = first.rate.transfer_time(tx_bytes).value();
+                        if let Some(r) = rec.as_mut() {
+                            let end = now + serialize;
+                            r.span(SpanPhase::RelayTx, requests[i].id, sat, now, now, end);
+                        }
                         q.schedule(now + serialize, Event::RelayTxDone(i));
                         continue;
                     }
@@ -1024,12 +1096,14 @@ impl FleetSimulator {
                         &mut hot,
                         sat,
                         i,
+                        requests[i].id,
                         tx_bytes,
                         now,
                         &mut q,
                         &mut cluster,
                         &mut metrics,
                         &mut flights,
+                        &mut rec,
                     );
                 }
                 Event::RelayTxDone(i) => {
@@ -1043,6 +1117,9 @@ impl FleetSimulator {
                     // by the rate ratio
                     let e_isl = Joules(e_off.value() * self.rate.value() / link.rate.value());
                     if !self.states[hop_src].try_draw(now, e_isl) {
+                        if let Some(r) = rec.as_mut() {
+                            r.reject(RejectPhase::Transmit, requests[i].id, now, Some(hop_src));
+                        }
                         metrics.reject_transmit(Some(hop_src));
                         cluster.note_complete(hop_src, tx_bytes);
                         flights[i] = None;
@@ -1059,6 +1136,10 @@ impl FleetSimulator {
                     // the tensor has left this satellite: its queue slot
                     // frees here, the next carrier's opens at reception
                     cluster.note_complete(hop_src, tx_bytes);
+                    if let Some(r) = rec.as_mut() {
+                        let end = now + link.propagation.value();
+                        r.span(SpanPhase::RelayProp, requests[i].id, hop_src, now, now, end);
+                    }
                     q.schedule(now + link.propagation.value(), Event::RelayRxDone(i));
                 }
                 Event::RelayRxDone(i) => {
@@ -1085,6 +1166,10 @@ impl FleetSimulator {
                             f.hop = hop + 1;
                             let next = f.route[f.hop];
                             let serialize = next.rate.transfer_time(tx_bytes).value();
+                            if let Some(r) = rec.as_mut() {
+                                let end = now + serialize;
+                                r.span(SpanPhase::RelayTx, requests[i].id, here, now, now, end);
+                            }
                             q.schedule(now + serialize, Event::RelayTxDone(i));
                             continue;
                         }
@@ -1097,12 +1182,14 @@ impl FleetSimulator {
                         &mut hot,
                         here,
                         i,
+                        requests[i].id,
                         tx_bytes,
                         now,
                         &mut q,
                         &mut cluster,
                         &mut metrics,
                         &mut flights,
+                        &mut rec,
                     );
                 }
                 Event::TxDone(i) => {
@@ -1113,6 +1200,9 @@ impl FleetSimulator {
                     // transmission energy at completion, drawn from the
                     // satellite that actually keyed the antenna
                     if !self.states[down_sat].try_draw(now, e_off) {
+                        if let Some(r) = rec.as_mut() {
+                            r.reject(RejectPhase::Transmit, requests[i].id, now, Some(down_sat));
+                        }
                         metrics.reject_transmit(Some(down_sat));
                         cluster.note_complete(down_sat, tx_bytes);
                         flights[i] = None;
@@ -1129,18 +1219,26 @@ impl FleetSimulator {
                     cluster.note_complete(down_sat, tx_bytes);
                     // WAN hop + cloud compute (both capacity-rich)
                     let done = now + t_gc.value() + t_cloud_suffix.value();
+                    if let Some(r) = rec.as_mut() {
+                        r.span(SpanPhase::Cloud, requests[i].id, down_sat, now, now, done);
+                    }
                     q.schedule(done, Event::CloudDone(i));
                 }
                 Event::CloudDone(i) => {
-                    complete(&mut metrics, requests, &mut flights, i, now);
+                    complete(&mut metrics, requests, &mut flights, i, now, &mut rec);
                 }
             }
         }
 
         // horizon drain: anything still in flight (or never admitted
         // because its arrival event fell past the cut) is unfinished
-        for f in flights.iter().flatten() {
-            metrics.note_unfinished(Some(f.sat));
+        for (i, slot) in flights.iter().enumerate() {
+            if let Some(f) = slot {
+                if let Some(r) = rec.as_mut() {
+                    r.unfinished(requests[i].id, horizon, Some(f.sat));
+                }
+                metrics.note_unfinished(Some(f.sat));
+            }
         }
         let accounted = metrics.completed() + metrics.rejected() + metrics.unfinished;
         for _ in accounted..requests.len() as u64 {
@@ -1168,11 +1266,14 @@ impl FleetSimulator {
             }
         });
 
+        let trace = rec.map(|r| r.finish(&names));
+
         Ok(FleetResult {
             metrics,
             states: self.states,
             horizon: self.config.horizon,
             timing,
+            trace,
         })
     }
 }
@@ -1183,9 +1284,14 @@ fn complete(
     flights: &mut [Option<Flight>],
     i: usize,
     now: f64,
+    rec: &mut Option<Recorder>,
 ) {
     let f = flights[i].take().expect("flight in progress");
     let req = &requests[i];
+    if let Some(r) = rec.as_mut() {
+        let path = f.route.iter().map(|h| h.to).collect();
+        r.done(req.id, f.sat, now, f.split, path);
+    }
     metrics.record(RequestRecord {
         id: req.id,
         data: req.data,
@@ -1238,6 +1344,7 @@ mod tests {
             route_cache: true,
             timing: false,
             audit: true,
+            trace: None,
             horizon: Seconds::from_hours(10_000.0),
         }
     }
@@ -1398,6 +1505,7 @@ mod tests {
             route_cache: true,
             timing: false,
             audit: true,
+            trace: None,
             horizon: Seconds::from_hours(10_000.0),
         };
         let trace = fixed_trace(4, Seconds(5000.0), Bytes::from_mb(50.0));
@@ -1431,6 +1539,7 @@ mod tests {
             route_cache: true,
             timing: false,
             audit: true,
+            trace: None,
             horizon: Seconds::from_hours(10_000.0),
         };
         let trace = fixed_trace(3, Seconds(100.0), Bytes::from_mb(50.0));
@@ -1493,6 +1602,7 @@ mod tests {
             route_cache: true,
             timing: false,
             audit: true,
+            trace: None,
             horizon: Seconds::from_hours(10_000.0),
         };
         let trace = vec![Request {
@@ -1590,6 +1700,7 @@ mod tests {
             route_cache: true,
             timing: false,
             audit: true,
+            trace: None,
             horizon: Seconds::from_hours(10_000.0),
         };
         let trace = vec![Request {
@@ -1723,6 +1834,7 @@ mod tests {
             route_cache: true,
             timing: false,
             audit: true,
+            trace: None,
             horizon: Seconds::from_hours(10_000.0),
         };
         let mk = |id: u64, at: f64| Request {

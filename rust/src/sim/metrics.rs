@@ -9,6 +9,7 @@
 //! breakdown ([`SatMetrics`]) alongside the aggregate, including the ISL
 //! relay traffic (handoffs out, handoffs in, bytes crossing ISLs).
 
+use crate::obs::MetricsRegistry;
 use crate::util::stats::{StreamingSummary, Welford};
 use crate::util::units::{Bytes, Joules, Seconds};
 
@@ -135,6 +136,29 @@ impl SatMetrics {
     /// across cells without re-reading records).
     pub fn latency_summary(&self) -> &StreamingSummary {
         &self.latency
+    }
+
+    /// Project this satellite's slice into `reg` under the
+    /// `sat.<name>.` prefix. Every struct field keeps its value; the
+    /// registry is a second, name-addressed view (see
+    /// `docs/OBSERVABILITY.md` for the catalogue).
+    pub fn register_into(&self, reg: &mut MetricsRegistry) {
+        let p = format!("sat.{}", self.name);
+        reg.counter(&format!("{p}.completed"), self.completed);
+        reg.counter(&format!("{p}.rejected_admission"), self.rejected_admission);
+        reg.counter(&format!("{p}.rejected_transmit"), self.rejected_transmit);
+        reg.counter(&format!("{p}.unfinished"), self.unfinished);
+        reg.counter(&format!("{p}.relays_out"), self.relays_out);
+        reg.counter(&format!("{p}.relays_in"), self.relays_in);
+        reg.gauge(&format!("{p}.relayed_bytes"), self.relayed_bytes.value());
+        reg.gauge(&format!("{p}.transit_bytes"), self.transit_bytes.value());
+        reg.counter(&format!("{p}.artifact_hits"), self.artifact_hits);
+        reg.counter(&format!("{p}.artifact_misses"), self.artifact_misses);
+        reg.counter(&format!("{p}.evictions"), self.evictions);
+        reg.gauge(&format!("{p}.weight_bytes_in"), self.weight_bytes_in.value());
+        reg.gauge(&format!("{p}.energy_j"), self.energy.value());
+        reg.gauge(&format!("{p}.downlinked_bytes"), self.downlinked.value());
+        reg.histogram(&format!("{p}.latency_s"), &self.latency);
     }
 }
 
@@ -375,6 +399,37 @@ impl SimMetrics {
         }
         self.completed() as f64 / horizon.value()
     }
+
+    /// Project the whole run — aggregate fields plus every satellite's
+    /// slice — into a name-addressed [`MetricsRegistry`]. Counts are
+    /// counters, byte/energy totals are gauges, and the latency
+    /// distributions are histograms; names are stable (`sim.*`,
+    /// `sat.<name>.*`) and catalogued in `docs/OBSERVABILITY.md`. The
+    /// registry is derived read-only: calling this never perturbs the
+    /// struct fields, so all existing exports stay bit-identical.
+    pub fn registry(&self) -> MetricsRegistry {
+        let mut reg = MetricsRegistry::new();
+        reg.counter("sim.completed", self.completed());
+        reg.counter("sim.rejected_admission", self.rejected_admission);
+        reg.counter("sim.rejected_transmit", self.rejected_transmit);
+        reg.counter("sim.unfinished", self.unfinished);
+        reg.counter("sim.relays", self.relays);
+        reg.gauge("sim.relayed_bytes", self.relayed_bytes.value());
+        reg.counter("sim.route_recomputes", self.route_recomputes);
+        reg.counter("sim.route_cache_hits", self.route_cache_hits);
+        reg.counter("sim.route_cache_misses", self.route_cache_misses);
+        reg.counter("sim.artifact_hits", self.artifact_hits);
+        reg.counter("sim.artifact_misses", self.artifact_misses);
+        reg.counter("sim.evictions", self.evictions);
+        reg.gauge("sim.weight_bytes_in", self.weight_bytes_in.value());
+        reg.gauge("sim.total_downlinked_bytes", self.total_downlinked.value());
+        reg.gauge("sim.total_energy_j", self.total_energy().value());
+        reg.histogram("sim.latency_s", &self.latency);
+        for s in &self.per_sat {
+            s.register_into(&mut reg);
+        }
+        reg
+    }
 }
 
 #[cfg(test)]
@@ -527,6 +582,78 @@ mod tests {
         let p99 = m.latency_p99().value();
         assert!((p99 - 99.0).abs() / 99.0 < 0.15, "p99 {p99}");
         assert!(p50 <= p95 && p95 <= p99, "quantiles must be monotone");
+    }
+
+    #[test]
+    fn registry_projection_mirrors_struct_fields() {
+        let mut m = SimMetrics::for_fleet(&["alpha".to_string(), "beta".to_string()]);
+        m.record(rec(1, 0, 10.0, 2.0));
+        m.record(rec(2, 1, 30.0, 4.0));
+        m.reject_admission(Some(0));
+        m.reject_transmit(Some(1));
+        m.note_unfinished(None);
+        m.note_relay(0, 1, Bytes::from_mb(40.0));
+        m.note_artifact_hit(0);
+        m.note_artifact_miss(1, Bytes::from_mb(200.0));
+        m.note_eviction(1);
+        m.route_cache_hits = 5;
+        m.route_cache_misses = 2;
+        m.route_recomputes = 1;
+        let reg = m.registry();
+        assert_eq!(reg.counter_value("sim.completed"), Some(m.completed()));
+        assert_eq!(reg.counter_value("sim.rejected_admission"), Some(1));
+        assert_eq!(reg.counter_value("sim.rejected_transmit"), Some(1));
+        assert_eq!(reg.counter_value("sim.unfinished"), Some(1));
+        assert_eq!(reg.counter_value("sim.relays"), Some(1));
+        assert_eq!(reg.counter_value("sim.route_cache_hits"), Some(5));
+        assert_eq!(reg.counter_value("sim.route_cache_misses"), Some(2));
+        assert_eq!(reg.counter_value("sim.route_recomputes"), Some(1));
+        assert_eq!(reg.counter_value("sim.artifact_hits"), Some(1));
+        assert_eq!(reg.counter_value("sim.artifact_misses"), Some(1));
+        assert_eq!(reg.counter_value("sim.evictions"), Some(1));
+        assert_eq!(
+            reg.gauge_value("sim.relayed_bytes"),
+            Some(m.relayed_bytes.value())
+        );
+        assert_eq!(
+            reg.gauge_value("sim.weight_bytes_in"),
+            Some(m.weight_bytes_in.value())
+        );
+        assert_eq!(
+            reg.gauge_value("sim.total_downlinked_bytes"),
+            Some(m.total_downlinked.value())
+        );
+        assert_eq!(
+            reg.gauge_value("sim.total_energy_j"),
+            Some(m.total_energy().value())
+        );
+        match reg.get("sim.latency_s") {
+            Some(crate::obs::MetricValue::Histogram(h)) => {
+                assert_eq!(h.count(), m.completed());
+                assert_eq!(h.p99(), m.latency_summary().p99());
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // per-sat slices land under the sat.<name>. prefix
+        assert_eq!(reg.counter_value("sat.alpha.completed"), Some(1));
+        assert_eq!(reg.counter_value("sat.beta.completed"), Some(1));
+        assert_eq!(reg.counter_value("sat.alpha.rejected_admission"), Some(1));
+        assert_eq!(reg.counter_value("sat.beta.rejected_transmit"), Some(1));
+        assert_eq!(reg.counter_value("sat.alpha.relays_out"), Some(1));
+        assert_eq!(reg.counter_value("sat.beta.relays_in"), Some(1));
+        assert_eq!(
+            reg.gauge_value("sat.beta.weight_bytes_in"),
+            Some(Bytes::from_mb(200.0).value())
+        );
+        assert_eq!(
+            reg.gauge_value("sat.alpha.energy_j"),
+            Some(m.per_sat()[0].energy.value())
+        );
+        // projection is read-only: a second call is identical
+        assert_eq!(
+            reg.to_json().to_string_compact(),
+            m.registry().to_json().to_string_compact()
+        );
     }
 
     #[test]

@@ -25,6 +25,7 @@ use super::metrics::SimMetrics;
 use super::workload::Request;
 use crate::coordinator::router::RoutingPolicy;
 use crate::dnn::profile::ModelProfile;
+use crate::obs::{Trace, TraceConfig};
 use crate::solver::engine::SolverEngine;
 use crate::solver::instance::InstanceBuilder;
 use crate::util::units::Seconds;
@@ -40,6 +41,9 @@ pub struct SimConfig {
     /// Measure the run's hot-path timing breakdown (see
     /// [`RunTiming`]; adds two `Instant` reads per event).
     pub timing: bool,
+    /// Sim-time tracing ([`crate::obs`]): `None` records nothing and is
+    /// bit-identical to an untraced build.
+    pub trace: Option<TraceConfig>,
     /// Simulation horizon: events past it are dropped and counted as
     /// [`SimMetrics::unfinished`].
     pub horizon: Seconds,
@@ -55,6 +59,8 @@ pub struct SimResult {
     pub horizon: Seconds,
     /// Hot-path timing breakdown (`Some` iff [`SimConfig::timing`]).
     pub timing: Option<RunTiming>,
+    /// The sim-time trace (`Some` iff [`SimConfig::trace`]).
+    pub trace: Option<Trace>,
 }
 
 /// The single-satellite simulator (an N = 1 fleet under the hood).
@@ -95,6 +101,7 @@ impl Simulator {
             profiles,
             contact,
             timing,
+            trace,
             horizon,
         } = config;
         let fleet = FleetSimConfig {
@@ -112,6 +119,7 @@ impl Simulator {
             // rides on build profile here: on under `cargo test`, off in
             // release sweeps. It is read-only either way.
             audit: cfg!(debug_assertions),
+            trace,
             horizon,
         };
         let mut sim = FleetSimulator::new(fleet);
@@ -122,6 +130,7 @@ impl Simulator {
             state: result.states.remove(0),
             horizon: result.horizon,
             timing: result.timing,
+            trace: result.trace,
         })
     }
 }
@@ -158,6 +167,7 @@ mod tests {
                 Seconds::from_minutes(6.0),
             ),
             timing: false,
+            trace: None,
             horizon: Seconds::from_hours(48.0),
         }
     }

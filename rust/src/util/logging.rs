@@ -34,21 +34,44 @@ impl log::Log for StderrLogger {
     fn flush(&self) {}
 }
 
+/// Map a raw `LEO_INFER_LOG` value to a level. Unset means the `info`
+/// default; an unrecognized value *also* falls back to `info`, but
+/// returns a one-line warning naming the bad value and the accepted set
+/// instead of failing silently.
+pub fn parse_level(raw: Option<&str>) -> (LevelFilter, Option<String>) {
+    match raw {
+        Some("error") => (LevelFilter::Error, None),
+        Some("warn") => (LevelFilter::Warn, None),
+        Some("info") => (LevelFilter::Info, None),
+        Some("debug") => (LevelFilter::Debug, None),
+        Some("trace") => (LevelFilter::Trace, None),
+        None => (LevelFilter::Info, None),
+        Some(other) => (
+            LevelFilter::Info,
+            Some(format!(
+                "unknown LEO_INFER_LOG value `{other}` — expected \
+                 error|warn|info|debug|trace; using info"
+            )),
+        ),
+    }
+}
+
 /// Install the logger. Safe to call multiple times (subsequent calls are
-/// no-ops). Returns the active level.
+/// no-ops). Returns the active level. A malformed `LEO_INFER_LOG` value
+/// is reported once, on the install that wins.
 pub fn init() -> LevelFilter {
-    let level = match std::env::var("LEO_INFER_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        _ => LevelFilter::Info,
-    };
+    let raw = std::env::var("LEO_INFER_LOG").ok();
+    let (level, warning) = parse_level(raw.as_deref());
     let logger = Box::new(StderrLogger {
         start: Instant::now(),
     });
     if log::set_boxed_logger(logger).is_ok() {
         log::set_max_level(level);
+        if let Some(w) = warning {
+            // the logger is live but `log::warn!` from inside its own
+            // module races test captures; one plain stderr line suffices
+            eprintln!("WARN  leo_infer::util::logging: {w}");
+        }
     }
     log::max_level()
 }
@@ -63,5 +86,34 @@ mod tests {
         let b = init();
         assert_eq!(a, b);
         log::info!("logging smoke test");
+    }
+
+    #[test]
+    fn known_levels_parse_silently() {
+        for (raw, want) in [
+            ("error", LevelFilter::Error),
+            ("warn", LevelFilter::Warn),
+            ("info", LevelFilter::Info),
+            ("debug", LevelFilter::Debug),
+            ("trace", LevelFilter::Trace),
+        ] {
+            let (level, warning) = parse_level(Some(raw));
+            assert_eq!(level, want, "{raw}");
+            assert_eq!(warning, None, "{raw}");
+        }
+    }
+
+    #[test]
+    fn unset_defaults_to_info_without_warning() {
+        assert_eq!(parse_level(None), (LevelFilter::Info, None));
+    }
+
+    #[test]
+    fn unknown_value_warns_naming_it_and_the_accepted_set() {
+        let (level, warning) = parse_level(Some("inf"));
+        assert_eq!(level, LevelFilter::Info);
+        let w = warning.expect("unknown value must warn");
+        assert!(w.contains("`inf`"), "{w}");
+        assert!(w.contains("error|warn|info|debug|trace"), "{w}");
     }
 }

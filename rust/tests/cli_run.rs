@@ -1,0 +1,207 @@
+//! CLI end-to-end: the `leo-infer` binary's observability surface.
+//!
+//! Drives the real binary (`CARGO_BIN_EXE_leo-infer`) through the flows
+//! CI scripts rely on: `--timing` prints its breakdown, `--trace` writes
+//! a schema-valid export that `trace-validate` accepts, and
+//! `bench-schema` distinguishes shape drift from value drift. The
+//! [`RunTiming`] invariants themselves are asserted through the library
+//! (phases can't exceed the wall clock they partition).
+
+use std::process::Command;
+
+use leo_infer::config::FleetScenario;
+use leo_infer::dnn::profile::ModelProfile;
+use leo_infer::sim::fleet::FleetSimulator;
+use leo_infer::solver::SolverRegistry;
+use leo_infer::util::rng::Pcg64;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_leo-infer"))
+}
+
+fn tmp(name: &str) -> String {
+    let dir = std::env::temp_dir().join(format!("leo-infer-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name).to_string_lossy().into_owned()
+}
+
+/// `RunTiming` partitions the wall clock: solve + route + dispatch never
+/// exceeds the total, and a real run counts real events.
+#[test]
+fn run_timing_phases_partition_the_wall_clock() {
+    let mut scen = FleetScenario::walker_631();
+    scen.sats = 4;
+    scen.planes = 2;
+    scen.horizon_hours = 6.0;
+    scen.interarrival_s = 1200.0;
+    let mut rng = Pcg64::seeded(41);
+    let workload = scen.workload().unwrap().generate(scen.horizon(), &mut rng);
+    let profile = ModelProfile::sampled(8, &mut rng);
+    let mut cfg = scen.sim_config(profile).unwrap();
+    cfg.timing = true;
+    let engine = SolverRegistry::engine("ilpb").unwrap();
+    let result = FleetSimulator::new(cfg).run(&workload, &engine).unwrap();
+    let t = result.timing.expect("timing was requested");
+    assert!(t.events > 0, "a fleet run must pop events");
+    assert!(t.wall_s > 0.0);
+    assert!(t.solve_s >= 0.0 && t.route_s >= 0.0 && t.dispatch_s >= 0.0);
+    // the phases partition the measured wall time (1 ms slack for timer
+    // granularity — the sub-timers nest inside the run's own clock)
+    assert!(
+        t.solve_s + t.route_s + t.dispatch_s <= t.wall_s + 1e-3,
+        "phases {:.6}+{:.6}+{:.6} s exceed wall {:.6} s",
+        t.solve_s,
+        t.route_s,
+        t.dispatch_s,
+        t.wall_s
+    );
+    assert!(t.events_per_sec() > 0.0);
+}
+
+/// `--timing` surfaces the breakdown on stdout.
+#[test]
+fn timing_flag_prints_the_breakdown() {
+    let out = bin()
+        .args([
+            "simulate",
+            "--fleet",
+            "4/2/1",
+            "--hours",
+            "6",
+            "--interarrival-s",
+            "1800",
+            "--timing",
+        ])
+        .output()
+        .expect("binary runs");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("timing      :") && stdout.contains("events/s"),
+        "missing timing block in:\n{stdout}"
+    );
+}
+
+/// `--trace` writes a JSONL export the validator subcommand accepts, and
+/// two identical invocations produce byte-identical files.
+#[test]
+fn trace_flag_roundtrips_through_trace_validate() {
+    let path_a = tmp("cli-trace-a.jsonl");
+    let path_b = tmp("cli-trace-b.jsonl");
+    for path in [path_a.as_str(), path_b.as_str()] {
+        let out = bin()
+            .args([
+                "simulate",
+                "--fleet",
+                "4/2/1",
+                "--hours",
+                "6",
+                "--interarrival-s",
+                "1800",
+                "--trace",
+                path,
+                "--trace-sample-every",
+                "3600",
+            ])
+            .output()
+            .expect("binary runs");
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        assert!(stdout.contains("trace       :"), "missing receipt in:\n{stdout}");
+    }
+    let a = std::fs::read(&path_a).unwrap();
+    let b = std::fs::read(&path_b).unwrap();
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "same seed + scenario must write identical traces");
+    // the library validator agrees with what the CLI wrote...
+    let (fmt, summary) =
+        leo_infer::obs::validate(&String::from_utf8(a).unwrap()).expect("trace must validate");
+    assert_eq!(fmt, leo_infer::obs::TraceFormat::Jsonl);
+    assert!(summary.events > 0 && summary.gauges > 0);
+    // ...and so does the subcommand CI calls
+    let check = bin().args(["trace-validate", path_a.as_str()]).output().unwrap();
+    assert!(
+        check.status.success(),
+        "{}",
+        String::from_utf8_lossy(&check.stderr)
+    );
+    assert!(String::from_utf8_lossy(&check.stdout).contains("valid jsonl trace"));
+    // a corrupted file is refused
+    std::fs::write(&path_b, "{\"kind\":\"meta\"").unwrap();
+    let bad = bin().args(["trace-validate", path_b.as_str()]).output().unwrap();
+    assert!(!bad.status.success(), "truncated JSON must fail validation");
+}
+
+/// The chrome format loads as JSON with the trace_event envelope.
+#[test]
+fn chrome_trace_has_the_trace_event_envelope() {
+    let path = tmp("cli-trace.json");
+    let out = bin()
+        .args([
+            "simulate",
+            "--fleet",
+            "4/2/1",
+            "--hours",
+            "6",
+            "--interarrival-s",
+            "1800",
+            "--trace",
+            path.as_str(),
+            "--trace-format",
+            "chrome",
+        ])
+        .output()
+        .expect("binary runs");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = std::fs::read_to_string(&path).unwrap();
+    let doc = leo_infer::util::json::Json::parse(&text).expect("chrome export is one JSON doc");
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    let check = bin().args(["trace-validate", path.as_str()]).output().unwrap();
+    assert!(
+        check.status.success(),
+        "{}",
+        String::from_utf8_lossy(&check.stderr)
+    );
+    assert!(String::from_utf8_lossy(&check.stdout).contains("valid chrome trace"));
+}
+
+/// `bench-schema` passes on value drift and fails on shape drift.
+#[test]
+fn bench_schema_diffs_shape_not_values() {
+    let base = tmp("bench-base.json");
+    let same_shape = tmp("bench-same.json");
+    let drifted = tmp("bench-drift.json");
+    std::fs::write(&base, r#"{"bench":"x","rows":[{"n":1,"wall_s":0.5}]}"#).unwrap();
+    // different values, same keys and kinds: must pass
+    std::fs::write(&same_shape, r#"{"bench":"y","rows":[{"n":9,"wall_s":12.25}]}"#).unwrap();
+    // a key changed kind: must fail
+    std::fs::write(&drifted, r#"{"bench":"x","rows":[{"n":"one","wall_s":0.5}]}"#).unwrap();
+    let ok = bin()
+        .args(["bench-schema", base.as_str(), same_shape.as_str()])
+        .output()
+        .unwrap();
+    assert!(
+        ok.status.success(),
+        "{}",
+        String::from_utf8_lossy(&ok.stderr)
+    );
+    let bad = bin()
+        .args(["bench-schema", base.as_str(), drifted.as_str()])
+        .output()
+        .unwrap();
+    assert!(!bad.status.success(), "kind drift must fail the diff");
+    assert!(String::from_utf8_lossy(&bad.stderr).contains("schema mismatch"));
+}
+
+/// The committed repo-root baseline stays parseable and smoke-shaped —
+/// the schema CI diffs fresh bench output against.
+#[test]
+fn committed_bench_baseline_is_valid_json() {
+    let text = std::fs::read_to_string("../BENCH_fleet.json")
+        .expect("BENCH_fleet.json must be committed at the repo root");
+    let doc = leo_infer::util::json::Json::parse(&text).unwrap();
+    for key in ["bench", "smoke", "scaling", "isl_overhead", "walker_40_40"] {
+        assert!(doc.get(key).is_ok(), "baseline missing `{key}`");
+    }
+}

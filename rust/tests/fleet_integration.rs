@@ -70,6 +70,7 @@ fn n1_fleet_matches_the_legacy_simulator_bit_identically() {
         route_cache: true,
         timing: false,
         audit: true,
+        trace: None,
         horizon,
     };
     let fleet = FleetSimulator::new(fleet_cfg)
@@ -121,6 +122,7 @@ fn everywhere_with_room_for_everything_is_bit_identical() {
             route_cache: true,
             timing: false,
             audit: true,
+            trace: None,
             horizon,
         }
     };

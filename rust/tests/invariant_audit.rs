@@ -163,6 +163,7 @@ fn audited_fleet_run_with_batteries_and_evictions_is_clean() {
         route_cache: true,
         timing: false,
         audit: true,
+        trace: None,
         horizon: Seconds::from_hours(100_000.0),
     };
     let trace: Vec<Request> = (0..12)

@@ -1,0 +1,178 @@
+//! Trace determinism: the `obs` acceptance criteria as executable tests.
+//!
+//! * Tracing **off** is the default and must be free: a traced run's
+//!   metrics are bit-identical to an untraced run of the same scenario
+//!   (the recorder observes, never feeds back).
+//! * Tracing **on** is deterministic: the same seed and scenario produce
+//!   byte-identical JSONL (and Chrome JSON) across fresh runs, and the
+//!   sweep's worst-P99 cell — the one `--worst-cell-trace` drills into —
+//!   is the same at any thread count, with a byte-identical trace.
+//! * Both exporters emit what `leo-infer trace-validate` accepts.
+
+use leo_infer::config::FleetScenario;
+use leo_infer::dnn::profile::ModelProfile;
+use leo_infer::exp::{run_cell_traced, run_sweep, Axes, SweepSpec};
+use leo_infer::obs::{validate, TraceConfig, TraceEvent, TraceFormat};
+use leo_infer::sim::fleet::{FleetResult, FleetSimulator};
+use leo_infer::solver::SolverRegistry;
+use leo_infer::util::rng::Pcg64;
+use leo_infer::util::units::Seconds;
+
+/// A small Walker fleet with relays and gauge sampling — every event
+/// kind the recorder knows shows up in its trace.
+fn scenario() -> FleetScenario {
+    let mut scen = FleetScenario::walker_631();
+    scen.horizon_hours = 24.0;
+    scen.interarrival_s = 900.0;
+    scen.data_gb_lo = 0.2;
+    scen.data_gb_hi = 2.0;
+    scen.isl = leo_infer::link::isl::IslMode::Ring;
+    scen.routing = "relay-aware".to_string();
+    scen.trace = true;
+    scen.trace_sample_every_s = 3600.0;
+    scen
+}
+
+fn run(scen: &FleetScenario, seed: u64) -> FleetResult {
+    let mut rng = Pcg64::seeded(seed);
+    let workload = scen.workload().unwrap().generate(scen.horizon(), &mut rng);
+    let profile = ModelProfile::sampled(8, &mut rng);
+    let engine = SolverRegistry::engine("ilpb").unwrap();
+    FleetSimulator::new(scen.sim_config(profile).unwrap())
+        .run(&workload, &engine)
+        .unwrap()
+}
+
+#[test]
+fn same_seed_traces_are_byte_identical() {
+    let scen = scenario();
+    let a = run(&scen, 17);
+    let b = run(&scen, 17);
+    let ta = a.trace.expect("tracing armed");
+    let tb = b.trace.expect("tracing armed");
+    assert!(!ta.events.is_empty(), "the run must record something");
+    assert_eq!(ta.to_jsonl(), tb.to_jsonl(), "JSONL must match byte for byte");
+    assert_eq!(
+        ta.to_chrome().to_string_pretty(),
+        tb.to_chrome().to_string_pretty(),
+        "Chrome JSON must match byte for byte"
+    );
+}
+
+#[test]
+fn tracing_never_perturbs_the_simulation() {
+    let traced_scen = scenario();
+    let mut untraced_scen = scenario();
+    untraced_scen.trace = false;
+    untraced_scen.trace_sample_every_s = 0.0;
+    let traced = run(&traced_scen, 17);
+    let untraced = run(&untraced_scen, 17);
+    assert!(untraced.trace.is_none(), "tracing off must record nothing");
+    assert!(!untraced.metrics.records.is_empty());
+    assert_eq!(
+        traced.metrics.records, untraced.metrics.records,
+        "records must be bit-identical with tracing on"
+    );
+    assert_eq!(traced.metrics.rejected(), untraced.metrics.rejected());
+    assert_eq!(traced.metrics.unfinished, untraced.metrics.unfinished);
+    assert_eq!(traced.metrics.relays, untraced.metrics.relays);
+    assert_eq!(traced.metrics.total_downlinked, untraced.metrics.total_downlinked);
+    for (a, b) in traced
+        .metrics
+        .per_sat()
+        .iter()
+        .zip(untraced.metrics.per_sat())
+    {
+        assert_eq!(a.completed, b.completed, "{}", a.name);
+        assert_eq!(a.mean_latency(), b.mean_latency(), "{}", a.name);
+    }
+}
+
+#[test]
+fn trace_cross_checks_the_metrics() {
+    let scen = scenario();
+    let result = run(&scen, 17);
+    let m = &result.metrics;
+    let trace = result.trace.expect("tracing armed");
+    // one terminal mark per terminal outcome
+    let done = trace.count(|e| matches!(e, TraceEvent::Done { .. }));
+    let rejects = trace.count(|e| matches!(e, TraceEvent::Reject { .. }));
+    let unfinished = trace.count(|e| matches!(e, TraceEvent::Unfinished { .. }));
+    assert_eq!(done as u64, m.completed());
+    assert_eq!(rejects as u64, m.rejected());
+    assert_eq!(unfinished as u64, m.unfinished);
+    // the name table indexes every satellite the events mention
+    assert_eq!(trace.sats.len(), m.per_sat().len());
+    // gauge ticks: every satellite sampled at every cadence multiple
+    let gauges = trace.count(|e| matches!(e, TraceEvent::Gauge { .. }));
+    assert!(gauges > 0 && gauges % trace.sats.len() == 0);
+    // spans are well-formed
+    for ev in &trace.events {
+        if let TraceEvent::Span {
+            queued, start, end, ..
+        } = ev
+        {
+            assert!(queued <= start && start <= end, "malformed span {ev:?}");
+        }
+    }
+}
+
+#[test]
+fn both_exports_pass_the_validator() {
+    let scen = scenario();
+    let trace = run(&scen, 17).trace.expect("tracing armed");
+    let (fmt, summary) = validate(&trace.to_jsonl()).expect("jsonl must validate");
+    assert_eq!(fmt, TraceFormat::Jsonl);
+    assert_eq!(summary.events, trace.events.len());
+    assert!(summary.spans > 0 && summary.marks > 0 && summary.gauges > 0);
+    let (fmt, chrome) = validate(&trace.to_chrome().to_string_pretty())
+        .expect("chrome must validate");
+    assert_eq!(fmt, TraceFormat::Chrome);
+    assert!(chrome.events > 0);
+}
+
+fn tiny_spec() -> SweepSpec {
+    let mut base = FleetScenario::walker_631();
+    base.sats = 4;
+    base.planes = 2;
+    base.horizon_hours = 6.0;
+    base.interarrival_s = 900.0;
+    base.data_gb_lo = 0.05;
+    base.data_gb_hi = 0.5;
+    SweepSpec {
+        name: "trace-determinism".to_string(),
+        seed: 5,
+        replications: 2,
+        base,
+        axes: Axes {
+            solver: vec!["arg".into(), "ilpb".into()],
+            ..Axes::default()
+        },
+    }
+}
+
+#[test]
+fn worst_cell_trace_is_identical_across_thread_counts() {
+    let spec = tiny_spec();
+    let serial = run_sweep(&spec, 1).unwrap();
+    let parallel = run_sweep(&spec, 4).unwrap();
+    let worst = serial.worst_p99_cell().expect("non-empty sweep");
+    assert_eq!(
+        parallel.worst_p99_cell(),
+        Some(worst),
+        "the worst cell must not depend on worker count"
+    );
+    // the traced re-run (what `--worst-cell-trace` does) is itself
+    // deterministic: two re-runs produce byte-identical JSONL
+    let cfg = TraceConfig {
+        sample_every: Seconds(600.0),
+        ..TraceConfig::default()
+    };
+    let (ra, ta) = run_cell_traced(&serial.cells[worst].cell, cfg.clone()).unwrap();
+    let (rb, tb) = run_cell_traced(&parallel.cells[worst].cell, cfg).unwrap();
+    assert_eq!(ra.completed, rb.completed);
+    assert_eq!(ta.to_jsonl(), tb.to_jsonl(), "worst-cell JSONL must match");
+    // and reproduces the swept row exactly
+    assert_eq!(ra.completed, serial.cells[worst].completed);
+    assert_eq!(ra.p99_latency_s(), serial.cells[worst].p99_latency_s());
+}
