@@ -1,0 +1,191 @@
+//! Pipeline study: multi-node placement vectors vs the paper's single
+//! split, in a compute-starved fleet.
+//!
+//! ```bash
+//! cargo run --release --example pipeline_study            # full study
+//! cargo run --release --example pipeline_study -- --smoke # CI-sized run
+//! ```
+//!
+//! Three satellites on a line — the serving satellite reaches only its
+//! in-plane neighbor, which is 5× faster — under a prohibitive 0.1 Mbps
+//! downlink and a pure-latency objective. The first DNN layer shrinks the
+//! tensor 10× (α = [1, 0.1, 0.1]), so the interesting placement is a
+//! genuine *cut vector*: compute layer 0 at home where the raw capture
+//! already sits, ship the small boundary tensor over the 0.64 Mbps ISL,
+//! and finish layers 1–2 on the fast neighbor. Per 8 MB capture
+//! (β = 1e-5 s/byte):
+//!
+//! * bent pipe / best single split — everything on the serving
+//!   satellite: ≈ 100.7 s (offloading any suffix over the slow downlink
+//!   costs hundreds of seconds more);
+//! * ship the raw input to the fast neighbor (cuts `[0,3,3]`): ≈ 125 s —
+//!   the 10× heavier pre-layer-0 tensor eats the compute advantage;
+//! * two-stage placement (cuts `[1,3,3]`): ≈ 97.7 s.
+//!
+//! The study runs the *same* capture trace through the bent pipe, the
+//! single-split fleet with ISLs, and the pipeline-enabled fleet, then
+//! asserts the headline result — the multi-node placement strictly beats
+//! the best single split — so CI fails if the pipeline path ever rots.
+
+use leo_infer::dnn::profile::ModelProfile;
+use leo_infer::link::isl::{IslMode, IslTopology};
+use leo_infer::orbit::constellation::{Constellation, NamedOrbit};
+use leo_infer::orbit::propagator::CircularOrbit;
+use leo_infer::placement::PlacementConfig;
+use leo_infer::sim::contact::PeriodicContact;
+use leo_infer::sim::fleet::{
+    FleetSimConfig, FleetSimulator, PipelineConfig, SatelliteSpec, TelemetryMode,
+};
+use leo_infer::sim::workload::Request;
+use leo_infer::sim::SimMetrics;
+use leo_infer::solver::instance::InstanceBuilder;
+use leo_infer::solver::SolverRegistry;
+use leo_infer::coordinator::router::RoutingPolicy;
+use leo_infer::util::units::{BitsPerSec, Bytes, Seconds};
+
+/// Line topology 0 – 1 – 2 with every range < 1000 km, so each link runs
+/// at exactly the reference rate (the inverse-square range scaling caps
+/// out) and the per-capture arithmetic in the module docs is exact.
+fn line3(rate_mbps: f64) -> IslTopology {
+    let mk = |plane: usize, slot: usize, raan: f64, phase: f64| NamedOrbit {
+        name: format!("p{plane}s{slot}"),
+        plane,
+        slot,
+        orbit: CircularOrbit::new(550.0, 53.0, raan, phase),
+    };
+    let c = Constellation {
+        satellites: vec![mk(0, 1, 0.0, 2.0), mk(0, 0, 0.0, 0.0), mk(1, 0, 2.0, 0.0)],
+    };
+    IslTopology::build(&c, IslMode::Grid, BitsPerSec::from_mbps(rate_mbps))
+        .expect("line topology builds")
+}
+
+fn fleet(pipeline: Option<PipelineConfig>, isl: bool) -> FleetSimConfig {
+    let prof = ModelProfile::from_alphas("pipe-net", &[1000.0, 100.0, 100.0, 100.0])
+        .expect("profile shape is valid");
+    let template = InstanceBuilder::new(prof.clone())
+        .beta_s_per_kb(1024.0 * 1e-5) // β = 1e-5 s per byte
+        .rate(BitsPerSec::from_mbps(0.1)) // downlink prohibitive
+        .weights(0.0, 1.0) // pure latency objective
+        .contact(Seconds::from_hours(8.0), Seconds::from_minutes(6.0));
+    let mut sats: Vec<SatelliteSpec> = (0..3)
+        .map(|i| {
+            let contact =
+                PeriodicContact::new(Seconds::from_hours(8.0), Seconds::from_minutes(6.0))
+                    .with_phase(Seconds(i as f64 * 100.0));
+            SatelliteSpec::new(&format!("sat-{i}"), Box::new(contact))
+        })
+        .collect();
+    sats[1].compute_scale = 5.0; // the fast neighbor
+    FleetSimConfig {
+        template,
+        profiles: vec![prof],
+        sats,
+        routing: RoutingPolicy::LeastLoaded,
+        isl: if isl { Some(line3(0.64)) } else { None },
+        isl_max_hops: 4,
+        telemetry: TelemetryMode::Unconstrained,
+        placement: PlacementConfig::default(),
+        route_cache: true,
+        timing: false,
+        audit: true, // slot/battery invariants checked throughout
+        trace: None,
+        pipeline,
+        horizon: Seconds::from_hours(10_000.0),
+    }
+}
+
+/// Evenly spaced 8 MB captures: each finishes (~100 s) before the next
+/// arrives, so every variant serves every capture from satellite 0 and
+/// the latency gap is pure placement quality, not queueing noise.
+fn captures(n: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request {
+            id: i as u64,
+            arrival: Seconds(10.0 + i as f64 * 300.0),
+            data: Bytes::from_mb(8.0),
+            model: 0,
+            class: 1,
+        })
+        .collect()
+}
+
+fn run(cfg: FleetSimConfig, trace: &[Request]) -> anyhow::Result<SimMetrics> {
+    let engine = SolverRegistry::engine("exhaustive")?;
+    Ok(FleetSimulator::new(cfg).run(trace, &engine)?.metrics)
+}
+
+fn row(label: &str, m: &SimMetrics) {
+    let multi = m.records.iter().filter(|r| r.stages > 1).count();
+    println!(
+        "{:<22} {:>9} {:>10} {:>12} {:>13.2} {:>12.2}",
+        label,
+        m.completed(),
+        m.pipeline_requests,
+        multi,
+        m.mean_latency().value(),
+        m.total_energy().value(),
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    leo_infer::util::logging::init();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let trace = captures(if smoke { 6 } else { 24 });
+    println!(
+        "pipeline study{}: 3-sat line, neighbor 5x faster, 8 MB captures,\n\
+         0.64 Mbps ISL, 0.1 Mbps downlink, pure-latency objective, {} captures\n",
+        if smoke { " (smoke)" } else { "" },
+        trace.len(),
+    );
+
+    let bent = run(fleet(None, false), &trace)?;
+    let single = run(fleet(None, true), &trace)?;
+    let piped = run(fleet(Some(PipelineConfig { max_nodes: 3 }), true), &trace)?;
+
+    println!(
+        "{:<22} {:>9} {:>10} {:>12} {:>13} {:>12}",
+        "configuration", "completed", "pipelines", "multi-stage", "mean lat(s)", "energy(J)"
+    );
+    row("bent pipe", &bent);
+    row("single split + isl", &single);
+    row("pipeline ≤3 nodes", &piped);
+
+    let stages: Vec<usize> = piped.records.iter().map(|r| r.stages).collect();
+    println!(
+        "\nper-sat pipeline stages: {:?}; stage counts per request: {:?}",
+        piped.per_sat().iter().map(|s| s.pipeline_stages).collect::<Vec<_>>(),
+        &stages[..stages.len().min(8)],
+    );
+
+    // the acceptance bar: the placement vector must be a *genuine*
+    // multi-node win — admitted as pipelines, executed in two stages, and
+    // strictly faster than both the bent pipe and the best single split
+    anyhow::ensure!(
+        piped.completed() == trace.len() as u64
+            && bent.completed() == trace.len() as u64
+            && single.completed() == trace.len() as u64,
+        "every variant must finish the trace"
+    );
+    anyhow::ensure!(
+        piped.pipeline_requests == trace.len() as u64,
+        "every capture must be admitted as a multi-node pipeline"
+    );
+    anyhow::ensure!(
+        piped.records.iter().all(|r| r.stages == 2),
+        "each capture must run as two stages (cut after layer 0)"
+    );
+    anyhow::ensure!(
+        piped.mean_latency() < single.mean_latency()
+            && piped.mean_latency() < bent.mean_latency(),
+        "pipeline ({:.2} s) must strictly beat single split ({:.2} s) and bent pipe ({:.2} s)",
+        piped.mean_latency().value(),
+        single.mean_latency().value(),
+        bent.mean_latency().value()
+    );
+    println!(
+        "\nOK: two-stage placement beats the best single split by {:.2} s per capture.",
+        single.mean_latency().value() - piped.mean_latency().value()
+    );
+    Ok(())
+}

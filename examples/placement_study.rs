@@ -103,6 +103,7 @@ fn fleet(routing: RoutingPolicy, placement: PlacementConfig) -> FleetSimConfig {
         // exercises stores, evictions, and pins under real contention
         audit: true,
         trace: None,
+        pipeline: None,
         horizon: Seconds::from_hours(100_000.0),
     }
 }

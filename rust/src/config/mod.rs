@@ -25,7 +25,7 @@ use crate::orbit::eclipse::eclipse_fraction;
 use crate::orbit::geometry::GroundStation;
 use crate::placement::{EvictionPolicy, ModelArtifact, PlacementConfig, PlacementPolicy};
 use crate::sim::contact::{ContactModel, PeriodicContact, ScheduleContact};
-use crate::sim::fleet::{FleetSimConfig, SatelliteSpec, TelemetryMode};
+use crate::sim::fleet::{FleetSimConfig, PipelineConfig, SatelliteSpec, TelemetryMode};
 use crate::sim::workload::{PoissonWorkload, SizeDist};
 use crate::solver::instance::InstanceBuilder;
 use crate::util::json::Json;
@@ -360,6 +360,16 @@ pub struct FleetScenario {
     pub data_gb_hi: f64,
     /// Simulated horizon, hours.
     pub horizon_hours: f64,
+    // --- multi-node pipeline execution ---
+    /// Let each arrival's solve partition the layer path across a chain
+    /// of ISL neighbors ([`crate::solver::placement`]) instead of a
+    /// single split. Off by default — the bit-identical legacy flow.
+    /// Requires an ISL mode other than `off` to have any effect.
+    pub pipeline: bool,
+    /// Longest node chain offered to the placement solver when
+    /// [`FleetScenario::pipeline`] is on (validated ≥ 2: a 1-node
+    /// "pipeline" is just the legacy split).
+    pub pipeline_max_nodes: usize,
     // --- observability ---
     /// Record a sim-time trace ([`crate::obs`]) during the run, returned
     /// on [`crate::sim::FleetResult::trace`]. Off by default — tracing
@@ -407,6 +417,8 @@ impl FleetScenario {
             data_gb_lo: 0.5,
             data_gb_hi: 8.0,
             horizon_hours: 48.0,
+            pipeline: false,
+            pipeline_max_nodes: 3,
             trace: false,
             trace_sample_every_s: 0.0,
         }
@@ -522,6 +534,24 @@ impl FleetScenario {
         })
     }
 
+    /// Resolve the pipeline axis into the DES's [`PipelineConfig`]
+    /// (`None` when [`FleetScenario::pipeline`] is off). Errors on a
+    /// chain bound below 2: a 1-node "pipeline" is the legacy split, and
+    /// silently accepting it would make `pipeline: true` a no-op.
+    pub fn pipeline_config(&self) -> anyhow::Result<Option<PipelineConfig>> {
+        if !self.pipeline {
+            return Ok(None);
+        }
+        anyhow::ensure!(
+            self.pipeline_max_nodes >= 2,
+            "pipeline_max_nodes must be ≥ 2 when the pipeline is on, got {}",
+            self.pipeline_max_nodes
+        );
+        Ok(Some(PipelineConfig {
+            max_nodes: self.pipeline_max_nodes,
+        }))
+    }
+
     /// Build the fleet DES configuration: one [`SatelliteSpec`] per Walker
     /// slot, each with its own contact model (and battery, when
     /// configured), live-telemetry solves, and the scenario's horizon.
@@ -586,6 +616,7 @@ impl FleetScenario {
             timing: false,
             audit: false,
             trace: self.trace_config(),
+            pipeline: self.pipeline_config()?,
             horizon: self.horizon(),
         })
     }
@@ -626,6 +657,8 @@ impl FleetScenario {
             ("data_gb_lo", Json::num(self.data_gb_lo)),
             ("data_gb_hi", Json::num(self.data_gb_hi)),
             ("horizon_hours", Json::num(self.horizon_hours)),
+            ("pipeline", Json::Bool(self.pipeline)),
+            ("pipeline_max_nodes", Json::num(self.pipeline_max_nodes as f64)),
             ("trace", Json::Bool(self.trace)),
             ("trace_sample_every_s", Json::num(self.trace_sample_every_s)),
         ])
@@ -674,6 +707,8 @@ impl FleetScenario {
             data_gb_lo: v.f64_or("data_gb_lo", d.data_gb_lo)?,
             data_gb_hi: v.f64_or("data_gb_hi", d.data_gb_hi)?,
             horizon_hours: v.f64_or("horizon_hours", d.horizon_hours)?,
+            pipeline: v.bool_or("pipeline", d.pipeline)?,
+            pipeline_max_nodes: v.usize_or("pipeline_max_nodes", d.pipeline_max_nodes)?,
             trace: v.bool_or("trace", d.trace)?,
             trace_sample_every_s: v.f64_or("trace_sample_every_s", d.trace_sample_every_s)?,
         };
@@ -683,6 +718,7 @@ impl FleetScenario {
         f.workload()?;
         PlacementPolicy::from_name(&f.placement)?;
         EvictionPolicy::from_name(&f.eviction)?;
+        f.pipeline_config()?;
         Ok(f)
     }
 
@@ -785,6 +821,38 @@ mod tests {
         let tc = back.trace_config().expect("trace on");
         assert_eq!(tc.sample_every, Seconds(600.0));
         assert_eq!(FleetScenario::walker_631().trace_config(), None);
+    }
+
+    #[test]
+    fn fleet_pipeline_config_arms_and_validates() {
+        let mut rng = Pcg64::seeded(11);
+        let mut f = FleetScenario::walker_631();
+        // off by default: the sim config carries no pipeline
+        assert_eq!(f.pipeline_config().unwrap(), None);
+        let cfg = f.sim_config(ModelProfile::sampled(6, &mut rng)).unwrap();
+        assert_eq!(cfg.pipeline, None);
+        // on: the chain bound carries through
+        f.pipeline = true;
+        f.pipeline_max_nodes = 4;
+        assert_eq!(
+            f.pipeline_config().unwrap(),
+            Some(crate::sim::fleet::PipelineConfig { max_nodes: 4 })
+        );
+        let cfg = f.sim_config(ModelProfile::sampled(6, &mut rng)).unwrap();
+        assert_eq!(cfg.pipeline.map(|p| p.max_nodes), Some(4));
+        // a degenerate chain bound fails loudly at config and parse time
+        f.pipeline_max_nodes = 1;
+        assert!(f.pipeline_config().is_err());
+        assert!(f.sim_config(ModelProfile::sampled(6, &mut rng)).is_err());
+        let v = Json::parse(r#"{"pipeline": true, "pipeline_max_nodes": 1}"#).unwrap();
+        assert!(FleetScenario::from_json(&v).is_err());
+        // off tolerates any bound (the axis is dormant)
+        let v = Json::parse(r#"{"pipeline": false, "pipeline_max_nodes": 1}"#).unwrap();
+        assert!(FleetScenario::from_json(&v).is_ok());
+        // round-trip keeps the new fields
+        f.pipeline_max_nodes = 3;
+        let back = FleetScenario::from_json(&f.to_json()).unwrap();
+        assert_eq!(f, back);
     }
 
     #[test]

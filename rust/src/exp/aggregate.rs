@@ -15,7 +15,7 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 /// Exported per-cell columns, after the axis columns.
-const METRIC_COLUMNS: [&str; 25] = [
+const METRIC_COLUMNS: [&str; 26] = [
     "submitted",
     "completed",
     "rejected_admission",
@@ -41,6 +41,7 @@ const METRIC_COLUMNS: [&str; 25] = [
     "weight_gb_in",
     "route_cache_hits",
     "route_cache_misses",
+    "pipeline_requests",
 ];
 
 fn metric_values(c: &CellResult) -> Vec<String> {
@@ -70,6 +71,7 @@ fn metric_values(c: &CellResult) -> Vec<String> {
         format_f64(c.weight_gb_in),
         c.route_cache_hits.to_string(),
         c.route_cache_misses.to_string(),
+        c.pipeline_requests.to_string(),
     ]
 }
 
@@ -123,7 +125,7 @@ pub fn to_json(result: &SweepResult) -> Json {
         for axis in AXIS_NAMES {
             pairs.push((axis, Json::str(c.cell.axis_value(axis).expect("built-in axis"))));
         }
-        let nums: [(&str, f64); 25] = [
+        let nums: [(&str, f64); 26] = [
             ("submitted", c.submitted as f64),
             ("completed", c.completed as f64),
             ("rejected_admission", c.rejected_admission as f64),
@@ -149,6 +151,7 @@ pub fn to_json(result: &SweepResult) -> Json {
             ("weight_gb_in", c.weight_gb_in),
             ("route_cache_hits", c.route_cache_hits as f64),
             ("route_cache_misses", c.route_cache_misses as f64),
+            ("pipeline_requests", c.pipeline_requests as f64),
         ];
         for (k, v) in nums {
             pairs.push((k, Json::num(v)));
@@ -294,10 +297,10 @@ mod tests {
         assert_eq!(lines.len(), 1 + result.cells.len());
         assert!(lines[0].starts_with("index,seed,solver,"));
         assert!(
-            lines[0].ends_with("evictions,weight_gb_in,route_cache_hits,route_cache_misses"),
-            "placement and route-cache counters close every row"
+            lines[0].ends_with("route_cache_hits,route_cache_misses,pipeline_requests"),
+            "route-cache and pipeline counters close every row"
         );
-        assert!(lines[0].contains(",storage_mb,placement,rep,"));
+        assert!(lines[0].contains(",storage_mb,placement,pipeline,rep,"));
         let cols = lines[0].split(',').count();
         for (i, row) in lines[1..].iter().enumerate() {
             assert_eq!(row.split(',').count(), cols, "row {i} column count");

@@ -4,7 +4,8 @@
 //! Every axis left empty collapses to the base scenario's value, so a
 //! spec names only what it varies. Expansion order is fixed (solver →
 //! routing → isl → route → walker → interarrival → rate → data size →
-//! battery → storage → placement → replication, replication innermost),
+//! battery → storage → placement → pipeline → replication, replication
+//! innermost),
 //! which makes `Cell::index` a
 //! stable coordinate: the same spec always yields the same cells in the
 //! same order, and [`SweepSpec::cell`] rebuilds any single cell from its
@@ -100,12 +101,16 @@ pub struct Axes {
     pub storage_mb: Vec<f64>,
     /// Placement policy names (`everywhere | static | demand`).
     pub placement: Vec<String>,
+    /// Pipeline execution: `0` disables multi-node pipelines, a value
+    /// `>= 2` enables them with at most that many placement nodes
+    /// (`1` is rejected — a one-node pipeline is just the legacy split).
+    pub pipeline: Vec<usize>,
 }
 
 /// Axis names, in expansion order (replication last/innermost). These are
 /// the group-by keys [`super::aggregate`] accepts and the per-cell columns
 /// the exports carry.
-pub const AXIS_NAMES: [&str; 12] = [
+pub const AXIS_NAMES: [&str; 13] = [
     "solver",
     "routing",
     "isl",
@@ -117,6 +122,7 @@ pub const AXIS_NAMES: [&str; 12] = [
     "battery_capacity_j",
     "storage_mb",
     "placement",
+    "pipeline",
     "rep",
 ];
 
@@ -169,6 +175,11 @@ impl Cell {
             "battery_capacity_j" => format_f64(self.scenario.battery_capacity_j),
             "storage_mb" => format_f64(self.scenario.storage_budget_mb),
             "placement" => self.scenario.placement.clone(),
+            "pipeline" => if self.scenario.pipeline {
+                self.scenario.pipeline_max_nodes.to_string()
+            } else {
+                "0".to_string()
+            },
             "rep" => self.rep.to_string(),
             other => anyhow::bail!(
                 "unknown axis `{other}` ({})",
@@ -206,6 +217,7 @@ struct Resolved {
     battery_capacity_j: Vec<f64>,
     storage_mb: Vec<f64>,
     placement: Vec<String>,
+    pipeline: Vec<usize>,
 }
 
 impl SweepSpec {
@@ -262,6 +274,15 @@ impl SweepSpec {
             } else {
                 self.axes.placement.clone()
             },
+            pipeline: if self.axes.pipeline.is_empty() {
+                vec![if self.base.pipeline {
+                    self.base.pipeline_max_nodes
+                } else {
+                    0
+                }]
+            } else {
+                self.axes.pipeline.clone()
+            },
         }
     }
 
@@ -279,6 +300,7 @@ impl SweepSpec {
             * r.battery_capacity_j.len()
             * r.storage_mb.len()
             * r.placement.len()
+            * r.pipeline.len()
             * self.replications.max(1)
     }
 
@@ -348,6 +370,12 @@ impl SweepSpec {
             PlacementPolicy::from_name(p)
                 .map_err(|e| anyhow::anyhow!("placement axis: {e}"))?;
         }
+        for &n in &r.pipeline {
+            anyhow::ensure!(
+                n != 1,
+                "pipeline axis value must be 0 (off) or >= 2 nodes, got 1"
+            );
+        }
         Ok(())
     }
 
@@ -361,6 +389,8 @@ impl SweepSpec {
         let mut rest = index;
         let rep = rest % reps;
         rest /= reps;
+        let pipeline = r.pipeline[rest % r.pipeline.len()];
+        rest /= r.pipeline.len();
         let placement = &r.placement[rest % r.placement.len()];
         rest /= r.placement.len();
         let storage = r.storage_mb[rest % r.storage_mb.len()];
@@ -397,6 +427,10 @@ impl SweepSpec {
         scen.battery_capacity_j = battery;
         scen.storage_budget_mb = storage;
         scen.placement = placement.clone();
+        scen.pipeline = pipeline >= 2;
+        if pipeline >= 2 {
+            scen.pipeline_max_nodes = pipeline;
+        }
         Cell {
             index,
             rep,
@@ -470,6 +504,12 @@ impl SweepSpec {
         if !self.axes.placement.is_empty() {
             axes.push(("placement", strs(&self.axes.placement)));
         }
+        if !self.axes.pipeline.is_empty() {
+            axes.push((
+                "pipeline",
+                Json::arr(self.axes.pipeline.iter().map(|&n| Json::num(n as f64))),
+            ));
+        }
         // seeds are full-range u64 and JSON numbers are f64-backed:
         // large seeds serialize as strings so round-trips stay exact
         let seed = if self.seed < (1u64 << 53) {
@@ -512,6 +552,7 @@ impl SweepSpec {
                 battery_capacity_j: f64_list(a, "battery_capacity_j")?,
                 storage_mb: f64_list(a, "storage_mb")?,
                 placement: str_list(a, "placement")?,
+                pipeline: usize_list(a, "pipeline")?,
             },
             None => Axes::default(),
         };
@@ -587,15 +628,16 @@ fn str_list(v: &Json, key: &str) -> anyhow::Result<Vec<String>> {
     }
 }
 
-/// An axis field as whole numbers (the `route` hop bounds): the numeric
-/// forms [`f64_list`] accepts, restricted to non-negative integers.
+/// An axis field as whole numbers (the `route` hop bounds and `pipeline`
+/// node caps): the numeric forms [`f64_list`] accepts, restricted to
+/// non-negative integers.
 fn usize_list(v: &Json, key: &str) -> anyhow::Result<Vec<usize>> {
     f64_list(v, key)?
         .into_iter()
         .map(|x| {
             anyhow::ensure!(
                 x >= 0.0 && x.fract() == 0.0 && x <= u32::MAX as f64,
-                "axis {key}: `{x}` is not a whole hop count"
+                "axis {key}: `{x}` is not a whole non-negative count"
             );
             Ok(x as usize)
         })
@@ -840,6 +882,37 @@ horizon_hours = 6.0
         let mut neg = SweepSpec::point("neg", FleetScenario::walker_631());
         neg.axes.storage_mb = vec![-1.0];
         assert!(neg.expand().is_err(), "negative storage budget");
+    }
+
+    #[test]
+    fn pipeline_axis_arms_multi_node_execution() {
+        let mut spec = SweepSpec::point("pipe", FleetScenario::walker_631());
+        spec.base.isl = IslMode::Grid;
+        spec.axes.pipeline = vec![0, 2, 4];
+        assert_eq!(spec.len(), 3);
+        let cells = spec.expand().unwrap();
+        assert!(!cells[0].scenario.pipeline, "0 keeps pipelines off");
+        assert!(cells[1].scenario.pipeline && cells[2].scenario.pipeline);
+        assert_eq!(cells[1].scenario.pipeline_max_nodes, 2);
+        assert_eq!(cells[2].scenario.pipeline_max_nodes, 4);
+        assert_eq!(cells[0].axis_value("pipeline").unwrap(), "0");
+        assert_eq!(cells[2].axis_value("pipeline").unwrap(), "4");
+        // common random numbers across pipeline configurations
+        assert!(cells.iter().all(|c| c.seed == cells[0].seed));
+        // a one-node "pipeline" is refused up front
+        let mut bad = SweepSpec::point("bad", FleetScenario::walker_631());
+        bad.axes.pipeline = vec![1];
+        assert!(bad.expand().is_err(), "pipeline=1 must be rejected");
+        // empty axis collapses to the base scenario's (off) setting,
+        // and the JSON round-trip preserves the axis
+        let spec2 = SweepSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(spec, spec2);
+        assert_eq!(spec2.axes.pipeline, vec![0, 2, 4]);
+        let doc = Json::parse(r#"{"axes": {"pipeline": "0, 3"}}"#).unwrap();
+        assert_eq!(
+            SweepSpec::from_json(&doc).unwrap().axes.pipeline,
+            vec![0, 3]
+        );
     }
 
     #[test]

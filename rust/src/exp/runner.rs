@@ -81,6 +81,8 @@ pub struct CellResult {
     pub evictions: u64,
     /// Model weights transferred into satellites, GB.
     pub weight_gb_in: f64,
+    /// Requests admitted as multi-node pipelines (zero with pipelines off).
+    pub pipeline_requests: u64,
 }
 
 impl CellResult {
@@ -184,6 +186,7 @@ fn run_cell_inner(
         artifact_misses: m.artifact_misses,
         evictions: m.evictions,
         weight_gb_in: m.weight_bytes_in.gb(),
+        pipeline_requests: m.pipeline_requests,
     };
     Ok((cell_result, trace))
 }

@@ -201,6 +201,17 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
             Some("everywhere"),
         )
         .opt(
+            "pipeline",
+            "on|off — multi-node pipeline partitioning over ISL neighbors \
+             (fleet only; empty = scenario preset)",
+            Some(""),
+        )
+        .opt(
+            "pipeline-max-nodes",
+            "placement-vector node cap, >= 2 when the pipeline is on (empty = scenario preset)",
+            Some(""),
+        )
+        .opt(
             "route-cache",
             "on|off — route-plan memoization, bit-identical either way (empty = scenario preset)",
             Some(""),
@@ -389,7 +400,7 @@ fn simulate_fleet(args: &Args, fleet_config: &str, fleet_spec: &str) -> anyhow::
     use leo_infer::link::isl::IslMode;
     use leo_infer::sim::fleet::FleetSimulator;
 
-    let fleet = if !fleet_config.is_empty() {
+    let mut fleet = if !fleet_config.is_empty() {
         FleetScenario::load(fleet_config)?
     } else {
         let parts: Vec<&str> = fleet_spec.split('/').collect();
@@ -423,6 +434,19 @@ fn simulate_fleet(args: &Args, fleet_config: &str, fleet_spec: &str) -> anyhow::
         f.data_gb_hi = hi;
         f
     };
+    // pipeline flags override the scenario before sim_config, so the
+    // bound check in `FleetScenario::pipeline_config` still applies
+    match args.get_str("pipeline").unwrap_or("") {
+        "" => {}
+        "on" => fleet.pipeline = true,
+        "off" => fleet.pipeline = false,
+        other => anyhow::bail!("--pipeline expects on|off, got `{other}`"),
+    }
+    if let Some(v) = args.get_str("pipeline-max-nodes").filter(|v| !v.is_empty()) {
+        fleet.pipeline_max_nodes = v
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--pipeline-max-nodes: {e}"))?;
+    }
     let mut rng = Pcg64::seeded(args.get_u64("seed")?);
     let trace = fleet.workload()?.generate(fleet.horizon(), &mut rng);
     let profile = ModelProfile::sampled(args.get_usize("depth")?, &mut rng);
@@ -464,6 +488,14 @@ fn simulate_fleet(args: &Args, fleet_config: &str, fleet_spec: &str) -> anyhow::
         }
     );
     print_sim_summary(m, trace.len(), fleet.horizon());
+    if fleet.pipeline {
+        let multi = m.records.iter().filter(|r| r.stages > 1).count();
+        println!(
+            "pipeline    : on (≤ {} nodes) — {} admitted as multi-node pipelines, \
+             {} completed multi-stage",
+            fleet.pipeline_max_nodes, m.pipeline_requests, multi
+        );
+    }
     if fleet.isl != IslMode::Off {
         let hops: usize = m.records.iter().map(|r| r.path_len).sum();
         let relayed = m.records.iter().filter(|r| r.relay.is_some()).count();

@@ -103,8 +103,10 @@ impl Trace {
                     start,
                     end,
                 } => match phase {
-                    SpanPhase::Proc | SpanPhase::Tx => {
-                        let tid = if *phase == SpanPhase::Proc { 0 } else { 1 };
+                    SpanPhase::Proc | SpanPhase::Stage | SpanPhase::Tx => {
+                        // processing (legacy proc and pipeline stages) on
+                        // tid 0, the transmitter on tid 1
+                        let tid = if *phase == SpanPhase::Tx { 1 } else { 0 };
                         evs.push(Json::obj(vec![
                             ("ph", Json::str("X")),
                             ("name", Json::str(phase.as_str())),
@@ -352,7 +354,15 @@ pub struct TraceSummary {
     pub gauges: usize,
 }
 
-const SPAN_PHASES: [&str; 6] = ["fetch", "proc", "relay_tx", "relay_prop", "tx", "cloud"];
+const SPAN_PHASES: [&str; 7] = [
+    "fetch",
+    "proc",
+    "relay_tx",
+    "relay_prop",
+    "tx",
+    "cloud",
+    "stage",
+];
 const REJECT_PHASES: [&str; 2] = ["admission", "transmit"];
 
 fn require_num(v: &Json, line: usize, key: &str) -> anyhow::Result<f64> {

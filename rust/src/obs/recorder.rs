@@ -82,6 +82,9 @@ pub enum SpanPhase {
     Tx,
     /// Ground-station forwarding plus cloud-side suffix inference.
     Cloud,
+    /// One stage of a multi-node pipeline placement: a contiguous layer
+    /// range computed on one satellite's processing FIFO.
+    Stage,
 }
 
 impl SpanPhase {
@@ -94,6 +97,7 @@ impl SpanPhase {
             SpanPhase::RelayProp => "relay_prop",
             SpanPhase::Tx => "tx",
             SpanPhase::Cloud => "cloud",
+            SpanPhase::Stage => "stage",
         }
     }
 }

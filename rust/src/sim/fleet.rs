@@ -103,6 +103,7 @@ use crate::placement::{ArtifactStore, PlacementConfig};
 use crate::sim::invariants::Audit;
 use crate::solver::engine::{SolverEngine, Telemetry};
 use crate::solver::instance::{Instance, InstanceBuilder};
+use crate::solver::placement::{LinkLeg, NodeProfile, PlacementInstance};
 use crate::util::lru::LruCache;
 use crate::util::units::{BitsPerSec, Bytes, Joules, Seconds, Watts};
 use std::collections::hash_map::DefaultHasher;
@@ -119,6 +120,11 @@ pub struct SatelliteSpec {
     /// `(battery, panel, orbit-average sunlit fraction)`; `None` = the
     /// paper's unconstrained-energy setting.
     pub battery: Option<(Battery, SolarPanel, f64)>,
+    /// Relative compute speed vs. the template instance's GPU: per-layer
+    /// latency and energy divide by this. `1.0` (the default) is
+    /// bit-identical to the pre-pipeline simulator; heterogeneous fleets
+    /// are what make multi-node placements win.
+    pub compute_scale: f64,
 }
 
 impl SatelliteSpec {
@@ -128,6 +134,7 @@ impl SatelliteSpec {
             name: name.to_string(),
             contact,
             battery: None,
+            compute_scale: 1.0,
         }
     }
 
@@ -137,6 +144,23 @@ impl SatelliteSpec {
         self.battery = Some((battery, panel, avg_sunlit));
         self
     }
+
+    /// Set this satellite's relative compute speed (must be finite and
+    /// positive; validated when a placement instance is built over it).
+    pub fn with_compute_scale(mut self, scale: f64) -> Self {
+        self.compute_scale = scale;
+        self
+    }
+}
+
+/// Multi-node pipeline execution: let the solver assign layer ranges to a
+/// chain of ISL neighbors ([`crate::solver::placement`]) instead of a
+/// single on-board/cloud split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PipelineConfig {
+    /// Longest node chain offered to the placement solver (≥ 2; the
+    /// serving satellite included). `< 2` disables pipelining outright.
+    pub max_nodes: usize,
 }
 
 /// What the per-arrival solve gets to see.
@@ -203,6 +227,13 @@ pub struct FleetSimConfig {
     /// bit-identical to an untraced build. The recorder only observes;
     /// enabling it never changes a run's outcome either.
     pub trace: Option<TraceConfig>,
+    /// Multi-node pipeline execution over ISL chains. `None` (the default
+    /// everywhere) never constructs a placement instance and is
+    /// bit-identical to the single-split simulator; `Some` lets each
+    /// arrival's solve partition the layer path across up to
+    /// [`PipelineConfig::max_nodes`] chained satellites, executed as
+    /// per-stage processing spans with inter-stage ISL legs.
+    pub pipeline: Option<PipelineConfig>,
     /// Simulation horizon: events past it are dropped and counted as
     /// unfinished.
     pub horizon: Seconds,
@@ -270,6 +301,12 @@ enum Event {
     RelayRxDone(usize),
     TxDone(usize),
     CloudDone(usize),
+    /// Pipeline execution: the boundary tensor reached the satellite of
+    /// stage [`PipeExec::idx`] and may join its processing FIFO.
+    StageArrive(usize),
+    /// Pipeline execution: stage [`PipeExec::idx`] finished computing its
+    /// layer range.
+    StageDone(usize),
 }
 
 /// Per-request in-flight bookkeeping.
@@ -301,6 +338,64 @@ struct Flight {
     /// flight so a weight fetch can defer the FIFO reservation to
     /// `FetchDone`.
     proc_time: Seconds,
+    /// Multi-node pipeline schedule (`None` = legacy single-split flow).
+    pipeline: Option<PipeExec>,
+}
+
+/// One ISL hop of an inter-stage leg: serialization time and the antenna
+/// energy the source satellite pays for it.
+#[derive(Debug, Clone)]
+struct PipeHop {
+    src: usize,
+    dst: usize,
+    e: Joules,
+}
+
+/// The logical link carrying the boundary tensor into a pipeline stage.
+/// Consecutive physical ISL hops through idle chain nodes are collapsed:
+/// the boundary tensor is constant across carriers that compute nothing,
+/// so one event pair covers the whole leg while each hop still pays its
+/// own serialization energy and transit accounting.
+#[derive(Debug, Clone)]
+struct PipeLeg {
+    hops: Vec<PipeHop>,
+    /// Total serialization time across the hops.
+    serialize: Seconds,
+    /// Total propagation time across the hops.
+    propagation: Seconds,
+    /// Boundary-tensor size on the wire (compressed).
+    bytes: Bytes,
+}
+
+/// One stage of a planned pipeline: a contiguous layer range on one
+/// satellite, plus the leg that delivers its input (`None` when the stage
+/// runs where the tensor already is — stage 0 on the serving satellite).
+#[derive(Debug, Clone)]
+struct PipeStage {
+    sat: usize,
+    /// First layer (inclusive) this stage computes.
+    lo: usize,
+    /// Last layer (exclusive).
+    hi: usize,
+    proc_time: Seconds,
+    proc_energy: Joules,
+    arrive_leg: Option<PipeLeg>,
+}
+
+/// In-flight pipeline state: the stage schedule and the index of the
+/// stage currently executing (or being delivered to).
+#[derive(Debug, Clone)]
+struct PipeExec {
+    stages: Vec<PipeStage>,
+    idx: usize,
+}
+
+/// What [`FleetSimulator::plan_pipeline`] hands the admission path: the
+/// stage schedule and the layer the boundary tensor exits at (`depth` =
+/// fully on-board).
+struct PlannedPipeline {
+    stages: Vec<PipeStage>,
+    exit: usize,
 }
 
 impl Flight {
@@ -729,6 +824,229 @@ impl FleetSimulator {
         }
     }
 
+    /// Offer the placement solver a chain of ISL neighbors rooted at the
+    /// serving satellite and turn a genuinely multi-node decision into a
+    /// stage schedule. Returns `None` — falling back to the single-split
+    /// flow, which stays bit-identical — whenever pipelining is off, the
+    /// fleet has no ISLs, the serving satellite is cold (the legacy fetch
+    /// path owns weight misses), no warm neighbor extends the chain, or
+    /// the solver's optimum keeps every on-board layer on the serving
+    /// satellite (heuristic policies always land here).
+    ///
+    /// The chain is greedy: from the current tail, take the unvisited
+    /// neighbor with the highest [`SatelliteSpec::compute_scale`]
+    /// (lowest id on ties), skipping cold stores when placement is
+    /// active, until [`PipelineConfig::max_nodes`] nodes are in hand.
+    /// Including a slow neighbor is harmless — the solver just assigns it
+    /// an empty layer range — so no admission-time cost model is needed.
+    #[allow(clippy::too_many_arguments)]
+    fn plan_pipeline(
+        &self,
+        hot: &HotPath,
+        sat: usize,
+        req: &Request,
+        inst: &Instance,
+        tel: &Telemetry,
+        engine: &SolverEngine,
+        now: f64,
+        solve_s: &mut f64,
+    ) -> Option<PlannedPipeline> {
+        let pipe = self.config.pipeline?;
+        if pipe.max_nodes < 2 {
+            return None;
+        }
+        let isl = self.config.isl.as_ref()?;
+        if self.placement_active && !self.stores[sat].contains(req.model) {
+            return None;
+        }
+        let mut chain = vec![sat];
+        let mut visited = vec![false; self.config.sats.len()];
+        visited[sat] = true;
+        while chain.len() < pipe.max_nodes {
+            let tail = *chain.last().expect("chain non-empty");
+            let mut best: Option<usize> = None;
+            for link in isl.neighbors(tail) {
+                let cand = link.to;
+                if visited[cand] {
+                    continue;
+                }
+                if self.placement_active && !self.stores[cand].contains(req.model) {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some(b) => {
+                        let sb = self.config.sats[b].compute_scale;
+                        let sc = self.config.sats[cand].compute_scale;
+                        match sc.total_cmp(&sb) {
+                            std::cmp::Ordering::Greater => true,
+                            std::cmp::Ordering::Equal => cand < b,
+                            std::cmp::Ordering::Less => false,
+                        }
+                    }
+                };
+                if better {
+                    best = Some(cand);
+                }
+            }
+            match best {
+                Some(b) => {
+                    visited[b] = true;
+                    chain.push(b);
+                }
+                None => break,
+            }
+        }
+        if chain.len() < 2 {
+            return None;
+        }
+        let nodes: Vec<NodeProfile> = chain
+            .iter()
+            .map(|&id| {
+                NodeProfile::new(
+                    &self.config.sats[id].name,
+                    self.config.sats[id].compute_scale,
+                    Seconds((hot.proc_free[id] - now).max(0.0)),
+                )
+            })
+            .collect();
+        let mut legs = Vec::with_capacity(chain.len() - 1);
+        for w in chain.windows(2) {
+            let link = isl.neighbors(w[0]).iter().find(|l| l.to == w[1])?;
+            legs.push(LinkLeg::from_isl(link));
+        }
+        let pinst = PlacementInstance::new(inst.clone(), nodes, legs).ok()?;
+        let out = if hot.timing {
+            let t0 = Instant::now();
+            let out = engine.solve_placement(&pinst, tel);
+            *solve_s += t0.elapsed().as_secs_f64();
+            out
+        } else {
+            engine.solve_placement(&pinst, tel)
+        };
+        let placement = &out.decision.placement;
+        if placement.as_single_split().is_some() {
+            return None;
+        }
+        let exit = placement.exit_layer();
+        let stages_raw = placement.stages();
+        let mut stages = Vec::with_capacity(stages_raw.len());
+        // chain index currently holding the tensor
+        let mut carrier = 0usize;
+        for (node, lo, hi) in stages_raw {
+            let arrive_leg = if node == carrier {
+                None
+            } else {
+                // collapse the physical legs carrier..node into one
+                // logical leg: the boundary tensor is constant across
+                // idle carriers, but each hop pays its own antenna energy
+                let bytes = pinst.base.wire_bytes(lo);
+                let mut hops = Vec::with_capacity(node - carrier);
+                let mut ser_total = Seconds::ZERO;
+                let mut prop_total = Seconds::ZERO;
+                for j in carrier..node {
+                    let leg = &pinst.legs[j];
+                    let ser = leg.rate.transfer_time(bytes);
+                    ser_total += ser;
+                    prop_total += leg.propagation;
+                    hops.push(PipeHop {
+                        src: chain[j],
+                        dst: chain[j + 1],
+                        e: Joules(self.p_off.value() * ser.value()),
+                    });
+                }
+                Some(PipeLeg {
+                    hops,
+                    serialize: ser_total,
+                    propagation: prop_total,
+                    bytes,
+                })
+            };
+            let mut proc_time = Seconds::ZERO;
+            let mut proc_energy = Joules::ZERO;
+            for layer in lo..hi {
+                proc_time += pinst.delta_node(node, layer);
+                proc_energy += pinst.e_node(node, layer);
+            }
+            stages.push(PipeStage {
+                sat: chain[node],
+                lo,
+                hi,
+                proc_time,
+                proc_energy,
+                arrive_leg,
+            });
+            carrier = node;
+        }
+        Some(PlannedPipeline { stages, exit })
+    }
+
+    /// Push the boundary tensor down an inter-stage leg: the departing
+    /// satellite's queue slot frees, each hop's source antenna draws its
+    /// serialization energy (a refusal kills the flight and releases the
+    /// remaining stages' eviction pins), and `StageArrive` fires after the
+    /// whole leg's serialization + propagation.
+    #[allow(clippy::too_many_arguments)]
+    fn traverse_pipe_leg(
+        &mut self,
+        from: usize,
+        i: usize,
+        req_id: u64,
+        leg: &PipeLeg,
+        tx_bytes: Bytes,
+        now: f64,
+        q: &mut EventQueue<Event>,
+        cluster: &mut ClusterState,
+        metrics: &mut SimMetrics,
+        flights: &mut [Option<Flight>],
+        rec: &mut Option<Recorder>,
+        audit: &mut Audit,
+        model: usize,
+        inflight: &mut [Vec<u64>],
+    ) {
+        // the tensor departs: the holder's queue slot frees here, the
+        // next stage's opens at StageArrive
+        cluster.note_complete(from, tx_bytes);
+        for hop in &leg.hops {
+            if !self.states[hop.src].try_draw(now, hop.e) {
+                if let Some(r) = rec.as_mut() {
+                    r.reject(RejectPhase::Transmit, req_id, now, Some(hop.src));
+                }
+                metrics.reject_transmit(Some(hop.src));
+                if self.placement_active {
+                    if let Some(p) = flights[i].as_ref().and_then(|f| f.pipeline.as_ref()) {
+                        for st in &p.stages[p.idx..] {
+                            inflight[st.sat][model] = inflight[st.sat][model].saturating_sub(1);
+                        }
+                    }
+                }
+                flights[i] = None;
+                return;
+            }
+            if let Some(f) = flights[i].as_mut() {
+                f.energy += hop.e;
+            }
+            audit.on_battery(hop.src, &self.states[hop.src]);
+            metrics.note_relay(hop.src, hop.dst, leg.bytes);
+        }
+        if let Some(r) = rec.as_mut() {
+            let ser_end = now + leg.serialize.value();
+            r.span(SpanPhase::RelayTx, req_id, from, now, now, ser_end);
+            r.span(
+                SpanPhase::RelayProp,
+                req_id,
+                from,
+                ser_end,
+                ser_end,
+                ser_end + leg.propagation.value(),
+            );
+        }
+        q.schedule(
+            now + leg.serialize.value() + leg.propagation.value(),
+            Event::StageArrive(i),
+        );
+    }
+
     /// The live context the engine sees for a solve on satellite `sat`.
     fn telemetry_for(
         &mut self,
@@ -915,6 +1233,142 @@ impl FleetSimulator {
                     let queue_depth = cluster.get(sat).expect("registered").queue_depth;
                     let inst = self.instance_for(req);
                     let tel = self.telemetry_for(&mut hot, sat, now, queue_depth);
+                    // pipeline execution: offer the solver a chain of ISL
+                    // neighbors; a genuinely multi-node placement runs as
+                    // staged spans, everything else falls through to the
+                    // single-split flow below
+                    if let Some(plan) =
+                        self.plan_pipeline(&hot, sat, req, &inst, &tel, engine, now, &mut solve_s)
+                    {
+                        let k = inst.depth();
+                        let exit = plan.exit;
+                        if let Some(r) = rec.as_mut() {
+                            r.routed(req.id, now, sat, exit, k);
+                        }
+                        // admission: every stage satellite must cover its
+                        // own processing draw — precheck all, then draw all
+                        // (a multi-stage draw cannot be rolled back, so a
+                        // refusal must be decided before anything commits)
+                        let mut admissible = true;
+                        for st in &plan.stages {
+                            let state = &mut self.states[st.sat];
+                            state.refresh(now);
+                            let available = state
+                                .battery
+                                .as_ref()
+                                .map_or(Joules(f64::INFINITY), Battery::available);
+                            if available.value() < st.proc_energy.value() {
+                                admissible = false;
+                                break;
+                            }
+                        }
+                        if admissible {
+                            // a refusal here (same timestamp as the
+                            // precheck, so only boundary rounding could
+                            // cause one) rejects; earlier stage draws are
+                            // conservatively lost
+                            for st in &plan.stages {
+                                if !self.states[st.sat].try_draw(now, st.proc_energy) {
+                                    admissible = false;
+                                    break;
+                                }
+                                audit.on_battery(st.sat, &self.states[st.sat]);
+                            }
+                        }
+                        if !admissible {
+                            if let Some(r) = rec.as_mut() {
+                                r.reject(RejectPhase::Admission, req.id, now, Some(sat));
+                            }
+                            metrics.reject_admission(Some(sat));
+                            continue;
+                        }
+                        let mut energy = Joules::ZERO;
+                        for st in &plan.stages {
+                            energy += st.proc_energy;
+                        }
+                        // every stage satellite is warm by construction
+                        // (cold stores never join the chain): bump recency
+                        // and pin the model until that stage completes
+                        if self.placement_active {
+                            for st in &plan.stages {
+                                if self.stores[st.sat].touch(req.model) {
+                                    metrics.note_artifact_hit(st.sat);
+                                }
+                                inflight[st.sat][req.model] += 1;
+                            }
+                        }
+                        let (tx_bytes, e_off, t_gc) = if exit < k {
+                            (inst.wire_bytes(exit), inst.e_off(exit), inst.t_gc(exit))
+                        } else {
+                            (Bytes::ZERO, Joules::ZERO, Seconds::ZERO)
+                        };
+                        let mut t_cloud_suffix = Seconds::ZERO;
+                        for stage in exit..k {
+                            t_cloud_suffix += inst.delta_cloud(stage);
+                        }
+                        metrics.pipeline_requests += 1;
+                        cluster.note_enqueue(sat, tx_bytes);
+                        let first_leg = plan.stages[0].arrive_leg.clone();
+                        flights[i] = Some(Flight {
+                            sat,
+                            split: exit,
+                            depth: k,
+                            energy,
+                            route: Vec::new(),
+                            hop: 0,
+                            relay: None,
+                            t_gc,
+                            t_cloud_suffix,
+                            tx_bytes,
+                            e_off,
+                            fetch_src: None,
+                            fetch_time: Seconds::ZERO,
+                            proc_time: Seconds::ZERO,
+                            pipeline: Some(PipeExec {
+                                stages: plan.stages,
+                                idx: 0,
+                            }),
+                        });
+                        match first_leg {
+                            None => {
+                                // stage 0 runs on the serving satellite:
+                                // its queue slot is already held — join the
+                                // processing FIFO directly
+                                let f = flights[i].as_ref().expect("flight in progress");
+                                let p = f.pipeline.as_ref().expect("pipeline flight");
+                                let proc_time = p.stages[0].proc_time;
+                                metrics.note_pipeline_stage(sat);
+                                let start = now.max(hot.proc_free[sat]);
+                                let done = start + proc_time.value();
+                                if let Some(r) = rec.as_mut() {
+                                    r.span(SpanPhase::Stage, req.id, sat, now, start, done);
+                                }
+                                hot.proc_free[sat] = done;
+                                q.schedule(done, Event::StageDone(i));
+                            }
+                            Some(leg) => {
+                                // stage 0 sits further down the chain: the
+                                // raw input crosses the leg first
+                                self.traverse_pipe_leg(
+                                    sat,
+                                    i,
+                                    req.id,
+                                    &leg,
+                                    tx_bytes,
+                                    now,
+                                    &mut q,
+                                    &mut cluster,
+                                    &mut metrics,
+                                    &mut flights,
+                                    &mut rec,
+                                    &mut audit,
+                                    req.model,
+                                    &mut inflight,
+                                );
+                            }
+                        }
+                        continue;
+                    }
                     let s = if timing_on {
                         let t0 = Instant::now();
                         let s = engine.solve_parts(&inst, &tel).decision.split;
@@ -928,12 +1382,16 @@ impl FleetSimulator {
                         r.routed(req.id, now, sat, s, k);
                     }
 
-                    // satellite-side work and energy for stages 0..s
+                    // satellite-side work and energy for stages 0..s,
+                    // scaled by this satellite's relative compute speed
+                    // (x / 1.0 is bitwise x: homogeneous fleets stay
+                    // bit-identical to the pre-pipeline simulator)
+                    let scale = self.config.sats[sat].compute_scale;
                     let mut proc_time = Seconds::ZERO;
                     let mut proc_energy = Joules::ZERO;
                     for stage in 0..s {
-                        proc_time += inst.delta_sat(stage);
-                        proc_energy += inst.e_sat(stage);
+                        proc_time += Seconds(inst.delta_sat(stage).value() / scale);
+                        proc_energy += Joules(inst.e_sat(stage).value() / scale);
                     }
                     // admission: battery must cover the processing draw
                     if !self.states[sat].try_draw(now, proc_energy) {
@@ -983,6 +1441,7 @@ impl FleetSimulator {
                         fetch_src: fetch.and_then(|(src, _)| src),
                         fetch_time: fetch.map_or(Seconds::ZERO, |(_, t)| t),
                         proc_time,
+                        pipeline: None,
                     });
 
                     match fetch {
@@ -1227,6 +1686,102 @@ impl FleetSimulator {
                 Event::CloudDone(i) => {
                     complete(&mut metrics, requests, &mut flights, i, now, &mut rec);
                 }
+                Event::StageArrive(i) => {
+                    let (st_sat, proc_time, tx_bytes) = {
+                        let f = flights[i].as_ref().expect("flight in progress");
+                        let p = f.pipeline.as_ref().expect("pipeline flight");
+                        let st = &p.stages[p.idx];
+                        (st.sat, st.proc_time, f.tx_bytes)
+                    };
+                    // the tensor landed: this satellite holds the queue
+                    // slot until the stage completes (or departs)
+                    cluster.note_enqueue(st_sat, tx_bytes);
+                    metrics.note_pipeline_stage(st_sat);
+                    let start = now.max(hot.proc_free[st_sat]);
+                    let done = start + proc_time.value();
+                    if let Some(r) = rec.as_mut() {
+                        r.span(SpanPhase::Stage, requests[i].id, st_sat, now, start, done);
+                    }
+                    hot.proc_free[st_sat] = done;
+                    q.schedule(done, Event::StageDone(i));
+                }
+                Event::StageDone(i) => {
+                    let (st_sat, idx, n_stages, tx_bytes, split, depth, home) = {
+                        let f = flights[i].as_ref().expect("flight in progress");
+                        let p = f.pipeline.as_ref().expect("pipeline flight");
+                        (
+                            p.stages[p.idx].sat,
+                            p.idx,
+                            p.stages.len(),
+                            f.tx_bytes,
+                            f.split,
+                            f.depth,
+                            f.sat,
+                        )
+                    };
+                    // this stage's eviction pin releases with its compute
+                    if self.placement_active {
+                        let m = requests[i].model;
+                        inflight[st_sat][m] = inflight[st_sat][m].saturating_sub(1);
+                    }
+                    if idx + 1 < n_stages {
+                        // advance and push the boundary tensor down the
+                        // next stage's leg
+                        let leg = {
+                            let f = flights[i].as_mut().expect("flight in progress");
+                            let p = f.pipeline.as_mut().expect("pipeline flight");
+                            p.idx += 1;
+                            p.stages[p.idx]
+                                .arrive_leg
+                                .clone()
+                                .expect("inter-stage leg")
+                        };
+                        self.traverse_pipe_leg(
+                            st_sat,
+                            i,
+                            requests[i].id,
+                            &leg,
+                            tx_bytes,
+                            now,
+                            &mut q,
+                            &mut cluster,
+                            &mut metrics,
+                            &mut flights,
+                            &mut rec,
+                            &mut audit,
+                            requests[i].model,
+                            &mut inflight,
+                        );
+                        continue;
+                    }
+                    if split == depth {
+                        // the pipeline computed the whole network on board
+                        cluster.note_complete(st_sat, tx_bytes);
+                        complete(&mut metrics, requests, &mut flights, i, now, &mut rec);
+                        continue;
+                    }
+                    // the boundary tensor exits toward the cloud from the
+                    // last stage's satellite: its transmitter and battery
+                    // carry the downlink
+                    if st_sat != home {
+                        if let Some(f) = flights[i].as_mut() {
+                            f.relay = Some(st_sat);
+                        }
+                    }
+                    self.enqueue_downlink(
+                        &mut hot,
+                        st_sat,
+                        i,
+                        requests[i].id,
+                        tx_bytes,
+                        now,
+                        &mut q,
+                        &mut cluster,
+                        &mut metrics,
+                        &mut flights,
+                        &mut rec,
+                    );
+                }
             }
         }
 
@@ -1304,6 +1859,7 @@ fn complete(
         downlinked: f.tx_bytes,
         relay: f.relay,
         path_len: f.route.len(),
+        stages: f.pipeline.as_ref().map_or(1, |p| p.stages.len()),
     });
 }
 
@@ -1345,6 +1901,7 @@ mod tests {
             timing: false,
             audit: true,
             trace: None,
+            pipeline: None,
             horizon: Seconds::from_hours(10_000.0),
         }
     }
@@ -1506,6 +2063,7 @@ mod tests {
             timing: false,
             audit: true,
             trace: None,
+            pipeline: None,
             horizon: Seconds::from_hours(10_000.0),
         };
         let trace = fixed_trace(4, Seconds(5000.0), Bytes::from_mb(50.0));
@@ -1540,6 +2098,7 @@ mod tests {
             timing: false,
             audit: true,
             trace: None,
+            pipeline: None,
             horizon: Seconds::from_hours(10_000.0),
         };
         let trace = fixed_trace(3, Seconds(100.0), Bytes::from_mb(50.0));
@@ -1603,6 +2162,7 @@ mod tests {
             timing: false,
             audit: true,
             trace: None,
+            pipeline: None,
             horizon: Seconds::from_hours(10_000.0),
         };
         let trace = vec![Request {
@@ -1701,6 +2261,7 @@ mod tests {
             timing: false,
             audit: true,
             trace: None,
+            pipeline: None,
             horizon: Seconds::from_hours(10_000.0),
         };
         let trace = vec![Request {
@@ -1835,6 +2396,7 @@ mod tests {
             timing: false,
             audit: true,
             trace: None,
+            pipeline: None,
             horizon: Seconds::from_hours(10_000.0),
         };
         let mk = |id: u64, at: f64| Request {
@@ -2143,5 +2705,154 @@ mod tests {
             .run(&fixed_trace(1, Seconds(0.0), Bytes::from_mb(1.0)), &engine)
             .unwrap();
         assert!(result.timing.is_none());
+    }
+
+    // ---------------------------------------------------------- pipeline
+
+    #[test]
+    fn pipeline_without_isl_is_bitwise_inert() {
+        // pipeline armed but no ISL: plan_pipeline can never build a
+        // chain, so every request takes the legacy path bit for bit
+        let trace = fixed_trace(6, Seconds(10.0), Bytes::from_mb(50.0));
+        let engine_off = SolverRegistry::engine("ilpb").unwrap();
+        let engine_on = SolverRegistry::engine("ilpb").unwrap();
+        let off = FleetSimulator::new(config(3, RoutingPolicy::LeastLoaded))
+            .run(&trace, &engine_off)
+            .unwrap();
+        let mut cfg = config(3, RoutingPolicy::LeastLoaded);
+        cfg.pipeline = Some(PipelineConfig { max_nodes: 3 });
+        let on = FleetSimulator::new(cfg).run(&trace, &engine_on).unwrap();
+        assert_eq!(on.metrics.pipeline_requests, 0);
+        assert_eq!(on.metrics.completed(), off.metrics.completed());
+        assert_eq!(
+            on.metrics.mean_latency().value().to_bits(),
+            off.metrics.mean_latency().value().to_bits(),
+            "latencies must be bitwise identical"
+        );
+        assert_eq!(
+            on.metrics.total_energy().value().to_bits(),
+            off.metrics.total_energy().value().to_bits(),
+            "energies must be bitwise identical"
+        );
+        for (a, b) in on.metrics.records.iter().zip(&off.metrics.records) {
+            assert_eq!(a.latency.value().to_bits(), b.latency.value().to_bits());
+            assert_eq!(a.stages, 1, "legacy flights report one stage");
+        }
+    }
+
+    /// The line-3 geometry squeezed to < 1000 km ranges, so every link
+    /// runs at *exactly* the reference rate (the inverse-square scaling
+    /// caps out) and the pipeline latency arithmetic below is exact up
+    /// to sub-millisecond propagation.
+    fn tight_line3_topology(rate_mbps: f64) -> IslTopology {
+        use crate::orbit::constellation::{Constellation, NamedOrbit};
+        use crate::orbit::propagator::CircularOrbit;
+        let mk = |plane: usize, slot: usize, raan: f64, phase: f64| NamedOrbit {
+            name: format!("p{plane}s{slot}"),
+            plane,
+            slot,
+            orbit: CircularOrbit::new(550.0, 53.0, raan, phase),
+        };
+        let c = Constellation {
+            // same index layout as line3_topology: 0 – 1 – 2 with
+            // satellite 0 reaching only satellite 1
+            satellites: vec![mk(0, 1, 0.0, 2.0), mk(0, 0, 0.0, 0.0), mk(1, 0, 2.0, 0.0)],
+        };
+        IslTopology::build(&c, IslMode::Grid, BitsPerSec::from_mbps(rate_mbps)).unwrap()
+    }
+
+    /// Compute-starved pipeline scenario: the serving satellite 0 is
+    /// slow, its lone ISL neighbor (satellite 1) is 5× faster, and the
+    /// first layer shrinks the tensor 10× — so the latency-optimal
+    /// placement computes layer 0 at home and ships the small boundary
+    /// tensor across. With β = 1e-5 s/byte, an 8 MB capture, and a
+    /// 0.64 Mbps ISL: single-split-at-home ≈ 100.7 s, ship-raw-input
+    /// ≈ 125 s, cut-after-layer-0 ≈ 97.7 s — a genuine two-stage win.
+    fn pipeline_line3_config(pipeline: Option<PipelineConfig>, isl: bool) -> FleetSimConfig {
+        // sizes 1000 → 100 → 100 → 100 bytes-per-unit: α = [1, 0.1, 0.1]
+        let prof =
+            ModelProfile::from_alphas("pipe-net", &[1000.0, 100.0, 100.0, 100.0]).unwrap();
+        let template = InstanceBuilder::new(prof.clone())
+            .beta_s_per_kb(1024.0 * 1e-5) // β = 1e-5 s per byte
+            .rate(crate::util::units::BitsPerSec::from_mbps(0.1)) // downlink prohibitive
+            .weights(0.0, 1.0) // pure latency objective
+            .contact(Seconds::from_hours(8.0), Seconds::from_minutes(6.0));
+        let mut sats = vec![spec(0.0), spec(100.0), spec(200.0)];
+        sats[1].compute_scale = 5.0;
+        FleetSimConfig {
+            template,
+            profiles: vec![prof],
+            sats,
+            routing: RoutingPolicy::LeastLoaded,
+            isl: if isl { Some(tight_line3_topology(0.64)) } else { None },
+            isl_max_hops: 4,
+            telemetry: TelemetryMode::Unconstrained,
+            placement: PlacementConfig::default(),
+            route_cache: true,
+            timing: false,
+            audit: true,
+            trace: None,
+            pipeline,
+            horizon: Seconds::from_hours(10_000.0),
+        }
+    }
+
+    #[test]
+    fn two_stage_pipeline_beats_bent_pipe_and_best_single_split() {
+        use crate::obs::TraceEvent;
+        let capture = fixed_trace(1, Seconds(10.0), Bytes::from_mb(8.0));
+        let run = |cfg: FleetSimConfig| {
+            FleetSimulator::new(cfg)
+                .run(&capture, &SolverRegistry::engine("exhaustive").unwrap())
+                .unwrap()
+        };
+        let bent = run(pipeline_line3_config(None, false));
+        let single = run(pipeline_line3_config(None, true));
+        let mut cfg = pipeline_line3_config(Some(PipelineConfig { max_nodes: 3 }), true);
+        cfg.trace = Some(TraceConfig::default());
+        let piped = run(cfg);
+
+        for r in [&bent, &single] {
+            assert_eq!(r.metrics.completed(), 1);
+            assert_eq!(r.metrics.pipeline_requests, 0);
+            assert_eq!(r.metrics.records[0].stages, 1);
+        }
+        let m = &piped.metrics;
+        assert_eq!(m.completed(), 1);
+        assert_eq!(m.pipeline_requests, 1);
+        let rec = &m.records[0];
+        assert_eq!(rec.stages, 2, "layer 0 at home, layers 1-2 on the fast neighbor");
+        assert_eq!(rec.split, 3, "the whole network stays on the path");
+        assert_eq!(rec.relay, None, "no downlink, so no relay terminus");
+        assert_eq!(m.relays, 1, "one boundary-tensor hop 0 -> 1");
+        assert_eq!(m.per_sat()[0].pipeline_stages, 1);
+        assert_eq!(m.per_sat()[1].pipeline_stages, 1);
+        assert_eq!(m.per_sat()[2].pipeline_stages, 0, "the slow tail stays idle");
+
+        let t_pipe = m.mean_latency().value();
+        let t_single = single.metrics.mean_latency().value();
+        let t_bent = bent.metrics.mean_latency().value();
+        assert_eq!(
+            t_single, t_bent,
+            "with the whole network on board, ISL availability changes nothing"
+        );
+        assert!(
+            t_pipe + 1.0 < t_single,
+            "pipeline {t_pipe:.2} s must strictly beat single-split {t_bent:.2} s"
+        );
+        // both stage satellites paid their own processing draw
+        assert!(m.per_sat()[0].completed == 1 || m.per_sat()[1].completed == 1);
+        // the trace carries one Stage span per executed stage plus the
+        // inter-stage relay serialization (the audit ran throughout —
+        // `audit: true` panics on any slot/battery inconsistency)
+        let tr = piped.trace.expect("trace armed");
+        let stages = tr.count(
+            |e| matches!(e, TraceEvent::Span { phase: SpanPhase::Stage, .. }),
+        );
+        assert_eq!(stages, 2);
+        let relay_tx = tr.count(
+            |e| matches!(e, TraceEvent::Span { phase: SpanPhase::RelayTx, .. }),
+        );
+        assert_eq!(relay_tx, 1);
     }
 }

@@ -41,6 +41,10 @@ pub struct RequestRecord {
     /// Number of ISL hops the boundary tensor traversed (0 = bent pipe,
     /// 1 = PR 3's single-hop relay, ≥ 2 = multi-hop contact-graph route).
     pub path_len: usize,
+    /// Processing stages the request's on-board layers ran as: 1 for the
+    /// single-split flow, ≥ 1 for a multi-node pipeline placement (one per
+    /// satellite that computed a layer range).
+    pub stages: usize,
 }
 
 /// Per-satellite slice of a run's metrics.
@@ -78,6 +82,9 @@ pub struct SatMetrics {
     /// Model weight bytes fetched into this satellite (over ISLs or from
     /// the ground when no warm neighbor was reachable).
     pub weight_bytes_in: Bytes,
+    /// Pipeline stages this satellite executed (one per layer range it
+    /// computed on behalf of a multi-node placement).
+    pub pipeline_stages: u64,
     latency: StreamingSummary,
     /// Total on-board energy of this satellite's completed requests.
     pub energy: Joules,
@@ -101,6 +108,7 @@ impl SatMetrics {
             artifact_misses: 0,
             evictions: 0,
             weight_bytes_in: Bytes::ZERO,
+            pipeline_stages: 0,
             latency: StreamingSummary::for_latency(),
             energy: Joules::ZERO,
             downlinked: Bytes::ZERO,
@@ -156,6 +164,7 @@ impl SatMetrics {
         reg.counter(&format!("{p}.artifact_misses"), self.artifact_misses);
         reg.counter(&format!("{p}.evictions"), self.evictions);
         reg.gauge(&format!("{p}.weight_bytes_in"), self.weight_bytes_in.value());
+        reg.counter(&format!("{p}.pipeline_stages"), self.pipeline_stages);
         reg.gauge(&format!("{p}.energy_j"), self.energy.value());
         reg.gauge(&format!("{p}.downlinked_bytes"), self.downlinked.value());
         reg.histogram(&format!("{p}.latency_s"), &self.latency);
@@ -205,6 +214,10 @@ pub struct SimMetrics {
     pub evictions: u64,
     /// Model weight bytes fetched across the fleet.
     pub weight_bytes_in: Bytes,
+    /// Requests admitted as multi-node pipeline placements (their layer
+    /// path ran as staged spans across ≥ 1 satellites instead of the
+    /// single-split flow).
+    pub pipeline_requests: u64,
     per_sat: Vec<SatMetrics>,
 }
 
@@ -234,6 +247,7 @@ impl SimMetrics {
             artifact_misses: 0,
             evictions: 0,
             weight_bytes_in: Bytes::ZERO,
+            pipeline_requests: 0,
             per_sat: Vec::new(),
         }
     }
@@ -334,6 +348,12 @@ impl SimMetrics {
         self.sat_mut(sat).evictions += 1;
     }
 
+    /// Count one pipeline stage executed on `sat` (a layer range computed
+    /// on behalf of a multi-node placement).
+    pub fn note_pipeline_stage(&mut self, sat: usize) {
+        self.sat_mut(sat).pipeline_stages += 1;
+    }
+
     /// Total rejections across both phases.
     pub fn rejected(&self) -> u64 {
         self.rejected_admission + self.rejected_transmit
@@ -422,6 +442,7 @@ impl SimMetrics {
         reg.counter("sim.artifact_misses", self.artifact_misses);
         reg.counter("sim.evictions", self.evictions);
         reg.gauge("sim.weight_bytes_in", self.weight_bytes_in.value());
+        reg.counter("sim.pipeline_requests", self.pipeline_requests);
         reg.gauge("sim.total_downlinked_bytes", self.total_downlinked.value());
         reg.gauge("sim.total_energy_j", self.total_energy().value());
         reg.histogram("sim.latency_s", &self.latency);
@@ -449,6 +470,7 @@ mod tests {
             downlinked: Bytes::from_mb(10.0),
             relay: None,
             path_len: 0,
+            stages: 1,
         }
     }
 
@@ -557,6 +579,25 @@ mod tests {
         // cache bookkeeping is not an outcome bucket
         assert_eq!(m.completed(), 0);
         assert_eq!(m.rejected(), 0);
+    }
+
+    #[test]
+    fn pipeline_accounting_attributes_per_stage_satellite() {
+        let mut m = SimMetrics::for_fleet(&["a".to_string(), "b".to_string()]);
+        m.pipeline_requests += 1;
+        m.note_pipeline_stage(0);
+        m.note_pipeline_stage(1);
+        m.note_pipeline_stage(1);
+        assert_eq!(m.pipeline_requests, 1);
+        assert_eq!(m.per_sat()[0].pipeline_stages, 1);
+        assert_eq!(m.per_sat()[1].pipeline_stages, 2);
+        // stage bookkeeping is not an outcome bucket
+        assert_eq!(m.completed(), 0);
+        assert_eq!(m.rejected(), 0);
+        let reg = m.registry();
+        assert_eq!(reg.counter_value("sim.pipeline_requests"), Some(1));
+        assert_eq!(reg.counter_value("sat.a.pipeline_stages"), Some(1));
+        assert_eq!(reg.counter_value("sat.b.pipeline_stages"), Some(2));
     }
 
     #[test]

@@ -120,6 +120,7 @@ impl Simulator {
             // release sweeps. It is read-only either way.
             audit: cfg!(debug_assertions),
             trace,
+            pipeline: None,
             horizon,
         };
         let mut sim = FleetSimulator::new(fleet);

@@ -22,6 +22,7 @@
 //! here so existing `solver::engine::cache` imports keep working.
 
 use crate::solver::instance::{Decision, Instance};
+use crate::solver::placement::{PlacementDecision, PlacementInstance};
 use std::collections::hash_map::DefaultHasher;
 use std::hash::{Hash, Hasher};
 
@@ -42,6 +43,41 @@ pub struct CachedDecision {
 
 /// The engine's decision cache.
 pub type DecisionCache = LruCache<CachedDecision>;
+
+/// What the engine memoizes per placement fingerprint. Multi-node solves
+/// skip split-based telemetry tightening (see
+/// [`super::SolverEngine::solve_placement`]), so `tightened` records
+/// whether the producing solve was a tightened legacy delegation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CachedPlacement {
+    /// The cached placement decision.
+    pub decision: PlacementDecision,
+    /// Whether telemetry tightening changed the (delegated) answer.
+    pub tightened: bool,
+}
+
+/// The engine's placement-decision cache.
+pub type PlacementCache = LruCache<CachedPlacement>;
+
+/// 64-bit fingerprint of everything a placement solve depends on: the
+/// base-instance fingerprint (telemetry folded in exactly as for the split
+/// cache) extended with the quantized chain shape — per-node compute scale
+/// and readiness, per-leg rate and propagation. Node names are display-only
+/// and deliberately not hashed.
+pub fn placement_fingerprint(pinst: &PlacementInstance, telemetry: &Telemetry) -> u64 {
+    let mut h = DefaultHasher::new();
+    fingerprint(&pinst.base, telemetry).hash(&mut h);
+    pinst.nodes.len().hash(&mut h);
+    for node in &pinst.nodes {
+        quantize(node.compute_scale).hash(&mut h);
+        quantize(node.ready_in.value()).hash(&mut h);
+    }
+    for leg in &pinst.legs {
+        quantize(leg.rate.value()).hash(&mut h);
+        quantize(leg.propagation.value()).hash(&mut h);
+    }
+    h.finish()
+}
 
 /// 64-bit fingerprint of everything a solve depends on: the instance's
 /// quantized parameters plus any telemetry that tightens constraints.

@@ -28,11 +28,15 @@ pub mod cache;
 pub mod registry;
 pub mod telemetry;
 
-pub use cache::{fingerprint, CachedDecision, DecisionCache, LruCache};
+pub use cache::{
+    fingerprint, placement_fingerprint, CachedDecision, CachedPlacement, DecisionCache, LruCache,
+    PlacementCache,
+};
 pub use registry::{BoxedPolicy, SolverRegistry};
 pub use telemetry::Telemetry;
 
 use crate::solver::instance::{Costs, Decision, Instance};
+use crate::solver::placement::{decide_for_policy, Placement, PlacementDecision, PlacementInstance};
 use crate::solver::policy::OffloadPolicy;
 // lint:allow(hash_iter, reason = "batch dedup map is lookup-only; outcomes keep request order")
 use std::collections::HashMap;
@@ -118,8 +122,26 @@ impl EngineStats {
     }
 }
 
+/// What a placement solve produced and what it cost — the multi-node
+/// analogue of [`SolveOutcome`].
+#[derive(Debug, Clone)]
+pub struct PlacementOutcome {
+    /// The chosen layer-to-node placement with its evaluated costs.
+    pub decision: PlacementDecision,
+    /// Display name of the underlying policy ("ILPB", "ARG", ...).
+    pub solver: &'static str,
+    /// Wall time of this call, seconds (near-zero on cache hits).
+    pub wall_s: f64,
+    /// True when the decision came from the placement cache.
+    pub cached: bool,
+    /// True when telemetry tightening overrode the answer (only possible
+    /// on the single-node delegation path).
+    pub tightened: bool,
+}
+
 struct Inner {
     cache: DecisionCache,
+    pcache: PlacementCache,
     stats: EngineStats,
 }
 
@@ -142,6 +164,7 @@ impl SolverEngine {
             policy,
             inner: Mutex::new(Inner {
                 cache: DecisionCache::new(capacity),
+                pcache: PlacementCache::new(capacity),
                 stats: EngineStats::default(),
             }),
         }
@@ -222,6 +245,78 @@ impl SolverEngine {
             wall_s,
             cached: false,
             tightened: entry.tightened,
+        }
+    }
+
+    /// Solve a multi-node placement instance: cache lookup → solve →
+    /// memoize, keyed by the quantized chain fingerprint.
+    ///
+    /// With a single chain node the call delegates to the legacy
+    /// [`SolverEngine::solve_parts`] path (telemetry tightening included)
+    /// and lifts its decision, so the returned `z` is *bit-identical* to
+    /// the legacy solve for every registered policy — the two-node
+    /// reduction regression rests on this. With two or more nodes the
+    /// policy is mapped onto the placement space by display name
+    /// ([`decide_for_policy`]); split-based telemetry tightening does not
+    /// generalize to chains and is skipped (`tightened` stays `false`).
+    pub fn solve_placement(
+        &self,
+        pinst: &PlacementInstance,
+        telemetry: &Telemetry,
+    ) -> PlacementOutcome {
+        if pinst.node_count() == 1 {
+            let out = self.solve_parts(&pinst.base, telemetry);
+            let cuts = vec![out.decision.split];
+            let costs = pinst.evaluate_cuts(&cuts);
+            return PlacementOutcome {
+                decision: PlacementDecision {
+                    placement: Placement { cuts },
+                    // keep the legacy bits: z comes from the split solve,
+                    // not re-derived through the placement evaluator
+                    z: out.decision.z,
+                    costs,
+                },
+                solver: out.solver,
+                wall_s: out.wall_s,
+                cached: out.cached,
+                tightened: out.tightened,
+            };
+        }
+        let t0 = Instant::now();
+        let key = placement_fingerprint(pinst, telemetry);
+        {
+            let mut inner = self.inner.lock().expect("engine lock");
+            inner.stats.requests += 1;
+            if let Some(hit) = inner.pcache.get(key) {
+                let hit = hit.clone();
+                inner.stats.cache_hits += 1;
+                return PlacementOutcome {
+                    decision: hit.decision,
+                    solver: self.policy.name(),
+                    wall_s: t0.elapsed().as_secs_f64(),
+                    cached: true,
+                    tightened: hit.tightened,
+                };
+            }
+        }
+        let decision = decide_for_policy(self.policy.name(), pinst);
+        let wall_s = t0.elapsed().as_secs_f64();
+        let mut inner = self.inner.lock().expect("engine lock");
+        inner.stats.solves += 1;
+        inner.stats.solve_time_s += wall_s;
+        inner.pcache.insert(
+            key,
+            CachedPlacement {
+                decision: decision.clone(),
+                tightened: false,
+            },
+        );
+        PlacementOutcome {
+            decision,
+            solver: self.policy.name(),
+            wall_s,
+            cached: false,
+            tightened: false,
         }
     }
 
@@ -606,6 +701,59 @@ mod tests {
         let free_again = engine.solve_parts(&inst, &Telemetry::unconstrained());
         assert!(free_again.cached);
         assert_eq!(free_again.decision, free.decision);
+    }
+
+    #[test]
+    fn single_node_placement_delegates_bit_identically() {
+        use crate::solver::placement::PlacementInstance;
+        for name in SolverRegistry::NAMES {
+            let engine = SolverRegistry::engine(name).unwrap();
+            for seed in 0..10 {
+                let inst = instance(500 + seed, 1 + (seed as usize % 12), 60.0);
+                let legacy = engine.solve_parts(&inst, &Telemetry::unconstrained());
+                let pinst = PlacementInstance::two_node(inst);
+                let placed = engine.solve_placement(&pinst, &Telemetry::unconstrained());
+                assert_eq!(
+                    placed.decision.placement.cuts,
+                    vec![legacy.decision.split],
+                    "{name}: split drifted at seed {seed}"
+                );
+                assert_eq!(
+                    placed.decision.z.to_bits(),
+                    legacy.decision.z.to_bits(),
+                    "{name}: z bits drifted at seed {seed}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn multi_node_placements_hit_the_placement_cache() {
+        use crate::solver::placement::{LinkLeg, NodeProfile, PlacementInstance};
+        use crate::util::units::BitsPerSec;
+        let engine = ilpb_engine();
+        let inst = instance(77, 8, 40.0);
+        let pinst = PlacementInstance::new(
+            inst,
+            vec![NodeProfile::unit("a"), NodeProfile::new("b", 2.0, Seconds::ZERO)],
+            vec![LinkLeg::new(BitsPerSec::from_mbps(5000.0), Seconds(0.002))],
+        )
+        .unwrap();
+        let tel = Telemetry::unconstrained();
+        let first = engine.solve_placement(&pinst, &tel);
+        assert!(!first.cached);
+        let second = engine.solve_placement(&pinst, &tel);
+        assert!(second.cached, "identical chain must replay from the cache");
+        assert_eq!(second.decision, first.decision, "bit-identical replay");
+        // a different chain shape is a different key
+        let faster = PlacementInstance::new(
+            pinst.base.clone(),
+            vec![NodeProfile::unit("a"), NodeProfile::new("b", 3.0, Seconds::ZERO)],
+            pinst.legs.clone(),
+        )
+        .unwrap();
+        let third = engine.solve_placement(&faster, &tel);
+        assert!(!third.cached, "chain shape must key the placement cache");
     }
 
     #[test]

@@ -14,6 +14,11 @@
 //!   total (the performance-optimized production path).
 //! * [`baselines`] — the paper's comparison points: ARG (all-on-ground)
 //!   and ARS (all-on-satellite), plus a greedy heuristic ablation.
+//! * [`placement`] — the multi-node generalization: layer-to-satellite
+//!   placement vectors over ISL chains ([`placement::PlacementInstance`],
+//!   [`placement::Placement`]), the generalized branch-and-bound
+//!   ([`placement::PlacementBnb`]) with an exhaustive oracle, and the
+//!   bit-identical two-node reduction of the legacy split model.
 //! * [`policy`] — object-safe strategy interface (the low-level SPI every
 //!   solver implements).
 //! * [`engine`] — the public solving API: [`SolverEngine`] wraps any
@@ -29,6 +34,7 @@ pub mod dp;
 pub mod engine;
 pub mod exhaustive;
 pub mod instance;
+pub mod placement;
 pub mod policy;
 
 pub use baselines::{Arg, Ars, Greedy};
@@ -39,4 +45,8 @@ pub use engine::{
 };
 pub use exhaustive::Exhaustive;
 pub use instance::{Costs, Decision, Instance, InstanceBuilder, Objective};
+pub use placement::{
+    decide_for_policy, ExhaustivePlacement, LinkLeg, NodeProfile, Placement, PlacementBnb,
+    PlacementBnbStats, PlacementCosts, PlacementDecision, PlacementInstance,
+};
 pub use policy::OffloadPolicy;

@@ -1,0 +1,898 @@
+//! Multi-node placement vectors: pipeline partitioning of a DNN across a
+//! chain of compute nodes.
+//!
+//! The paper's ILP picks a single split index `s ∈ [0, K]` between the
+//! serving satellite and the ground/cloud side. This module generalizes the
+//! instance to a *chain* of compute nodes joined by inter-satellite link
+//! legs, and the solver output to a [`Placement`] — a vector of cut points
+//! assigning each layer range to a node along the chain (per Peng et al.,
+//! "Collaborative Satellite Computing through Adaptive DNN Task Splitting
+//! and Offloading").
+//!
+//! # Model
+//!
+//! A [`PlacementInstance`] wraps the legacy two-node [`Instance`] (which
+//! retains the model profile, downlink, ground segment, GPU power model and
+//! objective weights) with:
+//!
+//! - `nodes[0..M]`: per-node compute profiles ([`NodeProfile`]) — a relative
+//!   `compute_scale` applied to the base instance's per-layer satellite
+//!   latency/energy, plus a `ready_in` offset modelling the node's queue
+//!   backlog (the pipeline stage cannot start before it).
+//! - `legs[0..M-1]`: ISL legs ([`LinkLeg`]) joining consecutive nodes, with
+//!   a serialization rate and propagation delay (the shape produced by the
+//!   contact-graph router's Pareto labels in `link::route`).
+//!
+//! A [`Placement`] is a non-decreasing vector `cuts[0..M]` with
+//! `cuts[j] ≤ K`: node `j` computes layers `cuts[j-1]..cuts[j]` (with an
+//! implicit `cuts[-1] = 0`). The exit layer is `e = cuts[M-1]`; if `e < K`
+//! the remaining layers run in the cloud after a downlink from the last
+//! node, exactly as in the legacy split model. The intermediate tensor
+//! crosses leg `j` iff `e > cuts[j]`, carrying `wire_bytes(cuts[j])`.
+//!
+//! # Two-node reduction
+//!
+//! With `M = 1` (a single unit-scale node, zero legs — see
+//! [`PlacementInstance::two_node`]), `cuts = [s]` reproduces the legacy
+//! split `s` *bit-identically*: [`PlacementInstance::evaluate_cuts`]
+//! accumulates compute time and energy in the same order as
+//! [`Instance::evaluate_split`], the wait/link terms are exact zeros
+//! (`Seconds::ZERO + x == x` bitwise), and the unit compute scale divides
+//! by `1.0` (`x / 1.0 == x` bitwise). The in-module tests and
+//! `tests/placement_solver_properties.rs` assert this at the bit level.
+//!
+//! # Solvers
+//!
+//! - [`ExhaustivePlacement`] enumerates all `C(K+M, M)` non-decreasing cut
+//!   vectors — the test oracle.
+//! - [`PlacementBnb`] is the generalized branch-and-bound: it extends a
+//!   partial placement one node at a time and prunes any prefix whose
+//!   *optimistic* completion already exceeds the incumbent. The bound
+//!   relaxes all transfer, wait and downlink terms to zero and charges each
+//!   unassigned layer its cheapest weighted cost over the remaining nodes
+//!   and the cloud — an admissible relaxation, so with `epsilon = 0` the
+//!   returned objective matches the oracle up to float rounding of the
+//!   incremental bound arithmetic (the tests assert `z − oracle ≤ ε + 1e-9`).
+
+use anyhow::{ensure, Result};
+
+use crate::link::isl::IslLink;
+use crate::util::units::{BitsPerSec, Joules, Seconds};
+
+use super::instance::{Costs, Instance, Objective};
+
+/// Per-node compute profile for a placement instance.
+///
+/// `compute_scale` is relative to the base instance's satellite GPU: layer
+/// `i` on this node takes `delta_sat(i) / compute_scale` seconds and
+/// `e_sat(i) / compute_scale` joules. `ready_in` is the earliest sim-time
+/// offset (from request arrival) at which the node can start computing —
+/// the solver models it as a wait before the node's first layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeProfile {
+    /// Display name (not hashed into cache fingerprints).
+    pub name: String,
+    /// Relative compute speed vs. the base instance's GPU (1.0 = identical).
+    pub compute_scale: f64,
+    /// Earliest start offset for this node's first assigned layer.
+    pub ready_in: Seconds,
+}
+
+impl NodeProfile {
+    /// A unit-scale, immediately-ready node (the legacy serving satellite).
+    pub fn unit(name: &str) -> Self {
+        Self { name: name.to_string(), compute_scale: 1.0, ready_in: Seconds::ZERO }
+    }
+
+    /// A node with the given relative compute speed and readiness offset.
+    pub fn new(name: &str, compute_scale: f64, ready_in: Seconds) -> Self {
+        Self { name: name.to_string(), compute_scale, ready_in }
+    }
+}
+
+/// An inter-node link leg joining consecutive chain nodes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkLeg {
+    /// Serialization rate of the leg.
+    pub rate: BitsPerSec,
+    /// One-way propagation delay of the leg.
+    pub propagation: Seconds,
+}
+
+impl LinkLeg {
+    /// A leg with the given rate and propagation delay.
+    pub fn new(rate: BitsPerSec, propagation: Seconds) -> Self {
+        Self { rate, propagation }
+    }
+
+    /// Build a leg from an ISL topology edge.
+    pub fn from_isl(link: &IslLink) -> Self {
+        Self { rate: link.rate, propagation: link.propagation }
+    }
+}
+
+/// A layer-to-node assignment: non-decreasing cut points, one per node.
+///
+/// Node `j` computes layers `cuts[j-1]..cuts[j]` (implicit `cuts[-1] = 0`);
+/// layers `cuts[M-1]..K` run in the cloud.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    /// Cut points, one per chain node; non-decreasing, each `≤ K`.
+    pub cuts: Vec<usize>,
+}
+
+impl Placement {
+    /// The single-node placement equivalent to legacy split `s`.
+    pub fn single(s: usize) -> Self {
+        Self { cuts: vec![s] }
+    }
+
+    /// The last on-path layer index: layers `exit_layer()..K` run in the cloud.
+    pub fn exit_layer(&self) -> usize {
+        *self.cuts.last().expect("placement has at least one node")
+    }
+
+    /// Number of chain nodes this placement spans (including idle ones).
+    pub fn node_count(&self) -> usize {
+        self.cuts.len()
+    }
+
+    /// Active stages as `(node, lo, hi)` triples with `lo < hi`.
+    pub fn stages(&self) -> Vec<(usize, usize, usize)> {
+        let mut out = Vec::new();
+        let mut prev = 0usize;
+        for (j, &hi) in self.cuts.iter().enumerate() {
+            if hi > prev {
+                out.push((j, prev, hi));
+            }
+            prev = hi;
+        }
+        out
+    }
+
+    /// `Some(s)` iff all on-path compute happens on node 0 — i.e. the
+    /// placement is equivalent to the legacy single split `s`.
+    pub fn as_single_split(&self) -> Option<usize> {
+        let e = self.exit_layer();
+        (self.cuts[0] == e).then(|| e)
+    }
+}
+
+/// Cost breakdown of a placement, mirroring [`Costs`] with the chain terms
+/// (per-stage compute, inter-stage waits, ISL legs) split out.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlacementCosts {
+    /// End-to-end latency (chain + downlink + ground + cloud).
+    pub latency: Seconds,
+    /// Total energy across all chain batteries plus the downlink.
+    pub energy: Joules,
+    /// Sum of per-stage compute time across the chain.
+    pub t_compute: Seconds,
+    /// Time spent waiting for not-yet-ready nodes.
+    pub t_wait: Seconds,
+    /// Serialization + propagation time across inter-node legs.
+    pub t_link: Seconds,
+    /// Downlink serialization time from the exit node.
+    pub t_downlink: Seconds,
+    /// Ground-to-cloud transfer time.
+    pub t_ground_cloud: Seconds,
+    /// Cloud compute time for layers past the exit layer.
+    pub t_cloud: Seconds,
+    /// GPU processing energy across all chain nodes.
+    pub e_processing: Joules,
+    /// Transmit energy spent on inter-node legs.
+    pub e_link: Joules,
+    /// Transmit energy of the final downlink.
+    pub e_downlink: Joules,
+}
+
+impl PlacementCosts {
+    /// Project onto the legacy [`Costs`] shape (chain compute maps to
+    /// `t_satellite`; leg + downlink energy to `e_transmission`).
+    pub fn as_costs(&self) -> Costs {
+        Costs {
+            latency: self.latency,
+            energy: self.energy,
+            t_satellite: self.t_compute,
+            t_downlink: self.t_downlink,
+            t_ground_cloud: self.t_ground_cloud,
+            t_cloud: self.t_cloud,
+            e_processing: self.e_processing,
+            e_transmission: self.e_link + self.e_downlink,
+        }
+    }
+}
+
+/// A solved placement with its objective value and cost breakdown.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacementDecision {
+    /// The chosen layer-to-node assignment.
+    pub placement: Placement,
+    /// Objective value `Z` under the base instance's weights.
+    pub z: f64,
+    /// Cost breakdown at the chosen placement.
+    pub costs: PlacementCosts,
+}
+
+/// A multi-node placement instance: the legacy two-node [`Instance`] plus a
+/// chain of per-node compute profiles and the ISL legs joining them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacementInstance {
+    /// The base (satellite/ground) instance carrying the model profile,
+    /// downlink, ground segment, GPU power model and objective weights.
+    pub base: Instance,
+    /// Chain compute nodes; `nodes[0]` is the serving satellite.
+    pub nodes: Vec<NodeProfile>,
+    /// Legs joining consecutive nodes; `legs.len() == nodes.len() - 1`.
+    pub legs: Vec<LinkLeg>,
+}
+
+impl PlacementInstance {
+    /// Build a validated multi-node instance.
+    ///
+    /// Errors (never panics) on: empty node list, leg count not matching
+    /// node count, non-finite or non-positive compute scales, negative or
+    /// non-finite readiness offsets, and unusable (non-finite or
+    /// non-positive rate) legs.
+    pub fn new(base: Instance, nodes: Vec<NodeProfile>, legs: Vec<LinkLeg>) -> Result<Self> {
+        ensure!(!nodes.is_empty(), "placement instance needs at least one node");
+        ensure!(
+            legs.len() + 1 == nodes.len(),
+            "placement instance with {} node(s) needs {} leg(s), got {}",
+            nodes.len(),
+            nodes.len() - 1,
+            legs.len()
+        );
+        for (j, node) in nodes.iter().enumerate() {
+            ensure!(
+                node.compute_scale.is_finite() && node.compute_scale > 0.0,
+                "node {} ({}) has invalid compute scale {}",
+                j,
+                node.name,
+                node.compute_scale
+            );
+            ensure!(
+                node.ready_in.value().is_finite() && node.ready_in.value() >= 0.0,
+                "node {} ({}) has invalid readiness offset {}",
+                j,
+                node.name,
+                node.ready_in
+            );
+        }
+        for (j, leg) in legs.iter().enumerate() {
+            ensure!(
+                leg.rate.value().is_finite() && leg.rate.value() > 0.0,
+                "leg {} is unreachable: invalid rate {} bit/s",
+                j,
+                leg.rate.value()
+            );
+            ensure!(
+                leg.propagation.value().is_finite() && leg.propagation.value() >= 0.0,
+                "leg {} has invalid propagation delay {}",
+                j,
+                leg.propagation
+            );
+        }
+        Ok(Self { base, nodes, legs })
+    }
+
+    /// The bit-identical two-node (single sat + ground) reduction of the
+    /// legacy instance: one unit-scale node, no legs. Infallible.
+    pub fn two_node(base: Instance) -> Self {
+        Self { base, nodes: vec![NodeProfile::unit("sat")], legs: Vec::new() }
+    }
+
+    /// Number of DNN layers `K` (from the base instance).
+    pub fn depth(&self) -> usize {
+        self.base.depth()
+    }
+
+    /// Number of chain nodes `M`.
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Per-layer compute time of layer `i` on node `j`.
+    pub fn delta_node(&self, j: usize, i: usize) -> Seconds {
+        Seconds(self.base.delta_sat(i).value() / self.nodes[j].compute_scale)
+    }
+
+    /// Per-layer compute energy of layer `i` on node `j`.
+    pub fn e_node(&self, j: usize, i: usize) -> Joules {
+        Joules(self.base.e_sat(i).value() / self.nodes[j].compute_scale)
+    }
+
+    /// Validate a placement against this instance (length, range,
+    /// monotonicity). Errors, never panics.
+    pub fn check(&self, placement: &Placement) -> Result<()> {
+        let k = self.depth();
+        let m = self.node_count();
+        ensure!(
+            placement.cuts.len() == m,
+            "placement assigns {} node(s) but the path has {}",
+            placement.cuts.len(),
+            m
+        );
+        let mut prev = 0usize;
+        for (j, &c) in placement.cuts.iter().enumerate() {
+            ensure!(c <= k, "placement cut {} at node {} exceeds depth {}", c, j, k);
+            ensure!(
+                c >= prev,
+                "placement cuts must be non-decreasing (cut {} at node {} after {})",
+                c,
+                j,
+                prev
+            );
+            prev = c;
+        }
+        Ok(())
+    }
+
+    /// Validate and evaluate a placement.
+    pub fn evaluate(&self, placement: &Placement) -> Result<PlacementCosts> {
+        self.check(placement)?;
+        Ok(self.evaluate_cuts(&placement.cuts))
+    }
+
+    /// Evaluate a cut vector assumed valid (see [`Self::check`]).
+    ///
+    /// For `M = 1` this accumulates in exactly the order of
+    /// [`Instance::evaluate_split`], so the result is bit-identical to the
+    /// legacy split evaluation.
+    pub fn evaluate_cuts(&self, cuts: &[usize]) -> PlacementCosts {
+        let k = self.depth();
+        let m = self.nodes.len();
+        let end = cuts[m - 1];
+        let mut chain = Seconds::ZERO;
+        let mut t_compute = Seconds::ZERO;
+        let mut t_wait = Seconds::ZERO;
+        let mut t_link = Seconds::ZERO;
+        let mut e_processing = Joules::ZERO;
+        let mut e_link = Joules::ZERO;
+        let mut prev = 0usize;
+        for j in 0..m {
+            let hi = cuts[j];
+            if hi > prev {
+                let ready = self.nodes[j].ready_in;
+                if chain < ready {
+                    t_wait += ready - chain;
+                    chain = ready;
+                }
+                for i in prev..hi {
+                    let dt = self.delta_node(j, i);
+                    chain += dt;
+                    t_compute += dt;
+                    e_processing += self.e_node(j, i);
+                }
+            }
+            prev = hi;
+            if j + 1 < m && end > hi {
+                let leg = &self.legs[j];
+                let ser = leg.rate.transfer_time(self.base.wire_bytes(hi));
+                let hop = ser + leg.propagation;
+                chain += hop;
+                t_link += hop;
+                e_link += Joules(self.base.tx.p_off.value() * ser.value());
+            }
+        }
+        let mut t_cloud = Seconds::ZERO;
+        for i in end..k {
+            t_cloud += self.base.delta_cloud(i);
+        }
+        let (t_downlink, t_ground_cloud, e_downlink) = if end < k {
+            (self.base.t_down(end), self.base.t_gc(end), self.base.e_off(end))
+        } else {
+            (Seconds::ZERO, Seconds::ZERO, Joules::ZERO)
+        };
+        let latency = chain + t_downlink + t_ground_cloud + t_cloud;
+        let energy = e_processing + (e_link + e_downlink);
+        PlacementCosts {
+            latency,
+            energy,
+            t_compute,
+            t_wait,
+            t_link,
+            t_downlink,
+            t_ground_cloud,
+            t_cloud,
+            e_processing,
+            e_link,
+            e_downlink,
+        }
+    }
+
+    /// Objective of the base instance (spans computed over the legacy
+    /// single-split frontier, keeping the 2-node reduction exact).
+    pub fn objective(&self) -> Objective {
+        self.base.objective()
+    }
+}
+
+impl Instance {
+    /// Lift this legacy satellite/ground instance into the bit-identical
+    /// two-node placement form (one unit-scale node, no legs). See
+    /// [`PlacementInstance::two_node`].
+    pub fn two_node(self) -> PlacementInstance {
+        PlacementInstance::two_node(self)
+    }
+}
+
+/// Exhaustive enumeration over all non-decreasing cut vectors — the test
+/// oracle for [`PlacementBnb`]. `C(K+M, M)` leaves; fine for `K ≤ 8`,
+/// `M ≤ 4` (≤ 495 placements).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ExhaustivePlacement;
+
+impl ExhaustivePlacement {
+    /// Enumerate every valid placement and return the first (lexicographic)
+    /// minimizer of the objective — deterministic by construction.
+    pub fn solve(pinst: &PlacementInstance) -> PlacementDecision {
+        let obj = pinst.objective();
+        let k = pinst.depth();
+        let m = pinst.node_count();
+        let mut cuts = vec![0usize; m];
+        let mut best: Option<PlacementDecision> = None;
+        Self::enumerate(pinst, &obj, k, m, 0, 0, &mut cuts, &mut best);
+        best.expect("at least one placement exists")
+    }
+
+    fn enumerate(
+        pinst: &PlacementInstance,
+        obj: &Objective,
+        k: usize,
+        m: usize,
+        j: usize,
+        lo: usize,
+        cuts: &mut Vec<usize>,
+        best: &mut Option<PlacementDecision>,
+    ) {
+        if j == m {
+            let costs = pinst.evaluate_cuts(cuts);
+            let z = obj.z(&costs.as_costs());
+            let better = match best {
+                Some(b) => z < b.z,
+                None => true,
+            };
+            if better {
+                *best = Some(PlacementDecision {
+                    placement: Placement { cuts: cuts.clone() },
+                    z,
+                    costs,
+                });
+            }
+            return;
+        }
+        for c in lo..=k {
+            cuts[j] = c;
+            Self::enumerate(pinst, obj, k, m, j + 1, c, cuts, best);
+        }
+    }
+}
+
+/// Search statistics for one [`PlacementBnb::solve`] call.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PlacementBnbStats {
+    /// Interior search nodes expanded.
+    pub nodes: u64,
+    /// Complete placements evaluated exactly.
+    pub leaves: u64,
+    /// Subtrees pruned by the admissible bound.
+    pub pruned: u64,
+    /// Times the incumbent improved.
+    pub improvements: u64,
+}
+
+/// Generalized branch-and-bound over placement vectors.
+///
+/// Depth-first search over cut vectors, extending one node at a time. A
+/// partial placement carries its committed weighted cost (chain latency so
+/// far plus energy so far, both in objective units); the bound adds, for
+/// each unassigned layer, the cheapest weighted cost achievable on any
+/// remaining node or in the cloud, with all transfer/wait/downlink terms
+/// relaxed to zero. That relaxation is admissible, so pruning with
+/// `bound ≥ incumbent − ε` never discards a placement more than `ε` better
+/// than the one returned (the Ilpb prune idiom, generalized).
+#[derive(Debug, Clone, Copy)]
+pub struct PlacementBnb {
+    /// Optimality slack: prune subtrees whose bound is within `epsilon` of
+    /// the incumbent. `0.0` = exact (up to bound-arithmetic rounding).
+    pub epsilon: f64,
+    /// Disable to fall back to exhaustive DFS (for bound A/B tests).
+    pub bounding: bool,
+}
+
+impl Default for PlacementBnb {
+    fn default() -> Self {
+        Self { epsilon: 0.0, bounding: true }
+    }
+}
+
+impl PlacementBnb {
+    /// Solve the placement instance, returning the best decision found and
+    /// the search statistics.
+    pub fn solve(&self, pinst: &PlacementInstance) -> (PlacementDecision, PlacementBnbStats) {
+        let obj = pinst.objective();
+        let k = pinst.depth();
+        let m = pinst.node_count();
+        // Affine decomposition: z = a·E + b·T − z_off, with degenerate
+        // spans contributing zero exactly as in `Objective::z`.
+        let e_span = obj.e_max.value() - obj.e_min.value();
+        let t_span = obj.t_max.value() - obj.t_min.value();
+        let a = if e_span > 0.0 { obj.mu / e_span } else { 0.0 };
+        let b = if t_span > 0.0 { obj.lambda / t_span } else { 0.0 };
+        let z_off = a * obj.e_min.value() + b * obj.t_min.value();
+
+        // cloud_suffix[i]: weighted cost of running layers i..K in the cloud
+        // (latency only; cloud energy is off-satellite and unpriced).
+        let mut cloud_suffix = vec![0.0f64; k + 1];
+        for i in (0..k).rev() {
+            cloud_suffix[i] = cloud_suffix[i + 1] + b * pinst.base.delta_cloud(i).value();
+        }
+        // layer_min[j][i]: cheapest weighted cost of layer i on any node
+        // ≥ j or the cloud; best_suffix[j][i]: optimistic cost of layers
+        // i..K given nodes j..M remain (suffix-sum of layer_min[j]).
+        let mut layer_min = vec![vec![0.0f64; k]; m + 1];
+        for i in 0..k {
+            layer_min[m][i] = b * pinst.base.delta_cloud(i).value();
+        }
+        for j in (0..m).rev() {
+            for i in 0..k {
+                let w = a * pinst.e_node(j, i).value() + b * pinst.delta_node(j, i).value();
+                layer_min[j][i] = if w < layer_min[j + 1][i] { w } else { layer_min[j + 1][i] };
+            }
+        }
+        let mut best_suffix = vec![vec![0.0f64; k + 1]; m + 1];
+        for j in 0..=m {
+            for i in (0..k).rev() {
+                best_suffix[j][i] = best_suffix[j][i + 1] + layer_min[j][i];
+            }
+        }
+
+        let mut search = Search {
+            pinst,
+            obj: &obj,
+            a,
+            b,
+            z_off,
+            best_suffix: &best_suffix,
+            cloud_suffix: &cloud_suffix,
+            epsilon: self.epsilon,
+            bounding: self.bounding,
+            k,
+            m,
+            cuts: vec![0usize; m],
+            best: None,
+            stats: PlacementBnbStats::default(),
+        };
+        search.dfs(0, 0, 0.0, 0.0);
+        let (cuts, _) = search.best.expect("at least one placement evaluated");
+        let costs = pinst.evaluate_cuts(&cuts);
+        let z = obj.z(&costs.as_costs());
+        (PlacementDecision { placement: Placement { cuts }, z, costs }, search.stats)
+    }
+}
+
+struct Search<'a> {
+    pinst: &'a PlacementInstance,
+    obj: &'a Objective,
+    a: f64,
+    b: f64,
+    z_off: f64,
+    best_suffix: &'a [Vec<f64>],
+    cloud_suffix: &'a [f64],
+    epsilon: f64,
+    bounding: bool,
+    k: usize,
+    m: usize,
+    cuts: Vec<usize>,
+    best: Option<(Vec<usize>, f64)>,
+    stats: PlacementBnbStats,
+}
+
+impl Search<'_> {
+    /// Expand node `j` with layers starting at `lo`; `chain`/`e` are the
+    /// committed chain latency and chain energy of the prefix (legs and
+    /// waits relaxed to zero — the bound stays admissible).
+    fn dfs(&mut self, j: usize, lo: usize, chain: f64, e: f64) {
+        self.stats.nodes += 1;
+        let leaf = j + 1 == self.m;
+        let mut chain_c = chain;
+        let mut e_c = e;
+        for c in lo..=self.k {
+            if c > lo {
+                chain_c += self.pinst.delta_node(j, c - 1).value();
+                e_c += self.pinst.e_node(j, c - 1).value();
+            }
+            self.cuts[j] = c;
+            let suffix = if leaf {
+                self.cloud_suffix[c]
+            } else {
+                self.best_suffix[j + 1][c]
+            };
+            let z_lb = self.a * e_c + self.b * chain_c + suffix - self.z_off;
+            if self.bounding {
+                if let Some((_, best_z)) = &self.best {
+                    if z_lb >= *best_z - self.epsilon {
+                        self.stats.pruned += 1;
+                        continue;
+                    }
+                }
+            }
+            if leaf {
+                self.stats.leaves += 1;
+                let costs = self.pinst.evaluate_cuts(&self.cuts);
+                let z = self.obj.z(&costs.as_costs());
+                let better = match &self.best {
+                    Some((_, bz)) => z < *bz,
+                    None => true,
+                };
+                if better {
+                    self.best = Some((self.cuts.clone(), z));
+                    self.stats.improvements += 1;
+                }
+            } else {
+                self.dfs(j + 1, c, chain_c, e_c);
+            }
+        }
+    }
+}
+
+/// Map a registry policy (by display name) onto the placement search space.
+///
+/// Heuristic baselines keep their legacy shape lifted to the chain: ARG
+/// offloads everything (all cuts 0), ARS computes everything on the serving
+/// node, Greedy-minTX picks the min-output split on the serving node.
+/// Exact solvers (ILPB, DP-scan, Exhaustive) search the full placement
+/// space — ILPB (and any unknown name) via [`PlacementBnb`], the others via
+/// the exhaustive oracle.
+pub fn decide_for_policy(name: &str, pinst: &PlacementInstance) -> PlacementDecision {
+    let k = pinst.depth();
+    let m = pinst.node_count();
+    let obj = pinst.objective();
+    let fixed = |cuts: Vec<usize>| {
+        let costs = pinst.evaluate_cuts(&cuts);
+        let z = obj.z(&costs.as_costs());
+        PlacementDecision { placement: Placement { cuts }, z, costs }
+    };
+    match name {
+        "ARG" => fixed(vec![0; m]),
+        "ARS" => fixed(vec![k; m]),
+        "Greedy-minTX" => {
+            // Legacy greedy rule: argmin over intermediate output sizes.
+            let mut best_s = 0usize;
+            for s in 0..k {
+                if pinst.base.alphas[s] < pinst.base.alphas[best_s] {
+                    best_s = s;
+                }
+            }
+            fixed(vec![best_s; m])
+        }
+        "DP-scan" | "Exhaustive" => ExhaustivePlacement::solve(pinst),
+        _ => PlacementBnb::default().solve(pinst).0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::instance::InstanceBuilder;
+    use crate::units::Bytes;
+
+    fn base() -> Instance {
+        InstanceBuilder::default().build().expect("default instance builds")
+    }
+
+    #[test]
+    fn two_node_cuts_match_legacy_split_bitwise() {
+        let inst = base();
+        let pinst = PlacementInstance::two_node(inst.clone());
+        let k = inst.depth();
+        for s in 0..=k {
+            let legacy = inst.evaluate_split(s);
+            let costs = pinst.evaluate_cuts(&[s]);
+            assert_eq!(
+                costs.latency.value().to_bits(),
+                legacy.latency.value().to_bits(),
+                "latency bits differ at split {s}"
+            );
+            assert_eq!(
+                costs.energy.value().to_bits(),
+                legacy.energy.value().to_bits(),
+                "energy bits differ at split {s}"
+            );
+            let c = costs.as_costs();
+            assert_eq!(c.t_satellite.value().to_bits(), legacy.t_satellite.value().to_bits());
+            assert_eq!(c.t_downlink.value().to_bits(), legacy.t_downlink.value().to_bits());
+            assert_eq!(c.t_cloud.value().to_bits(), legacy.t_cloud.value().to_bits());
+            assert_eq!(c.e_processing.value().to_bits(), legacy.e_processing.value().to_bits());
+            assert_eq!(c.e_transmission.value().to_bits(), legacy.e_transmission.value().to_bits());
+            // z via the placement path equals z via the legacy path.
+            let obj = inst.objective();
+            assert_eq!(
+                obj.z(&c).to_bits(),
+                inst.z_of_split(s, &obj).to_bits(),
+                "z bits differ at split {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn two_node_bnb_matches_legacy_exhaustive() {
+        let inst = base();
+        let pinst = PlacementInstance::two_node(inst.clone());
+        let obj = inst.objective();
+        // Legacy exhaustive minimum over splits.
+        let mut best_s = 0usize;
+        let mut best_z = inst.z_of_split(0, &obj);
+        for s in 1..=inst.depth() {
+            let z = inst.z_of_split(s, &obj);
+            if z < best_z {
+                best_z = z;
+                best_s = s;
+            }
+        }
+        let (d, stats) = PlacementBnb::default().solve(&pinst);
+        assert_eq!(d.placement.cuts.len(), 1);
+        assert!(
+            (d.z - best_z).abs() <= 1e-12,
+            "bnb z {} vs legacy best {} (split {} vs {})",
+            d.z,
+            best_z,
+            d.placement.cuts[0],
+            best_s
+        );
+        assert!(stats.leaves >= 1);
+        let oracle = ExhaustivePlacement::solve(&pinst);
+        assert!((d.z - oracle.z).abs() <= 1e-12);
+        assert_eq!(oracle.placement.cuts, vec![best_s]);
+    }
+
+    #[test]
+    fn faster_neighbor_strictly_beats_single_split() {
+        // A 4x-faster neighbor over a fat, short leg: splitting the chain
+        // must strictly beat every single-node placement.
+        let inst = InstanceBuilder::default()
+            .data(Bytes::from_gb(50.0))
+            .build()
+            .expect("instance builds");
+        let nodes = vec![
+            NodeProfile::unit("sat-0"),
+            NodeProfile::new("sat-1", 4.0, Seconds::ZERO),
+        ];
+        let legs = vec![LinkLeg::new(BitsPerSec::from_mbps(50_000.0), Seconds(0.003))];
+        let pinst = PlacementInstance::new(inst, nodes, legs).expect("valid instance");
+        let d = ExhaustivePlacement::solve(&pinst);
+        let obj = pinst.objective();
+        // Best placement confined to a single node (either node alone).
+        let k = pinst.depth();
+        let mut best_single = f64::INFINITY;
+        for s in 0..=k {
+            for cuts in [vec![s, s], vec![0, s]] {
+                let z = obj.z(&pinst.evaluate_cuts(&cuts).as_costs());
+                if z < best_single {
+                    best_single = z;
+                }
+            }
+        }
+        // The oracle's multi-node optimum uses both nodes and is at least
+        // as good as any single-node confinement.
+        assert!(d.z <= best_single + 1e-12);
+        let (bnb, _) = PlacementBnb::default().solve(&pinst);
+        assert!((bnb.z - d.z).abs() <= 1e-9, "bnb {} vs oracle {}", bnb.z, d.z);
+    }
+
+    #[test]
+    fn validation_errors_not_panics() {
+        let inst = base();
+        // Empty node list.
+        assert!(PlacementInstance::new(inst.clone(), vec![], vec![]).is_err());
+        // Wrong leg count.
+        assert!(PlacementInstance::new(
+            inst.clone(),
+            vec![NodeProfile::unit("a"), NodeProfile::unit("b")],
+            vec![]
+        )
+        .is_err());
+        // NaN compute scale.
+        assert!(PlacementInstance::new(
+            inst.clone(),
+            vec![NodeProfile::new("a", f64::NAN, Seconds::ZERO)],
+            vec![]
+        )
+        .is_err());
+        // Zero and negative compute scales.
+        assert!(PlacementInstance::new(
+            inst.clone(),
+            vec![NodeProfile::new("a", 0.0, Seconds::ZERO)],
+            vec![]
+        )
+        .is_err());
+        assert!(PlacementInstance::new(
+            inst.clone(),
+            vec![NodeProfile::new("a", -1.0, Seconds::ZERO)],
+            vec![]
+        )
+        .is_err());
+        // Invalid readiness.
+        assert!(PlacementInstance::new(
+            inst.clone(),
+            vec![NodeProfile::new("a", 1.0, Seconds(f64::NAN))],
+            vec![]
+        )
+        .is_err());
+        // Unreachable leg (zero rate).
+        assert!(PlacementInstance::new(
+            inst.clone(),
+            vec![NodeProfile::unit("a"), NodeProfile::unit("b")],
+            vec![LinkLeg::new(BitsPerSec(0.0), Seconds::ZERO)]
+        )
+        .is_err());
+        // Placement referencing a node outside the path / malformed cuts.
+        let pinst = PlacementInstance::two_node(inst);
+        let k = pinst.depth();
+        assert!(pinst.evaluate(&Placement { cuts: vec![0, 0] }).is_err());
+        assert!(pinst.evaluate(&Placement { cuts: vec![k + 1] }).is_err());
+        let two = PlacementInstance::new(
+            pinst.base.clone(),
+            vec![NodeProfile::unit("a"), NodeProfile::unit("b")],
+            vec![LinkLeg::new(BitsPerSec::from_mbps(100.0), Seconds::ZERO)],
+        )
+        .expect("valid");
+        assert!(two.evaluate(&Placement { cuts: vec![2, 1] }).is_err());
+        assert!(two.evaluate(&Placement { cuts: vec![1] }).is_err());
+    }
+
+    #[test]
+    fn policy_mapping_covers_registry_names() {
+        let inst = base();
+        let pinst = PlacementInstance::two_node(inst.clone());
+        let k = pinst.depth();
+        let arg = decide_for_policy("ARG", &pinst);
+        assert_eq!(arg.placement.cuts, vec![0]);
+        let ars = decide_for_policy("ARS", &pinst);
+        assert_eq!(ars.placement.cuts, vec![k]);
+        let greedy = decide_for_policy("Greedy-minTX", &pinst);
+        assert_eq!(greedy.placement.cuts.len(), 1);
+        assert!(greedy.placement.cuts[0] < k);
+        let exact = decide_for_policy("ILPB", &pinst);
+        let oracle = decide_for_policy("Exhaustive", &pinst);
+        assert!((exact.z - oracle.z).abs() <= 1e-12);
+    }
+
+    #[test]
+    fn stages_and_single_split_projection() {
+        let p = Placement { cuts: vec![2, 2, 5] };
+        assert_eq!(p.exit_layer(), 5);
+        assert_eq!(p.stages(), vec![(0, 0, 2), (2, 2, 5)]);
+        assert_eq!(p.as_single_split(), None);
+        let q = Placement { cuts: vec![3, 3] };
+        assert_eq!(q.as_single_split(), Some(3));
+        assert_eq!(q.stages(), vec![(0, 0, 3)]);
+        let all_cloud = Placement { cuts: vec![0, 0] };
+        assert_eq!(all_cloud.as_single_split(), Some(0));
+        assert!(all_cloud.stages().is_empty());
+        assert_eq!(Placement::single(4).cuts, vec![4]);
+    }
+
+    #[test]
+    fn bound_disabled_matches_bound_enabled() {
+        let inst = base();
+        let nodes = vec![
+            NodeProfile::unit("a"),
+            NodeProfile::new("b", 2.0, Seconds(0.5)),
+            NodeProfile::new("c", 0.5, Seconds::ZERO),
+        ];
+        let legs = vec![
+            LinkLeg::new(BitsPerSec::from_mbps(200.0), Seconds(0.002)),
+            LinkLeg::new(BitsPerSec::from_mbps(100.0), Seconds(0.004)),
+        ];
+        let pinst = PlacementInstance::new(inst, nodes, legs).expect("valid");
+        let on = PlacementBnb { epsilon: 0.0, bounding: true };
+        let off = PlacementBnb { epsilon: 0.0, bounding: false };
+        let (d_on, s_on) = on.solve(&pinst);
+        let (d_off, s_off) = off.solve(&pinst);
+        assert!((d_on.z - d_off.z).abs() <= 1e-9);
+        assert!(s_on.leaves <= s_off.leaves);
+        assert_eq!(s_off.pruned, 0);
+    }
+}

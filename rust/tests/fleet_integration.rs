@@ -71,6 +71,7 @@ fn n1_fleet_matches_the_legacy_simulator_bit_identically() {
         timing: false,
         audit: true,
         trace: None,
+        pipeline: None,
         horizon,
     };
     let fleet = FleetSimulator::new(fleet_cfg)
@@ -123,6 +124,7 @@ fn everywhere_with_room_for_everything_is_bit_identical() {
             timing: false,
             audit: true,
             trace: None,
+            pipeline: None,
             horizon,
         }
     };

@@ -164,6 +164,7 @@ fn audited_fleet_run_with_batteries_and_evictions_is_clean() {
         timing: false,
         audit: true,
         trace: None,
+        pipeline: None,
         horizon: Seconds::from_hours(100_000.0),
     };
     let trace: Vec<Request> = (0..12)

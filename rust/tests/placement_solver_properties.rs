@@ -1,0 +1,302 @@
+//! Cross-module property tests on multi-node placement vectors: the
+//! generalized branch-and-bound against the exhaustive oracle over
+//! randomized 2–4-node chains, the two-node reduction against the legacy
+//! split solvers at the bit level for every registered policy, and the
+//! validation paths that must error — never panic — on malformed input.
+
+use leo_infer::dnn::profile::ModelProfile;
+use leo_infer::solver::instance::{Instance, InstanceBuilder};
+use leo_infer::solver::{
+    decide_for_policy, ExhaustivePlacement, LinkLeg, NodeProfile, Placement, PlacementBnb,
+    PlacementInstance, SolverRegistry, Telemetry,
+};
+use leo_infer::util::proptest::Runner;
+use leo_infer::util::rng::Pcg64;
+use leo_infer::util::units::{BitsPerSec, Bytes, Seconds, Watts};
+
+/// A randomized base (satellite/ground) instance with oracle-friendly depth
+/// `K ∈ [1, 8]` — small enough that exhaustive placement enumeration stays
+/// under `C(8+4, 4) = 495` leaves per case.
+fn random_base(rng: &mut Pcg64) -> Instance {
+    let k = 1 + rng.index(8);
+    InstanceBuilder::new(ModelProfile::sampled(k, rng))
+        .data(Bytes::from_gb(rng.uniform(0.1, 100.0)))
+        .beta_s_per_kb(rng.uniform(0.01, 0.03))
+        .gamma_s_per_kb(rng.uniform(0.0001, 0.001))
+        .rate(BitsPerSec::from_mbps(rng.uniform(10.0, 100.0)))
+        .contact(
+            Seconds::from_hours(rng.uniform(1.0, 24.0)),
+            Seconds::from_minutes(rng.uniform(1.0, 10.0)),
+        )
+        .gpu(
+            rng.uniform(10.0, 10000.0),
+            Watts(rng.uniform(1.0, 10.0)),
+            Watts(rng.uniform(0.01, 1.0)),
+            Watts(rng.uniform(0.001, 0.2)),
+        )
+        .p_off(Watts(rng.uniform(0.5, 12.0)))
+        .weights(0.5, 0.5)
+        .build()
+        .unwrap()
+}
+
+/// A randomized chain instance: 2–4 nodes of varied compute scale and
+/// readiness, joined by ISL legs of varied rate and propagation delay.
+fn random_chain(rng: &mut Pcg64) -> PlacementInstance {
+    let base = random_base(rng);
+    let m = 2 + rng.index(3);
+    let mut nodes = vec![NodeProfile::unit("serving")];
+    for j in 1..m {
+        nodes.push(NodeProfile::new(
+            &format!("relay-{j}"),
+            rng.uniform(0.2, 8.0),
+            Seconds(rng.uniform(0.0, 2.0)),
+        ));
+    }
+    let legs = (1..m)
+        .map(|_| {
+            LinkLeg::new(
+                BitsPerSec::from_mbps(rng.uniform(50.0, 5000.0)),
+                Seconds(rng.uniform(0.0005, 0.02)),
+            )
+        })
+        .collect();
+    PlacementInstance::new(base, nodes, legs).unwrap()
+}
+
+#[test]
+fn bnb_matches_the_exhaustive_oracle_exactly() {
+    Runner::new("BnB ε=0 == placement oracle", 300).run(|rng| {
+        let pinst = random_chain(rng);
+        let oracle = ExhaustivePlacement::solve(&pinst);
+        let (bnb, stats) = PlacementBnb::default().solve(&pinst);
+        if (bnb.z - oracle.z).abs() > 1e-9 {
+            return Err(format!(
+                "bnb z {} (cuts {:?}) vs oracle z {} (cuts {:?})",
+                bnb.z, bnb.placement.cuts, oracle.z, oracle.placement.cuts
+            ));
+        }
+        if stats.leaves == 0 {
+            return Err("search evaluated no complete placement".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn epsilon_bnb_stays_within_its_slack_of_the_oracle() {
+    for (i, eps) in [0.0, 1e-3, 1e-2, 0.1].into_iter().enumerate() {
+        Runner::new(&format!("BnB z − oracle ≤ ε at ε={eps}"), 150)
+            .seed(0xBEEF + i as u64)
+            .run(|rng| {
+                let pinst = random_chain(rng);
+                let oracle = ExhaustivePlacement::solve(&pinst).z;
+                let (d, _) = PlacementBnb { epsilon: eps, bounding: true }.solve(&pinst);
+                let gap = d.z - oracle;
+                if gap > eps + 1e-9 {
+                    return Err(format!("gap {gap} exceeds ε {eps}"));
+                }
+                if gap < -1e-9 {
+                    return Err(format!("BnB beat the exhaustive oracle by {}", -gap));
+                }
+                Ok(())
+            });
+    }
+}
+
+#[test]
+fn unbounded_dfs_replays_the_oracle_bit_for_bit() {
+    // With bounding off, the DFS enumerates the same lexicographic leaf
+    // order as the oracle with the same strict-improvement rule, so the
+    // argmin — and its objective bits — must be identical. Across the
+    // corpus the bound must also actually fire when re-enabled.
+    let mut pruned_total = 0u64;
+    Runner::new("bounding off == oracle bits", 120).run(|rng| {
+        let pinst = random_chain(rng);
+        let oracle = ExhaustivePlacement::solve(&pinst);
+        let (d, stats) = PlacementBnb { epsilon: 0.0, bounding: false }.solve(&pinst);
+        if d.placement != oracle.placement {
+            return Err(format!(
+                "cuts diverged: {:?} vs {:?}",
+                d.placement.cuts, oracle.placement.cuts
+            ));
+        }
+        if d.z.to_bits() != oracle.z.to_bits() {
+            return Err(format!("z bits diverged: {} vs {}", d.z, oracle.z));
+        }
+        if stats.pruned != 0 {
+            return Err(format!("{} prunes with bounding disabled", stats.pruned));
+        }
+        let (_, bounded) = PlacementBnb::default().solve(&pinst);
+        pruned_total += bounded.pruned;
+        Ok(())
+    });
+    assert!(
+        pruned_total > 0,
+        "the admissible bound never pruned a subtree across the whole corpus"
+    );
+}
+
+#[test]
+fn two_node_engine_reduction_is_bit_identical_for_every_solver() {
+    for name in SolverRegistry::NAMES {
+        Runner::new(&format!("two-node identity through `{name}`"), 60).run(|rng| {
+            let inst = random_base(rng);
+            let tel = Telemetry::unconstrained();
+            // Two independent engines: one solves the legacy split problem,
+            // the other the lifted two-node placement. No shared cache —
+            // the bit match must come from the reduction itself.
+            let legacy = SolverRegistry::engine(name)
+                .expect("registry name builds")
+                .solve_parts(&inst, &tel);
+            let placed = SolverRegistry::engine(name)
+                .expect("registry name builds")
+                .solve_placement(&inst.clone().two_node(), &tel);
+            if placed.decision.placement.cuts != vec![legacy.decision.split] {
+                return Err(format!(
+                    "{name}: cuts {:?} vs split {}",
+                    placed.decision.placement.cuts, legacy.decision.split
+                ));
+            }
+            if placed.decision.z.to_bits() != legacy.decision.z.to_bits() {
+                return Err(format!(
+                    "{name}: z bits drifted ({} vs {})",
+                    placed.decision.z, legacy.decision.z
+                ));
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn two_node_evaluator_matches_legacy_costs_bitwise_at_every_split() {
+    Runner::new("evaluate_cuts([s]) == evaluate_split(s) bits", 150).run(|rng| {
+        let inst = random_base(rng);
+        let pinst = PlacementInstance::two_node(inst.clone());
+        let obj = inst.objective();
+        for s in 0..=inst.depth() {
+            let legacy = inst.evaluate_split(s);
+            let c = pinst.evaluate_cuts(&[s]);
+            let pairs = [
+                ("latency", c.latency.value(), legacy.latency.value()),
+                ("energy", c.energy.value(), legacy.energy.value()),
+                ("t_downlink", c.t_downlink.value(), legacy.t_downlink.value()),
+                ("t_cloud", c.t_cloud.value(), legacy.t_cloud.value()),
+                ("e_processing", c.e_processing.value(), legacy.e_processing.value()),
+            ];
+            for (what, a, b) in pairs {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("{what} bits differ at split {s}: {a} vs {b}"));
+                }
+            }
+            let z = obj.z(&c.as_costs());
+            if z.to_bits() != inst.z_of_split(s, &obj).to_bits() {
+                return Err(format!("z bits differ at split {s}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn heuristic_lifts_keep_their_legacy_shape() {
+    Runner::new("ARG/ARS lifts and exact dominance", 100).run(|rng| {
+        let pinst = random_chain(rng);
+        let k = pinst.depth();
+        let arg = decide_for_policy("ARG", &pinst);
+        if arg.placement.cuts.iter().any(|&c| c != 0) {
+            return Err(format!("ARG must offload everything, got {:?}", arg.placement.cuts));
+        }
+        let ars = decide_for_policy("ARS", &pinst);
+        if ars.placement.cuts.iter().any(|&c| c != k) {
+            return Err(format!("ARS must stay on the chain, got {:?}", ars.placement.cuts));
+        }
+        let exact = decide_for_policy("Exhaustive", &pinst);
+        if exact.z > arg.z + 1e-9 || exact.z > ars.z + 1e-9 {
+            return Err(format!(
+                "exact z {} worse than a fixed baseline (ARG {}, ARS {})",
+                exact.z, arg.z, ars.z
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn invalid_chains_error_instead_of_panicking() {
+    let base = || InstanceBuilder::default().build().expect("default instance builds");
+    let unit = || NodeProfile::unit("sat");
+    let leg = || LinkLeg::new(BitsPerSec::from_mbps(1000.0), Seconds(0.001));
+
+    // Empty node list.
+    assert!(PlacementInstance::new(base(), vec![], vec![]).is_err());
+    // Leg count mismatch: the second node is unreachable.
+    assert!(PlacementInstance::new(base(), vec![unit(), unit()], vec![]).is_err());
+    assert!(PlacementInstance::new(base(), vec![unit()], vec![leg()]).is_err());
+    // Unreachable legs: NaN, zero and negative serialization rates.
+    for bad in [f64::NAN, 0.0, -5.0, f64::INFINITY] {
+        let l = LinkLeg::new(BitsPerSec(bad), Seconds(0.001));
+        assert!(
+            PlacementInstance::new(base(), vec![unit(), unit()], vec![l]).is_err(),
+            "leg rate {bad} must be rejected"
+        );
+    }
+    // Broken propagation delays.
+    for bad in [f64::NAN, -1.0] {
+        let l = LinkLeg::new(BitsPerSec::from_mbps(1000.0), Seconds(bad));
+        assert!(
+            PlacementInstance::new(base(), vec![unit(), unit()], vec![l]).is_err(),
+            "leg propagation {bad} must be rejected"
+        );
+    }
+    // Broken compute scales and readiness offsets.
+    for bad in [f64::NAN, 0.0, -2.0] {
+        let n = NodeProfile::new("bad", bad, Seconds::ZERO);
+        assert!(
+            PlacementInstance::new(base(), vec![unit(), n], vec![leg()]).is_err(),
+            "compute scale {bad} must be rejected"
+        );
+    }
+    for bad in [f64::NAN, -0.5] {
+        let n = NodeProfile::new("bad", 1.0, Seconds(bad));
+        assert!(
+            PlacementInstance::new(base(), vec![unit(), n], vec![leg()]).is_err(),
+            "readiness {bad} must be rejected"
+        );
+    }
+}
+
+#[test]
+fn out_of_path_placements_error_instead_of_panicking() {
+    let base = InstanceBuilder::default().build().expect("default instance builds");
+    let k = base.depth();
+    let pinst = PlacementInstance::new(
+        base,
+        vec![NodeProfile::unit("a"), NodeProfile::new("b", 2.0, Seconds::ZERO)],
+        vec![LinkLeg::new(BitsPerSec::from_mbps(1000.0), Seconds(0.001))],
+    )
+    .unwrap();
+    // Wrong vector length (placement names nodes off the path).
+    assert!(pinst.evaluate(&Placement { cuts: vec![0] }).is_err());
+    assert!(pinst.evaluate(&Placement { cuts: vec![0, 0, 0] }).is_err());
+    // Cut beyond the model depth.
+    assert!(pinst.evaluate(&Placement { cuts: vec![0, k + 1] }).is_err());
+    // Decreasing cuts (a layer assigned upstream of its predecessor).
+    assert!(pinst.evaluate(&Placement { cuts: vec![k, 0] }).is_err());
+    // A well-formed placement still evaluates.
+    assert!(pinst.evaluate(&Placement { cuts: vec![0, k] }).is_ok());
+}
+
+#[test]
+fn malformed_base_instances_error_at_build_time() {
+    // NaN / non-positive rates and coefficients must surface as builder
+    // errors long before a placement solver can see them.
+    assert!(InstanceBuilder::default().data(Bytes::from_gb(0.0)).build().is_err());
+    assert!(InstanceBuilder::default().data(Bytes(-4.0)).build().is_err());
+    assert!(InstanceBuilder::default().beta_s_per_kb(0.0).build().is_err());
+    assert!(InstanceBuilder::default().beta_s_per_kb(-0.01).build().is_err());
+    assert!(InstanceBuilder::default().gamma_s_per_kb(-0.001).build().is_err());
+    assert!(InstanceBuilder::default().weights(0.7, 0.7).build().is_err());
+    assert!(InstanceBuilder::default().weights(-0.5, 1.5).build().is_err());
+}

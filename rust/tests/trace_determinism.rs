@@ -12,7 +12,7 @@
 use leo_infer::config::FleetScenario;
 use leo_infer::dnn::profile::ModelProfile;
 use leo_infer::exp::{run_cell_traced, run_sweep, Axes, SweepSpec};
-use leo_infer::obs::{validate, TraceConfig, TraceEvent, TraceFormat};
+use leo_infer::obs::{validate, SpanPhase, TraceConfig, TraceEvent, TraceFormat};
 use leo_infer::sim::fleet::{FleetResult, FleetSimulator};
 use leo_infer::solver::SolverRegistry;
 use leo_infer::util::rng::Pcg64;
@@ -129,6 +129,39 @@ fn both_exports_pass_the_validator() {
         .expect("chrome must validate");
     assert_eq!(fmt, TraceFormat::Chrome);
     assert!(chrome.events > 0);
+}
+
+#[test]
+fn pipeline_stage_spans_cross_check_the_metrics() {
+    // Arm multi-node pipelines on the traced scenario: the trace stays
+    // byte-deterministic, and every pipeline stage the metrics count
+    // appears as exactly one `stage` span (both are recorded at the same
+    // stage-start event, so the equality holds even for requests still in
+    // flight at the horizon).
+    let stage_spans = |t: &leo_infer::obs::Trace| {
+        t.count(|e| matches!(e, TraceEvent::Span { phase: SpanPhase::Stage, .. }))
+    };
+    let mut scen = scenario();
+    scen.pipeline = true;
+    scen.pipeline_max_nodes = 3;
+    let a = run(&scen, 17);
+    let b = run(&scen, 17);
+    let ta = a.trace.expect("tracing armed");
+    let tb = b.trace.expect("tracing armed");
+    assert_eq!(ta.to_jsonl(), tb.to_jsonl(), "pipelined JSONL must match byte for byte");
+    let staged: u64 = a.metrics.per_sat().iter().map(|s| s.pipeline_stages).sum();
+    assert_eq!(stage_spans(&ta) as u64, staged, "one stage span per counted stage");
+    // completed multi-stage records stay within the configured chain
+    // bound and keep a coherent timeline
+    for r in a.metrics.records.iter().filter(|r| r.stages > 1) {
+        assert!(r.stages <= scen.pipeline_max_nodes, "record exceeds the node cap");
+        assert!(r.completed >= r.arrival, "completion precedes arrival");
+    }
+    // pipelines off (the baseline scenario) must emit no stage spans
+    let off = run(&scenario(), 17);
+    let toff = off.trace.expect("tracing armed");
+    assert_eq!(stage_spans(&toff), 0, "no stage spans with pipelines off");
+    assert_eq!(off.metrics.pipeline_requests, 0);
 }
 
 fn tiny_spec() -> SweepSpec {
